@@ -1,0 +1,134 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): exercises the FULL
+//! three-layer stack on a realistic workload and proves every layer
+//! composes:
+//!
+//!   1. generate the mnist-like dataset (N = 60000, d = 32, K = 10 — the
+//!      paper's §5.3 mnist-PCA configuration),
+//!   2. fit with the **xla backend**: Rust coordinator → AOT-compiled
+//!      JAX/Pallas shard-step artifact via PJRT (L3 → L2 → L1),
+//!   3. fit with the **native backend** (the Julia-package analog),
+//!   4. fit with the **VB baseline** (the sklearn analog, K upper bound),
+//!   5. report NMI / predicted K / wall time per iteration for all three,
+//!      writing a JSON result file.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+//! (reduced size: `cargo run --release --example e2e_pipeline -- --n=10000`)
+
+use dpmm::baselines::{VbGmm, VbGmmConfig};
+use dpmm::cli::Args;
+use dpmm::config::BackendChoice;
+use dpmm::datagen::mnist_like;
+use dpmm::prelude::*;
+use dpmm::util::json::{self, Json};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let n = args.get_usize("n")?.unwrap_or(60_000);
+    let iters = args.get_usize("iterations")?.unwrap_or(60);
+    let artifact_dir = args.get_or("artifacts", "artifacts").to_string();
+
+    let mut rng = Xoshiro256pp::seed_from_u64(60_000);
+    let ds = mnist_like(&mut rng, n);
+    println!(
+        "mnist-like dataset: N={} d={} true K={} (paper §5.3 configuration)",
+        ds.points.n, ds.points.d, ds.true_k
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+
+    // --- xla backend: the full L3→L2→L1 path ---
+    let have_artifacts = std::path::Path::new(&artifact_dir).join("manifest.json").exists();
+    if have_artifacts {
+        let t0 = std::time::Instant::now();
+        let fit = DpmmFit::new(DpmmParams::gaussian_default(32))
+            .alpha(10.0)
+            .iterations(iters)
+            .seed(1)
+            .backend(BackendChoice::Xla {
+                artifact_dir: artifact_dir.clone(),
+                shard_size: 4096,
+                kernel: "auto".into(),
+                crossover: 640_000,
+            })
+            .fit(&ds.points)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let score = nmi(&ds.labels, &fit.labels);
+        println!(
+            "[xla]    K={:<3} NMI={:.3}  {:6.2}s total  {:.3}s/iter   ({})",
+            fit.num_clusters(),
+            score,
+            secs,
+            secs / iters as f64,
+            fit.timer.summary()
+        );
+        rows.push(Json::obj(vec![
+            ("backend", "xla".into()),
+            ("k", fit.num_clusters().into()),
+            ("nmi", score.into()),
+            ("seconds", secs.into()),
+        ]));
+    } else {
+        println!("[xla]    skipped — no artifacts at '{artifact_dir}' (run `make artifacts`)");
+    }
+
+    // --- native backend ---
+    let t0 = std::time::Instant::now();
+    let fit = DpmmFit::new(DpmmParams::gaussian_default(32))
+        .alpha(10.0)
+        .iterations(iters)
+        .seed(1)
+        .backend(BackendChoice::Native { threads: 0, shard_size: 16 * 1024 })
+        .fit(&ds.points)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let score = nmi(&ds.labels, &fit.labels);
+    println!(
+        "[native] K={:<3} NMI={:.3}  {:6.2}s total  {:.3}s/iter   ({})",
+        fit.num_clusters(),
+        score,
+        secs,
+        secs / iters as f64,
+        fit.timer.summary()
+    );
+    rows.push(Json::obj(vec![
+        ("backend", "native".into()),
+        ("k", fit.num_clusters().into()),
+        ("nmi", score.into()),
+        ("seconds", secs.into()),
+    ]));
+
+    // --- VB baseline (sklearn analog; gets the true K as its upper bound
+    //     ×2, the paper's Fig. 8/9 setup gave it true K) ---
+    let t0 = std::time::Instant::now();
+    let vb = VbGmm::fit(
+        &ds.points,
+        VbGmmConfig { n_components: ds.true_k, max_iter: 100, seed: 2, ..Default::default() },
+    );
+    let secs = t0.elapsed().as_secs_f64();
+    let score = nmi(&ds.labels, &vb.labels);
+    println!(
+        "[vbgmm]  K={:<3} NMI={:.3}  {:6.2}s total  ({} VI iterations, upper bound K={})",
+        vb.effective_k(),
+        score,
+        secs,
+        vb.n_iter,
+        ds.true_k
+    );
+    rows.push(Json::obj(vec![
+        ("backend", "vbgmm".into()),
+        ("k", vb.effective_k().into()),
+        ("nmi", score.into()),
+        ("seconds", secs.into()),
+    ]));
+
+    let out = Json::obj(vec![
+        ("dataset", "mnist_like".into()),
+        ("n", n.into()),
+        ("d", 32usize.into()),
+        ("true_k", ds.true_k.into()),
+        ("iterations", iters.into()),
+        ("results", Json::Arr(rows)),
+    ]);
+    std::fs::write("e2e_results.json", json::to_string_pretty(&out))?;
+    println!("\nwrote e2e_results.json (recorded in EXPERIMENTS.md §E2E)");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Quickstart — the paper's §3.4.1 sample workload: generate a synthetic
+//! GMM dataset with N = 10⁵ points, d = 2, K = 10 clusters, then fit a DPMM
+//! *without knowing K* and report what the sampler discovered.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dpmm::config::BackendChoice;
+use dpmm::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // Generate the dataset of §3.4.1: N = 10^5, d = 2, K = 10.
+    let mut rng = Xoshiro256pp::seed_from_u64(12345);
+    let ds = GmmSpec::default_with(100_000, 2, 10).generate(&mut rng);
+    println!("generated N={} d={} true K={}", ds.points.n, ds.points.d, ds.true_k);
+
+    // Fit a DPGMM with a weak NIW prior; K is inferred.
+    let t0 = std::time::Instant::now();
+    let fit = DpmmFit::new(DpmmParams::gaussian_default(2))
+        .alpha(10.0)
+        .iterations(100)
+        .seed(7)
+        .backend(BackendChoice::Native { threads: 0, shard_size: 16 * 1024 })
+        .fit(&ds.points)?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    println!("fit finished in {secs:.2}s ({} iterations)", fit.history.len());
+    println!("discovered K = {}", fit.num_clusters());
+    println!("NMI vs ground truth = {:.4}", nmi(&ds.labels, &fit.labels));
+    println!("phase times: {}", fit.timer.summary());
+    println!(
+        "weights: {:?}",
+        fit.weights.iter().map(|w| (w * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+    );
+    Ok(())
+}

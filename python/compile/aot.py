@@ -1,0 +1,162 @@
+"""AOT compile path: lower every shard-step program in the shape manifest to
+HLO *text* and write ``artifacts/<name>.hlo.txt`` + ``artifacts/manifest.json``.
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python is never on the request path.
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts          # default shape set
+  python -m compile.aot --out-dir ../artifacts --full   # bench sweep shapes
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.gaussian_loglik import KERNEL_DIRECT, KERNEL_MATMUL
+from .model import gaussian_shard_step, multinomial_shard_step
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def gaussian_specs(n, d, k):
+    """Input ShapeDtypeStructs for the Gaussian shard step, in call order."""
+    s = jax.ShapeDtypeStruct
+    return [
+        s((n, d), F32),        # x
+        s((n,), F32),          # mask
+        s((k,), F32),          # logw
+        s((k, d), F32),        # mu
+        s((k, d, d), F32),     # w
+        s((k,), F32),          # c
+        s((k, 2), F32),        # sub_logw
+        s((k, 2, d), F32),     # sub_mu
+        s((k, 2, d, d), F32),  # sub_w
+        s((k, 2), F32),        # sub_c
+        s((n, k), F32),        # gumbel
+        s((n, 2), F32),        # gumbel_sub
+    ]
+
+
+def multinomial_specs(n, d, k):
+    s = jax.ShapeDtypeStruct
+    return [
+        s((n, d), F32),        # x
+        s((n,), F32),          # mask
+        s((k,), F32),          # logw
+        s((k, d), F32),        # log_theta
+        s((k, 2), F32),        # sub_logw
+        s((k, 2, d), F32),     # sub_log_theta
+        s((n, k), F32),        # gumbel
+        s((n, 2), F32),        # gumbel_sub
+    ]
+
+
+def artifact_name(likelihood, kernel, d, k, n):
+    kern = f"_{kernel}" if kernel else ""
+    return f"{likelihood}{kern}_d{d}_k{k}_n{n}"
+
+
+def lower_one(likelihood, kernel, n, d, k):
+    if likelihood == "gaussian":
+        fn = functools.partial(gaussian_shard_step, kernel=kernel)
+        specs = gaussian_specs(n, d, k)
+    elif likelihood == "multinomial":
+        fn = multinomial_shard_step
+        specs = multinomial_specs(n, d, k)
+    else:
+        raise ValueError(f"unknown likelihood {likelihood!r}")
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+# (d, k, n) triplets. n must be a multiple of the Pallas block (512) or
+# small enough that block_n = n; all are powers of two.
+DEFAULT_SHAPES = [
+    (2, 16, 256),     # tiny: fast pytest / cargo-test shapes
+    (2, 16, 4096),
+    (8, 32, 4096),
+    (32, 32, 4096),
+]
+FULL_EXTRA = [
+    (2, 48, 16384),
+    (4, 32, 8192),
+    (16, 32, 8192),
+    (64, 32, 2048),
+    (128, 32, 2048),
+]
+
+MULT_DEFAULT = [
+    (4, 8, 256),
+    (16, 16, 4096),
+    (64, 32, 2048),
+]
+MULT_FULL_EXTRA = [
+    (128, 32, 2048),
+    (32, 32, 8192),
+]
+
+
+def build(out_dir: str, full: bool) -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    gauss_shapes = DEFAULT_SHAPES + (FULL_EXTRA if full else [])
+    mult_shapes = MULT_DEFAULT + (MULT_FULL_EXTRA if full else [])
+    jobs = [
+        ("gaussian", kern, d, k, n)
+        for kern in (KERNEL_MATMUL, KERNEL_DIRECT)
+        for (d, k, n) in gauss_shapes
+    ] + [("multinomial", None, d, k, n) for (d, k, n) in mult_shapes]
+    for likelihood, kernel, d, k, n in jobs:
+        name = artifact_name(likelihood, kernel, d, k, n)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_one(likelihood, kernel, n, d, k)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "likelihood": likelihood,
+                "kernel": kernel or "matmul",
+                "d": d,
+                "k": k,
+                "n": n,
+                "file": f"{name}.hlo.txt",
+            }
+        )
+        print(f"  lowered {name} ({len(text) / 1024:.0f} KiB)")
+    manifest = {"version": 1, "block_n": 512, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="also lower the bench sweep shapes")
+    args = ap.parse_args()
+    entries = build(args.out_dir, args.full)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

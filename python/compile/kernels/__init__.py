@@ -1,0 +1,1 @@
+from . import gaussian_loglik, multinomial_loglik, ref  # noqa: F401

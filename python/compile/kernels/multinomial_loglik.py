@@ -1,0 +1,52 @@
+"""Pallas kernel for the N×K multinomial assignment log-likelihood.
+
+For multinomial components the hot spot is a plain dense contraction
+``X @ log_thetaᵀ`` — exactly the case where the paper's GPU package was
+188× faster than Julia on 20newsgroups (d = 20000). On TPU this is a pure
+MXU job; the kernel tiles n and streams the (d × k) log-topic matrix
+through VMEM per tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 512
+
+
+def _kernel(x_ref, lt_ref, out_ref):
+    x = x_ref[...]              # (bn, d)
+    lt = lt_ref[...]            # (k, d)
+    out_ref[...] = jax.lax.dot_general(
+        x, lt.T, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def multinomial_loglik(x, log_theta, *, block_n=BLOCK_N, interpret=True):
+    """loglik[i, k] = Σ_j x[i, j] · log_theta[k, j] via Pallas.
+
+    Args:
+      x:         (n, d) float32 counts; n must divide by ``block_n``.
+      log_theta: (k, d) float32.
+
+    Returns:
+      (n, k) float32.
+    """
+    n, d = x.shape
+    k = log_theta.shape[0]
+    bn = min(block_n, n)
+    assert n % bn == 0, f"n={n} must be a multiple of block_n={bn}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(x, log_theta)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every Pallas kernel in this package must match its reference here to float32
+tolerance; ``python/tests`` enforces this with hypothesis sweeps over shapes.
+"""
+
+import jax.numpy as jnp
+
+
+def gaussian_loglik_ref(x, mu, w, c):
+    """N×K Gaussian assignment log-likelihood.
+
+    loglik[i, k] = c[k] - 0.5 * || W_k (x_i - mu_k) ||^2
+
+    where W_k is the inverse Cholesky factor of Sigma_k (lower triangular)
+    and c[k] = -0.5 * (d*log(2 pi) + logdet Sigma_k) is precomputed by the
+    coordinator.
+
+    Args:
+      x:  (n, d) float32 points.
+      mu: (k, d) float32 component means.
+      w:  (k, d, d) float32 inverse Cholesky factors.
+      c:  (k,) float32 log-normalizers.
+
+    Returns:
+      (n, k) float32.
+    """
+    diff = x[:, None, :] - mu[None, :, :]              # (n, k, d)
+    y = jnp.einsum("nkd,ked->nke", diff, w)            # W_k diff  (n, k, d)
+    maha = jnp.sum(y * y, axis=-1)                     # (n, k)
+    return c[None, :] - 0.5 * maha
+
+
+def multinomial_loglik_ref(x, log_theta):
+    """N×K multinomial assignment log-likelihood (coefficient dropped).
+
+    loglik[i, k] = sum_j x[i, j] * log_theta[k, j]
+
+    Args:
+      x:         (n, d) float32 count vectors.
+      log_theta: (k, d) float32 log-probabilities.
+
+    Returns:
+      (n, k) float32.
+    """
+    return x @ log_theta.T

@@ -1,0 +1,93 @@
+"""L2: the shard-step compute graph the Rust coordinator executes each
+iteration — steps (e)/(f) of the restricted Gibbs sweep plus the cheap
+sufficient statistics, fused into one XLA program per (likelihood, d, K, n).
+
+Design notes (see DESIGN.md §2, §7):
+
+* All randomness enters as a Gumbel-noise input tensor from the Rust PRNG
+  (Gumbel-argmax == categorical sampling), keeping the program pure.
+* K is static; dead clusters are masked with log-weight −1e30.
+* Padded rows (mask = 0) contribute nothing to the statistics; their labels
+  are ignored by the Rust side.
+* Sub-cluster log-likelihoods are computed densely against all 2K
+  sub-components and gathered by z. A per-point gather of (d×d) factors
+  would blow VMEM at d=128; dense beats gather on TPU.
+* The O(n·d²)-per-cluster scatter matrices (Gaussian Σxxᵀ) are accumulated
+  by the Rust side from the returned labels — they are pure host-side
+  bookkeeping, while everything O(n·K) stays on device.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gaussian_loglik import KERNEL_MATMUL, gaussian_loglik
+from .kernels.multinomial_loglik import multinomial_loglik
+
+NEG = -1.0e30
+
+
+def _assign_and_stats(x, mask, ll, logw, sub_ll, sub_logw, gumbel, gumbel_sub):
+    """Shared tail: sample z, z̄; compute masked counts and Σx.
+
+    Args:
+      x:        (n, d)
+      mask:     (n,)   1.0 = real point, 0.0 = padding
+      ll:       (n, k) component log-likelihoods
+      logw:     (k,)   log mixture weights (−1e30 for dead slots)
+      sub_ll:   (n, k, 2) sub-component log-likelihoods
+      sub_logw: (k, 2) log sub-weights
+      gumbel:   (n, k) Gumbel(0,1) noise
+      gumbel_sub: (n, 2)
+
+    Returns:
+      z (n,) int32, zsub (n,) int32, counts (k, 2) f32, sumx (k, 2, d) f32.
+    """
+    n, k = ll.shape
+    scores = ll + logw[None, :] + gumbel
+    z = jnp.argmax(scores, axis=1).astype(jnp.int32)                     # (n,)
+    sub_scores = jnp.take_along_axis(
+        sub_ll + sub_logw[None, :, :], z[:, None, None], axis=1
+    )[:, 0, :]                                                           # (n, 2)
+    zsub = jnp.argmax(sub_scores + gumbel_sub, axis=1).astype(jnp.int32)
+    flat = z * 2 + zsub                                                  # (n,)
+    onehot = jax.nn.one_hot(flat, 2 * k, dtype=jnp.float32) * mask[:, None]
+    counts = jnp.sum(onehot, axis=0).reshape(k, 2)
+    sumx = (onehot.T @ x).reshape(k, 2, -1)
+    return z, zsub, counts, sumx
+
+
+def gaussian_shard_step(
+    x, mask, logw, mu, w, c, sub_logw, sub_mu, sub_w, sub_c, gumbel, gumbel_sub,
+    *, kernel=KERNEL_MATMUL,
+):
+    """Full Gaussian shard step.
+
+    Shapes: x (n,d); mask (n,); logw (k,); mu (k,d); w (k,d,d); c (k,);
+    sub_logw (k,2); sub_mu (k,2,d); sub_w (k,2,d,d); sub_c (k,2);
+    gumbel (n,k); gumbel_sub (n,2).
+
+    Returns (z, zsub, counts, sumx) — see ``_assign_and_stats``.
+    """
+    n, d = x.shape
+    k = mu.shape[0]
+    ll = gaussian_loglik(x, mu, w, c, kernel=kernel)                       # (n, k)
+    sub_ll = gaussian_loglik(
+        x, sub_mu.reshape(2 * k, d), sub_w.reshape(2 * k, d, d), sub_c.reshape(2 * k),
+        kernel=kernel,
+    ).reshape(n, k, 2)
+    return _assign_and_stats(x, mask, ll, logw, sub_ll, sub_logw, gumbel, gumbel_sub)
+
+
+def multinomial_shard_step(
+    x, mask, logw, log_theta, sub_logw, sub_log_theta, gumbel, gumbel_sub,
+):
+    """Full multinomial shard step.
+
+    Shapes: x (n,d); mask (n,); logw (k,); log_theta (k,d); sub_logw (k,2);
+    sub_log_theta (k,2,d); gumbel (n,k); gumbel_sub (n,2).
+    """
+    n, d = x.shape
+    k = log_theta.shape[0]
+    ll = multinomial_loglik(x, log_theta)                                  # (n, k)
+    sub_ll = multinomial_loglik(x, sub_log_theta.reshape(2 * k, d)).reshape(n, k, 2)
+    return _assign_and_stats(x, mask, ll, logw, sub_ll, sub_logw, gumbel, gumbel_sub)

@@ -1,0 +1,124 @@
+"""dpmmwrapper — the paper's `dpmmpython` single-entry-point analog.
+
+The paper ships a Python wrapper that hides the Julia (CPU) and CUDA/C++
+(GPU) packages behind one `fit` call. Here the wrapper shells out to the
+self-contained `dpmm` Rust binary, selecting the backend the same way
+(``gpu=True`` → the AOT-XLA backend, the GPU-package analog; ``gpu=False``
+→ the native multi-core backend, the Julia analog).
+
+Build-time only convenience — nothing here is on the request path.
+
+Example (mirrors the paper's §3.4.4 sample):
+
+    import numpy as np
+    from dpmmwrapper import generate_gaussian_data, fit
+
+    data, gt = generate_gaussian_data(100_000, 2, 10, seed=12345)
+    labels, result = fit(data, alpha=10.0, iterations=100, gpu=False)
+    print("K =", result["num_clusters"])
+"""
+
+import json
+import os
+import subprocess
+import tempfile
+
+import numpy as np
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _binary():
+    for profile in ("release", "debug"):
+        p = os.path.join(_REPO, "target", profile, "dpmm")
+        if os.path.exists(p):
+            return p
+    raise FileNotFoundError(
+        "dpmm binary not found — run `cargo build --release` first"
+    )
+
+
+def generate_gaussian_data(n, d, k, seed=0):
+    """Synthetic GMM dataset via the Rust generator (returns (X, labels))."""
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "x.npy")
+        lab = os.path.join(td, "y.npy")
+        subprocess.run(
+            [
+                _binary(), "generate", "--kind=gmm", f"--n={n}", f"--d={d}",
+                f"--k={k}", f"--seed={seed}", f"--out={out}", f"--labels_out={lab}",
+            ],
+            check=True,
+            capture_output=True,
+        )
+        return np.load(out), np.load(lab)
+
+
+def fit(
+    data,
+    alpha=10.0,
+    iterations=100,
+    prior_type="Gaussian",
+    gpu=False,
+    seed=0,
+    gt=None,
+    verbose=False,
+    workers=None,
+    artifact_dir=None,
+):
+    """Fit a DPMM; returns (labels ndarray, result dict).
+
+    Args:
+      data: (n, d) array-like (float for Gaussian, counts for Multinomial).
+      gpu: True → xla backend (the paper's GPU package analog; needs
+           `make artifacts`), False → native multi-core.
+      workers: optional list of "host:port" strings → distributed backend
+           (the paper's multi-machine Julia mode).
+      gt: optional ground-truth labels; NMI/ARI land in the result dict.
+    """
+    x = np.ascontiguousarray(np.asarray(data, dtype=np.float64))
+    if x.ndim != 2:
+        raise ValueError("data must be 2-D (n, d)")
+    with tempfile.TemporaryDirectory() as td:
+        xp = os.path.join(td, "x.npy")
+        rp = os.path.join(td, "result.json")
+        np.save(xp, x)
+        cmd = [
+            _binary(), "fit", f"--data={xp}", f"--alpha={alpha}",
+            f"--iterations={iterations}", f"--seed={seed}",
+            f"--prior_type={prior_type}", f"--result_path={rp}",
+        ]
+        if workers:
+            cmd += ["--backend=distributed", "--workers=" + ",".join(workers)]
+        elif gpu:
+            cmd += ["--backend=xla"]
+            cmd += [f"--artifacts={artifact_dir or os.path.join(_REPO, 'artifacts')}"]
+        else:
+            cmd += ["--backend=native"]
+        if gt is not None:
+            gp = os.path.join(td, "gt.npy")
+            np.save(gp, np.asarray(gt, dtype=np.int64))
+            cmd.append(f"--labels={gp}")
+        if verbose:
+            cmd.append("--verbose")
+        proc = subprocess.run(cmd, capture_output=True, text=True)
+        if proc.returncode != 0:
+            raise RuntimeError(f"dpmm fit failed:\n{proc.stderr}")
+        if verbose:
+            print(proc.stderr)
+        with open(rp) as f:
+            result = json.load(f)
+    labels = np.asarray(result.pop("labels"), dtype=np.int64)
+    return labels, result
+
+
+def main():
+    data, gt = generate_gaussian_data(20_000, 2, 6, seed=12345)
+    labels, result = fit(data, alpha=10.0, iterations=80, gpu=False, gt=gt)
+    print(f"backend={result['backend']} K={result['num_clusters']} "
+          f"NMI={result.get('nmi', float('nan')):.3f} "
+          f"time={result['total_seconds']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""AOT path tests: lowering produces loadable HLO text + a coherent manifest."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_lower_one_gaussian_produces_hlo_text():
+    text = aot.lower_one("gaussian", "matmul", n=64, d=2, k=4)
+    assert "HloModule" in text
+    # One fused program: single ENTRY computation.
+    assert text.count("ENTRY") == 1
+    # The program carries the expected parameter count (12 inputs).
+    assert "parameter(11)" in text
+    assert "parameter(12)" not in text
+
+
+def test_lower_one_multinomial_produces_hlo_text():
+    text = aot.lower_one("multinomial", None, n=64, d=8, k=4)
+    assert "HloModule" in text
+    assert "parameter(7)" in text
+    assert "parameter(8)" not in text
+
+
+def test_lower_rejects_unknown_likelihood():
+    with pytest.raises(ValueError):
+        aot.lower_one("poisson", None, n=8, d=2, k=2)
+
+
+def test_build_writes_manifest(tmp_path):
+    # Monkeypatch the shape lists down to one tiny shape for speed.
+    old_g, old_m = aot.DEFAULT_SHAPES, aot.MULT_DEFAULT
+    aot.DEFAULT_SHAPES, aot.MULT_DEFAULT = [(2, 4, 64)], [(4, 4, 64)]
+    try:
+        entries = aot.build(str(tmp_path), full=False)
+    finally:
+        aot.DEFAULT_SHAPES, aot.MULT_DEFAULT = old_g, old_m
+    # 2 gaussian kernels × 1 shape + 1 multinomial shape.
+    assert len(entries) == 3
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert len(manifest["artifacts"]) == 3
+    for e in manifest["artifacts"]:
+        assert os.path.exists(tmp_path / e["file"])
+        assert {"name", "likelihood", "kernel", "d", "k", "n"} <= set(e)
+
+
+def test_artifact_names_are_unique_and_stable():
+    assert aot.artifact_name("gaussian", "matmul", 2, 16, 256) == \
+        "gaussian_matmul_d2_k16_n256"
+    assert aot.artifact_name("multinomial", None, 4, 8, 256) == \
+        "multinomial_d4_k8_n256"
+    names = set()
+    for kern in ("matmul", "direct"):
+        for (d, k, n) in aot.DEFAULT_SHAPES:
+            names.add(aot.artifact_name("gaussian", kern, d, k, n))
+    assert len(names) == 2 * len(aot.DEFAULT_SHAPES)

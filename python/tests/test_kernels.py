@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/seeds; every case asserts allclose at float32
+tolerance. This is the core correctness signal for the device hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gaussian_loglik import (
+    KERNEL_DIRECT,
+    KERNEL_MATMUL,
+    gaussian_loglik,
+    pick_kernel,
+)
+from compile.kernels.multinomial_loglik import multinomial_loglik
+from compile.kernels.ref import gaussian_loglik_ref, multinomial_loglik_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_gaussian_case(rng, n, d, k):
+    x = rng.normal(size=(n, d)).astype(np.float32) * 3.0
+    mu = rng.normal(size=(k, d)).astype(np.float32) * 2.0
+    # Random well-conditioned lower-triangular inverse-chol factors.
+    w = np.zeros((k, d, d), dtype=np.float32)
+    for i in range(k):
+        a = rng.normal(size=(d, d)).astype(np.float32) * 0.3
+        w[i] = np.tril(a, -1) + np.diag(0.5 + rng.uniform(size=d).astype(np.float32))
+    c = rng.normal(size=(k,)).astype(np.float32)
+    return x, mu, w, c
+
+
+@pytest.mark.parametrize("kernel", [KERNEL_MATMUL, KERNEL_DIRECT])
+@pytest.mark.parametrize("n,d,k", [(64, 2, 3), (128, 8, 16), (256, 32, 8), (512, 5, 4)])
+def test_gaussian_matches_ref(kernel, n, d, k):
+    rng = np.random.default_rng(hash((kernel, n, d, k)) % 2**32)
+    x, mu, w, c = make_gaussian_case(rng, n, d, k)
+    got = gaussian_loglik(x, mu, w, c, kernel=kernel)
+    want = gaussian_loglik_ref(x, mu, w, c)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("kernel", [KERNEL_MATMUL, KERNEL_DIRECT])
+def test_gaussian_blocked_grid(kernel):
+    """n spanning multiple BLOCK_N tiles exercises the grid index maps."""
+    rng = np.random.default_rng(7)
+    x, mu, w, c = make_gaussian_case(rng, 1024, 4, 5)
+    got = gaussian_loglik(x, mu, w, c, kernel=kernel, block_n=256)
+    want = gaussian_loglik_ref(x, mu, w, c)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_gaussian_kernels_agree_with_each_other():
+    rng = np.random.default_rng(11)
+    x, mu, w, c = make_gaussian_case(rng, 256, 16, 12)
+    a = gaussian_loglik(x, mu, w, c, kernel=KERNEL_MATMUL)
+    b = gaussian_loglik(x, mu, w, c, kernel=KERNEL_DIRECT)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_gaussian_identity_cov_is_euclidean():
+    """W = I → loglik = c − ½‖x − μ‖²: closed form sanity."""
+    n, d, k = 32, 3, 2
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    mu = rng.normal(size=(k, d)).astype(np.float32)
+    w = np.tile(np.eye(d, dtype=np.float32), (k, 1, 1))
+    c = np.zeros(k, dtype=np.float32)
+    got = np.asarray(gaussian_loglik(x, mu, w, c))
+    for i in range(n):
+        for j in range(k):
+            expect = -0.5 * np.sum((x[i] - mu[j]) ** 2)
+            assert abs(got[i, j] - expect) < 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_exp=st.integers(min_value=4, max_value=9),
+    d=st.integers(min_value=1, max_value=48),
+    k=st.integers(min_value=1, max_value=24),
+    kernel=st.sampled_from([KERNEL_MATMUL, KERNEL_DIRECT]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gaussian_hypothesis_sweep(n_exp, d, k, kernel, seed):
+    n = 2**n_exp
+    rng = np.random.default_rng(seed)
+    x, mu, w, c = make_gaussian_case(rng, n, d, k)
+    got = gaussian_loglik(x, mu, w, c, kernel=kernel)
+    want = gaussian_loglik_ref(x, mu, w, c)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 4, 3), (256, 64, 20), (512, 7, 2)])
+def test_multinomial_matches_ref(n, d, k):
+    rng = np.random.default_rng(hash((n, d, k)) % 2**32)
+    x = rng.poisson(2.0, size=(n, d)).astype(np.float32)
+    theta = rng.dirichlet(np.ones(d), size=k).astype(np.float32)
+    log_theta = np.log(np.maximum(theta, 1e-30))
+    got = multinomial_loglik(x, log_theta)
+    want = multinomial_loglik_ref(x, log_theta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_exp=st.integers(min_value=4, max_value=10),
+    d=st.integers(min_value=1, max_value=64),
+    k=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_multinomial_hypothesis_sweep(n_exp, d, k, seed):
+    n = 2**n_exp
+    rng = np.random.default_rng(seed)
+    x = rng.poisson(1.5, size=(n, d)).astype(np.float32)
+    log_theta = np.log(rng.dirichlet(np.ones(d) * 0.7, size=k).astype(np.float32) + 1e-20)
+    got = multinomial_loglik(x, log_theta)
+    want = multinomial_loglik_ref(x, log_theta)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_pick_kernel_crossover():
+    assert pick_kernel(2, 1000) == KERNEL_DIRECT
+    assert pick_kernel(128, 16384) == KERNEL_MATMUL
+    assert pick_kernel(8, 79_999) == KERNEL_DIRECT
+    assert pick_kernel(8, 80_000, crossover=640_000) == KERNEL_MATMUL
+    # custom crossover respected
+    assert pick_kernel(10, 100, crossover=500) == KERNEL_MATMUL

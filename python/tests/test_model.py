@@ -1,0 +1,150 @@
+"""L2 correctness: shard-step graphs — label sampling + statistics — against
+a pure-numpy reimplementation, plus invariants (mask zeroing, dead-cluster
+masking, count conservation).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import NEG, gaussian_shard_step, multinomial_shard_step
+from compile.kernels.ref import gaussian_loglik_ref, multinomial_loglik_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def gumbel(rng, shape):
+    u = rng.uniform(low=1e-12, high=1.0, size=shape).astype(np.float32)
+    return (-np.log(-np.log(u))).astype(np.float32)
+
+
+def make_gaussian_inputs(rng, n, d, k, live=None):
+    live = k if live is None else live
+    x = rng.normal(size=(n, d)).astype(np.float32) * 2.0
+    mask = np.ones(n, dtype=np.float32)
+    logw = np.full(k, NEG, dtype=np.float32)
+    logw[:live] = np.log(1.0 / live)
+    mu = rng.normal(size=(k, d)).astype(np.float32) * 4.0
+    w = np.zeros((k, d, d), dtype=np.float32)
+    for i in range(k):
+        a = rng.normal(size=(d, d)).astype(np.float32) * 0.2
+        w[i] = np.tril(a, -1) + np.diag(0.6 + rng.uniform(size=d).astype(np.float32))
+    c = rng.normal(size=(k,)).astype(np.float32)
+    sub_logw = np.log(np.full((k, 2), 0.5, dtype=np.float32))
+    sub_mu = rng.normal(size=(k, 2, d)).astype(np.float32) * 4.0
+    sub_w = np.stack([w, w], axis=1) * 1.1
+    sub_c = np.stack([c, c], axis=1)
+    g = gumbel(rng, (n, k))
+    gs = gumbel(rng, (n, 2))
+    return x, mask, logw, mu, w, c, sub_logw, sub_mu, sub_w, sub_c, g, gs
+
+
+def numpy_reference(x, mask, logw, ll, sub_ll, sub_logw, g, gs):
+    n, k = ll.shape
+    z = np.argmax(ll + logw[None, :] + g, axis=1)
+    sub_scores = sub_ll[np.arange(n), z, :] + sub_logw[z, :] + gs
+    zsub = np.argmax(sub_scores, axis=1)
+    counts = np.zeros((k, 2), dtype=np.float64)
+    sumx = np.zeros((k, 2, x.shape[1]), dtype=np.float64)
+    for i in range(n):
+        if mask[i] > 0:
+            counts[z[i], zsub[i]] += 1
+            sumx[z[i], zsub[i]] += x[i]
+    return z, zsub, counts, sumx
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 2, 4), (256, 8, 8), (128, 16, 6)])
+def test_gaussian_shard_step_matches_numpy(n, d, k):
+    rng = np.random.default_rng(hash((n, d, k)) % 2**32)
+    inputs = make_gaussian_inputs(rng, n, d, k)
+    x, mask, logw, mu, w, c, sub_logw, sub_mu, sub_w, sub_c, g, gs = inputs
+    z, zsub, counts, sumx = [np.asarray(o) for o in gaussian_shard_step(*inputs)]
+    ll = np.asarray(gaussian_loglik_ref(x, mu, w, c))
+    sub_ll = np.asarray(
+        gaussian_loglik_ref(x, sub_mu.reshape(2 * k, d), sub_w.reshape(2 * k, d, d),
+                            sub_c.reshape(2 * k))
+    ).reshape(n, k, 2)
+    ez, ezsub, ecounts, esumx = numpy_reference(x, mask, logw, ll, sub_ll, sub_logw, g, gs)
+    np.testing.assert_array_equal(z, ez)
+    np.testing.assert_array_equal(zsub, ezsub)
+    np.testing.assert_allclose(counts, ecounts, atol=1e-3)
+    np.testing.assert_allclose(sumx, esumx, rtol=1e-4, atol=1e-2)
+
+
+def test_mask_zeroes_padded_rows():
+    rng = np.random.default_rng(5)
+    n, d, k = 128, 4, 4
+    inputs = list(make_gaussian_inputs(rng, n, d, k))
+    inputs[1] = np.concatenate(
+        [np.ones(n // 2, dtype=np.float32), np.zeros(n // 2, dtype=np.float32)]
+    )
+    z, zsub, counts, sumx = gaussian_shard_step(*inputs)
+    assert float(jnp.sum(counts)) == n // 2
+
+
+def test_dead_clusters_never_assigned():
+    rng = np.random.default_rng(9)
+    n, d, k, live = 256, 4, 8, 3
+    inputs = make_gaussian_inputs(rng, n, d, k, live=live)
+    z, zsub, counts, _ = gaussian_shard_step(*inputs)
+    assert int(jnp.max(z)) < live
+    assert float(jnp.sum(counts[live:])) == 0.0
+
+
+def test_counts_conserve_points():
+    rng = np.random.default_rng(13)
+    n, d, k = 512, 8, 8
+    inputs = make_gaussian_inputs(rng, n, d, k)
+    _, _, counts, sumx = gaussian_shard_step(*inputs)
+    assert abs(float(jnp.sum(counts)) - n) < 1e-3
+    # sumx totals = column sums of x
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(sumx, axis=(0, 1))),
+        np.asarray(inputs[0]).sum(axis=0),
+        rtol=1e-4, atol=0.5,
+    )
+
+
+def make_multinomial_inputs(rng, n, d, k):
+    x = rng.poisson(2.0, size=(n, d)).astype(np.float32)
+    mask = np.ones(n, dtype=np.float32)
+    logw = np.log(np.full(k, 1.0 / k, dtype=np.float32))
+    log_theta = np.log(
+        rng.dirichlet(np.ones(d) * 0.5, size=k).astype(np.float32) + 1e-20
+    )
+    sub_logw = np.log(np.full((k, 2), 0.5, dtype=np.float32))
+    sub_log_theta = np.log(
+        rng.dirichlet(np.ones(d) * 0.5, size=(k, 2)).astype(np.float32) + 1e-20
+    )
+    g = gumbel(rng, (n, k))
+    gs = gumbel(rng, (n, 2))
+    return x, mask, logw, log_theta, sub_logw, sub_log_theta, g, gs
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 8, 4), (256, 32, 8)])
+def test_multinomial_shard_step_matches_numpy(n, d, k):
+    rng = np.random.default_rng(hash((n, d, k, 1)) % 2**32)
+    inputs = make_multinomial_inputs(rng, n, d, k)
+    x, mask, logw, log_theta, sub_logw, sub_log_theta, g, gs = inputs
+    z, zsub, counts, sumx = [np.asarray(o) for o in multinomial_shard_step(*inputs)]
+    ll = np.asarray(multinomial_loglik_ref(x, log_theta))
+    sub_ll = np.asarray(
+        multinomial_loglik_ref(x, sub_log_theta.reshape(2 * k, d))
+    ).reshape(n, k, 2)
+    ez, ezsub, ecounts, esumx = numpy_reference(x, mask, logw, ll, sub_ll, sub_logw, g, gs)
+    np.testing.assert_array_equal(z, ez)
+    np.testing.assert_array_equal(zsub, ezsub)
+    np.testing.assert_allclose(counts, ecounts, atol=1e-3)
+    np.testing.assert_allclose(sumx, esumx, rtol=1e-4, atol=0.5)
+
+
+def test_gumbel_argmax_is_categorical():
+    """Sanity: frequency of argmax(logw + gumbel) ≈ softmax(logw)."""
+    rng = np.random.default_rng(21)
+    logw = np.log(np.array([0.2, 0.3, 0.5], dtype=np.float32))
+    reps = 20000
+    g = gumbel(rng, (reps, 3))
+    z = np.argmax(logw[None, :] + g, axis=1)
+    freq = np.bincount(z, minlength=3) / reps
+    np.testing.assert_allclose(freq, [0.2, 0.3, 0.5], atol=0.02)

@@ -1,0 +1,42 @@
+//! Figure 7: DPMNMM synthetic-data NMI for the Figure 6 sweep.
+//!
+//! Run: `cargo bench --bench fig7_mnmm_nmi`
+
+#[path = "support/mod.rs"]
+mod support;
+
+use dpmm::prelude::*;
+use support::*;
+
+fn main() -> anyhow::Result<()> {
+    let n = match scale() {
+        Scale::Small => 20_000,
+        Scale::Medium => 100_000,
+        Scale::Full => 1_000_000,
+    };
+    let iters = sweep_iters();
+    let configs: Vec<(usize, usize)> = match scale() {
+        Scale::Small => vec![(16, 4), (16, 16), (64, 8)],
+        _ => vec![(8, 4), (16, 8), (32, 16), (64, 16), (128, 32)],
+    };
+    println!("Fig 7 (DPMNMM NMI): N={n} iterations={iters} scale={:?}", scale());
+
+    let mut xs = Vec::new();
+    let mut rows = Vec::new();
+    for &(d, k) in &configs {
+        let mut rng = Xoshiro256pp::seed_from_u64(7_000 + (d * 100 + k) as u64);
+        let ds = MultinomialSpec::default_with(n, d, k).generate(&mut rng);
+        let mut row = Vec::new();
+        row.push(Some(run_dpmm(&ds, native_backend(), "native", iters, 4)?));
+        if have_artifacts() && [16usize, 64].contains(&d) {
+            row.push(Some(run_dpmm(&ds, xla_backend(), "xla", iters, 4)?));
+        } else {
+            row.push(None);
+        }
+        xs.push(format!("d={d},K={k}"));
+        rows.push(row);
+    }
+    print_table("Figure 7 — DPMNMM NMI", "config", &xs, &rows, "nmi");
+    print_table("Figure 7 — discovered K", "config", &xs, &rows, "k");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Figure 8: running time on the paper's real datasets — mnist, fashion
+//! mnist, ImageNet-100 (PCA features, Gaussian components) and
+//! 20newsgroups (BoW counts, multinomial components). The real corpora are
+//! unavailable offline, so the simulated-real generators of
+//! `datagen::realistic` stand in with matched (N, d, K) — DESIGN.md §5.
+//!
+//! Run: `cargo bench --bench fig8_real_time`
+
+#[path = "support/mod.rs"]
+mod support;
+
+use dpmm::datagen::{fashion_like, imagenet100_like, mnist_like, newsgroups_like, Dataset};
+use dpmm::prelude::*;
+use support::*;
+
+fn datasets() -> Vec<(&'static str, Dataset, usize)> {
+    // (name, dataset, sklearn upper bound — paper gave it 5*trueK for
+    // ImageNet where it then predicted K=500).
+    let frac = match scale() {
+        Scale::Small => 12,
+        Scale::Medium => 2,
+        Scale::Full => 1,
+    };
+    // The VB comparator is O(N·T·d²) per iteration; its upper bound T is
+    // scaled with the workload so `cargo bench` stays minutes, not hours.
+    let vb_imagenet = match scale() {
+        Scale::Small => 60,
+        Scale::Medium => 120,
+        Scale::Full => 200,
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(8_000);
+    vec![
+        ("mnist", mnist_like(&mut rng, 60_000 / frac), 20),
+        ("fashion", fashion_like(&mut rng, 60_000 / frac), 20),
+        ("imagenet100", imagenet100_like(&mut rng, 125_000 / frac), vb_imagenet),
+        ("20news", newsgroups_like(&mut rng, 11_314 / frac, if frac > 1 { 2_000 } else { 20_000 }), 0),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let iters = sweep_iters();
+    println!("Fig 8 (real-data time): iterations={iters} scale={:?}", scale());
+    let mut xs = Vec::new();
+    let mut rows = Vec::new();
+    for (name, ds, vb_bound) in datasets() {
+        let mut row = Vec::new();
+        // xla path only where an artifact shape matches (d=32 gaussian; the
+        // d=64/d≥2000 shapes need `make artifacts-full`).
+        let is_discrete = name == "20news";
+        let d = ds.points.d;
+        let artifact_ok = have_artifacts()
+            && ((!is_discrete && [2usize, 8, 32].contains(&d)) || (is_discrete && [16usize, 64].contains(&d)));
+        if artifact_ok {
+            row.push(Some(run_dpmm(&ds, xla_backend(), "xla", iters, 5)?));
+        } else {
+            row.push(None);
+        }
+        row.push(Some(run_dpmm(&ds, native_backend(), "native", iters, 5)?));
+        if vb_bound > 0 {
+            row.push(Some(run_vb(&ds, vb_bound, "vb(sklearn)", 5)));
+        } else {
+            row.push(None); // sklearn has no multinomial DP mode (paper)
+        }
+        xs.push(format!("{name} (N={},d={})", ds.points.n, d));
+        rows.push(row);
+    }
+    print_table("Figure 8 — real-data running time", "dataset", &xs, &rows, "time");
+    speedup_summary(&rows, "native", "vb(sklearn)");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! §4.4 runtime-complexity check: the paper claims O(N·K·T/G) per
+//! iteration with T = d² for Gaussians and T = d for multinomials. This
+//! bench measures the native assignment hot path across N, K, d and prints
+//! the empirical scaling exponents, plus substrate micro-benchmarks
+//! (Cholesky, RNG) that bound the coordinator-side O(K·d³) work.
+//!
+//! Run: `cargo bench --bench micro_hotpath`
+
+#[path = "support/mod.rs"]
+mod support;
+
+use dpmm::backend::native::{NativeBackend, NativeConfig};
+use dpmm::backend::Backend;
+use dpmm::linalg::Matrix;
+use dpmm::model::DpmmState;
+use dpmm::prelude::*;
+use dpmm::sampler::{sample_params, sample_sub_weights, sample_weights, SamplerOptions, StepParams};
+use dpmm::stats::Prior;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn step_time(n: usize, d: usize, k: usize, threads: usize) -> f64 {
+    let mut rng = Xoshiro256pp::seed_from_u64((n + d * 7 + k * 13) as u64);
+    let ds = GmmSpec::default_with(n, d, k).generate(&mut rng);
+    let data = Arc::new(ds.points);
+    let prior = Prior::Niw(dpmm::stats::NiwPrior::weak(d));
+    let mut backend = NativeBackend::new(
+        Arc::clone(&data),
+        prior.clone(),
+        NativeConfig { threads, shard_size: 16 * 1024 },
+        &mut rng,
+    );
+    let mut state = DpmmState::new(10.0, prior, k, n, &mut rng);
+    // Fill stats so params are realistic: one warm step.
+    let opts = SamplerOptions::default();
+    sample_weights(&mut state, &mut rng);
+    sample_sub_weights(&mut state, &mut rng);
+    sample_params(&mut state, &opts, &mut rng);
+    let snap = StepParams::snapshot(&state);
+    backend.step(&snap).unwrap();
+    let t0 = Instant::now();
+    let reps = 3;
+    for _ in 0..reps {
+        backend.step(&snap).unwrap();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn fit_exponent(xs: &[f64], ys: &[f64]) -> f64 {
+    // least squares on log-log
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let mx = lx.iter().sum::<f64>() / lx.len() as f64;
+    let my = ly.iter().sum::<f64>() / ly.len() as f64;
+    let num: f64 = lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+fn main() {
+    println!("§4.4 empirical complexity of the native assignment step (1 thread)\n");
+
+    // N scaling (d=8, K=8)
+    let ns = [20_000usize, 40_000, 80_000];
+    let tn: Vec<f64> = ns.iter().map(|&n| step_time(n, 8, 8, 1)).collect();
+    println!("N sweep (d=8, K=8): {:?} -> {:?}", ns, tn.iter().map(|t| format!("{t:.3}s")).collect::<Vec<_>>());
+    println!("  exponent ~ N^{:.2} (paper: 1.0)\n", fit_exponent(&ns.iter().map(|&x| x as f64).collect::<Vec<_>>(), &tn));
+
+    // K scaling (N=40k, d=8)
+    let ks = [4usize, 8, 16, 32];
+    let tk: Vec<f64> = ks.iter().map(|&k| step_time(40_000, 8, k, 1)).collect();
+    println!("K sweep (N=40k, d=8): {:?} -> {:?}", ks, tk.iter().map(|t| format!("{t:.3}s")).collect::<Vec<_>>());
+    println!("  exponent ~ K^{:.2} (paper: 1.0)\n", fit_exponent(&ks.iter().map(|&x| x as f64).collect::<Vec<_>>(), &tk));
+
+    // d scaling (N=40k, K=8): T = d² per paper
+    let dims = [4usize, 8, 16, 32];
+    let td: Vec<f64> = dims.iter().map(|&d| step_time(40_000, d, 8, 1)).collect();
+    println!("d sweep (N=40k, K=8): {:?} -> {:?}", dims, td.iter().map(|t| format!("{t:.3}s")).collect::<Vec<_>>());
+    println!("  exponent ~ d^{:.2} (paper: T = d², i.e. 2.0 asymptotically)\n", fit_exponent(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>(), &td));
+
+    // Substrate micro-benches: coordinator-side O(K·d³).
+    println!("substrate micro-benchmarks:");
+    for d in [8usize, 32, 128] {
+        let mut rng = Xoshiro256pp::seed_from_u64(d as u64);
+        let spd = dpmm::datagen::random_spd(&mut rng, d, 1.0);
+        let t0 = Instant::now();
+        let reps = 200;
+        for _ in 0..reps {
+            std::hint::black_box(spd.cholesky().unwrap());
+        }
+        let chol = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("  cholesky d={d:<4} {:.1} µs", chol * 1e6);
+    }
+    let mut rng = Xoshiro256pp::seed_from_u64(0);
+    let t0 = Instant::now();
+    let mut acc = 0.0f64;
+    for _ in 0..10_000_000 {
+        acc += rng.next_f64();
+    }
+    println!("  rng next_f64      {:.2} ns/draw (sum={acc:.1})", t0.elapsed().as_secs_f64() / 1e7 * 1e9);
+
+    let m = Matrix::identity(64);
+    let t0 = Instant::now();
+    for _ in 0..100 {
+        std::hint::black_box(m.matmul(&m));
+    }
+    println!("  matmul 64x64      {:.1} µs", t0.elapsed().as_secs_f64() / 100.0 * 1e6);
+}

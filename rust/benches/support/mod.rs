@@ -1,0 +1,170 @@
+#![allow(dead_code)]
+
+//! Shared helpers for the figure-regeneration benches (`harness = false`
+//! binaries — criterion is unavailable offline, and these benches print
+//! paper-style tables rather than statistical micro-timings).
+//!
+//! Scale control: `DPMM_BENCH_SCALE=small|medium|full` (default `small` so
+//! `cargo bench` completes in minutes; `full` reproduces the paper's
+//! N = 10⁶ sweeps and can run for hours, exactly like the paper's notebook).
+
+use dpmm::baselines::{VbGmm, VbGmmConfig};
+use dpmm::config::{BackendChoice, DpmmParams};
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::Dataset;
+use dpmm::metrics::nmi;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Small,
+    Medium,
+    Full,
+}
+
+pub fn scale() -> Scale {
+    match std::env::var("DPMM_BENCH_SCALE").as_deref() {
+        Ok("full") => Scale::Full,
+        Ok("medium") => Scale::Medium,
+        _ => Scale::Small,
+    }
+}
+
+/// Paper sweep N (Fig 4/5 use N = 10⁶).
+pub fn sweep_n() -> usize {
+    match scale() {
+        Scale::Small => 50_000,
+        Scale::Medium => 200_000,
+        Scale::Full => 1_000_000,
+    }
+}
+
+pub fn sweep_iters() -> usize {
+    match scale() {
+        Scale::Small => 60,
+        Scale::Medium => 80,
+        Scale::Full => 100, // the paper's setting
+    }
+}
+
+/// One measured cell of a figure.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub method: &'static str,
+    pub seconds: f64,
+    pub nmi: f64,
+    pub k: usize,
+}
+
+pub fn run_dpmm(
+    ds: &Dataset,
+    backend: BackendChoice,
+    method: &'static str,
+    iters: usize,
+    seed: u64,
+) -> anyhow::Result<Cell> {
+    let d = ds.points.d;
+    // Prior family chosen by the dataset's value type: count data (all
+    // integral, nonnegative in the probed prefix) → multinomial.
+    let discrete =
+        ds.points.values.iter().take(256).all(|&v| v >= 0.0 && v.fract() == 0.0);
+    let mut params = if discrete {
+        DpmmParams::multinomial_default(d)
+    } else {
+        DpmmParams::gaussian_default(d)
+    };
+    params.iterations = iters;
+    params.seed = seed;
+    params.backend = backend;
+    let t0 = Instant::now();
+    let fit = DpmmFit::new(params).fit(&ds.points)?;
+    let seconds = t0.elapsed().as_secs_f64();
+    Ok(Cell { method, seconds, nmi: nmi(&ds.labels, &fit.labels), k: fit.num_clusters() })
+}
+
+pub fn run_vb(ds: &Dataset, upper_bound: usize, method: &'static str, seed: u64) -> Cell {
+    let t0 = Instant::now();
+    let fit = VbGmm::fit(
+        &ds.points,
+        VbGmmConfig {
+            n_components: upper_bound,
+            max_iter: if scale() == Scale::Small { 50 } else { 100 },
+            seed,
+            ..Default::default()
+        },
+    );
+    Cell {
+        method,
+        seconds: t0.elapsed().as_secs_f64(),
+        nmi: nmi(&ds.labels, &fit.labels),
+        k: fit.effective_k(),
+    }
+}
+
+/// Whether AOT artifacts exist (xla rows are skipped otherwise).
+pub fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+pub fn xla_backend() -> BackendChoice {
+    BackendChoice::Xla {
+        artifact_dir: "artifacts".into(),
+        shard_size: 4096,
+        kernel: "auto".into(),
+        crossover: 640_000,
+    }
+}
+
+pub fn native_backend() -> BackendChoice {
+    BackendChoice::Native { threads: 0, shard_size: 16 * 1024 }
+}
+
+/// Print a figure table: one row per x-value, one column group per method.
+pub fn print_table(title: &str, xlabel: &str, xs: &[String], rows: &[Vec<Option<Cell>>], value: &str) {
+    println!("\n=== {title} ===");
+    let methods: Vec<&str> = rows
+        .first()
+        .map(|r| r.iter().flatten().map(|c| c.method).collect())
+        .unwrap_or_default();
+    print!("{xlabel:>10}");
+    for m in &methods {
+        print!(" {m:>14}");
+    }
+    println!();
+    for (x, row) in xs.iter().zip(rows) {
+        print!("{x:>10}");
+        for cell in row.iter() {
+            match cell {
+                Some(c) => match value {
+                    "time" => print!(" {:>13.2}s", c.seconds),
+                    "nmi" => print!(" {:>14.3}", c.nmi),
+                    "k" => print!(" {:>14}", c.k),
+                    _ => print!(" {:>14}", "?"),
+                },
+                None => print!(" {:>14}", "-"),
+            }
+        }
+        println!();
+    }
+}
+
+/// Speedup summary line like the paper's "CUDA/C++ was 5.3× faster than sklearn".
+pub fn speedup_summary(rows: &[Vec<Option<Cell>>], base_method: &str, vs_method: &str) {
+    let mut ratios = Vec::new();
+    for row in rows {
+        let base = row.iter().flatten().find(|c| c.method == base_method);
+        let vs = row.iter().flatten().find(|c| c.method == vs_method);
+        if let (Some(b), Some(v)) = (base, vs) {
+            if b.seconds > 0.0 {
+                ratios.push(v.seconds / b.seconds);
+            }
+        }
+    }
+    if !ratios.is_empty() {
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        let max = ratios.iter().cloned().fold(0.0, f64::max);
+        println!(
+            "{base_method} vs {vs_method}: {mean:.1}x faster on average (max {max:.1}x)"
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! §4.2 kernel table: the paper ships two CUDA matmul kernels and
+//! auto-selects by the d×N matrix size (their measured crossover:
+//! d×N ≈ 640k on a Quadro RTX 4000). We mirror the mechanism with two
+//! Pallas log-likelihood kernels (`direct` quadratic-form vs `matmul` MXU
+//! contraction) and calibrate the crossover by timing the AOT artifacts
+//! through the PJRT runtime.
+//!
+//! Run: `make artifacts && cargo bench --bench table_kernel_crossover`
+
+#[path = "support/mod.rs"]
+mod support;
+
+use dpmm::runtime::{HostTensor, XlaRuntime};
+use dpmm::rng::{Rng, Xoshiro256pp};
+use support::have_artifacts;
+use std::time::Instant;
+
+fn gaussian_inputs(rng: &mut Xoshiro256pp, n: usize, d: usize, k: usize) -> Vec<HostTensor> {
+    let rnd = |rng: &mut Xoshiro256pp, len: usize, scale: f32| -> Vec<f32> {
+        (0..len).map(|_| (rng.next_f64() as f32 - 0.5) * scale).collect()
+    };
+    let mut w = vec![0.0f32; k * d * d];
+    let mut sub_w = vec![0.0f32; k * 2 * d * d];
+    for c in 0..k {
+        for j in 0..d {
+            w[c * d * d + j * d + j] = 1.0;
+        }
+    }
+    for c in 0..k * 2 {
+        for j in 0..d {
+            sub_w[c * d * d + j * d + j] = 1.0;
+        }
+    }
+    let gumbel = |rng: &mut Xoshiro256pp, len: usize| -> Vec<f32> {
+        (0..len).map(|_| (-(-(rng.next_f64_open().ln())).ln()) as f32).collect()
+    };
+    vec![
+        HostTensor::f32(rnd(rng, n * d, 10.0), &[n, d]),
+        HostTensor::f32(vec![1.0; n], &[n]),
+        HostTensor::f32(vec![(1.0f32 / k as f32).ln(); k], &[k]),
+        HostTensor::f32(rnd(rng, k * d, 10.0), &[k, d]),
+        HostTensor::f32(w, &[k, d, d]),
+        HostTensor::f32(vec![0.0; k], &[k]),
+        HostTensor::f32(vec![0.5f32.ln(); k * 2], &[k, 2]),
+        HostTensor::f32(rnd(rng, k * 2 * d, 10.0), &[k, 2, d]),
+        HostTensor::f32(sub_w, &[k, 2, d, d]),
+        HostTensor::f32(vec![0.0; k * 2], &[k, 2]),
+        HostTensor::f32(gumbel(rng, n * k), &[n, k]),
+        HostTensor::f32(gumbel(rng, n * 2), &[n, 2]),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    if !have_artifacts() {
+        println!("kernel crossover bench needs artifacts — run `make artifacts`");
+        return Ok(());
+    }
+    let mut rt = XlaRuntime::new("artifacts")?;
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    println!("§4.2 kernel-variant selection — paper crossover: d*N = 640k (Quadro RTX 4000)");
+    println!(
+        "{:>6} {:>7} {:>10} {:>12} {:>12} {:>8}",
+        "d", "n", "d*n", "direct", "matmul", "winner"
+    );
+    let mut crossover_lo = 0usize;
+    let mut crossover_hi = usize::MAX;
+    let shapes = rt.manifest().shapes("gaussian", "matmul");
+    for (d, k, n) in shapes {
+        let d_name = format!("gaussian_direct_d{d}_k{k}_n{n}");
+        let m_name = format!("gaussian_matmul_d{d}_k{k}_n{n}");
+        let inputs = gaussian_inputs(&mut rng, n, d, k);
+        // warmup (compiles)
+        rt.execute(&d_name, &inputs)?;
+        rt.execute(&m_name, &inputs)?;
+        let reps = 5;
+        let time_of = |rt: &mut XlaRuntime, name: &str, inputs: &[HostTensor]| -> anyhow::Result<f64> {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                rt.execute(name, inputs)?;
+            }
+            Ok(t0.elapsed().as_secs_f64() / reps as f64)
+        };
+        let td = time_of(&mut rt, &d_name, &inputs)?;
+        let tm = time_of(&mut rt, &m_name, &inputs)?;
+        let winner = if td < tm { "direct" } else { "matmul" };
+        if td < tm {
+            crossover_lo = crossover_lo.max(d * n);
+        } else {
+            crossover_hi = crossover_hi.min(d * n);
+        }
+        println!(
+            "{:>6} {:>7} {:>10} {:>11.2}ms {:>11.2}ms {:>8}",
+            d,
+            n,
+            d * n,
+            td * 1e3,
+            tm * 1e3,
+            winner
+        );
+    }
+    if crossover_hi == usize::MAX {
+        println!("\ndirect wins everywhere measured (CPU interpret mode favors fewer ops)");
+    } else if crossover_lo == 0 {
+        println!("\nmatmul wins everywhere measured");
+    } else {
+        println!(
+            "\nmeasured crossover between d*n = {crossover_lo} and {crossover_hi} \
+             (paper: 640k on GPU; set --crossover / backend.crossover accordingly)"
+        );
+    }
+    Ok(())
+}

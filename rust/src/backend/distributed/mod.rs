@@ -1,0 +1,315 @@
+//! Distributed leader/worker backend over TCP (the paper's multi-machine
+//! Julia mode analog).
+//!
+//! The leader ships each worker its data chunk exactly once (Init); every
+//! iteration afterwards exchanges only O(K·d²) parameters and statistics.
+//! This makes the backend suitable for low-bandwidth networks of weak
+//! agents — the paper's robotic-sensing motivation.
+
+pub mod wire;
+pub mod worker;
+
+use super::{Backend, StatsBundle};
+use crate::datagen::Data;
+use crate::rng::Rng;
+use crate::sampler::{MergeOp, SplitOp, StepParams};
+use crate::stats::Prior;
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpStream;
+use std::sync::Arc;
+use wire::{request, write_message, Message};
+
+/// Configuration for [`DistributedBackend`].
+#[derive(Debug, Clone)]
+pub struct DistributedConfig {
+    /// Worker addresses (`host:port`). Each receives ~N/len(points).
+    pub workers: Vec<String>,
+    /// Threads per worker.
+    pub worker_threads: usize,
+}
+
+/// Leader-side backend: fans requests out to TCP workers and reduces their
+/// statistics.
+pub struct DistributedBackend {
+    conns: Vec<TcpStream>,
+    /// Rows assigned to each worker (contiguous chunks, original order).
+    chunk_sizes: Vec<usize>,
+    prior: Prior,
+    n: usize,
+}
+
+impl DistributedBackend {
+    /// Connect to workers, shard the data across them, and initialize each.
+    pub fn new(
+        data: Arc<Data>,
+        prior: Prior,
+        config: DistributedConfig,
+        rng: &mut impl Rng,
+    ) -> Result<Self> {
+        if config.workers.is_empty() {
+            bail!("distributed backend needs at least one worker address");
+        }
+        let w = config.workers.len();
+        let base = data.n / w;
+        let rem = data.n % w;
+        let mut conns = Vec::with_capacity(w);
+        let mut chunk_sizes = Vec::with_capacity(w);
+        let mut start = 0usize;
+        for (i, addr) in config.workers.iter().enumerate() {
+            let rows = base + usize::from(i < rem);
+            let end = start + rows;
+            let mut stream = TcpStream::connect(addr)
+                .with_context(|| format!("connecting to worker {addr}"))?;
+            stream.set_nodelay(true).ok();
+            let chunk: Vec<f64> = data.values[start * data.d..end * data.d].to_vec();
+            let init = Message::Init {
+                d: data.d as u32,
+                prior: prior.clone(),
+                seed: rng.next_u64(),
+                threads: config.worker_threads as u32,
+                x: chunk,
+            };
+            match request(&mut stream, &init)? {
+                Message::Ack => {}
+                other => bail!("worker {addr} Init reply: {other:?}"),
+            }
+            conns.push(stream);
+            chunk_sizes.push(rows);
+            start = end;
+        }
+        Ok(Self { conns, chunk_sizes, prior, n: data.n })
+    }
+
+    /// Broadcast a message and require Ack from every worker.
+    fn broadcast_ack(&mut self, msg: &Message) -> Result<()> {
+        // Write to all first (overlap worker compute), then read replies.
+        for conn in self.conns.iter_mut() {
+            write_message(conn, msg)?;
+        }
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            match wire::read_message(conn)? {
+                Message::Ack => {}
+                Message::Error(e) => bail!("worker {i}: {e}"),
+                other => bail!("worker {i}: unexpected reply {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter initial labels uniformly over `k` clusters on every worker.
+    pub fn randomize_labels(&mut self, k: usize) -> Result<()> {
+        self.broadcast_ack(&Message::RandomizeLabels { k: k as u32 })
+    }
+
+    /// Shut workers down cleanly.
+    pub fn shutdown(&mut self) -> Result<()> {
+        for conn in self.conns.iter_mut() {
+            write_message(conn, &Message::Shutdown).ok();
+            wire::read_message(conn).ok();
+        }
+        Ok(())
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.conns.len()
+    }
+}
+
+impl Backend for DistributedBackend {
+    fn name(&self) -> &'static str {
+        "distributed"
+    }
+
+    fn step(&mut self, params: &StepParams) -> Result<StatsBundle> {
+        let msg = Message::Step(params.clone());
+        for conn in self.conns.iter_mut() {
+            write_message(conn, &msg)?;
+        }
+        let mut total = StatsBundle::empty(&self.prior, params.k());
+        for (i, conn) in self.conns.iter_mut().enumerate() {
+            match wire::read_message(conn)? {
+                Message::StatsReply(sub) => {
+                    if sub.len() != params.k() {
+                        bail!("worker {i} returned {} clusters, want {}", sub.len(), params.k());
+                    }
+                    total.merge(&StatsBundle { sub_stats: sub });
+                }
+                Message::Error(e) => bail!("worker {i}: {e}"),
+                other => bail!("worker {i}: unexpected reply {other:?}"),
+            }
+        }
+        Ok(total)
+    }
+
+    fn apply_splits(&mut self, ops: &[SplitOp]) -> Result<()> {
+        self.broadcast_ack(&Message::ApplySplits(ops.to_vec()))
+    }
+
+    fn apply_merges(&mut self, ops: &[MergeOp]) -> Result<()> {
+        self.broadcast_ack(&Message::ApplyMerges(ops.to_vec()))
+    }
+
+    fn remap(&mut self, map: &[Option<usize>]) -> Result<()> {
+        let map: Vec<Option<u32>> = map.iter().map(|m| m.map(|v| v as u32)).collect();
+        self.broadcast_ack(&Message::Remap(map))
+    }
+
+    fn labels(&self) -> Result<Vec<usize>> {
+        // &self but we need &mut streams: clone handles (TcpStream::try_clone).
+        let mut out = Vec::with_capacity(self.n);
+        for (i, conn) in self.conns.iter().enumerate() {
+            let mut conn = conn.try_clone()?;
+            match request(&mut conn, &Message::GetLabels)? {
+                Message::Labels(l) => {
+                    if l.len() != self.chunk_sizes[i] {
+                        bail!("worker {i} returned {} labels, want {}", l.len(), self.chunk_sizes[i]);
+                    }
+                    out.extend(l.into_iter().map(|v| v as usize));
+                }
+                other => return Err(anyhow!("worker {i}: unexpected reply {other:?}")),
+            }
+        }
+        Ok(out)
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+}
+
+impl Drop for DistributedBackend {
+    fn drop(&mut self) {
+        self.shutdown().ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::worker::spawn_local;
+    use super::*;
+    use crate::model::DpmmState;
+    use crate::rng::Xoshiro256pp;
+    use crate::stats::NiwPrior;
+
+    fn blob_data(centers: &[[f64; 2]], per: usize) -> Arc<Data> {
+        let mut values = Vec::new();
+        for (ci, c) in centers.iter().enumerate() {
+            for i in 0..per {
+                values.push(c[0] + 0.01 * ((i + ci) % 7) as f64);
+                values.push(c[1] - 0.01 * ((i * 3 + ci) % 5) as f64);
+            }
+        }
+        Arc::new(Data::new(centers.len() * per, 2, values))
+    }
+
+    fn state_on(centers: &[[f64; 2]], per: usize) -> DpmmState {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let mut state =
+            DpmmState::new(1.0, prior.clone(), centers.len(), centers.len() * per, &mut rng);
+        for (k, c) in centers.iter().enumerate() {
+            let mut s = prior.empty_stats();
+            for i in 0..per {
+                s.add(&[c[0] + 0.01 * i as f64, c[1]]);
+            }
+            state.clusters[k].stats = s.clone();
+            state.clusters[k].sub_stats = [s.clone(), s.clone()];
+            state.clusters[k].params = prior.mean_params(&s);
+            state.clusters[k].sub_params = [prior.mean_params(&s), prior.mean_params(&s)];
+            state.clusters[k].weight = 1.0 / centers.len() as f64;
+        }
+        state
+    }
+
+    #[test]
+    fn distributed_two_workers_match_native() {
+        let centers = [[-20.0, 0.0], [20.0, 0.0]];
+        let data = blob_data(&centers, 60);
+        let state = state_on(&centers, 60);
+        let params = StepParams::snapshot(&state);
+        let workers = vec![spawn_local().unwrap(), spawn_local().unwrap()];
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let mut backend = DistributedBackend::new(
+            Arc::clone(&data),
+            state.prior.clone(),
+            DistributedConfig { workers, worker_threads: 2 },
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(backend.num_workers(), 2);
+        let bundle = backend.step(&params).unwrap();
+        let cs = bundle.cluster_stats();
+        assert_eq!(cs[0].count(), 60.0);
+        assert_eq!(cs[1].count(), 60.0);
+        let labels = backend.labels().unwrap();
+        assert_eq!(labels.len(), 120);
+        for (i, &l) in labels.iter().enumerate() {
+            assert_eq!(l, i / 60);
+        }
+        backend.shutdown().unwrap();
+    }
+
+    #[test]
+    fn distributed_split_merge_remap() {
+        let centers = [[-20.0, 0.0], [20.0, 0.0]];
+        let data = blob_data(&centers, 40);
+        let state = state_on(&centers, 40);
+        let params = StepParams::snapshot(&state);
+        let workers = vec![spawn_local().unwrap()];
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut backend = DistributedBackend::new(
+            Arc::clone(&data),
+            state.prior.clone(),
+            DistributedConfig { workers, worker_threads: 1 },
+            &mut rng,
+        )
+        .unwrap();
+        backend.step(&params).unwrap();
+        backend.apply_splits(&[SplitOp { target: 0, new_index: 2 }]).unwrap();
+        let labels = backend.labels().unwrap();
+        for (i, &l) in labels.iter().enumerate() {
+            if i < 40 {
+                assert!(l == 0 || l == 2, "i={i} l={l}");
+            } else {
+                assert_eq!(l, 1);
+            }
+        }
+        backend.apply_merges(&[MergeOp { keep: 0, absorb: 2 }]).unwrap();
+        backend.remap(&[Some(0), Some(1), None]).unwrap();
+        let labels = backend.labels().unwrap();
+        for (i, &l) in labels.iter().enumerate() {
+            assert_eq!(l, usize::from(i >= 40));
+        }
+    }
+
+    #[test]
+    fn uneven_split_covers_all_points() {
+        // 101 points over 2 workers → 51 + 50.
+        let data = blob_data(&[[0.0, 0.0]], 101);
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let workers = vec![spawn_local().unwrap(), spawn_local().unwrap()];
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let mut backend = DistributedBackend::new(
+            data,
+            prior,
+            DistributedConfig { workers, worker_threads: 1 },
+            &mut rng,
+        )
+        .unwrap();
+        backend.randomize_labels(3).unwrap();
+        let labels = backend.labels().unwrap();
+        assert_eq!(labels.len(), 101);
+        assert!(labels.iter().all(|&l| l < 3));
+    }
+
+    #[test]
+    fn step_before_init_protocol_error() {
+        // Connect raw and send Step without Init: worker must reply Error.
+        let addr = spawn_local().unwrap();
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let state = state_on(&[[0.0, 0.0]], 4);
+        let reply =
+            request(&mut stream, &Message::Step(StepParams::snapshot(&state))).unwrap_err();
+        assert!(reply.to_string().contains("Init"), "{reply}");
+    }
+}

@@ -1,0 +1,567 @@
+//! Binary wire format for the leader↔worker protocol.
+//!
+//! Hand-rolled little-endian codec (no serde available offline): every
+//! message is `[u32 length][u8 tag][payload]`. The payload encodes only
+//! parameters and sufficient statistics — the data matrix crosses the wire
+//! exactly once (Init), matching the paper's "we never transfer data; we
+//! transfer only sufficient statistics and parameters".
+
+use crate::linalg::Matrix;
+use crate::sampler::{MergeOp, SplitOp, StepParams};
+use crate::stats::{DirMultParams, DirMultPrior, DirMultStats, NiwParams, NiwPrior, NiwStats, Params, Prior, Stats};
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+/// Protocol version byte (bump on wire changes).
+pub const PROTO_VERSION: u8 = 1;
+
+/// Leader→worker and worker→leader messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Ship a data chunk + model setup to the worker (once per fit).
+    Init { d: u32, prior: Prior, seed: u64, threads: u32, x: Vec<f64> },
+    /// Run one restricted-Gibbs pass under these parameters.
+    Step(StepParams),
+    /// Worker reply to Step: this chunk's sufficient statistics.
+    StatsReply(Vec<[Stats; 2]>),
+    ApplySplits(Vec<SplitOp>),
+    ApplyMerges(Vec<MergeOp>),
+    Remap(Vec<Option<u32>>),
+    RandomizeLabels { k: u32 },
+    GetLabels,
+    Labels(Vec<u32>),
+    Ack,
+    Shutdown,
+    /// Worker-side failure description.
+    Error(String),
+}
+
+// ---------- primitive writers/readers ----------
+
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn f64s(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+    fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x);
+        }
+    }
+    fn matrix(&mut self, m: &Matrix) {
+        self.u32(m.rows() as u32);
+        self.u32(m.cols() as u32);
+        for &x in m.data() {
+            self.f64(x);
+        }
+    }
+}
+
+impl Default for Enc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated message (want {n} bytes at {})", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.f64()).collect()
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.u32()).collect()
+    }
+    fn matrix(&mut self) -> Result<Matrix> {
+        let r = self.u32()? as usize;
+        let c = self.u32()? as usize;
+        let data = (0..r * c).map(|_| self.f64()).collect::<Result<Vec<_>>>()?;
+        Ok(Matrix::from_vec(r, c, data))
+    }
+    fn finished(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+// ---------- domain encoders ----------
+
+fn enc_prior(e: &mut Enc, p: &Prior) {
+    match p {
+        Prior::Niw(n) => {
+            e.u8(0);
+            e.f64(n.kappa);
+            e.f64s(&n.m);
+            e.f64(n.nu);
+            e.matrix(&n.psi);
+        }
+        Prior::DirMult(d) => {
+            e.u8(1);
+            e.f64s(&d.alpha);
+        }
+    }
+}
+
+fn dec_prior(d: &mut Dec) -> Result<Prior> {
+    Ok(match d.u8()? {
+        0 => {
+            let kappa = d.f64()?;
+            let m = d.f64s()?;
+            let nu = d.f64()?;
+            let psi = d.matrix()?;
+            Prior::Niw(NiwPrior::new(kappa, m, nu, psi))
+        }
+        1 => Prior::DirMult(DirMultPrior::new(d.f64s()?)),
+        t => bail!("bad prior tag {t}"),
+    })
+}
+
+fn enc_params(e: &mut Enc, p: &Params) {
+    match p {
+        Params::Gauss(g) => {
+            e.u8(0);
+            e.f64s(&g.mu);
+            e.matrix(&g.sigma);
+        }
+        Params::Mult(m) => {
+            e.u8(1);
+            e.f64s(&m.log_theta);
+        }
+    }
+}
+
+fn dec_params(d: &mut Dec) -> Result<Params> {
+    Ok(match d.u8()? {
+        0 => {
+            let mu = d.f64s()?;
+            let sigma = d.matrix()?;
+            // Cholesky machinery is recomputed worker-side (cheaper than
+            // shipping three d×d matrices).
+            Params::Gauss(NiwParams::from_mu_sigma(mu, sigma))
+        }
+        1 => Params::Mult(DirMultParams { log_theta: d.f64s()? }),
+        t => bail!("bad params tag {t}"),
+    })
+}
+
+fn enc_stats(e: &mut Enc, s: &Stats) {
+    match s {
+        Stats::Gauss(g) => {
+            e.u8(0);
+            e.f64(g.n);
+            e.f64s(&g.sum_x);
+            e.matrix(&g.sum_xxt);
+        }
+        Stats::Mult(m) => {
+            e.u8(1);
+            e.f64(m.n);
+            e.f64s(&m.sum_x);
+        }
+    }
+}
+
+fn dec_stats(d: &mut Dec) -> Result<Stats> {
+    Ok(match d.u8()? {
+        0 => {
+            let n = d.f64()?;
+            let sum_x = d.f64s()?;
+            let sum_xxt = d.matrix()?;
+            Stats::Gauss(NiwStats { n, sum_x, sum_xxt })
+        }
+        1 => {
+            let n = d.f64()?;
+            let sum_x = d.f64s()?;
+            Stats::Mult(DirMultStats { n, sum_x })
+        }
+        t => bail!("bad stats tag {t}"),
+    })
+}
+
+fn enc_step_params(e: &mut Enc, p: &StepParams) {
+    e.u32(p.k() as u32);
+    for k in 0..p.k() {
+        e.f64(p.log_weights[k]);
+        enc_params(e, &p.params[k]);
+        e.f64(p.sub_log_weights[k][0]);
+        e.f64(p.sub_log_weights[k][1]);
+        enc_params(e, &p.sub_params[k][0]);
+        enc_params(e, &p.sub_params[k][1]);
+    }
+}
+
+fn dec_step_params(d: &mut Dec) -> Result<StepParams> {
+    let k = d.u32()? as usize;
+    let mut p = StepParams {
+        log_weights: Vec::with_capacity(k),
+        params: Vec::with_capacity(k),
+        sub_log_weights: Vec::with_capacity(k),
+        sub_params: Vec::with_capacity(k),
+    };
+    for _ in 0..k {
+        p.log_weights.push(d.f64()?);
+        p.params.push(dec_params(d)?);
+        p.sub_log_weights.push([d.f64()?, d.f64()?]);
+        p.sub_params.push([dec_params(d)?, dec_params(d)?]);
+    }
+    Ok(p)
+}
+
+// ---------- message (de)serialization ----------
+
+const TAG_INIT: u8 = 1;
+const TAG_STEP: u8 = 2;
+const TAG_STATS: u8 = 3;
+const TAG_SPLITS: u8 = 4;
+const TAG_MERGES: u8 = 5;
+const TAG_REMAP: u8 = 6;
+const TAG_RANDOMIZE: u8 = 7;
+const TAG_GET_LABELS: u8 = 8;
+const TAG_LABELS: u8 = 9;
+const TAG_ACK: u8 = 10;
+const TAG_SHUTDOWN: u8 = 11;
+const TAG_ERROR: u8 = 12;
+
+impl Message {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u8(PROTO_VERSION);
+        match self {
+            Message::Init { d, prior, seed, threads, x } => {
+                e.u8(TAG_INIT);
+                e.u32(*d);
+                enc_prior(&mut e, prior);
+                e.u64(*seed);
+                e.u32(*threads);
+                e.f64s(x);
+            }
+            Message::Step(p) => {
+                e.u8(TAG_STEP);
+                enc_step_params(&mut e, p);
+            }
+            Message::StatsReply(sub) => {
+                e.u8(TAG_STATS);
+                e.u32(sub.len() as u32);
+                for [l, r] in sub {
+                    enc_stats(&mut e, l);
+                    enc_stats(&mut e, r);
+                }
+            }
+            Message::ApplySplits(ops) => {
+                e.u8(TAG_SPLITS);
+                e.u32(ops.len() as u32);
+                for op in ops {
+                    e.u32(op.target as u32);
+                    e.u32(op.new_index as u32);
+                }
+            }
+            Message::ApplyMerges(ops) => {
+                e.u8(TAG_MERGES);
+                e.u32(ops.len() as u32);
+                for op in ops {
+                    e.u32(op.keep as u32);
+                    e.u32(op.absorb as u32);
+                }
+            }
+            Message::Remap(map) => {
+                e.u8(TAG_REMAP);
+                e.u32(map.len() as u32);
+                for m in map {
+                    match m {
+                        Some(v) => {
+                            e.u8(1);
+                            e.u32(*v);
+                        }
+                        None => e.u8(0),
+                    }
+                }
+            }
+            Message::RandomizeLabels { k } => {
+                e.u8(TAG_RANDOMIZE);
+                e.u32(*k);
+            }
+            Message::GetLabels => e.u8(TAG_GET_LABELS),
+            Message::Labels(l) => {
+                e.u8(TAG_LABELS);
+                e.u32s(l);
+            }
+            Message::Ack => e.u8(TAG_ACK),
+            Message::Shutdown => e.u8(TAG_SHUTDOWN),
+            Message::Error(msg) => {
+                e.u8(TAG_ERROR);
+                e.str(msg);
+            }
+        }
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut d = Dec::new(buf);
+        let ver = d.u8()?;
+        if ver != PROTO_VERSION {
+            bail!("protocol version mismatch: got {ver}, want {PROTO_VERSION}");
+        }
+        let tag = d.u8()?;
+        let msg = match tag {
+            TAG_INIT => {
+                let dim = d.u32()?;
+                let prior = dec_prior(&mut d)?;
+                let seed = d.u64()?;
+                let threads = d.u32()?;
+                let x = d.f64s()?;
+                Message::Init { d: dim, prior, seed, threads, x }
+            }
+            TAG_STEP => Message::Step(dec_step_params(&mut d)?),
+            TAG_STATS => {
+                let n = d.u32()? as usize;
+                let mut sub = Vec::with_capacity(n);
+                for _ in 0..n {
+                    sub.push([dec_stats(&mut d)?, dec_stats(&mut d)?]);
+                }
+                Message::StatsReply(sub)
+            }
+            TAG_SPLITS => {
+                let n = d.u32()? as usize;
+                let ops = (0..n)
+                    .map(|_| {
+                        Ok(SplitOp {
+                            target: d.u32()? as usize,
+                            new_index: d.u32()? as usize,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Message::ApplySplits(ops)
+            }
+            TAG_MERGES => {
+                let n = d.u32()? as usize;
+                let ops = (0..n)
+                    .map(|_| Ok(MergeOp { keep: d.u32()? as usize, absorb: d.u32()? as usize }))
+                    .collect::<Result<Vec<_>>>()?;
+                Message::ApplyMerges(ops)
+            }
+            TAG_REMAP => {
+                let n = d.u32()? as usize;
+                let map = (0..n)
+                    .map(|_| Ok(if d.u8()? == 1 { Some(d.u32()?) } else { None }))
+                    .collect::<Result<Vec<_>>>()?;
+                Message::Remap(map)
+            }
+            TAG_RANDOMIZE => Message::RandomizeLabels { k: d.u32()? },
+            TAG_GET_LABELS => Message::GetLabels,
+            TAG_LABELS => Message::Labels(d.u32s()?),
+            TAG_ACK => Message::Ack,
+            TAG_SHUTDOWN => Message::Shutdown,
+            TAG_ERROR => Message::Error(d.str()?),
+            t => bail!("unknown message tag {t}"),
+        };
+        if !d.finished() {
+            bail!("trailing bytes after message (tag {tag})");
+        }
+        Ok(msg)
+    }
+}
+
+/// Write a length-prefixed message to a stream.
+pub fn write_message(w: &mut impl Write, msg: &Message) -> Result<()> {
+    let body = msg.encode();
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a length-prefixed message (with a 1 GiB sanity cap).
+pub fn read_message(r: &mut impl Read) -> Result<Message> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > 1 << 30 {
+        bail!("message too large: {len} bytes");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Message::decode(&body)
+}
+
+/// Round-trip helper: send a request, expect a reply.
+pub fn request(stream: &mut std::net::TcpStream, msg: &Message) -> Result<Message> {
+    write_message(stream, msg)?;
+    let reply = read_message(stream)?;
+    if let Message::Error(e) = &reply {
+        return Err(anyhow!("worker error: {e}"));
+    }
+    Ok(reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::NiwPrior;
+
+    fn gauss_prior() -> Prior {
+        Prior::Niw(NiwPrior::weak(3))
+    }
+
+    #[test]
+    fn roundtrip_simple_messages() {
+        for msg in [
+            Message::Ack,
+            Message::Shutdown,
+            Message::GetLabels,
+            Message::RandomizeLabels { k: 7 },
+            Message::Labels(vec![0, 5, 2, 2]),
+            Message::Error("boom".into()),
+            Message::ApplySplits(vec![SplitOp { target: 1, new_index: 4 }]),
+            Message::ApplyMerges(vec![MergeOp { keep: 0, absorb: 3 }]),
+            Message::Remap(vec![Some(0), None, Some(1)]),
+        ] {
+            let enc = msg.encode();
+            assert_eq!(Message::decode(&enc).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn roundtrip_init_gaussian() {
+        let msg = Message::Init {
+            d: 3,
+            prior: gauss_prior(),
+            seed: 42,
+            threads: 4,
+            x: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        };
+        assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    #[test]
+    fn roundtrip_init_multinomial() {
+        let msg = Message::Init {
+            d: 2,
+            prior: Prior::DirMult(DirMultPrior::new(vec![0.5, 1.5])),
+            seed: 9,
+            threads: 1,
+            x: vec![1.0, 0.0],
+        };
+        assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    #[test]
+    fn roundtrip_step_params() {
+        use crate::model::DpmmState;
+        use crate::rng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let mut state = DpmmState::new(1.0, gauss_prior(), 2, 10, &mut rng);
+        let mut s = state.prior.empty_stats();
+        s.add(&[1.0, 2.0, 3.0]);
+        s.add(&[2.0, 1.0, 0.0]);
+        state.clusters[0].stats = s;
+        crate::sampler::sample_params(&mut state, &crate::sampler::SamplerOptions::default(), &mut rng);
+        let p = StepParams::snapshot(&state);
+        let enc = Message::Step(p.clone()).encode();
+        match Message::decode(&enc).unwrap() {
+            Message::Step(q) => {
+                assert_eq!(q.k(), p.k());
+                for k in 0..p.k() {
+                    assert!((q.log_weights[k] - p.log_weights[k]).abs() < 1e-12);
+                    // Gaussian params reconstructed: mu identical, inv-chol
+                    // consistent with sigma.
+                    if let (Params::Gauss(a), Params::Gauss(b)) = (&p.params[k], &q.params[k]) {
+                        assert_eq!(a.mu, b.mu);
+                        assert!(a.sigma.frob_dist(&b.sigma) < 1e-12);
+                        assert!((a.log_norm - b.log_norm).abs() < 1e-9);
+                    } else {
+                        panic!("expected gaussians");
+                    }
+                }
+            }
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_stats_reply() {
+        let prior = gauss_prior();
+        let mut l = prior.empty_stats();
+        l.add(&[1.0, 0.0, -1.0]);
+        let r = prior.empty_stats();
+        let msg = Message::StatsReply(vec![[l, r]]);
+        assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let msg = Message::Ack.encode();
+        assert!(Message::decode(&msg[..1]).is_err());
+        let mut bad_ver = msg.clone();
+        bad_ver[0] = 99;
+        assert!(Message::decode(&bad_ver).is_err());
+        let mut trailing = msg;
+        trailing.push(0);
+        assert!(Message::decode(&trailing).is_err());
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, &Message::RandomizeLabels { k: 3 }).unwrap();
+        write_message(&mut buf, &Message::Ack).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_message(&mut cursor).unwrap(), Message::RandomizeLabels { k: 3 });
+        assert_eq!(read_message(&mut cursor).unwrap(), Message::Ack);
+    }
+}

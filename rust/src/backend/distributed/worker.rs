@@ -1,0 +1,136 @@
+//! Worker process: owns one chunk of the data, answers the leader's
+//! protocol. Internally it is just a [`NativeBackend`] over the chunk —
+//! the same restricted-Gibbs kernel runs on every tier of the system.
+
+use super::wire::{read_message, write_message, Message};
+use crate::backend::native::{NativeBackend, NativeConfig};
+use crate::backend::Backend;
+use crate::datagen::Data;
+use crate::rng::Xoshiro256pp;
+use anyhow::{Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Worker session state (built on Init).
+struct WorkerState {
+    backend: NativeBackend,
+}
+
+fn handle(stream: &mut TcpStream, state: &mut Option<WorkerState>) -> Result<bool> {
+    let msg = read_message(stream)?;
+    let reply = match msg {
+        Message::Init { d, prior, seed, threads, x } => {
+            let d = d as usize;
+            let n = x.len() / d.max(1);
+            let data = Arc::new(Data::new(n, d, x));
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let config = NativeConfig {
+                threads: (threads as usize).max(1),
+                ..NativeConfig::default()
+            };
+            let backend = NativeBackend::new(data, prior, config, &mut rng);
+            *state = Some(WorkerState { backend });
+            Message::Ack
+        }
+        Message::Step(params) => match state.as_mut() {
+            Some(ws) => match ws.backend.step(&params) {
+                Ok(bundle) => Message::StatsReply(bundle.sub_stats),
+                Err(e) => Message::Error(format!("step failed: {e}")),
+            },
+            None => Message::Error("Step before Init".into()),
+        },
+        Message::ApplySplits(ops) => match state.as_mut() {
+            Some(ws) => {
+                ws.backend.apply_splits(&ops)?;
+                Message::Ack
+            }
+            None => Message::Error("ApplySplits before Init".into()),
+        },
+        Message::ApplyMerges(ops) => match state.as_mut() {
+            Some(ws) => {
+                ws.backend.apply_merges(&ops)?;
+                Message::Ack
+            }
+            None => Message::Error("ApplyMerges before Init".into()),
+        },
+        Message::Remap(map) => match state.as_mut() {
+            Some(ws) => {
+                let map: Vec<Option<usize>> =
+                    map.into_iter().map(|m| m.map(|v| v as usize)).collect();
+                ws.backend.remap(&map)?;
+                Message::Ack
+            }
+            None => Message::Error("Remap before Init".into()),
+        },
+        Message::RandomizeLabels { k } => match state.as_mut() {
+            Some(ws) => {
+                ws.backend.randomize_labels(k as usize);
+                Message::Ack
+            }
+            None => Message::Error("RandomizeLabels before Init".into()),
+        },
+        Message::GetLabels => match state.as_ref() {
+            Some(ws) => {
+                Message::Labels(ws.backend.labels()?.into_iter().map(|l| l as u32).collect())
+            }
+            None => Message::Error("GetLabels before Init".into()),
+        },
+        Message::Shutdown => {
+            write_message(stream, &Message::Ack)?;
+            return Ok(false);
+        }
+        other => Message::Error(format!("unexpected message {other:?}")),
+    };
+    write_message(stream, &reply)?;
+    Ok(true)
+}
+
+/// Serve a single leader connection to completion (Shutdown or EOF).
+pub fn serve_connection(mut stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut state: Option<WorkerState> = None;
+    loop {
+        match handle(&mut stream, &mut state) {
+            Ok(true) => continue,
+            Ok(false) => return Ok(()),
+            Err(e) => {
+                // EOF = leader went away; anything else is a real error.
+                if e.downcast_ref::<std::io::Error>()
+                    .map(|io| io.kind() == std::io::ErrorKind::UnexpectedEof)
+                    .unwrap_or(false)
+                {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Bind and serve leaders forever (the `dpmm worker` CLI entrypoint).
+/// One leader at a time — the paper's topology has exactly one master.
+pub fn serve(addr: &str) -> Result<()> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("worker bind {addr}"))?;
+    eprintln!("dpmm worker listening on {}", listener.local_addr()?);
+    for stream in listener.incoming() {
+        serve_connection(stream?)?;
+    }
+    Ok(())
+}
+
+/// Spawn an in-process worker on an ephemeral port; returns its address.
+/// Used by tests, examples, and `--workers N` convenience mode (the paper's
+/// multi-machine topology collapsed onto localhost).
+pub fn spawn_local() -> Result<String> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    std::thread::spawn(move || {
+        if let Ok((stream, _)) = listener.accept() {
+            if let Err(e) = serve_connection(stream) {
+                eprintln!("worker error: {e}");
+            }
+        }
+    });
+    Ok(addr)
+}

@@ -1,0 +1,133 @@
+//! Execution backends: where steps (e)/(f) — label sampling — and the
+//! sufficient-statistics pass actually run.
+//!
+//! The coordinator is backend-agnostic; a [`Backend`] owns the data shards
+//! and per-point labels and exposes exactly four operations per iteration:
+//! `step` (sample labels, return aggregated sufficient statistics),
+//! `apply_splits`, `apply_merges`, and `remap`. The coordinator↔backend
+//! interface carries only parameters and statistics, never data — the
+//! paper's key distribution property.
+//!
+//! * [`native`] — multi-core CPU threads (the paper's Julia package analog).
+//! * [`xla`] — AOT-compiled JAX/Pallas shard-step artifacts via PJRT (the
+//!   paper's CUDA/C++ package analog).
+//! * [`distributed`] — TCP leader/worker processes (the paper's
+//!   multi-machine Julia mode analog).
+
+pub mod distributed;
+pub mod native;
+pub mod shard;
+pub mod xla;
+
+use crate::sampler::{MergeOp, SplitOp, StepParams};
+use crate::stats::Stats;
+use anyhow::Result;
+
+/// Sufficient statistics aggregated over all shards, aligned with the
+/// coordinator's cluster list: `sub_stats[k] = [C̄_kl, C̄_kr]` and the cluster
+/// statistics are their sum (a cluster is the disjoint union of its
+/// sub-clusters).
+#[derive(Debug, Clone)]
+pub struct StatsBundle {
+    pub sub_stats: Vec<[Stats; 2]>,
+}
+
+impl StatsBundle {
+    /// Cluster-level statistics: C_k = C̄_kl ∪ C̄_kr.
+    pub fn cluster_stats(&self) -> Vec<Stats> {
+        self.sub_stats
+            .iter()
+            .map(|[l, r]| {
+                let mut s = l.clone();
+                s.merge(r);
+                s
+            })
+            .collect()
+    }
+
+    /// Element-wise merge (reduction across shards / workers).
+    pub fn merge(&mut self, other: &StatsBundle) {
+        assert_eq!(self.sub_stats.len(), other.sub_stats.len());
+        for (a, b) in self.sub_stats.iter_mut().zip(&other.sub_stats) {
+            a[0].merge(&b[0]);
+            a[1].merge(&b[1]);
+        }
+    }
+
+    pub fn empty(prior: &crate::stats::Prior, k: usize) -> Self {
+        StatsBundle {
+            sub_stats: (0..k).map(|_| [prior.empty_stats(), prior.empty_stats()]).collect(),
+        }
+    }
+}
+
+/// A label-sampling + statistics execution engine over sharded data.
+pub trait Backend {
+    /// Human-readable backend name (for logs/results).
+    fn name(&self) -> &'static str;
+
+    /// Run one restricted-Gibbs label pass (steps (e)/(f)) under `params`
+    /// and return freshly aggregated sufficient statistics.
+    fn step(&mut self, params: &StepParams) -> Result<StatsBundle>;
+
+    /// Rewrite labels for accepted splits (applied in order): points of
+    /// `op.target` move to `op.target`/`op.new_index` according to their
+    /// sub-label; sub-labels of moved points are re-randomized.
+    fn apply_splits(&mut self, ops: &[SplitOp]) -> Result<()>;
+
+    /// Rewrite labels for accepted merges: `absorb`'s points join `keep`,
+    /// sub-labels record the provenance (keep → left, absorb → right).
+    fn apply_merges(&mut self, ops: &[MergeOp]) -> Result<()>;
+
+    /// Apply a cluster-index remap after removals (`map[old] = Some(new)`).
+    fn remap(&mut self, map: &[Option<usize>]) -> Result<()>;
+
+    /// Gather the full label vector (order = original data order). Only
+    /// called at the end of a fit / for diagnostics — O(N) traffic.
+    fn labels(&self) -> Result<Vec<usize>>;
+
+    /// Restore a full label vector (checkpoint resume). Sub-labels are
+    /// re-randomized; they are resampled before first use anyway.
+    /// Backends that cannot restore labels return an error.
+    fn set_labels(&mut self, _labels: &[u32]) -> Result<()> {
+        anyhow::bail!("backend '{}' does not support label restore", self.name())
+    }
+
+    /// Total number of points.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{NiwPrior, Prior};
+
+    #[test]
+    fn bundle_cluster_stats_sum_subclusters() {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut b = StatsBundle::empty(&prior, 2);
+        b.sub_stats[0][0].add(&[1.0, 0.0]);
+        b.sub_stats[0][1].add(&[3.0, 0.0]);
+        b.sub_stats[1][0].add(&[5.0, 5.0]);
+        let cs = b.cluster_stats();
+        assert_eq!(cs[0].count(), 2.0);
+        assert_eq!(cs[1].count(), 1.0);
+    }
+
+    #[test]
+    fn bundle_merge_adds() {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut a = StatsBundle::empty(&prior, 1);
+        let mut b = StatsBundle::empty(&prior, 1);
+        a.sub_stats[0][0].add(&[1.0, 1.0]);
+        b.sub_stats[0][0].add(&[2.0, 2.0]);
+        b.sub_stats[0][1].add(&[0.0, 1.0]);
+        a.merge(&b);
+        assert_eq!(a.sub_stats[0][0].count(), 2.0);
+        assert_eq!(a.sub_stats[0][1].count(), 1.0);
+    }
+}

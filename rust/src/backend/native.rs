@@ -1,0 +1,352 @@
+//! Multi-core CPU backend (the paper's Julia package analog): the data is
+//! split into contiguous shards, each shard runs the restricted-Gibbs kernel
+//! on a worker thread, and the per-shard sufficient statistics are reduced
+//! on the coordinator thread — a shared-memory version of the distributed
+//! suff-stats-only design.
+
+use super::shard::{shard_apply_merges, shard_apply_splits, shard_remap, shard_step, Shard};
+use super::{Backend, StatsBundle};
+use crate::datagen::Data;
+use crate::rng::Rng;
+use crate::sampler::{MergeOp, SplitOp, StepParams};
+use crate::stats::Prior;
+use crate::util::threadpool::{default_threads, parallel_map};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Configuration for [`NativeBackend`].
+#[derive(Debug, Clone)]
+pub struct NativeConfig {
+    /// Points per shard (also the unit of thread-level parallelism).
+    pub shard_size: usize,
+    /// Worker threads (defaults to core count / `DPMM_THREADS`).
+    pub threads: usize,
+}
+
+impl Default for NativeConfig {
+    fn default() -> Self {
+        Self { shard_size: 16 * 1024, threads: default_threads() }
+    }
+}
+
+/// Shared-memory multi-core backend.
+pub struct NativeBackend {
+    data: Arc<Data>,
+    prior: Prior,
+    shards: Vec<Shard>,
+    threads: usize,
+}
+
+impl NativeBackend {
+    pub fn new(data: Arc<Data>, prior: Prior, config: NativeConfig, rng: &mut impl Rng) -> Self {
+        let shards = data
+            .shard_ranges(config.shard_size)
+            .into_iter()
+            .map(|range| {
+                let mut shard = Shard::new(range, rng.fork());
+                // Random initial sub-labels; cluster labels start at 0
+                // (K_init handling is the coordinator's job via an initial
+                // randomized assignment pass if K_init > 1).
+                for s in shard.zsub.iter_mut() {
+                    *s = (shard.rng.next_u64() & 1) as u8;
+                }
+                shard
+            })
+            .collect();
+        Self { data, prior, shards, threads: config.threads.max(1) }
+    }
+
+    /// Scatter initial labels uniformly over `k` clusters (used when the fit
+    /// starts from K_init > 1).
+    pub fn randomize_labels(&mut self, k: usize) {
+        for shard in &mut self.shards {
+            for local in 0..shard.len() {
+                shard.z[local] = shard.rng.next_range(k) as u32;
+                shard.zsub[local] = (shard.rng.next_u64() & 1) as u8;
+            }
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn step(&mut self, params: &StepParams) -> Result<StatsBundle> {
+        let data = Arc::clone(&self.data);
+        let prior = self.prior.clone();
+        // Temporarily take the shards so threads can own mutable slices.
+        let mut shards = std::mem::take(&mut self.shards);
+        let bundles: Vec<StatsBundle> = {
+            let items: Vec<(usize, &mut Shard)> = shards.iter_mut().enumerate().collect();
+            // Wrap each &mut Shard in a Mutex-free cell via raw split: use
+            // scoped threads over chunks instead.
+            let results: Vec<StatsBundle> = std::thread::scope(|scope| {
+                let threads = self.threads.min(items.len().max(1));
+                let mut handles = Vec::new();
+                let chunks = split_into(items, threads);
+                for chunk in chunks {
+                    let data = &data;
+                    let prior = &prior;
+                    handles.push(scope.spawn(move || {
+                        chunk
+                            .into_iter()
+                            .map(|(_, shard)| shard_step(data, shard, params, prior))
+                            .collect::<Vec<_>>()
+                    }));
+                }
+                handles.into_iter().flat_map(|h| h.join().expect("shard thread panicked")).collect()
+            });
+            results
+        };
+        self.shards = shards;
+        let mut total = StatsBundle::empty(&self.prior, params.k());
+        for b in &bundles {
+            total.merge(b);
+        }
+        Ok(total)
+    }
+
+    fn apply_splits(&mut self, ops: &[SplitOp]) -> Result<()> {
+        let _ = parallel_map(
+            &mut_slices(&mut self.shards),
+            self.threads,
+            |_, cell| {
+                let shard = unsafe { &mut *cell.0 };
+                shard_apply_splits(shard, ops);
+            },
+        );
+        Ok(())
+    }
+
+    fn apply_merges(&mut self, ops: &[MergeOp]) -> Result<()> {
+        let _ = parallel_map(
+            &mut_slices(&mut self.shards),
+            self.threads,
+            |_, cell| {
+                let shard = unsafe { &mut *cell.0 };
+                shard_apply_merges(shard, ops);
+            },
+        );
+        Ok(())
+    }
+
+    fn remap(&mut self, map: &[Option<usize>]) -> Result<()> {
+        let _ = parallel_map(
+            &mut_slices(&mut self.shards),
+            self.threads,
+            |_, cell| {
+                let shard = unsafe { &mut *cell.0 };
+                shard_remap(shard, map);
+            },
+        );
+        Ok(())
+    }
+
+    fn labels(&self) -> Result<Vec<usize>> {
+        let mut out = vec![0usize; self.data.n];
+        for shard in &self.shards {
+            for (local, i) in shard.range.clone().enumerate() {
+                out[i] = shard.z[local] as usize;
+            }
+        }
+        Ok(out)
+    }
+
+    fn set_labels(&mut self, labels: &[u32]) -> Result<()> {
+        anyhow::ensure!(labels.len() == self.data.n, "label count mismatch");
+        for shard in &mut self.shards {
+            for (local, i) in shard.range.clone().enumerate() {
+                shard.z[local] = labels[i];
+                shard.zsub[local] = (shard.rng.next_u64() & 1) as u8;
+            }
+        }
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.data.n
+    }
+}
+
+/// Pointer cell that lets disjoint `&mut Shard`s cross the `Sync` boundary of
+/// `parallel_map` (each index is visited exactly once, so access is unique).
+struct ShardCell(*mut Shard);
+unsafe impl Send for ShardCell {}
+unsafe impl Sync for ShardCell {}
+
+fn mut_slices(shards: &mut [Shard]) -> Vec<ShardCell> {
+    shards.iter_mut().map(|s| ShardCell(s as *mut Shard)).collect()
+}
+
+fn split_into<T>(mut items: Vec<T>, parts: usize) -> Vec<Vec<T>> {
+    let parts = parts.max(1);
+    let mut out: Vec<Vec<T>> = (0..parts).map(|_| Vec::new()).collect();
+    let mut i = 0;
+    while let Some(item) = items.pop() {
+        out[i % parts].push(item);
+        i += 1;
+    }
+    out.retain(|v| !v.is_empty());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DpmmState;
+    use crate::rng::Xoshiro256pp;
+    use crate::stats::NiwPrior;
+
+    fn blob_data(centers: &[[f64; 2]], per: usize) -> Arc<Data> {
+        let mut values = Vec::new();
+        for (ci, c) in centers.iter().enumerate() {
+            for i in 0..per {
+                values.push(c[0] + 0.01 * ((i + ci) % 7) as f64);
+                values.push(c[1] - 0.01 * ((i * 3 + ci) % 5) as f64);
+            }
+        }
+        Arc::new(Data::new(centers.len() * per, 2, values))
+    }
+
+    fn state_on(centers: &[[f64; 2]], per: usize) -> DpmmState {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let mut state =
+            DpmmState::new(1.0, prior.clone(), centers.len(), centers.len() * per, &mut rng);
+        for (k, c) in centers.iter().enumerate() {
+            let mut s = prior.empty_stats();
+            for i in 0..per {
+                s.add(&[c[0] + 0.01 * i as f64, c[1]]);
+            }
+            state.clusters[k].stats = s.clone();
+            state.clusters[k].sub_stats = [s.clone(), s.clone()];
+            state.clusters[k].params = prior.mean_params(&s);
+            state.clusters[k].sub_params = [prior.mean_params(&s), prior.mean_params(&s)];
+            state.clusters[k].weight = 1.0 / centers.len() as f64;
+        }
+        state
+    }
+
+    #[test]
+    fn native_step_recovers_separated_blobs() {
+        let centers = [[-20.0, 0.0], [0.0, 20.0], [20.0, 0.0]];
+        let data = blob_data(&centers, 200);
+        let state = state_on(&centers, 200);
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let mut backend = NativeBackend::new(
+            Arc::clone(&data),
+            state.prior.clone(),
+            NativeConfig { shard_size: 128, threads: 4 },
+            &mut rng,
+        );
+        assert!(backend.num_shards() > 1);
+        let params = StepParams::snapshot(&state);
+        let bundle = backend.step(&params).unwrap();
+        let cs = bundle.cluster_stats();
+        for k in 0..3 {
+            assert_eq!(cs[k].count(), 200.0, "cluster {k}");
+        }
+        // Labels consistent with blobs.
+        let labels = backend.labels().unwrap();
+        for (i, &l) in labels.iter().enumerate() {
+            assert_eq!(l, i / 200);
+        }
+    }
+
+    #[test]
+    fn native_step_deterministic_given_seed() {
+        let centers = [[-20.0, 0.0], [20.0, 0.0]];
+        let data = blob_data(&centers, 100);
+        let state = state_on(&centers, 100);
+        let params = StepParams::snapshot(&state);
+        let run = |seed| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let mut backend = NativeBackend::new(
+                Arc::clone(&data),
+                state.prior.clone(),
+                NativeConfig { shard_size: 64, threads: 3 },
+                &mut rng,
+            );
+            backend.step(&params).unwrap();
+            backend.labels().unwrap()
+        };
+        assert_eq!(run(42), run(42));
+    }
+
+    #[test]
+    fn split_merge_remap_roundtrip() {
+        let centers = [[-20.0, 0.0], [20.0, 0.0]];
+        let data = blob_data(&centers, 50);
+        let state = state_on(&centers, 50);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut backend = NativeBackend::new(
+            Arc::clone(&data),
+            state.prior.clone(),
+            NativeConfig { shard_size: 32, threads: 2 },
+            &mut rng,
+        );
+        backend.step(&StepParams::snapshot(&state)).unwrap();
+        // Split cluster 0 → {0, 2}; all of cluster 0's points must now be
+        // in 0 or 2.
+        backend.apply_splits(&[SplitOp { target: 0, new_index: 2 }]).unwrap();
+        let labels = backend.labels().unwrap();
+        for (i, &l) in labels.iter().enumerate() {
+            if i < 50 {
+                assert!(l == 0 || l == 2);
+            } else {
+                assert_eq!(l, 1);
+            }
+        }
+        // Merge 2 back into 0, remap {0→0, 1→1, 2→gone}.
+        backend.apply_merges(&[MergeOp { keep: 0, absorb: 2 }]).unwrap();
+        backend.remap(&[Some(0), Some(1), None]).unwrap();
+        let labels = backend.labels().unwrap();
+        for (i, &l) in labels.iter().enumerate() {
+            assert_eq!(l, usize::from(i >= 50));
+        }
+    }
+
+    #[test]
+    fn randomize_labels_covers_all_clusters() {
+        let data = blob_data(&[[0.0, 0.0]], 1000);
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let mut backend =
+            NativeBackend::new(data, prior, NativeConfig { shard_size: 100, threads: 2 }, &mut rng);
+        backend.randomize_labels(4);
+        let labels = backend.labels().unwrap();
+        let mut seen = [false; 4];
+        for &l in &labels {
+            assert!(l < 4);
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_stats_totals() {
+        let centers = [[-20.0, 0.0], [20.0, 0.0]];
+        let data = blob_data(&centers, 300);
+        let state = state_on(&centers, 300);
+        let params = StepParams::snapshot(&state);
+        let totals = |threads| {
+            let mut rng = Xoshiro256pp::seed_from_u64(7);
+            let mut backend = NativeBackend::new(
+                Arc::clone(&data),
+                state.prior.clone(),
+                NativeConfig { shard_size: 64, threads },
+                &mut rng,
+            );
+            let b = backend.step(&params).unwrap();
+            b.cluster_stats().iter().map(|s| s.count()).collect::<Vec<_>>()
+        };
+        // Same seed → same per-shard RNGs regardless of thread count.
+        assert_eq!(totals(1), totals(8));
+    }
+}

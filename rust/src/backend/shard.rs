@@ -1,0 +1,356 @@
+//! The per-shard restricted-Gibbs kernel shared by the native and
+//! distributed backends (workers run exactly this code on their chunk).
+//!
+//! For every point: sample z_i ∝ π_k f(x_i; θ_k) over instantiated clusters
+//! (Eq. 18), then z̄_i over the assigned cluster's two sub-clusters (Eq. 19),
+//! and accumulate sufficient statistics into the sub-cluster accumulators
+//! (cluster statistics are recovered as the sum of the two sub-clusters,
+//! halving the accumulation work — the dominant O(N·d²) term for Gaussians).
+
+use super::StatsBundle;
+use crate::datagen::Data;
+use crate::model::{LEFT, RIGHT};
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::sampler::{MergeOp, SplitOp, StepParams};
+use crate::stats::{Params, Prior};
+use std::ops::Range;
+
+/// One contiguous chunk of the dataset with its labels and private RNG.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub range: Range<usize>,
+    /// Cluster label per point (index into the coordinator's cluster list).
+    pub z: Vec<u32>,
+    /// Sub-cluster label per point (LEFT/RIGHT).
+    pub zsub: Vec<u8>,
+    pub rng: Xoshiro256pp,
+}
+
+impl Shard {
+    pub fn new(range: Range<usize>, rng: Xoshiro256pp) -> Self {
+        let n = range.len();
+        Self { range, z: vec![0; n], zsub: vec![0; n], rng }
+    }
+
+    pub fn len(&self) -> usize {
+        self.range.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Scratch buffers reused across points (avoids per-point allocation in the
+/// hot loop; see EXPERIMENTS.md §Perf).
+pub struct ShardScratch {
+    loglik: Vec<f64>,
+    diff: Vec<f64>,
+}
+
+impl ShardScratch {
+    pub fn new(k_max: usize, d: usize) -> Self {
+        Self { loglik: vec![0.0; k_max.max(2)], diff: vec![0.0; d] }
+    }
+}
+
+/// Gaussian log-likelihood with caller-provided scratch: c − ½‖L⁻¹(x−μ)‖².
+/// Uses the cached inverse-Cholesky rows directly (no triangular solve),
+/// mirroring the matmul form the Pallas kernel uses.
+#[inline]
+fn gauss_loglik(p: &crate::stats::NiwParams, x: &[f64], scratch: &mut ShardScratch) -> f64 {
+    let d = x.len();
+    let diff = &mut scratch.diff[..d];
+    for (dv, (&xv, &mv)) in diff.iter_mut().zip(x.iter().zip(&p.mu)) {
+        *dv = xv - mv;
+    }
+    // y = W diff with W = L⁻¹ lower-triangular; maha = ‖y‖². Flat slice
+    // walk + iterator zips keep the inner loop free of bounds checks.
+    let w = p.inv_chol.data();
+    let mut maha = 0.0;
+    let mut off = 0;
+    for i in 0..d {
+        let mut acc = 0.0;
+        for (&wv, &dv) in w[off..off + i + 1].iter().zip(diff.iter()) {
+            acc += wv * dv;
+        }
+        maha += acc * acc;
+        off += d;
+    }
+    p.log_norm - 0.5 * maha
+}
+
+#[inline]
+fn loglik(params: &Params, x: &[f64], scratch: &mut ShardScratch) -> f64 {
+    match params {
+        Params::Gauss(p) => gauss_loglik(p, x, scratch),
+        Params::Mult(p) => p.log_likelihood(x),
+    }
+}
+
+/// Run steps (e)/(f) + statistics on one shard. Labels are written in place;
+/// the returned bundle holds this shard's contribution.
+pub fn shard_step(
+    data: &Data,
+    shard: &mut Shard,
+    params: &StepParams,
+    prior: &Prior,
+) -> StatsBundle {
+    let k = params.k();
+    let mut bundle = StatsBundle::empty(prior, k);
+    let mut scratch = ShardScratch::new(k, data.d);
+    for (local, i) in shard.range.clone().enumerate() {
+        let x = data.row(i);
+        // Step (e): z_i ∝ π_k f(x; θ_k) — categorical draw via a stable
+        // exp-scan (one RNG draw + K exps; the equivalent Gumbel-argmax
+        // costs K draws + 2K logs and dominated the profile, see
+        // EXPERIMENTS.md §Perf).
+        let mut best = f64::NEG_INFINITY;
+        for c in 0..k {
+            let lw = params.log_weights[c] + loglik(&params.params[c], x, &mut scratch);
+            scratch.loglik[c] = lw;
+            if lw > best {
+                best = lw;
+            }
+        }
+        let mut total = 0.0;
+        for c in 0..k {
+            let gap = scratch.loglik[c] - best;
+            // exp(−36) ≈ 2e-16: below one ULP of the running sum, so the
+            // cluster can't be drawn — skip the transcendental.
+            let e = if gap < -36.0 { 0.0 } else { gap.exp() };
+            scratch.loglik[c] = e;
+            total += e;
+        }
+        let mut t = shard.rng.next_f64() * total;
+        let mut zi = k - 1;
+        for (c, &e) in scratch.loglik[..k].iter().enumerate() {
+            t -= e;
+            if t < 0.0 {
+                zi = c;
+                break;
+            }
+        }
+        // Step (f): z̄_i over the assigned cluster's sub-clusters — a
+        // two-way categorical from the log-odds.
+        let sub_lw_l = params.sub_log_weights[zi][LEFT]
+            + loglik(&params.sub_params[zi][LEFT], x, &mut scratch);
+        let sub_lw_r = params.sub_log_weights[zi][RIGHT]
+            + loglik(&params.sub_params[zi][RIGHT], x, &mut scratch);
+        // P(right) = 1 / (1 + exp(lw_l − lw_r))
+        let p_right = 1.0 / (1.0 + (sub_lw_l - sub_lw_r).exp());
+        let hi = usize::from(shard.rng.next_f64() < p_right);
+        shard.z[local] = zi as u32;
+        shard.zsub[local] = hi as u8;
+        bundle.sub_stats[zi][hi].add(x);
+    }
+    bundle
+}
+
+/// Apply accepted splits to a shard's labels (mirrors
+/// [`crate::sampler::apply_split`]'s state change).
+pub fn shard_apply_splits(shard: &mut Shard, ops: &[SplitOp]) {
+    for op in ops {
+        for local in 0..shard.len() {
+            if shard.z[local] as usize == op.target {
+                if shard.zsub[local] as usize == RIGHT {
+                    shard.z[local] = op.new_index as u32;
+                }
+                // Fresh sub-assignment for the next sweep (children start
+                // with random sub-clusters, like the reference impl).
+                shard.zsub[local] = (shard.rng.next_u64() & 1) as u8;
+            }
+        }
+    }
+}
+
+/// Apply accepted merges to a shard's labels.
+pub fn shard_apply_merges(shard: &mut Shard, ops: &[MergeOp]) {
+    for op in ops {
+        for local in 0..shard.len() {
+            let zi = shard.z[local] as usize;
+            if zi == op.keep {
+                shard.zsub[local] = LEFT as u8;
+            } else if zi == op.absorb {
+                shard.z[local] = op.keep as u32;
+                shard.zsub[local] = RIGHT as u8;
+            }
+        }
+    }
+}
+
+/// Apply a removal remap to a shard's labels.
+pub fn shard_remap(shard: &mut Shard, map: &[Option<usize>]) {
+    for local in 0..shard.len() {
+        let old = shard.z[local] as usize;
+        match map.get(old).copied().flatten() {
+            Some(new) => shard.z[local] = new as u32,
+            None => {
+                // Point's cluster vanished (should only happen for empty
+                // clusters — impossible — or after external surgery).
+                // Reassign to cluster 0 defensively.
+                shard.z[local] = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DpmmState;
+    use crate::stats::NiwPrior;
+
+    fn two_blob_data() -> Data {
+        // 40 points at (−10, 0), 40 at (10, 0) with tiny deterministic jitter.
+        let mut values = Vec::new();
+        for i in 0..40 {
+            values.push(-10.0 + 0.01 * i as f64);
+            values.push(0.0);
+        }
+        for i in 0..40 {
+            values.push(10.0 + 0.01 * i as f64);
+            values.push(0.0);
+        }
+        Data::new(80, 2, values)
+    }
+
+    fn params_two_clusters() -> (StepParams, Prior) {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut state = DpmmState::new(1.0, prior.clone(), 2, 80, &mut rng);
+        // Hand-place the clusters on the blobs.
+        for (k, center) in [(-10.0f64, 0), (10.0, 1)].map(|(c, k)| (k, c)) {
+            let mut s = prior.empty_stats();
+            for j in 0..50 {
+                s.add(&[center + 0.01 * j as f64, 0.0]);
+            }
+            state.clusters[k].stats = s.clone();
+            state.clusters[k].sub_stats = [s.clone(), s];
+            state.clusters[k].params = prior.mean_params(&state.clusters[k].stats);
+            state.clusters[k].sub_params = [
+                prior.mean_params(&state.clusters[k].sub_stats[0]),
+                prior.mean_params(&state.clusters[k].sub_stats[1]),
+            ];
+            state.clusters[k].weight = 0.5;
+        }
+        (StepParams::snapshot(&state), prior)
+    }
+
+    #[test]
+    fn step_assigns_points_to_nearest_cluster() {
+        let data = two_blob_data();
+        let (params, prior) = params_two_clusters();
+        let mut shard = Shard::new(0..80, Xoshiro256pp::seed_from_u64(9));
+        let bundle = shard_step(&data, &mut shard, &params, &prior);
+        for local in 0..40 {
+            assert_eq!(shard.z[local], 0, "left blob must go to cluster 0");
+        }
+        for local in 40..80 {
+            assert_eq!(shard.z[local], 1);
+        }
+        let cs = bundle.cluster_stats();
+        assert_eq!(cs[0].count(), 40.0);
+        assert_eq!(cs[1].count(), 40.0);
+    }
+
+    #[test]
+    fn step_stats_match_labels_exactly() {
+        let data = two_blob_data();
+        let (params, prior) = params_two_clusters();
+        let mut shard = Shard::new(0..80, Xoshiro256pp::seed_from_u64(3));
+        let bundle = shard_step(&data, &mut shard, &params, &prior);
+        // Recompute stats from labels and compare.
+        let mut expect = StatsBundle::empty(&prior, 2);
+        for local in 0..80 {
+            expect.sub_stats[shard.z[local] as usize][shard.zsub[local] as usize]
+                .add(data.row(local));
+        }
+        for k in 0..2 {
+            for h in 0..2 {
+                assert_eq!(
+                    bundle.sub_stats[k][h].count(),
+                    expect.sub_stats[k][h].count(),
+                    "k={k} h={h}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gauss_loglik_matches_params_method() {
+        let prior = NiwPrior::weak(3);
+        let mut s = prior.empty_stats();
+        for i in 0..20 {
+            s.add(&[i as f64 * 0.1, 1.0 - i as f64 * 0.05, 0.5]);
+        }
+        let p = prior.mean_params(&s);
+        let mut scratch = ShardScratch::new(4, 3);
+        for x in [[0.0, 0.0, 0.0], [1.0, -1.0, 2.0], [0.5, 0.9, 0.4]] {
+            let a = gauss_loglik(&p, &x, &mut scratch);
+            let b = p.log_likelihood(&x);
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn splits_move_right_subcluster() {
+        let mut shard = Shard::new(0..6, Xoshiro256pp::seed_from_u64(0));
+        shard.z = vec![0, 0, 0, 1, 1, 2];
+        shard.zsub = vec![0, 1, 1, 0, 1, 0];
+        shard_apply_splits(&mut shard, &[SplitOp { target: 0, new_index: 3 }]);
+        assert_eq!(shard.z, vec![0, 3, 3, 1, 1, 2]);
+    }
+
+    #[test]
+    fn merges_set_provenance_sublabels() {
+        let mut shard = Shard::new(0..5, Xoshiro256pp::seed_from_u64(0));
+        shard.z = vec![0, 2, 1, 2, 0];
+        shard.zsub = vec![1, 1, 0, 0, 1];
+        shard_apply_merges(&mut shard, &[MergeOp { keep: 0, absorb: 2 }]);
+        assert_eq!(shard.z, vec![0, 0, 1, 0, 0]);
+        assert_eq!(shard.zsub, vec![0, 1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn remap_compacts_indices() {
+        let mut shard = Shard::new(0..4, Xoshiro256pp::seed_from_u64(0));
+        shard.z = vec![0, 2, 2, 3];
+        shard_remap(&mut shard, &[Some(0), None, Some(1), Some(2)]);
+        assert_eq!(shard.z, vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn multinomial_step_works() {
+        // Two topics with disjoint support.
+        let prior = Prior::DirMult(crate::stats::DirMultPrior::symmetric(4, 0.5));
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let mut state = DpmmState::new(1.0, prior.clone(), 2, 8, &mut rng);
+        let mut s0 = prior.empty_stats();
+        s0.add(&[10.0, 10.0, 0.0, 0.0]);
+        let mut s1 = prior.empty_stats();
+        s1.add(&[0.0, 0.0, 10.0, 10.0]);
+        state.clusters[0].stats = s0.clone();
+        state.clusters[0].params = prior.mean_params(&s0);
+        state.clusters[0].sub_params = [prior.mean_params(&s0), prior.mean_params(&s0)];
+        state.clusters[0].weight = 0.5;
+        state.clusters[1].stats = s1.clone();
+        state.clusters[1].params = prior.mean_params(&s1);
+        state.clusters[1].sub_params = [prior.mean_params(&s1), prior.mean_params(&s1)];
+        state.clusters[1].weight = 0.5;
+        let params = StepParams::snapshot(&state);
+        let data = Data::new(
+            4,
+            4,
+            vec![
+                5.0, 4.0, 0.0, 0.0, // topic 0
+                0.0, 1.0, 6.0, 3.0, // topic 1
+                7.0, 2.0, 1.0, 0.0, // topic 0
+                0.0, 0.0, 2.0, 8.0, // topic 1
+            ],
+        );
+        let mut shard = Shard::new(0..4, Xoshiro256pp::seed_from_u64(6));
+        shard_step(&data, &mut shard, &params, &prior);
+        assert_eq!(shard.z, vec![0, 1, 0, 1]);
+    }
+}

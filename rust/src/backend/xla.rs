@@ -1,0 +1,539 @@
+//! XLA/PJRT backend (the paper's CUDA/C++ GPU package analog).
+//!
+//! Each iteration executes one AOT-compiled shard-step artifact per shard:
+//! the L1 Pallas log-likelihood kernel + L2 label sampling + the O(n·K)
+//! statistics, all fused in one XLA program. The Rust side
+//!
+//! * keeps the f32 shard tensors prepared once up front (the analog of the
+//!   paper's device-resident `d_points`),
+//! * generates the Gumbel noise that makes the pure program a sampler,
+//! * converts the returned counts/Σx to f64 statistics and accumulates the
+//!   O(n·d²) Gaussian scatter matrices host-side from the returned labels
+//!   (see python/compile/model.py for why that split is TPU-idiomatic),
+//! * mirrors the paper's §4.2 run-time kernel selection: the `direct` or
+//!   `matmul` Pallas variant is chosen by the d×n product (configurable
+//!   crossover, calibrated by the `table_kernel_crossover` bench).
+
+use super::shard::{shard_apply_merges, shard_apply_splits, shard_remap, Shard};
+use super::{Backend, StatsBundle};
+use crate::datagen::Data;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::runtime::{ArtifactEntry, HostTensor, XlaRuntime};
+use crate::sampler::{MergeOp, SplitOp, StepParams};
+use crate::stats::{Params, Prior, Stats};
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Arc;
+
+/// Kernel-variant selection policy (§4.2 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Pick by d×n: `direct` below the crossover, `matmul` above.
+    Auto { crossover: usize },
+    Direct,
+    Matmul,
+}
+
+impl Default for KernelChoice {
+    fn default() -> Self {
+        // The paper measured 640k on a Quadro RTX 4000; our CPU-PJRT
+        // calibration (table_kernel_crossover bench) lands in the same
+        // order of magnitude.
+        KernelChoice::Auto { crossover: 640_000 }
+    }
+}
+
+impl KernelChoice {
+    fn pick(&self, d: usize, n: usize) -> &'static str {
+        match self {
+            KernelChoice::Direct => "direct",
+            KernelChoice::Matmul => "matmul",
+            KernelChoice::Auto { crossover } => {
+                if d * n < *crossover {
+                    "direct"
+                } else {
+                    "matmul"
+                }
+            }
+        }
+    }
+}
+
+/// Configuration for [`XlaBackend`].
+#[derive(Debug, Clone)]
+pub struct XlaConfig {
+    /// Artifact directory (with manifest.json).
+    pub artifact_dir: std::path::PathBuf,
+    /// Preferred shard size; the smallest artifact with n ≥ this is used.
+    pub shard_size: usize,
+    pub kernel: KernelChoice,
+}
+
+impl Default for XlaConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: std::path::PathBuf::from("artifacts"),
+            shard_size: 4096,
+            kernel: KernelChoice::default(),
+        }
+    }
+}
+
+/// AOT-artifact execution backend.
+pub struct XlaBackend {
+    runtime: XlaRuntime,
+    entry: ArtifactEntry,
+    data: Arc<Data>,
+    prior: Prior,
+    likelihood: &'static str,
+    shards: Vec<Shard>,
+    /// Pre-packed f32 tensors per shard: x (n_art × d) and mask (n_art).
+    shard_x: Vec<Vec<f32>>,
+    shard_mask: Vec<Vec<f32>>,
+}
+
+impl XlaBackend {
+    pub fn new(data: Arc<Data>, prior: Prior, config: XlaConfig, rng: &mut impl Rng) -> Result<Self> {
+        let likelihood = match &prior {
+            Prior::Niw(_) => "gaussian",
+            Prior::DirMult(_) => "multinomial",
+        };
+        let runtime = XlaRuntime::new(&config.artifact_dir)?;
+        let d = data.d;
+        let want_n = config.shard_size.min(data.n.next_power_of_two());
+        let kernel = match likelihood {
+            "multinomial" => "matmul",
+            _ => config.kernel.pick(d, want_n),
+        };
+        let entry = runtime
+            .manifest()
+            .select(likelihood, kernel, d, 2, want_n.min(config.shard_size))
+            .or_else(|| runtime.manifest().select(likelihood, kernel, d, 2, 1))
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for likelihood={likelihood} kernel={kernel} d={d}; \
+                     available shapes: {:?} — extend python/compile/aot.py's manifest",
+                    runtime.manifest().shapes(likelihood, kernel)
+                )
+            })?;
+        let n_art = entry.n;
+        let mut shards = Vec::new();
+        let mut shard_x = Vec::new();
+        let mut shard_mask = Vec::new();
+        for range in data.shard_ranges(n_art) {
+            let mut shard = Shard::new(range.clone(), rng.fork());
+            for s in shard.zsub.iter_mut() {
+                *s = (shard.rng.next_u64() & 1) as u8;
+            }
+            let mut x = vec![0.0f32; n_art * d];
+            let mut mask = vec![0.0f32; n_art];
+            for (local, i) in range.clone().enumerate() {
+                for (slot, &v) in x[local * d..(local + 1) * d].iter_mut().zip(data.row(i)) {
+                    *slot = v as f32;
+                }
+                mask[local] = 1.0;
+            }
+            shards.push(shard);
+            shard_x.push(x);
+            shard_mask.push(mask);
+        }
+        Ok(Self { runtime, entry, data, prior, likelihood, shards, shard_x, shard_mask })
+    }
+
+    /// The selected artifact (kernel variant, shapes) — exposed for logs and
+    /// the crossover bench.
+    pub fn artifact(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// Scatter initial labels uniformly over `k` clusters.
+    pub fn randomize_labels(&mut self, k: usize) {
+        for shard in &mut self.shards {
+            for local in 0..shard.len() {
+                shard.z[local] = shard.rng.next_range(k) as u32;
+                shard.zsub[local] = (shard.rng.next_u64() & 1) as u8;
+            }
+        }
+    }
+
+    /// Pack per-cluster parameter tensors, padding dead slots to the
+    /// artifact's static K.
+    fn pack_params(&self, params: &StepParams) -> Result<Vec<HostTensor>> {
+        let (d, k_art) = (self.entry.d, self.entry.k);
+        let k_live = params.k();
+        if k_live > k_art {
+            bail!(
+                "live clusters ({k_live}) exceed artifact K ({k_art}); raise max_clusters \
+                 artifact shapes in python/compile/aot.py"
+            );
+        }
+        const DEAD: f32 = -1.0e30;
+        match self.likelihood {
+            "gaussian" => {
+                let mut logw = vec![DEAD; k_art];
+                let mut mu = vec![0.0f32; k_art * d];
+                let mut w = vec![0.0f32; k_art * d * d];
+                let mut c = vec![0.0f32; k_art];
+                let mut sub_logw = vec![DEAD; k_art * 2];
+                let mut sub_mu = vec![0.0f32; k_art * 2 * d];
+                let mut sub_w = vec![0.0f32; k_art * 2 * d * d];
+                let mut sub_c = vec![0.0f32; k_art * 2];
+                // Identity W for dead slots keeps the kernel numerically tame.
+                for slot in 0..k_art {
+                    for j in 0..d {
+                        w[slot * d * d + j * d + j] = 1.0;
+                        sub_w[(slot * 2) * d * d + j * d + j] = 1.0;
+                        sub_w[(slot * 2 + 1) * d * d + j * d + j] = 1.0;
+                    }
+                }
+                for (kk, p) in params.params.iter().enumerate() {
+                    let g = match p {
+                        Params::Gauss(g) => g,
+                        _ => bail!("gaussian backend got non-gaussian params"),
+                    };
+                    logw[kk] = params.log_weights[kk] as f32;
+                    c[kk] = g.log_norm as f32;
+                    for j in 0..d {
+                        mu[kk * d + j] = g.mu[j] as f32;
+                    }
+                    for (slot, &v) in
+                        w[kk * d * d..(kk + 1) * d * d].iter_mut().zip(g.inv_chol.data())
+                    {
+                        *slot = v as f32;
+                    }
+                    for h in 0..2 {
+                        let sg = match &params.sub_params[kk][h] {
+                            Params::Gauss(g) => g,
+                            _ => bail!("gaussian backend got non-gaussian sub-params"),
+                        };
+                        let flat = kk * 2 + h;
+                        sub_logw[flat] = params.sub_log_weights[kk][h] as f32;
+                        sub_c[flat] = sg.log_norm as f32;
+                        for j in 0..d {
+                            sub_mu[flat * d + j] = sg.mu[j] as f32;
+                        }
+                        for (slot, &v) in sub_w[flat * d * d..(flat + 1) * d * d]
+                            .iter_mut()
+                            .zip(sg.inv_chol.data())
+                        {
+                            *slot = v as f32;
+                        }
+                    }
+                }
+                Ok(vec![
+                    HostTensor::f32(logw, &[k_art]),
+                    HostTensor::f32(mu, &[k_art, d]),
+                    HostTensor::f32(w, &[k_art, d, d]),
+                    HostTensor::f32(c, &[k_art]),
+                    HostTensor::f32(sub_logw, &[k_art, 2]),
+                    HostTensor::f32(sub_mu, &[k_art, 2, d]),
+                    HostTensor::f32(sub_w, &[k_art, 2, d, d]),
+                    HostTensor::f32(sub_c, &[k_art, 2]),
+                ])
+            }
+            "multinomial" => {
+                let mut logw = vec![DEAD; k_art];
+                let mut log_theta = vec![(1e-30f32).ln(); k_art * d];
+                let mut sub_logw = vec![DEAD; k_art * 2];
+                let mut sub_log_theta = vec![(1e-30f32).ln(); k_art * 2 * d];
+                for (kk, p) in params.params.iter().enumerate() {
+                    let m = match p {
+                        Params::Mult(m) => m,
+                        _ => bail!("multinomial backend got non-multinomial params"),
+                    };
+                    logw[kk] = params.log_weights[kk] as f32;
+                    for j in 0..d {
+                        log_theta[kk * d + j] = m.log_theta[j] as f32;
+                    }
+                    for h in 0..2 {
+                        let sm = match &params.sub_params[kk][h] {
+                            Params::Mult(m) => m,
+                            _ => bail!("multinomial backend got non-multinomial sub-params"),
+                        };
+                        let flat = kk * 2 + h;
+                        sub_logw[flat] = params.sub_log_weights[kk][h] as f32;
+                        for j in 0..d {
+                            sub_log_theta[flat * d + j] = sm.log_theta[j] as f32;
+                        }
+                    }
+                }
+                Ok(vec![
+                    HostTensor::f32(logw, &[k_art]),
+                    HostTensor::f32(log_theta, &[k_art, d]),
+                    HostTensor::f32(sub_logw, &[k_art, 2]),
+                    HostTensor::f32(sub_log_theta, &[k_art, 2, d]),
+                ])
+            }
+            other => bail!("unknown likelihood {other}"),
+        }
+    }
+
+    fn gumbel_tensor(rng: &mut Xoshiro256pp, rows: usize, cols: usize) -> HostTensor {
+        let mut g = vec![0.0f32; rows * cols];
+        for v in g.iter_mut() {
+            let u = rng.next_f64_open();
+            *v = (-(-u.ln()).ln()) as f32;
+        }
+        HostTensor::f32(g, &[rows, cols])
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn step(&mut self, params: &StepParams) -> Result<StatsBundle> {
+        let k_live = params.k();
+        let (n_art, d, k_art) = (self.entry.n, self.entry.d, self.entry.k);
+        let param_tensors = self.pack_params(params)?;
+        let mut bundle = StatsBundle::empty(&self.prior, k_live);
+        for s in 0..self.shards.len() {
+            let gumbel = Self::gumbel_tensor(&mut self.shards[s].rng, n_art, k_art);
+            let gumbel_sub = Self::gumbel_tensor(&mut self.shards[s].rng, n_art, 2);
+            let mut inputs: Vec<HostTensor> = Vec::with_capacity(param_tensors.len() + 4);
+            inputs.push(HostTensor::f32(self.shard_x[s].clone(), &[n_art, d]));
+            inputs.push(HostTensor::f32(self.shard_mask[s].clone(), &[n_art]));
+            inputs.extend(param_tensors.iter().cloned());
+            inputs.push(gumbel);
+            inputs.push(gumbel_sub);
+            let out = self
+                .runtime
+                .execute(&self.entry.name, &inputs)
+                .with_context(|| format!("executing {} on shard {s}", self.entry.name))?;
+            if out.len() != 4 {
+                bail!("artifact returned {} outputs, expected 4", out.len());
+            }
+            let z = out[0].as_i32()?;
+            let zsub = out[1].as_i32()?;
+            let counts = out[2].as_f32()?; // (k_art, 2)
+            let sumx = out[3].as_f32()?; // (k_art, 2, d)
+            // Record labels (valid rows only).
+            let shard = &mut self.shards[s];
+            for local in 0..shard.len() {
+                shard.z[local] = z[local].clamp(0, k_live.max(1) as i32 - 1) as u32;
+                shard.zsub[local] = (zsub[local] & 1) as u8;
+            }
+            // Fold device statistics into the f64 bundle.
+            match &self.prior {
+                Prior::DirMult(_) => {
+                    for kk in 0..k_live {
+                        for h in 0..2 {
+                            let flat = kk * 2 + h;
+                            if let Stats::Mult(ms) = &mut bundle.sub_stats[kk][h] {
+                                ms.n += counts[flat] as f64;
+                                for j in 0..d {
+                                    ms.sum_x[j] += sumx[flat * d + j] as f64;
+                                }
+                            }
+                        }
+                    }
+                }
+                Prior::Niw(_) => {
+                    // counts + Σx from device; Σxxᵀ accumulated host-side
+                    // from the labels (O(n·d²), threads not needed at
+                    // artifact shard sizes).
+                    for kk in 0..k_live {
+                        for h in 0..2 {
+                            let flat = kk * 2 + h;
+                            if let Stats::Gauss(gs) = &mut bundle.sub_stats[kk][h] {
+                                gs.n += counts[flat] as f64;
+                                for j in 0..d {
+                                    gs.sum_x[j] += sumx[flat * d + j] as f64;
+                                }
+                            }
+                        }
+                    }
+                    let shard = &self.shards[s];
+                    for (local, i) in shard.range.clone().enumerate() {
+                        let kk = shard.z[local] as usize;
+                        let h = shard.zsub[local] as usize;
+                        if let Stats::Gauss(gs) = &mut bundle.sub_stats[kk][h] {
+                            gs.sum_xxt.add_outer(self.data.row(i), 1.0);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(bundle)
+    }
+
+    fn apply_splits(&mut self, ops: &[SplitOp]) -> Result<()> {
+        for shard in &mut self.shards {
+            shard_apply_splits(shard, ops);
+        }
+        Ok(())
+    }
+
+    fn apply_merges(&mut self, ops: &[MergeOp]) -> Result<()> {
+        for shard in &mut self.shards {
+            shard_apply_merges(shard, ops);
+        }
+        Ok(())
+    }
+
+    fn remap(&mut self, map: &[Option<usize>]) -> Result<()> {
+        for shard in &mut self.shards {
+            shard_remap(shard, map);
+        }
+        Ok(())
+    }
+
+    fn labels(&self) -> Result<Vec<usize>> {
+        let mut out = vec![0usize; self.data.n];
+        for shard in &self.shards {
+            for (local, i) in shard.range.clone().enumerate() {
+                out[i] = shard.z[local] as usize;
+            }
+        }
+        Ok(out)
+    }
+
+    fn set_labels(&mut self, labels: &[u32]) -> Result<()> {
+        anyhow::ensure!(labels.len() == self.data.n, "label count mismatch");
+        for shard in &mut self.shards {
+            for (local, i) in shard.range.clone().enumerate() {
+                shard.z[local] = labels[i];
+                shard.zsub[local] = (shard.rng.next_u64() & 1) as u8;
+            }
+        }
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.data.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DpmmState;
+    use crate::stats::NiwPrior;
+
+    fn artifact_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifact_dir().join("manifest.json").exists()
+    }
+
+    fn blob_data(centers: &[[f64; 2]], per: usize) -> Arc<Data> {
+        let mut values = Vec::new();
+        for (ci, c) in centers.iter().enumerate() {
+            for i in 0..per {
+                values.push(c[0] + 0.01 * ((i + ci) % 7) as f64);
+                values.push(c[1] - 0.01 * ((i * 3 + ci) % 5) as f64);
+            }
+        }
+        Arc::new(Data::new(centers.len() * per, 2, values))
+    }
+
+    fn state_on(centers: &[[f64; 2]], per: usize) -> DpmmState {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let mut state =
+            DpmmState::new(1.0, prior.clone(), centers.len(), centers.len() * per, &mut rng);
+        for (k, c) in centers.iter().enumerate() {
+            let mut s = prior.empty_stats();
+            for i in 0..per {
+                s.add(&[c[0] + 0.01 * i as f64, c[1]]);
+            }
+            state.clusters[k].stats = s.clone();
+            state.clusters[k].sub_stats = [s.clone(), s.clone()];
+            state.clusters[k].params = prior.mean_params(&s);
+            state.clusters[k].sub_params = [prior.mean_params(&s), prior.mean_params(&s)];
+            state.clusters[k].weight = 1.0 / centers.len() as f64;
+        }
+        state
+    }
+
+    #[test]
+    fn xla_step_recovers_separated_blobs() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let centers = [[-20.0, 0.0], [20.0, 0.0]];
+        let data = blob_data(&centers, 100);
+        let state = state_on(&centers, 100);
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let config = XlaConfig { artifact_dir: artifact_dir(), shard_size: 256, ..Default::default() };
+        let mut backend = XlaBackend::new(Arc::clone(&data), state.prior.clone(), config, &mut rng).unwrap();
+        let bundle = backend.step(&StepParams::snapshot(&state)).unwrap();
+        let cs = bundle.cluster_stats();
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].count(), 100.0);
+        assert_eq!(cs[1].count(), 100.0);
+        let labels = backend.labels().unwrap();
+        for (i, &l) in labels.iter().enumerate() {
+            assert_eq!(l, i / 100, "point {i}");
+        }
+        // Gaussian scatter accumulated host-side must match a recount.
+        if let Stats::Gauss(gs) = &cs[0] {
+            assert!(gs.sum_xxt[(0, 0)] > 0.0);
+            assert!((gs.sum_x[0] / gs.n - (-20.0)).abs() < 0.1);
+        } else {
+            panic!("expected gaussian stats");
+        }
+    }
+
+    #[test]
+    fn xla_stats_agree_with_native() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        use crate::backend::native::{NativeBackend, NativeConfig};
+        let centers = [[-20.0, 0.0], [0.0, 20.0], [20.0, 0.0]];
+        let data = blob_data(&centers, 80);
+        let state = state_on(&centers, 80);
+        let params = StepParams::snapshot(&state);
+        let mut rng1 = Xoshiro256pp::seed_from_u64(1);
+        let mut nb = NativeBackend::new(
+            Arc::clone(&data),
+            state.prior.clone(),
+            NativeConfig { shard_size: 64, threads: 2 },
+            &mut rng1,
+        );
+        let native_bundle = nb.step(&params).unwrap();
+        let mut rng2 = Xoshiro256pp::seed_from_u64(2);
+        let config = XlaConfig { artifact_dir: artifact_dir(), shard_size: 256, ..Default::default() };
+        let mut xb = XlaBackend::new(Arc::clone(&data), state.prior.clone(), config, &mut rng2).unwrap();
+        let xla_bundle = xb.step(&params).unwrap();
+        // Different RNG streams, but on well-separated data the cluster
+        // assignments are deterministic → identical cluster-level stats.
+        let ncs = native_bundle.cluster_stats();
+        let xcs = xla_bundle.cluster_stats();
+        for k in 0..3 {
+            assert_eq!(ncs[k].count(), xcs[k].count(), "cluster {k}");
+            if let (Stats::Gauss(a), Stats::Gauss(b)) = (&ncs[k], &xcs[k]) {
+                for j in 0..2 {
+                    assert!((a.sum_x[j] - b.sum_x[j]).abs() < 0.05, "sum_x k={k} j={j}");
+                }
+                assert!(a.sum_xxt.frob_dist(&b.sum_xxt) < 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_choice_policies() {
+        assert_eq!(KernelChoice::Direct.pick(128, 100_000), "direct");
+        assert_eq!(KernelChoice::Matmul.pick(2, 10), "matmul");
+        let auto = KernelChoice::Auto { crossover: 1000 };
+        assert_eq!(auto.pick(10, 99), "direct");
+        assert_eq!(auto.pick(10, 100), "matmul");
+    }
+
+    #[test]
+    fn missing_artifact_dir_errors() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let data = blob_data(&[[0.0, 0.0]], 10);
+        let config = XlaConfig {
+            artifact_dir: std::path::PathBuf::from("/nonexistent"),
+            ..Default::default()
+        };
+        assert!(XlaBackend::new(data, Prior::Niw(NiwPrior::weak(2)), config, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Comparator algorithms the paper benchmarks against.
+//!
+//! * [`vbgmm`] — truncated stick-breaking variational Bayesian GMM, the
+//!   sklearn `BayesianGaussianMixture(weight_concentration_prior_type=
+//!   "dirichlet_process")` analog used in Fig. 4/5/8/9. Like sklearn it
+//!   needs an *upper bound* on K (the very limitation the paper's sampler
+//!   removes).
+
+pub mod vbgmm;
+
+pub use vbgmm::{VbGmm, VbGmmConfig};

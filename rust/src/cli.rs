@@ -1,0 +1,163 @@
+//! Minimal dependency-free CLI argument parser (clap is unavailable
+//! offline). Supports `--key=value`, `--key value`, bare flags, and
+//! positional arguments.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `known_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, known_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        // First non-dashed token is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: everything after is positional.
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    // Option expecting a value.
+                    match it.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            out.opts.insert(body.to_string(), v);
+                        }
+                        Some(v) => bail!("option --{body} expects a value, got '{v}'"),
+                        None => bail!("option --{body} expects a value"),
+                    }
+                }
+            } else if arg.starts_with('-') && arg.len() > 1 {
+                bail!("short options are not supported: '{arg}'");
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().map_err(|_| anyhow!("--{key} must be an integer, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().map_err(|_| anyhow!("--{key} must be a number, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().map_err(|_| anyhow!("--{key} must be an integer, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), &["verbose", "gpu"]).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = parse(&["fit", "--alpha=10", "--iterations", "100", "--verbose", "data.npy"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fit"));
+        assert_eq!(a.get("alpha"), Some("10"));
+        assert_eq!(a.get_usize("iterations").unwrap(), Some(100));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("gpu"));
+        assert_eq!(a.positional, vec!["data.npy"]);
+    }
+
+    #[test]
+    fn equals_and_space_forms_equivalent() {
+        let a = parse(&["--k=5"]);
+        let b = parse(&["--k", "5"]);
+        assert_eq!(a.get("k"), b.get("k"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--workers=host1:1,host2:2, host3:3"]);
+        assert_eq!(a.get_list("workers"), vec!["host1:1", "host2:2", "host3:3"]);
+        assert!(a.get_list("missing").is_empty());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--alpha".to_string()].into_iter(), &[]).is_err());
+        assert!(Args::parse(["--alpha".to_string(), "--beta".to_string()].into_iter(), &[])
+            .is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--n=abc"]);
+        assert!(a.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["fit", "--", "--not-an-option"]);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn require_reports_key() {
+        let a = parse(&[]);
+        let e = a.require("params_path").unwrap_err().to_string();
+        assert!(e.contains("params_path"));
+    }
+}

@@ -1,0 +1,369 @@
+//! Model/run configuration — the paper's `global_params` JSON surface
+//! (`--params_path`): `alpha`, `prior_type`, prior hyperparameters,
+//! `iterations`, `burn_out`, `kernel`, backend selection, seeds.
+
+use crate::linalg::Matrix;
+use crate::sampler::SamplerOptions;
+use crate::stats::{DirMultPrior, NiwPrior, Prior};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Which likelihood/prior family to fit.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PriorSpec {
+    /// NIW prior for Gaussian components.
+    Niw { kappa: f64, m: Vec<f64>, nu: f64, psi: Matrix },
+    /// Symmetric-or-full Dirichlet prior for multinomial components.
+    Dirichlet { alpha: Vec<f64> },
+}
+
+impl PriorSpec {
+    pub fn build(&self) -> Prior {
+        match self {
+            PriorSpec::Niw { kappa, m, nu, psi } => {
+                Prior::Niw(NiwPrior::new(*kappa, m.clone(), *nu, psi.clone()))
+            }
+            PriorSpec::Dirichlet { alpha } => Prior::DirMult(DirMultPrior::new(alpha.clone())),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            PriorSpec::Niw { m, .. } => m.len(),
+            PriorSpec::Dirichlet { alpha } => alpha.len(),
+        }
+    }
+}
+
+/// Which backend executes the label/statistics pass.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BackendChoice {
+    /// Multi-core CPU (paper: Julia package).
+    Native { threads: usize, shard_size: usize },
+    /// AOT XLA artifacts via PJRT (paper: CUDA/C++ package).
+    Xla { artifact_dir: String, shard_size: usize, kernel: String, crossover: usize },
+    /// TCP workers (paper: multi-machine Julia).
+    Distributed { workers: Vec<String>, worker_threads: usize },
+}
+
+impl Default for BackendChoice {
+    fn default() -> Self {
+        BackendChoice::Native { threads: 0, shard_size: 16 * 1024 }
+    }
+}
+
+/// Everything a fit needs (the paper's JSON `global_params`).
+#[derive(Debug, Clone)]
+pub struct DpmmParams {
+    pub alpha: f64,
+    pub prior: PriorSpec,
+    pub iterations: usize,
+    /// Paper's `burn_out`: age (iterations) before a cluster may split/merge.
+    pub burnout: usize,
+    /// Initial number of clusters.
+    pub initial_clusters: usize,
+    pub max_clusters: usize,
+    pub seed: u64,
+    pub backend: BackendChoice,
+    /// Stop split/merge moves for the trailing iterations so labels settle.
+    pub final_polish_iters: usize,
+    /// Print per-iteration progress.
+    pub verbose: bool,
+    /// Write a resumable checkpoint here every `checkpoint_every` iterations
+    /// (the paper's JLD2 save/restore feature).
+    pub checkpoint_path: Option<String>,
+    pub checkpoint_every: usize,
+}
+
+impl DpmmParams {
+    /// Gaussian defaults with a weak NIW prior — the paper's "let the data
+    /// speak" setting (§2.2 Example 3).
+    pub fn gaussian_default(d: usize) -> Self {
+        Self {
+            alpha: 10.0,
+            prior: PriorSpec::Niw {
+                kappa: 1.0,
+                m: vec![0.0; d],
+                nu: d as f64 + 3.0,
+                psi: Matrix::identity(d),
+            },
+            iterations: 100,
+            burnout: 5,
+            initial_clusters: 1,
+            max_clusters: 48,
+            seed: 0,
+            backend: BackendChoice::default(),
+            final_polish_iters: 5,
+            verbose: false,
+            checkpoint_path: None,
+            checkpoint_every: 25,
+        }
+    }
+
+    /// Multinomial defaults with a symmetric Dirichlet prior.
+    pub fn multinomial_default(d: usize) -> Self {
+        Self {
+            alpha: 10.0,
+            prior: PriorSpec::Dirichlet { alpha: vec![1.0; d] },
+            ..Self::gaussian_default(d)
+        }
+    }
+
+    pub fn sampler_options(&self) -> SamplerOptions {
+        SamplerOptions {
+            burnout: self.burnout,
+            no_splits: false,
+            no_merges: false,
+            max_clusters: self.max_clusters,
+            sub_restart_every: 10,
+        }
+    }
+
+    /// Parse the paper-style JSON params file. Minimal example:
+    ///
+    /// ```json
+    /// {
+    ///   "alpha": 10.0,
+    ///   "prior_type": "Gaussian",
+    ///   "prior": {"kappa": 1.0, "m": [0, 0], "nu": 5.0, "psi": [1, 0, 0, 1]},
+    ///   "iterations": 100,
+    ///   "burn_out": 5
+    /// }
+    /// ```
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text).context("parsing params JSON")?;
+        let prior_type = v
+            .get("prior_type")
+            .and_then(Json::as_str)
+            .unwrap_or("Gaussian")
+            .to_ascii_lowercase();
+        let pv = v.get("prior").ok_or_else(|| anyhow!("params missing 'prior'"))?;
+        let prior = match prior_type.as_str() {
+            "gaussian" => {
+                let m = pv
+                    .get("m")
+                    .and_then(Json::as_f64_vec)
+                    .ok_or_else(|| anyhow!("gaussian prior needs 'm' (mean vector)"))?;
+                let d = m.len();
+                let kappa = pv.get("kappa").and_then(Json::as_f64).unwrap_or(1.0);
+                let nu = pv.get("nu").and_then(Json::as_f64).unwrap_or(d as f64 + 3.0);
+                let psi_flat = pv
+                    .get("psi")
+                    .and_then(Json::as_f64_vec)
+                    .unwrap_or_else(|| Matrix::identity(d).data().to_vec());
+                if psi_flat.len() != d * d {
+                    bail!("psi must have d*d = {} entries, got {}", d * d, psi_flat.len());
+                }
+                PriorSpec::Niw { kappa, m, nu, psi: Matrix::from_vec(d, d, psi_flat) }
+            }
+            "multinomial" => {
+                let alpha = pv
+                    .get("alpha")
+                    .and_then(Json::as_f64_vec)
+                    .or_else(|| {
+                        // {"alpha": 1.0, "dim": 64} shorthand
+                        let a0 = pv.get("alpha").and_then(Json::as_f64)?;
+                        let d = pv.get("dim").and_then(Json::as_usize)?;
+                        Some(vec![a0; d])
+                    })
+                    .ok_or_else(|| anyhow!("multinomial prior needs 'alpha' (vector or scalar + 'dim')"))?;
+                PriorSpec::Dirichlet { alpha }
+            }
+            other => bail!("unknown prior_type '{other}' (Gaussian | Multinomial)"),
+        };
+        let d = prior.dim();
+        let mut p = match prior {
+            PriorSpec::Niw { .. } => DpmmParams::gaussian_default(d),
+            PriorSpec::Dirichlet { .. } => DpmmParams::multinomial_default(d),
+        };
+        p.prior = prior;
+        if let Some(a) = v.get("alpha").and_then(Json::as_f64) {
+            if a <= 0.0 {
+                bail!("alpha must be positive");
+            }
+            p.alpha = a;
+        }
+        if let Some(i) = v.get("iterations").and_then(Json::as_usize) {
+            p.iterations = i;
+        }
+        if let Some(b) = v.get("burn_out").and_then(Json::as_usize) {
+            p.burnout = b;
+        }
+        if let Some(k) = v.get("initial_clusters").and_then(Json::as_usize) {
+            p.initial_clusters = k.max(1);
+        }
+        if let Some(k) = v.get("max_clusters").and_then(Json::as_usize) {
+            p.max_clusters = k;
+        }
+        if let Some(s) = v.get("seed").and_then(Json::as_i64) {
+            p.seed = s as u64;
+        }
+        if let Some(fp) = v.get("final_polish_iters").and_then(Json::as_usize) {
+            p.final_polish_iters = fp;
+        }
+        if let Some(b) = v.get("verbose").and_then(Json::as_bool) {
+            p.verbose = b;
+        }
+        if let Some(cp) = v.get("checkpoint_path").and_then(Json::as_str) {
+            p.checkpoint_path = Some(cp.to_string());
+        }
+        if let Some(ce) = v.get("checkpoint_every").and_then(Json::as_usize) {
+            p.checkpoint_every = ce;
+        }
+        // Backend block (optional).
+        if let Some(bk) = v.get("backend") {
+            let kind = bk.get("kind").and_then(Json::as_str).unwrap_or("native");
+            p.backend = match kind {
+                "native" => BackendChoice::Native {
+                    threads: bk.get("threads").and_then(Json::as_usize).unwrap_or(0),
+                    shard_size: bk.get("shard_size").and_then(Json::as_usize).unwrap_or(16 * 1024),
+                },
+                "xla" => BackendChoice::Xla {
+                    artifact_dir: bk
+                        .get("artifact_dir")
+                        .and_then(Json::as_str)
+                        .unwrap_or("artifacts")
+                        .to_string(),
+                    shard_size: bk.get("shard_size").and_then(Json::as_usize).unwrap_or(4096),
+                    kernel: bk.get("kernel").and_then(Json::as_str).unwrap_or("auto").to_string(),
+                    crossover: bk
+                        .get("crossover")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(640_000),
+                },
+                "distributed" => BackendChoice::Distributed {
+                    workers: bk
+                        .get("workers")
+                        .and_then(Json::as_arr)
+                        .map(|a| {
+                            a.iter().filter_map(Json::as_str).map(str::to_string).collect()
+                        })
+                        .unwrap_or_default(),
+                    worker_threads: bk.get("worker_threads").and_then(Json::as_usize).unwrap_or(1),
+                },
+                other => bail!("unknown backend kind '{other}'"),
+            };
+        }
+        Ok(p)
+    }
+
+    /// Serialize back to the params-JSON dialect (round-trip for tooling).
+    pub fn to_json(&self) -> Json {
+        let prior = match &self.prior {
+            PriorSpec::Niw { kappa, m, nu, psi } => Json::obj(vec![
+                ("kappa", (*kappa).into()),
+                ("m", Json::arr_f64(m)),
+                ("nu", (*nu).into()),
+                ("psi", Json::arr_f64(psi.data())),
+            ]),
+            PriorSpec::Dirichlet { alpha } => Json::obj(vec![("alpha", Json::arr_f64(alpha))]),
+        };
+        let prior_type = match &self.prior {
+            PriorSpec::Niw { .. } => "Gaussian",
+            PriorSpec::Dirichlet { .. } => "Multinomial",
+        };
+        Json::obj(vec![
+            ("alpha", self.alpha.into()),
+            ("prior_type", prior_type.into()),
+            ("prior", prior),
+            ("iterations", self.iterations.into()),
+            ("burn_out", self.burnout.into()),
+            ("initial_clusters", self.initial_clusters.into()),
+            ("max_clusters", self.max_clusters.into()),
+            ("seed", (self.seed as usize).into()),
+            ("final_polish_iters", self.final_polish_iters.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_json_roundtrip() {
+        let text = r#"{
+            "alpha": 4.5,
+            "prior_type": "Gaussian",
+            "prior": {"kappa": 2.0, "m": [1, 2], "nu": 6.0, "psi": [2, 0, 0, 2]},
+            "iterations": 42,
+            "burn_out": 3,
+            "seed": 7
+        }"#;
+        let p = DpmmParams::from_json(text).unwrap();
+        assert_eq!(p.alpha, 4.5);
+        assert_eq!(p.iterations, 42);
+        assert_eq!(p.burnout, 3);
+        assert_eq!(p.seed, 7);
+        match &p.prior {
+            PriorSpec::Niw { kappa, m, nu, psi } => {
+                assert_eq!(*kappa, 2.0);
+                assert_eq!(m, &vec![1.0, 2.0]);
+                assert_eq!(*nu, 6.0);
+                assert_eq!(psi[(1, 1)], 2.0);
+            }
+            _ => panic!("wrong prior"),
+        }
+        // Round-trip through to_json.
+        let text2 = json::to_string(&p.to_json());
+        let p2 = DpmmParams::from_json(&text2).unwrap();
+        assert_eq!(p2.alpha, p.alpha);
+        assert_eq!(p2.prior, p.prior);
+    }
+
+    #[test]
+    fn multinomial_scalar_alpha_shorthand() {
+        let text = r#"{
+            "prior_type": "Multinomial",
+            "prior": {"alpha": 0.5, "dim": 8}
+        }"#;
+        let p = DpmmParams::from_json(text).unwrap();
+        match &p.prior {
+            PriorSpec::Dirichlet { alpha } => assert_eq!(alpha, &vec![0.5; 8]),
+            _ => panic!("wrong prior"),
+        }
+    }
+
+    #[test]
+    fn backend_blocks_parse() {
+        let text = r#"{
+            "prior_type": "Gaussian",
+            "prior": {"m": [0, 0]},
+            "backend": {"kind": "xla", "artifact_dir": "arts", "kernel": "direct"}
+        }"#;
+        let p = DpmmParams::from_json(text).unwrap();
+        match &p.backend {
+            BackendChoice::Xla { artifact_dir, kernel, .. } => {
+                assert_eq!(artifact_dir, "arts");
+                assert_eq!(kernel, "direct");
+            }
+            _ => panic!("wrong backend"),
+        }
+        let text = r#"{
+            "prior_type": "Gaussian",
+            "prior": {"m": [0]},
+            "backend": {"kind": "distributed", "workers": ["a:1", "b:2"], "worker_threads": 3}
+        }"#;
+        match DpmmParams::from_json(text).unwrap().backend {
+            BackendChoice::Distributed { workers, worker_threads } => {
+                assert_eq!(workers, vec!["a:1", "b:2"]);
+                assert_eq!(worker_threads, 3);
+            }
+            _ => panic!("wrong backend"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(DpmmParams::from_json("{").is_err());
+        assert!(DpmmParams::from_json(r#"{"prior_type": "Poisson", "prior": {}}"#).is_err());
+        assert!(DpmmParams::from_json(
+            r#"{"prior_type": "Gaussian", "prior": {"m": [0,0], "psi": [1,2,3]}}"#
+        )
+        .is_err());
+        assert!(DpmmParams::from_json(
+            r#"{"alpha": -1, "prior_type": "Gaussian", "prior": {"m": [0]}}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,325 @@
+//! Fit checkpointing (the paper's Julia package uses JLD2 to save/restore
+//! chains; here the coordinator state + labels serialize through the same
+//! binary codec as the wire protocol, so a multi-hour fit on a large corpus
+//! can resume after interruption).
+//!
+//! Layout: `[magic][version][alpha][prior][K × cluster][iter][labels]`.
+//! Labels are stored coordinator-side in the file even though they live in
+//! the backend at run time — on restore they are pushed back via a remap.
+
+use crate::model::{Cluster, DpmmState};
+use crate::stats::{Params, Prior, Stats};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"DPMMCKPT";
+const VERSION: u8 = 1;
+
+fn write_stats(w: &mut impl Write, s: &Stats) -> Result<()> {
+    match s {
+        Stats::Gauss(g) => {
+            w.write_all(&[0u8])?;
+            w.write_all(&g.n.to_le_bytes())?;
+            write_f64s(w, &g.sum_x)?;
+            w.write_all(&(g.sum_xxt.rows() as u32).to_le_bytes())?;
+            write_f64s(w, g.sum_xxt.data())?;
+        }
+        Stats::Mult(m) => {
+            w.write_all(&[1u8])?;
+            w.write_all(&m.n.to_le_bytes())?;
+            write_f64s(w, &m.sum_x)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_stats(r: &mut impl Read) -> Result<Stats> {
+    let tag = read_u8(r)?;
+    Ok(match tag {
+        0 => {
+            let n = read_f64(r)?;
+            let sum_x = read_f64s(r)?;
+            let rows = read_u32(r)? as usize;
+            let data = read_f64s(r)?;
+            if data.len() != rows * rows {
+                bail!("checkpoint scatter matrix shape mismatch");
+            }
+            Stats::Gauss(crate::stats::NiwStats {
+                n,
+                sum_x,
+                sum_xxt: crate::linalg::Matrix::from_vec(rows, rows, data),
+            })
+        }
+        1 => {
+            let n = read_f64(r)?;
+            let sum_x = read_f64s(r)?;
+            Stats::Mult(crate::stats::DirMultStats { n, sum_x })
+        }
+        t => bail!("bad stats tag {t} in checkpoint"),
+    })
+}
+
+fn write_f64s(w: &mut impl Write, v: &[f64]) -> Result<()> {
+    w.write_all(&(v.len() as u32).to_le_bytes())?;
+    for x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f64s(r: &mut impl Read) -> Result<Vec<f64>> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 28 {
+        bail!("checkpoint vector too large ({n})");
+    }
+    (0..n).map(|_| read_f64(r)).collect()
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn write_prior(w: &mut impl Write, p: &Prior) -> Result<()> {
+    match p {
+        Prior::Niw(n) => {
+            w.write_all(&[0u8])?;
+            w.write_all(&n.kappa.to_le_bytes())?;
+            write_f64s(w, &n.m)?;
+            w.write_all(&n.nu.to_le_bytes())?;
+            write_f64s(w, n.psi.data())?;
+        }
+        Prior::DirMult(d) => {
+            w.write_all(&[1u8])?;
+            write_f64s(w, &d.alpha)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_prior(r: &mut impl Read) -> Result<Prior> {
+    Ok(match read_u8(r)? {
+        0 => {
+            let kappa = read_f64(r)?;
+            let m = read_f64s(r)?;
+            let nu = read_f64(r)?;
+            let psi_flat = read_f64s(r)?;
+            let d = m.len();
+            if psi_flat.len() != d * d {
+                bail!("checkpoint psi shape mismatch");
+            }
+            Prior::Niw(crate::stats::NiwPrior::new(
+                kappa,
+                m,
+                nu,
+                crate::linalg::Matrix::from_vec(d, d, psi_flat),
+            ))
+        }
+        1 => Prior::DirMult(crate::stats::DirMultPrior::new(read_f64s(r)?)),
+        t => bail!("bad prior tag {t} in checkpoint"),
+    })
+}
+
+/// A resumable snapshot of a fit.
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub state: DpmmState,
+    /// Completed iterations.
+    pub iter: usize,
+    /// Full label vector (original data order).
+    pub labels: Vec<u32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref())
+                .with_context(|| format!("creating {}", path.as_ref().display()))?,
+        );
+        w.write_all(MAGIC)?;
+        w.write_all(&[VERSION])?;
+        w.write_all(&self.state.alpha.to_le_bytes())?;
+        w.write_all(&(self.state.n_total as u64).to_le_bytes())?;
+        write_prior(&mut w, &self.state.prior)?;
+        w.write_all(&(self.state.k() as u32).to_le_bytes())?;
+        for c in &self.state.clusters {
+            write_stats(&mut w, &c.stats)?;
+            write_stats(&mut w, &c.sub_stats[0])?;
+            write_stats(&mut w, &c.sub_stats[1])?;
+            w.write_all(&c.weight.to_le_bytes())?;
+            w.write_all(&c.sub_weights[0].to_le_bytes())?;
+            w.write_all(&c.sub_weights[1].to_le_bytes())?;
+            w.write_all(&(c.age as u64).to_le_bytes())?;
+        }
+        w.write_all(&(self.iter as u64).to_le_bytes())?;
+        w.write_all(&(self.labels.len() as u64).to_le_bytes())?;
+        for &l in &self.labels {
+            w.write_all(&l.to_le_bytes())?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>, rng: &mut impl crate::rng::Rng) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a dpmm checkpoint (bad magic)");
+        }
+        let ver = read_u8(&mut r)?;
+        if ver != VERSION {
+            bail!("unsupported checkpoint version {ver}");
+        }
+        let alpha = read_f64(&mut r)?;
+        let n_total = read_u64(&mut r)? as usize;
+        let prior = read_prior(&mut r)?;
+        let k = read_u32(&mut r)? as usize;
+        if k == 0 || k > 1 << 16 {
+            bail!("implausible cluster count {k} in checkpoint");
+        }
+        let mut state = DpmmState::new(alpha, prior.clone(), 1, n_total, rng);
+        state.clusters.clear();
+        for _ in 0..k {
+            let stats = read_stats(&mut r)?;
+            let sub_l = read_stats(&mut r)?;
+            let sub_r = read_stats(&mut r)?;
+            let weight = read_f64(&mut r)?;
+            let sw0 = read_f64(&mut r)?;
+            let sw1 = read_f64(&mut r)?;
+            let age = read_u64(&mut r)? as usize;
+            // Params are resampled from the restored statistics on the
+            // first post-restore sweep (they are posterior draws anyway).
+            let params = prior.sample_params(&stats, rng);
+            let sub_params =
+                [prior.sample_params(&sub_l, rng), prior.sample_params(&sub_r, rng)];
+            state.clusters.push(Cluster {
+                stats,
+                sub_stats: [sub_l, sub_r],
+                params,
+                sub_params,
+                weight,
+                sub_weights: [sw0, sw1],
+                age,
+                since_restart: 0,
+            });
+        }
+        let iter = read_u64(&mut r)? as usize;
+        let n_labels = read_u64(&mut r)? as usize;
+        if n_labels != n_total {
+            bail!("checkpoint label count {n_labels} != N {n_total}");
+        }
+        let mut labels = Vec::with_capacity(n_labels);
+        for _ in 0..n_labels {
+            labels.push(read_u32(&mut r)?);
+        }
+        if labels.iter().any(|&l| l as usize >= k) {
+            bail!("checkpoint label out of range");
+        }
+        Ok(Checkpoint { state, iter, labels })
+    }
+}
+
+// Touch Params so the import is used in docs/links.
+#[allow(dead_code)]
+fn _t(_: Option<Params>) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::stats::NiwPrior;
+
+    fn make_state() -> DpmmState {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut state = DpmmState::new(3.5, prior.clone(), 2, 6, &mut rng);
+        for (ci, c) in state.clusters.iter_mut().enumerate() {
+            let mut s = prior.empty_stats();
+            s.add(&[ci as f64, 1.0]);
+            s.add(&[ci as f64 + 0.5, -1.0]);
+            s.add(&[ci as f64 - 0.5, 0.0]);
+            c.stats = s.clone();
+            c.sub_stats = [s.clone(), prior.empty_stats()];
+            c.weight = if ci == 0 { 0.7 } else { 0.3 };
+            c.sub_weights = [0.6, 0.4];
+            c.age = 7 + ci;
+        }
+        state
+    }
+
+    #[test]
+    fn roundtrip_gaussian_checkpoint() {
+        let state = make_state();
+        let ckpt = Checkpoint { state, iter: 42, labels: vec![0, 0, 0, 1, 1, 1] };
+        let p = std::env::temp_dir().join(format!("dpmm_ckpt_{}.bin", std::process::id()));
+        ckpt.save(&p).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let back = Checkpoint::load(&p, &mut rng).unwrap();
+        assert_eq!(back.iter, 42);
+        assert_eq!(back.labels, ckpt.labels);
+        assert_eq!(back.state.k(), 2);
+        assert_eq!(back.state.alpha, 3.5);
+        assert_eq!(back.state.clusters[0].count(), 3.0);
+        assert_eq!(back.state.clusters[0].weight, 0.7);
+        assert_eq!(back.state.clusters[1].age, 8);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn roundtrip_multinomial_checkpoint() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let prior = Prior::DirMult(crate::stats::DirMultPrior::symmetric(3, 0.5));
+        let mut state = DpmmState::new(1.0, prior.clone(), 1, 2, &mut rng);
+        state.clusters[0].stats.add(&[1.0, 2.0, 0.0]);
+        state.clusters[0].stats.add(&[0.0, 1.0, 3.0]);
+        let ckpt = Checkpoint { state, iter: 3, labels: vec![0, 0] };
+        let p = std::env::temp_dir().join(format!("dpmm_ckpt_m_{}.bin", std::process::id()));
+        ckpt.save(&p).unwrap();
+        let back = Checkpoint::load(&p, &mut rng).unwrap();
+        assert_eq!(back.state.clusters[0].count(), 2.0);
+        match &back.state.clusters[0].stats {
+            Stats::Mult(m) => assert_eq!(m.sum_x, vec![1.0, 3.0, 3.0]),
+            _ => panic!("wrong stats family"),
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_checkpoints() {
+        let p = std::env::temp_dir().join(format!("dpmm_ckpt_bad_{}.bin", std::process::id()));
+        std::fs::write(&p, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        assert!(Checkpoint::load(&p, &mut rng).is_err());
+        // Truncated real checkpoint.
+        let ckpt = Checkpoint { state: make_state(), iter: 1, labels: vec![0; 6] };
+        ckpt.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&p, &mut rng).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,422 @@
+//! The iteration driver: wires the sampler (weights/params/splits/merges) to
+//! a [`Backend`] (labels/statistics) and runs the MCMC schedule — the
+//! `group_step()` loop of the paper's §4.1, backend-agnostic.
+
+pub mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use crate::backend::distributed::{DistributedBackend, DistributedConfig};
+use crate::backend::native::{NativeBackend, NativeConfig};
+use crate::backend::xla::{KernelChoice, XlaBackend, XlaConfig};
+use crate::backend::Backend;
+use crate::config::{BackendChoice, DpmmParams};
+use crate::datagen::Data;
+use crate::model::DpmmState;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::sampler::{
+    age_clusters, apply_merge, apply_split, propose_merges, propose_splits, sample_params,
+    sample_sub_weights, sample_weights, StepParams,
+};
+use crate::stats::Params;
+use crate::util::json::Json;
+use crate::util::timer::PhaseTimer;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Per-iteration diagnostics (the paper's result file reports running time
+/// per iteration; we add K and the joint-posterior proxy).
+#[derive(Debug, Clone)]
+pub struct IterRecord {
+    pub iter: usize,
+    pub k: usize,
+    pub log_posterior: f64,
+    pub seconds: f64,
+    pub splits: usize,
+    pub merges: usize,
+}
+
+/// Final output of a fit.
+#[derive(Debug)]
+pub struct FitResult {
+    pub labels: Vec<usize>,
+    pub weights: Vec<f64>,
+    /// Posterior-mean component parameters (one per surviving cluster).
+    pub params: Vec<Params>,
+    pub history: Vec<IterRecord>,
+    pub timer: PhaseTimer,
+    pub backend_name: &'static str,
+}
+
+impl FitResult {
+    pub fn num_clusters(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.history.iter().map(|r| r.seconds).sum()
+    }
+
+    /// Paper-style result JSON: labels, weights, per-iteration times
+    /// (+ NMI when ground truth is supplied).
+    pub fn to_json(&self, truth: Option<&[usize]>) -> Json {
+        let mut fields = vec![
+            ("backend", Json::from(self.backend_name)),
+            ("num_clusters", Json::from(self.num_clusters())),
+            ("weights", Json::arr_f64(&self.weights)),
+            ("labels", Json::arr_usize(&self.labels)),
+            (
+                "iter_seconds",
+                Json::Arr(self.history.iter().map(|r| Json::Num(r.seconds)).collect()),
+            ),
+            (
+                "iter_k",
+                Json::Arr(self.history.iter().map(|r| Json::Num(r.k as f64)).collect()),
+            ),
+            ("total_seconds", Json::Num(self.total_seconds())),
+        ];
+        if let Some(t) = truth {
+            fields.push(("nmi", Json::Num(crate::metrics::nmi(t, &self.labels))));
+            fields.push(("ari", Json::Num(crate::metrics::ari(t, &self.labels))));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Builder-style front door (the single entry point the paper's Python
+/// wrapper provides; here it is the Rust API and the CLI both).
+#[derive(Debug, Clone)]
+pub struct DpmmFit {
+    params: DpmmParams,
+}
+
+impl DpmmFit {
+    pub fn new(params: DpmmParams) -> Self {
+        Self { params }
+    }
+
+    pub fn iterations(mut self, n: usize) -> Self {
+        self.params.iterations = n;
+        self
+    }
+
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.params.alpha = alpha;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.params.seed = seed;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendChoice) -> Self {
+        self.params.backend = backend;
+        self
+    }
+
+    pub fn verbose(mut self, v: bool) -> Self {
+        self.params.verbose = v;
+        self
+    }
+
+    pub fn burnout(mut self, b: usize) -> Self {
+        self.params.burnout = b;
+        self
+    }
+
+    pub fn max_clusters(mut self, k: usize) -> Self {
+        self.params.max_clusters = k;
+        self
+    }
+
+    pub fn params(&self) -> &DpmmParams {
+        &self.params
+    }
+
+    /// Construct the configured backend for `data`.
+    pub fn build_backend(&self, data: Arc<Data>, rng: &mut impl Rng) -> Result<Box<dyn Backend>> {
+        let prior = self.params.prior.build();
+        if prior.dim() != data.d {
+            bail!("prior dimension {} does not match data dimension {}", prior.dim(), data.d);
+        }
+        Ok(match &self.params.backend {
+            BackendChoice::Native { threads, shard_size } => {
+                let config = NativeConfig {
+                    threads: if *threads == 0 {
+                        crate::util::threadpool::default_threads()
+                    } else {
+                        *threads
+                    },
+                    shard_size: (*shard_size).max(1),
+                };
+                Box::new(NativeBackend::new(data, prior, config, rng))
+            }
+            BackendChoice::Xla { artifact_dir, shard_size, kernel, crossover } => {
+                let kernel = match kernel.as_str() {
+                    "direct" => KernelChoice::Direct,
+                    "matmul" => KernelChoice::Matmul,
+                    _ => KernelChoice::Auto { crossover: *crossover },
+                };
+                let config = XlaConfig {
+                    artifact_dir: artifact_dir.into(),
+                    shard_size: (*shard_size).max(1),
+                    kernel,
+                };
+                Box::new(XlaBackend::new(data, prior, config, rng)?)
+            }
+            BackendChoice::Distributed { workers, worker_threads } => {
+                let config = DistributedConfig {
+                    workers: workers.clone(),
+                    worker_threads: (*worker_threads).max(1),
+                };
+                Box::new(DistributedBackend::new(data, prior, config, rng)?)
+            }
+        })
+    }
+
+    /// Fit on `data` with the configured backend.
+    pub fn fit(&self, data: &Data) -> Result<FitResult> {
+        let data = Arc::new(data.clone());
+        let mut rng = Xoshiro256pp::seed_from_u64(self.params.seed);
+        let mut backend = self.build_backend(Arc::clone(&data), &mut rng)?;
+        self.fit_with_backend(data.n, backend.as_mut(), &mut rng)
+    }
+
+    /// Resume a fit from a checkpoint (native/xla backends; the distributed
+    /// backend cannot restore labels over the wire and reports so).
+    pub fn resume(&self, data: &Data, ckpt: Checkpoint) -> Result<FitResult> {
+        let data = Arc::new(data.clone());
+        let mut rng =
+            Xoshiro256pp::seed_from_u64(self.params.seed.wrapping_add(ckpt.iter as u64));
+        let mut backend = self.build_backend(Arc::clone(&data), &mut rng)?;
+        backend.set_labels(&ckpt.labels)?;
+        self.run_loop(ckpt.state, ckpt.iter, backend.as_mut(), &mut rng)
+    }
+
+    /// Fit using an externally constructed backend (tests, benches, reuse).
+    pub fn fit_with_backend(
+        &self,
+        n_total: usize,
+        backend: &mut dyn Backend,
+        rng: &mut impl Rng,
+    ) -> Result<FitResult> {
+        let p = &self.params;
+        let prior = p.prior.build();
+        let state =
+            DpmmState::new(p.alpha, prior.clone(), p.initial_clusters.max(1), n_total, rng);
+        self.run_loop(state, 0, backend, rng)
+    }
+
+    fn run_loop(
+        &self,
+        mut state: DpmmState,
+        start_iter: usize,
+        backend: &mut dyn Backend,
+        rng: &mut impl Rng,
+    ) -> Result<FitResult> {
+        let p = &self.params;
+        let prior = p.prior.build();
+        let opts = p.sampler_options();
+        let mut timer = PhaseTimer::new();
+        let mut history = Vec::with_capacity(p.iterations.saturating_sub(start_iter));
+        for iter in start_iter..p.iterations {
+            let t0 = Instant::now();
+            // Steps (a)-(d): weights + parameters from current statistics.
+            timer.time("params", || {
+                sample_weights(&mut state, rng);
+                sample_sub_weights(&mut state, rng);
+                sample_params(&mut state, &opts, rng);
+            });
+            // Steps (e)/(f) + statistics on the backend.
+            let snapshot = StepParams::snapshot(&state);
+            let bundle = timer.time("assign", || backend.step(&snapshot))?;
+            state.set_stats(bundle.cluster_stats(), bundle.sub_stats);
+            // Drop empty clusters (keep at least one).
+            timer.time("housekeeping", || -> Result<()> {
+                let mut empties = state.empty_clusters();
+                if empties.len() == state.k() && !empties.is_empty() {
+                    empties.pop();
+                }
+                if !empties.is_empty() {
+                    let map = state.remove_clusters(&empties);
+                    backend.remap(&map)?;
+                }
+                Ok(())
+            })?;
+            age_clusters(&mut state);
+            // Split/merge moves (suppressed during the final polish phase).
+            let polish = iter + p.final_polish_iters >= p.iterations;
+            let (mut n_splits, mut n_merges) = (0, 0);
+            if !polish {
+                timer.time("splitmerge", || -> Result<()> {
+                    let split_targets = propose_splits(&state, &opts, rng);
+                    if !split_targets.is_empty() {
+                        let ops: Vec<_> = split_targets
+                            .iter()
+                            .map(|&t| apply_split(&mut state, t, rng))
+                            .collect();
+                        backend.apply_splits(&ops)?;
+                        n_splits = ops.len();
+                    }
+                    let merge_ops = propose_merges(&state, &opts, rng);
+                    if !merge_ops.is_empty() {
+                        let mut absorbed = Vec::new();
+                        for op in &merge_ops {
+                            apply_merge(&mut state, op.keep, op.absorb, rng);
+                            absorbed.push(op.absorb);
+                        }
+                        backend.apply_merges(&merge_ops)?;
+                        let map = state.remove_clusters(&absorbed);
+                        backend.remap(&map)?;
+                        n_merges = merge_ops.len();
+                    }
+                    Ok(())
+                })?;
+            }
+            let record = IterRecord {
+                iter,
+                k: state.k(),
+                log_posterior: state.log_posterior_proxy(),
+                seconds: t0.elapsed().as_secs_f64(),
+                splits: n_splits,
+                merges: n_merges,
+            };
+            if p.verbose {
+                eprintln!(
+                    "iter {:>4}  K={:<3} logp={:>14.2} splits={} merges={}  {:.3}s",
+                    record.iter, record.k, record.log_posterior, record.splits, record.merges,
+                    record.seconds
+                );
+            }
+            history.push(record);
+            // Crash-recovery checkpoint (the paper's JLD2 save/restore role).
+            if let Some(path) = &p.checkpoint_path {
+                if p.checkpoint_every > 0 && (iter + 1) % p.checkpoint_every == 0 {
+                    let labels =
+                        backend.labels()?.into_iter().map(|l| l as u32).collect();
+                    let ckpt =
+                        Checkpoint { state: state.clone(), iter: iter + 1, labels };
+                    if let Err(e) = ckpt.save(path) {
+                        eprintln!("warning: checkpoint save failed: {e}");
+                    }
+                }
+            }
+        }
+        let labels = backend.labels()?;
+        let weights = {
+            let total: f64 = state.counts().iter().sum();
+            state.counts().iter().map(|&c| c / total.max(1.0)).collect()
+        };
+        let params =
+            state.clusters.iter().map(|c| prior.mean_params(&c.stats)).collect::<Vec<_>>();
+        Ok(FitResult {
+            labels,
+            weights,
+            params,
+            history,
+            timer,
+            backend_name: backend.name(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GmmSpec;
+    use crate::metrics::nmi;
+
+    fn fit_gmm(n: usize, d: usize, k: usize, seed: u64, iters: usize) -> (FitResult, Vec<usize>) {
+        let mut gen_rng = Xoshiro256pp::seed_from_u64(seed);
+        let ds = GmmSpec::default_with(n, d, k).generate(&mut gen_rng);
+        let mut params = DpmmParams::gaussian_default(d);
+        params.iterations = iters;
+        params.seed = seed + 1;
+        params.backend = BackendChoice::Native { threads: 4, shard_size: 2048 };
+        let fit = DpmmFit::new(params).fit(&ds.points).unwrap();
+        (fit, ds.labels)
+    }
+
+    #[test]
+    fn recovers_three_gaussians() {
+        let (fit, truth) = fit_gmm(3000, 2, 3, 42, 60);
+        let score = nmi(&truth, &fit.labels);
+        assert!(score > 0.9, "NMI too low: {score} (K={})", fit.num_clusters());
+        assert!(
+            (2..=5).contains(&fit.num_clusters()),
+            "K={} should be near 3",
+            fit.num_clusters()
+        );
+    }
+
+    #[test]
+    fn recovers_more_clusters_higher_dim() {
+        let (fit, truth) = fit_gmm(4000, 8, 6, 7, 80);
+        let score = nmi(&truth, &fit.labels);
+        assert!(score > 0.85, "NMI too low: {score} (K={})", fit.num_clusters());
+    }
+
+    #[test]
+    fn history_is_complete_and_times_positive() {
+        let (fit, _) = fit_gmm(500, 2, 2, 3, 20);
+        assert_eq!(fit.history.len(), 20);
+        assert!(fit.history.iter().all(|r| r.seconds > 0.0));
+        assert!(fit.total_seconds() > 0.0);
+        assert_eq!(fit.backend_name, "native");
+        // K grows from 1 via splits.
+        assert!(fit.history.last().unwrap().k >= 1);
+    }
+
+    #[test]
+    fn fit_deterministic_given_seed() {
+        let (a, _) = fit_gmm(800, 2, 3, 11, 30);
+        let (b, _) = fit_gmm(800, 2, 3, 11, 30);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.num_clusters(), b.num_clusters());
+    }
+
+    #[test]
+    fn multinomial_fit_works() {
+        use crate::datagen::MultinomialSpec;
+        let mut gen_rng = Xoshiro256pp::seed_from_u64(5);
+        let ds = MultinomialSpec::default_with(2000, 16, 4).generate(&mut gen_rng);
+        let mut params = DpmmParams::multinomial_default(16);
+        params.iterations = 60;
+        params.seed = 9;
+        params.backend = BackendChoice::Native { threads: 4, shard_size: 1024 };
+        let fit = DpmmFit::new(params).fit(&ds.points).unwrap();
+        let score = nmi(&ds.labels, &fit.labels);
+        assert!(score > 0.75, "NMI too low: {score} (K={})", fit.num_clusters());
+    }
+
+    #[test]
+    fn result_json_has_expected_fields() {
+        let (fit, truth) = fit_gmm(300, 2, 2, 1, 15);
+        let j = fit.to_json(Some(&truth));
+        assert!(j.get("nmi").is_some());
+        assert!(j.get("weights").is_some());
+        assert_eq!(
+            j.get("labels").unwrap().as_arr().unwrap().len(),
+            300
+        );
+        let s = crate::util::json::to_string(&j);
+        assert!(crate::util::json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let mut gen_rng = Xoshiro256pp::seed_from_u64(0);
+        let ds = GmmSpec::default_with(100, 3, 2).generate(&mut gen_rng);
+        let params = DpmmParams::gaussian_default(2); // wrong d
+        assert!(DpmmFit::new(params).fit(&ds.points).is_err());
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let (fit, _) = fit_gmm(600, 2, 3, 21, 25);
+        let total: f64 = fit.weights.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,319 @@
+//! Synthetic dataset generators (the paper's `data_generators` class) plus
+//! "simulated-real" generators standing in for the paper's §5.3 datasets
+//! (mnist/fashion/ImageNet-100 PCA features and 20newsgroups BoW), which are
+//! unavailable offline — see DESIGN.md §5 for the substitution rationale.
+
+mod realistic;
+
+pub use realistic::{fashion_like, imagenet100_like, mnist_like, newsgroups_like};
+
+use crate::linalg::Matrix;
+use crate::rng::{dirichlet, gamma, multinomial, normal, Normal, Rng};
+
+/// A generated dataset: row-major `n × d` points plus ground-truth labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub points: Data,
+    pub labels: Vec<usize>,
+    /// True number of mixture components used by the generator.
+    pub true_k: usize,
+}
+
+/// Row-major data matrix.
+#[derive(Debug, Clone)]
+pub struct Data {
+    pub n: usize,
+    pub d: usize,
+    pub values: Vec<f64>,
+}
+
+impl Data {
+    pub fn new(n: usize, d: usize, values: Vec<f64>) -> Self {
+        assert_eq!(values.len(), n * d);
+        Self { n, d, values }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.values[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn rows(&self) -> impl Iterator<Item = &[f64]> {
+        self.values.chunks_exact(self.d)
+    }
+
+    /// Split into contiguous shards of at most `shard_size` rows.
+    pub fn shard_ranges(&self, shard_size: usize) -> Vec<std::ops::Range<usize>> {
+        assert!(shard_size > 0);
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < self.n {
+            let end = (start + shard_size).min(self.n);
+            out.push(start..end);
+            start = end;
+        }
+        out
+    }
+}
+
+/// Specification for a synthetic GMM dataset (§5.1: N ∈ 10³..10⁶,
+/// d ∈ 2..128, K ∈ 4..32).
+#[derive(Debug, Clone)]
+pub struct GmmSpec {
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    /// Mean placement scale: means are drawn from N(0, mean_scale²·I).
+    pub mean_scale: f64,
+    /// Within-cluster scale: covariances have eigenvalues O(cov_scale).
+    pub cov_scale: f64,
+    /// Dirichlet concentration for mixture weights (1 = uniform-ish).
+    pub weight_conc: f64,
+    /// If true, draw anisotropic covariances (random rotations + spectra).
+    pub anisotropic: bool,
+}
+
+impl GmmSpec {
+    /// Defaults matched to the paper's generator: well-separated clusters
+    /// that a correct sampler should recover with NMI close to 1. The mean
+    /// placement scale grows like √K (per dimension-pair) so cluster
+    /// density — and thus difficulty — stays constant as K grows, which is
+    /// what the paper's sweep figures assume.
+    pub fn default_with(n: usize, d: usize, k: usize) -> Self {
+        let density_factor = ((k as f64 / 4.0).max(1.0)).powf(1.0 / d.min(2) as f64);
+        Self {
+            n,
+            d,
+            k,
+            mean_scale: 8.0 * density_factor,
+            cov_scale: 1.0,
+            weight_conc: 5.0,
+            anisotropic: true,
+        }
+    }
+
+    pub fn generate(&self, rng: &mut impl Rng) -> Dataset {
+        assert!(self.k >= 1 && self.d >= 1 && self.n >= self.k);
+        let (means, chols) = self.components(rng);
+        let weights = dirichlet(rng, &vec![self.weight_conc; self.k]);
+        let counts = multinomial(rng, self.n, &weights);
+        let mut values = Vec::with_capacity(self.n * self.d);
+        let mut labels = Vec::with_capacity(self.n);
+        let mut norm = Normal::new();
+        for (k, &ck) in counts.iter().enumerate() {
+            for _ in 0..ck {
+                let z: Vec<f64> = (0..self.d).map(|_| norm.sample(rng)).collect();
+                for i in 0..self.d {
+                    let mut acc = means[k][i];
+                    for j in 0..=i {
+                        acc += chols[k][(i, j)] * z[j];
+                    }
+                    values.push(acc);
+                }
+                labels.push(k);
+            }
+        }
+        // Shuffle rows so shards see mixed clusters (Fisher–Yates).
+        let n = labels.len();
+        for i in (1..n).rev() {
+            let j = rng.next_range(i + 1);
+            labels.swap(i, j);
+            for c in 0..self.d {
+                values.swap(i * self.d + c, j * self.d + c);
+            }
+        }
+        Dataset { points: Data::new(n, self.d, values), labels, true_k: self.k }
+    }
+
+    /// Draw means + covariance Cholesky factors.
+    fn components(&self, rng: &mut impl Rng) -> (Vec<Vec<f64>>, Vec<Matrix>) {
+        let mut means = Vec::with_capacity(self.k);
+        let mut chols = Vec::with_capacity(self.k);
+        for _ in 0..self.k {
+            let mean: Vec<f64> = (0..self.d).map(|_| self.mean_scale * normal(rng)).collect();
+            let cov = if self.anisotropic {
+                random_spd(rng, self.d, self.cov_scale)
+            } else {
+                Matrix::identity(self.d).scaled(self.cov_scale)
+            };
+            let chol = cov.cholesky().expect("generated covariance must be SPD");
+            means.push(mean);
+            chols.push(chol);
+        }
+        (means, chols)
+    }
+}
+
+/// Random SPD matrix with eigenvalues in `[0.3, 1.7]·scale` via B Bᵀ shaping.
+pub fn random_spd(rng: &mut impl Rng, d: usize, scale: f64) -> Matrix {
+    let mut b = Matrix::zeros(d, d);
+    let mut norm = Normal::new();
+    for i in 0..d {
+        for j in 0..d {
+            b[(i, j)] = norm.sample(rng) / (d as f64).sqrt();
+        }
+    }
+    let mut cov = b.mul_transpose();
+    // Shift spectrum away from zero, then scale.
+    for i in 0..d {
+        cov[(i, i)] += 0.3;
+    }
+    cov.scale(scale);
+    cov
+}
+
+/// Specification for a synthetic multinomial mixture (§5.2: d ≥ K).
+#[derive(Debug, Clone)]
+pub struct MultinomialSpec {
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    /// Tokens per document.
+    pub doc_len: usize,
+    /// Sparsity of topics: smaller → more peaked topics, easier separation.
+    pub topic_conc: f64,
+    pub weight_conc: f64,
+}
+
+impl MultinomialSpec {
+    pub fn default_with(n: usize, d: usize, k: usize) -> Self {
+        assert!(d >= k, "the paper's §5.2 sweep keeps d ≥ K");
+        Self { n, d, k, doc_len: 40.max(d / 2), topic_conc: 0.05, weight_conc: 5.0 }
+    }
+
+    pub fn generate(&self, rng: &mut impl Rng) -> Dataset {
+        // Topics: peaked Dirichlet draws, each biased toward a distinct
+        // "anchor" coordinate so components are identifiable (d ≥ K).
+        let mut topics = Vec::with_capacity(self.k);
+        for k in 0..self.k {
+            let mut alpha = vec![self.topic_conc; self.d];
+            alpha[k % self.d] += 2.0;
+            topics.push(dirichlet(rng, &alpha));
+        }
+        let weights = dirichlet(rng, &vec![self.weight_conc; self.k]);
+        let counts = multinomial(rng, self.n, &weights);
+        let mut values = Vec::with_capacity(self.n * self.d);
+        let mut labels = Vec::with_capacity(self.n);
+        for (k, &ck) in counts.iter().enumerate() {
+            for _ in 0..ck {
+                let doc = multinomial(rng, self.doc_len, &topics[k]);
+                values.extend(doc.iter().map(|&c| c as f64));
+                labels.push(k);
+            }
+        }
+        let n = labels.len();
+        for i in (1..n).rev() {
+            let j = rng.next_range(i + 1);
+            labels.swap(i, j);
+            for c in 0..self.d {
+                values.swap(i * self.d + c, j * self.d + c);
+            }
+        }
+        Dataset { points: Data::new(n, self.d, values), labels, true_k: self.k }
+    }
+}
+
+/// Heavy-tailed cluster sizes (for realistic generators): Zipf-ish weights.
+pub(crate) fn zipf_weights(k: usize, s: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (1..=k).map(|i| 1.0 / (i as f64).powf(s)).collect();
+    let total: f64 = w.iter().sum();
+    w.iter_mut().for_each(|x| *x /= total);
+    w
+}
+
+/// Gamma-distributed per-document length (realistic corpora).
+pub(crate) fn gamma_len(rng: &mut impl Rng, mean: f64) -> usize {
+    (gamma(rng, 4.0) * mean / 4.0).round().max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn gmm_shapes_and_labels() {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let ds = GmmSpec::default_with(500, 3, 4).generate(&mut rng);
+        assert_eq!(ds.points.n, 500);
+        assert_eq!(ds.points.d, 3);
+        assert_eq!(ds.labels.len(), 500);
+        assert!(ds.labels.iter().all(|&l| l < 4));
+        assert_eq!(ds.true_k, 4);
+    }
+
+    #[test]
+    fn gmm_clusters_are_separated() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let ds = GmmSpec::default_with(2000, 2, 3).generate(&mut rng);
+        // Per-cluster means should be pairwise far relative to unit spread.
+        let mut means = vec![vec![0.0; 2]; 3];
+        let mut counts = vec![0usize; 3];
+        for (i, &l) in ds.labels.iter().enumerate() {
+            counts[l] += 1;
+            for c in 0..2 {
+                means[l][c] += ds.points.row(i)[c];
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            assert!(c > 0);
+            m.iter_mut().for_each(|v| *v /= c as f64);
+        }
+        let mut min_dist = f64::INFINITY;
+        for a in 0..3 {
+            for b in (a + 1)..3 {
+                let d2: f64 =
+                    (0..2).map(|c| (means[a][c] - means[b][c]).powi(2)).sum::<f64>().sqrt();
+                min_dist = min_dist.min(d2);
+            }
+        }
+        assert!(min_dist > 2.0, "clusters too close: {min_dist}");
+    }
+
+    #[test]
+    fn gmm_deterministic_given_seed() {
+        let ds1 = GmmSpec::default_with(100, 2, 3).generate(&mut Xoshiro256pp::seed_from_u64(9));
+        let ds2 = GmmSpec::default_with(100, 2, 3).generate(&mut Xoshiro256pp::seed_from_u64(9));
+        assert_eq!(ds1.points.values, ds2.points.values);
+        assert_eq!(ds1.labels, ds2.labels);
+    }
+
+    #[test]
+    fn multinomial_counts_sum_to_doc_len() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let spec = MultinomialSpec { doc_len: 30, ..MultinomialSpec::default_with(200, 8, 4) };
+        let ds = spec.generate(&mut rng);
+        for i in 0..ds.points.n {
+            let total: f64 = ds.points.row(i).iter().sum();
+            assert_eq!(total as usize, 30);
+            assert!(ds.points.row(i).iter().all(|&v| v >= 0.0 && v.fract() == 0.0));
+        }
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        let data = Data::new(10, 1, vec![0.0; 10]);
+        let shards = data.shard_ranges(4);
+        assert_eq!(shards, vec![0..4, 4..8, 8..10]);
+        let total: usize = shards.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn zipf_weights_normalized_decreasing() {
+        let w = zipf_weights(5, 1.0);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for i in 1..w.len() {
+            assert!(w[i] < w[i - 1]);
+        }
+    }
+
+    #[test]
+    fn random_spd_is_spd() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for d in [1, 2, 8, 32] {
+            let m = random_spd(&mut rng, d, 1.0);
+            assert!(m.cholesky().is_some(), "d={d}");
+        }
+    }
+}

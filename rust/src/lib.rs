@@ -1,0 +1,56 @@
+//! # dpmm-subclusters
+//!
+//! A Rust + JAX/Pallas (AOT via PJRT) reproduction of
+//! *"CPU- and GPU-based Distributed Sampling in Dirichlet Process Mixtures
+//! for Large-scale Analysis"* (Dinari, Zamir, Fisher III, Freifeld; 2022).
+//!
+//! The crate implements the Chang & Fisher III (NIPS 2013) sub-cluster
+//! split/merge DPMM sampler with three interchangeable execution backends:
+//!
+//! * [`backend::native`] — multi-core CPU shard pool (the paper's Julia
+//!   package analog),
+//! * [`backend::xla`] — AOT-compiled JAX/Pallas shard-step artifacts executed
+//!   through the PJRT C API (the paper's CUDA/C++ package analog),
+//! * [`backend::distributed`] — TCP leader/worker processes that exchange
+//!   only parameters and sufficient statistics (the paper's multi-machine
+//!   Julia mode analog).
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use dpmm::prelude::*;
+//!
+//! let mut rng = Xoshiro256pp::seed_from_u64(42);
+//! let data = GmmSpec::default_with(10_000, 2, 6).generate(&mut rng);
+//! let fit = DpmmFit::new(DpmmParams::gaussian_default(2))
+//!     .iterations(100)
+//!     .seed(7)
+//!     .fit(&data.points)
+//!     .unwrap();
+//! println!("discovered K = {}", fit.num_clusters());
+//! ```
+
+pub mod backend;
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datagen;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod stats;
+pub mod util;
+
+/// Convenience re-exports for the common fitting workflow.
+pub mod prelude {
+    pub use crate::config::{DpmmParams, PriorSpec};
+    pub use crate::coordinator::{DpmmFit, FitResult};
+    pub use crate::datagen::{Dataset, GmmSpec, MultinomialSpec};
+    pub use crate::linalg::Matrix;
+    pub use crate::metrics::nmi;
+    pub use crate::rng::{Rng, Xoshiro256pp};
+}

@@ -1,0 +1,353 @@
+//! Row-major dense `f64` matrix.
+
+use std::ops::{Index, IndexMut};
+
+/// A dense row-major matrix of `f64`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(v: &[f64]) -> Self {
+        let mut m = Self::zeros(v.len(), v.len());
+        for (i, &x) in v.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// General matmul self (r×k) · other (k×c).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        // ikj loop order: stream through `other` rows, accumulate into out row.
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &aik) in a_row.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(k);
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `L · A` where `self` is lower-triangular — exploits sparsity.
+    pub fn matmul_lower(&self, a: &Matrix) -> Matrix {
+        assert_eq!(self.rows, self.cols);
+        assert_eq!(self.cols, a.rows);
+        let mut out = Matrix::zeros(self.rows, a.cols);
+        for i in 0..self.rows {
+            let out_row_range = i * a.cols..(i + 1) * a.cols;
+            for k in 0..=i {
+                let lik = self[(i, k)];
+                if lik == 0.0 {
+                    continue;
+                }
+                let b_row = a.row(k);
+                let out_row = &mut out.data[out_row_range.clone()];
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += lik * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `A · Aᵀ` (always symmetric PSD).
+    pub fn mul_transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.rows);
+        for i in 0..self.rows {
+            for j in 0..=i {
+                let mut acc = 0.0;
+                let (ri, rj) = (self.row(i), self.row(j));
+                for (a, b) in ri.iter().zip(rj) {
+                    acc += a * b;
+                }
+                out[(i, j)] = acc;
+                out[(j, i)] = acc;
+            }
+        }
+        out
+    }
+
+    /// In-place `self += other`.
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// In-place `self -= other`.
+    pub fn sub_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    /// In-place scalar multiply.
+    pub fn scale(&mut self, s: f64) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Out-of-place scalar multiply.
+    pub fn scaled(&self, s: f64) -> Matrix {
+        let mut m = self.clone();
+        m.scale(s);
+        m
+    }
+
+    /// Rank-1 update `self += s · v vᵀ`.
+    pub fn add_outer(&mut self, v: &[f64], s: f64) {
+        assert_eq!(self.rows, v.len());
+        assert_eq!(self.cols, v.len());
+        for i in 0..self.rows {
+            let vi = v[i] * s;
+            let row = self.row_mut(i);
+            for (r, &vj) in row.iter_mut().zip(v) {
+                *r += vi * vj;
+            }
+        }
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Cholesky factorization: returns lower-triangular `L` with `L Lᵀ = self`,
+    /// or `None` if the matrix is not (numerically) positive definite.
+    pub fn cholesky(&self) -> Option<Matrix> {
+        assert_eq!(self.rows, self.cols, "cholesky needs square matrix");
+        let n = self.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        return None;
+                    }
+                    l[(i, i)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Some(l)
+    }
+
+    /// Inverse of a lower-triangular matrix.
+    pub fn lower_inverse(&self) -> Matrix {
+        let n = self.rows;
+        let mut inv = Matrix::zeros(n, n);
+        for i in 0..n {
+            inv[(i, i)] = 1.0 / self[(i, i)];
+            for j in 0..i {
+                let mut acc = 0.0;
+                for k in j..i {
+                    acc += self[(i, k)] * inv[(k, j)];
+                }
+                inv[(i, j)] = -acc / self[(i, i)];
+            }
+        }
+        inv
+    }
+
+    /// SPD inverse via Cholesky. Returns `None` when not SPD.
+    pub fn spd_inverse(&self) -> Option<Matrix> {
+        let l = self.cholesky()?;
+        let linv = l.lower_inverse();
+        // A⁻¹ = L⁻ᵀ L⁻¹
+        Some(linv.transpose().matmul(&linv))
+    }
+
+    /// Frobenius norm of `self − other` (test helper).
+    pub fn frob_dist(&self, other: &Matrix) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Force exact symmetry: self ← (self + selfᵀ)/2.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..i {
+                let m = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = m;
+                self[(j, i)] = m;
+            }
+        }
+    }
+
+    /// Trace.
+    pub fn trace(&self) -> f64 {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).sum()
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Matrix::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn lower_inverse_correct() {
+        let l = Matrix::from_rows(&[&[2.0, 0.0, 0.0], &[1.0, 3.0, 0.0], &[-1.0, 0.5, 1.5]]);
+        let inv = l.lower_inverse();
+        let prod = l.matmul(&inv);
+        assert!(prod.frob_dist(&Matrix::identity(3)) < 1e-12);
+    }
+
+    #[test]
+    fn spd_inverse_roundtrip() {
+        let b = Matrix::from_rows(&[&[2.0, 1.0], &[0.5, 3.0]]);
+        let mut a = b.mul_transpose();
+        a[(0, 0)] += 1.0;
+        a[(1, 1)] += 1.0;
+        let inv = a.spd_inverse().unwrap();
+        assert!(a.matmul(&inv).frob_dist(&Matrix::identity(2)) < 1e-12);
+    }
+
+    #[test]
+    fn add_outer_matches_manual() {
+        let mut m = Matrix::zeros(2, 2);
+        m.add_outer(&[2.0, -1.0], 3.0);
+        assert_eq!(m, Matrix::from_rows(&[&[12.0, -6.0], &[-6.0, 3.0]]));
+    }
+
+    #[test]
+    fn matmul_lower_matches_general() {
+        let l = Matrix::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(l.matmul_lower(&a), l.matmul(&a));
+    }
+
+    #[test]
+    fn matvec_and_trace() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        assert_eq!(a.trace(), 5.0);
+    }
+
+    #[test]
+    fn diag_and_symmetrize() {
+        let mut m = Matrix::diag(&[1.0, 2.0]);
+        m[(0, 1)] = 1.0;
+        m.symmetrize();
+        assert_eq!(m[(1, 0)], 0.5);
+        assert_eq!(m[(0, 1)], 0.5);
+    }
+}

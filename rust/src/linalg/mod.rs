@@ -1,0 +1,134 @@
+//! Dense linear algebra substrate (the paper's Eigen + `logdet` gist).
+//!
+//! Small SPD-centric toolkit sized for mixture components: `d ≤ a few
+//! hundred`. Row-major `f64` storage, Cholesky factorization, triangular
+//! solves, SPD inverse, log-determinant, and the matmul flavors the
+//! assignment hot path needs.
+
+mod matrix;
+
+pub use matrix::Matrix;
+
+/// log(det(Σ)) of an SPD matrix via Cholesky: 2·Σ log Lᵢᵢ.
+pub fn spd_logdet(m: &Matrix) -> Option<f64> {
+    m.cholesky().map(|l| 2.0 * (0..m.rows()).map(|i| l[(i, i)].ln()).sum::<f64>())
+}
+
+/// Solve L x = b for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut acc = b[i];
+        for j in 0..i {
+            acc -= l[(i, j)] * x[j];
+        }
+        x[i] = acc / l[(i, i)];
+    }
+    x
+}
+
+/// Solve Lᵀ x = b for lower-triangular L (back substitution).
+pub fn solve_lower_transpose(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut acc = b[i];
+        for j in i + 1..n {
+            acc -= l[(j, i)] * x[j];
+        }
+        x[i] = acc / l[(i, i)];
+    }
+    x
+}
+
+/// Solve (L Lᵀ) x = b given the Cholesky factor L.
+pub fn chol_solve(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    solve_lower_transpose(l, &solve_lower(l, b))
+}
+
+/// Mahalanobis squared distance (x−μ)ᵀ Σ⁻¹ (x−μ) given L = chol(Σ).
+pub fn mahalanobis_sq(l: &Matrix, x: &[f64], mu: &[f64]) -> f64 {
+    let d = x.len();
+    let mut diff = vec![0.0; d];
+    for i in 0..d {
+        diff[i] = x[i] - mu[i];
+    }
+    let y = solve_lower(l, &diff);
+    y.iter().map(|v| v * v).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd3() -> Matrix {
+        // A = Bᵀ B + I for a fixed B → SPD.
+        let b = Matrix::from_rows(&[
+            &[1.0, 2.0, 0.5],
+            &[0.0, 1.5, -1.0],
+            &[2.0, 0.0, 1.0],
+        ]);
+        let mut a = b.transpose().matmul(&b);
+        for i in 0..3 {
+            a[(i, i)] += 1.0;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd3();
+        let l = a.cholesky().unwrap();
+        let back = l.mul_transpose();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((back[(i, j)] - a[(i, j)]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn logdet_matches_2x2_closed_form() {
+        let mut m = Matrix::zeros(2, 2);
+        m[(0, 0)] = 3.0;
+        m[(0, 1)] = 1.0;
+        m[(1, 0)] = 1.0;
+        m[(1, 1)] = 2.0;
+        let det: f64 = 3.0 * 2.0 - 1.0;
+        assert!((spd_logdet(&m).unwrap() - det.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        let a = spd3();
+        let l = a.cholesky().unwrap();
+        let b = [1.0, -2.0, 0.5];
+        let x = chol_solve(&l, &b);
+        // Check A x = b
+        for i in 0..3 {
+            let mut acc = 0.0;
+            for j in 0..3 {
+                acc += a[(i, j)] * x[j];
+            }
+            assert!((acc - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn mahalanobis_identity_cov_is_euclidean() {
+        let l = Matrix::identity(3).cholesky().unwrap();
+        let x = [1.0, 2.0, 3.0];
+        let mu = [0.0, 0.0, 1.0];
+        assert!((mahalanobis_sq(&l, &x, &mu) - (1.0 + 4.0 + 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let mut m = Matrix::identity(2);
+        m[(0, 0)] = -1.0;
+        assert!(m.cholesky().is_none());
+    }
+}

@@ -1,0 +1,249 @@
+//! `dpmm` — the single entry point (the role the paper's Python wrapper
+//! plays): fit DPMMs with any backend, generate datasets, run as a
+//! distributed worker, inspect artifacts.
+//!
+//! ```text
+//! dpmm fit --data=points.npy [--params_path=params.json] [--backend=native|xla|distributed]
+//!          [--iterations=100] [--alpha=10] [--seed=0] [--result_path=result.json]
+//!          [--labels=truth.npy] [--workers=host:port,...] [--kernel=auto|direct|matmul]
+//!          [--prior_type=Gaussian|Multinomial] [--verbose]
+//! dpmm generate --kind=gmm|mnmm|mnist|fashion|imagenet|20news --n=100000 [--d=2] [--k=10]
+//!          --out=points.npy [--labels_out=truth.npy] [--seed=0]
+//! dpmm worker --listen=0.0.0.0:7878
+//! dpmm info [--artifacts=artifacts]
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use dpmm::backend::distributed::worker;
+use dpmm::cli::Args;
+use dpmm::config::{BackendChoice, DpmmParams};
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::{self, Data, Dataset, GmmSpec, MultinomialSpec};
+use dpmm::metrics;
+use dpmm::rng::Xoshiro256pp;
+use dpmm::util::{json, npy};
+
+const FLAGS: &[&str] = &["verbose", "help", "version"];
+
+fn main() {
+    let args = match Args::from_env(FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("version") {
+        println!("dpmm-subclusters {}", env!("CARGO_PKG_VERSION"));
+        return;
+    }
+    if args.flag("help") || args.subcommand.is_none() {
+        print_help();
+        return;
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("fit") => cmd_fit(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => Err(anyhow!("unknown subcommand '{other}' (fit|generate|worker|info)")),
+        None => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "dpmm — distributed sub-cluster split/merge DPMM sampling\n\
+         \n\
+         subcommands:\n\
+         \x20 fit       fit a DPMM to an .npy data matrix\n\
+         \x20 generate  create synthetic / simulated-real datasets\n\
+         \x20 worker    run a distributed worker (leader connects over TCP)\n\
+         \x20 info      show PJRT platform + AOT artifact manifest\n\
+         \n\
+         see the doc comment in rust/src/main.rs for the full option list"
+    );
+}
+
+fn load_data(path: &str) -> Result<Data> {
+    let (n, d, values) = npy::read_matrix_f64(path)?;
+    Ok(Data::new(n, d, values))
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let data_path = args
+        .get("data")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow!("fit needs --data=<points.npy>"))?;
+    let data = load_data(&data_path)?;
+
+    // Params: JSON file if given, else defaults from data shape + flags.
+    let mut params = match args.get("params_path") {
+        Some(p) => {
+            let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+            DpmmParams::from_json(&text)?
+        }
+        None => match args.get_or("prior_type", "Gaussian").to_ascii_lowercase().as_str() {
+            "multinomial" => DpmmParams::multinomial_default(data.d),
+            _ => DpmmParams::gaussian_default(data.d),
+        },
+    };
+    if params.prior.dim() != data.d {
+        bail!("prior dimension {} != data dimension {}", params.prior.dim(), data.d);
+    }
+    if let Some(a) = args.get_f64("alpha")? {
+        params.alpha = a;
+    }
+    if let Some(i) = args.get_usize("iterations")? {
+        params.iterations = i;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        params.seed = s;
+    }
+    if let Some(b) = args.get_usize("burn_out")? {
+        params.burnout = b;
+    }
+    params.verbose = params.verbose || args.flag("verbose");
+    if let Some(cp) = args.get("checkpoint_path") {
+        params.checkpoint_path = Some(cp.to_string());
+    }
+    if let Some(ce) = args.get_usize("checkpoint_every")? {
+        params.checkpoint_every = ce;
+    }
+    // Backend override.
+    match args.get("backend") {
+        None => {}
+        Some("native") => {
+            params.backend = BackendChoice::Native {
+                threads: args.get_usize("threads")?.unwrap_or(0),
+                shard_size: args.get_usize("shard_size")?.unwrap_or(16 * 1024),
+            };
+        }
+        Some("xla") => {
+            params.backend = BackendChoice::Xla {
+                artifact_dir: args.get_or("artifacts", "artifacts").to_string(),
+                shard_size: args.get_usize("shard_size")?.unwrap_or(4096),
+                kernel: args.get_or("kernel", "auto").to_string(),
+                crossover: args.get_usize("crossover")?.unwrap_or(640_000),
+            };
+        }
+        Some("distributed") => {
+            let workers = args.get_list("workers");
+            if workers.is_empty() {
+                bail!("--backend=distributed needs --workers=host:port,host:port,...");
+            }
+            params.backend = BackendChoice::Distributed {
+                workers,
+                worker_threads: args.get_usize("worker_threads")?.unwrap_or(1),
+            };
+        }
+        Some(other) => bail!("unknown backend '{other}'"),
+    }
+
+    let truth: Option<Vec<usize>> = match args.get("labels") {
+        Some(p) => Some(npy::read(p)?.to_labels()?),
+        None => None,
+    };
+
+    eprintln!(
+        "fitting DPMM: N={} d={} alpha={} iterations={} backend={:?}",
+        data.n, data.d, params.alpha, params.iterations, params.backend
+    );
+    let t0 = std::time::Instant::now();
+    let fit = DpmmFit::new(params).fit(&data)?;
+    let secs = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "done in {secs:.2}s: K={} ({} iters, {})",
+        fit.num_clusters(),
+        fit.history.len(),
+        fit.timer.summary()
+    );
+    if let Some(t) = &truth {
+        eprintln!(
+            "NMI = {:.4}  ARI = {:.4}",
+            metrics::nmi(t, &fit.labels),
+            metrics::ari(t, &fit.labels)
+        );
+    }
+    let result_json = fit.to_json(truth.as_deref());
+    match args.get("result_path") {
+        Some(p) => {
+            std::fs::write(p, json::to_string_pretty(&result_json))?;
+            eprintln!("wrote {p}");
+        }
+        None => println!("{}", json::to_string(&result_json)),
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let kind = args.get_or("kind", "gmm").to_string();
+    let n = args.get_usize("n")?.unwrap_or(100_000);
+    let seed = args.get_u64("seed")?.unwrap_or(0);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let ds: Dataset = match kind.as_str() {
+        "gmm" => {
+            let d = args.get_usize("d")?.unwrap_or(2);
+            let k = args.get_usize("k")?.unwrap_or(10);
+            GmmSpec::default_with(n, d, k).generate(&mut rng)
+        }
+        "mnmm" => {
+            let d = args.get_usize("d")?.unwrap_or(64);
+            let k = args.get_usize("k")?.unwrap_or(16);
+            MultinomialSpec::default_with(n, d, k).generate(&mut rng)
+        }
+        "mnist" => datagen::mnist_like(&mut rng, n),
+        "fashion" => datagen::fashion_like(&mut rng, n),
+        "imagenet" => datagen::imagenet100_like(&mut rng, n),
+        "20news" => {
+            let d = args.get_usize("d")?.unwrap_or(2000);
+            datagen::newsgroups_like(&mut rng, n, d)
+        }
+        other => bail!("unknown kind '{other}' (gmm|mnmm|mnist|fashion|imagenet|20news)"),
+    };
+    let out = args.require("out")?;
+    npy::write_matrix_f64(out, ds.points.n, ds.points.d, &ds.points.values)?;
+    eprintln!("wrote {} ({} x {}, true K = {})", out, ds.points.n, ds.points.d, ds.true_k);
+    if let Some(lp) = args.get("labels_out") {
+        npy::write(
+            lp,
+            &npy::NpyArray {
+                shape: vec![ds.labels.len()],
+                data: npy::NpyData::I64(ds.labels.iter().map(|&l| l as i64).collect()),
+            },
+        )?;
+        eprintln!("wrote {lp}");
+    }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let listen = args.get_or("listen", "127.0.0.1:7878");
+    worker::serve(listen)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    match dpmm::runtime::XlaRuntime::new(dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform_name());
+            println!("artifact manifest ({}):", dir);
+            for e in &rt.manifest().entries {
+                println!(
+                    "  {:<36} likelihood={:<12} kernel={:<7} d={:<4} K={:<3} n={}",
+                    e.name, e.likelihood, e.kernel, e.d, e.k, e.n
+                );
+            }
+        }
+        Err(e) => {
+            println!("no artifacts at '{dir}': {e}");
+            println!("run `make artifacts` to build them");
+        }
+    }
+    Ok(())
+}

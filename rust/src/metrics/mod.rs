@@ -1,0 +1,205 @@
+//! Clustering evaluation metrics (the paper's MIToolbox / Clustering.jl
+//! substrate): NMI (the paper's headline accuracy metric), ARI, purity.
+
+use std::collections::HashMap;
+
+/// Contingency table between two labelings (dense over observed labels).
+#[derive(Debug)]
+pub struct Contingency {
+    pub table: Vec<Vec<usize>>, // [true][pred]
+    pub row_sums: Vec<usize>,
+    pub col_sums: Vec<usize>,
+    pub n: usize,
+}
+
+/// Build the contingency table. Labels can be arbitrary usizes.
+pub fn contingency(truth: &[usize], pred: &[usize]) -> Contingency {
+    assert_eq!(truth.len(), pred.len(), "label vectors must align");
+    let mut tmap: HashMap<usize, usize> = HashMap::new();
+    let mut pmap: HashMap<usize, usize> = HashMap::new();
+    for &t in truth {
+        let next = tmap.len();
+        tmap.entry(t).or_insert(next);
+    }
+    for &p in pred {
+        let next = pmap.len();
+        pmap.entry(p).or_insert(next);
+    }
+    let (r, c) = (tmap.len(), pmap.len());
+    let mut table = vec![vec![0usize; c]; r];
+    for (&t, &p) in truth.iter().zip(pred) {
+        table[tmap[&t]][pmap[&p]] += 1;
+    }
+    let row_sums: Vec<usize> = table.iter().map(|row| row.iter().sum()).collect();
+    let mut col_sums = vec![0usize; c];
+    for row in &table {
+        for (cs, &v) in col_sums.iter_mut().zip(row) {
+            *cs += v;
+        }
+    }
+    Contingency { table, row_sums, col_sums, n: truth.len() }
+}
+
+fn entropy(counts: &[usize], n: usize) -> f64 {
+    let n = n as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+/// Mutual information of the contingency table, in nats.
+pub fn mutual_information(ct: &Contingency) -> f64 {
+    let n = ct.n as f64;
+    let mut mi = 0.0;
+    for (i, row) in ct.table.iter().enumerate() {
+        for (j, &nij) in row.iter().enumerate() {
+            if nij == 0 {
+                continue;
+            }
+            let pij = nij as f64 / n;
+            let pi = ct.row_sums[i] as f64 / n;
+            let pj = ct.col_sums[j] as f64 / n;
+            mi += pij * (pij / (pi * pj)).ln();
+        }
+    }
+    mi.max(0.0)
+}
+
+/// Normalized Mutual Information with sqrt normalization
+/// (`NMI = MI / sqrt(H(T)·H(P))`, sklearn's default `average_method` before
+/// 0.22 and MIToolbox's convention — what the paper reports).
+pub fn nmi(truth: &[usize], pred: &[usize]) -> f64 {
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let ct = contingency(truth, pred);
+    let ht = entropy(&ct.row_sums, ct.n);
+    let hp = entropy(&ct.col_sums, ct.n);
+    if ht == 0.0 && hp == 0.0 {
+        return 1.0; // both degenerate single-cluster labelings
+    }
+    if ht == 0.0 || hp == 0.0 {
+        return 0.0;
+    }
+    (mutual_information(&ct) / (ht * hp).sqrt()).clamp(0.0, 1.0)
+}
+
+/// Adjusted Rand Index.
+pub fn ari(truth: &[usize], pred: &[usize]) -> f64 {
+    let ct = contingency(truth, pred);
+    fn comb2(x: usize) -> f64 {
+        let x = x as f64;
+        x * (x - 1.0) / 2.0
+    }
+    let sum_ij: f64 = ct.table.iter().flatten().map(|&v| comb2(v)).sum();
+    let sum_i: f64 = ct.row_sums.iter().map(|&v| comb2(v)).sum();
+    let sum_j: f64 = ct.col_sums.iter().map(|&v| comb2(v)).sum();
+    let total = comb2(ct.n);
+    if total == 0.0 {
+        return 1.0;
+    }
+    let expected = sum_i * sum_j / total;
+    let max_index = 0.5 * (sum_i + sum_j);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Cluster purity: fraction of points whose predicted cluster's majority
+/// true label matches their own.
+pub fn purity(truth: &[usize], pred: &[usize]) -> f64 {
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let ct = contingency(truth, pred);
+    let mut correct = 0usize;
+    for j in 0..ct.col_sums.len() {
+        correct += ct.table.iter().map(|row| row[j]).max().unwrap_or(0);
+    }
+    correct as f64 / ct.n as f64
+}
+
+/// Number of distinct labels.
+pub fn num_clusters(labels: &[usize]) -> usize {
+    let mut set: Vec<usize> = labels.to_vec();
+    set.sort_unstable();
+    set.dedup();
+    set.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_one() {
+        let t = vec![0, 0, 1, 1, 2, 2];
+        assert!((nmi(&t, &t) - 1.0).abs() < 1e-12);
+        assert!((ari(&t, &t) - 1.0).abs() < 1e-12);
+        assert_eq!(purity(&t, &t), 1.0);
+    }
+
+    #[test]
+    fn permuted_labels_still_perfect() {
+        let t = vec![0, 0, 1, 1, 2, 2];
+        let p = vec![5, 5, 9, 9, 1, 1];
+        assert!((nmi(&t, &p) - 1.0).abs() < 1e-12);
+        assert!((ari(&t, &p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_labels_near_zero() {
+        // truth alternates in blocks, pred alternates within blocks → MI = 0
+        let t = vec![0, 0, 1, 1, 0, 0, 1, 1];
+        let p = vec![0, 1, 0, 1, 0, 1, 0, 1];
+        assert!(nmi(&t, &p) < 1e-12);
+        // ARI is zero only in expectation over random labelings; for this
+        // particular balanced table it is slightly negative.
+        assert!(ari(&t, &p) <= 0.0 && ari(&t, &p) > -0.5);
+    }
+
+    #[test]
+    fn single_cluster_pred_zero_nmi() {
+        let t = vec![0, 0, 1, 1];
+        let p = vec![0, 0, 0, 0];
+        assert_eq!(nmi(&t, &p), 0.0);
+    }
+
+    #[test]
+    fn known_value_half_split() {
+        // Classic example: t = [0,0,1,1], p = [0,1,0,1] is independence;
+        // t = [0,0,1,1], p = [0,0,1,2] splits one cluster.
+        let t = vec![0, 0, 1, 1];
+        let p = vec![0, 0, 1, 2];
+        let v = nmi(&t, &p);
+        assert!(v > 0.7 && v < 1.0, "v={v}");
+        assert_eq!(purity(&t, &p), 1.0);
+    }
+
+    #[test]
+    fn nmi_symmetric() {
+        let t = vec![0, 1, 1, 2, 2, 2, 0, 1];
+        let p = vec![1, 1, 0, 2, 0, 2, 0, 1];
+        assert!((nmi(&t, &p) - nmi(&p, &t)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_penalizes_chance() {
+        // ARI of a random-ish labeling should be near 0, possibly negative.
+        let t: Vec<usize> = (0..100).map(|i| i % 4).collect();
+        let p: Vec<usize> = (0..100).map(|i| (i * 7 + 3) % 5).collect();
+        assert!(ari(&t, &p).abs() < 0.12);
+    }
+
+    #[test]
+    fn num_clusters_counts_unique() {
+        assert_eq!(num_clusters(&[3, 3, 7, 0]), 3);
+        assert_eq!(num_clusters(&[]), 0);
+    }
+}

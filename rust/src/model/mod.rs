@@ -1,0 +1,232 @@
+//! Sub-cluster-augmented DPMM state (the paper's §2.3 augmented space).
+//!
+//! Every cluster `C_k` carries two sub-clusters `C̄_kl`, `C̄_kr` with their own
+//! parameters and weights; the sub-clusters are what make split proposals
+//! informed (and therefore frequently accepted). This module owns the
+//! coordinator-side state: per-cluster sufficient statistics, sampled
+//! parameters, and mixture weights. Per-point labels live with the backends
+//! (shards / workers / device buffers) — the coordinator never holds them,
+//! exactly like the paper's distributed Julia package.
+
+use crate::stats::{Params, Prior, Stats};
+
+/// Index of the "left" sub-cluster.
+pub const LEFT: usize = 0;
+/// Index of the "right" sub-cluster.
+pub const RIGHT: usize = 1;
+
+/// One mixture component with its two auxiliary sub-components.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    /// Aggregated sufficient statistics of C_k.
+    pub stats: Stats,
+    /// Sufficient statistics of C̄_kl, C̄_kr.
+    pub sub_stats: [Stats; 2],
+    /// Sampled component parameters θ_k.
+    pub params: Params,
+    /// Sampled sub-component parameters θ̄_kl, θ̄_kr.
+    pub sub_params: [Params; 2],
+    /// Mixture weight π_k (normalized over instantiated clusters).
+    pub weight: f64,
+    /// Sub-cluster weights (π̄_kl, π̄_kr), normalized within the cluster.
+    pub sub_weights: [f64; 2],
+    /// Iterations since this cluster was created by a split/merge/init.
+    /// Fresh clusters need one sweep before their sub-clusters are
+    /// meaningful split candidates.
+    pub age: usize,
+    /// Iterations since the sub-cluster competition was last (re)seeded;
+    /// drives the periodic diverse restarts that keep the auxiliary chain
+    /// from freezing in a bad bipartition (see [`crate::sampler`]).
+    pub since_restart: usize,
+}
+
+impl Cluster {
+    /// Number of points currently assigned.
+    pub fn count(&self) -> f64 {
+        self.stats.count()
+    }
+
+    pub fn sub_count(&self, h: usize) -> f64 {
+        self.sub_stats[h].count()
+    }
+}
+
+/// The full coordinator-side model state.
+#[derive(Debug, Clone)]
+pub struct DpmmState {
+    /// DP concentration parameter α.
+    pub alpha: f64,
+    /// Conjugate prior λ over component parameters.
+    pub prior: Prior,
+    pub clusters: Vec<Cluster>,
+    /// Total number of observations (over all shards).
+    pub n_total: usize,
+}
+
+impl DpmmState {
+    /// Fresh state with `k_init` clusters whose parameters are prior draws;
+    /// statistics start empty and are filled by the first sweep.
+    pub fn new(
+        alpha: f64,
+        prior: Prior,
+        k_init: usize,
+        n_total: usize,
+        rng: &mut impl crate::rng::Rng,
+    ) -> Self {
+        assert!(alpha > 0.0);
+        assert!(k_init >= 1);
+        let clusters = (0..k_init)
+            .map(|_| {
+                let empty = prior.empty_stats();
+                let params = prior.sample_params(&empty, rng);
+                let sub_params =
+                    [prior.sample_params(&empty, rng), prior.sample_params(&empty, rng)];
+                Cluster {
+                    stats: empty.clone(),
+                    sub_stats: [empty.clone(), empty.clone()],
+                    params,
+                    sub_params,
+                    weight: 1.0 / k_init as f64,
+                    sub_weights: [0.5, 0.5],
+                    age: 0,
+                    since_restart: 0,
+                }
+            })
+            .collect();
+        Self { alpha, prior, clusters, n_total }
+    }
+
+    pub fn k(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Cluster counts N_1..N_K.
+    pub fn counts(&self) -> Vec<f64> {
+        self.clusters.iter().map(Cluster::count).collect()
+    }
+
+    /// Replace every cluster's statistics with freshly aggregated ones.
+    /// `stats[k]` / `sub_stats[k]` must align with `self.clusters`.
+    pub fn set_stats(&mut self, stats: Vec<Stats>, sub_stats: Vec<[Stats; 2]>) {
+        assert_eq!(stats.len(), self.k());
+        assert_eq!(sub_stats.len(), self.k());
+        for ((c, s), ss) in self.clusters.iter_mut().zip(stats).zip(sub_stats) {
+            c.stats = s;
+            c.sub_stats = ss;
+        }
+    }
+
+    /// Joint log posterior proxy: Σ_k log f(C_k; λ) + log DP partition prior
+    /// (up to constants) — the quantity the sampler should (noisily) ascend.
+    pub fn log_posterior_proxy(&self) -> f64 {
+        use crate::stats::special::lgamma;
+        let mut acc = self.k() as f64 * self.alpha.ln();
+        for c in &self.clusters {
+            let n = c.count();
+            if n > 0.0 {
+                acc += lgamma(n) + self.prior.log_marginal(&c.stats);
+            }
+        }
+        acc
+    }
+
+    /// Indices of clusters with no assigned points (candidates for removal).
+    pub fn empty_clusters(&self) -> Vec<usize> {
+        self.clusters
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.count() == 0.0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Remove the listed clusters and return the old→new index map
+    /// (`None` for removed entries). Backends use the map to rewrite labels.
+    pub fn remove_clusters(&mut self, remove: &[usize]) -> Vec<Option<usize>> {
+        let k = self.k();
+        let mut keep = vec![true; k];
+        for &i in remove {
+            keep[i] = false;
+        }
+        let mut map = vec![None; k];
+        let mut next = 0;
+        for (i, &kept) in keep.iter().enumerate() {
+            if kept {
+                map[i] = Some(next);
+                next += 1;
+            }
+        }
+        let mut idx = 0;
+        self.clusters.retain(|_| {
+            let r = keep[idx];
+            idx += 1;
+            r
+        });
+        map
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::stats::NiwPrior;
+
+    fn state(k: usize) -> DpmmState {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        DpmmState::new(1.0, Prior::Niw(NiwPrior::weak(2)), k, 100, &mut rng)
+    }
+
+    #[test]
+    fn new_state_shape() {
+        let s = state(3);
+        assert_eq!(s.k(), 3);
+        assert_eq!(s.counts(), vec![0.0, 0.0, 0.0]);
+        assert_eq!(s.empty_clusters(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn remove_clusters_builds_correct_map() {
+        let mut s = state(4);
+        let map = s.remove_clusters(&[1, 3]);
+        assert_eq!(s.k(), 2);
+        assert_eq!(map, vec![Some(0), None, Some(1), None]);
+    }
+
+    #[test]
+    fn remove_none_is_identity_map() {
+        let mut s = state(2);
+        let map = s.remove_clusters(&[]);
+        assert_eq!(map, vec![Some(0), Some(1)]);
+        assert_eq!(s.k(), 2);
+    }
+
+    #[test]
+    fn set_stats_replaces() {
+        let mut s = state(1);
+        let mut st = s.prior.empty_stats();
+        st.add(&[1.0, 2.0]);
+        s.set_stats(vec![st.clone()], vec![[st.clone(), s.prior.empty_stats()]]);
+        assert_eq!(s.clusters[0].count(), 1.0);
+        assert_eq!(s.clusters[0].sub_count(LEFT), 1.0);
+        assert_eq!(s.clusters[0].sub_count(RIGHT), 0.0);
+    }
+
+    #[test]
+    fn log_posterior_proxy_finite_and_data_sensitive() {
+        let mut s = state(1);
+        let mut st = s.prior.empty_stats();
+        for i in 0..10 {
+            st.add(&[i as f64 * 0.01, 0.0]);
+        }
+        s.set_stats(vec![st], vec![[s.prior.empty_stats(), s.prior.empty_stats()]]);
+        let lp_tight = s.log_posterior_proxy();
+        assert!(lp_tight.is_finite());
+        let mut st2 = s.prior.empty_stats();
+        for i in 0..10 {
+            st2.add(&[i as f64 * 10.0, -(i as f64) * 5.0]);
+        }
+        s.set_stats(vec![st2], vec![[s.prior.empty_stats(), s.prior.empty_stats()]]);
+        assert!(s.log_posterior_proxy() < lp_tight);
+    }
+}

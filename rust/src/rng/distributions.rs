@@ -1,0 +1,443 @@
+//! Distribution samplers over any [`Rng`].
+//!
+//! Everything the sub-cluster sampler draws at the coordinator level:
+//! Dirichlet weights (Eq. 14–15 of the paper), NIW parameters (normal +
+//! inverse-Wishart via the Bartlett decomposition), Dirichlet-multinomial
+//! parameters, plus the categorical / Gumbel machinery used for label draws.
+
+use super::Rng;
+use crate::linalg::Matrix;
+
+/// Standard normal via the polar (Marsaglia) method with a cached spare.
+#[derive(Debug, Default, Clone)]
+pub struct Normal {
+    spare: Option<f64>,
+}
+
+impl Normal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn sample(&mut self, rng: &mut impl Rng) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * rng.next_f64() - 1.0;
+            let v = 2.0 * rng.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+}
+
+/// One standard-normal draw (convenience, no spare caching).
+pub fn normal(rng: &mut impl Rng) -> f64 {
+    Normal::new().sample(rng)
+}
+
+/// Gamma(shape, scale=1) via Marsaglia–Tsang; boosts shape < 1.
+pub fn gamma(rng: &mut impl Rng, shape: f64) -> f64 {
+    assert!(shape > 0.0, "gamma shape must be positive, got {shape}");
+    if shape < 1.0 {
+        // Boost: G(a) = G(a+1) * U^{1/a}
+        let u = rng.next_f64_open();
+        return gamma(rng, shape + 1.0) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    let mut norm = Normal::new();
+    loop {
+        let x = norm.sample(rng);
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v = v * v * v;
+        let u = rng.next_f64_open();
+        if u < 1.0 - 0.0331 * x * x * x * x {
+            return d * v;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// Beta(a, b) from two gammas.
+pub fn beta(rng: &mut impl Rng, a: f64, b: f64) -> f64 {
+    let x = gamma(rng, a);
+    let y = gamma(rng, b);
+    x / (x + y)
+}
+
+/// Dirichlet(alphas) — the Eq. 14/15 weight draws.
+pub fn dirichlet(rng: &mut impl Rng, alphas: &[f64]) -> Vec<f64> {
+    assert!(!alphas.is_empty());
+    let mut out: Vec<f64> = alphas.iter().map(|&a| gamma(rng, a)).collect();
+    let sum: f64 = out.iter().sum();
+    if sum <= 0.0 {
+        // All-tiny shapes can underflow; fall back to uniform over support.
+        let u = 1.0 / out.len() as f64;
+        out.iter_mut().for_each(|x| *x = u);
+    } else {
+        out.iter_mut().for_each(|x| *x /= sum);
+    }
+    out
+}
+
+/// Categorical draw from unnormalized non-negative weights (linear scan).
+pub fn categorical(rng: &mut impl Rng, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "categorical weights must have positive mass");
+    let mut t = rng.next_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        t -= w;
+        if t < 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+/// Categorical draw from *log*-weights via the Gumbel-argmax trick — the
+/// same mechanism the AOT shard-step artifact uses, so the native and xla
+/// backends sample identically given the same uniforms.
+pub fn categorical_log(rng: &mut impl Rng, log_weights: &[f64]) -> usize {
+    let mut best = f64::NEG_INFINITY;
+    let mut arg = 0;
+    for (i, &lw) in log_weights.iter().enumerate() {
+        let g = -(-rng.next_f64_open().ln()).ln();
+        let v = lw + g;
+        if v > best {
+            best = v;
+            arg = i;
+        }
+    }
+    arg
+}
+
+/// Multinomial(n, p) counts via conditional binomial decomposition.
+pub fn multinomial(rng: &mut impl Rng, n: usize, probs: &[f64]) -> Vec<usize> {
+    let mut out = vec![0usize; probs.len()];
+    let mut remaining = n;
+    let mut rest: f64 = probs.iter().sum();
+    for (i, &p) in probs.iter().enumerate() {
+        if remaining == 0 {
+            break;
+        }
+        if i + 1 == probs.len() {
+            out[i] = remaining;
+            break;
+        }
+        let q = (p / rest).clamp(0.0, 1.0);
+        let draw = binomial(rng, remaining, q);
+        out[i] = draw;
+        remaining -= draw;
+        rest -= p;
+        if rest <= 0.0 {
+            out[i] += remaining;
+            remaining = 0;
+        }
+    }
+    out
+}
+
+/// Binomial(n, p) — inversion for small n·p, normal-ish loop otherwise.
+pub fn binomial(rng: &mut impl Rng, n: usize, p: f64) -> usize {
+    if p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    // BTPE would be ideal; for our uses (n ≤ shard size, called O(K) times)
+    // a waiting-time / inversion hybrid is fine.
+    if n < 64 {
+        let mut c = 0;
+        for _ in 0..n {
+            if rng.next_f64() < p {
+                c += 1;
+            }
+        }
+        return c;
+    }
+    // First-waiting-time (geometric) method: O(n·p) expected.
+    if n as f64 * p < 32.0 {
+        let lq = (1.0 - p).ln();
+        let mut sum = 0.0f64;
+        let mut x = 0usize;
+        loop {
+            sum += rng.next_f64_open().ln() / ((n - x) as f64);
+            if sum < lq || x >= n {
+                return x;
+            }
+            x += 1;
+        }
+    }
+    // Recursive split via beta median trick.
+    let a = 1 + n / 2;
+    let b = n + 1 - a;
+    let x = beta(rng, a as f64, b as f64);
+    if x >= p {
+        binomial(rng, a - 1, p / x)
+    } else {
+        a + binomial(rng, b - 1, (p - x) / (1.0 - x))
+    }
+}
+
+/// Multivariate normal N(mean, cov) given the lower Cholesky factor of cov.
+pub fn mvn_chol(rng: &mut impl Rng, mean: &[f64], chol_lower: &Matrix) -> Vec<f64> {
+    let d = mean.len();
+    assert_eq!(chol_lower.rows(), d);
+    let mut norm = Normal::new();
+    let z: Vec<f64> = (0..d).map(|_| norm.sample(rng)).collect();
+    let mut out = mean.to_vec();
+    for i in 0..d {
+        let mut acc = 0.0;
+        for j in 0..=i {
+            acc += chol_lower[(i, j)] * z[j];
+        }
+        out[i] += acc;
+    }
+    out
+}
+
+/// Wishart(ν, scale) draw via the Bartlett decomposition.
+///
+/// `chol_scale` is the lower Cholesky factor of the scale matrix V; returns
+/// a sample W ~ Wishart_d(ν, V) (so E[W] = ν·V).
+pub fn wishart_chol(rng: &mut impl Rng, nu: f64, chol_scale: &Matrix) -> Matrix {
+    let d = chol_scale.rows();
+    assert!(nu > (d - 1) as f64, "wishart dof must exceed d-1");
+    let mut a = Matrix::zeros(d, d);
+    let mut norm = Normal::new();
+    for i in 0..d {
+        // chi-square with (nu - i) dof = 2 * gamma((nu - i)/2)
+        a[(i, i)] = (2.0 * gamma(rng, (nu - i as f64) / 2.0)).sqrt();
+        for j in 0..i {
+            a[(i, j)] = norm.sample(rng);
+        }
+    }
+    // W = L A Aᵀ Lᵀ where L = chol_scale
+    let la = chol_scale.matmul_lower(&a);
+    la.mul_transpose()
+}
+
+/// Inverse-Wishart(ν, Ψ) draw: sample W ~ Wishart(ν, Ψ⁻¹), return W⁻¹.
+///
+/// `chol_psi_inv` is the lower Cholesky factor of Ψ⁻¹.
+pub fn inverse_wishart_chol(rng: &mut impl Rng, nu: f64, chol_psi_inv: &Matrix) -> Matrix {
+    let w = wishart_chol(rng, nu, chol_psi_inv);
+    w.spd_inverse().expect("wishart draw should be SPD")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(1234)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = rng();
+        let mut norm = Normal::new();
+        let n = 200_000;
+        let (mut s, mut s2, mut s3) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = norm.sample(&mut r);
+            s += x;
+            s2 += x * x;
+            s3 += x * x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        let skew = s3 / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+        assert!(skew.abs() < 0.03, "skew={skew}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = rng();
+        for &shape in &[0.3, 1.0, 2.5, 10.0] {
+            let n = 100_000;
+            let (mut s, mut s2) = (0.0, 0.0);
+            for _ in 0..n {
+                let x = gamma(&mut r, shape);
+                assert!(x > 0.0);
+                s += x;
+                s2 += x * x;
+            }
+            let mean = s / n as f64;
+            let var = s2 / n as f64 - mean * mean;
+            assert!((mean - shape).abs() < 0.06 * shape.max(1.0), "shape={shape} mean={mean}");
+            assert!((var - shape).abs() < 0.12 * shape.max(1.0), "shape={shape} var={var}");
+        }
+    }
+
+    #[test]
+    fn beta_moments() {
+        let mut r = rng();
+        let (a, b) = (2.0, 5.0);
+        let n = 100_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            let x = beta(&mut r, a, b);
+            assert!((0.0..=1.0).contains(&x));
+            s += x;
+        }
+        assert!((s / n as f64 - a / (a + b)).abs() < 0.01);
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_has_right_mean() {
+        let mut r = rng();
+        let alphas = [1.0, 2.0, 7.0];
+        let mut means = [0.0; 3];
+        let reps = 50_000;
+        for _ in 0..reps {
+            let w = dirichlet(&mut r, &alphas);
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            for (m, x) in means.iter_mut().zip(&w) {
+                *m += x;
+            }
+        }
+        let total: f64 = alphas.iter().sum();
+        for (m, &a) in means.iter().zip(&alphas) {
+            assert!((*m / reps as f64 - a / total).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut r = rng();
+        let w = [1.0, 3.0, 6.0];
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[categorical(&mut r, &w)] += 1;
+        }
+        for (c, &wi) in counts.iter().zip(&w) {
+            let expect = wi / 10.0 * n as f64;
+            assert!((*c as f64 - expect).abs() < 0.05 * n as f64);
+        }
+    }
+
+    #[test]
+    fn categorical_log_matches_linear() {
+        let mut r = rng();
+        let w = [0.2, 0.5, 0.3];
+        let lw: Vec<f64> = w.iter().map(|x: &f64| x.ln()).collect();
+        let mut counts = [0usize; 3];
+        let n = 150_000;
+        for _ in 0..n {
+            counts[categorical_log(&mut r, &lw)] += 1;
+        }
+        for (c, &wi) in counts.iter().zip(&w) {
+            assert!((*c as f64 / n as f64 - wi).abs() < 0.01, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn multinomial_counts_sum() {
+        let mut r = rng();
+        let p = [0.1, 0.2, 0.7];
+        for _ in 0..100 {
+            let c = multinomial(&mut r, 1000, &p);
+            assert_eq!(c.iter().sum::<usize>(), 1000);
+        }
+        // Mean check
+        let reps = 2000;
+        let mut acc = [0.0; 3];
+        for _ in 0..reps {
+            let c = multinomial(&mut r, 300, &p);
+            for (a, &x) in acc.iter_mut().zip(&c) {
+                *a += x as f64;
+            }
+        }
+        for (a, &pi) in acc.iter().zip(&p) {
+            assert!((*a / reps as f64 - 300.0 * pi).abs() < 3.0);
+        }
+    }
+
+    #[test]
+    fn binomial_edge_cases_and_mean() {
+        let mut r = rng();
+        assert_eq!(binomial(&mut r, 100, 0.0), 0);
+        assert_eq!(binomial(&mut r, 100, 1.0), 100);
+        let n = 20_000;
+        let mut s = 0.0;
+        for _ in 0..n {
+            s += binomial(&mut r, 500, 0.37) as f64;
+        }
+        assert!((s / n as f64 - 185.0).abs() < 1.5);
+    }
+
+    #[test]
+    fn wishart_mean_approx() {
+        let mut r = rng();
+        // V = I (2x2), nu = 5  =>  E[W] = 5 I
+        let v = Matrix::identity(2);
+        let chol = v.cholesky().unwrap();
+        let reps = 20_000;
+        let mut acc = Matrix::zeros(2, 2);
+        for _ in 0..reps {
+            let w = wishart_chol(&mut r, 5.0, &chol);
+            acc.add_assign(&w);
+        }
+        acc.scale(1.0 / reps as f64);
+        assert!((acc[(0, 0)] - 5.0).abs() < 0.2, "{acc:?}");
+        assert!((acc[(1, 1)] - 5.0).abs() < 0.2);
+        assert!(acc[(0, 1)].abs() < 0.15);
+    }
+
+    #[test]
+    fn inverse_wishart_mean_approx() {
+        let mut r = rng();
+        // E[IW(nu, Psi)] = Psi / (nu - d - 1); Psi = 4I, d=2, nu=8 => I*(4/5)
+        let psi_inv = Matrix::identity(2).scaled(1.0 / 4.0);
+        let chol = psi_inv.cholesky().unwrap();
+        let reps = 30_000;
+        let mut acc = Matrix::zeros(2, 2);
+        for _ in 0..reps {
+            let w = inverse_wishart_chol(&mut r, 8.0, &chol);
+            acc.add_assign(&w);
+        }
+        acc.scale(1.0 / reps as f64);
+        assert!((acc[(0, 0)] - 0.8).abs() < 0.05, "{acc:?}");
+        assert!((acc[(1, 1)] - 0.8).abs() < 0.05);
+    }
+
+    #[test]
+    fn mvn_mean_and_cov() {
+        let mut r = rng();
+        let mean = vec![1.0, -2.0];
+        let mut cov = Matrix::zeros(2, 2);
+        cov[(0, 0)] = 2.0;
+        cov[(0, 1)] = 0.6;
+        cov[(1, 0)] = 0.6;
+        cov[(1, 1)] = 1.0;
+        let chol = cov.cholesky().unwrap();
+        let n = 100_000;
+        let (mut m0, mut m1, mut c01) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = mvn_chol(&mut r, &mean, &chol);
+            m0 += x[0];
+            m1 += x[1];
+            c01 += (x[0] - 1.0) * (x[1] + 2.0);
+        }
+        assert!((m0 / n as f64 - 1.0).abs() < 0.02);
+        assert!((m1 / n as f64 + 2.0).abs() < 0.02);
+        assert!((c01 / n as f64 - 0.6).abs() < 0.03);
+    }
+}

@@ -1,0 +1,323 @@
+//! PJRT runtime: load the AOT-compiled shard-step artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Flow (see /opt/xla-example/load_hlo/): HLO text →
+//! [`xla::HloModuleProto::from_text_file`] → [`xla::XlaComputation`] →
+//! `client.compile` → cached [`xla::PjRtLoadedExecutable`]. One executable
+//! per model variant; compilation happens once per process and is reused for
+//! every shard and iteration.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One entry from `artifacts/manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// "gaussian" | "multinomial".
+    pub likelihood: String,
+    /// "matmul" | "direct" (the two Pallas kernel variants of §4.2).
+    pub kernel: String,
+    pub d: usize,
+    pub k: usize,
+    pub n: usize,
+    pub file: String,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest.json missing 'artifacts' array"))?;
+        let mut entries = Vec::new();
+        for a in arts {
+            let field = |k: &str| -> Result<&Json> {
+                a.get(k).ok_or_else(|| anyhow!("manifest entry missing '{k}'"))
+            };
+            entries.push(ArtifactEntry {
+                name: field("name")?.as_str().unwrap_or_default().to_string(),
+                likelihood: field("likelihood")?.as_str().unwrap_or_default().to_string(),
+                kernel: field("kernel")?.as_str().unwrap_or_default().to_string(),
+                d: field("d")?.as_usize().context("d")?,
+                k: field("k")?.as_usize().context("k")?,
+                n: field("n")?.as_usize().context("n")?,
+                file: field("file")?.as_str().unwrap_or_default().to_string(),
+            });
+        }
+        Ok(Self { dir, entries })
+    }
+
+    /// Pick the best artifact for a request: matching likelihood + kernel,
+    /// d equal, k ≥ wanted (smallest such), n ≥ shard size (smallest such).
+    pub fn select(
+        &self,
+        likelihood: &str,
+        kernel: &str,
+        d: usize,
+        k_min: usize,
+        n_min: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.likelihood == likelihood
+                    && e.kernel == kernel
+                    && e.d == d
+                    && e.k >= k_min
+                    && e.n >= n_min
+            })
+            .min_by_key(|e| (e.n, e.k))
+    }
+
+    /// All (d, k, n) shapes available for a likelihood/kernel pair.
+    pub fn shapes(&self, likelihood: &str, kernel: &str) -> Vec<(usize, usize, usize)> {
+        self.entries
+            .iter()
+            .filter(|e| e.likelihood == likelihood && e.kernel == kernel)
+            .map(|e| (e.d, e.k, e.n))
+            .collect()
+    }
+}
+
+/// A host-side tensor heading into / out of an executable.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
+        let count: usize = dims.iter().product();
+        assert_eq!(data.len(), count, "tensor data/shape mismatch");
+        HostTensor::F32(data, dims.iter().map(|&d| d as i64).collect())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32(data, dims) => Ok(xla::Literal::vec1(data).reshape(dims)?),
+            HostTensor::I32(data, dims) => Ok(xla::Literal::vec1(data).reshape(dims)?),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v, _) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+}
+
+/// PJRT client + executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT runtime over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(to_anyhow)
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a compiled artifact with host tensors; returns the flattened
+    /// output tuple as host tensors (f32/i32 by element type).
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(HostTensor::to_literal).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(to_anyhow)?;
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("executable produced no output"))?
+            .to_literal_sync()
+            .map_err(to_anyhow)?;
+        let parts = out.to_tuple().map_err(to_anyhow)?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = lit.array_shape().map_err(to_anyhow)?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            match shape.ty() {
+                xla::ElementType::F32 => {
+                    tensors.push(HostTensor::F32(lit.to_vec::<f32>().map_err(to_anyhow)?, dims))
+                }
+                xla::ElementType::S32 => {
+                    tensors.push(HostTensor::I32(lit.to_vec::<i32>().map_err(to_anyhow)?, dims))
+                }
+                other => bail!("unsupported output element type {other:?}"),
+            }
+        }
+        Ok(tensors)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_and_selects() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(artifact_dir()).unwrap();
+        assert!(!m.entries.is_empty());
+        let e = m.select("gaussian", "matmul", 2, 8, 200).unwrap();
+        assert_eq!(e.d, 2);
+        assert!(e.k >= 8 && e.n >= 200);
+        // Smallest adequate n wins.
+        assert_eq!(e.n, 256);
+        assert!(m.select("gaussian", "matmul", 999, 8, 200).is_none());
+    }
+
+    #[test]
+    fn execute_tiny_gaussian_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = XlaRuntime::new(artifact_dir()).unwrap();
+        let e = rt.manifest().select("gaussian", "matmul", 2, 2, 8).unwrap().clone();
+        let (n, d, k) = (e.n, e.d, e.k);
+        // Two live clusters at (−5, 0) and (5, 0), identity covariance.
+        let mut x = vec![0.0f32; n * d];
+        for i in 0..n {
+            x[i * d] = if i % 2 == 0 { -5.0 } else { 5.0 };
+        }
+        let mask = vec![1.0f32; n];
+        let mut logw = vec![-1.0e30f32; k];
+        logw[0] = 0.5f32.ln();
+        logw[1] = 0.5f32.ln();
+        let mut mu = vec![0.0f32; k * d];
+        mu[0] = -5.0;
+        mu[d] = 5.0;
+        let mut w = vec![0.0f32; k * d * d];
+        for c in 0..k {
+            for j in 0..d {
+                w[c * d * d + j * d + j] = 1.0;
+            }
+        }
+        let c_norm = vec![0.0f32; k];
+        let sub_logw = vec![0.5f32.ln(); k * 2];
+        let mut sub_mu = vec![0.0f32; k * 2 * d];
+        for cc in 0..2usize {
+            for h in 0..2 {
+                sub_mu[(cc * 2 + h) * d] = if cc == 0 { -5.0 } else { 5.0 };
+            }
+        }
+        let mut sub_w = vec![0.0f32; k * 2 * d * d];
+        for cc in 0..k * 2 {
+            for j in 0..d {
+                sub_w[cc * d * d + j * d + j] = 1.0;
+            }
+        }
+        let sub_c = vec![0.0f32; k * 2];
+        let gumbel = vec![0.0f32; n * k];
+        let gumbel_sub = vec![0.0f32; n * 2];
+        let out = rt
+            .execute(
+                &e.name,
+                &[
+                    HostTensor::f32(x, &[n, d]),
+                    HostTensor::f32(mask, &[n]),
+                    HostTensor::f32(logw, &[k]),
+                    HostTensor::f32(mu, &[k, d]),
+                    HostTensor::f32(w, &[k, d, d]),
+                    HostTensor::f32(c_norm, &[k]),
+                    HostTensor::f32(sub_logw, &[k, 2]),
+                    HostTensor::f32(sub_mu, &[k, 2, d]),
+                    HostTensor::f32(sub_w, &[k, 2, d, d]),
+                    HostTensor::f32(sub_c, &[k, 2]),
+                    HostTensor::f32(gumbel, &[n, k]),
+                    HostTensor::f32(gumbel_sub, &[n, 2]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        let z = out[0].as_i32().unwrap();
+        for (i, &zi) in z.iter().enumerate() {
+            assert_eq!(zi, (i % 2) as i32, "point {i}");
+        }
+        let counts = out[2].as_f32().unwrap();
+        let total: f32 = counts.iter().sum();
+        assert_eq!(total as usize, n);
+        // Executable cache: compiled exactly once.
+        assert_eq!(rt.cached(), 1);
+    }
+}

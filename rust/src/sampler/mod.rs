@@ -1,0 +1,369 @@
+//! The restricted Gibbs sweep and the split/merge Metropolis-Hastings moves
+//! (§2.3 and §4.1 of the paper; [Chang & Fisher III, NIPS 2013]).
+//!
+//! The sampler never touches raw data: it operates on the coordinator-side
+//! [`DpmmState`] whose sufficient statistics the backends aggregate. Label
+//! sampling (steps (e)/(f)) happens inside the backends; everything else —
+//! weights (a)/(b), parameters (c)/(d), splits, merges — happens here.
+
+mod splitmerge;
+
+pub use splitmerge::{
+    log_hastings_merge, log_hastings_split, propose_merges, propose_splits, MergeOp, SplitOp,
+};
+
+use crate::model::{Cluster, DpmmState, LEFT, RIGHT};
+use crate::rng::{dirichlet, Rng};
+use crate::stats::Params;
+
+/// Knobs of the MCMC schedule (subset of the paper's `global_params` JSON).
+#[derive(Debug, Clone)]
+pub struct SamplerOptions {
+    /// Iterations a fresh cluster must age before it can split or merge
+    /// (the paper's `burn_out` / DPMMSubClusters.jl `burnout_period`).
+    pub burnout: usize,
+    /// Disable split proposals (ablation / final-polish iterations).
+    pub no_splits: bool,
+    /// Disable merge proposals.
+    pub no_merges: bool,
+    /// Hard cap on K (static-shape budget of the AOT artifacts; the native
+    /// backend also respects it for comparability). Splits that would exceed
+    /// the cap are not proposed.
+    pub max_clusters: usize,
+    /// Re-seed a cluster's sub-cluster competition with diverse draws every
+    /// this many iterations (0 = never). Without restarts the auxiliary
+    /// chain can freeze in a locally-stable but split-rejected bipartition
+    /// (e.g. a balanced cut through a multi-blob cluster) and K stops
+    /// growing; with restarts each period re-rolls a data-scale Voronoi
+    /// cut, and any cut with H_split ≥ 1 is caught the same iteration.
+    pub sub_restart_every: usize,
+}
+
+impl Default for SamplerOptions {
+    fn default() -> Self {
+        Self { burnout: 5, no_splits: false, no_merges: false, max_clusters: 64, sub_restart_every: 10 }
+    }
+}
+
+/// Step (a): sample cluster weights
+/// (π_1, …, π_K, π̃_{K+1}) ~ Dir(N_1, …, N_K, α), then renormalize over the
+/// instantiated clusters (the restricted sampler only assigns to those).
+pub fn sample_weights(state: &mut DpmmState, rng: &mut impl Rng) {
+    let mut alphas: Vec<f64> = state.clusters.iter().map(|c| c.count().max(1e-9)).collect();
+    alphas.push(state.alpha);
+    let w = dirichlet(rng, &alphas);
+    let live: f64 = w[..state.k()].iter().sum();
+    let live = if live > 0.0 { live } else { 1.0 };
+    for (c, &wi) in state.clusters.iter_mut().zip(&w) {
+        c.weight = (wi / live).max(1e-12);
+    }
+}
+
+/// True when one of the cluster's sub-clusters has starved. Without
+/// intervention this is an absorbing state: the empty side's parameters are
+/// prior draws that lose every point, forever blocking splits (the classic
+/// sub-cluster collapse; the reference implementation also resets here).
+fn subclusters_collapsed(c: &Cluster) -> bool {
+    c.count() >= 2.0 && (c.sub_count(LEFT) < 1.0 || c.sub_count(RIGHT) < 1.0)
+}
+
+/// Step (b): sample sub-cluster weights
+/// (π̄_kl, π̄_kr) ~ Dir(N_kl + α/2, N_kr + α/2) for every cluster.
+pub fn sample_sub_weights(state: &mut DpmmState, rng: &mut impl Rng) {
+    let half_alpha = state.alpha / 2.0;
+    for c in state.clusters.iter_mut() {
+        let w = dirichlet(
+            rng,
+            &[c.sub_count(LEFT) + half_alpha, c.sub_count(RIGHT) + half_alpha],
+        );
+        c.sub_weights = [w[0].max(1e-12), w[1].max(1e-12)];
+    }
+}
+
+/// Steps (c)+(d): sample cluster and sub-cluster parameters from their
+/// posteriors given the current sufficient statistics.
+///
+/// Two situations re-seed a cluster's sub-cluster competition with
+/// *diverse* data-scale draws (see `sample_params_diverse`):
+///
+/// * collapse — one side starved; a bare-prior draw for the empty side
+///   would lose every point forever,
+/// * staleness — `sub_restart_every` iterations passed without a split;
+///   the bipartition is locally stable but not split-worthy, so re-roll.
+pub fn sample_params(state: &mut DpmmState, opts: &SamplerOptions, rng: &mut impl Rng) {
+    // Borrow dance: clone the prior handle (cheap — hyperparams only).
+    let prior = state.prior.clone();
+    for c in state.clusters.iter_mut() {
+        c.params = prior.sample_params(&c.stats, rng);
+        let stale =
+            opts.sub_restart_every > 0 && c.since_restart >= opts.sub_restart_every;
+        if subclusters_collapsed(c) || stale {
+            // Alternate two reseed styles:
+            //  * Voronoi — two data-scale draws; finds balanced bimodal cuts.
+            //  * peeling — a tight probe vs the whole-cluster envelope;
+            //    finds the unbalanced one-blob-vs-rest cuts that are the
+            //    only accepted first splits of a many-mode cluster.
+            c.sub_params = if rng.next_u64() & 1 == 0 {
+                [
+                    prior.sample_params_diverse(&c.stats, rng),
+                    prior.sample_params_diverse(&c.stats, rng),
+                ]
+            } else {
+                let shrink = 0.02 + 0.1 * rng.next_f64();
+                [
+                    prior.sample_params_probe(&c.stats, shrink, rng),
+                    prior.mean_params(&c.stats),
+                ]
+            };
+            c.sub_weights = [0.5, 0.5];
+            c.since_restart = 0;
+        } else {
+            c.sub_params = [
+                prior.sample_params(&c.sub_stats[LEFT], rng),
+                prior.sample_params(&c.sub_stats[RIGHT], rng),
+            ];
+        }
+    }
+}
+
+/// Immutable snapshot of everything a backend needs to run steps (e)/(f)
+/// and the statistics pass on its shards: log-weights and parameters for
+/// clusters and sub-clusters. This is the only thing that crosses the
+/// coordinator→worker boundary each iteration (O(K·d²), never O(N)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepParams {
+    pub log_weights: Vec<f64>,
+    pub params: Vec<Params>,
+    /// log(π̄_kh) per cluster, h ∈ {l, r}.
+    pub sub_log_weights: Vec<[f64; 2]>,
+    pub sub_params: Vec<[Params; 2]>,
+}
+
+impl StepParams {
+    pub fn snapshot(state: &DpmmState) -> Self {
+        StepParams {
+            log_weights: state.clusters.iter().map(|c| c.weight.ln()).collect(),
+            params: state.clusters.iter().map(|c| c.params.clone()).collect(),
+            sub_log_weights: state
+                .clusters
+                .iter()
+                .map(|c| [c.sub_weights[0].ln(), c.sub_weights[1].ln()])
+                .collect(),
+            sub_params: state.clusters.iter().map(|c| c.sub_params.clone()).collect(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.params.len()
+    }
+}
+
+/// Apply an accepted split: cluster `target` becomes its left sub-cluster and
+/// a new cluster (index K) is appended from its right sub-cluster.
+///
+/// Sub-statistics of both children start empty; their sub-parameters are two
+/// independent posterior draws from the child's statistics (this is what
+/// seeds the next generation of sub-clusters, as in the reference
+/// implementation), and are refreshed in the next sweep.
+pub fn apply_split(state: &mut DpmmState, target: usize, rng: &mut impl Rng) -> SplitOp {
+    let prior = state.prior.clone();
+    let parent = state.clusters[target].clone();
+    let mut child = |h: usize| -> Cluster {
+        let stats = parent.sub_stats[h].clone();
+        // Diverse draws: the children's own sub-competitions start from
+        // data-scale seeds, not two near-identical posterior draws.
+        let sub_params = [
+            prior.sample_params_diverse(&stats, rng),
+            prior.sample_params_diverse(&stats, rng),
+        ];
+        Cluster {
+            params: parent.sub_params[h].clone(),
+            sub_params,
+            weight: (parent.weight * parent.sub_weights[h]).max(1e-12),
+            sub_weights: [0.5, 0.5],
+            sub_stats: [prior.empty_stats(), prior.empty_stats()],
+            stats,
+            age: 0,
+            since_restart: 0,
+        }
+    };
+    let left = child(LEFT);
+    let right = child(RIGHT);
+    let new_index = state.k();
+    state.clusters[target] = left;
+    state.clusters.push(right);
+    SplitOp { target, new_index }
+}
+
+/// Apply an accepted merge: `keep` absorbs `absorb`. The merged cluster's
+/// sub-clusters become the two old clusters (so an immediate re-split is a
+/// cheap reversal if the merge was bad). Returns the op; the caller must
+/// afterwards remove `absorb` via [`DpmmState::remove_clusters`] and rewrite
+/// backend labels with the resulting index map.
+pub fn apply_merge(state: &mut DpmmState, keep: usize, absorb: usize, rng: &mut impl Rng) -> MergeOp {
+    assert_ne!(keep, absorb);
+    let prior = state.prior.clone();
+    let absorbed = state.clusters[absorb].clone();
+    let kc = &mut state.clusters[keep];
+    let old_keep_stats = kc.stats.clone();
+    let old_keep_params = kc.params.clone();
+    kc.stats.merge(&absorbed.stats);
+    let n1 = old_keep_stats.count();
+    let n2 = absorbed.stats.count();
+    let total = (n1 + n2).max(1e-12);
+    kc.sub_stats = [old_keep_stats, absorbed.stats.clone()];
+    kc.sub_params = [old_keep_params, absorbed.params.clone()];
+    kc.sub_weights = [(n1 / total).max(1e-12), (n2 / total).max(1e-12)];
+    kc.weight += absorbed.weight;
+    kc.age = 0;
+    kc.since_restart = 0;
+    kc.params = prior.sample_params(&kc.stats, rng);
+    MergeOp { keep, absorb }
+}
+
+/// Age every cluster by one iteration (call once per sweep).
+pub fn age_clusters(state: &mut DpmmState) {
+    for c in state.clusters.iter_mut() {
+        c.age += 1;
+        c.since_restart += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::stats::{NiwPrior, Prior, Stats};
+
+    fn seeded_state(k: usize) -> (DpmmState, Xoshiro256pp) {
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let state = DpmmState::new(2.0, Prior::Niw(NiwPrior::weak(2)), k, 1000, &mut rng);
+        (state, rng)
+    }
+
+    fn stats_around(prior: &Prior, center: [f64; 2], n: usize, spread: f64) -> Stats {
+        let mut s = prior.empty_stats();
+        for i in 0..n {
+            let t = i as f64 / n as f64 * std::f64::consts::TAU;
+            s.add(&[center[0] + spread * t.cos(), center[1] + spread * t.sin()]);
+        }
+        s
+    }
+
+    fn fill(state: &mut DpmmState, centers: &[[f64; 2]], n: usize) {
+        let prior = state.prior.clone();
+        let stats: Vec<Stats> =
+            centers.iter().map(|&c| stats_around(&prior, c, n, 0.5)).collect();
+        let sub: Vec<[Stats; 2]> = centers
+            .iter()
+            .map(|&c| {
+                [
+                    stats_around(&prior, [c[0] - 0.3, c[1]], n / 2, 0.3),
+                    stats_around(&prior, [c[0] + 0.3, c[1]], n - n / 2, 0.3),
+                ]
+            })
+            .collect();
+        state.set_stats(stats, sub);
+    }
+
+    #[test]
+    fn weights_normalized_and_count_proportional() {
+        let (mut state, mut rng) = seeded_state(2);
+        fill(&mut state, &[[0.0, 0.0], [10.0, 0.0]], 100);
+        // Unbalance: give cluster 0 10x points
+        let prior = state.prior.clone();
+        let big = stats_around(&prior, [0.0, 0.0], 1000, 0.5);
+        state.clusters[0].stats = big;
+        let mut w0 = 0.0;
+        for _ in 0..200 {
+            sample_weights(&mut state, &mut rng);
+            let total: f64 = state.clusters.iter().map(|c| c.weight).sum();
+            assert!((total - 1.0).abs() < 1e-9);
+            w0 += state.clusters[0].weight;
+        }
+        assert!((w0 / 200.0 - 1000.0 / 1100.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn sub_weights_sum_to_one() {
+        let (mut state, mut rng) = seeded_state(3);
+        fill(&mut state, &[[0.0, 0.0], [5.0, 0.0], [0.0, 5.0]], 60);
+        sample_sub_weights(&mut state, &mut rng);
+        for c in &state.clusters {
+            assert!((c.sub_weights[0] + c.sub_weights[1] - 1.0).abs() < 1e-9);
+            assert!(c.sub_weights[0] > 0.0 && c.sub_weights[1] > 0.0);
+        }
+    }
+
+    #[test]
+    fn params_track_stats_center() {
+        let (mut state, mut rng) = seeded_state(1);
+        fill(&mut state, &[[6.0, -2.0]], 500);
+        let mut mu = [0.0, 0.0];
+        let opts = SamplerOptions { sub_restart_every: 0, ..Default::default() };
+        for _ in 0..50 {
+            sample_params(&mut state, &opts, &mut rng);
+            if let Params::Gauss(g) = &state.clusters[0].params {
+                mu[0] += g.mu[0];
+                mu[1] += g.mu[1];
+            }
+        }
+        assert!((mu[0] / 50.0 - 6.0).abs() < 0.3, "mu={mu:?}");
+        assert!((mu[1] / 50.0 + 2.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn snapshot_matches_state() {
+        let (mut state, mut rng) = seeded_state(2);
+        fill(&mut state, &[[0.0, 0.0], [5.0, 5.0]], 40);
+        sample_weights(&mut state, &mut rng);
+        sample_sub_weights(&mut state, &mut rng);
+        sample_params(&mut state, &SamplerOptions::default(), &mut rng);
+        let snap = StepParams::snapshot(&state);
+        assert_eq!(snap.k(), 2);
+        for (k, c) in state.clusters.iter().enumerate() {
+            assert!((snap.log_weights[k] - c.weight.ln()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn split_preserves_total_count_and_weight() {
+        let (mut state, mut rng) = seeded_state(1);
+        fill(&mut state, &[[0.0, 0.0]], 100);
+        let before_n = state.clusters[0].count();
+        let before_w = state.clusters[0].weight;
+        let op = apply_split(&mut state, 0, &mut rng);
+        assert_eq!(op.new_index, 1);
+        assert_eq!(state.k(), 2);
+        let after_n: f64 = state.counts().iter().sum();
+        let after_w: f64 = state.clusters.iter().map(|c| c.weight).sum();
+        assert!((after_n - before_n).abs() < 1e-9);
+        assert!((after_w - before_w).abs() < 1e-9);
+        assert_eq!(state.clusters[0].age, 0);
+        assert_eq!(state.clusters[1].age, 0);
+    }
+
+    #[test]
+    fn merge_preserves_totals_and_sets_subclusters() {
+        let (mut state, mut rng) = seeded_state(2);
+        fill(&mut state, &[[0.0, 0.0], [1.0, 0.0]], 80);
+        let n_before: f64 = state.counts().iter().sum();
+        let op = apply_merge(&mut state, 0, 1, &mut rng);
+        assert_eq!((op.keep, op.absorb), (0, 1));
+        assert!((state.clusters[0].count() - n_before).abs() < 1e-9);
+        // Sub-clusters are the old clusters.
+        assert!((state.clusters[0].sub_count(LEFT) - 80.0).abs() < 1e-9);
+        assert!((state.clusters[0].sub_count(RIGHT) - 80.0).abs() < 1e-9);
+        let map = state.remove_clusters(&[1]);
+        assert_eq!(map, vec![Some(0), None]);
+        assert_eq!(state.k(), 1);
+    }
+
+    #[test]
+    fn age_increments() {
+        let (mut state, _) = seeded_state(2);
+        age_clusters(&mut state);
+        age_clusters(&mut state);
+        assert!(state.clusters.iter().all(|c| c.age == 2));
+    }
+}

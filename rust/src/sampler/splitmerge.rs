@@ -1,0 +1,342 @@
+//! Split/merge Metropolis-Hastings proposals (Eq. 20–21 of the paper).
+//!
+//! Splits divide a cluster into its two sub-clusters; merges join two
+//! clusters, with the old clusters becoming the sub-clusters of the result.
+//! All Hastings ratios are computed in log space from sufficient statistics
+//! alone — no data access, so proposals are O(K) / O(K²) regardless of N.
+
+use super::SamplerOptions;
+use crate::model::{DpmmState, LEFT, RIGHT};
+use crate::rng::Rng;
+use crate::stats::special::lgamma;
+use crate::stats::{Prior, Stats};
+
+/// An accepted split: `target` keeps the left sub-cluster, `new_index`
+/// (== K at proposal time) receives the right one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitOp {
+    pub target: usize,
+    pub new_index: usize,
+}
+
+/// An accepted merge: `keep` absorbs `absorb`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MergeOp {
+    pub keep: usize,
+    pub absorb: usize,
+}
+
+/// log H_split (Eq. 20):
+/// H = α · Γ(N_l) f(C̄_l;λ) · Γ(N_r) f(C̄_r;λ) / (Γ(N_k) f(C_k;λ)).
+pub fn log_hastings_split(
+    prior: &Prior,
+    alpha: f64,
+    cluster: &Stats,
+    left: &Stats,
+    right: &Stats,
+) -> f64 {
+    let (n, nl, nr) = (cluster.count(), left.count(), right.count());
+    if nl < 1.0 || nr < 1.0 {
+        return f64::NEG_INFINITY; // degenerate split: one side empty
+    }
+    alpha.ln() + lgamma(nl) + prior.log_marginal(left) + lgamma(nr) + prior.log_marginal(right)
+        - lgamma(n)
+        - prior.log_marginal(cluster)
+}
+
+/// log H_merge (Eq. 21):
+///
+/// H = Γ(N₁+N₂) / (α Γ(N₁) Γ(N₂)) · f(C_merged)/(f(C₁) f(C₂))
+///     · Γ(α)/Γ(α+N₁+N₂) · Γ(α/2+N₁) Γ(α/2+N₂) / Γ(α/2)².
+///
+/// The first factor is 1/H_split of the reverse move; the trailing factors
+/// correct for the sub-cluster weight prior of the merged cluster.
+pub fn log_hastings_merge(prior: &Prior, alpha: f64, c1: &Stats, c2: &Stats) -> f64 {
+    let (n1, n2) = (c1.count(), c2.count());
+    if n1 < 1.0 || n2 < 1.0 {
+        return f64::NEG_INFINITY;
+    }
+    let mut merged = c1.clone();
+    merged.merge(c2);
+    let ratio_marginals =
+        prior.log_marginal(&merged) - prior.log_marginal(c1) - prior.log_marginal(c2);
+    lgamma(n1 + n2) - alpha.ln() - lgamma(n1) - lgamma(n2) + ratio_marginals + lgamma(alpha)
+        - lgamma(alpha + n1 + n2)
+        + lgamma(alpha / 2.0 + n1)
+        + lgamma(alpha / 2.0 + n2)
+        - 2.0 * lgamma(alpha / 2.0)
+}
+
+/// Step: propose splitting every eligible cluster (the paper proposes all K
+/// in parallel); accept each with probability min(1, H_split).
+///
+/// Returns the accepted cluster indices (the caller applies them with
+/// [`super::apply_split`] which appends new clusters, so indices here refer
+/// to the pre-split state and remain valid while applying in order).
+pub fn propose_splits(
+    state: &DpmmState,
+    opts: &SamplerOptions,
+    rng: &mut impl Rng,
+) -> Vec<usize> {
+    if opts.no_splits {
+        return Vec::new();
+    }
+    let mut accepted = Vec::new();
+    let mut budget = opts.max_clusters.saturating_sub(state.k());
+    for (k, c) in state.clusters.iter().enumerate() {
+        if budget == 0 {
+            break;
+        }
+        if c.age < opts.burnout {
+            continue;
+        }
+        let log_h = log_hastings_split(
+            &state.prior,
+            state.alpha,
+            &c.stats,
+            &c.sub_stats[LEFT],
+            &c.sub_stats[RIGHT],
+        );
+        if log_h >= 0.0 || rng.next_f64_open().ln() < log_h {
+            accepted.push(k);
+            budget -= 1;
+        }
+    }
+    accepted
+}
+
+/// Propose merges over all ordered cluster pairs (§4.1), accept each with
+/// probability min(1, H_merge), and resolve conflicts greedily so that no
+/// cluster participates in more than one merge per iteration — the paper's
+/// §4.3 requirement ("prevent more than 2 clusters merging into one").
+///
+/// Pairs are evaluated in decreasing-ratio order so the most beneficial
+/// merges win the conflict resolution.
+pub fn propose_merges(
+    state: &DpmmState,
+    opts: &SamplerOptions,
+    rng: &mut impl Rng,
+) -> Vec<MergeOp> {
+    if opts.no_merges || state.k() < 2 {
+        return Vec::new();
+    }
+    let k = state.k();
+    // Score all pairs first.
+    let mut scored: Vec<(f64, usize, usize)> = Vec::new();
+    for a in 0..k {
+        if state.clusters[a].age < opts.burnout {
+            continue;
+        }
+        for b in (a + 1)..k {
+            if state.clusters[b].age < opts.burnout {
+                continue;
+            }
+            let log_h = log_hastings_merge(
+                &state.prior,
+                state.alpha,
+                &state.clusters[a].stats,
+                &state.clusters[b].stats,
+            );
+            if log_h.is_finite() {
+                scored.push((log_h, a, b));
+            }
+        }
+    }
+    scored.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut used = vec![false; k];
+    let mut ops = Vec::new();
+    for (log_h, a, b) in scored {
+        if used[a] || used[b] {
+            continue; // conflict: one endpoint already merged this iteration
+        }
+        if log_h >= 0.0 || rng.next_f64_open().ln() < log_h {
+            used[a] = true;
+            used[b] = true;
+            ops.push(MergeOp { keep: a, absorb: b });
+        }
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Cluster;
+    use crate::rng::Xoshiro256pp;
+    use crate::stats::{NiwPrior, Params, Prior};
+
+    fn gauss_prior() -> Prior {
+        Prior::Niw(NiwPrior::weak(2))
+    }
+
+    fn blob(prior: &Prior, center: [f64; 2], n: usize, spread: f64) -> Stats {
+        let mut s = prior.empty_stats();
+        for i in 0..n {
+            let t = i as f64 / n as f64 * std::f64::consts::TAU;
+            // Deterministic ring — enough signal for marginal comparisons.
+            s.add(&[center[0] + spread * t.cos(), center[1] + spread * t.sin()]);
+        }
+        s
+    }
+
+    /// Two far-apart blobs mistakenly fused into one cluster whose
+    /// sub-clusters found the真 split → H_split should be huge.
+    #[test]
+    fn split_favored_for_bimodal_cluster() {
+        let prior = gauss_prior();
+        let left = blob(&prior, [-10.0, 0.0], 100, 0.5);
+        let right = blob(&prior, [10.0, 0.0], 100, 0.5);
+        let mut whole = left.clone();
+        whole.merge(&right);
+        let log_h = log_hastings_split(&prior, 1.0, &whole, &left, &right);
+        assert!(log_h > 50.0, "expected strongly favored split, got {log_h}");
+    }
+
+    /// A genuinely unimodal cluster split arbitrarily in half → H_split ≪ 1.
+    #[test]
+    fn split_rejected_for_unimodal_cluster() {
+        let prior = gauss_prior();
+        // Interleave one ring into two "halves" with the same center.
+        let mut l = prior.empty_stats();
+        let mut r = prior.empty_stats();
+        for i in 0..200 {
+            let t = i as f64 / 200.0 * std::f64::consts::TAU;
+            let x = [3.0 * t.cos(), 3.0 * t.sin()];
+            if i % 2 == 0 {
+                l.add(&x)
+            } else {
+                r.add(&x)
+            }
+        }
+        let mut whole = l.clone();
+        whole.merge(&r);
+        let log_h = log_hastings_split(&prior, 1.0, &whole, &l, &r);
+        assert!(log_h < 0.0, "split of unimodal data should be disfavored, got {log_h}");
+    }
+
+    #[test]
+    fn split_with_empty_side_is_impossible() {
+        let prior = gauss_prior();
+        let left = blob(&prior, [0.0, 0.0], 50, 1.0);
+        let empty = prior.empty_stats();
+        let mut whole = left.clone();
+        let log_h = log_hastings_split(&prior, 1.0, &mut whole, &left, &empty);
+        assert_eq!(log_h, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn merge_favored_for_same_blob() {
+        let prior = gauss_prior();
+        let a = blob(&prior, [0.0, 0.0], 100, 1.0);
+        let b = blob(&prior, [0.2, -0.1], 100, 1.0);
+        let log_h = log_hastings_merge(&prior, 1.0, &a, &b);
+        assert!(log_h > 0.0, "co-located clusters should merge, got {log_h}");
+    }
+
+    #[test]
+    fn merge_rejected_for_distant_blobs() {
+        let prior = gauss_prior();
+        let a = blob(&prior, [-15.0, 0.0], 100, 0.5);
+        let b = blob(&prior, [15.0, 0.0], 100, 0.5);
+        let log_h = log_hastings_merge(&prior, 1.0, &a, &b);
+        assert!(log_h < -50.0, "distant clusters must not merge, got {log_h}");
+    }
+
+    fn make_state(blobs: &[([f64; 2], usize)]) -> DpmmState {
+        let prior = gauss_prior();
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let mut state = DpmmState::new(1.0, prior.clone(), blobs.len(), 1000, &mut rng);
+        for (c, &(center, n)) in state.clusters.iter_mut().zip(blobs) {
+            c.stats = blob(&prior, center, n, 0.5);
+            c.sub_stats = [
+                blob(&prior, [center[0] - 0.2, center[1]], n / 2, 0.4),
+                blob(&prior, [center[0] + 0.2, center[1]], n - n / 2, 0.4),
+            ];
+            c.age = 100;
+        }
+        state
+    }
+
+    #[test]
+    fn merge_conflict_resolution_no_cluster_twice() {
+        // Three co-located clusters: pairwise merges all favored, but only
+        // one merge may involve each cluster.
+        let state = make_state(&[([0.0, 0.0], 100), ([0.1, 0.0], 100), ([0.0, 0.1], 100)]);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let ops = propose_merges(&state, &SamplerOptions::default(), &mut rng);
+        assert!(!ops.is_empty());
+        let mut seen = std::collections::HashSet::new();
+        for op in &ops {
+            assert!(seen.insert(op.keep), "cluster {} merged twice", op.keep);
+            assert!(seen.insert(op.absorb), "cluster {} merged twice", op.absorb);
+        }
+        // 3 clusters → at most 1 merge possible under the conflict rule.
+        assert_eq!(ops.len(), 1);
+    }
+
+    #[test]
+    fn burnout_blocks_young_clusters() {
+        let mut state = make_state(&[([0.0, 0.0], 100), ([0.05, 0.0], 100)]);
+        for c in state.clusters.iter_mut() {
+            c.age = 0;
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        assert!(propose_merges(&state, &SamplerOptions::default(), &mut rng).is_empty());
+        assert!(propose_splits(&state, &SamplerOptions::default(), &mut rng).is_empty());
+    }
+
+    #[test]
+    fn max_clusters_caps_splits() {
+        // A state of 4 bimodal clusters that all want to split, but the cap
+        // only allows one more cluster.
+        let prior = gauss_prior();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut state = DpmmState::new(1.0, prior.clone(), 4, 1000, &mut rng);
+        for (i, c) in state.clusters.iter_mut().enumerate() {
+            let off = i as f64 * 50.0;
+            let l = blob(&prior, [off - 10.0, 0.0], 80, 0.5);
+            let r = blob(&prior, [off + 10.0, 0.0], 80, 0.5);
+            let mut whole = l.clone();
+            whole.merge(&r);
+            c.stats = whole;
+            c.sub_stats = [l, r];
+            c.age = 100;
+        }
+        let opts = SamplerOptions { max_clusters: 5, ..Default::default() };
+        let accepted = propose_splits(&state, &opts, &mut rng);
+        assert_eq!(accepted.len(), 1, "cap must limit splits");
+    }
+
+    #[test]
+    fn no_split_no_merge_flags() {
+        let state = make_state(&[([0.0, 0.0], 100), ([0.05, 0.0], 100)]);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let opts = SamplerOptions { no_splits: true, no_merges: true, ..Default::default() };
+        assert!(propose_splits(&state, &opts, &mut rng).is_empty());
+        assert!(propose_merges(&state, &opts, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn split_then_merge_ratios_are_consistent() {
+        // For the same partition, log H_split + log H_merge should equal the
+        // sub-cluster-prior correction terms (they are not exact inverses;
+        // Eq. 21's trailing Gamma factors remain).
+        let prior = gauss_prior();
+        let alpha = 1.5;
+        let l = blob(&prior, [-10.0, 0.0], 60, 0.5);
+        let r = blob(&prior, [10.0, 0.0], 40, 0.5);
+        let mut whole = l.clone();
+        whole.merge(&r);
+        let hs = log_hastings_split(&prior, alpha, &whole, &l, &r);
+        let hm = log_hastings_merge(&prior, alpha, &l, &r);
+        let (n1, n2) = (60.0, 40.0);
+        let correction = lgamma(alpha) - lgamma(alpha + n1 + n2) + lgamma(alpha / 2.0 + n1)
+            + lgamma(alpha / 2.0 + n2)
+            - 2.0 * lgamma(alpha / 2.0);
+        assert!(((hs + hm) - correction).abs() < 1e-8, "hs+hm={} corr={}", hs + hm, correction);
+    }
+
+    // Silence unused-import warning for Params/Cluster in this test module.
+    #[allow(dead_code)]
+    fn _touch(_: Option<(Params, Cluster)>) {}
+}

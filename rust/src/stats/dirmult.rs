@@ -1,0 +1,251 @@
+//! Dirichlet prior for multinomial components (the paper's
+//! `multinomial-prior` C++ class; used for the 20newsgroups-style discrete
+//! data in §5.2–5.3).
+//!
+//! Observations are count vectors x ∈ ℕ^d (stored as f64). Per-point
+//! multinomial coefficients `n_i!/∏_j x_ij!` are constant across clusters and
+//! therefore dropped everywhere — they cancel in the label-sampling softmax
+//! and in every Hastings ratio, matching Chang & Fisher III's code.
+
+use crate::rng::{dirichlet, Rng};
+use crate::stats::special::lbeta_vec;
+
+/// Dirichlet hyperparameters α ∈ ℝ₊^d.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DirMultPrior {
+    pub alpha: Vec<f64>,
+}
+
+/// Sufficient statistics: number of documents n and summed counts Σx.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DirMultStats {
+    pub n: f64,
+    pub sum_x: Vec<f64>,
+}
+
+/// Sampled component: log θ (cached logs for the dot-product likelihood).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DirMultParams {
+    pub log_theta: Vec<f64>,
+}
+
+impl DirMultStats {
+    pub fn empty(d: usize) -> Self {
+        Self { n: 0.0, sum_x: vec![0.0; d] }
+    }
+
+    pub fn add(&mut self, x: &[f64]) {
+        self.n += 1.0;
+        for (s, &v) in self.sum_x.iter_mut().zip(x) {
+            *s += v;
+        }
+    }
+
+    pub fn remove(&mut self, x: &[f64]) {
+        self.n -= 1.0;
+        for (s, &v) in self.sum_x.iter_mut().zip(x) {
+            *s -= v;
+        }
+    }
+
+    pub fn merge(&mut self, other: &DirMultStats) {
+        self.n += other.n;
+        for (s, &v) in self.sum_x.iter_mut().zip(&other.sum_x) {
+            *s += v;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.n = 0.0;
+        self.sum_x.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+impl DirMultPrior {
+    pub fn new(alpha: Vec<f64>) -> Self {
+        assert!(!alpha.is_empty());
+        assert!(alpha.iter().all(|&a| a > 0.0), "dirichlet alphas must be positive");
+        Self { alpha }
+    }
+
+    /// Symmetric Dirichlet(α₀, …, α₀).
+    pub fn symmetric(d: usize, alpha0: f64) -> Self {
+        Self::new(vec![alpha0; d])
+    }
+
+    pub fn dim(&self) -> usize {
+        self.alpha.len()
+    }
+
+    pub fn empty_stats(&self) -> DirMultStats {
+        DirMultStats::empty(self.dim())
+    }
+
+    /// Posterior hyperparameters α' = α + Σx.
+    pub fn posterior(&self, s: &DirMultStats) -> DirMultPrior {
+        DirMultPrior {
+            alpha: self.alpha.iter().zip(&s.sum_x).map(|(&a, &c)| a + c).collect(),
+        }
+    }
+
+    /// θ ~ Dir(α + Σx), returned as cached logs.
+    pub fn sample_params(&self, s: &DirMultStats, rng: &mut impl Rng) -> DirMultParams {
+        let post = self.posterior(s);
+        let theta = dirichlet(rng, &post.alpha);
+        DirMultParams {
+            log_theta: theta.iter().map(|&t| t.max(1e-300).ln()).collect(),
+        }
+    }
+
+    /// A *diverse* posterior-ish draw for (re)seeding sub-cluster
+    /// competitions: evidence counts are capped at ~200 effective
+    /// observations so the Dirichlet draw stays spread out at large N
+    /// (plain posterior draws concentrate and freeze the left/right
+    /// competition — see [`crate::sampler`]).
+    pub fn sample_params_diverse(&self, s: &DirMultStats, rng: &mut impl Rng) -> DirMultParams {
+        let total: f64 = s.sum_x.iter().sum();
+        let scale = if total > 0.0 { (200.0 * self.dim() as f64 / total).min(1.0) } else { 1.0 };
+        let alphas: Vec<f64> = self
+            .alpha
+            .iter()
+            .zip(&s.sum_x)
+            .map(|(&a, &c)| a + c * scale)
+            .collect();
+        let theta = dirichlet(rng, &alphas);
+        DirMultParams {
+            log_theta: theta.iter().map(|&t| t.max(1e-300).ln()).collect(),
+        }
+    }
+
+    /// A sharpened "probe" draw for peeling restarts: a diverse draw with
+    /// its log-probabilities scaled by `1/shrink` (> 1) and renormalized,
+    /// concentrating mass on the draw's dominant coordinates so the probe
+    /// captures one topic's documents rather than half of everything.
+    pub fn sample_params_probe(&self, s: &DirMultStats, shrink: f64, rng: &mut impl Rng) -> DirMultParams {
+        let diverse = self.sample_params_diverse(s, rng);
+        let sharp = 1.0 / shrink.clamp(1e-3, 1.0);
+        // Temper in probability space: θ^sharp / Z.
+        let scaled: Vec<f64> = diverse.log_theta.iter().map(|&l| l * sharp).collect();
+        let mx = scaled.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let z: f64 = scaled.iter().map(|&l| (l - mx).exp()).sum();
+        let logz = mx + z.ln();
+        DirMultParams {
+            log_theta: scaled.iter().map(|&l| (l - logz).max(-690.0)).collect(),
+        }
+    }
+
+    /// Posterior mean θ̄_j = α'_j / Σ α'.
+    pub fn mean_params(&self, s: &DirMultStats) -> DirMultParams {
+        let post = self.posterior(s);
+        let total: f64 = post.alpha.iter().sum();
+        DirMultParams {
+            log_theta: post.alpha.iter().map(|&a| (a / total).max(1e-300).ln()).collect(),
+        }
+    }
+
+    /// log marginal likelihood (Dirichlet–multinomial compound, per-point
+    /// multinomial coefficients dropped):
+    /// log f(C; α) = log B(α + Σx) − log B(α).
+    pub fn log_marginal(&self, s: &DirMultStats) -> f64 {
+        if s.n == 0.0 {
+            return 0.0;
+        }
+        let post = self.posterior(s);
+        lbeta_vec(&post.alpha) - lbeta_vec(&self.alpha)
+    }
+}
+
+impl DirMultParams {
+    /// log f(x | θ) = Σ_j x_j · log θ_j (multinomial coefficient dropped).
+    pub fn log_likelihood(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.log_theta.len());
+        let mut acc = 0.0;
+        for (&xi, &lt) in x.iter().zip(&self.log_theta) {
+            if xi != 0.0 {
+                acc += xi * lt;
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn posterior_adds_counts() {
+        let prior = DirMultPrior::symmetric(3, 0.5);
+        let mut s = prior.empty_stats();
+        s.add(&[2.0, 0.0, 1.0]);
+        s.add(&[1.0, 1.0, 0.0]);
+        let post = prior.posterior(&s);
+        assert_eq!(post.alpha, vec![3.5, 1.5, 1.5]);
+    }
+
+    #[test]
+    fn marginal_single_point_binary() {
+        // d=2, α=(1,1): marginal of one Bernoulli-like count x=(1,0) is
+        // B(α+x)/B(α) = B(2,1)/B(1,1) = (1/2)/1.
+        let prior = DirMultPrior::symmetric(2, 1.0);
+        let mut s = prior.empty_stats();
+        s.add(&[1.0, 0.0]);
+        assert!((prior.log_marginal(&s) - 0.5f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn marginal_chain_rule_consistent() {
+        let prior = DirMultPrior::new(vec![0.7, 1.3, 2.0]);
+        let x1 = [3.0, 0.0, 1.0];
+        let x2 = [0.0, 2.0, 2.0];
+        let mut s12 = prior.empty_stats();
+        s12.add(&x1);
+        s12.add(&x2);
+        let mut s1 = prior.empty_stats();
+        s1.add(&x1);
+        let mut s2 = prior.empty_stats();
+        s2.add(&x2);
+        let chained = prior.log_marginal(&s1) + prior.posterior(&s1).log_marginal(&s2);
+        assert!((prior.log_marginal(&s12) - chained).abs() < 1e-10);
+    }
+
+    #[test]
+    fn loglik_prefers_matching_topic() {
+        let p_a = DirMultParams { log_theta: vec![0.8f64.ln(), 0.1f64.ln(), 0.1f64.ln()] };
+        let p_b = DirMultParams { log_theta: vec![0.1f64.ln(), 0.1f64.ln(), 0.8f64.ln()] };
+        let doc = [5.0, 1.0, 0.0];
+        assert!(p_a.log_likelihood(&doc) > p_b.log_likelihood(&doc));
+    }
+
+    #[test]
+    fn sample_params_normalized_and_concentrated() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let prior = DirMultPrior::symmetric(4, 1.0);
+        let mut s = prior.empty_stats();
+        // Heavy evidence for coordinate 2.
+        for _ in 0..100 {
+            s.add(&[0.0, 0.0, 10.0, 0.0]);
+        }
+        let mut acc = 0.0;
+        for _ in 0..100 {
+            let p = prior.sample_params(&s, &mut rng);
+            let theta2 = p.log_theta[2].exp();
+            acc += theta2;
+            let total: f64 = p.log_theta.iter().map(|l| l.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-6);
+        }
+        assert!(acc / 100.0 > 0.95);
+    }
+
+    #[test]
+    fn mean_params_match_closed_form() {
+        let prior = DirMultPrior::symmetric(2, 1.0);
+        let mut s = prior.empty_stats();
+        s.add(&[3.0, 1.0]);
+        let p = prior.mean_params(&s);
+        // α' = (4, 2) → θ̄ = (2/3, 1/3)
+        assert!((p.log_theta[0].exp() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((p.log_theta[1].exp() - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

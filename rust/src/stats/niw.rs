@@ -1,0 +1,377 @@
+//! Normal–Inverse-Wishart prior for multivariate Gaussian components
+//! (the paper's Example 3/4 and its `niw` C++ class).
+//!
+//! Hyperparameters λ = (m, Ψ, κ, ν) with κ > 0, ν > d − 1 (Eq. 8–9).
+
+use crate::linalg::{solve_lower, spd_logdet, Matrix};
+use crate::rng::{inverse_wishart_chol, mvn_chol, Rng};
+use crate::stats::special::mvlgamma;
+
+const LN_2PI: f64 = 1.837_877_066_409_345_5;
+
+/// NIW hyperparameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NiwPrior {
+    pub kappa: f64,
+    pub m: Vec<f64>,
+    pub nu: f64,
+    pub psi: Matrix,
+}
+
+/// Sufficient statistics for a set of Gaussian observations:
+/// (n, Σx, Σxxᵀ).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NiwStats {
+    pub n: f64,
+    pub sum_x: Vec<f64>,
+    pub sum_xxt: Matrix,
+}
+
+/// Sampled Gaussian component θ = (μ, Σ), with cached Cholesky machinery
+/// for O(d²) per-point log-likelihood.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NiwParams {
+    pub mu: Vec<f64>,
+    pub sigma: Matrix,
+    /// Lower Cholesky factor L of Σ.
+    pub chol: Matrix,
+    /// Inverse Cholesky W = L⁻¹ (row-major), the matrix the Pallas matmul
+    /// kernel consumes: loglik = c − ½‖W(x−μ)‖².
+    pub inv_chol: Matrix,
+    /// c = −½(d·log 2π + log det Σ).
+    pub log_norm: f64,
+}
+
+impl NiwStats {
+    pub fn empty(d: usize) -> Self {
+        Self { n: 0.0, sum_x: vec![0.0; d], sum_xxt: Matrix::zeros(d, d) }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.sum_x.len()
+    }
+
+    pub fn add(&mut self, x: &[f64]) {
+        self.n += 1.0;
+        for (s, &v) in self.sum_x.iter_mut().zip(x) {
+            *s += v;
+        }
+        self.sum_xxt.add_outer(x, 1.0);
+    }
+
+    pub fn remove(&mut self, x: &[f64]) {
+        self.n -= 1.0;
+        for (s, &v) in self.sum_x.iter_mut().zip(x) {
+            *s -= v;
+        }
+        self.sum_xxt.add_outer(x, -1.0);
+    }
+
+    pub fn merge(&mut self, other: &NiwStats) {
+        self.n += other.n;
+        for (s, &v) in self.sum_x.iter_mut().zip(&other.sum_x) {
+            *s += v;
+        }
+        self.sum_xxt.add_assign(&other.sum_xxt);
+    }
+
+    pub fn reset(&mut self) {
+        self.n = 0.0;
+        self.sum_x.iter_mut().for_each(|v| *v = 0.0);
+        self.sum_xxt.data_mut().iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+impl NiwPrior {
+    pub fn new(kappa: f64, m: Vec<f64>, nu: f64, psi: Matrix) -> Self {
+        let d = m.len();
+        assert!(kappa > 0.0, "kappa must be positive");
+        assert!(nu > (d as f64) - 1.0, "nu must exceed d-1");
+        assert_eq!(psi.rows(), d);
+        assert_eq!(psi.cols(), d);
+        Self { kappa, m, nu, psi }
+    }
+
+    /// A weak (high-uncertainty) prior centered at the origin — the paper's
+    /// "let the data speak for itself" default.
+    pub fn weak(d: usize) -> Self {
+        Self::new(1.0, vec![0.0; d], d as f64 + 3.0, Matrix::identity(d))
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn empty_stats(&self) -> NiwStats {
+        NiwStats::empty(self.dim())
+    }
+
+    /// Posterior hyperparameters given sufficient statistics (standard NIW
+    /// conjugate update).
+    pub fn posterior(&self, s: &NiwStats) -> NiwPrior {
+        let d = self.dim();
+        let kappa_n = self.kappa + s.n;
+        let nu_n = self.nu + s.n;
+        let mut m_n = vec![0.0; d];
+        for i in 0..d {
+            m_n[i] = (self.kappa * self.m[i] + s.sum_x[i]) / kappa_n;
+        }
+        // Ψ' = Ψ + Σxxᵀ + κ m mᵀ − κ' m' m'ᵀ
+        let mut psi_n = self.psi.clone();
+        psi_n.add_assign(&s.sum_xxt);
+        psi_n.add_outer(&self.m, self.kappa);
+        psi_n.add_outer(&m_n, -kappa_n);
+        psi_n.symmetrize();
+        NiwPrior { kappa: kappa_n, m: m_n, nu: nu_n, psi: psi_n }
+    }
+
+    /// Draw (μ, Σ) from the posterior NIW — step (c)/(d) of the sweep.
+    pub fn sample_params(&self, s: &NiwStats, rng: &mut impl Rng) -> NiwParams {
+        let post = self.posterior(s);
+        let d = self.dim();
+        // Σ ~ IW(ν', Ψ'): need chol(Ψ'⁻¹).
+        let psi_inv = post
+            .psi
+            .spd_inverse()
+            .unwrap_or_else(|| regularized_inverse(&post.psi));
+        let chol_psi_inv = psi_inv
+            .cholesky()
+            .unwrap_or_else(|| Matrix::identity(d));
+        let mut sigma = inverse_wishart_chol(rng, post.nu, &chol_psi_inv);
+        sigma.symmetrize();
+        // μ | Σ ~ N(m', Σ/κ')
+        let sigma_over_kappa = sigma.scaled(1.0 / post.kappa);
+        let chol_sk = sigma_over_kappa
+            .cholesky()
+            .unwrap_or_else(|| Matrix::identity(d).scaled(1e-3));
+        let mu = mvn_chol(rng, &post.m, &chol_sk);
+        NiwParams::from_mu_sigma(mu, sigma)
+    }
+
+    /// A *diverse* posterior-ish draw used to (re)seed sub-cluster
+    /// competitions: the covariance is the posterior-mean Σ̂, but the mean is
+    /// drawn from the fitted predictive N(m', Σ̂) — i.e. a random data-scale
+    /// location inside the cluster, like a k-means seed. Plain posterior
+    /// draws concentrate as O(1/√n) and produce two near-identical
+    /// sub-components whose competition never breaks symmetry at large N.
+    pub fn sample_params_diverse(&self, s: &NiwStats, rng: &mut impl Rng) -> NiwParams {
+        let post = self.posterior(s);
+        let d = self.dim();
+        let denom = (post.nu - d as f64 - 1.0).max(1e-3);
+        let sigma = post.psi.scaled(1.0 / denom);
+        let chol = sigma
+            .cholesky()
+            .unwrap_or_else(|| regularize(&sigma).cholesky().unwrap());
+        let mu = mvn_chol(rng, &post.m, &chol);
+        NiwParams::from_mu_sigma(mu, sigma)
+    }
+
+    /// A tight "probe" draw for peeling restarts: mean at a random
+    /// data-scale location (like [`Self::sample_params_diverse`]) but with
+    /// covariance shrunk by `shrink` ≪ 1. Paired with the whole-cluster
+    /// envelope it proposes the *unbalanced* one-blob-vs-rest cuts that are
+    /// the only accepted first splits of a many-blob cluster (a balanced
+    /// halving pays −N·ln 2 in the DP partition prior and loses).
+    pub fn sample_params_probe(&self, s: &NiwStats, shrink: f64, rng: &mut impl Rng) -> NiwParams {
+        let post = self.posterior(s);
+        let d = self.dim();
+        let denom = (post.nu - d as f64 - 1.0).max(1e-3);
+        let sigma = post.psi.scaled(1.0 / denom);
+        let chol = sigma
+            .cholesky()
+            .unwrap_or_else(|| regularize(&sigma).cholesky().unwrap());
+        let mu = mvn_chol(rng, &post.m, &chol);
+        NiwParams::from_mu_sigma(mu, sigma.scaled(shrink.max(1e-6)))
+    }
+
+    /// Posterior-expected parameters: E[Σ] = Ψ'/(ν'−d−1), E[μ] = m'.
+    pub fn mean_params(&self, s: &NiwStats) -> NiwParams {
+        let post = self.posterior(s);
+        let d = self.dim();
+        let denom = (post.nu - d as f64 - 1.0).max(1e-3);
+        let sigma = post.psi.scaled(1.0 / denom);
+        NiwParams::from_mu_sigma(post.m.clone(), sigma)
+    }
+
+    /// log marginal likelihood of the points summarized by `s`:
+    ///
+    /// log f(C;λ) = −(n d/2) log π + log Γ_d(ν'/2) − log Γ_d(ν/2)
+    ///              + (ν/2) log|Ψ| − (ν'/2) log|Ψ'| + (d/2)(log κ − log κ').
+    pub fn log_marginal(&self, s: &NiwStats) -> f64 {
+        if s.n == 0.0 {
+            return 0.0;
+        }
+        let d = self.dim();
+        let post = self.posterior(s);
+        let logdet_psi = spd_logdet(&self.psi).expect("prior psi must be SPD");
+        let logdet_psi_n = spd_logdet(&post.psi)
+            .unwrap_or_else(|| spd_logdet(&regularize(&post.psi)).unwrap());
+        -(s.n * d as f64 / 2.0) * std::f64::consts::PI.ln()
+            + mvlgamma(d, post.nu / 2.0)
+            - mvlgamma(d, self.nu / 2.0)
+            + (self.nu / 2.0) * logdet_psi
+            - (post.nu / 2.0) * logdet_psi_n
+            + (d as f64 / 2.0) * (self.kappa.ln() - post.kappa.ln())
+    }
+}
+
+fn regularize(m: &Matrix) -> Matrix {
+    let mut r = m.clone();
+    let eps = 1e-9 * (1.0 + r.trace().abs() / r.rows() as f64);
+    for i in 0..r.rows() {
+        r[(i, i)] += eps;
+    }
+    r
+}
+
+fn regularized_inverse(m: &Matrix) -> Matrix {
+    regularize(m).spd_inverse().expect("regularized matrix must be SPD")
+}
+
+impl NiwParams {
+    pub fn from_mu_sigma(mu: Vec<f64>, sigma: Matrix) -> Self {
+        let d = mu.len();
+        let chol = sigma.cholesky().unwrap_or_else(|| regularize(&sigma).cholesky().unwrap());
+        let inv_chol = chol.lower_inverse();
+        let logdet = 2.0 * (0..d).map(|i| chol[(i, i)].ln()).sum::<f64>();
+        let log_norm = -0.5 * (d as f64 * LN_2PI + logdet);
+        Self { mu, sigma, chol, inv_chol, log_norm }
+    }
+
+    /// Full Gaussian log-density at `x` (no dropped constants).
+    pub fn log_likelihood(&self, x: &[f64]) -> f64 {
+        let d = self.mu.len();
+        debug_assert_eq!(x.len(), d);
+        let mut diff = vec![0.0; d];
+        for i in 0..d {
+            diff[i] = x[i] - self.mu[i];
+        }
+        let y = solve_lower(&self.chol, &diff);
+        let maha: f64 = y.iter().map(|v| v * v).sum();
+        self.log_norm - 0.5 * maha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::stats::special::lgamma;
+
+    fn stats_from(points: &[&[f64]], d: usize) -> NiwStats {
+        let mut s = NiwStats::empty(d);
+        for p in points {
+            s.add(p);
+        }
+        s
+    }
+
+    #[test]
+    fn log_likelihood_matches_closed_form_1d() {
+        // d=1: N(x; 0, 4) at x=2 → −0.5 ln(2π·4) − 0.5·(4/4)
+        let p = NiwParams::from_mu_sigma(vec![0.0], Matrix::from_vec(1, 1, vec![4.0]));
+        let expect = -0.5 * (2.0 * std::f64::consts::PI * 4.0).ln() - 0.5;
+        assert!((p.log_likelihood(&[2.0]) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_likelihood_2d_independent() {
+        let sigma = Matrix::diag(&[1.0, 9.0]);
+        let p = NiwParams::from_mu_sigma(vec![1.0, -1.0], sigma);
+        let x = [2.0, 2.0];
+        let e1 = -0.5 * (2.0 * std::f64::consts::PI).ln() - 0.5;
+        let e2 = -0.5 * (2.0 * std::f64::consts::PI * 9.0).ln() - 0.5 * 9.0 / 9.0;
+        assert!((p.log_likelihood(&x) - (e1 + e2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn posterior_reduces_to_prior_on_empty() {
+        let prior = NiwPrior::weak(3);
+        let post = prior.posterior(&prior.empty_stats());
+        assert_eq!(post, prior);
+    }
+
+    #[test]
+    fn posterior_mean_pulls_toward_data() {
+        let prior = NiwPrior::weak(2);
+        let s = stats_from(&[&[10.0, 10.0], &[12.0, 8.0], &[11.0, 9.0]], 2);
+        let post = prior.posterior(&s);
+        // κ=1, n=3 → m' = (0 + Σx)/4 = mean·3/4
+        assert!((post.m[0] - 33.0 / 4.0).abs() < 1e-12);
+        assert!(post.kappa == 4.0 && post.nu == prior.nu + 3.0);
+        // Ψ' stays SPD
+        assert!(post.psi.cholesky().is_some());
+    }
+
+    #[test]
+    fn marginal_1d_matches_student_t_formula() {
+        // For d=1 the NIW marginal is analytic:
+        // log f(x₁..xₙ) = −n/2 log π + lnΓ(ν'/2) − lnΓ(ν/2)
+        //   + (ν/2)ln ψ − (ν'/2) ln ψ' + ½(ln κ − ln κ').
+        let prior = NiwPrior::new(2.0, vec![0.5], 3.0, Matrix::from_vec(1, 1, vec![1.5]));
+        let pts: &[&[f64]] = &[&[0.2], &[-0.7], &[1.1]];
+        let s = stats_from(pts, 1);
+        let post = prior.posterior(&s);
+        let expect = -(3.0 / 2.0) * std::f64::consts::PI.ln() + lgamma(post.nu / 2.0)
+            - lgamma(prior.nu / 2.0)
+            + (prior.nu / 2.0) * 1.5f64.ln()
+            - (post.nu / 2.0) * post.psi[(0, 0)].ln()
+            + 0.5 * (2.0f64.ln() - post.kappa.ln());
+        assert!((prior.log_marginal(&s) - expect).abs() < 1e-10);
+    }
+
+    #[test]
+    fn marginal_is_chain_rule_consistent() {
+        // f(x1, x2) = f(x1) · f(x2 | x1): check via posterior chaining.
+        let prior = NiwPrior::weak(2);
+        let x1 = [0.3, -0.5];
+        let x2 = [0.9, 0.1];
+        let s12 = stats_from(&[&x1, &x2], 2);
+        let s1 = stats_from(&[&x1], 2);
+        let s2only = stats_from(&[&x2], 2);
+        let post1 = prior.posterior(&s1);
+        let joint = prior.log_marginal(&s12);
+        let chained = prior.log_marginal(&s1) + post1.log_marginal(&s2only);
+        assert!((joint - chained).abs() < 1e-9, "joint={joint} chained={chained}");
+    }
+
+    #[test]
+    fn marginal_prefers_tight_cluster() {
+        let prior = NiwPrior::weak(2);
+        let tight = stats_from(&[&[0.0, 0.0], &[0.1, 0.0], &[0.0, 0.1], &[0.1, 0.1]], 2);
+        let loose = stats_from(&[&[0.0, 0.0], &[5.0, 0.0], &[0.0, 5.0], &[5.0, 5.0]], 2);
+        assert!(prior.log_marginal(&tight) > prior.log_marginal(&loose));
+    }
+
+    #[test]
+    fn sampled_params_concentrate_with_data() {
+        let mut rng = Xoshiro256pp::seed_from_u64(99);
+        let prior = NiwPrior::weak(2);
+        let mut s = NiwStats::empty(2);
+        // 500 points near (5, -3) with small spread
+        let mut norm = crate::rng::Normal::new();
+        for _ in 0..500 {
+            let x = [5.0 + 0.1 * norm.sample(&mut rng), -3.0 + 0.1 * norm.sample(&mut rng)];
+            s.add(&x);
+        }
+        let mut mu_acc = [0.0, 0.0];
+        let reps = 200;
+        for _ in 0..reps {
+            let p = prior.sample_params(&s, &mut rng);
+            mu_acc[0] += p.mu[0];
+            mu_acc[1] += p.mu[1];
+        }
+        assert!((mu_acc[0] / reps as f64 - 5.0).abs() < 0.1);
+        assert!((mu_acc[1] / reps as f64 + 3.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn mean_params_are_posterior_expectation() {
+        let prior = NiwPrior::weak(2);
+        let s = stats_from(&[&[2.0, 0.0], &[4.0, 0.0]], 2);
+        let p = prior.mean_params(&s);
+        // m' = (0·1 + 6)/3 = 2 for x-coord
+        assert!((p.mu[0] - 2.0).abs() < 1e-12);
+        assert!(p.sigma.cholesky().is_some());
+    }
+}

@@ -1,0 +1,145 @@
+//! Special functions (the paper's `vcflib` log-gamma / `SpecialFunctions.jl`
+//! substrate): `lgamma`, `digamma`, multivariate log-gamma, log-beta.
+
+/// Lanczos approximation (g = 7, 9 terms) of log Γ(x) for x > 0.
+pub fn lgamma(x: f64) -> f64 {
+    assert!(x > 0.0, "lgamma domain: x > 0 (got {x})");
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1−x) = π / sin(πx)
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - lgamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Multivariate log-gamma: log Γ_d(x) = d(d−1)/4 · log π + Σ_{j=1..d} log Γ(x + (1−j)/2).
+pub fn mvlgamma(d: usize, x: f64) -> f64 {
+    let mut acc = (d * (d - 1)) as f64 / 4.0 * std::f64::consts::PI.ln();
+    for j in 1..=d {
+        acc += lgamma(x + (1.0 - j as f64) / 2.0);
+    }
+    acc
+}
+
+/// Digamma ψ(x) for x > 0 (recurrence up to x ≥ 6, then asymptotic series).
+pub fn digamma(x: f64) -> f64 {
+    assert!(x > 0.0, "digamma domain: x > 0 (got {x})");
+    let mut x = x;
+    let mut result = 0.0;
+    while x < 6.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    result + x.ln() - 0.5 * inv
+        - inv2
+            * (1.0 / 12.0
+                - inv2 * (1.0 / 120.0 - inv2 * (1.0 / 252.0 - inv2 * (1.0 / 240.0 - inv2 / 132.0))))
+}
+
+/// log B(α) = Σ log Γ(α_j) − log Γ(Σ α_j) — the Dirichlet normalizer.
+pub fn lbeta_vec(alphas: &[f64]) -> f64 {
+    let sum: f64 = alphas.iter().sum();
+    alphas.iter().map(|&a| lgamma(a)).sum::<f64>() - lgamma(sum)
+}
+
+/// log(n choose k) via lgamma.
+pub fn lchoose(n: f64, k: f64) -> f64 {
+    lgamma(n + 1.0) - lgamma(k + 1.0) - lgamma(n - k + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lgamma_integers() {
+        // Γ(n) = (n−1)!
+        let facts = [1.0, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0];
+        for (n, &f) in facts.iter().enumerate() {
+            let x = (n + 1) as f64;
+            assert!((lgamma(x) - (f as f64).ln()).abs() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn lgamma_half() {
+        // Γ(1/2) = sqrt(π)
+        assert!((lgamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-10);
+        // Γ(3/2) = sqrt(π)/2
+        let expect = (std::f64::consts::PI.sqrt() / 2.0).ln();
+        assert!((lgamma(1.5) - expect).abs() < 1e-10);
+    }
+
+    #[test]
+    fn lgamma_recurrence() {
+        // Γ(x+1) = x Γ(x)
+        for &x in &[0.1, 0.7, 2.3, 17.9, 100.5] {
+            assert!((lgamma(x + 1.0) - (lgamma(x) + x.ln())).abs() < 1e-9, "x={x}");
+        }
+    }
+
+    #[test]
+    fn mvlgamma_dim1_is_lgamma() {
+        for &x in &[0.7, 3.0, 12.5] {
+            assert!((mvlgamma(1, x) - lgamma(x)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mvlgamma_recurrence_dim2() {
+        // Γ_2(x) = sqrt(π) Γ(x) Γ(x − 1/2)
+        for &x in &[1.0, 2.5, 8.0] {
+            let expect = 0.5 * std::f64::consts::PI.ln() + lgamma(x) + lgamma(x - 0.5);
+            assert!((mvlgamma(2, x) - expect).abs() < 1e-10, "x={x}");
+        }
+    }
+
+    #[test]
+    fn digamma_known_values() {
+        // ψ(1) = −γ
+        let gamma_e = 0.577_215_664_901_532_9;
+        assert!((digamma(1.0) + gamma_e).abs() < 1e-10);
+        // ψ(1/2) = −γ − 2 ln 2
+        assert!((digamma(0.5) + gamma_e + 2.0 * 2f64.ln()).abs() < 1e-10);
+        // ψ(x+1) = ψ(x) + 1/x
+        for &x in &[0.3, 1.7, 9.2] {
+            assert!((digamma(x + 1.0) - digamma(x) - 1.0 / x).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn lbeta_matches_two_arg_beta() {
+        // B(a,b) = Γ(a)Γ(b)/Γ(a+b)
+        let v = lbeta_vec(&[2.0, 3.0]);
+        let expect = lgamma(2.0) + lgamma(3.0) - lgamma(5.0);
+        assert!((v - expect).abs() < 1e-12);
+        // B(2,3) = 1/12
+        assert!((v - (1.0f64 / 12.0).ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn lchoose_small() {
+        assert!((lchoose(5.0, 2.0) - 10f64.ln()).abs() < 1e-10);
+        assert!((lchoose(10.0, 0.0)).abs() < 1e-10);
+    }
+}

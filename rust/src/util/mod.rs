@@ -1,0 +1,7 @@
+//! Small self-contained substrates the paper's packages took from external
+//! libraries (jsoncpp, cnpy, …), rebuilt here with no dependencies.
+
+pub mod json;
+pub mod npy;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,361 @@
+//! `.npy` v1.0 reader/writer (the paper's `cnpy` / `NPZ.jl` substrate).
+//!
+//! Supports C-contiguous arrays of `f32`, `f64`, `i32`, `i64` in little
+//! endian, which covers the paper's `model_path` / `result_path` interchange
+//! (data matrices and label vectors).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Element type tag for a parsed array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F64,
+    I32,
+    I64,
+}
+
+impl Dtype {
+    fn descr(self) -> &'static str {
+        match self {
+            Dtype::F32 => "<f4",
+            Dtype::F64 => "<f8",
+            Dtype::I32 => "<i4",
+            Dtype::I64 => "<i8",
+        }
+    }
+    fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F64 | Dtype::I64 => 8,
+        }
+    }
+    fn from_descr(d: &str) -> Result<Dtype> {
+        // numpy writes '<f8'; '|' for byte-order-free and '=' native also occur.
+        let d = d.trim_start_matches(['<', '=', '|']);
+        Ok(match d {
+            "f4" => Dtype::F32,
+            "f8" => Dtype::F64,
+            "i4" => Dtype::I32,
+            "i8" => Dtype::I64,
+            other => bail!("unsupported npy dtype descr '{other}'"),
+        })
+    }
+}
+
+/// An n-dimensional array read from / written to `.npy`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl NpyArray {
+    pub fn dtype(&self) -> Dtype {
+        match &self.data {
+            NpyData::F32(_) => Dtype::F32,
+            NpyData::F64(_) => Dtype::F64,
+            NpyData::I32(_) => Dtype::I32,
+            NpyData::I64(_) => Dtype::I64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f64 regardless of storage type (copies).
+    pub fn to_f64(&self) -> Vec<f64> {
+        match &self.data {
+            NpyData::F32(v) => v.iter().map(|&x| x as f64).collect(),
+            NpyData::F64(v) => v.clone(),
+            NpyData::I32(v) => v.iter().map(|&x| x as f64).collect(),
+            NpyData::I64(v) => v.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// View as usize labels (fails on negatives / non-integers).
+    pub fn to_labels(&self) -> Result<Vec<usize>> {
+        let out: Option<Vec<usize>> = match &self.data {
+            NpyData::I32(v) => v.iter().map(|&x| usize::try_from(x).ok()).collect(),
+            NpyData::I64(v) => v.iter().map(|&x| usize::try_from(x).ok()).collect(),
+            NpyData::F32(v) => v
+                .iter()
+                .map(|&x| if x >= 0.0 && x.fract() == 0.0 { Some(x as usize) } else { None })
+                .collect(),
+            NpyData::F64(v) => v
+                .iter()
+                .map(|&x| if x >= 0.0 && x.fract() == 0.0 { Some(x as usize) } else { None })
+                .collect(),
+        };
+        out.context("npy array is not a non-negative integer label vector")
+    }
+}
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Parse the python-dict literal numpy writes in the header, e.g.
+/// `{'descr': '<f8', 'fortran_order': False, 'shape': (3, 4), }`
+fn parse_header(h: &str) -> Result<(Dtype, bool, Vec<usize>)> {
+    fn field<'a>(h: &'a str, key: &str) -> Result<&'a str> {
+        let pat = format!("'{key}':");
+        let i = h.find(&pat).with_context(|| format!("npy header missing '{key}'"))?;
+        Ok(h[i + pat.len()..].trim_start())
+    }
+    let descr_rest = field(h, "descr")?;
+    if !descr_rest.starts_with('\'') {
+        bail!("structured npy dtypes unsupported");
+    }
+    let end = descr_rest[1..].find('\'').context("unterminated descr")? + 1;
+    let dtype = Dtype::from_descr(&descr_rest[1..end])?;
+
+    let fortran_rest = field(h, "fortran_order")?;
+    let fortran = fortran_rest.starts_with("True");
+
+    let shape_rest = field(h, "shape")?;
+    if !shape_rest.starts_with('(') {
+        bail!("bad shape in npy header");
+    }
+    let close = shape_rest.find(')').context("unterminated shape")?;
+    let inner = &shape_rest[1..close];
+    let mut shape = Vec::new();
+    for tok in inner.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        shape.push(tok.parse::<usize>().with_context(|| format!("bad dim '{tok}'"))?);
+    }
+    Ok((dtype, fortran, shape))
+}
+
+/// Read an `.npy` file.
+pub fn read(path: impl AsRef<Path>) -> Result<NpyArray> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    read_bytes(&bytes)
+}
+
+/// Read an `.npy` image from memory.
+pub fn read_bytes(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        bail!("not an npy file (bad magic)");
+    }
+    let major = bytes[6];
+    let (header_len, header_start) = match major {
+        1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10),
+        2 | 3 => {
+            if bytes.len() < 12 {
+                bail!("truncated npy v2 header");
+            }
+            (u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize, 12)
+        }
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header_end = header_start + header_len;
+    if bytes.len() < header_end {
+        bail!("truncated npy header");
+    }
+    let header = std::str::from_utf8(&bytes[header_start..header_end])
+        .context("npy header is not utf-8")?;
+    let (dtype, fortran, shape) = parse_header(header)?;
+    if fortran && shape.len() > 1 {
+        bail!("fortran_order npy arrays unsupported");
+    }
+    let count: usize = shape.iter().product();
+    let body = &bytes[header_end..];
+    if body.len() < count * dtype.size() {
+        bail!("npy body too short: want {} elements", count);
+    }
+    let data = match dtype {
+        Dtype::F32 => NpyData::F32(
+            body.chunks_exact(4).take(count).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        Dtype::F64 => NpyData::F64(
+            body.chunks_exact(8).take(count).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        Dtype::I32 => NpyData::I32(
+            body.chunks_exact(4).take(count).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+        Dtype::I64 => NpyData::I64(
+            body.chunks_exact(8).take(count).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect(),
+        ),
+    };
+    Ok(NpyArray { shape, data })
+}
+
+fn header_string(dtype: Dtype, shape: &[usize]) -> Vec<u8> {
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!("({})", shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")),
+    };
+    let mut h = format!(
+        "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+        dtype.descr(),
+        shape_str
+    );
+    // Pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64, ending in \n.
+    let unpadded = 10 + h.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    h.push_str(&" ".repeat(pad));
+    h.push('\n');
+    h.into_bytes()
+}
+
+/// Write an `.npy` file (v1.0, little endian, C order).
+pub fn write(path: impl AsRef<Path>, arr: &NpyArray) -> Result<()> {
+    let count: usize = arr.shape.iter().product();
+    let n = match &arr.data {
+        NpyData::F32(v) => v.len(),
+        NpyData::F64(v) => v.len(),
+        NpyData::I32(v) => v.len(),
+        NpyData::I64(v) => v.len(),
+    };
+    if n != count {
+        bail!("shape {:?} does not match data length {}", arr.shape, n);
+    }
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let header = header_string(arr.dtype(), &arr.shape);
+    f.write_all(MAGIC)?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(&header)?;
+    match &arr.data {
+        NpyData::F32(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        NpyData::F64(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        NpyData::I32(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        NpyData::I64(v) => {
+            for x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Convenience: write a 2-D f64 row-major matrix.
+pub fn write_matrix_f64(path: impl AsRef<Path>, rows: usize, cols: usize, data: &[f64]) -> Result<()> {
+    write(path, &NpyArray { shape: vec![rows, cols], data: NpyData::F64(data.to_vec()) })
+}
+
+/// Convenience: read any 2-D numeric array as (rows, cols, row-major f64).
+pub fn read_matrix_f64(path: impl AsRef<Path>) -> Result<(usize, usize, Vec<f64>)> {
+    let arr = read(path)?;
+    if arr.shape.len() != 2 {
+        bail!("expected 2-D array, got shape {:?}", arr.shape);
+    }
+    Ok((arr.shape[0], arr.shape[1], arr.to_f64()))
+}
+
+/// Read raw bytes from a reader until EOF (helper for streamed npy bodies).
+pub fn read_all(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dpmm_npy_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn roundtrip_f64_2d() {
+        let arr = NpyArray {
+            shape: vec![2, 3],
+            data: NpyData::F64(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+        };
+        let p = tmp("f64_2d.npy");
+        write(&p, &arr).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(back, arr);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes_1d() {
+        for data in [
+            NpyData::F32(vec![1.5, -2.5]),
+            NpyData::F64(vec![1e-300, 2.0]),
+            NpyData::I32(vec![-7, 9]),
+            NpyData::I64(vec![1 << 40, -3]),
+        ] {
+            let arr = NpyArray { shape: vec![2], data };
+            let p = tmp("dtypes.npy");
+            write(&p, &arr).unwrap();
+            assert_eq!(read(&p).unwrap(), arr);
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let h = header_string(Dtype::F64, &[100, 32]);
+        assert_eq!((10 + h.len()) % 64, 0);
+        assert_eq!(*h.last().unwrap(), b'\n');
+    }
+
+    #[test]
+    fn labels_conversion() {
+        let arr = NpyArray { shape: vec![3], data: NpyData::I64(vec![0, 2, 1]) };
+        assert_eq!(arr.to_labels().unwrap(), vec![0, 2, 1]);
+        let bad = NpyArray { shape: vec![1], data: NpyData::I64(vec![-1]) };
+        assert!(bad.to_labels().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(read_bytes(b"NOTNUMPYxxxx").is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected_on_write() {
+        let arr = NpyArray { shape: vec![4], data: NpyData::F32(vec![0.0; 3]) };
+        assert!(write(tmp("bad.npy"), &arr).is_err());
+    }
+
+    #[test]
+    fn parses_numpy_style_header() {
+        let (d, f, s) =
+            parse_header("{'descr': '<f8', 'fortran_order': False, 'shape': (3, 4), }").unwrap();
+        assert_eq!(d, Dtype::F64);
+        assert!(!f);
+        assert_eq!(s, vec![3, 4]);
+        let (_, _, s1) =
+            parse_header("{'descr': '<i4', 'fortran_order': False, 'shape': (7,), }").unwrap();
+        assert_eq!(s1, vec![7]);
+    }
+}

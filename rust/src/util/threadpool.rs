@@ -1,0 +1,137 @@
+//! A small scoped fork-join helper (the paper's `omp parallel for` /
+//! Julia `@distributed` substrate for the single-machine multi-core path).
+//!
+//! [`parallel_map`] splits `items` into contiguous chunks, runs `f` on worker
+//! threads via `std::thread::scope`, and returns results in input order.
+//! Threads are spawned per call; for the shard sizes this crate works with
+//! (≥ thousands of points per task) spawn cost is noise, and scoped threads
+//! let closures borrow the data shards without `Arc` plumbing.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default (respects `DPMM_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("DPMM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Map `f` over `items` using up to `threads` workers; results in input order.
+///
+/// Work-stealing is index-based: workers atomically claim the next item, so
+/// uneven task costs (e.g. shards with different live-cluster mixes) balance.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.into_inner().unwrap().expect("worker panicked")).collect()
+}
+
+/// Parallel for over `0..n` with no results collected.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |i, &x| i + x), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u8> = vec![];
+        assert!(parallel_map(&items, 4, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        use std::sync::atomic::AtomicU64;
+        let sum = AtomicU64::new(0);
+        parallel_for(100, 7, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn uneven_workloads_balance() {
+        // Tasks with wildly different costs still all complete and in order.
+        let items: Vec<usize> = (0..64).collect();
+        let out = parallel_map(&items, 4, |_, &x| {
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) as u64 {
+                acc = acc.wrapping_add(i);
+            }
+            (x, acc)
+        });
+        for (i, (x, _)) in out.iter().enumerate() {
+            assert_eq!(i, *x);
+        }
+    }
+}

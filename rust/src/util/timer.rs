@@ -1,0 +1,105 @@
+//! Wall-clock timing helpers used by the coordinator metrics and the bench
+//! harnesses (the crate has no `criterion`; benches are `harness = false`
+//! binaries built on these).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named phase durations.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it under `name` (accumulates on repeats).
+    pub fn time<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(name, t0.elapsed());
+        r
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some((_, acc)) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            *acc += d;
+        } else {
+            self.phases.push((name.to_string(), d));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or(Duration::ZERO)
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn phases(&self) -> &[(String, Duration)] {
+        &self.phases
+    }
+
+    /// One-line summary like `assign=1.23s stats=0.45s`.
+    pub fn summary(&self) -> String {
+        self.phases
+            .iter()
+            .map(|(n, d)| format!("{}={:.3}s", n, d.as_secs_f64()))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Run `f` `iters` times, return (mean, min, max) seconds per call.
+pub fn bench_loop<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64, f64) {
+    assert!(iters > 0);
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    (mean, min, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_by_name() {
+        let mut t = PhaseTimer::new();
+        t.add("a", Duration::from_millis(10));
+        t.add("a", Duration::from_millis(5));
+        t.add("b", Duration::from_millis(1));
+        assert_eq!(t.get("a"), Duration::from_millis(15));
+        assert_eq!(t.total(), Duration::from_millis(16));
+        assert!(t.summary().starts_with("a=0.015s"));
+    }
+
+    #[test]
+    fn time_records_and_returns() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t.get("work") > Duration::ZERO);
+    }
+
+    #[test]
+    fn bench_loop_stats_ordered() {
+        let (mean, min, max) = bench_loop(5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(min <= mean && mean <= max);
+    }
+}

@@ -1,0 +1,153 @@
+//! Failure-injection tests: malformed inputs, protocol violations, dead
+//! workers, bad configurations — the system must fail loudly and cleanly,
+//! never hang or corrupt state.
+
+use dpmm::backend::distributed::wire::{read_message, request, write_message, Message};
+use dpmm::backend::distributed::{DistributedBackend, DistributedConfig};
+use dpmm::backend::Backend;
+use dpmm::config::{BackendChoice, DpmmParams};
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::{Data, GmmSpec};
+use dpmm::prelude::*;
+use dpmm::stats::{NiwPrior, Prior};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+#[test]
+fn connecting_to_dead_worker_errors_fast() {
+    // Bind-then-drop gives an address that refuses connections.
+    let addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(0);
+    let data = Arc::new(Data::new(4, 1, vec![0.0, 1.0, 2.0, 3.0]));
+    let res = DistributedBackend::new(
+        data,
+        Prior::Niw(NiwPrior::weak(1)),
+        DistributedConfig { workers: vec![addr], worker_threads: 1 },
+        &mut rng,
+    );
+    assert!(res.is_err());
+}
+
+#[test]
+fn worker_rejects_garbage_bytes() {
+    let addr = dpmm::backend::distributed::worker::spawn_local().unwrap();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    // A frame with a valid length but garbage payload.
+    stream.write_all(&8u32.to_le_bytes()).unwrap();
+    stream.write_all(&[0xde, 0xad, 0xbe, 0xef, 0x00, 0x01, 0x02, 0x03]).unwrap();
+    stream.flush().unwrap();
+    // Worker should drop the connection (decode error) rather than hang.
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+    let reply = read_message(&mut stream);
+    assert!(reply.is_err(), "worker should not answer garbage with success");
+}
+
+#[test]
+fn worker_error_replies_are_propagated() {
+    let addr = dpmm::backend::distributed::worker::spawn_local().unwrap();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    // RandomizeLabels before Init → structured Error reply.
+    let err = request(&mut stream, &Message::RandomizeLabels { k: 3 }).unwrap_err();
+    assert!(err.to_string().contains("Init"), "{err}");
+    // The connection survives the error: Init afterwards succeeds.
+    let init = Message::Init {
+        d: 1,
+        prior: Prior::Niw(NiwPrior::weak(1)),
+        seed: 0,
+        threads: 1,
+        x: vec![0.0, 1.0],
+    };
+    assert_eq!(request(&mut stream, &init).unwrap(), Message::Ack);
+    write_message(&mut stream, &Message::Shutdown).unwrap();
+}
+
+#[test]
+fn oversized_frame_rejected() {
+    let addr = dpmm::backend::distributed::worker::spawn_local().unwrap();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    // Claim a 2 GiB frame; worker must refuse instead of allocating.
+    stream.write_all(&(2u32 << 30).to_le_bytes()).unwrap();
+    stream.flush().unwrap();
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+    assert!(read_message(&mut stream).is_err());
+}
+
+#[test]
+fn fit_with_nonexistent_artifact_dir_fails_cleanly() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let ds = GmmSpec::default_with(100, 2, 2).generate(&mut rng);
+    let err = DpmmFit::new(DpmmParams::gaussian_default(2))
+        .backend(BackendChoice::Xla {
+            artifact_dir: "/definitely/not/here".into(),
+            shard_size: 256,
+            kernel: "auto".into(),
+            crossover: 0,
+        })
+        .fit(&ds.points)
+        .unwrap_err();
+    assert!(err.to_string().contains("artifacts") || err.to_string().contains("manifest"));
+}
+
+#[test]
+fn fit_rejects_dimension_mismatch_and_empty_worker_list() {
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let ds = GmmSpec::default_with(100, 3, 2).generate(&mut rng);
+    assert!(DpmmFit::new(DpmmParams::gaussian_default(2)).fit(&ds.points).is_err());
+    let err = DpmmFit::new(DpmmParams::gaussian_default(3))
+        .backend(BackendChoice::Distributed { workers: vec![], worker_threads: 1 })
+        .fit(&ds.points)
+        .unwrap_err();
+    assert!(err.to_string().contains("worker"));
+}
+
+#[test]
+fn malformed_npy_rejected() {
+    use dpmm::util::npy;
+    let dir = std::env::temp_dir().join(format!("dpmm_fail_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bad.npy");
+    std::fs::write(&p, b"this is not an npy file at all").unwrap();
+    assert!(npy::read(&p).is_err());
+    // Truncated body: valid header claiming more data than present.
+    let arr = npy::NpyArray { shape: vec![4], data: npy::NpyData::F64(vec![1.0, 2.0, 3.0, 4.0]) };
+    let good = dir.join("good.npy");
+    npy::write(&good, &arr).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    let truncated = &bytes[..bytes.len() - 8];
+    assert!(npy::read_bytes(truncated).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_params_json_reports_offsets() {
+    let err = DpmmParams::from_json("{\"alpha\": ,}").unwrap_err();
+    assert!(err.to_string().contains("json") || err.to_string().contains("parsing"));
+}
+
+#[test]
+fn backend_step_with_zero_clusters_is_impossible_by_construction() {
+    // DpmmState::new(k_init=0) must panic (assert) rather than produce a
+    // degenerate sampler.
+    let result = std::panic::catch_unwind(|| {
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        DpmmState_new_zero(&mut rng)
+    });
+    assert!(result.is_err());
+}
+
+fn DpmmState_new_zero(rng: &mut Xoshiro256pp) -> dpmm::model::DpmmState {
+    dpmm::model::DpmmState::new(1.0, Prior::Niw(NiwPrior::weak(1)), 0, 10, rng)
+}
+
+#[test]
+fn shard_remap_handles_out_of_range_labels_defensively() {
+    use dpmm::backend::shard::{shard_remap, Shard};
+    let mut shard = Shard::new(0..3, Xoshiro256pp::seed_from_u64(0));
+    shard.z = vec![0, 7, 1]; // 7 is out of the map's range
+    shard_remap(&mut shard, &[Some(0), Some(1)]);
+    assert_eq!(shard.z, vec![0, 0, 1], "out-of-range label reassigned to 0");
+}

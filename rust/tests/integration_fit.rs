@@ -1,0 +1,213 @@
+//! End-to-end integration tests: full fits through every backend on the
+//! same data, JSON-config-driven runs, and npy round trips.
+
+use dpmm::config::{BackendChoice, DpmmParams};
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::GmmSpec;
+use dpmm::metrics::nmi;
+use dpmm::prelude::*;
+use dpmm::util::{json, npy};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists()
+}
+
+fn gmm(n: usize, d: usize, k: usize, seed: u64) -> dpmm::datagen::Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    GmmSpec::default_with(n, d, k).generate(&mut rng)
+}
+
+#[test]
+fn native_and_xla_backends_agree_on_easy_data() {
+    let ds = gmm(4000, 2, 4, 100);
+    let fit_native = DpmmFit::new(DpmmParams::gaussian_default(2))
+        .iterations(50)
+        .seed(9)
+        .backend(BackendChoice::Native { threads: 2, shard_size: 1024 })
+        .fit(&ds.points)
+        .unwrap();
+    let n_nmi = nmi(&ds.labels, &fit_native.labels);
+    assert!(n_nmi > 0.9, "native NMI={n_nmi}");
+    if artifacts_available() {
+        let fit_xla = DpmmFit::new(DpmmParams::gaussian_default(2))
+            .iterations(80)
+            .seed(9)
+            .backend(BackendChoice::Xla {
+                artifact_dir: format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+                shard_size: 4096,
+                kernel: "auto".into(),
+                crossover: 640_000,
+            })
+            .fit(&ds.points)
+            .unwrap();
+        let x_nmi = nmi(&ds.labels, &fit_xla.labels);
+        assert!(x_nmi > 0.85, "xla NMI={x_nmi}");
+        // The two backends should largely agree with each other (they are
+        // independent MCMC runs, so demand consistency, not identity).
+        let cross = nmi(&fit_native.labels, &fit_xla.labels);
+        assert!(cross > 0.85, "backend cross-agreement NMI={cross}");
+    }
+}
+
+#[test]
+fn distributed_full_fit_reaches_native_quality() {
+    use dpmm::backend::distributed::worker::spawn_local;
+    let ds = gmm(6000, 3, 5, 200);
+    let workers = vec![spawn_local().unwrap(), spawn_local().unwrap(), spawn_local().unwrap()];
+    let fit = DpmmFit::new(DpmmParams::gaussian_default(3))
+        .iterations(60)
+        .seed(4)
+        .backend(BackendChoice::Distributed { workers, worker_threads: 1 })
+        .fit(&ds.points)
+        .unwrap();
+    let score = nmi(&ds.labels, &fit.labels);
+    assert!(score > 0.9, "distributed NMI={score} K={}", fit.num_clusters());
+    assert_eq!(fit.labels.len(), 6000);
+}
+
+#[test]
+fn json_params_drive_a_full_fit() {
+    let ds = gmm(2000, 2, 3, 300);
+    let params_json = r#"{
+        "alpha": 8.0,
+        "prior_type": "Gaussian",
+        "prior": {"kappa": 1.0, "m": [0, 0], "nu": 5.0, "psi": [1, 0, 0, 1]},
+        "iterations": 40,
+        "burn_out": 4,
+        "seed": 11
+    }"#;
+    let params = DpmmParams::from_json(params_json).unwrap();
+    let fit = DpmmFit::new(params).fit(&ds.points).unwrap();
+    assert!(nmi(&ds.labels, &fit.labels) > 0.85);
+    // Result JSON round-trips through our own parser.
+    let out = json::to_string_pretty(&fit.to_json(Some(&ds.labels)));
+    let parsed = json::parse(&out).unwrap();
+    assert!(parsed.get("nmi").unwrap().as_f64().unwrap() > 0.85);
+}
+
+#[test]
+fn npy_data_roundtrip_through_fit() {
+    let ds = gmm(1000, 2, 2, 400);
+    let dir = std::env::temp_dir().join(format!("dpmm_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let data_path = dir.join("points.npy");
+    npy::write_matrix_f64(&data_path, ds.points.n, ds.points.d, &ds.points.values).unwrap();
+    let (n, d, values) = npy::read_matrix_f64(&data_path).unwrap();
+    assert_eq!((n, d), (1000, 2));
+    let data = dpmm::datagen::Data::new(n, d, values);
+    let fit = DpmmFit::new(DpmmParams::gaussian_default(2))
+        .iterations(30)
+        .seed(2)
+        .fit(&data)
+        .unwrap();
+    assert!(nmi(&ds.labels, &fit.labels) > 0.9);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_binary_generate_fit_roundtrip() {
+    let bin = env!("CARGO_BIN_EXE_dpmm");
+    let dir = std::env::temp_dir().join(format!("dpmm_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let data = dir.join("data.npy");
+    let labels = dir.join("labels.npy");
+    let result = dir.join("result.json");
+    let out = std::process::Command::new(bin)
+        .args([
+            "generate",
+            "--kind=gmm",
+            "--n=3000",
+            "--d=2",
+            "--k=3",
+            "--seed=5",
+            &format!("--out={}", data.display()),
+            &format!("--labels_out={}", labels.display()),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "generate failed: {}", String::from_utf8_lossy(&out.stderr));
+    let out = std::process::Command::new(bin)
+        .args([
+            "fit",
+            &format!("--data={}", data.display()),
+            &format!("--labels={}", labels.display()),
+            "--iterations=40",
+            "--seed=1",
+            &format!("--result_path={}", result.display()),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "fit failed: {}", String::from_utf8_lossy(&out.stderr));
+    let parsed = json::parse(&std::fs::read_to_string(&result).unwrap()).unwrap();
+    let score = parsed.get("nmi").unwrap().as_f64().unwrap();
+    assert!(score > 0.85, "CLI fit NMI={score}");
+    assert_eq!(parsed.get("labels").unwrap().as_arr().unwrap().len(), 3000);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn multinomial_xla_fit_works() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rng = Xoshiro256pp::seed_from_u64(1000);
+    let ds = MultinomialSpec::default_with(3000, 16, 4).generate(&mut rng);
+    let fit = DpmmFit::new(DpmmParams::multinomial_default(16))
+        .iterations(50)
+        .seed(3)
+        .backend(BackendChoice::Xla {
+            artifact_dir: format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+            shard_size: 4096,
+            kernel: "auto".into(),
+            crossover: 640_000,
+        })
+        .fit(&ds.points)
+        .unwrap();
+    let score = nmi(&ds.labels, &fit.labels);
+    assert!(score > 0.75, "xla multinomial NMI={score} K={}", fit.num_clusters());
+}
+
+#[test]
+fn final_polish_freezes_k() {
+    // With final_polish_iters = iterations, no split/merge ever fires.
+    let ds = gmm(1000, 2, 3, 77);
+    let mut params = DpmmParams::gaussian_default(2);
+    params.iterations = 20;
+    params.final_polish_iters = 20;
+    params.seed = 1;
+    let fit = DpmmFit::new(params).fit(&ds.points).unwrap();
+    assert_eq!(fit.num_clusters(), 1, "no moves allowed → K stays at init");
+    assert!(fit.history.iter().all(|r| r.splits == 0 && r.merges == 0));
+}
+
+#[test]
+fn checkpoint_save_and_resume() {
+    use dpmm::coordinator::Checkpoint;
+    let ds = gmm(2000, 2, 3, 555);
+    let dir = std::env::temp_dir().join(format!("dpmm_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt_path = dir.join("fit.ckpt");
+    // Phase 1: 30 iterations with a checkpoint every 10.
+    let mut params = DpmmParams::gaussian_default(2);
+    params.iterations = 30;
+    params.seed = 8;
+    params.checkpoint_path = Some(ckpt_path.display().to_string());
+    params.checkpoint_every = 10;
+    let fit1 = DpmmFit::new(params.clone()).fit(&ds.points).unwrap();
+    assert!(ckpt_path.exists(), "checkpoint must be written");
+    // Phase 2: resume and run to 60 total iterations.
+    let mut rng = Xoshiro256pp::seed_from_u64(99);
+    let ckpt = Checkpoint::load(&ckpt_path, &mut rng).unwrap();
+    assert_eq!(ckpt.iter, 30);
+    assert_eq!(ckpt.labels.len(), 2000);
+    let mut params2 = params;
+    params2.iterations = 60;
+    params2.checkpoint_path = None;
+    let fit2 = DpmmFit::new(params2).resume(&ds.points, ckpt).unwrap();
+    // Resumed fit continues for the remaining 30 iterations and stays good.
+    assert_eq!(fit2.history.len(), 30);
+    assert!(nmi(&ds.labels, &fit2.labels) > 0.85, "resumed NMI too low");
+    assert!(fit2.num_clusters() >= fit1.num_clusters().saturating_sub(1));
+    std::fs::remove_dir_all(&dir).ok();
+}

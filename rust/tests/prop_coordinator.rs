@@ -1,0 +1,242 @@
+//! Property-based tests on coordinator/backend invariants.
+//!
+//! No proptest offline, so this is a small hand-rolled property harness: a
+//! seeded generator produces random datasets, model states, and random
+//! sequences of sampler operations (steps, splits, merges, removals); each
+//! case asserts the structural invariants that the distributed design
+//! depends on. 64 cases per property, deterministic by seed, with the
+//! failing seed printed on assertion failure.
+
+use dpmm::backend::native::{NativeBackend, NativeConfig};
+use dpmm::backend::Backend;
+use dpmm::datagen::{Data, GmmSpec};
+use dpmm::model::DpmmState;
+use dpmm::prelude::*;
+use dpmm::sampler::{
+    age_clusters, apply_merge, apply_split, propose_merges, propose_splits, sample_params,
+    sample_sub_weights, sample_weights, SamplerOptions, StepParams,
+};
+use dpmm::stats::{Prior, Stats};
+use std::sync::Arc;
+
+const CASES: u64 = 64;
+
+struct Case {
+    rng: Xoshiro256pp,
+    state: DpmmState,
+    backend: NativeBackend,
+    data: Arc<Data>,
+    opts: SamplerOptions,
+}
+
+fn random_case(seed: u64) -> Case {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let d = 1 + rng.next_range(3);
+    let k_true = 1 + rng.next_range(5);
+    let n = 200 + rng.next_range(1800);
+    let ds = GmmSpec::default_with(n, d, k_true).generate(&mut rng);
+    let data = Arc::new(ds.points);
+    let prior = Prior::Niw(dpmm::stats::NiwPrior::weak(d));
+    let shard_size = 64 + rng.next_range(512);
+    let threads = 1 + rng.next_range(4);
+    let backend =
+        NativeBackend::new(Arc::clone(&data), prior.clone(), NativeConfig { shard_size, threads }, &mut rng);
+    let k_init = 1 + rng.next_range(3);
+    let state = DpmmState::new(0.5 + rng.next_f64() * 20.0, prior, k_init, n, &mut rng);
+    let opts = SamplerOptions {
+        burnout: rng.next_range(3),
+        max_clusters: 24,
+        ..Default::default()
+    };
+    Case { rng, state, backend, data, opts }
+}
+
+/// One full coordinator iteration (mirrors DpmmFit::fit_with_backend).
+fn iterate(case: &mut Case) {
+    let Case { rng, state, backend, opts, .. } = case;
+    sample_weights(state, rng);
+    sample_sub_weights(state, rng);
+    sample_params(state, opts, rng);
+    let snap = StepParams::snapshot(state);
+    let bundle = backend.step(&snap).unwrap();
+    state.set_stats(bundle.cluster_stats(), bundle.sub_stats);
+    let mut empties = state.empty_clusters();
+    if empties.len() == state.k() && !empties.is_empty() {
+        empties.pop();
+    }
+    if !empties.is_empty() {
+        let map = state.remove_clusters(&empties);
+        backend.remap(&map).unwrap();
+    }
+    age_clusters(state);
+    let splits = propose_splits(state, opts, rng);
+    if !splits.is_empty() {
+        let ops: Vec<_> = splits.iter().map(|&t| apply_split(state, t, rng)).collect();
+        backend.apply_splits(&ops).unwrap();
+    }
+    let merges = propose_merges(state, opts, rng);
+    if !merges.is_empty() {
+        let mut absorbed = Vec::new();
+        for op in &merges {
+            apply_merge(state, op.keep, op.absorb, rng);
+            absorbed.push(op.absorb);
+        }
+        backend.apply_merges(&merges).unwrap();
+        let map = state.remove_clusters(&absorbed);
+        backend.remap(&map).unwrap();
+    }
+}
+
+/// Invariant: every label refers to a live cluster, after any number of
+/// iterations with arbitrary split/merge/removal sequences.
+#[test]
+fn prop_labels_always_in_range() {
+    for seed in 0..CASES {
+        let mut case = random_case(seed);
+        for iter in 0..6 {
+            iterate(&mut case);
+            let k = case.state.k();
+            let labels = case.backend.labels().unwrap();
+            for (i, &l) in labels.iter().enumerate() {
+                assert!(l < k, "seed={seed} iter={iter}: label {l} ≥ K={k} at point {i}");
+            }
+        }
+    }
+}
+
+/// Invariant: aggregated statistics exactly account for every point —
+/// counts sum to N and Σx matches the data column sums (the suff-stats-only
+/// wire contract).
+#[test]
+fn prop_stats_conserve_mass() {
+    for seed in 0..CASES {
+        let mut case = random_case(seed ^ 0xA5A5);
+        for iter in 0..4 {
+            let Case { rng, state, backend, opts, .. } = &mut case;
+            sample_weights(state, rng);
+            sample_sub_weights(state, rng);
+            sample_params(state, opts, rng);
+            let snap = StepParams::snapshot(state);
+            let bundle = backend.step(&snap).unwrap();
+            let n_total: f64 = bundle.cluster_stats().iter().map(Stats::count).sum();
+            assert_eq!(
+                n_total as usize,
+                case.data.n,
+                "seed={seed} iter={iter}: stats count {n_total} != N {}",
+                case.data.n
+            );
+            let mut sumx = vec![0.0; case.data.d];
+            for s in bundle.cluster_stats() {
+                if let Stats::Gauss(g) = s {
+                    for (a, &b) in sumx.iter_mut().zip(&g.sum_x) {
+                        *a += b;
+                    }
+                }
+            }
+            let mut expect = vec![0.0; case.data.d];
+            for row in case.data.rows() {
+                for (a, &b) in expect.iter_mut().zip(row) {
+                    *a += b;
+                }
+            }
+            for (j, (a, b)) in sumx.iter().zip(&expect).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-6 * (1.0 + b.abs()),
+                    "seed={seed} iter={iter} dim={j}: Σx {a} != {b}"
+                );
+            }
+            case.state.set_stats(bundle.cluster_stats(), bundle.sub_stats);
+            age_clusters(&mut case.state);
+        }
+    }
+}
+
+/// Invariant: labels() recomputed from stats equals backend counts — i.e.
+/// the statistics the coordinator sees always match the labels the backend
+/// holds (no drift through splits/merges/removals).
+#[test]
+fn prop_stats_match_labels() {
+    for seed in 0..CASES {
+        let mut case = random_case(seed ^ 0x5A5A);
+        for _ in 0..5 {
+            iterate(&mut case);
+        }
+        // After the last iterate, state stats are stale w.r.t. split/merge
+        // label rewrites; run one more pure step to resync and compare.
+        let Case { rng, state, backend, opts, .. } = &mut case;
+        sample_weights(state, rng);
+        sample_sub_weights(state, rng);
+        sample_params(state, opts, rng);
+        let snap = StepParams::snapshot(state);
+        let bundle = backend.step(&snap).unwrap();
+        let labels = backend.labels().unwrap();
+        let mut counts = vec![0usize; snap.k()];
+        for &l in &labels {
+            counts[l] += 1;
+        }
+        for (k, s) in bundle.cluster_stats().iter().enumerate() {
+            assert_eq!(
+                s.count() as usize, counts[k],
+                "seed={seed}: cluster {k} stats/label mismatch"
+            );
+        }
+    }
+}
+
+/// Invariant: merge proposals never involve one cluster twice, regardless
+/// of state (paper §4.3's consistency requirement).
+#[test]
+fn prop_merge_conflict_freedom() {
+    for seed in 0..CASES {
+        let mut case = random_case(seed ^ 0x1234);
+        for _ in 0..4 {
+            iterate(&mut case);
+        }
+        let Case { rng, state, opts, .. } = &mut case;
+        // Force everything mergeable.
+        for c in state.clusters.iter_mut() {
+            c.age = 100;
+        }
+        let ops = propose_merges(state, opts, rng);
+        let mut seen = std::collections::HashSet::new();
+        for op in &ops {
+            assert!(seen.insert(op.keep), "seed={seed}: cluster {} in two merges", op.keep);
+            assert!(seen.insert(op.absorb), "seed={seed}: cluster {} in two merges", op.absorb);
+        }
+    }
+}
+
+/// Invariant: weights stay a probability vector through every iteration.
+#[test]
+fn prop_weights_normalized() {
+    for seed in 0..CASES / 2 {
+        let mut case = random_case(seed ^ 0xBEEF);
+        for iter in 0..5 {
+            iterate(&mut case);
+            let total: f64 = case.state.clusters.iter().map(|c| c.weight).sum();
+            // After splits/merges weights are only re-normalized at the next
+            // sample_weights; totals must still be positive and ≤ 1 + ε.
+            assert!(
+                total > 0.0 && total < 1.0 + 1e-6,
+                "seed={seed} iter={iter}: weight total {total}"
+            );
+        }
+    }
+}
+
+/// Invariant: K never exceeds max_clusters.
+#[test]
+fn prop_k_respects_cap() {
+    for seed in 0..CASES / 2 {
+        let mut case = random_case(seed ^ 0xCAFE);
+        case.opts.max_clusters = 4;
+        for iter in 0..8 {
+            iterate(&mut case);
+            assert!(
+                case.state.k() <= 4,
+                "seed={seed} iter={iter}: K={} exceeded cap",
+                case.state.k()
+            );
+        }
+    }
+}

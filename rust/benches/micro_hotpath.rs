@@ -4,22 +4,32 @@
 //! the empirical scaling exponents, plus substrate micro-benchmarks
 //! (Cholesky, RNG) that bound the coordinator-side O(K·d³) work.
 //!
+//! The d sweep runs both assignment kernels — the tiled whitened-GEMM
+//! production path and the scalar correctness oracle — and reports the
+//! speedup (target: ≥2× single-thread at d=16/32; see EXPERIMENTS.md §Perf).
+//!
+//! Everything is also written as machine-readable JSON to
+//! `BENCH_hotpath.json` (override with `BENCH_HOTPATH_OUT`) so the perf
+//! trajectory is tracked across PRs.
+//!
 //! Run: `cargo bench --bench micro_hotpath`
 
 #[path = "support/mod.rs"]
 mod support;
 
 use dpmm::backend::native::{NativeBackend, NativeConfig};
+use dpmm::backend::shard::AssignKernel;
 use dpmm::backend::Backend;
 use dpmm::linalg::Matrix;
 use dpmm::model::DpmmState;
 use dpmm::prelude::*;
 use dpmm::sampler::{sample_params, sample_sub_weights, sample_weights, SamplerOptions, StepParams};
 use dpmm::stats::Prior;
+use dpmm::util::json::{self, Json};
 use std::sync::Arc;
 use std::time::Instant;
 
-fn step_time(n: usize, d: usize, k: usize, threads: usize) -> f64 {
+fn step_time(n: usize, d: usize, k: usize, threads: usize, kernel: AssignKernel) -> f64 {
     let mut rng = Xoshiro256pp::seed_from_u64((n + d * 7 + k * 13) as u64);
     let ds = GmmSpec::default_with(n, d, k).generate(&mut rng);
     let data = Arc::new(ds.points);
@@ -27,7 +37,7 @@ fn step_time(n: usize, d: usize, k: usize, threads: usize) -> f64 {
     let mut backend = NativeBackend::new(
         Arc::clone(&data),
         prior.clone(),
-        NativeConfig { threads, shard_size: 16 * 1024 },
+        NativeConfig { threads, shard_size: 16 * 1024, kernel, ..NativeConfig::default() },
         &mut rng,
     );
     let mut state = DpmmState::new(10.0, prior, k, n, &mut rng);
@@ -57,30 +67,63 @@ fn fit_exponent(xs: &[f64], ys: &[f64]) -> f64 {
     num / den
 }
 
+fn sweep_json(xs: &[usize], times: &[f64], exponent: f64) -> Json {
+    Json::obj(vec![
+        ("xs", Json::arr_f64(&xs.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+        ("times_s", Json::arr_f64(times)),
+        ("exponent", exponent.into()),
+    ])
+}
+
 fn main() {
     println!("§4.4 empirical complexity of the native assignment step (1 thread)\n");
+    let tiled = AssignKernel::Tiled;
 
     // N scaling (d=8, K=8)
     let ns = [20_000usize, 40_000, 80_000];
-    let tn: Vec<f64> = ns.iter().map(|&n| step_time(n, 8, 8, 1)).collect();
-    println!("N sweep (d=8, K=8): {:?} -> {:?}", ns, tn.iter().map(|t| format!("{t:.3}s")).collect::<Vec<_>>());
-    println!("  exponent ~ N^{:.2} (paper: 1.0)\n", fit_exponent(&ns.iter().map(|&x| x as f64).collect::<Vec<_>>(), &tn));
+    let tn: Vec<f64> = ns.iter().map(|&n| step_time(n, 8, 8, 1, tiled)).collect();
+    let n_exp = fit_exponent(&ns.iter().map(|&x| x as f64).collect::<Vec<_>>(), &tn);
+    println!(
+        "N sweep (d=8, K=8): {:?} -> {:?}",
+        ns,
+        tn.iter().map(|t| format!("{t:.3}s")).collect::<Vec<_>>()
+    );
+    println!("  exponent ~ N^{n_exp:.2} (paper: 1.0)\n");
 
     // K scaling (N=40k, d=8)
     let ks = [4usize, 8, 16, 32];
-    let tk: Vec<f64> = ks.iter().map(|&k| step_time(40_000, 8, k, 1)).collect();
-    println!("K sweep (N=40k, d=8): {:?} -> {:?}", ks, tk.iter().map(|t| format!("{t:.3}s")).collect::<Vec<_>>());
-    println!("  exponent ~ K^{:.2} (paper: 1.0)\n", fit_exponent(&ks.iter().map(|&x| x as f64).collect::<Vec<_>>(), &tk));
+    let tk: Vec<f64> = ks.iter().map(|&k| step_time(40_000, 8, k, 1, tiled)).collect();
+    let k_exp = fit_exponent(&ks.iter().map(|&x| x as f64).collect::<Vec<_>>(), &tk);
+    println!(
+        "K sweep (N=40k, d=8): {:?} -> {:?}",
+        ks,
+        tk.iter().map(|t| format!("{t:.3}s")).collect::<Vec<_>>()
+    );
+    println!("  exponent ~ K^{k_exp:.2} (paper: 1.0)\n");
 
-    // d scaling (N=40k, K=8): T = d² per paper
+    // d scaling (N=40k, K=8), tiled vs scalar oracle: T = d² per paper.
     let dims = [4usize, 8, 16, 32];
-    let td: Vec<f64> = dims.iter().map(|&d| step_time(40_000, d, 8, 1)).collect();
-    println!("d sweep (N=40k, K=8): {:?} -> {:?}", dims, td.iter().map(|t| format!("{t:.3}s")).collect::<Vec<_>>());
-    println!("  exponent ~ d^{:.2} (paper: T = d², i.e. 2.0 asymptotically)\n", fit_exponent(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>(), &td));
+    let td: Vec<f64> = dims.iter().map(|&d| step_time(40_000, d, 8, 1, tiled)).collect();
+    let td_scalar: Vec<f64> = dims
+        .iter()
+        .map(|&d| step_time(40_000, d, 8, 1, AssignKernel::Scalar))
+        .collect();
+    let speedup: Vec<f64> = td_scalar.iter().zip(&td).map(|(s, t)| s / t).collect();
+    let d_exp = fit_exponent(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>(), &td);
+    println!("d sweep (N=40k, K=8), tiled kernel vs scalar oracle:");
+    for (i, &d) in dims.iter().enumerate() {
+        println!(
+            "  d={d:<3} tiled {:.3}s  scalar {:.3}s  speedup {:.2}x",
+            td[i], td_scalar[i], speedup[i]
+        );
+    }
+    println!("  exponent ~ d^{d_exp:.2} (paper: T = d², i.e. 2.0 asymptotically)\n");
 
     // Substrate micro-benches: coordinator-side O(K·d³).
     println!("substrate micro-benchmarks:");
-    for d in [8usize, 32, 128] {
+    let mut chol_us = Vec::new();
+    let chol_dims = [8usize, 32, 128];
+    for &d in &chol_dims {
         let mut rng = Xoshiro256pp::seed_from_u64(d as u64);
         let spd = dpmm::datagen::random_spd(&mut rng, d, 1.0);
         let t0 = Instant::now();
@@ -89,6 +132,7 @@ fn main() {
             std::hint::black_box(spd.cholesky().unwrap());
         }
         let chol = t0.elapsed().as_secs_f64() / reps as f64;
+        chol_us.push(chol * 1e6);
         println!("  cholesky d={d:<4} {:.1} µs", chol * 1e6);
     }
     let mut rng = Xoshiro256pp::seed_from_u64(0);
@@ -97,12 +141,51 @@ fn main() {
     for _ in 0..10_000_000 {
         acc += rng.next_f64();
     }
-    println!("  rng next_f64      {:.2} ns/draw (sum={acc:.1})", t0.elapsed().as_secs_f64() / 1e7 * 1e9);
+    let rng_ns = t0.elapsed().as_secs_f64() / 1e7 * 1e9;
+    println!("  rng next_f64      {rng_ns:.2} ns/draw (sum={acc:.1})");
 
     let m = Matrix::identity(64);
     let t0 = Instant::now();
     for _ in 0..100 {
         std::hint::black_box(m.matmul(&m));
     }
-    println!("  matmul 64x64      {:.1} µs", t0.elapsed().as_secs_f64() / 100.0 * 1e6);
+    let matmul_us = t0.elapsed().as_secs_f64() / 100.0 * 1e6;
+    println!("  matmul 64x64      {matmul_us:.1} µs");
+
+    // Machine-readable record for cross-PR perf tracking.
+    let doc = Json::obj(vec![
+        ("bench", "micro_hotpath".into()),
+        ("threads", 1usize.into()),
+        ("n_sweep", sweep_json(&ns, &tn, n_exp)),
+        ("k_sweep", sweep_json(&ks, &tk, k_exp)),
+        (
+            "d_sweep",
+            Json::obj(vec![
+                ("xs", Json::arr_f64(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+                ("tiled_s", Json::arr_f64(&td)),
+                ("scalar_s", Json::arr_f64(&td_scalar)),
+                ("speedup", Json::arr_f64(&speedup)),
+                ("exponent", d_exp.into()),
+            ]),
+        ),
+        (
+            "substrate",
+            Json::obj(vec![
+                (
+                    "cholesky_us",
+                    Json::obj(vec![
+                        ("dims", Json::arr_f64(&chol_dims.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+                        ("us", Json::arr_f64(&chol_us)),
+                    ]),
+                ),
+                ("rng_next_f64_ns", rng_ns.into()),
+                ("matmul_64_us", matmul_us.into()),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("BENCH_HOTPATH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    match std::fs::write(&out, json::to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
 }

@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     let mut backend = NativeBackend::new(
         Arc::clone(&data),
         prior.clone(),
-        NativeConfig { threads: 8, shard_size: n / 16 },
+        NativeConfig { threads: 8, shard_size: n / 16, ..NativeConfig::default() },
         &mut rng,
     );
     let mut state = DpmmState::new(10.0, prior, 1, n, &mut rng);

@@ -24,6 +24,10 @@ fn handle(stream: &mut TcpStream, state: &mut Option<WorkerState>) -> Result<boo
             let n = x.len() / d.max(1);
             let data = Arc::new(Data::new(n, d, x));
             let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            // Workers run the same tiled assignment kernel as the local
+            // CPU-threaded backend (shard.rs is the single hot path for
+            // every tier); the default picks up DPMM_ASSIGN_KERNEL so the
+            // scalar oracle can be selected per worker process.
             let config = NativeConfig {
                 threads: (threads as usize).max(1),
                 ..NativeConfig::default()

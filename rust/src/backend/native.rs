@@ -4,13 +4,16 @@
 //! on the coordinator thread — a shared-memory version of the distributed
 //! suff-stats-only design.
 
-use super::shard::{shard_apply_merges, shard_apply_splits, shard_remap, shard_step, Shard};
+use super::shard::{
+    shard_apply_merges, shard_apply_splits, shard_remap, shard_step_scalar, shard_step_tiled,
+    AssignKernel, Shard, DEFAULT_TILE,
+};
 use super::{Backend, StatsBundle};
 use crate::datagen::Data;
 use crate::rng::Rng;
 use crate::sampler::{MergeOp, SplitOp, StepParams};
 use crate::stats::Prior;
-use crate::util::threadpool::{default_threads, parallel_map};
+use crate::util::threadpool::default_threads;
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -21,11 +24,21 @@ pub struct NativeConfig {
     pub shard_size: usize,
     /// Worker threads (defaults to core count / `DPMM_THREADS`).
     pub threads: usize,
+    /// Assignment kernel (defaults to tiled; `DPMM_ASSIGN_KERNEL=scalar`
+    /// selects the one-point-at-a-time correctness oracle).
+    pub kernel: AssignKernel,
+    /// Tile width for the tiled kernel (points per tile).
+    pub tile: usize,
 }
 
 impl Default for NativeConfig {
     fn default() -> Self {
-        Self { shard_size: 16 * 1024, threads: default_threads() }
+        Self {
+            shard_size: 16 * 1024,
+            threads: default_threads(),
+            kernel: AssignKernel::from_env(),
+            tile: DEFAULT_TILE,
+        }
     }
 }
 
@@ -35,6 +48,8 @@ pub struct NativeBackend {
     prior: Prior,
     shards: Vec<Shard>,
     threads: usize,
+    kernel: AssignKernel,
+    tile: usize,
 }
 
 impl NativeBackend {
@@ -53,7 +68,14 @@ impl NativeBackend {
                 shard
             })
             .collect();
-        Self { data, prior, shards, threads: config.threads.max(1) }
+        Self {
+            data,
+            prior,
+            shards,
+            threads: config.threads.max(1),
+            kernel: config.kernel,
+            tile: config.tile.max(1),
+        }
     }
 
     /// Scatter initial labels uniformly over `k` clusters (used when the fit
@@ -70,6 +92,37 @@ impl NativeBackend {
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
+
+    /// Map `f` over every shard from a scoped worker pool and collect the
+    /// results in shard order. Shards are divided into contiguous
+    /// `chunks_mut` slices, so each thread owns an exclusive `&mut [Shard]`
+    /// — no raw-pointer cells, plain safe borrows. Serves both the step
+    /// pass (per-shard [`StatsBundle`]s) and the label-rewrite passes.
+    fn map_shards_mut<R, F>(&mut self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(&mut Shard) -> R + Sync,
+    {
+        if self.shards.is_empty() {
+            return Vec::new();
+        }
+        let threads = self.threads.clamp(1, self.shards.len());
+        let chunk = self.shards.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .chunks_mut(chunk)
+                .map(|shards| {
+                    let f = &f;
+                    scope.spawn(move || shards.iter_mut().map(f).collect::<Vec<R>>())
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("shard thread panicked"))
+                .collect()
+        })
+    }
 }
 
 impl Backend for NativeBackend {
@@ -78,33 +131,17 @@ impl Backend for NativeBackend {
     }
 
     fn step(&mut self, params: &StepParams) -> Result<StatsBundle> {
+        // Per-sweep precomputation: flatten the snapshot into kernel
+        // descriptors (W, b = W·μ, folded constants) once, shared read-only
+        // by every worker thread — never re-derived per shard or per point.
+        let plan = params.plan();
         let data = Arc::clone(&self.data);
         let prior = self.prior.clone();
-        // Temporarily take the shards so threads can own mutable slices.
-        let mut shards = std::mem::take(&mut self.shards);
-        let bundles: Vec<StatsBundle> = {
-            let items: Vec<(usize, &mut Shard)> = shards.iter_mut().enumerate().collect();
-            // Wrap each &mut Shard in a Mutex-free cell via raw split: use
-            // scoped threads over chunks instead.
-            let results: Vec<StatsBundle> = std::thread::scope(|scope| {
-                let threads = self.threads.min(items.len().max(1));
-                let mut handles = Vec::new();
-                let chunks = split_into(items, threads);
-                for chunk in chunks {
-                    let data = &data;
-                    let prior = &prior;
-                    handles.push(scope.spawn(move || {
-                        chunk
-                            .into_iter()
-                            .map(|(_, shard)| shard_step(data, shard, params, prior))
-                            .collect::<Vec<_>>()
-                    }));
-                }
-                handles.into_iter().flat_map(|h| h.join().expect("shard thread panicked")).collect()
-            });
-            results
-        };
-        self.shards = shards;
+        let (kernel, tile) = (self.kernel, self.tile);
+        let bundles = self.map_shards_mut(|shard| match kernel {
+            AssignKernel::Tiled => shard_step_tiled(&data, shard, &plan, &prior, tile),
+            AssignKernel::Scalar => shard_step_scalar(&data, shard, &plan, &prior),
+        });
         let mut total = StatsBundle::empty(&self.prior, params.k());
         for b in &bundles {
             total.merge(b);
@@ -113,38 +150,17 @@ impl Backend for NativeBackend {
     }
 
     fn apply_splits(&mut self, ops: &[SplitOp]) -> Result<()> {
-        let _ = parallel_map(
-            &mut_slices(&mut self.shards),
-            self.threads,
-            |_, cell| {
-                let shard = unsafe { &mut *cell.0 };
-                shard_apply_splits(shard, ops);
-            },
-        );
+        self.map_shards_mut(|shard| shard_apply_splits(shard, ops));
         Ok(())
     }
 
     fn apply_merges(&mut self, ops: &[MergeOp]) -> Result<()> {
-        let _ = parallel_map(
-            &mut_slices(&mut self.shards),
-            self.threads,
-            |_, cell| {
-                let shard = unsafe { &mut *cell.0 };
-                shard_apply_merges(shard, ops);
-            },
-        );
+        self.map_shards_mut(|shard| shard_apply_merges(shard, ops));
         Ok(())
     }
 
     fn remap(&mut self, map: &[Option<usize>]) -> Result<()> {
-        let _ = parallel_map(
-            &mut_slices(&mut self.shards),
-            self.threads,
-            |_, cell| {
-                let shard = unsafe { &mut *cell.0 };
-                shard_remap(shard, map);
-            },
-        );
+        self.map_shards_mut(|shard| shard_remap(shard, map));
         Ok(())
     }
 
@@ -172,28 +188,6 @@ impl Backend for NativeBackend {
     fn len(&self) -> usize {
         self.data.n
     }
-}
-
-/// Pointer cell that lets disjoint `&mut Shard`s cross the `Sync` boundary of
-/// `parallel_map` (each index is visited exactly once, so access is unique).
-struct ShardCell(*mut Shard);
-unsafe impl Send for ShardCell {}
-unsafe impl Sync for ShardCell {}
-
-fn mut_slices(shards: &mut [Shard]) -> Vec<ShardCell> {
-    shards.iter_mut().map(|s| ShardCell(s as *mut Shard)).collect()
-}
-
-fn split_into<T>(mut items: Vec<T>, parts: usize) -> Vec<Vec<T>> {
-    let parts = parts.max(1);
-    let mut out: Vec<Vec<T>> = (0..parts).map(|_| Vec::new()).collect();
-    let mut i = 0;
-    while let Some(item) = items.pop() {
-        out[i % parts].push(item);
-        i += 1;
-    }
-    out.retain(|v| !v.is_empty());
-    out
 }
 
 #[cfg(test)]
@@ -233,6 +227,10 @@ mod tests {
         state
     }
 
+    fn config(shard_size: usize, threads: usize) -> NativeConfig {
+        NativeConfig { shard_size, threads, ..NativeConfig::default() }
+    }
+
     #[test]
     fn native_step_recovers_separated_blobs() {
         let centers = [[-20.0, 0.0], [0.0, 20.0], [20.0, 0.0]];
@@ -242,7 +240,7 @@ mod tests {
         let mut backend = NativeBackend::new(
             Arc::clone(&data),
             state.prior.clone(),
-            NativeConfig { shard_size: 128, threads: 4 },
+            config(128, 4),
             &mut rng,
         );
         assert!(backend.num_shards() > 1);
@@ -270,13 +268,36 @@ mod tests {
             let mut backend = NativeBackend::new(
                 Arc::clone(&data),
                 state.prior.clone(),
-                NativeConfig { shard_size: 64, threads: 3 },
+                config(64, 3),
                 &mut rng,
             );
             backend.step(&params).unwrap();
             backend.labels().unwrap()
         };
         assert_eq!(run(42), run(42));
+    }
+
+    #[test]
+    fn kernel_choice_does_not_change_labels() {
+        let centers = [[-20.0, 0.0], [20.0, 0.0]];
+        let data = blob_data(&centers, 150);
+        let state = state_on(&centers, 150);
+        let params = StepParams::snapshot(&state);
+        let run = |kernel, tile| {
+            let mut rng = Xoshiro256pp::seed_from_u64(5);
+            let mut backend = NativeBackend::new(
+                Arc::clone(&data),
+                state.prior.clone(),
+                NativeConfig { shard_size: 70, threads: 2, kernel, tile },
+                &mut rng,
+            );
+            backend.step(&params).unwrap();
+            backend.labels().unwrap()
+        };
+        let scalar = run(AssignKernel::Scalar, DEFAULT_TILE);
+        for tile in [1, 33, 128] {
+            assert_eq!(run(AssignKernel::Tiled, tile), scalar, "tile={tile}");
+        }
     }
 
     #[test]
@@ -288,7 +309,7 @@ mod tests {
         let mut backend = NativeBackend::new(
             Arc::clone(&data),
             state.prior.clone(),
-            NativeConfig { shard_size: 32, threads: 2 },
+            config(32, 2),
             &mut rng,
         );
         backend.step(&StepParams::snapshot(&state)).unwrap();
@@ -317,8 +338,7 @@ mod tests {
         let data = blob_data(&[[0.0, 0.0]], 1000);
         let prior = Prior::Niw(NiwPrior::weak(2));
         let mut rng = Xoshiro256pp::seed_from_u64(2);
-        let mut backend =
-            NativeBackend::new(data, prior, NativeConfig { shard_size: 100, threads: 2 }, &mut rng);
+        let mut backend = NativeBackend::new(data, prior, config(100, 2), &mut rng);
         backend.randomize_labels(4);
         let labels = backend.labels().unwrap();
         let mut seen = [false; 4];
@@ -340,7 +360,7 @@ mod tests {
             let mut backend = NativeBackend::new(
                 Arc::clone(&data),
                 state.prior.clone(),
-                NativeConfig { shard_size: 64, threads },
+                config(64, threads),
                 &mut rng,
             );
             let b = backend.step(&params).unwrap();

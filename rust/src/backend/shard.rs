@@ -6,14 +6,72 @@
 //! and accumulate sufficient statistics into the sub-cluster accumulators
 //! (cluster statistics are recovered as the sum of the two sub-clusters,
 //! halving the accumulation work — the dominant O(N·d²) term for Gaussians).
+//!
+//! Two implementations of the same sampler:
+//!
+//! * [`shard_step_tiled`] — the production kernel. Points are processed in
+//!   tiles of T (default [`DEFAULT_TILE`]); for each instantiated cluster
+//!   the whole tile's log-likelihoods are one blocked triangular GEMM
+//!   `Y = W_k·X_tileᵀ` against a precomputed affine offset `b_k = W_k·μ_k`
+//!   (`loglik = c_k − ½‖y − b_k‖²`, no per-point diff vector), written into
+//!   a column-major `[K × T]` score matrix the categorical draw scans with
+//!   unit stride. Statistics accumulate at tile granularity via grouped
+//!   rank-T updates, and the sub-cluster step (f) is batched per cluster
+//!   over the tile's member columns.
+//! * [`shard_step_scalar`] — the one-point-at-a-time correctness oracle,
+//!   kept behind [`AssignKernel`] (`DPMM_ASSIGN_KERNEL=scalar`).
+//!
+//! Both paths draw exactly two uniforms per point in the same stream order
+//! and share bitwise-identical score arithmetic (see [`crate::linalg`]'s
+//! FP-determinism contract), so they produce identical label and sub-label
+//! sequences under a fixed seed. Sufficient statistics agree to FP rounding
+//! (the tiled path reduces tile-local partial sums first). See
+//! EXPERIMENTS.md §Perf for the design and measured speedups.
 
 use super::StatsBundle;
 use crate::datagen::Data;
+use crate::linalg::{dot_accumulate_tile, lower_affine_sqnorm, transpose_tile};
 use crate::model::{LEFT, RIGHT};
 use crate::rng::{Rng, Xoshiro256pp};
-use crate::sampler::{MergeOp, SplitOp, StepParams};
-use crate::stats::{Params, Prior};
+use crate::sampler::{KernelDesc, MergeOp, SplitOp, StepPlan};
+use crate::stats::Prior;
 use std::ops::Range;
+
+/// Default assignment-kernel tile width (points per tile). Sized so a
+/// d ≤ 64 tile (`d × T` doubles) plus the score panel stays L1/L2-resident.
+pub const DEFAULT_TILE: usize = 128;
+
+/// Which assignment kernel a backend runs. The scalar path is the
+/// correctness oracle for the tiled kernel (identical labels, same seed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignKernel {
+    /// Batched whitened-GEMM tile kernel (production default).
+    Tiled,
+    /// One-point-at-a-time oracle (`DPMM_ASSIGN_KERNEL=scalar`).
+    Scalar,
+}
+
+impl AssignKernel {
+    /// Resolve from the `DPMM_ASSIGN_KERNEL` environment variable
+    /// (`scalar` selects the oracle, `tiled`/unset the production kernel;
+    /// case-insensitive). An unrecognized value falls back to tiled with a
+    /// stderr warning rather than silently running the wrong kernel during
+    /// an intended oracle verification.
+    pub fn from_env() -> Self {
+        match std::env::var("DPMM_ASSIGN_KERNEL") {
+            Ok(v) if v.eq_ignore_ascii_case("scalar") => AssignKernel::Scalar,
+            Ok(v) if v.is_empty() || v.eq_ignore_ascii_case("tiled") => AssignKernel::Tiled,
+            Ok(v) => {
+                eprintln!(
+                    "warning: unrecognized DPMM_ASSIGN_KERNEL='{v}' (expected 'tiled' or \
+                     'scalar'); using the tiled kernel"
+                );
+                AssignKernel::Tiled
+            }
+            Err(_) => AssignKernel::Tiled,
+        }
+    }
+}
 
 /// One contiguous chunk of the dataset with its labels and private RNG.
 #[derive(Debug, Clone)]
@@ -41,90 +99,227 @@ impl Shard {
     }
 }
 
-/// Scratch buffers reused across points (avoids per-point allocation in the
+/// Tile-granular scratch reused across tiles (no per-tile allocation in the
 /// hot loop; see EXPERIMENTS.md §Perf).
-pub struct ShardScratch {
-    loglik: Vec<f64>,
-    diff: Vec<f64>,
+struct TileScratch {
+    /// Feature-major tile: `xt[i·T + t]` = feature `i` of tile point `t`.
+    xt: Vec<f64>,
+    /// Column-major `[K × T]` score matrix: `scores[t·K + c]`.
+    scores: Vec<f64>,
+    /// Current GEMM output row (length T).
+    y: Vec<f64>,
+    /// Per-point reduction accumulator (length T).
+    maha: Vec<f64>,
+    /// Pre-drawn uniforms, cluster draw per point (length T).
+    u_cl: Vec<f64>,
+    /// Pre-drawn uniforms, sub-cluster draw per point (length T).
+    u_sub: Vec<f64>,
+    /// Tile-local member indices per cluster (grouping for steps (f)+stats).
+    members: Vec<Vec<u32>>,
+    /// Gathered member columns (feature-major, stride = member count).
+    gather: Vec<f64>,
+    /// Sub-cluster weighted log-likelihoods over members (left / right).
+    lw_l: Vec<f64>,
+    lw_r: Vec<f64>,
+    /// Member-local index lists per drawn sub-cluster.
+    side: [Vec<u32>; 2],
 }
 
-impl ShardScratch {
-    pub fn new(k_max: usize, d: usize) -> Self {
-        Self { loglik: vec![0.0; k_max.max(2)], diff: vec![0.0; d] }
-    }
-}
-
-/// Gaussian log-likelihood with caller-provided scratch: c − ½‖L⁻¹(x−μ)‖².
-/// Uses the cached inverse-Cholesky rows directly (no triangular solve),
-/// mirroring the matmul form the Pallas kernel uses.
-#[inline]
-fn gauss_loglik(p: &crate::stats::NiwParams, x: &[f64], scratch: &mut ShardScratch) -> f64 {
-    let d = x.len();
-    let diff = &mut scratch.diff[..d];
-    for (dv, (&xv, &mv)) in diff.iter_mut().zip(x.iter().zip(&p.mu)) {
-        *dv = xv - mv;
-    }
-    // y = W diff with W = L⁻¹ lower-triangular; maha = ‖y‖². Flat slice
-    // walk + iterator zips keep the inner loop free of bounds checks.
-    let w = p.inv_chol.data();
-    let mut maha = 0.0;
-    let mut off = 0;
-    for i in 0..d {
-        let mut acc = 0.0;
-        for (&wv, &dv) in w[off..off + i + 1].iter().zip(diff.iter()) {
-            acc += wv * dv;
+impl TileScratch {
+    fn new(k: usize, d: usize, tile: usize) -> Self {
+        Self {
+            xt: vec![0.0; d * tile],
+            scores: vec![0.0; k * tile],
+            y: vec![0.0; tile],
+            maha: vec![0.0; tile],
+            u_cl: vec![0.0; tile],
+            u_sub: vec![0.0; tile],
+            members: (0..k).map(|_| Vec::with_capacity(tile)).collect(),
+            gather: vec![0.0; d * tile],
+            lw_l: vec![0.0; tile],
+            lw_r: vec![0.0; tile],
+            side: [Vec::with_capacity(tile), Vec::with_capacity(tile)],
         }
-        maha += acc * acc;
-        off += d;
-    }
-    p.log_norm - 0.5 * maha
-}
-
-#[inline]
-fn loglik(params: &Params, x: &[f64], scratch: &mut ShardScratch) -> f64 {
-    match params {
-        Params::Gauss(p) => gauss_loglik(p, x, scratch),
-        Params::Mult(p) => p.log_likelihood(x),
     }
 }
 
-/// Run steps (e)/(f) + statistics on one shard. Labels are written in place;
-/// the returned bundle holds this shard's contribution.
-pub fn shard_step(
+/// Run steps (e)/(f) + statistics on one shard with the default kernel and
+/// tile width. Labels are written in place; the returned bundle holds this
+/// shard's contribution.
+pub fn shard_step(data: &Data, shard: &mut Shard, plan: &StepPlan, prior: &Prior) -> StatsBundle {
+    shard_step_tiled(data, shard, plan, prior, DEFAULT_TILE)
+}
+
+/// Tiled assignment kernel (see module docs for the design).
+pub fn shard_step_tiled(
     data: &Data,
     shard: &mut Shard,
-    params: &StepParams,
+    plan: &StepPlan,
+    prior: &Prior,
+    tile: usize,
+) -> StatsBundle {
+    let k = plan.k();
+    let d = plan.d;
+    debug_assert_eq!(d, data.d);
+    let tile = tile.max(1);
+    let n = shard.len();
+    let mut bundle = StatsBundle::empty(prior, k);
+    let mut scratch = TileScratch::new(k, d, tile);
+    let TileScratch { xt, scores, y, maha, u_cl, u_sub, members, gather, lw_l, lw_r, side } =
+        &mut scratch;
+    let mut start = 0;
+    while start < n {
+        let m = tile.min(n - start);
+        let base = shard.range.start + start;
+        // Pre-draw the tile's uniforms in scalar stream order (cluster draw
+        // then sub draw, per point): both kernels consume exactly two
+        // uniforms per point, so the streams stay aligned and the draws are
+        // value-identical to the scalar oracle's interleaved calls.
+        for t in 0..m {
+            u_cl[t] = shard.rng.next_f64();
+            u_sub[t] = shard.rng.next_f64();
+        }
+        transpose_tile(&data.values[base * d..(base + m) * d], d, m, xt);
+        // Step (e), batched: one blocked triangular GEMM per cluster fills
+        // the tile's score column with unit-stride writes per point.
+        for (c, desc) in plan.clusters.iter().enumerate() {
+            match desc {
+                KernelDesc::Gauss { w, b, c: ck } => {
+                    lower_affine_sqnorm(w, d, b, xt, m, y, maha);
+                    for t in 0..m {
+                        scores[t * k + c] = ck - 0.5 * maha[t];
+                    }
+                }
+                KernelDesc::Mult { log_theta, c: ck } => {
+                    dot_accumulate_tile(log_theta, xt, m, maha);
+                    for t in 0..m {
+                        scores[t * k + c] = ck + maha[t];
+                    }
+                }
+            }
+        }
+        // Categorical draw per point: a stable exp-scan over the point's
+        // unit-stride score column (one uniform + K exps; the equivalent
+        // Gumbel-argmax costs K draws + 2K logs and dominated the profile,
+        // see EXPERIMENTS.md §Perf).
+        for t in 0..m {
+            let col = &mut scores[t * k..(t + 1) * k];
+            let mut best = f64::NEG_INFINITY;
+            for &lw in col.iter() {
+                if lw > best {
+                    best = lw;
+                }
+            }
+            let mut total = 0.0;
+            for e in col.iter_mut() {
+                let gap = *e - best;
+                // exp(−36) ≈ 2e-16: below one ULP of the running sum, so the
+                // cluster can't be drawn — skip the transcendental.
+                let v = if gap < -36.0 { 0.0 } else { gap.exp() };
+                *e = v;
+                total += v;
+            }
+            let mut tgt = u_cl[t] * total;
+            let mut zi = k - 1;
+            for (c, &e) in col.iter().enumerate() {
+                tgt -= e;
+                if tgt < 0.0 {
+                    zi = c;
+                    break;
+                }
+            }
+            shard.z[start + t] = zi as u32;
+            members[zi].push(t as u32);
+        }
+        // Step (f) + statistics, batched per cluster over member columns.
+        for (c, mem) in members.iter_mut().enumerate() {
+            if mem.is_empty() {
+                continue;
+            }
+            let mc = mem.len();
+            // Gather member columns into a compact feature-major panel.
+            for i in 0..d {
+                let src = &xt[i * m..i * m + m];
+                let dst = &mut gather[i * mc..(i + 1) * mc];
+                for (g, &t) in dst.iter_mut().zip(mem.iter()) {
+                    *g = src[t as usize];
+                }
+            }
+            // Two-way sub-competition: one batched kernel per side.
+            for (h, out) in [(LEFT, &mut *lw_l), (RIGHT, &mut *lw_r)] {
+                match &plan.sub[c][h] {
+                    KernelDesc::Gauss { w, b, c: ck } => {
+                        lower_affine_sqnorm(w, d, b, gather, mc, y, maha);
+                        for (o, &mh) in out[..mc].iter_mut().zip(maha.iter()) {
+                            *o = ck - 0.5 * mh;
+                        }
+                    }
+                    KernelDesc::Mult { log_theta, c: ck } => {
+                        dot_accumulate_tile(log_theta, gather, mc, maha);
+                        for (o, &acc) in out[..mc].iter_mut().zip(maha.iter()) {
+                            *o = ck + acc;
+                        }
+                    }
+                }
+            }
+            side[0].clear();
+            side[1].clear();
+            for (idx, &t) in mem.iter().enumerate() {
+                // P(right) = 1 / (1 + exp(lw_l − lw_r))
+                let p_right = 1.0 / (1.0 + (lw_l[idx] - lw_r[idx]).exp());
+                let hi = usize::from(u_sub[t as usize] < p_right);
+                shard.zsub[start + t as usize] = hi as u8;
+                side[hi].push(idx as u32);
+            }
+            // Grouped rank-T statistics update per (cluster, sub-cluster):
+            // one pass over each accumulator per tile instead of one
+            // `add_outer` per point.
+            for (h, sel) in side.iter().enumerate() {
+                if !sel.is_empty() {
+                    bundle.sub_stats[c][h].add_cols(gather, mc, sel);
+                }
+            }
+            mem.clear();
+        }
+        start += m;
+    }
+    bundle
+}
+
+/// One-point-at-a-time correctness oracle for [`shard_step_tiled`]:
+/// identical label/sub-label sequences under the same seed (see module
+/// docs), selectable via [`AssignKernel::Scalar`].
+pub fn shard_step_scalar(
+    data: &Data,
+    shard: &mut Shard,
+    plan: &StepPlan,
     prior: &Prior,
 ) -> StatsBundle {
-    let k = params.k();
+    let k = plan.k();
     let mut bundle = StatsBundle::empty(prior, k);
-    let mut scratch = ShardScratch::new(k, data.d);
+    let mut loglik = vec![0.0; k];
     for (local, i) in shard.range.clone().enumerate() {
         let x = data.row(i);
         // Step (e): z_i ∝ π_k f(x; θ_k) — categorical draw via a stable
-        // exp-scan (one RNG draw + K exps; the equivalent Gumbel-argmax
-        // costs K draws + 2K logs and dominated the profile, see
-        // EXPERIMENTS.md §Perf).
+        // exp-scan (one RNG draw + K exps).
         let mut best = f64::NEG_INFINITY;
-        for c in 0..k {
-            let lw = params.log_weights[c] + loglik(&params.params[c], x, &mut scratch);
-            scratch.loglik[c] = lw;
+        for (c, desc) in plan.clusters.iter().enumerate() {
+            let lw = desc.loglik(x);
+            loglik[c] = lw;
             if lw > best {
                 best = lw;
             }
         }
         let mut total = 0.0;
-        for c in 0..k {
-            let gap = scratch.loglik[c] - best;
-            // exp(−36) ≈ 2e-16: below one ULP of the running sum, so the
-            // cluster can't be drawn — skip the transcendental.
-            let e = if gap < -36.0 { 0.0 } else { gap.exp() };
-            scratch.loglik[c] = e;
-            total += e;
+        for e in loglik.iter_mut() {
+            let gap = *e - best;
+            let v = if gap < -36.0 { 0.0 } else { gap.exp() };
+            *e = v;
+            total += v;
         }
         let mut t = shard.rng.next_f64() * total;
         let mut zi = k - 1;
-        for (c, &e) in scratch.loglik[..k].iter().enumerate() {
+        for (c, &e) in loglik.iter().enumerate() {
             t -= e;
             if t < 0.0 {
                 zi = c;
@@ -133,10 +328,8 @@ pub fn shard_step(
         }
         // Step (f): z̄_i over the assigned cluster's sub-clusters — a
         // two-way categorical from the log-odds.
-        let sub_lw_l = params.sub_log_weights[zi][LEFT]
-            + loglik(&params.sub_params[zi][LEFT], x, &mut scratch);
-        let sub_lw_r = params.sub_log_weights[zi][RIGHT]
-            + loglik(&params.sub_params[zi][RIGHT], x, &mut scratch);
+        let sub_lw_l = plan.sub[zi][LEFT].loglik(x);
+        let sub_lw_r = plan.sub[zi][RIGHT].loglik(x);
         // P(right) = 1 / (1 + exp(lw_l − lw_r))
         let p_right = 1.0 / (1.0 + (sub_lw_l - sub_lw_r).exp());
         let hi = usize::from(shard.rng.next_f64() < p_right);
@@ -149,32 +342,72 @@ pub fn shard_step(
 
 /// Apply accepted splits to a shard's labels (mirrors
 /// [`crate::sampler::apply_split`]'s state change).
+///
+/// Single O(N) pass with an op lookup table regardless of the number of
+/// accepted splits: targets are distinct clusters of the pre-split state and
+/// new indices are fresh (≥ pre-split K), so ops never chain and per-point
+/// application order doesn't matter. Sub-label re-randomization draws in
+/// point order (not op-major order as the old O(ops·N) loop did) — a
+/// different but equally valid stream of fresh coin flips.
 pub fn shard_apply_splits(shard: &mut Shard, ops: &[SplitOp]) {
+    if ops.is_empty() {
+        return;
+    }
+    let max_target = ops.iter().map(|op| op.target).max().unwrap();
+    let mut table: Vec<Option<u32>> = vec![None; max_target + 1];
     for op in ops {
-        for local in 0..shard.len() {
-            if shard.z[local] as usize == op.target {
-                if shard.zsub[local] as usize == RIGHT {
-                    shard.z[local] = op.new_index as u32;
-                }
-                // Fresh sub-assignment for the next sweep (children start
-                // with random sub-clusters, like the reference impl).
-                shard.zsub[local] = (shard.rng.next_u64() & 1) as u8;
+        debug_assert!(table[op.target].is_none(), "split targets must be distinct");
+        debug_assert!(op.new_index > max_target, "split indices must be fresh");
+        table[op.target] = Some(op.new_index as u32);
+    }
+    for local in 0..shard.len() {
+        let zi = shard.z[local] as usize;
+        if let Some(Some(new_index)) = table.get(zi).copied() {
+            if shard.zsub[local] as usize == RIGHT {
+                shard.z[local] = new_index;
             }
+            // Fresh sub-assignment for the next sweep (children start
+            // with random sub-clusters, like the reference impl).
+            shard.zsub[local] = (shard.rng.next_u64() & 1) as u8;
         }
     }
 }
 
+/// Role a cluster plays in this iteration's accepted merges.
+#[derive(Clone, Copy)]
+enum MergeRole {
+    Keep,
+    Absorb(u32),
+}
+
 /// Apply accepted merges to a shard's labels.
+///
+/// Single O(N) pass with a role lookup table: merge ops are pairwise
+/// disjoint (no cluster appears in two ops — enforced by
+/// [`crate::sampler::propose_merges`]'s conflict resolution), so the table
+/// is exactly equivalent to applying the ops in sequence.
 pub fn shard_apply_merges(shard: &mut Shard, ops: &[MergeOp]) {
+    if ops.is_empty() {
+        return;
+    }
+    let max = ops.iter().map(|op| op.keep.max(op.absorb)).max().unwrap();
+    let mut table: Vec<Option<MergeRole>> = vec![None; max + 1];
     for op in ops {
-        for local in 0..shard.len() {
-            let zi = shard.z[local] as usize;
-            if zi == op.keep {
-                shard.zsub[local] = LEFT as u8;
-            } else if zi == op.absorb {
-                shard.z[local] = op.keep as u32;
+        debug_assert!(
+            table[op.keep].is_none() && table[op.absorb].is_none(),
+            "merge ops must be pairwise disjoint"
+        );
+        table[op.keep] = Some(MergeRole::Keep);
+        table[op.absorb] = Some(MergeRole::Absorb(op.keep as u32));
+    }
+    for local in 0..shard.len() {
+        match table.get(shard.z[local] as usize).copied().flatten() {
+            Some(MergeRole::Keep) => shard.zsub[local] = LEFT as u8,
+            Some(MergeRole::Absorb(keep)) => {
+                shard.z[local] = keep;
                 shard.zsub[local] = RIGHT as u8;
             }
+            None => {}
         }
     }
 }
@@ -199,6 +432,7 @@ pub fn shard_remap(shard: &mut Shard, map: &[Option<usize>]) {
 mod tests {
     use super::*;
     use crate::model::DpmmState;
+    use crate::sampler::StepParams;
     use crate::stats::NiwPrior;
 
     fn two_blob_data() -> Data {
@@ -241,8 +475,9 @@ mod tests {
     fn step_assigns_points_to_nearest_cluster() {
         let data = two_blob_data();
         let (params, prior) = params_two_clusters();
+        let plan = params.plan();
         let mut shard = Shard::new(0..80, Xoshiro256pp::seed_from_u64(9));
-        let bundle = shard_step(&data, &mut shard, &params, &prior);
+        let bundle = shard_step(&data, &mut shard, &plan, &prior);
         for local in 0..40 {
             assert_eq!(shard.z[local], 0, "left blob must go to cluster 0");
         }
@@ -258,8 +493,9 @@ mod tests {
     fn step_stats_match_labels_exactly() {
         let data = two_blob_data();
         let (params, prior) = params_two_clusters();
+        let plan = params.plan();
         let mut shard = Shard::new(0..80, Xoshiro256pp::seed_from_u64(3));
-        let bundle = shard_step(&data, &mut shard, &params, &prior);
+        let bundle = shard_step(&data, &mut shard, &plan, &prior);
         // Recompute stats from labels and compare.
         let mut expect = StatsBundle::empty(&prior, 2);
         for local in 0..80 {
@@ -278,18 +514,35 @@ mod tests {
     }
 
     #[test]
-    fn gauss_loglik_matches_params_method() {
+    fn tiled_matches_scalar_oracle_on_blobs() {
+        // Odd tile widths exercise remainder handling; labels and
+        // sub-labels must be identical draw for draw.
+        let data = two_blob_data();
+        let (params, prior) = params_two_clusters();
+        let plan = params.plan();
+        for tile in [1, 7, 64, 128, 256] {
+            let mut tiled = Shard::new(0..80, Xoshiro256pp::seed_from_u64(17));
+            let mut scalar = Shard::new(0..80, Xoshiro256pp::seed_from_u64(17));
+            shard_step_tiled(&data, &mut tiled, &plan, &prior, tile);
+            shard_step_scalar(&data, &mut scalar, &plan, &prior);
+            assert_eq!(tiled.z, scalar.z, "tile={tile}");
+            assert_eq!(tiled.zsub, scalar.zsub, "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn kernel_desc_matches_params_loglik() {
         let prior = NiwPrior::weak(3);
         let mut s = prior.empty_stats();
         for i in 0..20 {
             s.add(&[i as f64 * 0.1, 1.0 - i as f64 * 0.05, 0.5]);
         }
         let p = prior.mean_params(&s);
-        let mut scratch = ShardScratch::new(4, 3);
+        let desc = KernelDesc::new(&crate::stats::Params::Gauss(p.clone()), 0.0);
         for x in [[0.0, 0.0, 0.0], [1.0, -1.0, 2.0], [0.5, 0.9, 0.4]] {
-            let a = gauss_loglik(&p, &x, &mut scratch);
+            let a = desc.loglik(&x);
             let b = p.log_likelihood(&x);
-            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
         }
     }
 
@@ -303,6 +556,20 @@ mod tests {
     }
 
     #[test]
+    fn multi_split_single_pass_matches_sequential() {
+        // Two simultaneous splits resolved via the lookup table: labels
+        // land exactly where per-op passes would put them.
+        let mut shard = Shard::new(0..8, Xoshiro256pp::seed_from_u64(0));
+        shard.z = vec![0, 1, 2, 0, 1, 2, 1, 0];
+        shard.zsub = vec![1, 0, 1, 0, 1, 0, 1, 1];
+        shard_apply_splits(
+            &mut shard,
+            &[SplitOp { target: 0, new_index: 3 }, SplitOp { target: 2, new_index: 4 }],
+        );
+        assert_eq!(shard.z, vec![3, 1, 4, 0, 1, 2, 1, 3]);
+    }
+
+    #[test]
     fn merges_set_provenance_sublabels() {
         let mut shard = Shard::new(0..5, Xoshiro256pp::seed_from_u64(0));
         shard.z = vec![0, 2, 1, 2, 0];
@@ -310,6 +577,19 @@ mod tests {
         shard_apply_merges(&mut shard, &[MergeOp { keep: 0, absorb: 2 }]);
         assert_eq!(shard.z, vec![0, 0, 1, 0, 0]);
         assert_eq!(shard.zsub, vec![0, 1, 0, 1, 0]);
+    }
+
+    #[test]
+    fn disjoint_merges_apply_in_one_pass() {
+        let mut shard = Shard::new(0..6, Xoshiro256pp::seed_from_u64(0));
+        shard.z = vec![0, 1, 2, 3, 2, 0];
+        shard.zsub = vec![1, 1, 1, 1, 0, 0];
+        shard_apply_merges(
+            &mut shard,
+            &[MergeOp { keep: 0, absorb: 2 }, MergeOp { keep: 1, absorb: 3 }],
+        );
+        assert_eq!(shard.z, vec![0, 1, 0, 1, 0, 0]);
+        assert_eq!(shard.zsub, vec![0, 0, 1, 1, 1, 0]);
     }
 
     #[test]
@@ -338,7 +618,7 @@ mod tests {
         state.clusters[1].params = prior.mean_params(&s1);
         state.clusters[1].sub_params = [prior.mean_params(&s1), prior.mean_params(&s1)];
         state.clusters[1].weight = 0.5;
-        let params = StepParams::snapshot(&state);
+        let plan = StepParams::snapshot(&state).plan();
         let data = Data::new(
             4,
             4,
@@ -350,7 +630,7 @@ mod tests {
             ],
         );
         let mut shard = Shard::new(0..4, Xoshiro256pp::seed_from_u64(6));
-        shard_step(&data, &mut shard, &params, &prior);
+        shard_step(&data, &mut shard, &plan, &prior);
         assert_eq!(shard.z, vec![0, 1, 0, 1]);
     }
 }

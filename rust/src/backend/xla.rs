@@ -494,7 +494,7 @@ mod tests {
         let mut nb = NativeBackend::new(
             Arc::clone(&data),
             state.prior.clone(),
-            NativeConfig { shard_size: 64, threads: 2 },
+            NativeConfig { shard_size: 64, threads: 2, ..NativeConfig::default() },
             &mut rng1,
         );
         let native_bundle = nb.step(&params).unwrap();

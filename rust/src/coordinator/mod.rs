@@ -150,6 +150,7 @@ impl DpmmFit {
                         *threads
                     },
                     shard_size: (*shard_size).max(1),
+                    ..NativeConfig::default()
                 };
                 Box::new(NativeBackend::new(data, prior, config, rng))
             }

@@ -6,8 +6,10 @@
 //! assignment hot path needs.
 
 mod matrix;
+mod tile;
 
 pub use matrix::Matrix;
+pub use tile::{dot_accumulate_tile, gemm_lower_blocked, lower_affine_sqnorm, transpose_tile};
 
 /// log(det(Σ)) of an SPD matrix via Cholesky: 2·Σ log Lᵢᵢ.
 pub fn spd_logdet(m: &Matrix) -> Option<f64> {

@@ -1,0 +1,235 @@
+//! Tile-granular kernels for the batched assignment hot path.
+//!
+//! The paper's headline speedups come from recasting the per-point Gaussian
+//! log-likelihood `c − ½‖W(x−μ)‖²` as a batched matmul over many points at
+//! once. These kernels operate on a *feature-major tile*: a `d × m` scratch
+//! buffer holding `m` points as columns (row `i` = feature `i` across the
+//! tile, unit stride over points), so every inner loop is a contiguous
+//! axpy/dot of length `m` that the compiler auto-vectorizes.
+//!
+//! FP-determinism contract: for each output element the floating-point
+//! accumulation order is *identical* to the scalar oracle in
+//! [`crate::sampler::KernelDesc::loglik`] (ascending `j`, then ascending
+//! `i`), so the tiled and scalar assignment paths produce bitwise-identical
+//! scores — and therefore bitwise-identical label sequences under a fixed
+//! seed. See EXPERIMENTS.md §Perf.
+
+use super::Matrix;
+
+/// Transpose `m` row-major points of dimension `d` into the feature-major
+/// tile layout: `out[i * m + t] = rows[t * d + i]`.
+pub fn transpose_tile(rows: &[f64], d: usize, m: usize, out: &mut [f64]) {
+    debug_assert!(rows.len() >= m * d);
+    debug_assert!(out.len() >= d * m);
+    for t in 0..m {
+        let point = &rows[t * d..(t + 1) * d];
+        for (i, &v) in point.iter().enumerate() {
+            out[i * m + t] = v;
+        }
+    }
+}
+
+/// Blocked lower-triangular GEMM `Y = L · X` with `L` lower-triangular
+/// `d × d` and `X` of shape `d × m` (both row-major). Columns are processed
+/// in panels so the active strip of `X` and `Y` stays cache-resident while
+/// the triangle of `L` streams through once per panel.
+///
+/// This is the unfused building block (kept `Matrix → Matrix` for reuse and
+/// testability); the assignment hot path uses [`lower_affine_sqnorm`], which
+/// fuses the affine offset and squared-norm reduction into the same pass.
+pub fn gemm_lower_blocked(l: &Matrix, x: &Matrix) -> Matrix {
+    assert_eq!(l.rows(), l.cols(), "L must be square");
+    assert_eq!(l.cols(), x.rows(), "shape mismatch");
+    const PANEL: usize = 128;
+    let d = l.rows();
+    let m = x.cols();
+    let mut y = Matrix::zeros(d, m);
+    let ld = l.data();
+    let mut col = 0;
+    while col < m {
+        let w = PANEL.min(m - col);
+        for i in 0..d {
+            let row_range = i * m + col..i * m + col + w;
+            for j in 0..=i {
+                let lij = ld[i * d + j];
+                let xrow = &x.data()[j * m + col..j * m + col + w];
+                let yrow = &mut y.data_mut()[row_range.clone()];
+                for (yv, &xv) in yrow.iter_mut().zip(xrow) {
+                    *yv += lij * xv;
+                }
+            }
+        }
+        col += w;
+    }
+    y
+}
+
+/// Fused whitened-GEMM + squared-norm kernel:
+/// `maha[t] = ‖W·x_t − b‖²` for the first `m` columns of the feature-major
+/// tile `x` (row stride `m`), with `W` lower-triangular `d × d` (row-major
+/// flat slice) and `b` a precomputed affine offset (`b = W·μ`, so no
+/// per-point diff vector is ever formed).
+///
+/// `y` is caller scratch of length ≥ `m` (the current output row).
+/// Accumulation order per element: `y = ((−b_i + W_i0·x_0) + W_i1·x_1) + …`,
+/// then `maha += y²` for ascending `i` — exactly the scalar-oracle order.
+pub fn lower_affine_sqnorm(
+    w: &[f64],
+    d: usize,
+    b: &[f64],
+    x: &[f64],
+    m: usize,
+    y: &mut [f64],
+    maha: &mut [f64],
+) {
+    debug_assert!(w.len() >= d * d);
+    debug_assert!(b.len() >= d);
+    debug_assert!(x.len() >= d * m);
+    debug_assert!(y.len() >= m && maha.len() >= m);
+    maha[..m].fill(0.0);
+    let mut off = 0;
+    for i in 0..d {
+        let bi = b[i];
+        y[..m].fill(-bi);
+        for (j, &wij) in w[off..off + i + 1].iter().enumerate() {
+            let xrow = &x[j * m..j * m + m];
+            for (yv, &xv) in y[..m].iter_mut().zip(xrow) {
+                *yv += wij * xv;
+            }
+        }
+        for (mh, &yv) in maha[..m].iter_mut().zip(y[..m].iter()) {
+            *mh += yv * yv;
+        }
+        off += d;
+    }
+}
+
+/// Batched dot product `acc[t] = Σ_j coef[j] · x[j][t]` over the first `m`
+/// columns of the feature-major tile `x` (row stride `m`) — the multinomial
+/// log-likelihood kernel (`coef = log θ`). Ascending-`j` accumulation,
+/// matching the scalar oracle bitwise.
+pub fn dot_accumulate_tile(coef: &[f64], x: &[f64], m: usize, acc: &mut [f64]) {
+    debug_assert!(x.len() >= coef.len() * m);
+    debug_assert!(acc.len() >= m);
+    acc[..m].fill(0.0);
+    for (j, &c) in coef.iter().enumerate() {
+        let xrow = &x[j * m..j * m + m];
+        for (a, &xv) in acc[..m].iter_mut().zip(xrow) {
+            *a += c * xv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lower(d: usize, seed: u64) -> Matrix {
+        let mut m = Matrix::zeros(d, d);
+        let mut s = seed;
+        for i in 0..d {
+            for j in 0..=i {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                m[(i, j)] = ((s >> 33) as f64 / (1u64 << 31) as f64) - 0.5;
+            }
+            m[(i, i)] += 1.5;
+        }
+        m
+    }
+
+    fn dense(r: usize, c: usize, seed: u64) -> Matrix {
+        let mut m = Matrix::zeros(r, c);
+        let mut s = seed;
+        for v in m.data_mut() {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            *v = ((s >> 33) as f64 / (1u64 << 31) as f64) - 0.5;
+        }
+        m
+    }
+
+    #[test]
+    fn transpose_tile_roundtrip() {
+        let d = 3;
+        let m = 4;
+        let rows: Vec<f64> = (0..d * m).map(|v| v as f64).collect();
+        let mut out = vec![0.0; d * m];
+        transpose_tile(&rows, d, m, &mut out);
+        for t in 0..m {
+            for i in 0..d {
+                assert_eq!(out[i * m + t], rows[t * d + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_lower_blocked_matches_matmul() {
+        for (d, m) in [(1, 1), (4, 7), (8, 200), (16, 131)] {
+            let l = lower(d, d as u64);
+            let x = dense(d, m, m as u64);
+            let got = gemm_lower_blocked(&l, &x);
+            let want = l.matmul(&x);
+            assert!(got.frob_dist(&want) < 1e-12, "d={d} m={m}");
+        }
+    }
+
+    #[test]
+    fn lower_affine_sqnorm_matches_reference() {
+        let d = 5;
+        let m = 9;
+        let l = lower(d, 3);
+        let mu: Vec<f64> = (0..d).map(|i| 0.3 * i as f64 - 0.7).collect();
+        // b = W·μ
+        let b: Vec<f64> = (0..d)
+            .map(|i| (0..=i).map(|j| l[(i, j)] * mu[j]).sum())
+            .collect();
+        let pts = dense(m, d, 17);
+        let mut xt = vec![0.0; d * m];
+        transpose_tile(pts.data(), d, m, &mut xt);
+        let mut y = vec![0.0; m];
+        let mut maha = vec![0.0; m];
+        lower_affine_sqnorm(l.data(), d, &b, &xt, m, &mut y, &mut maha);
+        for t in 0..m {
+            // Reference: ‖L(x − μ)‖² via explicit diff.
+            let x = pts.row(t);
+            let mut want = 0.0;
+            for i in 0..d {
+                let mut acc = 0.0;
+                for j in 0..=i {
+                    acc += l[(i, j)] * (x[j] - mu[j]);
+                }
+                want += acc * acc;
+            }
+            assert!((maha[t] - want).abs() < 1e-9, "t={t}: {} vs {want}", maha[t]);
+        }
+    }
+
+    #[test]
+    fn dot_accumulate_tile_matches_scalar() {
+        let d = 6;
+        let m = 5;
+        let coef: Vec<f64> = (0..d).map(|j| (j as f64 + 1.0).ln()).collect();
+        let pts = dense(m, d, 5);
+        let mut xt = vec![0.0; d * m];
+        transpose_tile(pts.data(), d, m, &mut xt);
+        let mut acc = vec![0.0; m];
+        dot_accumulate_tile(&coef, &xt, m, &mut acc);
+        for t in 0..m {
+            let want: f64 = pts.row(t).iter().zip(&coef).map(|(&x, &c)| x * c).sum();
+            assert!((acc[t] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn remainder_tiles_use_only_m_columns() {
+        // Buffers larger than m: only the first m entries are touched.
+        let d = 2;
+        let l = lower(d, 9);
+        let b = vec![0.0; d];
+        let xt = vec![1.0; d * 3];
+        let mut y = vec![f64::NAN; 8];
+        let mut maha = vec![f64::NAN; 8];
+        lower_affine_sqnorm(l.data(), d, &b, &xt, 3, &mut y, &mut maha);
+        assert!(maha[..3].iter().all(|v| v.is_finite()));
+        assert!(maha[3..].iter().all(|v| v.is_nan()));
+    }
+}

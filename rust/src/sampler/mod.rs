@@ -156,6 +156,125 @@ impl StepParams {
     pub fn k(&self) -> usize {
         self.params.len()
     }
+
+    /// Flatten this snapshot into the per-sweep kernel descriptors the
+    /// assignment hot path consumes (one O(K·d²) precomputation per sweep,
+    /// amortized over every point instead of re-derived per point).
+    pub fn plan(&self) -> StepPlan {
+        StepPlan::new(self)
+    }
+}
+
+/// Flattened per-cluster kernel descriptor for the assignment hot path: all
+/// per-point work reduces to an affine map plus a reduction, with every
+/// per-sweep-constant term folded in ahead of time.
+#[derive(Debug, Clone)]
+pub enum KernelDesc {
+    /// Gaussian: `loglik = c − ½‖W·x − b‖²` with `W = L⁻¹` (inverse
+    /// Cholesky, row-major flat `d×d` lower triangle), `b = W·μ` the
+    /// precomputed affine offset (no per-point diff vector), and
+    /// `c = log π + log_norm`.
+    Gauss { w: Vec<f64>, b: Vec<f64>, c: f64 },
+    /// Multinomial: `loglik = c + Σ_j x_j·log θ_j` with `c = log π`.
+    Mult { log_theta: Vec<f64>, c: f64 },
+}
+
+impl KernelDesc {
+    /// Build from sampled parameters, folding the log-weight into `c`.
+    pub fn new(params: &Params, log_weight: f64) -> Self {
+        match params {
+            Params::Gauss(g) => {
+                let d = g.mu.len();
+                let w = g.inv_chol.data().to_vec();
+                // b = W·μ (W lower-triangular).
+                let b: Vec<f64> = (0..d)
+                    .map(|i| {
+                        w[i * d..i * d + i + 1]
+                            .iter()
+                            .zip(&g.mu)
+                            .map(|(&wv, &mv)| wv * mv)
+                            .sum::<f64>()
+                    })
+                    .collect();
+                KernelDesc::Gauss { w, b, c: log_weight + g.log_norm }
+            }
+            Params::Mult(m) => {
+                KernelDesc::Mult { log_theta: m.log_theta.clone(), c: log_weight }
+            }
+        }
+    }
+
+    /// Scalar-oracle evaluation of the weighted log-likelihood. The
+    /// accumulation order (ascending `j`, then ascending `i`) matches the
+    /// tiled kernels in [`crate::linalg`] exactly, so scalar and tiled
+    /// scores are bitwise identical.
+    pub fn loglik(&self, x: &[f64]) -> f64 {
+        match self {
+            KernelDesc::Gauss { w, b, c } => {
+                let d = x.len();
+                debug_assert_eq!(w.len(), d * d);
+                let mut maha = 0.0;
+                let mut off = 0;
+                for i in 0..d {
+                    let mut acc = -b[i];
+                    for (&wv, &xv) in w[off..off + i + 1].iter().zip(x) {
+                        acc += wv * xv;
+                    }
+                    maha += acc * acc;
+                    off += d;
+                }
+                c - 0.5 * maha
+            }
+            KernelDesc::Mult { log_theta, c } => {
+                let mut acc = 0.0;
+                for (&xv, &lt) in x.iter().zip(log_theta) {
+                    acc += xv * lt;
+                }
+                c + acc
+            }
+        }
+    }
+}
+
+/// Per-sweep precomputation derived from a [`StepParams`] snapshot: the
+/// flattened cluster and sub-cluster kernel descriptors the backends'
+/// assignment kernels consume. Built once per sweep (per worker), never per
+/// point; it does not cross the coordinator→worker wire — workers derive it
+/// locally from the `StepParams` they receive.
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    /// Data dimensionality (side length of the Gaussian `W` matrices).
+    pub d: usize,
+    /// Cluster descriptors, `c` folding in `log π_k`.
+    pub clusters: Vec<KernelDesc>,
+    /// Sub-cluster descriptors, `c` folding in `log π̄_kh`.
+    pub sub: Vec<[KernelDesc; 2]>,
+}
+
+impl StepPlan {
+    pub fn new(params: &StepParams) -> Self {
+        assert!(params.k() > 0, "step plan needs at least one cluster");
+        let d = params.params[0].dim();
+        let clusters = params
+            .params
+            .iter()
+            .zip(&params.log_weights)
+            .map(|(p, &lw)| KernelDesc::new(p, lw))
+            .collect();
+        let sub = params
+            .sub_params
+            .iter()
+            .zip(&params.sub_log_weights)
+            .map(|(ps, lws)| {
+                [KernelDesc::new(&ps[0], lws[0]), KernelDesc::new(&ps[1], lws[1])]
+            })
+            .collect();
+        StepPlan { d, clusters, sub }
+    }
+
+    pub fn k(&self) -> usize {
+        self.clusters.len()
+    }
 }
 
 /// Apply an accepted split: cluster `target` becomes its left sub-cluster and

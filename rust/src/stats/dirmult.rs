@@ -48,6 +48,23 @@ impl DirMultStats {
         }
     }
 
+    /// Grouped rank-T update from gathered tile columns (see
+    /// [`crate::stats::NiwStats::add_cols`] for the layout contract):
+    /// `n += |idx|`, `Σx += Σ_t x_t` over the selected columns.
+    pub fn add_cols(&mut self, cols: &[f64], stride: usize, idx: &[u32]) {
+        let d = self.sum_x.len();
+        debug_assert!(cols.len() >= d * stride);
+        self.n += idx.len() as f64;
+        for (i, s) in self.sum_x.iter_mut().enumerate() {
+            let row = &cols[i * stride..(i + 1) * stride];
+            let mut acc = 0.0;
+            for &t in idx {
+                acc += row[t as usize];
+            }
+            *s += acc;
+        }
+    }
+
     pub fn merge(&mut self, other: &DirMultStats) {
         self.n += other.n;
         for (s, &v) in self.sum_x.iter_mut().zip(&other.sum_x) {

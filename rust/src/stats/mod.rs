@@ -131,6 +131,17 @@ impl Stats {
         }
     }
 
+    /// Grouped rank-T accumulation from gathered tile columns (`cols` is
+    /// feature-major with row stride `stride`; `idx` selects member
+    /// columns) — the tiled assignment kernel's batched alternative to
+    /// per-point [`add`](Self::add) calls.
+    pub fn add_cols(&mut self, cols: &[f64], stride: usize, idx: &[u32]) {
+        match self {
+            Stats::Gauss(s) => s.add_cols(cols, stride, idx),
+            Stats::Mult(s) => s.add_cols(cols, stride, idx),
+        }
+    }
+
     /// Remove one observation (exact inverse of [`add`](Self::add)).
     pub fn remove(&mut self, x: &[f64]) {
         match self {

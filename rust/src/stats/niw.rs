@@ -67,6 +67,41 @@ impl NiwStats {
         self.sum_xxt.add_outer(x, -1.0);
     }
 
+    /// Grouped rank-T update from gathered tile columns: `cols` is a
+    /// feature-major buffer (row `i` = feature `i`, row stride `stride`) and
+    /// `idx` selects the member columns. Accumulates `n += |idx|`,
+    /// `Σx += Σ_t x_t`, `Σxxᵀ += Σ_t x_t x_tᵀ` — a syrk-style pass that
+    /// touches the accumulator matrix once per tile group instead of once
+    /// per point (the `add_outer` path), and exploits symmetry to halve the
+    /// multiply count. Partial sums are reduced tile-locally first, so the
+    /// result can differ from `|idx|` sequential [`add`](Self::add) calls by
+    /// FP rounding in the last ulps.
+    pub fn add_cols(&mut self, cols: &[f64], stride: usize, idx: &[u32]) {
+        let d = self.dim();
+        debug_assert!(cols.len() >= d * stride);
+        debug_assert!(idx.iter().all(|&t| (t as usize) < stride));
+        self.n += idx.len() as f64;
+        for i in 0..d {
+            let row_i = &cols[i * stride..(i + 1) * stride];
+            let mut si = 0.0;
+            for &t in idx {
+                si += row_i[t as usize];
+            }
+            self.sum_x[i] += si;
+            for j in 0..=i {
+                let row_j = &cols[j * stride..(j + 1) * stride];
+                let mut acc = 0.0;
+                for &t in idx {
+                    acc += row_i[t as usize] * row_j[t as usize];
+                }
+                self.sum_xxt[(i, j)] += acc;
+                if i != j {
+                    self.sum_xxt[(j, i)] += acc;
+                }
+            }
+        }
+    }
+
     pub fn merge(&mut self, other: &NiwStats) {
         self.n += other.n;
         for (s, &v) in self.sum_x.iter_mut().zip(&other.sum_x) {

@@ -39,8 +39,12 @@ fn random_case(seed: u64) -> Case {
     let prior = Prior::Niw(dpmm::stats::NiwPrior::weak(d));
     let shard_size = 64 + rng.next_range(512);
     let threads = 1 + rng.next_range(4);
-    let backend =
-        NativeBackend::new(Arc::clone(&data), prior.clone(), NativeConfig { shard_size, threads }, &mut rng);
+    let backend = NativeBackend::new(
+        Arc::clone(&data),
+        prior.clone(),
+        NativeConfig { shard_size, threads, ..NativeConfig::default() },
+        &mut rng,
+    );
     let k_init = 1 + rng.next_range(3);
     let state = DpmmState::new(0.5 + rng.next_f64() * 20.0, prior, k_init, n, &mut rng);
     let opts = SamplerOptions {

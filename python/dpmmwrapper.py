@@ -6,20 +6,32 @@ self-contained `dpmm` Rust binary, selecting the backend the same way
 (``gpu=True`` → the AOT-XLA backend, the GPU-package analog; ``gpu=False``
 → the native multi-core backend, the Julia analog).
 
-Build-time only convenience — nothing here is on the request path.
+Fitting is build-time convenience; the *serving* client below
+(:class:`DpmmClient` / :func:`predict`) **is** a request-path component: it
+speaks the `dpmm serve` TCP protocol directly over a socket (no Rust binary
+needed client-side), so a fitted model can be queried from Python at
+production rates. The binary wire codec is implemented as pure module
+functions (``_encode_*`` / ``_decode_*``) so its logic is unit-testable
+without a server.
 
-Example (mirrors the paper's §3.4.4 sample):
+Example (mirrors the paper's §3.4.4 sample, then serves the fit):
 
     import numpy as np
-    from dpmmwrapper import generate_gaussian_data, fit
+    from dpmmwrapper import generate_gaussian_data, fit, DpmmClient
 
     data, gt = generate_gaussian_data(100_000, 2, 10, seed=12345)
     labels, result = fit(data, alpha=10.0, iterations=100, gpu=False)
     print("K =", result["num_clusters"])
+
+    # ... dpmm serve --checkpoint=fit.ckpt --addr=127.0.0.1:7979 ...
+    with DpmmClient("127.0.0.1:7979") as client:
+        labels, map_score, log_pred = client.predict(data[:1000])
 """
 
 import json
 import os
+import socket
+import struct
 import subprocess
 import tempfile
 
@@ -110,6 +122,225 @@ def fit(
             result = json.load(f)
     labels = np.asarray(result.pop("labels"), dtype=np.int64)
     return labels, result
+
+
+# ---------------------------------------------------------------------------
+# Serving-protocol client (mirrors rust/src/serve/wire.rs exactly).
+#
+# Frame: [u32 LE length][payload]; payload: [u8 version][u8 tag][body].
+# All integers little-endian; point payloads are raw float64 runs.
+# ---------------------------------------------------------------------------
+
+SERVE_PROTO_VERSION = 1
+FLAG_LOG_PROBS = 1
+
+TAG_PREDICT = 1
+TAG_SCORES = 2
+TAG_INFO = 3
+TAG_INFO_REPLY = 4
+TAG_STATS = 5
+TAG_STATS_REPLY = 6
+TAG_SHUTDOWN = 7
+TAG_ACK = 8
+TAG_ERROR = 9
+
+_MAX_FRAME = 1 << 30
+
+
+class ServerError(RuntimeError):
+    """The server replied with an Error message."""
+
+
+class ProtocolError(RuntimeError):
+    """Malformed or unexpected bytes on the wire."""
+
+
+def _frame(payload):
+    """Wrap a payload in the length-prefixed frame."""
+    return struct.pack("<I", len(payload)) + payload
+
+
+def _encode_predict(x, probs=False):
+    """Encode a Predict request for an (n, d) float64 array → frame bytes."""
+    x = np.ascontiguousarray(np.asarray(x, dtype="<f8"))
+    if x.ndim != 2:
+        raise ValueError("points must be 2-D (n, d)")
+    n, d = x.shape
+    flags = FLAG_LOG_PROBS if probs else 0
+    payload = struct.pack("<BBBII", SERVE_PROTO_VERSION, TAG_PREDICT, flags, n, d)
+    return _frame(payload + x.tobytes())
+
+
+def _encode_simple(tag):
+    """Encode a body-less request (Info / Stats / Shutdown)."""
+    return _frame(struct.pack("<BB", SERVE_PROTO_VERSION, tag))
+
+
+def _split_payload(payload):
+    """Strip and check the version byte; return (tag, body)."""
+    if len(payload) < 2:
+        raise ProtocolError("truncated serve message")
+    ver, tag = payload[0], payload[1]
+    if ver != SERVE_PROTO_VERSION:
+        raise ProtocolError(
+            f"serve protocol version mismatch: got {ver}, want {SERVE_PROTO_VERSION}"
+        )
+    return tag, payload[2:]
+
+
+def _take(body, n, what):
+    if len(body) < n:
+        raise ProtocolError(f"truncated serve message reading {what}")
+    return body[:n], body[n:]
+
+
+def _decode_scores(payload):
+    """Decode a Scores reply payload → (labels, map_score, log_pred, log_probs)."""
+    tag, body = _split_payload(payload)
+    if tag == TAG_ERROR:
+        raise ServerError(_decode_error(body))
+    if tag != TAG_SCORES:
+        raise ProtocolError(f"unexpected reply tag {tag} (want Scores)")
+    head, body = _take(body, 9, "scores header")
+    flags, n, k = struct.unpack("<BII", head)
+    raw, body = _take(body, 4 * n, "labels")
+    labels = np.frombuffer(raw, dtype="<u4").astype(np.int64)
+    raw, body = _take(body, 8 * n, "map_score")
+    map_score = np.frombuffer(raw, dtype="<f8").copy()
+    raw, body = _take(body, 8 * n, "log_predictive")
+    log_predictive = np.frombuffer(raw, dtype="<f8").copy()
+    log_probs = None
+    if flags & FLAG_LOG_PROBS:
+        raw, body = _take(body, 8 * n * k, "log_probs")
+        log_probs = np.frombuffer(raw, dtype="<f8").reshape(n, k).copy()
+    if body:
+        raise ProtocolError(f"{len(body)} trailing bytes after Scores reply")
+    return labels, map_score, log_predictive, log_probs
+
+
+def _decode_error(body):
+    head, body = _take(body, 4, "error length")
+    (n,) = struct.unpack("<I", head)
+    raw, _ = _take(body, n, "error text")
+    return raw.decode("utf-8", errors="replace")
+
+
+def _decode_info(payload):
+    tag, body = _split_payload(payload)
+    if tag == TAG_ERROR:
+        raise ServerError(_decode_error(body))
+    if tag != TAG_INFO_REPLY:
+        raise ProtocolError(f"unexpected reply tag {tag} (want InfoReply)")
+    head, _ = _take(body, 17, "info reply")
+    d, k, family, n_total = struct.unpack("<IIBQ", head)
+    return {
+        "d": d,
+        "k": k,
+        "family": "gaussian" if family == 0 else "multinomial",
+        "n_total": n_total,
+    }
+
+
+def _decode_stats(payload):
+    tag, body = _split_payload(payload)
+    if tag == TAG_ERROR:
+        raise ServerError(_decode_error(body))
+    if tag != TAG_STATS_REPLY:
+        raise ProtocolError(f"unexpected reply tag {tag} (want StatsReply)")
+    head, _ = _take(body, 48, "stats reply")
+    requests, points, batches, uptime, pps, mean_batch = struct.unpack("<QQQddd", head)
+    return {
+        "requests": requests,
+        "points": points,
+        "batches": batches,
+        "uptime_secs": uptime,
+        "points_per_sec": pps,
+        "mean_batch_points": mean_batch,
+    }
+
+
+def _decode_ack(payload):
+    tag, body = _split_payload(payload)
+    if tag == TAG_ERROR:
+        raise ServerError(_decode_error(body))
+    if tag != TAG_ACK:
+        raise ProtocolError(f"unexpected reply tag {tag} (want Ack)")
+
+
+class DpmmClient:
+    """Blocking client for a `dpmm serve` endpoint.
+
+    One request in flight per connection; the server micro-batches across
+    concurrent connections, so open several clients (or threads) for
+    throughput. Usable as a context manager.
+    """
+
+    def __init__(self, addr, timeout=300.0):
+        host, _, port = addr.rpartition(":")
+        self._sock = socket.create_connection((host, int(port)), timeout=timeout)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _recv_exact(self, n):
+        chunks = []
+        while n > 0:
+            chunk = self._sock.recv(min(n, 1 << 20))
+            if not chunk:
+                raise ProtocolError("server closed the connection mid-reply")
+            chunks.append(chunk)
+            n -= len(chunk)
+        return b"".join(chunks)
+
+    def _roundtrip(self, frame):
+        self._sock.sendall(frame)
+        (length,) = struct.unpack("<I", self._recv_exact(4))
+        if length > _MAX_FRAME:
+            raise ProtocolError(f"reply frame too large: {length} bytes")
+        return self._recv_exact(length)
+
+    # -- API ---------------------------------------------------------------
+
+    def predict(self, x, probs=False):
+        """Score an (n, d) array.
+
+        Returns ``(labels, map_score, log_predictive)`` int64/float64
+        arrays, plus a fourth ``(n, k)`` ``log_probs`` array when
+        ``probs=True``.
+        """
+        reply = self._roundtrip(_encode_predict(x, probs=probs))
+        labels, map_score, log_predictive, log_probs = _decode_scores(reply)
+        if probs:
+            return labels, map_score, log_predictive, log_probs
+        return labels, map_score, log_predictive
+
+    def info(self):
+        """Model metadata: dict with d, k, family, n_total."""
+        return _decode_info(self._roundtrip(_encode_simple(TAG_INFO)))
+
+    def stats(self):
+        """Server throughput counters (the `/stats` endpoint)."""
+        return _decode_stats(self._roundtrip(_encode_simple(TAG_STATS)))
+
+    def shutdown_server(self):
+        """Gracefully stop the server (acknowledged before it exits)."""
+        _decode_ack(self._roundtrip(_encode_simple(TAG_SHUTDOWN)))
+
+    def close(self):
+        self._sock.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def predict(data, addr, probs=False, timeout=300.0):
+    """One-shot convenience: connect, score, disconnect."""
+    with DpmmClient(addr, timeout=timeout) as client:
+        return client.predict(data, probs=probs)
 
 
 def main():

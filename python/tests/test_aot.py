@@ -3,6 +3,12 @@
 import json
 import os
 
+import pytest
+
+pytest.importorskip(
+    "jax", reason="jax-backed tests need the XLA toolchain (skipped in slim CI)"
+)
+
 import jax
 import pytest
 

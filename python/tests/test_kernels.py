@@ -4,6 +4,13 @@ Hypothesis sweeps shapes/seeds; every case asserts allclose at float32
 tolerance. This is the core correctness signal for the device hot path.
 """
 
+import pytest
+
+pytest.importorskip(
+    "jax", reason="jax-backed tests need the XLA toolchain (skipped in slim CI)"
+)
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

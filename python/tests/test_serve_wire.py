@@ -1,0 +1,149 @@
+"""Pure-logic tests for the Python serving-protocol codec.
+
+These exercise the `dpmmwrapper` wire functions against the byte layout
+documented in rust/src/serve/wire.rs — no server, no sockets, no jax — so
+they run anywhere numpy + pytest exist (and in CI without the Rust
+toolchain). The Rust side asserts the same layout from its end
+(`rust/src/serve/wire.rs` tests + the serve integration test), so the two
+suites pin the protocol from both directions.
+"""
+
+import os
+import struct
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import dpmmwrapper as w
+
+
+def synth_scores_payload(labels, map_score, log_pred, log_probs=None, k=3):
+    """Build a Scores reply payload exactly as the Rust server would."""
+    n = len(labels)
+    flags = w.FLAG_LOG_PROBS if log_probs is not None else 0
+    body = struct.pack("<BBBII", w.SERVE_PROTO_VERSION, w.TAG_SCORES, flags, n, k)
+    body += np.asarray(labels, dtype="<u4").tobytes()
+    body += np.asarray(map_score, dtype="<f8").tobytes()
+    body += np.asarray(log_pred, dtype="<f8").tobytes()
+    if log_probs is not None:
+        body += np.asarray(log_probs, dtype="<f8").tobytes()
+    return body
+
+
+class TestEncodePredict:
+    def test_layout_matches_spec(self):
+        x = np.arange(6, dtype=np.float64).reshape(2, 3)
+        frame = w._encode_predict(x)
+        (length,) = struct.unpack("<I", frame[:4])
+        payload = frame[4:]
+        assert length == len(payload)
+        ver, tag, flags, n, d = struct.unpack("<BBBII", payload[:11])
+        assert (ver, tag, flags, n, d) == (w.SERVE_PROTO_VERSION, w.TAG_PREDICT, 0, 2, 3)
+        got = np.frombuffer(payload[11:], dtype="<f8")
+        np.testing.assert_array_equal(got, x.ravel())
+
+    def test_probs_flag_set(self):
+        frame = w._encode_predict(np.zeros((1, 2)), probs=True)
+        assert frame[4 + 2] == w.FLAG_LOG_PROBS
+
+    def test_casts_and_contiguity(self):
+        # Fortran-ordered float32 input still serializes row-major float64.
+        x = np.asfortranarray(np.array([[1, 2], [3, 4]], dtype=np.float32))
+        frame = w._encode_predict(x)
+        got = np.frombuffer(frame[4 + 11:], dtype="<f8")
+        np.testing.assert_array_equal(got, [1.0, 2.0, 3.0, 4.0])
+
+    def test_rejects_non_2d(self):
+        with pytest.raises(ValueError):
+            w._encode_predict(np.zeros(3))
+
+
+class TestDecodeScores:
+    def test_roundtrip_without_probs(self):
+        payload = synth_scores_payload([0, 2, 1], [-1.0, -2.0, -3.0], [-9.0, -8.0, -7.0])
+        labels, ms, lp, probs = w._decode_scores(payload)
+        np.testing.assert_array_equal(labels, [0, 2, 1])
+        np.testing.assert_allclose(ms, [-1.0, -2.0, -3.0])
+        np.testing.assert_allclose(lp, [-9.0, -8.0, -7.0])
+        assert probs is None
+        assert labels.dtype == np.int64
+
+    def test_roundtrip_with_probs(self):
+        lpmat = np.log(np.full((2, 3), 1 / 3.0))
+        payload = synth_scores_payload([1, 0], [-1.0, -2.0], [-3.0, -4.0], lpmat, k=3)
+        _, _, _, probs = w._decode_scores(payload)
+        assert probs.shape == (2, 3)
+        np.testing.assert_allclose(probs, lpmat)
+
+    def test_error_reply_raises_server_error(self):
+        msg = "dimension mismatch: request d=3, model d=2"
+        body = struct.pack("<BBI", w.SERVE_PROTO_VERSION, w.TAG_ERROR, len(msg))
+        body += msg.encode()
+        with pytest.raises(w.ServerError, match="dimension mismatch"):
+            w._decode_scores(body)
+
+    def test_version_mismatch_raises(self):
+        payload = synth_scores_payload([0], [-1.0], [-2.0])
+        bad = bytes([99]) + payload[1:]
+        with pytest.raises(w.ProtocolError, match="version mismatch"):
+            w._decode_scores(bad)
+
+    def test_truncated_payload_raises(self):
+        payload = synth_scores_payload([0, 1], [-1.0, -2.0], [-3.0, -4.0])
+        for cut in (1, 5, len(payload) - 3):
+            with pytest.raises(w.ProtocolError, match="truncated"):
+                w._decode_scores(payload[:cut])
+
+    def test_trailing_bytes_raise(self):
+        payload = synth_scores_payload([0], [-1.0], [-2.0]) + b"\x00"
+        with pytest.raises(w.ProtocolError, match="trailing"):
+            w._decode_scores(payload)
+
+    def test_wrong_tag_raises(self):
+        payload = struct.pack("<BB", w.SERVE_PROTO_VERSION, w.TAG_ACK)
+        with pytest.raises(w.ProtocolError, match="unexpected reply tag"):
+            w._decode_scores(payload)
+
+
+class TestInfoAndStats:
+    def test_info_roundtrip(self):
+        body = struct.pack(
+            "<BBIIBQ", w.SERVE_PROTO_VERSION, w.TAG_INFO_REPLY, 32, 12, 0, 10**6
+        )
+        info = w._decode_info(body)
+        assert info == {"d": 32, "k": 12, "family": "gaussian", "n_total": 10**6}
+        body = struct.pack("<BBIIBQ", w.SERVE_PROTO_VERSION, w.TAG_INFO_REPLY, 8, 4, 1, 7)
+        assert w._decode_info(body)["family"] == "multinomial"
+
+    def test_stats_roundtrip(self):
+        body = struct.pack(
+            "<BBQQQddd",
+            w.SERVE_PROTO_VERSION,
+            w.TAG_STATS_REPLY,
+            10,
+            1000,
+            4,
+            2.5,
+            400.0,
+            250.0,
+        )
+        stats = w._decode_stats(body)
+        assert stats["requests"] == 10
+        assert stats["points"] == 1000
+        assert stats["batches"] == 4
+        assert stats["uptime_secs"] == 2.5
+        assert stats["points_per_sec"] == 400.0
+        assert stats["mean_batch_points"] == 250.0
+
+    def test_ack_accepts_only_ack(self):
+        w._decode_ack(struct.pack("<BB", w.SERVE_PROTO_VERSION, w.TAG_ACK))
+        with pytest.raises(w.ProtocolError):
+            w._decode_ack(struct.pack("<BB", w.SERVE_PROTO_VERSION, w.TAG_INFO_REPLY))
+
+    def test_simple_requests_are_two_bytes_framed(self):
+        for tag in (w.TAG_INFO, w.TAG_STATS, w.TAG_SHUTDOWN):
+            frame = w._encode_simple(tag)
+            assert frame == struct.pack("<IBB", 2, w.SERVE_PROTO_VERSION, tag)

@@ -1,0 +1,188 @@
+//! Serving-path throughput: batched engine scoring vs the one-point-at-a-time
+//! baseline, engine-direct vs over-TCP with micro-batching.
+//!
+//! The serving engine reuses the fit path's fused whitened-GEMM tile kernel
+//! on frozen parameters; this bench quantifies what that buys on the
+//! request path (target: batched engine ≥ 5× the scalar baseline at d=32;
+//! see EXPERIMENTS.md §Serving) and how much of it survives the socket.
+//!
+//! Machine-readable output: `BENCH_serve.json` (override with
+//! `BENCH_SERVE_OUT`). Scale control: `DPMM_BENCH_SCALE=small|medium|full`.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+
+#[path = "support/mod.rs"]
+mod support;
+
+use dpmm::model::DpmmState;
+use dpmm::prelude::*;
+use dpmm::serve::{spawn, DpmmClient, EngineConfig, ModelSnapshot, ScoringEngine, ServeConfig};
+use dpmm::stats::{NiwPrior, Prior};
+use dpmm::util::json::{self, Json};
+use std::time::Instant;
+
+const D: usize = 32;
+const K: usize = 8;
+
+/// Build a frozen snapshot by pouring a synthetic GMM's points into their
+/// true clusters (no MCMC needed — the serving path starts from statistics),
+/// plus a held-out scoring set from the same mixture.
+fn build_model(n_fit: usize, n_score: usize) -> (ModelSnapshot, Vec<f64>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let ds = GmmSpec::default_with(n_fit + n_score, D, K).generate(&mut rng);
+    let prior = Prior::Niw(NiwPrior::weak(D));
+    let mut state = DpmmState::new(10.0, prior, K, n_fit, &mut rng);
+    for i in 0..n_fit {
+        let row = ds.points.row(i);
+        state.clusters[ds.labels[i]].stats.add(row);
+    }
+    let snapshot = ModelSnapshot::from_state(&state).expect("snapshot");
+    let heldout = ds.points.values[n_fit * D..].to_vec();
+    (snapshot, heldout)
+}
+
+fn pps(points: usize, secs: f64) -> f64 {
+    points as f64 / secs.max(1e-9)
+}
+
+fn main() {
+    let (n_fit, n_score) = match support::scale() {
+        support::Scale::Small => (40_000, 40_000),
+        support::Scale::Medium => (100_000, 200_000),
+        support::Scale::Full => (500_000, 1_000_000),
+    };
+    let (snapshot, heldout) = build_model(n_fit, n_score);
+    println!(
+        "serve throughput: d={D} K={} N_score={n_score} ({} threads available)\n",
+        snapshot.k(),
+        dpmm::util::threadpool::default_threads()
+    );
+
+    // --- engine-direct: one-point-at-a-time baseline (single thread) ----
+    let engine1 = ScoringEngine::new(&snapshot, EngineConfig { threads: 1, tile: 128 })
+        .expect("engine");
+    let n_base = n_score.min(10_000);
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for i in 0..n_base {
+        let (l, _, _) = engine1.score_one(&heldout[i * D..(i + 1) * D]).unwrap();
+        sink = sink.wrapping_add(l as u64);
+    }
+    let baseline_pps = pps(n_base, t0.elapsed().as_secs_f64());
+    println!("baseline (score_one, 1 thread): {baseline_pps:>12.0} points/s  [sink {sink}]");
+
+    // --- engine-direct: batched, single- and multi-threaded -------------
+    let engine_mt =
+        ScoringEngine::new(&snapshot, EngineConfig::default()).expect("engine");
+    let mut engine_sweep = Vec::new();
+    for &batch in &[64usize, 512, 4096, 32_768] {
+        for (label, engine, threads) in
+            [("1t", &engine1, 1usize), ("mt", &engine_mt, 0)]
+        {
+            let t0 = Instant::now();
+            let mut scored = 0usize;
+            while scored < n_score {
+                let m = batch.min(n_score - scored);
+                let b = engine
+                    .score(&heldout[scored * D..(scored + m) * D], false)
+                    .unwrap();
+                std::hint::black_box(&b.labels);
+                scored += m;
+            }
+            let rate = pps(n_score, t0.elapsed().as_secs_f64());
+            println!("engine  batch={batch:<6} {label}: {rate:>12.0} points/s");
+            engine_sweep.push(Json::obj(vec![
+                ("batch", batch.into()),
+                ("threads", if threads == 0 { "auto".into() } else { 1usize.into() }),
+                ("points_per_sec", rate.into()),
+            ]));
+        }
+    }
+    // Acceptance metric: largest single-thread batch vs scalar baseline.
+    let best_1t = {
+        let t0 = Instant::now();
+        let b = engine1.score(&heldout, false).unwrap();
+        std::hint::black_box(&b.labels);
+        pps(n_score, t0.elapsed().as_secs_f64())
+    };
+    let speedup = best_1t / baseline_pps;
+    println!(
+        "\nbatched(1 thread, full batch) vs one-at-a-time: {speedup:.2}x  (target ≥ 5x at d=32)"
+    );
+
+    // --- over-TCP with micro-batching ------------------------------------
+    let server = spawn(
+        ScoringEngine::new(&snapshot, EngineConfig::default()).expect("engine"),
+        "127.0.0.1:0",
+        ServeConfig::default(),
+    )
+    .expect("server");
+    let addr = server.addr().to_string();
+    let mut tcp_sweep = Vec::new();
+    for &(clients, batch) in &[(1usize, 256usize), (1, 4096), (4, 256), (4, 4096)] {
+        let per_client = n_score / clients;
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let addr = addr.clone();
+                let heldout = &heldout;
+                scope.spawn(move || {
+                    let mut client = DpmmClient::connect(&addr).expect("connect");
+                    let lo = c * per_client;
+                    let mut scored = 0usize;
+                    while scored < per_client {
+                        let m = batch.min(per_client - scored);
+                        let start = lo + scored;
+                        let p = client
+                            .predict(&heldout[start * D..(start + m) * D], D)
+                            .expect("predict");
+                        std::hint::black_box(&p.labels);
+                        scored += m;
+                    }
+                });
+            }
+        });
+        let rate = pps(per_client * clients, t0.elapsed().as_secs_f64());
+        println!("tcp     batch={batch:<6} clients={clients}: {rate:>12.0} points/s");
+        tcp_sweep.push(Json::obj(vec![
+            ("clients", clients.into()),
+            ("batch", batch.into()),
+            ("points_per_sec", rate.into()),
+        ]));
+    }
+    let stats = {
+        let mut client = DpmmClient::connect(&addr).expect("connect");
+        client.stats().expect("stats")
+    };
+    println!(
+        "\nserver /stats: {} requests, {} points, {} fused batches (mean {:.1} pts/batch)",
+        stats.requests, stats.points, stats.batches, stats.mean_batch_points
+    );
+    server.stop().expect("server stop");
+
+    let doc = Json::obj(vec![
+        ("bench", "serve_throughput".into()),
+        ("d", D.into()),
+        ("k", K.into()),
+        ("n_score", n_score.into()),
+        ("baseline_points_per_sec", baseline_pps.into()),
+        ("batched_1t_full_points_per_sec", best_1t.into()),
+        ("speedup_batched_vs_baseline", speedup.into()),
+        ("engine_sweep", Json::Arr(engine_sweep)),
+        ("tcp_sweep", Json::Arr(tcp_sweep)),
+        (
+            "server_stats",
+            Json::obj(vec![
+                ("requests", (stats.requests as usize).into()),
+                ("points", (stats.points as usize).into()),
+                ("batches", (stats.batches as usize).into()),
+                ("mean_batch_points", stats.mean_batch_points.into()),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    match std::fs::write(&out, json::to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

@@ -60,7 +60,10 @@ impl DistributedBackend {
             let end = start + rows;
             let mut stream = TcpStream::connect(addr)
                 .with_context(|| format!("connecting to worker {addr}"))?;
-            stream.set_nodelay(true).ok();
+            // Fail fast on hung workers: NODELAY + I/O timeouts (see
+            // wire::net_timeout) rather than blocking an iteration forever.
+            wire::configure_stream(&stream)
+                .with_context(|| format!("configuring socket to worker {addr}"))?;
             let chunk: Vec<f64> = data.values[start * data.d..end * data.d].to_vec();
             let init = Message::Init {
                 d: data.d as u32,

@@ -9,7 +9,7 @@
 use crate::linalg::Matrix;
 use crate::sampler::{MergeOp, SplitOp, StepParams};
 use crate::stats::{DirMultParams, DirMultPrior, DirMultStats, NiwParams, NiwPrior, NiwStats, Params, Prior, Stats};
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 
 /// Protocol version byte (bump on wire changes).
@@ -38,6 +38,9 @@ pub enum Message {
 
 // ---------- primitive writers/readers ----------
 
+/// Little-endian primitive encoder over a growable buffer. Public so other
+/// length-prefixed protocols (the serving subsystem's request wire) reuse
+/// the exact same primitive layer instead of reinventing it.
 pub struct Enc {
     pub buf: Vec<u8>,
 }
@@ -46,35 +49,43 @@ impl Enc {
     pub fn new() -> Self {
         Enc { buf: Vec::new() }
     }
-    fn u8(&mut self, v: u8) {
+    pub fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
-    fn u32(&mut self, v: u32) {
+    pub fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn u64(&mut self, v: u64) {
+    pub fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn f64(&mut self, v: f64) {
+    pub fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
-    fn str(&mut self, s: &str) {
+    pub fn str(&mut self, s: &str) {
         self.u32(s.len() as u32);
         self.buf.extend_from_slice(s.as_bytes());
     }
-    fn f64s(&mut self, v: &[f64]) {
+    pub fn f64s(&mut self, v: &[f64]) {
         self.u32(v.len() as u32);
         for &x in v {
             self.f64(x);
         }
     }
-    fn u32s(&mut self, v: &[u32]) {
+    /// Raw (un-prefixed) f64 run — the caller's framing carries the length.
+    /// Used for bulk point payloads where the n·d shape is sent separately.
+    pub fn f64s_raw(&mut self, v: &[f64]) {
+        self.buf.reserve(v.len() * 8);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+    pub fn u32s(&mut self, v: &[u32]) {
         self.u32(v.len() as u32);
         for &x in v {
             self.u32(x);
         }
     }
-    fn matrix(&mut self, m: &Matrix) {
+    pub fn matrix(&mut self, m: &Matrix) {
         self.u32(m.rows() as u32);
         self.u32(m.cols() as u32);
         for &x in m.data() {
@@ -89,6 +100,8 @@ impl Default for Enc {
     }
 }
 
+/// Little-endian primitive decoder over a received frame (the mirror of
+/// [`Enc`]; public for the same reuse reason).
 pub struct Dec<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -98,7 +111,7 @@ impl<'a> Dec<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
         Dec { buf, pos: 0 }
     }
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
             bail!("truncated message (want {n} bytes at {})", self.pos);
         }
@@ -106,37 +119,45 @@ impl<'a> Dec<'a> {
         self.pos += n;
         Ok(s)
     }
-    fn u8(&mut self) -> Result<u8> {
+    pub fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
-    fn f64(&mut self) -> Result<f64> {
+    pub fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
-    fn str(&mut self) -> Result<String> {
+    pub fn str(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
         Ok(String::from_utf8(self.take(n)?.to_vec())?)
     }
-    fn f64s(&mut self) -> Result<Vec<f64>> {
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
         let n = self.u32()? as usize;
         (0..n).map(|_| self.f64()).collect()
     }
-    fn u32s(&mut self) -> Result<Vec<u32>> {
+    /// Raw (un-prefixed) f64 run of known length (see [`Enc::f64s_raw`]).
+    pub fn f64s_raw(&mut self, n: usize) -> Result<Vec<f64>> {
+        let bytes = self.take(n.checked_mul(8).ok_or_else(|| anyhow!("f64 run overflow"))?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
         let n = self.u32()? as usize;
         (0..n).map(|_| self.u32()).collect()
     }
-    fn matrix(&mut self) -> Result<Matrix> {
+    pub fn matrix(&mut self) -> Result<Matrix> {
         let r = self.u32()? as usize;
         let c = self.u32()? as usize;
         let data = (0..r * c).map(|_| self.f64()).collect::<Result<Vec<_>>>()?;
         Ok(Matrix::from_vec(r, c, data))
     }
-    fn finished(&self) -> bool {
+    pub fn finished(&self) -> bool {
         self.pos == self.buf.len()
     }
 }
@@ -417,26 +438,80 @@ impl Message {
     }
 }
 
-/// Write a length-prefixed message to a stream.
-pub fn write_message(w: &mut impl Write, msg: &Message) -> Result<()> {
-    let body = msg.encode();
+/// Maximum accepted frame size (sanity cap against corrupt length prefixes).
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Write one `[u32 length][body]` frame to a stream. Bodies over
+/// [`MAX_FRAME`] are refused before any bytes hit the wire: every reader
+/// rejects them anyway, and past 4 GiB the `u32` length would silently
+/// wrap and desynchronize the stream.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
+    if body.len() > MAX_FRAME {
+        bail!("refusing to write over-sized frame ({} bytes > {MAX_FRAME})", body.len());
+    }
     w.write_all(&(body.len() as u32).to_le_bytes())?;
-    w.write_all(&body)?;
+    w.write_all(body)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read a length-prefixed message (with a 1 GiB sanity cap).
-pub fn read_message(r: &mut impl Read) -> Result<Message> {
+/// Read one `[u32 length][body]` frame (with the [`MAX_FRAME`] sanity cap).
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
     let mut len_buf = [0u8; 4];
     r.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
-    if len > 1 << 30 {
+    if len > MAX_FRAME {
         bail!("message too large: {len} bytes");
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
-    Message::decode(&body)
+    Ok(body)
+}
+
+/// Write a length-prefixed message to a stream.
+pub fn write_message(w: &mut impl Write, msg: &Message) -> Result<()> {
+    write_frame(w, &msg.encode())
+}
+
+/// Read a length-prefixed message (with a 1 GiB sanity cap).
+pub fn read_message(r: &mut impl Read) -> Result<Message> {
+    Message::decode(&read_frame(r)?)
+}
+
+/// Socket I/O timeout for all DPMM TCP peers (leader, worker, serve
+/// server/client): `DPMM_NET_TIMEOUT_SECS`, default 300 s, `0` disables.
+///
+/// The timeout is a liveness backstop, not a latency bound — a hung or
+/// half-dead peer fails the iteration with a clear error within one timeout
+/// instead of blocking the whole fit (or a serving request) forever. The
+/// default is generous because a healthy distributed step can legitimately
+/// keep a worker silent for minutes while its shard computes.
+pub fn net_timeout() -> Option<std::time::Duration> {
+    match std::env::var("DPMM_NET_TIMEOUT_SECS") {
+        Ok(v) => match v.trim().parse::<u64>() {
+            Ok(0) => None,
+            Ok(secs) => Some(std::time::Duration::from_secs(secs)),
+            Err(_) => {
+                eprintln!(
+                    "warning: unparsable DPMM_NET_TIMEOUT_SECS='{v}'; using default 300s"
+                );
+                Some(std::time::Duration::from_secs(300))
+            }
+        },
+        Err(_) => Some(std::time::Duration::from_secs(300)),
+    }
+}
+
+/// Apply the standard socket options to a DPMM peer stream: `TCP_NODELAY`
+/// (every message is a complete request/reply — Nagle only adds latency)
+/// and read/write timeouts from [`net_timeout`] so a hung peer fails fast
+/// instead of blocking an iteration forever.
+pub fn configure_stream(stream: &std::net::TcpStream) -> Result<()> {
+    stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+    let t = net_timeout();
+    stream.set_read_timeout(t).context("setting read timeout")?;
+    stream.set_write_timeout(t).context("setting write timeout")?;
+    Ok(())
 }
 
 /// Round-trip helper: send a request, expect a reply.
@@ -563,5 +638,30 @@ mod tests {
         let mut cursor = std::io::Cursor::new(buf);
         assert_eq!(read_message(&mut cursor).unwrap(), Message::RandomizeLabels { k: 3 });
         assert_eq!(read_message(&mut cursor).unwrap(), Message::Ack);
+    }
+
+    #[test]
+    fn frame_roundtrip_and_cap() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"");
+        // Oversized length prefix is rejected before allocation.
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        let mut cursor = std::io::Cursor::new(huge.to_vec());
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn raw_f64_runs_roundtrip() {
+        let mut e = Enc::new();
+        e.f64s_raw(&[1.5, -2.25, 0.0]);
+        let mut d = Dec::new(&e.buf);
+        assert_eq!(d.f64s_raw(3).unwrap(), vec![1.5, -2.25, 0.0]);
+        assert!(d.finished());
+        let mut d = Dec::new(&e.buf);
+        assert!(d.f64s_raw(4).is_err());
     }
 }

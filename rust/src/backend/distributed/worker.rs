@@ -91,7 +91,9 @@ fn handle(stream: &mut TcpStream, state: &mut Option<WorkerState>) -> Result<boo
 
 /// Serve a single leader connection to completion (Shutdown or EOF).
 pub fn serve_connection(mut stream: TcpStream) -> Result<()> {
-    stream.set_nodelay(true).ok();
+    // NODELAY + I/O timeouts: a leader that dies mid-protocol unblocks the
+    // worker within one timeout instead of wedging it forever.
+    super::wire::configure_stream(&stream).ok();
     let mut state: Option<WorkerState> = None;
     loop {
         match handle(&mut stream, &mut state) {
@@ -118,7 +120,12 @@ pub fn serve(addr: &str) -> Result<()> {
         TcpListener::bind(addr).with_context(|| format!("worker bind {addr}"))?;
     eprintln!("dpmm worker listening on {}", listener.local_addr()?);
     for stream in listener.incoming() {
-        serve_connection(stream?)?;
+        // A leader that times out or dies mid-protocol ends its connection
+        // (I/O timeout via wire::configure_stream) but must not take the
+        // worker process down — stay up for the next leader.
+        if let Err(e) = serve_connection(stream?) {
+            eprintln!("worker: leader connection ended with error: {e:#}");
+        }
     }
     Ok(())
 }

@@ -1,7 +1,9 @@
 //! Model/run configuration — the paper's `global_params` JSON surface
 //! (`--params_path`): `alpha`, `prior_type`, prior hyperparameters,
-//! `iterations`, `burn_out`, `kernel`, backend selection, seeds.
+//! `iterations`, `burn_out`, `kernel`, backend selection, seeds — plus the
+//! serving-path settings consumed by `dpmm serve` / `dpmm predict`.
 
+use crate::cli::Args;
 use crate::linalg::Matrix;
 use crate::sampler::SamplerOptions;
 use crate::stats::{DirMultPrior, NiwPrior, Prior};
@@ -49,6 +51,51 @@ pub enum BackendChoice {
 impl Default for BackendChoice {
     fn default() -> Self {
         BackendChoice::Native { threads: 0, shard_size: 16 * 1024 }
+    }
+}
+
+/// Settings for the online-inference serving path (`dpmm serve` and the
+/// engine-direct mode of `dpmm predict`); see [`crate::serve`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeSettings {
+    /// Listen address (`host:port`; port 0 = ephemeral).
+    pub addr: String,
+    /// Engine worker threads (0 = core count / `DPMM_THREADS`).
+    pub threads: usize,
+    /// Points per scoring tile.
+    pub tile: usize,
+    /// Cap on coalesced points per fused micro-batch pass.
+    pub max_batch_points: usize,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7979".into(),
+            threads: 0,
+            tile: crate::backend::shard::DEFAULT_TILE,
+            max_batch_points: 64 * 1024,
+        }
+    }
+}
+
+impl ServeSettings {
+    /// Parse `--addr / --threads / --tile / --batch_points` CLI overrides.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut s = ServeSettings::default();
+        if let Some(a) = args.get("addr") {
+            s.addr = a.to_string();
+        }
+        if let Some(t) = args.get_usize("threads")? {
+            s.threads = t;
+        }
+        if let Some(t) = args.get_usize("tile")? {
+            s.tile = t.max(1);
+        }
+        if let Some(b) = args.get_usize("batch_points")? {
+            s.max_batch_points = b.max(1);
+        }
+        Ok(s)
     }
 }
 
@@ -351,6 +398,28 @@ mod tests {
             }
             _ => panic!("wrong backend"),
         }
+    }
+
+    #[test]
+    fn serve_settings_from_args() {
+        let args = Args::parse(
+            ["serve", "--addr=0.0.0.0:9000", "--threads=4", "--batch_points=128"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        let s = ServeSettings::from_args(&args).unwrap();
+        assert_eq!(s.addr, "0.0.0.0:9000");
+        assert_eq!(s.threads, 4);
+        assert_eq!(s.max_batch_points, 128);
+        assert_eq!(s.tile, ServeSettings::default().tile);
+        let bad = Args::parse(
+            ["serve", "--threads=nope"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        assert!(ServeSettings::from_args(&bad).is_err());
     }
 
     #[test]

@@ -13,10 +13,10 @@ use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"DPMMCKPT";
-const VERSION: u8 = 1;
+pub(crate) const MAGIC: &[u8; 8] = b"DPMMCKPT";
+pub(crate) const VERSION: u8 = 1;
 
-fn write_stats(w: &mut impl Write, s: &Stats) -> Result<()> {
+pub(crate) fn write_stats(w: &mut impl Write, s: &Stats) -> Result<()> {
     match s {
         Stats::Gauss(g) => {
             w.write_all(&[0u8])?;
@@ -34,7 +34,7 @@ fn write_stats(w: &mut impl Write, s: &Stats) -> Result<()> {
     Ok(())
 }
 
-fn read_stats(r: &mut impl Read) -> Result<Stats> {
+pub(crate) fn read_stats(r: &mut impl Read) -> Result<Stats> {
     let tag = read_u8(r)?;
     Ok(match tag {
         0 => {
@@ -60,7 +60,7 @@ fn read_stats(r: &mut impl Read) -> Result<Stats> {
     })
 }
 
-fn write_f64s(w: &mut impl Write, v: &[f64]) -> Result<()> {
+pub(crate) fn write_f64s(w: &mut impl Write, v: &[f64]) -> Result<()> {
     w.write_all(&(v.len() as u32).to_le_bytes())?;
     for x in v {
         w.write_all(&x.to_le_bytes())?;
@@ -68,7 +68,7 @@ fn write_f64s(w: &mut impl Write, v: &[f64]) -> Result<()> {
     Ok(())
 }
 
-fn read_f64s(r: &mut impl Read) -> Result<Vec<f64>> {
+pub(crate) fn read_f64s(r: &mut impl Read) -> Result<Vec<f64>> {
     let n = read_u32(r)? as usize;
     if n > 1 << 28 {
         bail!("checkpoint vector too large ({n})");
@@ -76,31 +76,31 @@ fn read_f64s(r: &mut impl Read) -> Result<Vec<f64>> {
     (0..n).map(|_| read_f64(r)).collect()
 }
 
-fn read_u8(r: &mut impl Read) -> Result<u8> {
+pub(crate) fn read_u8(r: &mut impl Read) -> Result<u8> {
     let mut b = [0u8; 1];
     r.read_exact(&mut b)?;
     Ok(b[0])
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
+pub(crate) fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn read_u64(r: &mut impl Read) -> Result<u64> {
+pub(crate) fn read_u64(r: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn read_f64(r: &mut impl Read) -> Result<f64> {
+pub(crate) fn read_f64(r: &mut impl Read) -> Result<f64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(f64::from_le_bytes(b))
 }
 
-fn write_prior(w: &mut impl Write, p: &Prior) -> Result<()> {
+pub(crate) fn write_prior(w: &mut impl Write, p: &Prior) -> Result<()> {
     match p {
         Prior::Niw(n) => {
             w.write_all(&[0u8])?;
@@ -117,7 +117,10 @@ fn write_prior(w: &mut impl Write, p: &Prior) -> Result<()> {
     Ok(())
 }
 
-fn read_prior(r: &mut impl Read) -> Result<Prior> {
+pub(crate) fn read_prior(r: &mut impl Read) -> Result<Prior> {
+    // Validate hyperparameters *before* the constructors: their `assert!`s
+    // are for programmer errors, and a corrupt checkpoint/snapshot file must
+    // surface as an error, not abort the loading process.
     Ok(match read_u8(r)? {
         0 => {
             let kappa = read_f64(r)?;
@@ -128,6 +131,15 @@ fn read_prior(r: &mut impl Read) -> Result<Prior> {
             if psi_flat.len() != d * d {
                 bail!("checkpoint psi shape mismatch");
             }
+            if d == 0 || !kappa.is_finite() || kappa <= 0.0 {
+                bail!("checkpoint NIW prior has invalid kappa {kappa} (d={d})");
+            }
+            if !nu.is_finite() || nu <= (d as f64) - 1.0 {
+                bail!("checkpoint NIW prior has invalid nu {nu} for d={d}");
+            }
+            if m.iter().any(|v| !v.is_finite()) || psi_flat.iter().any(|v| !v.is_finite()) {
+                bail!("checkpoint NIW prior has non-finite hyperparameters");
+            }
             Prior::Niw(crate::stats::NiwPrior::new(
                 kappa,
                 m,
@@ -135,7 +147,13 @@ fn read_prior(r: &mut impl Read) -> Result<Prior> {
                 crate::linalg::Matrix::from_vec(d, d, psi_flat),
             ))
         }
-        1 => Prior::DirMult(crate::stats::DirMultPrior::new(read_f64s(r)?)),
+        1 => {
+            let alpha = read_f64s(r)?;
+            if alpha.is_empty() || alpha.iter().any(|&a| !a.is_finite() || a <= 0.0) {
+                bail!("checkpoint Dirichlet prior has invalid concentration vector");
+            }
+            Prior::DirMult(crate::stats::DirMultPrior::new(alpha))
+        }
         t => bail!("bad prior tag {t} in checkpoint"),
     })
 }

@@ -15,6 +15,11 @@
 //!   only parameters and sufficient statistics (the paper's multi-machine
 //!   Julia mode analog).
 //!
+//! After a fit, the [`serve`] subsystem freezes the chain into an immutable
+//! [`serve::ModelSnapshot`] and serves batched posterior-predictive queries
+//! (MAP assignment, membership probabilities, anomaly scores) in-process or
+//! over TCP with micro-batching.
+//!
 //! Quickstart:
 //!
 //! ```no_run
@@ -42,6 +47,7 @@ pub mod model;
 pub mod rng;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod stats;
 pub mod util;
 
@@ -53,4 +59,5 @@ pub mod prelude {
     pub use crate::linalg::Matrix;
     pub use crate::metrics::nmi;
     pub use crate::rng::{Rng, Xoshiro256pp};
+    pub use crate::serve::{DpmmClient, ModelSnapshot, ScoringEngine};
 }

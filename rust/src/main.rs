@@ -10,20 +10,26 @@
 //! dpmm generate --kind=gmm|mnmm|mnist|fashion|imagenet|20news --n=100000 [--d=2] [--k=10]
 //!          --out=points.npy [--labels_out=truth.npy] [--seed=0]
 //! dpmm worker --listen=0.0.0.0:7878
+//! dpmm serve --checkpoint=fit.ckpt|--snapshot=model.snap --addr=0.0.0.0:7979
+//!          [--threads=0] [--tile=128] [--batch_points=65536] [--export_snapshot=model.snap]
+//! dpmm predict --data=points.npy (--addr=host:7979 | --checkpoint=fit.ckpt | --snapshot=model.snap)
+//!          [--probs] [--labels_out=labels.npy] [--result_path=result.json]
+//! dpmm snapshot --checkpoint=fit.ckpt --out=model.snap
 //! dpmm info [--artifacts=artifacts]
 //! ```
 
 use anyhow::{anyhow, bail, Context, Result};
 use dpmm::backend::distributed::worker;
 use dpmm::cli::Args;
-use dpmm::config::{BackendChoice, DpmmParams};
+use dpmm::config::{BackendChoice, DpmmParams, ServeSettings};
 use dpmm::coordinator::DpmmFit;
 use dpmm::datagen::{self, Data, Dataset, GmmSpec, MultinomialSpec};
 use dpmm::metrics;
 use dpmm::rng::Xoshiro256pp;
+use dpmm::serve::{self, DpmmClient, EngineConfig, ModelSnapshot, Prediction, ScoringEngine};
 use dpmm::util::{json, npy};
 
-const FLAGS: &[&str] = &["verbose", "help", "version"];
+const FLAGS: &[&str] = &["verbose", "help", "version", "probs"];
 
 fn main() {
     let args = match Args::from_env(FLAGS) {
@@ -45,8 +51,13 @@ fn main() {
         Some("fit") => cmd_fit(&args),
         Some("generate") => cmd_generate(&args),
         Some("worker") => cmd_worker(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("snapshot") => cmd_snapshot(&args),
         Some("info") => cmd_info(&args),
-        Some(other) => Err(anyhow!("unknown subcommand '{other}' (fit|generate|worker|info)")),
+        Some(other) => Err(anyhow!(
+            "unknown subcommand '{other}' (fit|generate|worker|serve|predict|snapshot|info)"
+        )),
         None => unreachable!(),
     };
     if let Err(e) = result {
@@ -63,6 +74,9 @@ fn print_help() {
          \x20 fit       fit a DPMM to an .npy data matrix\n\
          \x20 generate  create synthetic / simulated-real datasets\n\
          \x20 worker    run a distributed worker (leader connects over TCP)\n\
+         \x20 serve     serve posterior-predictive queries from a fitted model\n\
+         \x20 predict   score new points (against a server or a local model)\n\
+         \x20 snapshot  export an immutable model snapshot from a checkpoint\n\
          \x20 info      show PJRT platform + AOT artifact manifest\n\
          \n\
          see the doc comment in rust/src/main.rs for the full option list"
@@ -225,6 +239,128 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_worker(args: &Args) -> Result<()> {
     let listen = args.get_or("listen", "127.0.0.1:7878");
     worker::serve(listen)
+}
+
+/// Load the frozen model named by `--snapshot` or `--checkpoint`.
+fn load_snapshot_arg(args: &Args) -> Result<ModelSnapshot> {
+    if let Some(p) = args.get("snapshot") {
+        ModelSnapshot::load(p).with_context(|| format!("loading snapshot {p}"))
+    } else if let Some(p) = args.get("checkpoint") {
+        ModelSnapshot::from_checkpoint_file(p)
+            .with_context(|| format!("loading checkpoint {p}"))
+    } else {
+        bail!("need --snapshot=<model.snap> or --checkpoint=<fit.ckpt>")
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let settings = ServeSettings::from_args(args)?;
+    let snapshot = load_snapshot_arg(args)?;
+    if let Some(out) = args.get("export_snapshot") {
+        snapshot.save(out).with_context(|| format!("writing {out}"))?;
+        eprintln!("wrote snapshot {out}");
+    }
+    eprintln!(
+        "serving model: K={} d={} family={} (from N={})",
+        snapshot.k(),
+        snapshot.dim(),
+        snapshot.prior.family(),
+        snapshot.n_total
+    );
+    let engine = ScoringEngine::new(
+        &snapshot,
+        EngineConfig { threads: settings.threads, tile: settings.tile },
+    )?;
+    serve::serve_blocking(
+        engine,
+        &settings.addr,
+        serve::ServeConfig { max_batch_points: settings.max_batch_points },
+    )
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let data_path = args
+        .get("data")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow!("predict needs --data=<points.npy>"))?;
+    let (n, d, values) = npy::read_matrix_f64(&data_path)?;
+    let probs = args.flag("probs");
+    let pred: Prediction = if let Some(addr) = args.get("addr") {
+        let mut client = DpmmClient::connect(addr)?;
+        client.predict_opts(&values, d, probs)?
+    } else {
+        let settings = ServeSettings::from_args(args)?;
+        let snapshot = load_snapshot_arg(args)?;
+        if d != snapshot.dim() {
+            bail!(
+                "data dimension {d} does not match model dimension {} — refusing to \
+                 reinterpret rows",
+                snapshot.dim()
+            );
+        }
+        let engine = ScoringEngine::new(
+            &snapshot,
+            EngineConfig { threads: settings.threads, tile: settings.tile },
+        )?;
+        let k = engine.k();
+        let b = engine.score(&values, probs)?;
+        Prediction {
+            labels: b.labels,
+            map_score: b.map_score,
+            log_predictive: b.log_predictive,
+            log_probs: b.log_probs,
+            k,
+        }
+    };
+    if let Some(lp) = args.get("labels_out") {
+        npy::write(
+            lp,
+            &npy::NpyArray {
+                shape: vec![pred.labels.len()],
+                data: npy::NpyData::I64(pred.labels.iter().map(|&l| l as i64).collect()),
+            },
+        )?;
+        eprintln!("wrote {lp}");
+    }
+    let mut fields = vec![
+        ("n", json::Json::from(n)),
+        ("k", json::Json::from(pred.k)),
+        (
+            "labels",
+            json::Json::arr_usize(&pred.labels.iter().map(|&l| l as usize).collect::<Vec<_>>()),
+        ),
+        ("map_score", json::Json::arr_f64(&pred.map_score)),
+        ("log_predictive", json::Json::arr_f64(&pred.log_predictive)),
+    ];
+    if let Some(p) = &pred.log_probs {
+        fields.push(("log_probs", json::Json::arr_f64(p)));
+    }
+    let result = json::Json::obj(fields);
+    match args.get("result_path") {
+        Some(p) => {
+            std::fs::write(p, json::to_string_pretty(&result))?;
+            eprintln!("wrote {p}");
+        }
+        None => println!("{}", json::to_string(&result)),
+    }
+    Ok(())
+}
+
+fn cmd_snapshot(args: &Args) -> Result<()> {
+    let ckpt = args.require("checkpoint")?;
+    let out = args.require("out")?;
+    let snap = ModelSnapshot::from_checkpoint_file(ckpt)
+        .with_context(|| format!("loading checkpoint {ckpt}"))?;
+    snap.save(out).with_context(|| format!("writing {out}"))?;
+    eprintln!(
+        "wrote snapshot {out}: K={} d={} family={} (from N={})",
+        snap.k(),
+        snap.dim(),
+        snap.prior.family(),
+        snap.n_total
+    );
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -1,0 +1,137 @@
+//! Rust client for the serving protocol (the `dpmm predict --addr=...`
+//! backing and the benchable over-TCP path; `python/dpmmwrapper.py` ships
+//! the same client for Python callers).
+
+use super::wire::{read_serve, write_serve, ServeMessage, FLAG_LOG_PROBS};
+use crate::backend::distributed::wire::configure_stream;
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpStream;
+
+/// Server model metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerInfo {
+    pub d: usize,
+    pub k: usize,
+    /// `"gaussian"` or `"multinomial"`.
+    pub family: &'static str,
+    /// Observations the served fit saw.
+    pub n_total: u64,
+}
+
+/// Server throughput counters (see the server's `/stats` handler).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub points: u64,
+    pub batches: u64,
+    pub uptime_secs: f64,
+    pub points_per_sec: f64,
+    pub mean_batch_points: f64,
+}
+
+/// One prediction reply (vectors have one entry per point; `log_probs` is
+/// `n × k` row-major when requested).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub labels: Vec<u32>,
+    pub map_score: Vec<f64>,
+    pub log_predictive: Vec<f64>,
+    pub log_probs: Option<Vec<f64>>,
+    pub k: usize,
+}
+
+/// Blocking client over one TCP connection. One request in flight at a
+/// time; open several clients for concurrency (the server micro-batches
+/// across connections).
+pub struct DpmmClient {
+    stream: TcpStream,
+}
+
+impl DpmmClient {
+    pub fn connect(addr: &str) -> Result<DpmmClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to dpmm serve {addr}"))?;
+        configure_stream(&stream)?;
+        Ok(DpmmClient { stream })
+    }
+
+    fn request(&mut self, msg: &ServeMessage) -> Result<ServeMessage> {
+        write_serve(&mut self.stream, msg)?;
+        let reply = read_serve(&mut self.stream)?;
+        if let ServeMessage::Error(e) = &reply {
+            bail!("server error: {e}");
+        }
+        Ok(reply)
+    }
+
+    /// Score `n = points.len() / d` row-major points.
+    pub fn predict(&mut self, points: &[f64], d: usize) -> Result<Prediction> {
+        self.predict_opts(points, d, false)
+    }
+
+    /// Like [`Self::predict`] but optionally requesting the per-cluster
+    /// log-membership matrix.
+    pub fn predict_opts(&mut self, points: &[f64], d: usize, probs: bool) -> Result<Prediction> {
+        if d == 0 || points.len() % d != 0 {
+            bail!("point buffer length {} is not a multiple of d={d}", points.len());
+        }
+        let n = points.len() / d;
+        let msg = ServeMessage::Predict {
+            flags: if probs { FLAG_LOG_PROBS } else { 0 },
+            n: n as u32,
+            d: d as u32,
+            x: points.to_vec(),
+        };
+        match self.request(&msg)? {
+            ServeMessage::Scores { labels, map_score, log_predictive, log_probs, k } => {
+                if labels.len() != n {
+                    bail!("server returned {} labels for {n} points", labels.len());
+                }
+                Ok(Prediction { labels, map_score, log_predictive, log_probs, k: k as usize })
+            }
+            other => Err(anyhow!("unexpected predict reply {other:?}")),
+        }
+    }
+
+    pub fn info(&mut self) -> Result<ServerInfo> {
+        match self.request(&ServeMessage::Info)? {
+            ServeMessage::InfoReply { d, k, family, n_total } => Ok(ServerInfo {
+                d: d as usize,
+                k: k as usize,
+                family: if family == 0 { "gaussian" } else { "multinomial" },
+                n_total,
+            }),
+            other => Err(anyhow!("unexpected info reply {other:?}")),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        match self.request(&ServeMessage::Stats)? {
+            ServeMessage::StatsReply {
+                requests,
+                points,
+                batches,
+                uptime_secs,
+                points_per_sec,
+                mean_batch_points,
+            } => Ok(ServeStats {
+                requests,
+                points,
+                batches,
+                uptime_secs,
+                points_per_sec,
+                mean_batch_points,
+            }),
+            other => Err(anyhow!("unexpected stats reply {other:?}")),
+        }
+    }
+
+    /// Ask the server to shut down gracefully (acknowledged, then the
+    /// server stops accepting and drains).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match self.request(&ServeMessage::Shutdown)? {
+            ServeMessage::Ack => Ok(()),
+            other => Err(anyhow!("unexpected shutdown reply {other:?}")),
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Online inference serving: the request path from a fitted chain to
+//! "which cluster is this new point in?" at production rates.
+//!
+//! The fit path (coordinator + backends) stops at a posterior sample; this
+//! subsystem freezes that sample and serves it. Four layers, mirroring the
+//! backend module layout:
+//!
+//! * [`snapshot`] — [`ModelSnapshot`], the immutable export of a fit
+//!   (prior + per-cluster statistics + weights, `DPMMSNAP` file format),
+//!   and its derived [`snapshot::FrozenPlan`]: cached whitening factors,
+//!   folded log-weights, and exact Student-t / Dirichlet-multinomial
+//!   posterior-predictive parameters — the frozen analog of the fit path's
+//!   per-sweep [`crate::sampler::StepPlan`].
+//! * [`engine`] — [`ScoringEngine`], batched MAP assignment, per-cluster
+//!   log-probabilities, and anomaly scores (log predictive density) over
+//!   point tiles via the same fused whitened-GEMM kernels the sampler's
+//!   assignment step uses ([`crate::linalg`]), parallelized with the
+//!   process-wide thread pool. Deterministic: no RNG on the request path.
+//! * [`server`] / [`client`] — a TCP server speaking the length-prefixed
+//!   [`wire`] codec with a micro-batching queue that coalesces concurrent
+//!   requests into single fused tile passes, plus `/stats` throughput
+//!   reporting and graceful shutdown; [`DpmmClient`] is the blocking Rust
+//!   client (`python/dpmmwrapper.py` mirrors it for Python).
+//! * [`wire`] — the serving message set over the shared frame codec of
+//!   [`crate::backend::distributed::wire`].
+//!
+//! Entry points: `dpmm serve --checkpoint fit.ckpt --addr 0.0.0.0:7979`,
+//! `dpmm predict --data x.npy --addr host:7979` (or `--checkpoint` /
+//! `--snapshot` for engine-direct scoring without a server), and
+//! `cargo bench --bench serve_throughput` (writes `BENCH_serve.json`).
+//! See EXPERIMENTS.md §Serving for design rationale and measurements.
+
+pub mod client;
+pub mod engine;
+pub mod server;
+pub mod snapshot;
+pub mod wire;
+
+pub use client::{DpmmClient, Prediction, ServeStats, ServerInfo};
+pub use engine::{EngineConfig, ScoreBatch, ScoringEngine};
+pub use server::{serve_blocking, spawn, ServeConfig, ServerHandle};
+pub use snapshot::{FrozenPlan, ModelSnapshot, PredictiveDesc, SnapshotCluster};

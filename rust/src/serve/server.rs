@@ -1,0 +1,452 @@
+//! Micro-batching TCP prediction server.
+//!
+//! Request path: a connection handler reads one `Predict` frame, enqueues
+//! the points on a shared batch queue, and blocks on a private reply
+//! channel. A single batcher thread drains *everything* queued at each
+//! wake, fuses the requests into one contiguous buffer, runs a single
+//! engine pass (one set of tile GEMMs for every concurrent client), and
+//! scatters the per-request slices back. Under load the queue grows while
+//! the engine is busy, so batch size adapts to concurrency — the classic
+//! dynamic-batching throughput/latency trade with no artificial linger.
+//!
+//! Shutdown is cooperative: a `Shutdown` message (or
+//! [`ServerHandle::stop`]) raises a flag; connection readers poll it every
+//! ~200 ms via their read timeout, the batcher drains and exits, and the
+//! accept loop is woken by a loopback connection. In-flight requests
+//! complete; queued jobs whose batcher died get an error reply, not a hang.
+
+use super::engine::{ScoreBatch, ScoringEngine};
+use super::wire::{write_serve, ServeMessage, FLAG_LOG_PROBS};
+use crate::backend::distributed::wire::{configure_stream, MAX_FRAME};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Cap on fused points per engine pass. A single over-sized request is
+    /// still served whole; the cap only stops *additional* coalescing.
+    pub max_batch_points: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { max_batch_points: 64 * 1024 }
+    }
+}
+
+/// Throughput counters (the `/stats` endpoint's backing store).
+struct Counters {
+    requests: AtomicU64,
+    points: AtomicU64,
+    batches: AtomicU64,
+    start: Instant,
+}
+
+impl Counters {
+    fn stats_reply(&self) -> ServeMessage {
+        let points = self.points.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let uptime = self.start.elapsed().as_secs_f64().max(1e-9);
+        ServeMessage::StatsReply {
+            requests: self.requests.load(Ordering::Relaxed),
+            points,
+            batches,
+            uptime_secs: uptime,
+            points_per_sec: points as f64 / uptime,
+            mean_batch_points: if batches > 0 { points as f64 / batches as f64 } else { 0.0 },
+        }
+    }
+}
+
+/// One queued prediction request.
+struct Job {
+    x: Vec<f64>,
+    n: usize,
+    want_probs: bool,
+    reply: mpsc::Sender<Result<ScoreBatch, String>>,
+}
+
+/// The shared request queue (Mutex + Condvar; the batcher is the only
+/// consumer).
+struct BatchQueue {
+    jobs: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+}
+
+struct Shared {
+    engine: ScoringEngine,
+    queue: BatchQueue,
+    counters: Counters,
+    shutdown: AtomicBool,
+    config: ServeConfig,
+}
+
+/// Handle to a running server (tests and embedding; the CLI uses
+/// [`serve_blocking`]).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Actual bound address (useful with `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Raise the shutdown flag, wake every thread, and join the server.
+    pub fn stop(mut self) -> Result<()> {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue.ready.notify_all();
+        // Wake the blocking accept with a loopback connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(2));
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+        }
+        if let Some(h) = self.batcher.take() {
+            h.join().map_err(|_| anyhow::anyhow!("batcher thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Start a server on `addr` (use port 0 for an ephemeral port) and return
+/// immediately with a handle.
+pub fn spawn(engine: ScoringEngine, addr: &str, config: ServeConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("serve bind {addr}"))?;
+    let bound = listener.local_addr()?;
+    let shared = Arc::new(Shared {
+        engine,
+        queue: BatchQueue { jobs: Mutex::new(VecDeque::new()), ready: Condvar::new() },
+        counters: Counters {
+            requests: AtomicU64::new(0),
+            points: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            start: Instant::now(),
+        },
+        shutdown: AtomicBool::new(false),
+        config,
+    });
+    let batcher = {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || batcher_loop(&shared))
+    };
+    let accept = {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || accept_loop(listener, &shared))
+    };
+    Ok(ServerHandle { addr: bound, shared, accept: Some(accept), batcher: Some(batcher) })
+}
+
+/// Start a server and block until it shuts down (the CLI entrypoint).
+pub fn serve_blocking(engine: ScoringEngine, addr: &str, config: ServeConfig) -> Result<()> {
+    let mut handle = spawn(engine, addr, config)?;
+    eprintln!(
+        "dpmm serve listening on {} (K={}, d={}, {})",
+        handle.addr(),
+        handle.shared.engine.k(),
+        handle.shared.engine.dim(),
+        handle.shared.engine.family(),
+    );
+    // The accept thread only exits on shutdown; park this thread on it,
+    // then let stop() reap the batcher.
+    if let Some(h) = handle.accept.take() {
+        h.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
+    }
+    handle.stop()
+}
+
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let shared = Arc::clone(shared);
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_connection(s, &shared) {
+                        eprintln!("serve: connection error: {e:#}");
+                    }
+                });
+            }
+            Err(e) => {
+                eprintln!("serve: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Read exactly `buf.len()` bytes, polling the shutdown flag across read
+/// timeouts so an idle connection notices shutdown within ~one poll
+/// interval. Returns `Ok(false)` on shutdown or on clean EOF at a message
+/// boundary (`allow_eof` = nothing of this message read yet); partial
+/// frames hitting EOF are errors.
+///
+/// Idle waiting between messages has no deadline (a quiet keep-alive
+/// connection is legitimate), but once a message has *started* the read
+/// must finish within [`crate::backend::distributed::wire::net_timeout`] —
+/// the per-connection short poll timeout replaced the socket-level
+/// backstop, so the overall budget is re-enforced here. Without it a
+/// client hanging mid-frame would pin this thread forever.
+fn read_exact_interruptible(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    shutdown: &AtomicBool,
+    allow_eof: bool,
+) -> Result<bool> {
+    let budget = crate::backend::distributed::wire::net_timeout();
+    let mut last_progress = Instant::now();
+    let mut filled = 0;
+    while filled < buf.len() {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(false);
+        }
+        let mid_message = filled > 0 || !allow_eof;
+        if mid_message {
+            if let Some(limit) = budget {
+                if last_progress.elapsed() > limit {
+                    bail!("peer stalled mid-message for {}s", limit.as_secs());
+                }
+            }
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && allow_eof {
+                    return Ok(false);
+                }
+                bail!("connection closed mid-message");
+            }
+            Ok(k) => {
+                filled += k;
+                last_progress = Instant::now();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame, or `None` on shutdown / clean EOF.
+fn read_frame_interruptible(
+    stream: &mut TcpStream,
+    shutdown: &AtomicBool,
+) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    if !read_exact_interruptible(stream, &mut len_buf, shutdown, true)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("serve message too large: {len} bytes");
+    }
+    let mut body = vec![0u8; len];
+    if !read_exact_interruptible(stream, &mut body, shutdown, false)? {
+        return Ok(None);
+    }
+    Ok(Some(body))
+}
+
+fn handle_connection(mut stream: TcpStream, shared: &Shared) -> Result<()> {
+    // Standard peer options (NODELAY + generous I/O timeouts), then a short
+    // read timeout so the blocking reader doubles as the shutdown poll.
+    configure_stream(&stream)?;
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    loop {
+        let body = match read_frame_interruptible(&mut stream, &shared.shutdown)? {
+            Some(b) => b,
+            None => return Ok(()),
+        };
+        let reply = match ServeMessage::decode(&body) {
+            Ok(msg) => handle_message(msg, shared, &mut stream)?,
+            Err(e) => Some(ServeMessage::Error(format!("bad request: {e:#}"))),
+        };
+        match reply {
+            Some(msg) => write_serve(&mut stream, &msg)?,
+            // Shutdown was acknowledged inside handle_message.
+            None => return Ok(()),
+        }
+    }
+}
+
+/// Process one request; `None` means the connection should close (the
+/// reply, if any, was already written).
+fn handle_message(
+    msg: ServeMessage,
+    shared: &Shared,
+    stream: &mut TcpStream,
+) -> Result<Option<ServeMessage>> {
+    Ok(match msg {
+        ServeMessage::Predict { flags, n, d, x } => {
+            Some(predict_reply(shared, flags, n as usize, d as usize, x))
+        }
+        ServeMessage::Info => Some(ServeMessage::InfoReply {
+            d: shared.engine.dim() as u32,
+            k: shared.engine.k() as u32,
+            family: if shared.engine.family() == "gaussian" { 0 } else { 1 },
+            n_total: shared.engine.n_total(),
+        }),
+        ServeMessage::Stats => Some(shared.counters.stats_reply()),
+        ServeMessage::Shutdown => {
+            write_serve(stream, &ServeMessage::Ack)?;
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.queue.ready.notify_all();
+            // Wake the accept loop so it observes the flag.
+            if let Ok(local) = stream.local_addr() {
+                let _ = TcpStream::connect_timeout(&local, Duration::from_secs(1));
+            }
+            None
+        }
+        other => Some(ServeMessage::Error(format!("unexpected request {other:?}"))),
+    })
+}
+
+fn predict_reply(shared: &Shared, flags: u8, n: usize, d: usize, x: Vec<f64>) -> ServeMessage {
+    if d != shared.engine.dim() {
+        return ServeMessage::Error(format!(
+            "dimension mismatch: request d={d}, model d={}",
+            shared.engine.dim()
+        ));
+    }
+    if x.len() != n * d {
+        return ServeMessage::Error(format!(
+            "payload size {} != n*d = {}",
+            x.len(),
+            n * d
+        ));
+    }
+    let want_probs = flags & FLAG_LOG_PROBS != 0;
+    // Guard the *reply* size too: the request caps (points, frame) don't
+    // bound `n × K` probs matrices, and an unwritable reply would error or
+    // desynchronize the stream at write_frame.
+    let reply_bytes = n
+        .saturating_mul(4 + 8 + 8)
+        .saturating_add(if want_probs { n.saturating_mul(shared.engine.k() * 8) } else { 0 });
+    if reply_bytes + 64 > MAX_FRAME {
+        return ServeMessage::Error(format!(
+            "reply would exceed the {} byte frame cap — reduce the batch size{}",
+            MAX_FRAME,
+            if want_probs { " or drop the probs flag" } else { "" }
+        ));
+    }
+    shared.counters.requests.fetch_add(1, Ordering::Relaxed);
+    shared.counters.points.fetch_add(n as u64, Ordering::Relaxed);
+    let (tx, rx) = mpsc::channel();
+    {
+        let mut q = shared.queue.jobs.lock().unwrap();
+        // Checked under the queue lock: the batcher's exit paths load the
+        // flag before releasing/clearing under this same lock, so a job can
+        // never be enqueued after the batcher has gone (which would leave
+        // rx.recv() blocked forever).
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return ServeMessage::Error("server shutting down".into());
+        }
+        q.push_back(Job { x, n, want_probs, reply: tx });
+    }
+    shared.queue.ready.notify_one();
+    match rx.recv() {
+        Ok(Ok(batch)) => ServeMessage::Scores {
+            labels: batch.labels,
+            map_score: batch.map_score,
+            log_predictive: batch.log_predictive,
+            log_probs: if want_probs { batch.log_probs } else { None },
+            k: shared.engine.k() as u32,
+        },
+        Ok(Err(e)) => ServeMessage::Error(format!("scoring failed: {e}")),
+        Err(_) => ServeMessage::Error("server shutting down".into()),
+    }
+}
+
+/// The single batch consumer: drain → fuse → one engine pass → scatter.
+fn batcher_loop(shared: &Shared) {
+    loop {
+        let jobs = {
+            let mut q = shared.queue.jobs.lock().unwrap();
+            while q.is_empty() {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) = shared
+                    .queue
+                    .ready
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .unwrap();
+                q = guard;
+            }
+            // Coalesce everything pending, up to the fused-pass cap (a
+            // single over-cap request still goes through whole).
+            let mut jobs: Vec<Job> = Vec::new();
+            let mut points = 0usize;
+            while let Some(job) = q.front() {
+                if !jobs.is_empty() && points + job.n > shared.config.max_batch_points {
+                    break;
+                }
+                points += job.n;
+                jobs.push(q.pop_front().unwrap());
+            }
+            jobs
+        };
+        shared.counters.batches.fetch_add(1, Ordering::Relaxed);
+        run_fused_batch(shared, jobs);
+        if shared.shutdown.load(Ordering::SeqCst) {
+            // Fail any stragglers (their handlers get a RecvError → Error
+            // reply) and exit.
+            let mut q = shared.queue.jobs.lock().unwrap();
+            q.clear();
+            return;
+        }
+    }
+}
+
+fn run_fused_batch(shared: &Shared, jobs: Vec<Job>) {
+    let want_probs = jobs.iter().any(|j| j.want_probs);
+    let total: usize = jobs.iter().map(|j| j.x.len()).sum();
+    let mut fused = Vec::with_capacity(total);
+    for j in &jobs {
+        fused.extend_from_slice(&j.x);
+    }
+    match shared.engine.score(&fused, want_probs) {
+        Ok(batch) => {
+            let k = shared.engine.k();
+            let mut start = 0usize;
+            for job in jobs {
+                let end = start + job.n;
+                let slice = ScoreBatch {
+                    labels: batch.labels[start..end].to_vec(),
+                    map_score: batch.map_score[start..end].to_vec(),
+                    log_predictive: batch.log_predictive[start..end].to_vec(),
+                    log_probs: batch
+                        .log_probs
+                        .as_ref()
+                        .filter(|_| job.want_probs)
+                        .map(|p| p[start * k..end * k].to_vec()),
+                };
+                let _ = job.reply.send(Ok(slice));
+                start = end;
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for job in jobs {
+                let _ = job.reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+

@@ -1,0 +1,565 @@
+//! Immutable model snapshots for the serving path.
+//!
+//! A [`ModelSnapshot`] is the frozen export of a fitted chain: the conjugate
+//! prior plus per-cluster sufficient statistics and mixture weights —
+//! everything the request path needs, nothing it doesn't (no sub-clusters,
+//! no labels, no RNG state). It serializes with a magic+version header like
+//! [`crate::coordinator::checkpoint`] (same binary codec, so the two file
+//! families share parsers and corruption handling), and can be built from a
+//! live [`DpmmState`] or read straight out of a checkpoint file without
+//! resampling parameters or loading the O(N) label vector.
+//!
+//! [`ModelSnapshot::plan`] derives the [`FrozenPlan`] — the serving analog
+//! of the fit path's per-sweep [`crate::sampler::StepPlan`]: per-cluster
+//! [`KernelDesc`]s (cached inverse-Cholesky whitening factors, affine
+//! offsets `b = W·μ`, folded log-weights) for MAP assignment, plus
+//! [`PredictiveDesc`]s (Student-t / Dirichlet-multinomial posterior
+//! predictive parameters) for exact log predictive densities and anomaly
+//! scores. All derivation happens once at load; requests only run GEMMs.
+
+use crate::coordinator::checkpoint;
+use crate::linalg::spd_logdet;
+use crate::model::DpmmState;
+use crate::sampler::KernelDesc;
+use crate::stats::special::lgamma;
+use crate::stats::{Prior, Stats};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"DPMMSNAP";
+const VERSION: u8 = 1;
+
+/// One frozen mixture component: sufficient statistics + mixture weight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotCluster {
+    pub stats: Stats,
+    /// Mixture weight (normalized over the snapshot's clusters).
+    pub weight: f64,
+}
+
+/// An immutable, serializable export of a fitted DPMM.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSnapshot {
+    pub prior: Prior,
+    /// Number of observations the fit saw (for reporting only).
+    pub n_total: u64,
+    pub clusters: Vec<SnapshotCluster>,
+}
+
+/// Posterior-predictive density parameters for one frozen cluster — the
+/// exact `p(x | C_k, λ)` companion to the plug-in [`KernelDesc`] score.
+#[derive(Debug, Clone)]
+pub enum PredictiveDesc {
+    /// Multivariate Student-t `St(x; m', Σ_t, ν_t)` from the NIW posterior:
+    /// `ν_t = ν' − d + 1`, `Σ_t = Ψ'·(κ'+1)/(κ'·ν_t)`. Stored whitened:
+    /// `w` is the row-major inverse Cholesky of `Σ_t`, `b = w·m'`, so
+    /// `log p = log_norm − ((ν_t+d)/2)·ln(1 + ‖w·x − b‖²/ν_t)` and the
+    /// Mahalanobis term reuses the fit path's fused tile GEMM.
+    StudentT { w: Vec<f64>, b: Vec<f64>, dof: f64, log_norm: f64 },
+    /// Dirichlet-multinomial compound from the Dirichlet posterior α':
+    /// `log p(x) = log n! − Σ log x_j! + lgamma(A) − lgamma(A + n)
+    ///             + Σ_j [lgamma(α'_j + x_j) − lgamma(α'_j)]`, `A = Σ α'`.
+    /// `lgamma_alpha[j] = lgamma(α'_j)` and `lgamma_sum = lgamma(A)` are
+    /// cached at plan build.
+    DirMult { alpha: Vec<f64>, alpha_sum: f64, lgamma_alpha: Vec<f64>, lgamma_sum: f64 },
+}
+
+impl PredictiveDesc {
+    /// Exact log posterior-predictive density of one point (scalar path;
+    /// the engine batches the Student-t Mahalanobis term over tiles).
+    pub fn log_predictive(&self, x: &[f64]) -> f64 {
+        match self {
+            PredictiveDesc::StudentT { w, b, dof, log_norm } => {
+                let d = b.len();
+                debug_assert_eq!(x.len(), d);
+                let mut maha = 0.0;
+                let mut off = 0;
+                for i in 0..d {
+                    let mut acc = -b[i];
+                    for (&wv, &xv) in w[off..off + i + 1].iter().zip(x) {
+                        acc += wv * xv;
+                    }
+                    maha += acc * acc;
+                    off += d;
+                }
+                log_norm - 0.5 * (dof + d as f64) * (1.0 + maha / dof).ln()
+            }
+            PredictiveDesc::DirMult { alpha, alpha_sum, lgamma_alpha, lgamma_sum } => {
+                debug_assert_eq!(x.len(), alpha.len());
+                let mut n = 0.0;
+                let mut acc = 0.0;
+                for j in 0..alpha.len() {
+                    let xj = x[j];
+                    if xj != 0.0 {
+                        n += xj;
+                        acc += lgamma(alpha[j] + xj) - lgamma_alpha[j] - lgamma(xj + 1.0);
+                    }
+                }
+                if n == 0.0 {
+                    return 0.0;
+                }
+                lgamma(n + 1.0) + lgamma_sum - lgamma(alpha_sum + n) + acc
+            }
+        }
+    }
+
+    /// Finish a Student-t log-density given a precomputed Mahalanobis term
+    /// (the batched engine path: `maha` comes from the fused tile GEMM).
+    pub fn student_t_from_maha(&self, maha: f64) -> f64 {
+        match self {
+            PredictiveDesc::StudentT { b, dof, log_norm, .. } => {
+                log_norm - 0.5 * (dof + b.len() as f64) * (1.0 + maha / dof).ln()
+            }
+            PredictiveDesc::DirMult { .. } => {
+                unreachable!("student_t_from_maha on a DirMult predictive")
+            }
+        }
+    }
+}
+
+/// The frozen scoring plan derived from a snapshot — the request-path
+/// analog of the fit path's per-sweep [`crate::sampler::StepPlan`].
+#[derive(Debug, Clone)]
+pub struct FrozenPlan {
+    /// Data dimensionality.
+    pub d: usize,
+    /// Log mixture weights (normalized; aligned with `clusters`).
+    pub log_weights: Vec<f64>,
+    /// Plug-in scoring descriptors with `log π_k` folded into `c` — MAP
+    /// assignment argmaxes these directly.
+    pub clusters: Vec<KernelDesc>,
+    /// Exact posterior-predictive descriptors (anomaly scores / density).
+    pub predictive: Vec<PredictiveDesc>,
+    /// Likelihood family tag for the wire Info reply.
+    pub family: &'static str,
+    /// Observations the source fit saw (reported through the Info reply).
+    pub n_total: u64,
+}
+
+impl FrozenPlan {
+    pub fn k(&self) -> usize {
+        self.clusters.len()
+    }
+}
+
+impl ModelSnapshot {
+    /// Export from a live coordinator state: keeps every non-empty cluster,
+    /// weighting by point counts (the deterministic MAP weights, matching
+    /// [`crate::coordinator::FitResult::weights`], rather than the last
+    /// sampled Dirichlet draw).
+    pub fn from_state(state: &DpmmState) -> Result<ModelSnapshot> {
+        let clusters: Vec<SnapshotCluster> = state
+            .clusters
+            .iter()
+            .filter(|c| c.count() > 0.0)
+            .map(|c| SnapshotCluster { stats: c.stats.clone(), weight: c.count() })
+            .collect();
+        Self::assemble(state.prior.clone(), state.n_total as u64, clusters)
+    }
+
+    /// Read a snapshot straight out of a **checkpoint** file: parses prior
+    /// and per-cluster statistics, skips sampled weights and the O(N) label
+    /// vector, and never touches an RNG (no parameter resampling).
+    pub fn from_checkpoint_file(path: impl AsRef<Path>) -> Result<ModelSnapshot> {
+        let path = path.as_ref();
+        let mut r = BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != checkpoint::MAGIC {
+            bail!("not a dpmm checkpoint (bad magic)");
+        }
+        let ver = checkpoint::read_u8(&mut r)?;
+        if ver != checkpoint::VERSION {
+            bail!("unsupported checkpoint version {ver}");
+        }
+        let _alpha = checkpoint::read_f64(&mut r)?;
+        let n_total = checkpoint::read_u64(&mut r)?;
+        let prior = checkpoint::read_prior(&mut r)?;
+        let k = checkpoint::read_u32(&mut r)? as usize;
+        if k == 0 || k > 1 << 16 {
+            bail!("implausible cluster count {k} in checkpoint");
+        }
+        let mut clusters = Vec::with_capacity(k);
+        for _ in 0..k {
+            let stats = checkpoint::read_stats(&mut r)?;
+            let _sub_l = checkpoint::read_stats(&mut r)?;
+            let _sub_r = checkpoint::read_stats(&mut r)?;
+            let _weight = checkpoint::read_f64(&mut r)?;
+            let _sw0 = checkpoint::read_f64(&mut r)?;
+            let _sw1 = checkpoint::read_f64(&mut r)?;
+            let _age = checkpoint::read_u64(&mut r)?;
+            if stats.count() > 0.0 {
+                clusters.push(SnapshotCluster { weight: stats.count(), stats });
+            }
+        }
+        Self::assemble(prior, n_total, clusters)
+    }
+
+    /// Shared validation + weight normalization for both constructors and
+    /// the file loader. Rejects family/dimension mismatches through the
+    /// typed-error path (a corrupt snapshot must not abort a server).
+    fn assemble(
+        prior: Prior,
+        n_total: u64,
+        mut clusters: Vec<SnapshotCluster>,
+    ) -> Result<ModelSnapshot> {
+        if clusters.is_empty() {
+            bail!("snapshot has no non-empty clusters to serve");
+        }
+        let d = prior.dim();
+        for (k, c) in clusters.iter().enumerate() {
+            // Order matters: family and shape first (cheap tag/length
+            // checks), values second — nothing below may do math on
+            // unvalidated data, so a corrupt file can't panic the loader.
+            if prior.family() != c.stats.family() {
+                bail!(
+                    "snapshot cluster {k}: {}",
+                    crate::stats::FamilyMismatch {
+                        op: "load",
+                        prior: prior.family(),
+                        stats: c.stats.family(),
+                    }
+                );
+            }
+            if c.stats.dim() != d {
+                bail!(
+                    "snapshot cluster {k} dimension {} != prior dimension {d}",
+                    c.stats.dim()
+                );
+            }
+            if !stats_values_finite(&c.stats) {
+                bail!("snapshot cluster {k} has non-finite statistics");
+            }
+            if !c.weight.is_finite() || c.weight <= 0.0 {
+                bail!("snapshot cluster {k} has non-positive weight {}", c.weight);
+            }
+        }
+        let total: f64 = clusters.iter().map(|c| c.weight).sum();
+        for c in clusters.iter_mut() {
+            c.weight /= total;
+        }
+        Ok(ModelSnapshot { prior, n_total, clusters })
+    }
+
+    pub fn k(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.prior.dim()
+    }
+
+    /// Serialize: `[magic][version][n_total][prior][K × (stats, weight)]`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut w = BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        w.write_all(MAGIC)?;
+        w.write_all(&[VERSION])?;
+        w.write_all(&self.n_total.to_le_bytes())?;
+        checkpoint::write_prior(&mut w, &self.prior)?;
+        w.write_all(&(self.clusters.len() as u32).to_le_bytes())?;
+        for c in &self.clusters {
+            checkpoint::write_stats(&mut w, &c.stats)?;
+            w.write_all(&c.weight.to_le_bytes())?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load + validate a snapshot file (rejects bad magic/version, corrupt
+    /// or truncated payloads, and family/dimension mismatches).
+    pub fn load(path: impl AsRef<Path>) -> Result<ModelSnapshot> {
+        let path = path.as_ref();
+        let mut r = BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a dpmm model snapshot (bad magic)");
+        }
+        let ver = checkpoint::read_u8(&mut r)?;
+        if ver != VERSION {
+            bail!("unsupported snapshot version {ver}");
+        }
+        let n_total = checkpoint::read_u64(&mut r)?;
+        let prior = checkpoint::read_prior(&mut r)?;
+        let k = checkpoint::read_u32(&mut r)? as usize;
+        if k == 0 || k > 1 << 16 {
+            bail!("implausible cluster count {k} in snapshot");
+        }
+        let mut clusters = Vec::with_capacity(k);
+        for _ in 0..k {
+            let stats = checkpoint::read_stats(&mut r)?;
+            let weight = checkpoint::read_f64(&mut r)?;
+            clusters.push(SnapshotCluster { stats, weight });
+        }
+        Self::assemble(prior, n_total, clusters)
+    }
+
+    /// Derive the frozen scoring plan: plug-in posterior-mean [`KernelDesc`]s
+    /// with folded log-weights plus exact posterior-predictive descriptors.
+    pub fn plan(&self) -> Result<FrozenPlan> {
+        let d = self.dim();
+        let mut log_weights = Vec::with_capacity(self.k());
+        let mut clusters = Vec::with_capacity(self.k());
+        let mut predictive = Vec::with_capacity(self.k());
+        for (k, c) in self.clusters.iter().enumerate() {
+            let lw = c.weight.max(1e-300).ln();
+            // Predictive first: its Cholesky of the posterior scale fails
+            // gracefully on a non-SPD posterior (the plug-in mean-params
+            // path below shares the same Ψ' up to a positive scalar, so a
+            // pathological cluster errors out here before it can panic
+            // inside the infallible Cholesky machinery).
+            predictive.push(build_predictive(&self.prior, &c.stats, k)?);
+            let params = self
+                .prior
+                .try_mean_params(&c.stats)
+                .with_context(|| format!("snapshot cluster {k}"))?;
+            clusters.push(KernelDesc::new(&params, lw));
+            log_weights.push(lw);
+        }
+        Ok(FrozenPlan {
+            d,
+            log_weights,
+            clusters,
+            predictive,
+            family: self.prior.family(),
+            n_total: self.n_total,
+        })
+    }
+}
+
+/// All values in a statistics object are finite (corrupt-file guard; NaN
+/// sums would otherwise flow into Cholesky factorizations that panic).
+fn stats_values_finite(s: &Stats) -> bool {
+    match s {
+        Stats::Gauss(g) => {
+            g.n.is_finite()
+                && g.n >= 0.0
+                && g.sum_x.iter().all(|v| v.is_finite())
+                && g.sum_xxt.data().iter().all(|v| v.is_finite())
+        }
+        Stats::Mult(m) => {
+            m.n.is_finite() && m.n >= 0.0 && m.sum_x.iter().all(|v| v.is_finite())
+        }
+    }
+}
+
+/// Test-only handle for checking predictive math against marginal ratios.
+#[cfg(test)]
+pub(crate) fn build_predictive_for_tests(prior: &Prior, stats: &Stats) -> PredictiveDesc {
+    build_predictive(prior, stats, 0).unwrap()
+}
+
+/// Build the posterior-predictive descriptor for one cluster.
+fn build_predictive(prior: &Prior, stats: &Stats, k: usize) -> Result<PredictiveDesc> {
+    match (prior, stats) {
+        (Prior::Niw(p), Stats::Gauss(s)) => {
+            let d = p.dim();
+            let post = p.posterior(s);
+            let dof = post.nu - d as f64 + 1.0;
+            if dof <= 0.0 {
+                bail!("snapshot cluster {k}: non-positive predictive dof {dof}");
+            }
+            let scale = post.psi.scaled((post.kappa + 1.0) / (post.kappa * dof));
+            let chol = scale
+                .cholesky()
+                .with_context(|| format!("snapshot cluster {k}: predictive scale not SPD"))?;
+            let w = chol.lower_inverse();
+            let b: Vec<f64> = {
+                let wd = w.data();
+                (0..d)
+                    .map(|i| {
+                        wd[i * d..i * d + i + 1]
+                            .iter()
+                            .zip(&post.m)
+                            .map(|(&wv, &mv)| wv * mv)
+                            .sum::<f64>()
+                    })
+                    .collect()
+            };
+            let logdet = spd_logdet(&scale)
+                .with_context(|| format!("snapshot cluster {k}: predictive scale not SPD"))?;
+            let log_norm = lgamma((dof + d as f64) / 2.0)
+                - lgamma(dof / 2.0)
+                - 0.5 * d as f64 * (dof * std::f64::consts::PI).ln()
+                - 0.5 * logdet;
+            Ok(PredictiveDesc::StudentT { w: w.data().to_vec(), b, dof, log_norm })
+        }
+        (Prior::DirMult(p), Stats::Mult(s)) => {
+            let post = p.posterior(s);
+            let alpha_sum: f64 = post.alpha.iter().sum();
+            let lgamma_alpha: Vec<f64> = post.alpha.iter().map(|&a| lgamma(a)).collect();
+            let lgamma_sum = lgamma(alpha_sum);
+            Ok(PredictiveDesc::DirMult { alpha: post.alpha, alpha_sum, lgamma_alpha, lgamma_sum })
+        }
+        _ => {
+            // Unreachable after assemble()'s validation, but a corrupt
+            // in-memory snapshot still gets an error, not an abort.
+            bail!(
+                "snapshot cluster {k}: {}",
+                crate::stats::FamilyMismatch {
+                    op: "predictive",
+                    prior: prior.family(),
+                    stats: stats.family()
+                }
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DpmmState;
+    use crate::rng::Xoshiro256pp;
+    use crate::stats::{DirMultPrior, NiwPrior};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dpmm_snap_{name}_{}.bin", std::process::id()))
+    }
+
+    fn gauss_state() -> DpmmState {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let mut state = DpmmState::new(2.0, prior.clone(), 3, 30, &mut rng);
+        for (k, c) in state.clusters.iter_mut().enumerate().take(2) {
+            let mut s = prior.empty_stats();
+            for i in 0..10 {
+                s.add(&[k as f64 * 8.0 + 0.1 * i as f64, 0.2 * i as f64]);
+            }
+            c.stats = s;
+        }
+        // Cluster 2 stays empty and must be dropped by the export.
+        state
+    }
+
+    #[test]
+    fn from_state_drops_empty_and_normalizes() {
+        let snap = ModelSnapshot::from_state(&gauss_state()).unwrap();
+        assert_eq!(snap.k(), 2);
+        let total: f64 = snap.clusters.iter().map(|c| c.weight).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!((snap.clusters[0].weight - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let snap = ModelSnapshot::from_state(&gauss_state()).unwrap();
+        let p = tmp("roundtrip");
+        snap.save(&p).unwrap();
+        let back = ModelSnapshot::load(&p).unwrap();
+        assert_eq!(back, snap);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn multinomial_roundtrip() {
+        let prior = Prior::DirMult(DirMultPrior::symmetric(3, 0.5));
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let mut state = DpmmState::new(1.0, prior.clone(), 1, 5, &mut rng);
+        state.clusters[0].stats.add(&[1.0, 2.0, 3.0]);
+        let snap = ModelSnapshot::from_state(&state).unwrap();
+        let p = tmp("mult");
+        snap.save(&p).unwrap();
+        let back = ModelSnapshot::load(&p).unwrap();
+        assert_eq!(back, snap);
+        assert!(back.plan().is_ok());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation() {
+        let p = tmp("bad");
+        // Wrong magic.
+        std::fs::write(&p, b"NOTASNAPxxxxxxxxxxxxxxxx").unwrap();
+        assert!(ModelSnapshot::load(&p).is_err());
+        // Wrong version.
+        let snap = ModelSnapshot::from_state(&gauss_state()).unwrap();
+        snap.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[8] = 99;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(ModelSnapshot::load(&p).is_err());
+        // Truncation at several depths.
+        snap.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        for cut in [4, 12, bytes.len() / 2, bytes.len() - 3] {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(ModelSnapshot::load(&p).is_err(), "cut={cut}");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_family_mismatch_gracefully() {
+        // Hand-build a corrupt snapshot: Gaussian prior, multinomial stats.
+        let bad = ModelSnapshot {
+            prior: Prior::Niw(NiwPrior::weak(2)),
+            n_total: 1,
+            clusters: vec![SnapshotCluster {
+                stats: Prior::DirMult(DirMultPrior::symmetric(2, 1.0)).empty_stats(),
+                weight: 1.0,
+            }],
+        };
+        let p = tmp("mismatch");
+        bad.save(&p).unwrap();
+        let err = ModelSnapshot::load(&p).unwrap_err();
+        assert!(err.to_string().contains("mismatch"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_nonfinite_stats() {
+        let mut snap = ModelSnapshot::from_state(&gauss_state()).unwrap();
+        if let Stats::Gauss(g) = &mut snap.clusters[0].stats {
+            g.sum_x[0] = f64::NAN;
+        }
+        let p = tmp("nan");
+        snap.save(&p).unwrap();
+        let err = ModelSnapshot::load(&p).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn from_checkpoint_file_matches_from_state() {
+        use crate::coordinator::Checkpoint;
+        let state = gauss_state();
+        let direct = ModelSnapshot::from_state(&state).unwrap();
+        let ckpt = Checkpoint { state, iter: 9, labels: vec![0; 30] };
+        let p = tmp("ckpt");
+        ckpt.save(&p).unwrap();
+        let via_file = ModelSnapshot::from_checkpoint_file(&p).unwrap();
+        assert_eq!(via_file, direct);
+        // Non-checkpoint input is rejected.
+        std::fs::write(&p, b"DPMMSNAPxxxx").unwrap();
+        assert!(ModelSnapshot::from_checkpoint_file(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn plan_shapes_are_coherent() {
+        let snap = ModelSnapshot::from_state(&gauss_state()).unwrap();
+        let plan = snap.plan().unwrap();
+        assert_eq!(plan.k(), 2);
+        assert_eq!(plan.d, 2);
+        assert_eq!(plan.log_weights.len(), 2);
+        assert_eq!(plan.predictive.len(), 2);
+        assert_eq!(plan.family, "gaussian");
+        match &plan.predictive[0] {
+            PredictiveDesc::StudentT { w, b, dof, log_norm } => {
+                assert_eq!(w.len(), 4);
+                assert_eq!(b.len(), 2);
+                assert!(*dof > 0.0 && log_norm.is_finite());
+            }
+            _ => panic!("wrong predictive family"),
+        }
+    }
+}

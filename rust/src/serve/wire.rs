@@ -1,0 +1,297 @@
+//! Binary wire format for the serving protocol.
+//!
+//! Reuses the fit path's length-prefixed frame codec and little-endian
+//! primitive layer ([`crate::backend::distributed::wire`]) with its own
+//! message set and version byte — the two protocols evolve independently
+//! but share framing, sanity caps, and corruption handling. Point payloads
+//! travel as raw f64 runs (shape sent once up front) so a client can
+//! memcpy a contiguous row-major buffer straight onto the socket; this is
+//! also what `python/dpmmwrapper.py`'s `DpmmClient` speaks via `struct` +
+//! `ndarray.tobytes()`.
+
+use crate::backend::distributed::wire::{read_frame, write_frame, Dec, Enc};
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+/// Serving-protocol version byte (independent of the fit protocol's).
+pub const SERVE_PROTO_VERSION: u8 = 1;
+
+/// Request flag: also return the normalized per-cluster log posterior
+/// membership matrix (`n × K`).
+pub const FLAG_LOG_PROBS: u8 = 1;
+
+/// Cap on points per Predict request (a corrupt or hostile length field
+/// must not allocate unbounded memory server-side; 1 GiB frame cap also
+/// applies underneath).
+pub const MAX_PREDICT_POINTS: usize = 1 << 24;
+
+/// Client→server and server→client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeMessage {
+    /// Score `n` points of dimension `d` (row-major raw payload).
+    Predict { flags: u8, n: u32, d: u32, x: Vec<f64> },
+    /// Reply to Predict (vectors are one entry per point; `log_probs` is
+    /// `n × K` row-major when requested).
+    Scores {
+        labels: Vec<u32>,
+        map_score: Vec<f64>,
+        log_predictive: Vec<f64>,
+        log_probs: Option<Vec<f64>>,
+        /// K at scoring time (gives `log_probs` its row width client-side).
+        k: u32,
+    },
+    /// Model metadata request.
+    Info,
+    InfoReply { d: u32, k: u32, family: u8, n_total: u64 },
+    /// Throughput counters request (the `/stats` endpoint).
+    Stats,
+    StatsReply {
+        requests: u64,
+        points: u64,
+        batches: u64,
+        uptime_secs: f64,
+        points_per_sec: f64,
+        mean_batch_points: f64,
+    },
+    /// Graceful server shutdown (server Acks, then stops accepting).
+    Shutdown,
+    Ack,
+    /// Server-side failure description.
+    Error(String),
+}
+
+const TAG_PREDICT: u8 = 1;
+const TAG_SCORES: u8 = 2;
+const TAG_INFO: u8 = 3;
+const TAG_INFO_REPLY: u8 = 4;
+const TAG_STATS: u8 = 5;
+const TAG_STATS_REPLY: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+const TAG_ACK: u8 = 8;
+const TAG_ERROR: u8 = 9;
+
+impl ServeMessage {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u8(SERVE_PROTO_VERSION);
+        match self {
+            ServeMessage::Predict { flags, n, d, x } => {
+                e.u8(TAG_PREDICT);
+                e.u8(*flags);
+                e.u32(*n);
+                e.u32(*d);
+                e.f64s_raw(x);
+            }
+            ServeMessage::Scores { labels, map_score, log_predictive, log_probs, k } => {
+                e.u8(TAG_SCORES);
+                e.u8(if log_probs.is_some() { FLAG_LOG_PROBS } else { 0 });
+                e.u32(labels.len() as u32);
+                e.u32(*k);
+                for &l in labels {
+                    e.u32(l);
+                }
+                e.f64s_raw(map_score);
+                e.f64s_raw(log_predictive);
+                if let Some(p) = log_probs {
+                    e.f64s_raw(p);
+                }
+            }
+            ServeMessage::Info => e.u8(TAG_INFO),
+            ServeMessage::InfoReply { d, k, family, n_total } => {
+                e.u8(TAG_INFO_REPLY);
+                e.u32(*d);
+                e.u32(*k);
+                e.u8(*family);
+                e.u64(*n_total);
+            }
+            ServeMessage::Stats => e.u8(TAG_STATS),
+            ServeMessage::StatsReply {
+                requests,
+                points,
+                batches,
+                uptime_secs,
+                points_per_sec,
+                mean_batch_points,
+            } => {
+                e.u8(TAG_STATS_REPLY);
+                e.u64(*requests);
+                e.u64(*points);
+                e.u64(*batches);
+                e.f64(*uptime_secs);
+                e.f64(*points_per_sec);
+                e.f64(*mean_batch_points);
+            }
+            ServeMessage::Shutdown => e.u8(TAG_SHUTDOWN),
+            ServeMessage::Ack => e.u8(TAG_ACK),
+            ServeMessage::Error(msg) => {
+                e.u8(TAG_ERROR);
+                e.str(msg);
+            }
+        }
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ServeMessage> {
+        let mut d = Dec::new(buf);
+        let ver = d.u8()?;
+        if ver != SERVE_PROTO_VERSION {
+            bail!("serve protocol version mismatch: got {ver}, want {SERVE_PROTO_VERSION}");
+        }
+        let tag = d.u8()?;
+        let msg = match tag {
+            TAG_PREDICT => {
+                let flags = d.u8()?;
+                let n = d.u32()?;
+                let dim = d.u32()?;
+                let count = (n as usize)
+                    .checked_mul(dim as usize)
+                    .ok_or_else(|| anyhow!("predict shape overflow"))?;
+                if n as usize > MAX_PREDICT_POINTS {
+                    bail!("predict batch too large: {n} points");
+                }
+                let x = d.f64s_raw(count)?;
+                ServeMessage::Predict { flags, n, d: dim, x }
+            }
+            TAG_SCORES => {
+                let flags = d.u8()?;
+                let n = d.u32()? as usize;
+                if n > MAX_PREDICT_POINTS {
+                    bail!("scores reply too large: {n} points");
+                }
+                let k = d.u32()?;
+                let labels = (0..n).map(|_| d.u32()).collect::<Result<Vec<_>>>()?;
+                let map_score = d.f64s_raw(n)?;
+                let log_predictive = d.f64s_raw(n)?;
+                let log_probs = if flags & FLAG_LOG_PROBS != 0 {
+                    let count = n
+                        .checked_mul(k as usize)
+                        .ok_or_else(|| anyhow!("scores shape overflow"))?;
+                    Some(d.f64s_raw(count)?)
+                } else {
+                    None
+                };
+                ServeMessage::Scores { labels, map_score, log_predictive, log_probs, k }
+            }
+            TAG_INFO => ServeMessage::Info,
+            TAG_INFO_REPLY => ServeMessage::InfoReply {
+                d: d.u32()?,
+                k: d.u32()?,
+                family: d.u8()?,
+                n_total: d.u64()?,
+            },
+            TAG_STATS => ServeMessage::Stats,
+            TAG_STATS_REPLY => ServeMessage::StatsReply {
+                requests: d.u64()?,
+                points: d.u64()?,
+                batches: d.u64()?,
+                uptime_secs: d.f64()?,
+                points_per_sec: d.f64()?,
+                mean_batch_points: d.f64()?,
+            },
+            TAG_SHUTDOWN => ServeMessage::Shutdown,
+            TAG_ACK => ServeMessage::Ack,
+            TAG_ERROR => ServeMessage::Error(d.str()?),
+            t => bail!("unknown serve message tag {t}"),
+        };
+        if !d.finished() {
+            bail!("trailing bytes after serve message (tag {tag})");
+        }
+        Ok(msg)
+    }
+}
+
+/// Write one length-prefixed serve message.
+pub fn write_serve(w: &mut impl Write, msg: &ServeMessage) -> Result<()> {
+    write_frame(w, &msg.encode())
+}
+
+/// Read one length-prefixed serve message.
+pub fn read_serve(r: &mut impl Read) -> Result<ServeMessage> {
+    ServeMessage::decode(&read_frame(r)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_messages() {
+        for msg in [
+            ServeMessage::Predict { flags: 0, n: 2, d: 3, x: vec![1.0; 6] },
+            ServeMessage::Predict { flags: FLAG_LOG_PROBS, n: 0, d: 5, x: vec![] },
+            ServeMessage::Scores {
+                labels: vec![0, 3],
+                map_score: vec![-1.5, -2.5],
+                log_predictive: vec![-3.0, -9.0],
+                log_probs: None,
+                k: 4,
+            },
+            ServeMessage::Scores {
+                labels: vec![1],
+                map_score: vec![-1.0],
+                log_predictive: vec![-2.0],
+                log_probs: Some(vec![-0.1, -2.3]),
+                k: 2,
+            },
+            ServeMessage::Info,
+            ServeMessage::InfoReply { d: 32, k: 12, family: 0, n_total: 1_000_000 },
+            ServeMessage::Stats,
+            ServeMessage::StatsReply {
+                requests: 10,
+                points: 1000,
+                batches: 3,
+                uptime_secs: 1.25,
+                points_per_sec: 800.0,
+                mean_batch_points: 333.3,
+            },
+            ServeMessage::Shutdown,
+            ServeMessage::Ack,
+            ServeMessage::Error("nope".into()),
+        ] {
+            let enc = msg.encode();
+            assert_eq!(ServeMessage::decode(&enc).unwrap(), msg, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let good = ServeMessage::Ack.encode();
+        assert!(ServeMessage::decode(&good[..1]).is_err());
+        let mut bad_ver = good.clone();
+        bad_ver[0] = 42;
+        assert!(ServeMessage::decode(&bad_ver).is_err());
+        let mut trailing = good;
+        trailing.push(0);
+        assert!(ServeMessage::decode(&trailing).is_err());
+        // Predict whose payload is shorter than its declared shape.
+        let mut e = crate::backend::distributed::wire::Enc::new();
+        e.u8(SERVE_PROTO_VERSION);
+        e.u8(1); // TAG_PREDICT
+        e.u8(0);
+        e.u32(10);
+        e.u32(8);
+        e.f64(1.0); // only one of the 80 promised values
+        assert!(ServeMessage::decode(&e.buf).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_batches() {
+        let mut e = crate::backend::distributed::wire::Enc::new();
+        e.u8(SERVE_PROTO_VERSION);
+        e.u8(1);
+        e.u8(0);
+        e.u32((MAX_PREDICT_POINTS + 1) as u32);
+        e.u32(1);
+        assert!(ServeMessage::decode(&e.buf).is_err());
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let mut buf = Vec::new();
+        write_serve(&mut buf, &ServeMessage::Info).unwrap();
+        write_serve(&mut buf, &ServeMessage::Shutdown).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_serve(&mut cursor).unwrap(), ServeMessage::Info);
+        assert_eq!(read_serve(&mut cursor).unwrap(), ServeMessage::Shutdown);
+    }
+}

@@ -20,6 +20,38 @@ pub use dirmult::{DirMultParams, DirMultPrior, DirMultStats};
 pub use niw::{NiwParams, NiwPrior, NiwStats};
 
 use crate::rng::Rng;
+use std::fmt;
+
+/// Typed error for a prior/statistics likelihood-family mismatch.
+///
+/// The sampler's internal paths are family-homogeneous by construction, so
+/// there the mismatch arms stay panics (see the infallible wrappers below).
+/// But the same dispatch is reachable from *untrusted* inputs — snapshot /
+/// checkpoint files and wire messages pair a decoded [`Prior`] with decoded
+/// [`Stats`] — and a corrupt file must surface as an error the caller can
+/// report, not abort a serving process. Those paths use the `try_*`
+/// variants, which return this error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FamilyMismatch {
+    /// Operation that detected the mismatch (e.g. `"mean_params"`).
+    pub op: &'static str,
+    /// Likelihood family of the prior side.
+    pub prior: &'static str,
+    /// Likelihood family of the statistics side.
+    pub stats: &'static str,
+}
+
+impl fmt::Display for FamilyMismatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "prior/stats likelihood mismatch in {}: {} prior vs {} statistics",
+            self.op, self.prior, self.stats
+        )
+    }
+}
+
+impl std::error::Error for FamilyMismatch {}
 
 /// A conjugate prior over component parameters (dispatch enum).
 #[derive(Debug, Clone, PartialEq)]
@@ -52,6 +84,18 @@ impl Prior {
         }
     }
 
+    /// Likelihood-family name (for [`FamilyMismatch`] diagnostics).
+    pub fn family(&self) -> &'static str {
+        match self {
+            Prior::Niw(_) => "gaussian",
+            Prior::DirMult(_) => "multinomial",
+        }
+    }
+
+    fn mismatch(&self, op: &'static str, stats: &Stats) -> FamilyMismatch {
+        FamilyMismatch { op, prior: self.family(), stats: stats.family() }
+    }
+
     /// Fresh zero statistics.
     pub fn empty_stats(&self) -> Stats {
         match self {
@@ -60,13 +104,24 @@ impl Prior {
         }
     }
 
-    /// Draw θ ~ p(θ | stats, λ) — step (c)/(d) of the restricted Gibbs sweep.
-    pub fn sample_params(&self, stats: &Stats, rng: &mut impl Rng) -> Params {
+    /// Fallible [`Self::sample_params`] for untrusted (deserialized) inputs.
+    pub fn try_sample_params(
+        &self,
+        stats: &Stats,
+        rng: &mut impl Rng,
+    ) -> Result<Params, FamilyMismatch> {
         match (self, stats) {
-            (Prior::Niw(p), Stats::Gauss(s)) => Params::Gauss(p.sample_params(s, rng)),
-            (Prior::DirMult(p), Stats::Mult(s)) => Params::Mult(p.sample_params(s, rng)),
-            _ => panic!("prior/stats likelihood mismatch"),
+            (Prior::Niw(p), Stats::Gauss(s)) => Ok(Params::Gauss(p.sample_params(s, rng))),
+            (Prior::DirMult(p), Stats::Mult(s)) => Ok(Params::Mult(p.sample_params(s, rng))),
+            _ => Err(self.mismatch("sample_params", stats)),
         }
+    }
+
+    /// Draw θ ~ p(θ | stats, λ) — step (c)/(d) of the restricted Gibbs sweep.
+    /// Panics on a family mismatch (programmer error on the trusted sampler
+    /// path); deserialization paths use [`Self::try_sample_params`].
+    pub fn sample_params(&self, stats: &Stats, rng: &mut impl Rng) -> Params {
+        self.try_sample_params(stats, rng).unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// A diverse (data-scale) parameter draw for (re)seeding sub-cluster
@@ -77,7 +132,7 @@ impl Prior {
             (Prior::DirMult(p), Stats::Mult(s)) => {
                 Params::Mult(p.sample_params_diverse(s, rng))
             }
-            _ => panic!("prior/stats likelihood mismatch"),
+            _ => panic!("{}", self.mismatch("sample_params_diverse", stats)),
         }
     }
 
@@ -90,16 +145,33 @@ impl Prior {
             (Prior::DirMult(p), Stats::Mult(s)) => {
                 Params::Mult(p.sample_params_probe(s, shrink, rng))
             }
-            _ => panic!("prior/stats likelihood mismatch"),
+            _ => panic!("{}", self.mismatch("sample_params_probe", stats)),
+        }
+    }
+
+    /// Fallible [`Self::mean_params`] for untrusted (deserialized) inputs —
+    /// the path snapshot loading uses, where a corrupt file may pair a
+    /// Gaussian prior with multinomial statistics.
+    pub fn try_mean_params(&self, stats: &Stats) -> Result<Params, FamilyMismatch> {
+        match (self, stats) {
+            (Prior::Niw(p), Stats::Gauss(s)) => Ok(Params::Gauss(p.mean_params(s))),
+            (Prior::DirMult(p), Stats::Mult(s)) => Ok(Params::Mult(p.mean_params(s))),
+            _ => Err(self.mismatch("mean_params", stats)),
         }
     }
 
     /// Posterior-mean parameters (deterministic; used for final reporting).
+    /// Panics on a family mismatch; see [`Self::try_mean_params`].
     pub fn mean_params(&self, stats: &Stats) -> Params {
+        self.try_mean_params(stats).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`Self::log_marginal`] for untrusted (deserialized) inputs.
+    pub fn try_log_marginal(&self, stats: &Stats) -> Result<f64, FamilyMismatch> {
         match (self, stats) {
-            (Prior::Niw(p), Stats::Gauss(s)) => Params::Gauss(p.mean_params(s)),
-            (Prior::DirMult(p), Stats::Mult(s)) => Params::Mult(p.mean_params(s)),
-            _ => panic!("prior/stats likelihood mismatch"),
+            (Prior::Niw(p), Stats::Gauss(s)) => Ok(p.log_marginal(s)),
+            (Prior::DirMult(p), Stats::Mult(s)) => Ok(p.log_marginal(s)),
+            _ => Err(self.mismatch("log_marginal", stats)),
         }
     }
 
@@ -107,11 +179,7 @@ impl Prior {
     /// `stats` (per-point constant factors that cancel in all Hastings
     /// ratios are dropped, matching [Chang & Fisher III 2013]).
     pub fn log_marginal(&self, stats: &Stats) -> f64 {
-        match (self, stats) {
-            (Prior::Niw(p), Stats::Gauss(s)) => p.log_marginal(s),
-            (Prior::DirMult(p), Stats::Mult(s)) => p.log_marginal(s),
-            _ => panic!("prior/stats likelihood mismatch"),
-        }
+        self.try_log_marginal(stats).unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -120,6 +188,22 @@ impl Stats {
         match self {
             Stats::Gauss(s) => s.n,
             Stats::Mult(s) => s.n,
+        }
+    }
+
+    /// Likelihood-family name (for [`FamilyMismatch`] diagnostics).
+    pub fn family(&self) -> &'static str {
+        match self {
+            Stats::Gauss(_) => "gaussian",
+            Stats::Mult(_) => "multinomial",
+        }
+    }
+
+    /// Data dimensionality these statistics were accumulated at.
+    pub fn dim(&self) -> usize {
+        match self {
+            Stats::Gauss(s) => s.dim(),
+            Stats::Mult(s) => s.sum_x.len(),
         }
     }
 
@@ -150,13 +234,26 @@ impl Stats {
         }
     }
 
-    /// Merge another statistics object in (cluster merge / shard reduce).
-    pub fn merge(&mut self, other: &Stats) {
+    /// Fallible [`Self::merge`] for untrusted (deserialized) inputs — the
+    /// path the distributed leader uses when reducing worker replies.
+    pub fn try_merge(&mut self, other: &Stats) -> Result<(), FamilyMismatch> {
         match (self, other) {
-            (Stats::Gauss(a), Stats::Gauss(b)) => a.merge(b),
-            (Stats::Mult(a), Stats::Mult(b)) => a.merge(b),
-            _ => panic!("stats likelihood mismatch"),
+            (Stats::Gauss(a), Stats::Gauss(b)) => {
+                a.merge(b);
+                Ok(())
+            }
+            (Stats::Mult(a), Stats::Mult(b)) => {
+                a.merge(b);
+                Ok(())
+            }
+            (a, b) => Err(FamilyMismatch { op: "merge", prior: a.family(), stats: b.family() }),
         }
+    }
+
+    /// Merge another statistics object in (cluster merge / shard reduce).
+    /// Panics on a family mismatch; see [`Self::try_merge`].
+    pub fn merge(&mut self, other: &Stats) {
+        self.try_merge(other).unwrap_or_else(|e| panic!("{e}"))
     }
 
     pub fn reset(&mut self) {
@@ -181,6 +278,14 @@ impl Params {
         match self {
             Params::Gauss(p) => p.mu.len(),
             Params::Mult(p) => p.log_theta.len(),
+        }
+    }
+
+    /// Likelihood-family name (for [`FamilyMismatch`] diagnostics).
+    pub fn family(&self) -> &'static str {
+        match self {
+            Params::Gauss(_) => "gaussian",
+            Params::Mult(_) => "multinomial",
         }
     }
 }
@@ -240,5 +345,33 @@ mod tests {
         let prior = Prior::Niw(NiwPrior::weak(2));
         let stats = Prior::DirMult(DirMultPrior::symmetric(2, 1.0)).empty_stats();
         prior.log_marginal(&stats);
+    }
+
+    #[test]
+    fn try_variants_return_typed_error() {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let stats = Prior::DirMult(DirMultPrior::symmetric(2, 1.0)).empty_stats();
+        let err = prior.try_mean_params(&stats).unwrap_err();
+        assert_eq!(err.op, "mean_params");
+        assert_eq!(err.prior, "gaussian");
+        assert_eq!(err.stats, "multinomial");
+        assert!(err.to_string().contains("mismatch"));
+        assert!(prior.try_log_marginal(&stats).is_err());
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        assert!(prior.try_sample_params(&stats, &mut rng).is_err());
+        // Matching families succeed through the same path.
+        let ok = prior.try_mean_params(&prior.empty_stats());
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn try_merge_rejects_cross_family() {
+        let mut g = Prior::Niw(NiwPrior::weak(2)).empty_stats();
+        let m = Prior::DirMult(DirMultPrior::symmetric(2, 1.0)).empty_stats();
+        assert_eq!(g.try_merge(&m).unwrap_err().op, "merge");
+        let mut g2 = Prior::Niw(NiwPrior::weak(2)).empty_stats();
+        g2.add(&[1.0, 2.0]);
+        assert!(g.try_merge(&g2).is_ok());
+        assert_eq!(g.count(), 1.0);
     }
 }

@@ -1,0 +1,219 @@
+//! End-to-end serving tests: fit → checkpoint → snapshot → predict, the
+//! engine against the in-process restricted-Gibbs argmax oracle, snapshot
+//! file-format hardening, and the full TCP round trip with micro-batching.
+
+use dpmm::config::{BackendChoice, DpmmParams};
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::{Data, Dataset};
+use dpmm::metrics::nmi;
+use dpmm::prelude::*;
+use dpmm::sampler::KernelDesc;
+use dpmm::serve::{self, EngineConfig, ServeConfig, ServeStats};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dpmm_serve_{name}_{}.bin", std::process::id()))
+}
+
+/// Fit a small GMM with a final-iteration checkpoint; return the checkpoint
+/// path plus a held-out set drawn from the same mixture.
+fn fit_with_checkpoint(
+    name: &str,
+    n: usize,
+    n_heldout: usize,
+    d: usize,
+    k: usize,
+    seed: u64,
+) -> (std::path::PathBuf, Dataset) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let all = GmmSpec::default_with(n + n_heldout, d, k).generate(&mut rng);
+    let train = Data::new(n, d, all.points.values[..n * d].to_vec());
+    let heldout = Dataset {
+        points: Data::new(n_heldout, d, all.points.values[n * d..].to_vec()),
+        labels: all.labels[n..].to_vec(),
+        true_k: all.true_k,
+    };
+    let ckpt_path = tmp(name);
+    let mut params = DpmmParams::gaussian_default(d);
+    params.iterations = 50;
+    params.seed = seed + 1;
+    params.backend = BackendChoice::Native { threads: 2, shard_size: 2048 };
+    params.checkpoint_path = Some(ckpt_path.to_string_lossy().into_owned());
+    params.checkpoint_every = params.iterations; // final-state checkpoint
+    let fit = DpmmFit::new(params).fit(&train).unwrap();
+    assert!(fit.num_clusters() >= 2, "fit collapsed to K={}", fit.num_clusters());
+    assert!(ckpt_path.exists(), "checkpoint was not written");
+    (ckpt_path, heldout)
+}
+
+#[test]
+fn fit_checkpoint_snapshot_predict_pipeline() {
+    let (ckpt, heldout) = fit_with_checkpoint("pipeline", 4000, 800, 2, 3, 7);
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).unwrap();
+    let engine = ScoringEngine::new(&snapshot, EngineConfig::default()).unwrap();
+
+    // Engine MAP labels must agree with the in-process restricted-Gibbs
+    // argmax: score every held-out point with the same frozen KernelDescs
+    // the fit path's step (e) consumes, scalar one-at-a-time, and argmax.
+    let plan = snapshot.plan().unwrap();
+    let oracle: Vec<u32> = heldout
+        .points
+        .rows()
+        .map(|x| {
+            let mut best = f64::NEG_INFINITY;
+            let mut arg = 0u32;
+            for (c, desc) in plan.clusters.iter().enumerate() {
+                let s = KernelDesc::loglik(desc, x);
+                if s > best {
+                    best = s;
+                    arg = c as u32;
+                }
+            }
+            arg
+        })
+        .collect();
+    let batch = engine.score(&heldout.points.values, false).unwrap();
+    assert_eq!(batch.labels, oracle, "engine MAP != restricted-Gibbs argmax");
+
+    // And the assignments must be *good*: held-out NMI against the
+    // generative labels on well-separated blobs.
+    let predicted: Vec<usize> = batch.labels.iter().map(|&l| l as usize).collect();
+    let score = nmi(&heldout.labels, &predicted);
+    assert!(score > 0.85, "held-out NMI too low: {score}");
+
+    // Snapshot serialize → deserialize → identical scores.
+    let snap_path = tmp("pipeline_snap");
+    snapshot.save(&snap_path).unwrap();
+    let reloaded = ModelSnapshot::load(&snap_path).unwrap();
+    assert_eq!(reloaded, snapshot);
+    let engine2 = ScoringEngine::new(&reloaded, EngineConfig::default()).unwrap();
+    let batch2 = engine2.score(&heldout.points.values, false).unwrap();
+    assert_eq!(batch2, batch);
+
+    std::fs::remove_file(&ckpt).ok();
+    std::fs::remove_file(&snap_path).ok();
+}
+
+#[test]
+fn snapshot_rejects_corrupt_files() {
+    let (ckpt, _) = fit_with_checkpoint("corrupt", 1500, 10, 2, 2, 21);
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).unwrap();
+    let p = tmp("corrupt_snap");
+    snapshot.save(&p).unwrap();
+    let good = std::fs::read(&p).unwrap();
+
+    // Bad magic.
+    let mut bad = good.clone();
+    bad[0] = b'X';
+    std::fs::write(&p, &bad).unwrap();
+    assert!(ModelSnapshot::load(&p).unwrap_err().to_string().contains("magic"));
+
+    // Bad version.
+    let mut bad = good.clone();
+    bad[8] = 77;
+    std::fs::write(&p, &bad).unwrap();
+    assert!(ModelSnapshot::load(&p).unwrap_err().to_string().contains("version"));
+
+    // Truncations at every byte boundary of the header plus several body
+    // cuts: all must error, never panic.
+    for cut in (0..32).chain([good.len() / 3, good.len() / 2, good.len() - 1]) {
+        std::fs::write(&p, &good[..cut]).unwrap();
+        assert!(ModelSnapshot::load(&p).is_err(), "cut={cut}");
+    }
+
+    // A checkpoint is not a snapshot and vice versa.
+    assert!(ModelSnapshot::load(&ckpt).is_err());
+    std::fs::write(&p, &good).unwrap();
+    assert!(ModelSnapshot::from_checkpoint_file(&p).is_err());
+
+    std::fs::remove_file(&ckpt).ok();
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn tcp_round_trip_matches_engine_direct() {
+    let (ckpt, heldout) = fit_with_checkpoint("tcp", 3000, 600, 2, 3, 33);
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).unwrap();
+    let engine = ScoringEngine::new(&snapshot, EngineConfig::default()).unwrap();
+    let direct = engine.score(&heldout.points.values, true).unwrap();
+
+    let server = serve::spawn(
+        ScoringEngine::new(&snapshot, EngineConfig::default()).unwrap(),
+        "127.0.0.1:0",
+        ServeConfig::default(),
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    // Info reflects the model.
+    let mut client = DpmmClient::connect(&addr).unwrap();
+    let info = client.info().unwrap();
+    assert_eq!(info.d, 2);
+    assert_eq!(info.k, snapshot.k());
+    assert_eq!(info.family, "gaussian");
+    assert_eq!(info.n_total, 3000);
+
+    // Predict over TCP == engine-direct, including the probs matrix.
+    let pred = client
+        .predict_opts(&heldout.points.values, 2, true)
+        .unwrap();
+    assert_eq!(pred.labels, direct.labels);
+    assert_eq!(pred.map_score, direct.map_score);
+    assert_eq!(pred.log_predictive, direct.log_predictive);
+    assert_eq!(pred.log_probs, direct.log_probs);
+    assert_eq!(pred.k, snapshot.k());
+
+    // Concurrent clients hit the same batcher and all get correct slices.
+    std::thread::scope(|scope| {
+        for c in 0..4usize {
+            let addr = addr.clone();
+            let heldout = &heldout;
+            let direct = &direct;
+            scope.spawn(move || {
+                let mut client = DpmmClient::connect(&addr).unwrap();
+                let lo = c * 100;
+                for _ in 0..5 {
+                    let p = client
+                        .predict(&heldout.points.values[lo * 2..(lo + 100) * 2], 2)
+                        .unwrap();
+                    assert_eq!(p.labels, direct.labels[lo..lo + 100].to_vec());
+                }
+            });
+        }
+    });
+
+    // Dimension mismatch is an error reply, not a dropped connection —
+    // and the same client keeps working afterwards.
+    let err = client.predict(&[1.0, 2.0, 3.0], 3).unwrap_err();
+    assert!(err.to_string().contains("dimension mismatch"), "{err}");
+    assert!(client.predict(&[0.0, 0.0], 2).is_ok());
+
+    // Stats add up: ≥ 22 requests (1 big + 20 concurrent + 1 post-error),
+    // and micro-batching means batches ≤ requests.
+    let stats: ServeStats = client.stats().unwrap();
+    assert!(stats.requests >= 22, "requests={}", stats.requests);
+    assert!(stats.points >= 600 + 4 * 5 * 100, "points={}", stats.points);
+    assert!(stats.batches >= 1 && stats.batches <= stats.requests);
+    assert!(stats.points_per_sec > 0.0);
+
+    // Graceful shutdown via the protocol; the handle then joins cleanly.
+    client.shutdown_server().unwrap();
+    server.stop().unwrap();
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn predictive_density_separates_inliers_from_outliers() {
+    let (ckpt, heldout) = fit_with_checkpoint("anomaly", 2500, 200, 2, 3, 55);
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).unwrap();
+    let engine = ScoringEngine::new(&snapshot, EngineConfig::default()).unwrap();
+    let inliers = engine.score(&heldout.points.values, false).unwrap();
+    let far = engine.score(&[1e4, -1e4], false).unwrap();
+    let mean_inlier: f64 =
+        inliers.log_predictive.iter().sum::<f64>() / inliers.len() as f64;
+    assert!(
+        far.log_predictive[0] < mean_inlier - 50.0,
+        "outlier {} vs mean inlier {mean_inlier}",
+        far.log_predictive[0]
+    );
+    std::fs::remove_file(&ckpt).ok();
+}

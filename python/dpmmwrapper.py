@@ -26,6 +26,11 @@ Example (mirrors the paper's §3.4.4 sample, then serves the fit):
     # ... dpmm serve --checkpoint=fit.ckpt --addr=127.0.0.1:7979 ...
     with DpmmClient("127.0.0.1:7979") as client:
         labels, map_score, log_pred = client.predict(data[:1000])
+
+Against a ``dpmm stream`` endpoint the same client can also feed the model
+(`client.ingest(batch)`): the server folds the batch into its incremental
+fitter and hot-swaps a re-planned snapshot, so subsequent predictions see
+the new data — watch ``client.stats()["generation"]`` bump per ingest.
 """
 
 import json
@@ -131,7 +136,7 @@ def fit(
 # All integers little-endian; point payloads are raw float64 runs.
 # ---------------------------------------------------------------------------
 
-SERVE_PROTO_VERSION = 1
+SERVE_PROTO_VERSION = 2  # v2: ingest verbs + extended stats layout
 FLAG_LOG_PROBS = 1
 
 TAG_PREDICT = 1
@@ -143,6 +148,8 @@ TAG_STATS_REPLY = 6
 TAG_SHUTDOWN = 7
 TAG_ACK = 8
 TAG_ERROR = 9
+TAG_INGEST = 10
+TAG_INGEST_REPLY = 11
 
 _MAX_FRAME = 1 << 30
 
@@ -174,6 +181,16 @@ def _encode_predict(x, probs=False):
 def _encode_simple(tag):
     """Encode a body-less request (Info / Stats / Shutdown)."""
     return _frame(struct.pack("<BB", SERVE_PROTO_VERSION, tag))
+
+
+def _encode_ingest(x):
+    """Encode an Ingest request for an (n, d) float64 array → frame bytes."""
+    x = np.ascontiguousarray(np.asarray(x, dtype="<f8"))
+    if x.ndim != 2:
+        raise ValueError("points must be 2-D (n, d)")
+    n, d = x.shape
+    payload = struct.pack("<BBII", SERVE_PROTO_VERSION, TAG_INGEST, n, d)
+    return _frame(payload + x.tobytes())
 
 
 def _split_payload(payload):
@@ -247,8 +264,18 @@ def _decode_stats(payload):
         raise ServerError(_decode_error(body))
     if tag != TAG_STATS_REPLY:
         raise ProtocolError(f"unexpected reply tag {tag} (want StatsReply)")
-    head, _ = _take(body, 48, "stats reply")
-    requests, points, batches, uptime, pps, mean_batch = struct.unpack("<QQQddd", head)
+    head, _ = _take(body, 72, "stats reply")
+    (
+        requests,
+        points,
+        batches,
+        uptime,
+        pps,
+        mean_batch,
+        generation,
+        ingested,
+        ingest_pending,
+    ) = struct.unpack("<QQQdddQQQ", head)
     return {
         "requests": requests,
         "points": points,
@@ -256,7 +283,23 @@ def _decode_stats(payload):
         "uptime_secs": uptime,
         "points_per_sec": pps,
         "mean_batch_points": mean_batch,
+        "generation": generation,
+        "ingested": ingested,
+        "ingest_pending": ingest_pending,
     }
+
+
+def _decode_ingest_reply(payload):
+    tag, body = _split_payload(payload)
+    if tag == TAG_ERROR:
+        raise ServerError(_decode_error(body))
+    if tag != TAG_INGEST_REPLY:
+        raise ProtocolError(f"unexpected reply tag {tag} (want IngestReply)")
+    head, body = _take(body, 24, "ingest reply")
+    accepted, generation, window = struct.unpack("<QQQ", head)
+    if body:
+        raise ProtocolError(f"{len(body)} trailing bytes after IngestReply")
+    return {"accepted": accepted, "generation": generation, "window": window}
 
 
 def _decode_ack(payload):
@@ -319,8 +362,23 @@ class DpmmClient:
         return _decode_info(self._roundtrip(_encode_simple(TAG_INFO)))
 
     def stats(self):
-        """Server throughput counters (the `/stats` endpoint)."""
+        """Server throughput counters (the `/stats` endpoint).
+
+        Streaming servers additionally report ``generation`` (live snapshot
+        generation, bumped per applied ingest), ``ingested`` (points folded
+        over the server's lifetime) and ``ingest_pending`` (ingest lag).
+        """
         return _decode_stats(self._roundtrip(_encode_simple(TAG_STATS)))
+
+    def ingest(self, x):
+        """Stream an (n, d) array into the served model (``dpmm stream``
+        endpoints only).
+
+        Blocks until the batch is folded and the re-planned snapshot is
+        live; returns ``{"accepted", "generation", "window"}``. Predictions
+        answered at or after the returned generation see the batch.
+        """
+        return _decode_ingest_reply(self._roundtrip(_encode_ingest(x)))
 
     def shutdown_server(self):
         """Gracefully stop the server (acknowledged before it exits)."""

@@ -120,7 +120,7 @@ class TestInfoAndStats:
 
     def test_stats_roundtrip(self):
         body = struct.pack(
-            "<BBQQQddd",
+            "<BBQQQdddQQQ",
             w.SERVE_PROTO_VERSION,
             w.TAG_STATS_REPLY,
             10,
@@ -129,6 +129,9 @@ class TestInfoAndStats:
             2.5,
             400.0,
             250.0,
+            3,
+            600,
+            50,
         )
         stats = w._decode_stats(body)
         assert stats["requests"] == 10
@@ -137,6 +140,19 @@ class TestInfoAndStats:
         assert stats["uptime_secs"] == 2.5
         assert stats["points_per_sec"] == 400.0
         assert stats["mean_batch_points"] == 250.0
+        assert stats["generation"] == 3
+        assert stats["ingested"] == 600
+        assert stats["ingest_pending"] == 50
+
+    def test_stats_truncated_raises(self):
+        body = struct.pack(
+            "<BBQQQddd",  # the old 48-byte layout is now a truncation
+            w.SERVE_PROTO_VERSION,
+            w.TAG_STATS_REPLY,
+            1, 2, 3, 4.0, 5.0, 6.0,
+        )
+        with pytest.raises(w.ProtocolError, match="truncated"):
+            w._decode_stats(body)
 
     def test_ack_accepts_only_ack(self):
         w._decode_ack(struct.pack("<BB", w.SERVE_PROTO_VERSION, w.TAG_ACK))

@@ -1,0 +1,212 @@
+"""Streaming-client tests for `dpmmwrapper.DpmmClient.ingest`.
+
+A mock TCP server (a loopback listener in a thread, speaking canned frames
+exactly as rust/src/serve/server.rs would) exercises the ingest round-trip
+and the snapshot-generation bump surfaced in `/stats` — no Rust binary, no
+jax, numpy only, so this runs in the slim CI python job.
+"""
+
+import os
+import socket
+import struct
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import dpmmwrapper as w
+
+
+def _read_exact(conn, n):
+    chunks = []
+    while n > 0:
+        chunk = conn.recv(n)
+        if not chunk:
+            raise ConnectionError("client closed mid-frame")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+class MockStreamServer:
+    """Single-connection mock of a `dpmm stream` endpoint.
+
+    Tracks a snapshot generation (starting at 1, bumped per accepted
+    ingest) and total ingested points; replies to Ingest / Stats / Error
+    probes with byte layouts mirroring the Rust server. Records every
+    decoded ingest payload for assertions.
+    """
+
+    def __init__(self, fail_next_ingest=False):
+        self._sock = socket.create_server(("127.0.0.1", 0))
+        self.addr = "127.0.0.1:%d" % self._sock.getsockname()[1]
+        self.generation = 1
+        self.ingested = 0
+        self.window = 0
+        self.ingests = []  # decoded (n, d, ndarray) per Ingest frame
+        self.fail_next_ingest = fail_next_ingest
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def _serve(self):
+        conn, _ = self._sock.accept()
+        with conn:
+            try:
+                while True:
+                    (length,) = struct.unpack("<I", _read_exact(conn, 4))
+                    payload = _read_exact(conn, length)
+                    reply = self._reply(payload)
+                    conn.sendall(struct.pack("<I", len(reply)) + reply)
+            except (ConnectionError, OSError):
+                pass
+
+    def _reply(self, payload):
+        ver, tag = payload[0], payload[1]
+        assert ver == w.SERVE_PROTO_VERSION
+        if tag == w.TAG_INGEST:
+            n, d = struct.unpack("<II", payload[2:10])
+            x = np.frombuffer(payload[10:], dtype="<f8").reshape(n, d)
+            self.ingests.append((n, d, x))
+            if self.fail_next_ingest:
+                self.fail_next_ingest = False
+                msg = b"ingest failed: batch contains non-finite values"
+                return (
+                    struct.pack("<BBI", w.SERVE_PROTO_VERSION, w.TAG_ERROR, len(msg))
+                    + msg
+                )
+            self.generation += 1
+            self.ingested += n
+            self.window += n
+            return struct.pack(
+                "<BBQQQ",
+                w.SERVE_PROTO_VERSION,
+                w.TAG_INGEST_REPLY,
+                n,
+                self.generation,
+                self.window,
+            )
+        if tag == w.TAG_STATS:
+            return struct.pack(
+                "<BBQQQdddQQQ",
+                w.SERVE_PROTO_VERSION,
+                w.TAG_STATS_REPLY,
+                len(self.ingests),
+                self.ingested,
+                1,
+                1.0,
+                float(self.ingested),
+                float(self.ingested),
+                self.generation,
+                self.ingested,
+                0,
+            )
+        raise AssertionError(f"mock server got unexpected tag {tag}")
+
+    def close(self):
+        self._sock.close()
+
+
+class TestEncodeIngest:
+    def test_layout_matches_spec(self):
+        x = np.arange(6, dtype=np.float64).reshape(3, 2)
+        frame = w._encode_ingest(x)
+        (length,) = struct.unpack("<I", frame[:4])
+        payload = frame[4:]
+        assert length == len(payload)
+        ver, tag, n, d = struct.unpack("<BBII", payload[:10])
+        assert (ver, tag, n, d) == (w.SERVE_PROTO_VERSION, w.TAG_INGEST, 3, 2)
+        np.testing.assert_array_equal(
+            np.frombuffer(payload[10:], dtype="<f8"), x.ravel()
+        )
+
+    def test_casts_and_contiguity(self):
+        x = np.asfortranarray(np.array([[1, 2], [3, 4]], dtype=np.float32))
+        frame = w._encode_ingest(x)
+        got = np.frombuffer(frame[4 + 10:], dtype="<f8")
+        np.testing.assert_array_equal(got, [1.0, 2.0, 3.0, 4.0])
+
+    def test_rejects_non_2d(self):
+        with pytest.raises(ValueError):
+            w._encode_ingest(np.zeros(4))
+
+
+class TestDecodeIngestReply:
+    def test_roundtrip(self):
+        body = struct.pack(
+            "<BBQQQ", w.SERVE_PROTO_VERSION, w.TAG_INGEST_REPLY, 128, 7, 4096
+        )
+        assert w._decode_ingest_reply(body) == {
+            "accepted": 128,
+            "generation": 7,
+            "window": 4096,
+        }
+
+    def test_error_reply_raises(self):
+        msg = "streaming ingest is disabled on this server"
+        body = struct.pack("<BBI", w.SERVE_PROTO_VERSION, w.TAG_ERROR, len(msg))
+        body += msg.encode()
+        with pytest.raises(w.ServerError, match="disabled"):
+            w._decode_ingest_reply(body)
+
+    def test_truncated_and_trailing_raise(self):
+        body = struct.pack(
+            "<BBQQQ", w.SERVE_PROTO_VERSION, w.TAG_INGEST_REPLY, 1, 2, 3
+        )
+        with pytest.raises(w.ProtocolError, match="truncated"):
+            w._decode_ingest_reply(body[:-4])
+        with pytest.raises(w.ProtocolError, match="trailing"):
+            w._decode_ingest_reply(body + b"\x00")
+
+    def test_wrong_tag_raises(self):
+        body = struct.pack("<BB", w.SERVE_PROTO_VERSION, w.TAG_ACK)
+        with pytest.raises(w.ProtocolError, match="unexpected reply tag"):
+            w._decode_ingest_reply(body)
+
+
+class TestIngestRoundtrip:
+    def test_ingest_roundtrip_against_mock_socket(self):
+        server = MockStreamServer()
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                batch = np.array([[0.5, -1.5], [2.0, 3.0], [4.0, -4.0]])
+                receipt = client.ingest(batch)
+                assert receipt == {"accepted": 3, "generation": 2, "window": 3}
+                # The server decoded exactly the bytes we meant to send.
+                n, d, got = server.ingests[0]
+                assert (n, d) == (3, 2)
+                np.testing.assert_array_equal(got, batch)
+        finally:
+            server.close()
+
+    def test_stats_surfaces_generation_bump(self):
+        server = MockStreamServer()
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                before = client.stats()
+                assert before["generation"] == 1
+                assert before["ingested"] == 0
+                r1 = client.ingest(np.zeros((4, 2)))
+                r2 = client.ingest(np.ones((6, 2)))
+                assert r1["generation"] == 2
+                assert r2["generation"] == 3
+                after = client.stats()
+                assert after["generation"] == 3
+                assert after["ingested"] == 10
+                assert after["ingest_pending"] == 0
+        finally:
+            server.close()
+
+    def test_server_error_surfaces_and_connection_survives(self):
+        server = MockStreamServer(fail_next_ingest=True)
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                with pytest.raises(w.ServerError, match="non-finite"):
+                    client.ingest(np.zeros((2, 2)))
+                # Same connection keeps working; generation untouched.
+                assert client.stats()["generation"] == 1
+                assert client.ingest(np.zeros((1, 2)))["generation"] == 2
+        finally:
+            server.close()

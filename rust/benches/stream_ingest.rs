@@ -1,0 +1,206 @@
+//! Streaming ingest vs full refit: the wall-clock case for the incremental
+//! fitter.
+//!
+//! Protocol (EXPERIMENTS.md §Streaming): fit a base model on an initial
+//! window of a synthetic GMM stream, then absorb B further mini-batches two
+//! ways —
+//!
+//! * **incremental**: `IncrementalFitter::ingest` per batch (MAP seed +
+//!   grouped fold + R restricted sweeps over the sliding window), the
+//!   `dpmm stream` path;
+//! * **full refit**: one fresh `DpmmFit` over all data seen so far, the
+//!   only refresh a batch-only pipeline can offer.
+//!
+//! Quality is compared at the end of the stream: held-out NMI of MAP labels
+//! on the most recent batch (what a production model is actually asked
+//! about). Two scenarios: **stationary** (fixed mixture) and **drift**
+//! (every batch translates the whole mixture by a constant velocity; the
+//! incremental fitter runs with exponential forgetting, the refit sees the
+//! smeared union). Target: incremental ingest ≥ 3× faster than the refit at
+//! matched (±0.02) NMI on the drift scenario.
+//!
+//! Machine-readable output: `BENCH_stream.json` (override with
+//! `BENCH_STREAM_OUT`). Scale control: `DPMM_BENCH_SCALE=small|medium|full`.
+//!
+//! Run: `cargo bench --bench stream_ingest`
+
+#[path = "support/mod.rs"]
+mod support;
+
+use dpmm::config::DpmmParams;
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::Data;
+use dpmm::prelude::*;
+use dpmm::serve::{EngineConfig, ScoringEngine};
+use dpmm::stream::{IncrementalFitter, StreamConfig};
+use dpmm::util::json::{self, Json};
+use std::time::Instant;
+
+const D: usize = 8;
+const K: usize = 5;
+
+struct Scenario {
+    name: &'static str,
+    /// Whole-mixture translation per batch index, per dimension.
+    drift_per_batch: f64,
+    /// Forgetting factor for the incremental fitter.
+    decay: f64,
+}
+
+struct Sizes {
+    n_base: usize,
+    batches: usize,
+    batch_n: usize,
+    window: usize,
+    refit_iters: usize,
+}
+
+fn sizes() -> Sizes {
+    match support::scale() {
+        support::Scale::Small => {
+            Sizes { n_base: 6_000, batches: 10, batch_n: 1_500, window: 8_192, refit_iters: 40 }
+        }
+        support::Scale::Medium => {
+            Sizes { n_base: 30_000, batches: 12, batch_n: 6_000, window: 32_768, refit_iters: 60 }
+        }
+        support::Scale::Full => {
+            Sizes { n_base: 100_000, batches: 16, batch_n: 25_000, window: 65_536, refit_iters: 80 }
+        }
+    }
+}
+
+/// Translate every point of batch `b` by `b · drift` in every dimension.
+fn drifted(points: &[f64], b: usize, drift: f64) -> Vec<f64> {
+    let off = b as f64 * drift;
+    points.iter().map(|&v| v + off).collect()
+}
+
+/// MAP-label NMI of a model snapshot on held-out points.
+fn snapshot_nmi(snapshot: &ModelSnapshot, points: &[f64], truth: &[usize]) -> f64 {
+    let engine = ScoringEngine::new(snapshot, EngineConfig::default()).expect("engine");
+    let batch = engine.score(points, false).expect("score");
+    let labels: Vec<usize> = batch.labels.iter().map(|&l| l as usize).collect();
+    nmi(truth, &labels)
+}
+
+fn run_scenario(sc: &Scenario, sizes: &Sizes) -> Json {
+    let Sizes { n_base, batches, batch_n, window, refit_iters } = *sizes;
+    let mut rng = Xoshiro256pp::seed_from_u64(4242);
+    let total = n_base + batches * batch_n;
+    let ds = GmmSpec::default_with(total, D, K).generate(&mut rng);
+
+    // Base fit on the initial window, exported through a checkpoint.
+    let train = Data::new(n_base, D, ds.points.values[..n_base * D].to_vec());
+    let ckpt = std::env::temp_dir()
+        .join(format!("dpmm_bench_stream_{}_{}.ckpt", sc.name, std::process::id()));
+    let mut params = DpmmParams::gaussian_default(D);
+    params.iterations = refit_iters;
+    params.seed = 7;
+    params.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+    params.checkpoint_every = params.iterations;
+    let t0 = Instant::now();
+    DpmmFit::new(params.clone()).fit(&train).expect("base fit");
+    let base_secs = t0.elapsed().as_secs_f64();
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).expect("snapshot");
+    std::fs::remove_file(&ckpt).ok();
+
+    // The evaluation slice: the final batch (most recent data).
+    let eval_b = batches - 1;
+    let eval_lo = (n_base + eval_b * batch_n) * D;
+    let eval_hi = eval_lo + batch_n * D;
+    let eval_pts = drifted(&ds.points.values[eval_lo..eval_hi], eval_b, sc.drift_per_batch);
+    let eval_truth =
+        &ds.labels[n_base + eval_b * batch_n..n_base + (eval_b + 1) * batch_n];
+
+    // --- incremental: ingest the stream batch by batch -------------------
+    let mut fitter = IncrementalFitter::from_snapshot(
+        &snapshot,
+        StreamConfig {
+            window,
+            sweeps: 2,
+            decay: sc.decay,
+            seed: 9,
+            ..StreamConfig::default()
+        },
+    )
+    .expect("fitter");
+    let t0 = Instant::now();
+    for b in 0..batches {
+        let lo = (n_base + b * batch_n) * D;
+        let batch = drifted(&ds.points.values[lo..lo + batch_n * D], b, sc.drift_per_batch);
+        fitter.ingest(&batch).expect("ingest");
+    }
+    let ingest_secs = t0.elapsed().as_secs_f64();
+    let nmi_inc = snapshot_nmi(&fitter.snapshot().expect("snapshot"), &eval_pts, eval_truth);
+
+    // --- full refit over everything seen so far --------------------------
+    let mut all = ds.points.values[..n_base * D].to_vec();
+    for b in 0..batches {
+        let lo = (n_base + b * batch_n) * D;
+        all.extend(drifted(&ds.points.values[lo..lo + batch_n * D], b, sc.drift_per_batch));
+    }
+    let all_data = Data::new(n_base + batches * batch_n, D, all);
+    let refit_ckpt = std::env::temp_dir()
+        .join(format!("dpmm_bench_stream_refit_{}_{}.ckpt", sc.name, std::process::id()));
+    let mut refit_params = params;
+    refit_params.checkpoint_path = Some(refit_ckpt.to_string_lossy().into_owned());
+    let t0 = Instant::now();
+    DpmmFit::new(refit_params).fit(&all_data).expect("refit");
+    let refit_secs = t0.elapsed().as_secs_f64();
+    let refit_snapshot = ModelSnapshot::from_checkpoint_file(&refit_ckpt).expect("snapshot");
+    std::fs::remove_file(&refit_ckpt).ok();
+    let nmi_refit = snapshot_nmi(&refit_snapshot, &eval_pts, eval_truth);
+
+    let speedup = refit_secs / ingest_secs.max(1e-9);
+    let matched = (nmi_inc - nmi_refit).abs() <= 0.02 || nmi_inc >= nmi_refit;
+    println!(
+        "[{}] base fit {base_secs:.2}s | incremental {batches}×{batch_n}: {ingest_secs:.2}s \
+         (NMI {nmi_inc:.3}) | full refit: {refit_secs:.2}s (NMI {nmi_refit:.3}) | \
+         speedup {speedup:.2}x matched={matched} (target ≥3x on drift)",
+        sc.name
+    );
+    Json::obj(vec![
+        ("scenario", sc.name.into()),
+        ("drift_per_batch", sc.drift_per_batch.into()),
+        ("decay", sc.decay.into()),
+        ("batches", batches.into()),
+        ("batch_n", batch_n.into()),
+        ("window", window.into()),
+        ("base_fit_secs", base_secs.into()),
+        ("incremental_secs", ingest_secs.into()),
+        ("refit_secs", refit_secs.into()),
+        ("nmi_incremental", nmi_inc.into()),
+        ("nmi_refit", nmi_refit.into()),
+        ("speedup_incremental_vs_refit", speedup.into()),
+        ("nmi_matched_within_0p02", Json::Bool(matched)),
+    ])
+}
+
+fn main() {
+    let sizes = sizes();
+    println!(
+        "stream ingest bench: d={D} K={K} base={} stream={}×{} ({} threads)\n",
+        sizes.n_base,
+        sizes.batches,
+        sizes.batch_n,
+        dpmm::util::threadpool::default_threads()
+    );
+    let scenarios = [
+        Scenario { name: "stationary", drift_per_batch: 0.0, decay: 1.0 },
+        Scenario { name: "drift", drift_per_batch: 0.3, decay: 0.9 },
+    ];
+    let results: Vec<Json> = scenarios.iter().map(|sc| run_scenario(sc, &sizes)).collect();
+    let doc = Json::obj(vec![
+        ("bench", "stream_ingest".into()),
+        ("d", D.into()),
+        ("k", K.into()),
+        ("n_base", sizes.n_base.into()),
+        ("scenarios", Json::Arr(results)),
+    ]);
+    let out =
+        std::env::var("BENCH_STREAM_OUT").unwrap_or_else(|_| "BENCH_stream.json".into());
+    match std::fs::write(&out, json::to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

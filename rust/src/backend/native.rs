@@ -5,8 +5,8 @@
 //! suff-stats-only design.
 
 use super::shard::{
-    shard_apply_merges, shard_apply_splits, shard_remap, shard_step_scalar, shard_step_tiled,
-    AssignKernel, Shard, DEFAULT_TILE,
+    map_shards_mut, shard_apply_merges, shard_apply_splits, shard_remap, shard_step_scalar,
+    shard_step_tiled, AssignKernel, Shard, DEFAULT_TILE,
 };
 use super::{Backend, StatsBundle};
 use crate::datagen::Data;
@@ -93,35 +93,15 @@ impl NativeBackend {
         self.shards.len()
     }
 
-    /// Map `f` over every shard from a scoped worker pool and collect the
-    /// results in shard order. Shards are divided into contiguous
-    /// `chunks_mut` slices, so each thread owns an exclusive `&mut [Shard]`
-    /// — no raw-pointer cells, plain safe borrows. Serves both the step
-    /// pass (per-shard [`StatsBundle`]s) and the label-rewrite passes.
+    /// Map `f` over every shard via the shared scoped pool
+    /// ([`map_shards_mut`]). Serves both the step pass (per-shard
+    /// [`StatsBundle`]s) and the label-rewrite passes.
     fn map_shards_mut<R, F>(&mut self, f: F) -> Vec<R>
     where
         R: Send,
         F: Fn(&mut Shard) -> R + Sync,
     {
-        if self.shards.is_empty() {
-            return Vec::new();
-        }
-        let threads = self.threads.clamp(1, self.shards.len());
-        let chunk = self.shards.len().div_ceil(threads);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .shards
-                .chunks_mut(chunk)
-                .map(|shards| {
-                    let f = &f;
-                    scope.spawn(move || shards.iter_mut().map(f).collect::<Vec<R>>())
-                })
-                .collect();
-            handles
-                .into_iter()
-                .flat_map(|h| h.join().expect("shard thread panicked"))
-                .collect()
-        })
+        map_shards_mut(&mut self.shards, self.threads, f)
     }
 }
 

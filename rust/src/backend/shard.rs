@@ -99,6 +99,37 @@ impl Shard {
     }
 }
 
+/// Map `f` over every shard from a scoped worker pool and collect the
+/// results in shard order. Shards are divided into contiguous `chunks_mut`
+/// slices, so each thread owns an exclusive `&mut [Shard]` — no raw-pointer
+/// cells, plain safe borrows. Shared by the native backend's per-iteration
+/// passes and the streaming fitter's window sweeps (one definition of the
+/// chunking math, not two drifting copies).
+pub fn map_shards_mut<R, F>(shards: &mut [Shard], threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(&mut Shard) -> R + Sync,
+{
+    if shards.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, shards.len());
+    let chunk = shards.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .chunks_mut(chunk)
+            .map(|group| {
+                let f = &f;
+                scope.spawn(move || group.iter_mut().map(f).collect::<Vec<R>>())
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("shard thread panicked"))
+            .collect()
+    })
+}
+
 /// Tile-granular scratch reused across tiles (no per-tile allocation in the
 /// hot loop; see EXPERIMENTS.md §Perf).
 struct TileScratch {

@@ -155,6 +155,27 @@ mod tests {
     }
 
     #[test]
+    fn stream_subcommand_surface_parses() {
+        // The `dpmm stream` option set is plain --key=value pairs; pin the
+        // parse here so the surface can't silently regress.
+        let a = parse(&[
+            "stream",
+            "--checkpoint=fit.ckpt",
+            "--addr=0.0.0.0:7979",
+            "--window=4096",
+            "--sweeps=2",
+            "--decay=0.95",
+            "--alpha=10",
+            "--seed=3",
+        ]);
+        assert_eq!(a.subcommand.as_deref(), Some("stream"));
+        assert_eq!(a.get("checkpoint"), Some("fit.ckpt"));
+        assert_eq!(a.get_usize("window").unwrap(), Some(4096));
+        assert_eq!(a.get_f64("decay").unwrap(), Some(0.95));
+        assert_eq!(a.get_u64("seed").unwrap(), Some(3));
+    }
+
+    #[test]
     fn require_reports_key() {
         let a = parse(&[]);
         let e = a.require("params_path").unwrap_err().to_string();

@@ -99,6 +99,57 @@ impl ServeSettings {
     }
 }
 
+/// Settings for the streaming ingestion path (`dpmm stream`); maps onto
+/// [`crate::stream::StreamConfig`] plus the serving knobs it rides with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSettings {
+    /// Sliding-window capacity in points.
+    pub window: usize,
+    /// Restricted-Gibbs sweeps over the window per ingested batch.
+    pub sweeps: usize,
+    /// Exponential forgetting factor per ingest (1.0 = off).
+    pub decay: f64,
+    /// DP concentration α for the restricted sweeps.
+    pub alpha: f64,
+    /// RNG seed for the sweep streams.
+    pub seed: u64,
+}
+
+impl Default for StreamSettings {
+    fn default() -> Self {
+        Self { window: 32 * 1024, sweeps: 2, decay: 1.0, alpha: 10.0, seed: 0 }
+    }
+}
+
+impl StreamSettings {
+    /// Parse `--window / --sweeps / --decay / --alpha / --seed` overrides.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut s = StreamSettings::default();
+        if let Some(w) = args.get_usize("window")? {
+            s.window = w.max(1);
+        }
+        if let Some(r) = args.get_usize("sweeps")? {
+            s.sweeps = r;
+        }
+        if let Some(d) = args.get_f64("decay")? {
+            if !(d > 0.0 && d <= 1.0) {
+                bail!("--decay must be in (0, 1], got {d}");
+            }
+            s.decay = d;
+        }
+        if let Some(a) = args.get_f64("alpha")? {
+            if a <= 0.0 {
+                bail!("--alpha must be positive, got {a}");
+            }
+            s.alpha = a;
+        }
+        if let Some(seed) = args.get_u64("seed")? {
+            s.seed = seed;
+        }
+        Ok(s)
+    }
+}
+
 /// Everything a fit needs (the paper's JSON `global_params`).
 #[derive(Debug, Clone)]
 pub struct DpmmParams {
@@ -420,6 +471,31 @@ mod tests {
         )
         .unwrap();
         assert!(ServeSettings::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn stream_settings_from_args() {
+        let args = Args::parse(
+            ["stream", "--window=4096", "--sweeps=3", "--decay=0.97", "--alpha=5"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        let s = StreamSettings::from_args(&args).unwrap();
+        assert_eq!(s.window, 4096);
+        assert_eq!(s.sweeps, 3);
+        assert_eq!(s.decay, 0.97);
+        assert_eq!(s.alpha, 5.0);
+        assert_eq!(s.seed, StreamSettings::default().seed);
+        for bad in ["--decay=0", "--decay=1.5", "--alpha=-2"] {
+            let args = Args::parse(
+                ["stream", bad].iter().map(|s| s.to_string()),
+                &[],
+            )
+            .unwrap();
+            assert!(StreamSettings::from_args(&args).is_err(), "{bad}");
+        }
     }
 
     #[test]

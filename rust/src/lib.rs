@@ -49,6 +49,7 @@ pub mod runtime;
 pub mod sampler;
 pub mod serve;
 pub mod stats;
+pub mod stream;
 pub mod util;
 
 /// Convenience re-exports for the common fitting workflow.

@@ -12,6 +12,9 @@
 //! dpmm worker --listen=0.0.0.0:7878
 //! dpmm serve --checkpoint=fit.ckpt|--snapshot=model.snap --addr=0.0.0.0:7979
 //!          [--threads=0] [--tile=128] [--batch_points=65536] [--export_snapshot=model.snap]
+//! dpmm stream --checkpoint=fit.ckpt|--snapshot=model.snap --addr=0.0.0.0:7979
+//!          [--window=32768] [--sweeps=2] [--decay=1.0] [--alpha=10] [--seed=0]
+//!          [--threads=0] [--tile=128] [--batch_points=65536]
 //! dpmm predict --data=points.npy (--addr=host:7979 | --checkpoint=fit.ckpt | --snapshot=model.snap)
 //!          [--probs] [--labels_out=labels.npy] [--result_path=result.json]
 //! dpmm snapshot --checkpoint=fit.ckpt --out=model.snap
@@ -21,12 +24,13 @@
 use anyhow::{anyhow, bail, Context, Result};
 use dpmm::backend::distributed::worker;
 use dpmm::cli::Args;
-use dpmm::config::{BackendChoice, DpmmParams, ServeSettings};
+use dpmm::config::{BackendChoice, DpmmParams, ServeSettings, StreamSettings};
 use dpmm::coordinator::DpmmFit;
 use dpmm::datagen::{self, Data, Dataset, GmmSpec, MultinomialSpec};
 use dpmm::metrics;
 use dpmm::rng::Xoshiro256pp;
 use dpmm::serve::{self, DpmmClient, EngineConfig, ModelSnapshot, Prediction, ScoringEngine};
+use dpmm::stream::{IncrementalFitter, StreamConfig};
 use dpmm::util::{json, npy};
 
 const FLAGS: &[&str] = &["verbose", "help", "version", "probs"];
@@ -52,11 +56,12 @@ fn main() {
         Some("generate") => cmd_generate(&args),
         Some("worker") => cmd_worker(&args),
         Some("serve") => cmd_serve(&args),
+        Some("stream") => cmd_stream(&args),
         Some("predict") => cmd_predict(&args),
         Some("snapshot") => cmd_snapshot(&args),
         Some("info") => cmd_info(&args),
         Some(other) => Err(anyhow!(
-            "unknown subcommand '{other}' (fit|generate|worker|serve|predict|snapshot|info)"
+            "unknown subcommand '{other}' (fit|generate|worker|serve|stream|predict|snapshot|info)"
         )),
         None => unreachable!(),
     };
@@ -75,6 +80,7 @@ fn print_help() {
          \x20 generate  create synthetic / simulated-real datasets\n\
          \x20 worker    run a distributed worker (leader connects over TCP)\n\
          \x20 serve     serve posterior-predictive queries from a fitted model\n\
+         \x20 stream    serve + streaming ingest with live snapshot hot-swap\n\
          \x20 predict   score new points (against a server or a local model)\n\
          \x20 snapshot  export an immutable model snapshot from a checkpoint\n\
          \x20 info      show PJRT platform + AOT artifact manifest\n\
@@ -273,6 +279,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     serve::serve_blocking(
         engine,
+        &settings.addr,
+        serve::ServeConfig { max_batch_points: settings.max_batch_points },
+    )
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    let settings = ServeSettings::from_args(args)?;
+    let stream_settings = StreamSettings::from_args(args)?;
+    let snapshot = load_snapshot_arg(args)?;
+    let fitter = IncrementalFitter::from_snapshot(
+        &snapshot,
+        StreamConfig {
+            window: stream_settings.window,
+            sweeps: stream_settings.sweeps,
+            decay: stream_settings.decay,
+            alpha: stream_settings.alpha,
+            seed: stream_settings.seed,
+            threads: settings.threads,
+            tile: settings.tile,
+            ..StreamConfig::default()
+        },
+    )?;
+    eprintln!(
+        "streaming model: K={} d={} family={} (from N={}; window={} sweeps={} decay={})",
+        snapshot.k(),
+        snapshot.dim(),
+        snapshot.prior.family(),
+        snapshot.n_total,
+        stream_settings.window,
+        stream_settings.sweeps,
+        stream_settings.decay,
+    );
+    let engine = ScoringEngine::new(
+        &snapshot,
+        EngineConfig { threads: settings.threads, tile: settings.tile },
+    )?;
+    serve::serve_blocking_streaming(
+        engine,
+        fitter,
         &settings.addr,
         serve::ServeConfig { max_batch_points: settings.max_batch_points },
     )

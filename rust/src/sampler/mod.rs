@@ -252,6 +252,40 @@ pub struct StepPlan {
 }
 
 impl StepPlan {
+    /// Deterministic MAP plan: posterior-**mean** parameters and
+    /// count-proportional log-weights, no RNG anywhere — the same frozen
+    /// scores the serving engine argmaxes ([`crate::serve`]). The streaming
+    /// fitter uses this to seed labels of freshly ingested points before its
+    /// restricted sweeps: seeding must be identical across thread counts and
+    /// assignment kernels, which rules out sampled parameters.
+    pub fn map_from_state(state: &DpmmState) -> StepPlan {
+        let prior = &state.prior;
+        let total: f64 = state.counts().iter().sum();
+        let total = if total > 0.0 { total } else { 1.0 };
+        let clusters = state
+            .clusters
+            .iter()
+            .map(|c| {
+                let lw = (c.count().max(1e-9) / total).ln();
+                KernelDesc::new(&prior.mean_params(&c.stats), lw)
+            })
+            .collect::<Vec<_>>();
+        let sub = state
+            .clusters
+            .iter()
+            .map(|c| {
+                // Smoothed sub-shares so an empty side still gets a finite
+                // (losing) score rather than -inf.
+                let n = c.count().max(1e-9);
+                [LEFT, RIGHT].map(|h| {
+                    let lw = ((c.sub_count(h) + 0.5) / (n + 1.0)).ln();
+                    KernelDesc::new(&prior.mean_params(&c.sub_stats[h]), lw)
+                })
+            })
+            .collect();
+        StepPlan { d: prior.dim(), clusters, sub }
+    }
+
     pub fn new(params: &StepParams) -> Self {
         assert!(params.k() > 0, "step plan needs at least one cluster");
         let d = params.params[0].dim();

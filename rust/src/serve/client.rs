@@ -27,6 +27,25 @@ pub struct ServeStats {
     pub uptime_secs: f64,
     pub points_per_sec: f64,
     pub mean_batch_points: f64,
+    /// Live snapshot generation (bumps every time newly ingested data is
+    /// published; 1 and static on non-streaming servers).
+    pub generation: u64,
+    /// Points folded into the model over the server's lifetime.
+    pub ingested: u64,
+    /// Ingest lag: points queued but not yet folded into a live snapshot.
+    pub ingest_pending: u64,
+}
+
+/// Outcome of one accepted ingest mini-batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestReceipt {
+    /// Points folded from this batch.
+    pub accepted: u64,
+    /// Snapshot generation now live (predictions at or after this
+    /// generation see the batch).
+    pub generation: u64,
+    /// Points in the server-side resweepable window after the fold.
+    pub window: u64,
 }
 
 /// One prediction reply (vectors have one entry per point; `log_probs` is
@@ -114,6 +133,9 @@ impl DpmmClient {
                 uptime_secs,
                 points_per_sec,
                 mean_batch_points,
+                generation,
+                ingested,
+                ingest_pending,
             } => Ok(ServeStats {
                 requests,
                 points,
@@ -121,8 +143,28 @@ impl DpmmClient {
                 uptime_secs,
                 points_per_sec,
                 mean_batch_points,
+                generation,
+                ingested,
+                ingest_pending,
             }),
             other => Err(anyhow!("unexpected stats reply {other:?}")),
+        }
+    }
+
+    /// Stream `n = points.len() / d` row-major points into the served
+    /// model (streaming servers only). Blocks until the batch is folded
+    /// and the re-planned snapshot is live.
+    pub fn ingest(&mut self, points: &[f64], d: usize) -> Result<IngestReceipt> {
+        if d == 0 || points.len() % d != 0 {
+            bail!("point buffer length {} is not a multiple of d={d}", points.len());
+        }
+        let n = points.len() / d;
+        let msg = ServeMessage::Ingest { n: n as u32, d: d as u32, x: points.to_vec() };
+        match self.request(&msg)? {
+            ServeMessage::IngestReply { accepted, generation, window } => {
+                Ok(IngestReceipt { accepted, generation, window })
+            }
+            other => Err(anyhow!("unexpected ingest reply {other:?}")),
         }
     }
 

@@ -131,6 +131,12 @@ impl ScoringEngine {
         &self.plan
     }
 
+    /// The tuning knobs this engine was built with — lets the hot-swap path
+    /// rebuild a successor engine identically configured after an ingest.
+    pub fn config(&self) -> EngineConfig {
+        EngineConfig { threads: self.threads, tile: self.tile }
+    }
+
     /// Score a batch of row-major points (`points.len()` must be a multiple
     /// of the model dimension). Splits the batch over the thread pool; each
     /// chunk runs the tiled kernel. Output order matches input order and is

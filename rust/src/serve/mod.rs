@@ -29,6 +29,32 @@
 //! `--snapshot` for engine-direct scoring without a server), and
 //! `cargo bench --bench serve_throughput` (writes `BENCH_serve.json`).
 //! See EXPERIMENTS.md §Serving for design rationale and measurements.
+//!
+//! # Streaming ingest and snapshot hot-swap
+//!
+//! A server started as `dpmm stream` pairs the scoring engine with a
+//! [`crate::stream::IncrementalFitter`] and accepts the `ingest` verb.
+//! The live engine sits behind an `RwLock<Arc<ScoringEngine>>`; the
+//! micro-batcher — the only writer — folds queued mini-batches into the
+//! fitter **between fused scoring passes**, re-plans a fresh
+//! [`ModelSnapshot`], and atomically publishes the successor engine
+//! (ArcSwap-style pointer replace). Consistency guarantees, in order of
+//! what a client can rely on:
+//!
+//! 1. **Pass-level atomicity** — every predict request is scored entirely
+//!    under one snapshot generation; a request never sees a half-updated
+//!    plan, and its reply's `k` is the K of the snapshot that actually
+//!    scored it.
+//! 2. **Read-your-ingest** — an `IngestReply { generation }` is sent only
+//!    after the re-planned snapshot is live, so any prediction answered at
+//!    or after that generation reflects the ingested batch.
+//! 3. **Monotonic freshness** — `/stats` reports the live snapshot
+//!    generation plus ingest lag (points accepted but not yet folded);
+//!    generation never decreases, and lag returning to zero means the
+//!    model has caught up with the stream.
+//! 4. **Failure isolation** — a rejected batch (shape/NaN/ingest error)
+//!    leaves the previous snapshot serving; corruption on the wire is a
+//!    typed error reply, never a dead batcher.
 
 pub mod client;
 pub mod engine;
@@ -36,7 +62,9 @@ pub mod server;
 pub mod snapshot;
 pub mod wire;
 
-pub use client::{DpmmClient, Prediction, ServeStats, ServerInfo};
+pub use client::{DpmmClient, IngestReceipt, Prediction, ServeStats, ServerInfo};
 pub use engine::{EngineConfig, ScoreBatch, ScoringEngine};
-pub use server::{serve_blocking, spawn, ServeConfig, ServerHandle};
+pub use server::{
+    serve_blocking, serve_blocking_streaming, spawn, spawn_streaming, ServeConfig, ServerHandle,
+};
 pub use snapshot::{FrozenPlan, ModelSnapshot, PredictiveDesc, SnapshotCluster};

@@ -1,4 +1,4 @@
-//! Micro-batching TCP prediction server.
+//! Micro-batching TCP prediction server with live snapshot hot-swap.
 //!
 //! Request path: a connection handler reads one `Predict` frame, enqueues
 //! the points on a shared batch queue, and blocks on a private reply
@@ -9,21 +9,43 @@
 //! the engine is busy, so batch size adapts to concurrency — the classic
 //! dynamic-batching throughput/latency trade with no artificial linger.
 //!
+//! # Streaming ingest and hot-swap
+//!
+//! A server started with a [`crate::stream::IncrementalFitter`] (the
+//! `dpmm stream` subcommand) additionally accepts `Ingest` frames. Ingest
+//! handlers enqueue mini-batches on a second queue; **only the batcher**
+//! applies them, *between* fused scoring passes: it folds each batch into
+//! the fitter, re-plans a fresh [`super::snapshot::ModelSnapshot`] into a
+//! new [`ScoringEngine`], and atomically publishes it (ArcSwap-style: the
+//! live engine lives behind an `RwLock<Arc<_>>`; a fused pass clones the
+//! `Arc` once and uses that plan for its entire pass). Consistency
+//! guarantees:
+//!
+//! * a predict request is scored **entirely** under one snapshot
+//!   generation — never a half-updated plan;
+//! * ingest replies are sent only after the re-planned snapshot is live,
+//!   so an `IngestReply { generation }` means "predictions at or after
+//!   this generation see your data";
+//! * `/stats` reports the live generation plus ingest lag (points queued
+//!   but not yet folded), so clients can monitor freshness.
+//!
 //! Shutdown is cooperative: a `Shutdown` message (or
 //! [`ServerHandle::stop`]) raises a flag; connection readers poll it every
 //! ~200 ms via their read timeout, the batcher drains and exits, and the
 //! accept loop is woken by a loopback connection. In-flight requests
-//! complete; queued jobs whose batcher died get an error reply, not a hang.
+//! complete; queued jobs (predict *and* ingest) whose batcher died get an
+//! error reply, not a hang.
 
-use super::engine::{ScoreBatch, ScoringEngine};
+use super::engine::{EngineConfig, ScoreBatch, ScoringEngine};
 use super::wire::{write_serve, ServeMessage, FLAG_LOG_PROBS};
 use crate::backend::distributed::wire::{configure_stream, MAX_FRAME};
+use crate::stream::IncrementalFitter;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Server tuning knobs.
@@ -45,11 +67,22 @@ struct Counters {
     requests: AtomicU64,
     points: AtomicU64,
     batches: AtomicU64,
+    /// Live snapshot generation (1 = the boot snapshot; +1 every time a
+    /// drained group of folded ingest batches is published).
+    generation: AtomicU64,
+    /// Points folded into the model over the server's lifetime.
+    ingested: AtomicU64,
+    /// Points accepted onto the ingest queue but not yet folded.
+    ingest_pending: AtomicU64,
     start: Instant,
 }
 
 impl Counters {
-    fn stats_reply(&self) -> ServeMessage {
+    /// `generation` is passed in by the caller, read under the engine read
+    /// lock — the publisher bumps it while holding the write lock, so the
+    /// reported generation always matches the engine a concurrent predict
+    /// would score under.
+    fn stats_reply(&self, generation: u64) -> ServeMessage {
         let points = self.points.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let uptime = self.start.elapsed().as_secs_f64().max(1e-9);
@@ -60,16 +93,35 @@ impl Counters {
             uptime_secs: uptime,
             points_per_sec: points as f64 / uptime,
             mean_batch_points: if batches > 0 { points as f64 / batches as f64 } else { 0.0 },
+            generation,
+            ingested: self.ingested.load(Ordering::Relaxed),
+            ingest_pending: self.ingest_pending.load(Ordering::Relaxed),
         }
     }
 }
 
-/// One queued prediction request.
+/// One queued prediction request. The reply carries the K of the snapshot
+/// the batch was actually scored under (hot-swap may retire the K the
+/// handler saw at enqueue time).
 struct Job {
     x: Vec<f64>,
     n: usize,
     want_probs: bool,
-    reply: mpsc::Sender<Result<ScoreBatch, String>>,
+    reply: mpsc::Sender<Result<(ScoreBatch, u32), String>>,
+}
+
+/// One queued ingest mini-batch.
+struct IngestJob {
+    x: Vec<f64>,
+    n: usize,
+    reply: mpsc::Sender<Result<IngestOutcome, String>>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct IngestOutcome {
+    accepted: u64,
+    generation: u64,
+    window: u64,
 }
 
 /// The shared request queue (Mutex + Condvar; the batcher is the only
@@ -79,16 +131,37 @@ struct BatchQueue {
     ready: Condvar,
 }
 
+/// Streaming state: the incremental fitter plus its pending mini-batches.
+/// Both are touched only by the batcher thread (handlers just enqueue), so
+/// fitter application is serialized by construction.
+struct StreamShared {
+    fitter: Mutex<IncrementalFitter>,
+    jobs: Mutex<VecDeque<IngestJob>>,
+}
+
 struct Shared {
-    engine: ScoringEngine,
+    /// The live scoring engine. Swapped atomically (pointer replace under a
+    /// short write lock) by the batcher after each applied ingest; readers
+    /// clone the `Arc` once per operation and keep a consistent plan for
+    /// its whole duration.
+    engine: RwLock<Arc<ScoringEngine>>,
+    /// Knobs for rebuilding successor engines after ingests.
+    engine_config: EngineConfig,
     queue: BatchQueue,
+    stream: Option<StreamShared>,
     counters: Counters,
     shutdown: AtomicBool,
     config: ServeConfig,
 }
 
+impl Shared {
+    fn engine(&self) -> Arc<ScoringEngine> {
+        Arc::clone(&self.engine.read().unwrap())
+    }
+}
+
 /// Handle to a running server (tests and embedding; the CLI uses
-/// [`serve_blocking`]).
+/// [`serve_blocking`] / [`serve_blocking_streaming`]).
 pub struct ServerHandle {
     addr: SocketAddr,
     shared: Arc<Shared>,
@@ -118,18 +191,56 @@ impl ServerHandle {
     }
 }
 
-/// Start a server on `addr` (use port 0 for an ephemeral port) and return
-/// immediately with a handle.
+/// Start a prediction-only server on `addr` (use port 0 for an ephemeral
+/// port) and return immediately with a handle.
 pub fn spawn(engine: ScoringEngine, addr: &str, config: ServeConfig) -> Result<ServerHandle> {
+    spawn_inner(engine, None, addr, config)
+}
+
+/// Start a **streaming** server: predictions plus the `ingest` verb, with
+/// snapshot hot-swap between fused passes (see the module docs).
+pub fn spawn_streaming(
+    engine: ScoringEngine,
+    fitter: IncrementalFitter,
+    addr: &str,
+    config: ServeConfig,
+) -> Result<ServerHandle> {
+    spawn_inner(engine, Some(fitter), addr, config)
+}
+
+fn spawn_inner(
+    engine: ScoringEngine,
+    fitter: Option<IncrementalFitter>,
+    addr: &str,
+    config: ServeConfig,
+) -> Result<ServerHandle> {
+    if let Some(f) = &fitter {
+        if f.dim() != engine.dim() {
+            bail!(
+                "stream fitter dimension {} != engine dimension {}",
+                f.dim(),
+                engine.dim()
+            );
+        }
+    }
     let listener = TcpListener::bind(addr).with_context(|| format!("serve bind {addr}"))?;
     let bound = listener.local_addr()?;
+    let engine_config = engine.config();
     let shared = Arc::new(Shared {
-        engine,
+        engine: RwLock::new(Arc::new(engine)),
+        engine_config,
         queue: BatchQueue { jobs: Mutex::new(VecDeque::new()), ready: Condvar::new() },
+        stream: fitter.map(|f| StreamShared {
+            fitter: Mutex::new(f),
+            jobs: Mutex::new(VecDeque::new()),
+        }),
         counters: Counters {
             requests: AtomicU64::new(0),
             points: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            generation: AtomicU64::new(1),
+            ingested: AtomicU64::new(0),
+            ingest_pending: AtomicU64::new(0),
             start: Instant::now(),
         },
         shutdown: AtomicBool::new(false),
@@ -146,16 +257,34 @@ pub fn spawn(engine: ScoringEngine, addr: &str, config: ServeConfig) -> Result<S
     Ok(ServerHandle { addr: bound, shared, accept: Some(accept), batcher: Some(batcher) })
 }
 
-/// Start a server and block until it shuts down (the CLI entrypoint).
+/// Start a prediction-only server and block until it shuts down.
 pub fn serve_blocking(engine: ScoringEngine, addr: &str, config: ServeConfig) -> Result<()> {
-    let mut handle = spawn(engine, addr, config)?;
-    eprintln!(
-        "dpmm serve listening on {} (K={}, d={}, {})",
-        handle.addr(),
-        handle.shared.engine.k(),
-        handle.shared.engine.dim(),
-        handle.shared.engine.family(),
-    );
+    block_on(spawn(engine, addr, config)?)
+}
+
+/// Start a streaming server and block until it shuts down (the
+/// `dpmm stream` entrypoint).
+pub fn serve_blocking_streaming(
+    engine: ScoringEngine,
+    fitter: IncrementalFitter,
+    addr: &str,
+    config: ServeConfig,
+) -> Result<()> {
+    block_on(spawn_streaming(engine, fitter, addr, config)?)
+}
+
+fn block_on(mut handle: ServerHandle) -> Result<()> {
+    {
+        let engine = handle.shared.engine();
+        eprintln!(
+            "dpmm {} listening on {} (K={}, d={}, {})",
+            if handle.shared.stream.is_some() { "stream" } else { "serve" },
+            handle.addr(),
+            engine.k(),
+            engine.dim(),
+            engine.family(),
+        );
+    }
     // The accept thread only exits on shutdown; park this thread on it,
     // then let stop() reap the batcher.
     if let Some(h) = handle.accept.take() {
@@ -296,13 +425,25 @@ fn handle_message(
         ServeMessage::Predict { flags, n, d, x } => {
             Some(predict_reply(shared, flags, n as usize, d as usize, x))
         }
-        ServeMessage::Info => Some(ServeMessage::InfoReply {
-            d: shared.engine.dim() as u32,
-            k: shared.engine.k() as u32,
-            family: if shared.engine.family() == "gaussian" { 0 } else { 1 },
-            n_total: shared.engine.n_total(),
-        }),
-        ServeMessage::Stats => Some(shared.counters.stats_reply()),
+        ServeMessage::Ingest { n, d, x } => {
+            Some(ingest_reply(shared, n as usize, d as usize, x))
+        }
+        ServeMessage::Info => {
+            let engine = shared.engine();
+            Some(ServeMessage::InfoReply {
+                d: engine.dim() as u32,
+                k: engine.k() as u32,
+                family: if engine.family() == "gaussian" { 0 } else { 1 },
+                n_total: engine.n_total(),
+            })
+        }
+        ServeMessage::Stats => {
+            let generation = {
+                let _live = shared.engine.read().unwrap();
+                shared.counters.generation.load(Ordering::Relaxed)
+            };
+            Some(shared.counters.stats_reply(generation))
+        }
         ServeMessage::Shutdown => {
             write_serve(stream, &ServeMessage::Ack)?;
             shared.shutdown.store(true, Ordering::SeqCst);
@@ -318,10 +459,11 @@ fn handle_message(
 }
 
 fn predict_reply(shared: &Shared, flags: u8, n: usize, d: usize, x: Vec<f64>) -> ServeMessage {
-    if d != shared.engine.dim() {
+    let engine = shared.engine();
+    if d != engine.dim() {
         return ServeMessage::Error(format!(
             "dimension mismatch: request d={d}, model d={}",
-            shared.engine.dim()
+            engine.dim()
         ));
     }
     if x.len() != n * d {
@@ -337,7 +479,7 @@ fn predict_reply(shared: &Shared, flags: u8, n: usize, d: usize, x: Vec<f64>) ->
     // desynchronize the stream at write_frame.
     let reply_bytes = n
         .saturating_mul(4 + 8 + 8)
-        .saturating_add(if want_probs { n.saturating_mul(shared.engine.k() * 8) } else { 0 });
+        .saturating_add(if want_probs { n.saturating_mul(engine.k() * 8) } else { 0 });
     if reply_bytes + 64 > MAX_FRAME {
         return ServeMessage::Error(format!(
             "reply would exceed the {} byte frame cap — reduce the batch size{}",
@@ -361,26 +503,96 @@ fn predict_reply(shared: &Shared, flags: u8, n: usize, d: usize, x: Vec<f64>) ->
     }
     shared.queue.ready.notify_one();
     match rx.recv() {
-        Ok(Ok(batch)) => ServeMessage::Scores {
+        Ok(Ok((batch, k))) => ServeMessage::Scores {
             labels: batch.labels,
             map_score: batch.map_score,
             log_predictive: batch.log_predictive,
             log_probs: if want_probs { batch.log_probs } else { None },
-            k: shared.engine.k() as u32,
+            k,
         },
         Ok(Err(e)) => ServeMessage::Error(format!("scoring failed: {e}")),
         Err(_) => ServeMessage::Error("server shutting down".into()),
     }
 }
 
-/// The single batch consumer: drain → fuse → one engine pass → scatter.
+fn ingest_reply(shared: &Shared, n: usize, d: usize, x: Vec<f64>) -> ServeMessage {
+    let stream = match &shared.stream {
+        Some(s) => s,
+        None => {
+            return ServeMessage::Error(
+                "streaming ingest is disabled on this server (start it with `dpmm stream`)"
+                    .into(),
+            )
+        }
+    };
+    let engine = shared.engine();
+    if d != engine.dim() {
+        return ServeMessage::Error(format!(
+            "dimension mismatch: ingest d={d}, model d={}",
+            engine.dim()
+        ));
+    }
+    if x.len() != n * d {
+        return ServeMessage::Error(format!(
+            "payload size {} != n*d = {}",
+            x.len(),
+            n * d
+        ));
+    }
+    let (tx, rx) = mpsc::channel();
+    {
+        let mut q = stream.jobs.lock().unwrap();
+        // Same guarantee as the predict queue: the batcher clears this
+        // queue under its lock after observing the shutdown flag, so a job
+        // enqueued here is either applied or dropped (→ RecvError below) —
+        // never stranded.
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return ServeMessage::Error("server shutting down".into());
+        }
+        // Counted under the same lock that publishes the job: the batcher
+        // drains under this lock too, so it can never decrement a pending
+        // count that was not yet incremented (which would wrap the u64).
+        shared.counters.ingest_pending.fetch_add(n as u64, Ordering::Relaxed);
+        q.push_back(IngestJob { x, n, reply: tx });
+    }
+    {
+        // The batcher's wait predicate reads the ingest queue while holding
+        // `queue.jobs` (the condvar's mutex). Notifying while holding that
+        // same mutex closes the lost-wakeup window: the batcher is either
+        // before its predicate check (it will see the job) or already
+        // waiting (the notify reaches it) — never in between.
+        let _guard = shared.queue.jobs.lock().unwrap();
+        shared.queue.ready.notify_one();
+    }
+    match rx.recv() {
+        Ok(Ok(out)) => ServeMessage::IngestReply {
+            accepted: out.accepted,
+            generation: out.generation,
+            window: out.window,
+        },
+        Ok(Err(e)) => ServeMessage::Error(format!("ingest failed: {e}")),
+        Err(_) => ServeMessage::Error("server shutting down".into()),
+    }
+}
+
+/// The single batch consumer: apply ingests (hot-swap) → drain → fuse →
+/// one engine pass → scatter.
 fn batcher_loop(shared: &Shared) {
     loop {
-        let jobs = {
+        // Wait for work on either queue.
+        {
             let mut q = shared.queue.jobs.lock().unwrap();
-            while q.is_empty() {
+            loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
+                    drain_all_queues(shared, q);
                     return;
+                }
+                let ingest_waiting = shared
+                    .stream
+                    .as_ref()
+                    .is_some_and(|s| !s.jobs.lock().unwrap().is_empty());
+                if !q.is_empty() || ingest_waiting {
+                    break;
                 }
                 let (guard, _) = shared
                     .queue
@@ -389,8 +601,17 @@ fn batcher_loop(shared: &Shared) {
                     .unwrap();
                 q = guard;
             }
-            // Coalesce everything pending, up to the fused-pass cap (a
-            // single over-cap request still goes through whole).
+        }
+        // Apply pending ingests strictly between fused passes: every swap
+        // happens while no scoring pass is in flight on this thread, and
+        // each subsequent pass captures the new Arc before touching points.
+        if let Some(stream) = &shared.stream {
+            apply_ingests(shared, stream);
+        }
+        // Coalesce everything pending, up to the fused-pass cap (a single
+        // over-cap request still goes through whole).
+        let jobs = {
+            let mut q = shared.queue.jobs.lock().unwrap();
             let mut jobs: Vec<Job> = Vec::new();
             let mut points = 0usize;
             while let Some(job) = q.front() {
@@ -402,28 +623,124 @@ fn batcher_loop(shared: &Shared) {
             }
             jobs
         };
-        shared.counters.batches.fetch_add(1, Ordering::Relaxed);
-        run_fused_batch(shared, jobs);
+        if !jobs.is_empty() {
+            shared.counters.batches.fetch_add(1, Ordering::Relaxed);
+            run_fused_batch(shared, jobs);
+        }
         if shared.shutdown.load(Ordering::SeqCst) {
-            // Fail any stragglers (their handlers get a RecvError → Error
-            // reply) and exit.
-            let mut q = shared.queue.jobs.lock().unwrap();
-            q.clear();
+            let q = shared.queue.jobs.lock().unwrap();
+            drain_all_queues(shared, q);
             return;
         }
     }
 }
 
+/// Fail any stragglers on both queues (their handlers get a RecvError →
+/// error reply) on the way out. Takes the held predict-queue guard so the
+/// clear happens under the same lock the enqueue-side shutdown check uses.
+fn drain_all_queues(
+    shared: &Shared,
+    mut predict_guard: std::sync::MutexGuard<'_, VecDeque<Job>>,
+) {
+    predict_guard.clear();
+    drop(predict_guard);
+    if let Some(stream) = &shared.stream {
+        let mut q = stream.jobs.lock().unwrap();
+        let dropped: u64 = q.iter().map(|j| j.n as u64).sum();
+        q.clear();
+        shared.counters.ingest_pending.fetch_sub(dropped, Ordering::Relaxed);
+    }
+}
+
+/// Fold every queued mini-batch into the fitter, then hot-swap **one**
+/// re-planned engine for the whole drained group (a burst of B queued
+/// batches costs one snapshot re-plan, not B). Every successfully folded
+/// batch is replied with the generation that publishes it; rejected
+/// batches (and all folded batches, if the re-plan itself fails) get
+/// error replies while the previous engine stays live.
+fn apply_ingests(shared: &Shared, stream: &StreamShared) {
+    let jobs: Vec<IngestJob> = {
+        let mut q = stream.jobs.lock().unwrap();
+        q.drain(..).collect()
+    };
+    if jobs.is_empty() {
+        return;
+    }
+    let mut fitter = stream.fitter.lock().unwrap();
+    let folded: Vec<(IngestJob, Result<crate::stream::IngestSummary>)> = jobs
+        .into_iter()
+        .map(|job| {
+            let r = fitter.ingest(&job.x);
+            shared.counters.ingest_pending.fetch_sub(job.n as u64, Ordering::Relaxed);
+            (job, r)
+        })
+        .collect();
+    // Re-plan once for everything that folded *data*; empty batches
+    // (accepted = 0) must not trigger a rebuild or a generation bump —
+    // they reply with the generation already live.
+    let any_data =
+        folded.iter().any(|(_, r)| matches!(r, Ok(s) if s.accepted > 0));
+    let published: Result<u64> = if any_data {
+        fitter.snapshot().and_then(|snapshot| {
+            let engine = ScoringEngine::new(&snapshot, shared.engine_config.clone())?;
+            // Bump the generation while holding the engine write lock so
+            // the (engine, generation) pair becomes visible atomically:
+            // no /stats reader can observe the new engine with the old
+            // generation or vice versa.
+            let mut live = shared.engine.write().unwrap();
+            let generation = shared.counters.generation.fetch_add(1, Ordering::Relaxed) + 1;
+            *live = Arc::new(engine);
+            Ok(generation)
+        })
+    } else {
+        Ok(shared.counters.generation.load(Ordering::Relaxed))
+    };
+    for (job, r) in folded {
+        let outcome = match (&published, r) {
+            (Ok(generation), Ok(summary)) => {
+                shared
+                    .counters
+                    .ingested
+                    .fetch_add(summary.accepted as u64, Ordering::Relaxed);
+                Ok(IngestOutcome {
+                    accepted: summary.accepted as u64,
+                    generation: *generation,
+                    window: summary.window as u64,
+                })
+            }
+            (Err(e), Ok(summary)) => {
+                // The fold DID mutate the model; it will be published with
+                // the next successful re-plan. Count it (stats must track
+                // what is actually in the model) and tell the client not
+                // to retry — a retry would double-ingest the batch.
+                shared
+                    .counters
+                    .ingested
+                    .fetch_add(summary.accepted as u64, Ordering::Relaxed);
+                Err(format!(
+                    "batch was folded but the snapshot re-plan failed (do NOT \
+                     retry — the data will publish with the next successful \
+                     ingest): {e:#}"
+                ))
+            }
+            (_, Err(e)) => Err(format!("{e:#}")),
+        };
+        let _ = job.reply.send(outcome);
+    }
+}
+
 fn run_fused_batch(shared: &Shared, jobs: Vec<Job>) {
+    // One consistent plan for the whole pass (see the module docs).
+    let engine = shared.engine();
     let want_probs = jobs.iter().any(|j| j.want_probs);
     let total: usize = jobs.iter().map(|j| j.x.len()).sum();
     let mut fused = Vec::with_capacity(total);
     for j in &jobs {
         fused.extend_from_slice(&j.x);
     }
-    match shared.engine.score(&fused, want_probs) {
+    match engine.score(&fused, want_probs) {
         Ok(batch) => {
-            let k = shared.engine.k();
+            let k = engine.k();
             let mut start = 0usize;
             for job in jobs {
                 let end = start + job.n;
@@ -437,7 +754,7 @@ fn run_fused_batch(shared: &Shared, jobs: Vec<Job>) {
                         .filter(|_| job.want_probs)
                         .map(|p| p[start * k..end * k].to_vec()),
                 };
-                let _ = job.reply.send(Ok(slice));
+                let _ = job.reply.send(Ok((slice, k as u32)));
                 start = end;
             }
         }
@@ -449,4 +766,3 @@ fn run_fused_batch(shared: &Shared, jobs: Vec<Job>) {
         }
     }
 }
-

@@ -14,7 +14,11 @@ use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
 
 /// Serving-protocol version byte (independent of the fit protocol's).
-pub const SERVE_PROTO_VERSION: u8 = 1;
+/// v2: `StatsReply` grew generation/ingested/ingest_pending and the
+/// `Ingest`/`IngestReply` verbs were added — v1 peers would misparse the
+/// new stats layout as trailing/truncated bytes, so the version byte turns
+/// that into a clear mismatch error instead.
+pub const SERVE_PROTO_VERSION: u8 = 2;
 
 /// Request flag: also return the normalized per-cluster log posterior
 /// membership matrix (`n × K`).
@@ -52,7 +56,23 @@ pub enum ServeMessage {
         uptime_secs: f64,
         points_per_sec: f64,
         mean_batch_points: f64,
+        /// Serving-snapshot generation currently live (bumps every time
+        /// newly ingested data is published — once per drained batch
+        /// group; 1 and static on non-streaming servers).
+        generation: u64,
+        /// Points folded into the model over the server's lifetime.
+        ingested: u64,
+        /// Ingest lag: points accepted onto the queue but not yet folded
+        /// into a live snapshot.
+        ingest_pending: u64,
     },
+    /// Streaming ingest: fold `n` points of dimension `d` (row-major raw
+    /// payload) into the served model. Only `dpmm stream` endpoints accept
+    /// it; plain `serve` replies with a typed Error.
+    Ingest { n: u32, d: u32, x: Vec<f64> },
+    /// Reply to Ingest, sent once the batch is folded and the re-planned
+    /// snapshot is live.
+    IngestReply { accepted: u64, generation: u64, window: u64 },
     /// Graceful server shutdown (server Acks, then stops accepting).
     Shutdown,
     Ack,
@@ -69,6 +89,8 @@ const TAG_STATS_REPLY: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
 const TAG_ACK: u8 = 8;
 const TAG_ERROR: u8 = 9;
+const TAG_INGEST: u8 = 10;
+const TAG_INGEST_REPLY: u8 = 11;
 
 impl ServeMessage {
     pub fn encode(&self) -> Vec<u8> {
@@ -112,6 +134,9 @@ impl ServeMessage {
                 uptime_secs,
                 points_per_sec,
                 mean_batch_points,
+                generation,
+                ingested,
+                ingest_pending,
             } => {
                 e.u8(TAG_STATS_REPLY);
                 e.u64(*requests);
@@ -120,6 +145,21 @@ impl ServeMessage {
                 e.f64(*uptime_secs);
                 e.f64(*points_per_sec);
                 e.f64(*mean_batch_points);
+                e.u64(*generation);
+                e.u64(*ingested);
+                e.u64(*ingest_pending);
+            }
+            ServeMessage::Ingest { n, d, x } => {
+                e.u8(TAG_INGEST);
+                e.u32(*n);
+                e.u32(*d);
+                e.f64s_raw(x);
+            }
+            ServeMessage::IngestReply { accepted, generation, window } => {
+                e.u8(TAG_INGEST_REPLY);
+                e.u64(*accepted);
+                e.u64(*generation);
+                e.u64(*window);
             }
             ServeMessage::Shutdown => e.u8(TAG_SHUTDOWN),
             ServeMessage::Ack => e.u8(TAG_ACK),
@@ -187,6 +227,26 @@ impl ServeMessage {
                 uptime_secs: d.f64()?,
                 points_per_sec: d.f64()?,
                 mean_batch_points: d.f64()?,
+                generation: d.u64()?,
+                ingested: d.u64()?,
+                ingest_pending: d.u64()?,
+            },
+            TAG_INGEST => {
+                let n = d.u32()?;
+                let dim = d.u32()?;
+                let count = (n as usize)
+                    .checked_mul(dim as usize)
+                    .ok_or_else(|| anyhow!("ingest shape overflow"))?;
+                if n as usize > MAX_PREDICT_POINTS {
+                    bail!("ingest batch too large: {n} points");
+                }
+                let x = d.f64s_raw(count)?;
+                ServeMessage::Ingest { n, d: dim, x }
+            }
+            TAG_INGEST_REPLY => ServeMessage::IngestReply {
+                accepted: d.u64()?,
+                generation: d.u64()?,
+                window: d.u64()?,
             },
             TAG_SHUTDOWN => ServeMessage::Shutdown,
             TAG_ACK => ServeMessage::Ack,
@@ -243,7 +303,13 @@ mod tests {
                 uptime_secs: 1.25,
                 points_per_sec: 800.0,
                 mean_batch_points: 333.3,
+                generation: 4,
+                ingested: 512,
+                ingest_pending: 128,
             },
+            ServeMessage::Ingest { n: 2, d: 3, x: vec![0.5; 6] },
+            ServeMessage::Ingest { n: 0, d: 8, x: vec![] },
+            ServeMessage::IngestReply { accepted: 256, generation: 9, window: 4096 },
             ServeMessage::Shutdown,
             ServeMessage::Ack,
             ServeMessage::Error("nope".into()),
@@ -282,6 +348,24 @@ mod tests {
         e.u8(0);
         e.u32((MAX_PREDICT_POINTS + 1) as u32);
         e.u32(1);
+        assert!(ServeMessage::decode(&e.buf).is_err());
+        // Same cap on the ingest verb.
+        let mut e = crate::backend::distributed::wire::Enc::new();
+        e.u8(SERVE_PROTO_VERSION);
+        e.u8(10); // TAG_INGEST
+        e.u32((MAX_PREDICT_POINTS + 1) as u32);
+        e.u32(1);
+        assert!(ServeMessage::decode(&e.buf).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_ingest_payload() {
+        let mut e = crate::backend::distributed::wire::Enc::new();
+        e.u8(SERVE_PROTO_VERSION);
+        e.u8(10); // TAG_INGEST
+        e.u32(4);
+        e.u32(2);
+        e.f64(1.0); // only one of the 8 promised values
         assert!(ServeMessage::decode(&e.buf).is_err());
     }
 

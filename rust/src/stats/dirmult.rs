@@ -65,6 +65,37 @@ impl DirMultStats {
         }
     }
 
+    /// Exact grouped inverse of [`add_cols`](Self::add_cols): subtracts the
+    /// same tile-local partial sums (see
+    /// [`crate::stats::NiwStats::remove_cols`] for the contract).
+    pub fn remove_cols(&mut self, cols: &[f64], stride: usize, idx: &[u32]) {
+        let d = self.sum_x.len();
+        debug_assert!(cols.len() >= d * stride);
+        self.n -= idx.len() as f64;
+        for (i, s) in self.sum_x.iter_mut().enumerate() {
+            let row = &cols[i * stride..(i + 1) * stride];
+            let mut acc = 0.0;
+            for &t in idx {
+                acc += row[t as usize];
+            }
+            *s -= acc;
+        }
+    }
+
+    /// Exponential forgetting: scale count and summed counts by `gamma`
+    /// (`gamma = 1` is a bitwise no-op; see
+    /// [`crate::stats::NiwStats::decay`]).
+    pub fn decay(&mut self, gamma: f64) {
+        debug_assert!((0.0..=1.0).contains(&gamma), "decay factor must be in [0, 1]");
+        if gamma == 1.0 {
+            return;
+        }
+        self.n *= gamma;
+        for v in self.sum_x.iter_mut() {
+            *v *= gamma;
+        }
+    }
+
     pub fn merge(&mut self, other: &DirMultStats) {
         self.n += other.n;
         for (s, &v) in self.sum_x.iter_mut().zip(&other.sum_x) {

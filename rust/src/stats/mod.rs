@@ -234,6 +234,25 @@ impl Stats {
         }
     }
 
+    /// Grouped rank-T removal — the exact inverse of
+    /// [`add_cols`](Self::add_cols) (same panel layout, same tile-local
+    /// reduction order, subtraction instead of addition).
+    pub fn remove_cols(&mut self, cols: &[f64], stride: usize, idx: &[u32]) {
+        match self {
+            Stats::Gauss(s) => s.remove_cols(cols, stride, idx),
+            Stats::Mult(s) => s.remove_cols(cols, stride, idx),
+        }
+    }
+
+    /// Exponential forgetting: scale every accumulator by `gamma` ∈ [0, 1]
+    /// (`gamma = 1` is a bitwise no-op).
+    pub fn decay(&mut self, gamma: f64) {
+        match self {
+            Stats::Gauss(s) => s.decay(gamma),
+            Stats::Mult(s) => s.decay(gamma),
+        }
+    }
+
     /// Fallible [`Self::merge`] for untrusted (deserialized) inputs — the
     /// path the distributed leader uses when reducing worker replies.
     pub fn try_merge(&mut self, other: &Stats) -> Result<(), FamilyMismatch> {

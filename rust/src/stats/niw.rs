@@ -102,6 +102,56 @@ impl NiwStats {
         }
     }
 
+    /// Exact grouped inverse of [`add_cols`](Self::add_cols): subtracts the
+    /// same tile-local partial sums (identical gather, reduction order, and
+    /// symmetry exploitation), so `add_cols` followed by `remove_cols` of
+    /// the same panel restores counts exactly and each moment accumulator to
+    /// within one rounding step of its working magnitude. The streaming
+    /// fitter uses this to retire window points whose labels moved.
+    pub fn remove_cols(&mut self, cols: &[f64], stride: usize, idx: &[u32]) {
+        let d = self.dim();
+        debug_assert!(cols.len() >= d * stride);
+        debug_assert!(idx.iter().all(|&t| (t as usize) < stride));
+        self.n -= idx.len() as f64;
+        for i in 0..d {
+            let row_i = &cols[i * stride..(i + 1) * stride];
+            let mut si = 0.0;
+            for &t in idx {
+                si += row_i[t as usize];
+            }
+            self.sum_x[i] -= si;
+            for j in 0..=i {
+                let row_j = &cols[j * stride..(j + 1) * stride];
+                let mut acc = 0.0;
+                for &t in idx {
+                    acc += row_i[t as usize] * row_j[t as usize];
+                }
+                self.sum_xxt[(i, j)] -= acc;
+                if i != j {
+                    self.sum_xxt[(j, i)] -= acc;
+                }
+            }
+        }
+    }
+
+    /// Exponential forgetting: scale every accumulator (count and moments)
+    /// by `gamma` ∈ [0, 1]. `gamma = 1` is a bitwise no-op; `gamma < 1`
+    /// down-weights old evidence geometrically, which is what lets the
+    /// streaming fitter track drifting data instead of averaging over it.
+    pub fn decay(&mut self, gamma: f64) {
+        debug_assert!((0.0..=1.0).contains(&gamma), "decay factor must be in [0, 1]");
+        if gamma == 1.0 {
+            return;
+        }
+        self.n *= gamma;
+        for v in self.sum_x.iter_mut() {
+            *v *= gamma;
+        }
+        for v in self.sum_xxt.data_mut().iter_mut() {
+            *v *= gamma;
+        }
+    }
+
     pub fn merge(&mut self, other: &NiwStats) {
         self.n += other.n;
         for (s, &v) in self.sum_x.iter_mut().zip(&other.sum_x) {

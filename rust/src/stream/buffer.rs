@@ -1,0 +1,146 @@
+//! Sliding-window point buffer for the streaming fitter.
+//!
+//! The buffer holds the most recent `capacity` ingested points row-major,
+//! together with their current cluster and sub-cluster labels — exactly the
+//! per-point state a fit-path [`crate::backend::shard::Shard`] carries, but
+//! FIFO: new mini-batches append at the back and the oldest points scroll
+//! off the front once capacity is exceeded. Only windowed points are
+//! resweepable; everything older is frozen evidence held as sufficient
+//! statistics by the [`IncrementalFitter`](crate::stream::IncrementalFitter).
+
+/// FIFO window of recent points with their labels.
+#[derive(Debug, Clone)]
+pub struct StreamBuffer {
+    d: usize,
+    capacity: usize,
+    values: Vec<f64>,
+    z: Vec<u32>,
+    zsub: Vec<u8>,
+}
+
+impl StreamBuffer {
+    pub fn new(d: usize, capacity: usize) -> Self {
+        assert!(d > 0, "stream buffer needs a positive dimension");
+        assert!(capacity > 0, "stream buffer needs a positive capacity");
+        Self { d, capacity, values: Vec::new(), z: Vec::new(), zsub: Vec::new() }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Points currently windowed.
+    pub fn len(&self) -> usize {
+        self.z.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.z.is_empty()
+    }
+
+    /// Row-major point values (`len() × d`).
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Current cluster label per windowed point.
+    pub fn labels(&self) -> &[u32] {
+        &self.z
+    }
+
+    /// Current sub-cluster label per windowed point.
+    pub fn sub_labels(&self) -> &[u8] {
+        &self.zsub
+    }
+
+    /// Append a batch with its (seeded) labels at the back of the window.
+    /// Does not evict — the caller folds overflow into its frozen base
+    /// first (it needs the evicted points' labels), then calls
+    /// [`Self::evict_front`].
+    pub fn push(&mut self, values: &[f64], z: &[u32], zsub: &[u8]) {
+        let n = z.len();
+        assert_eq!(values.len(), n * self.d, "batch shape mismatch");
+        assert_eq!(zsub.len(), n, "sub-label length mismatch");
+        self.values.extend_from_slice(values);
+        self.z.extend_from_slice(z);
+        self.zsub.extend_from_slice(zsub);
+    }
+
+    /// Number of points past capacity (to be evicted from the front).
+    pub fn overflow(&self) -> usize {
+        self.len().saturating_sub(self.capacity)
+    }
+
+    /// Drop the `n` oldest points.
+    pub fn evict_front(&mut self, n: usize) {
+        let n = n.min(self.len());
+        self.values.drain(..n * self.d);
+        self.z.drain(..n);
+        self.zsub.drain(..n);
+    }
+
+    /// Temporarily take ownership of the window's value buffer — a
+    /// zero-copy hand-off to a sweep's [`crate::datagen::Data`] so the
+    /// whole window is not cloned on every ingest. Pair with
+    /// [`Self::restore_values`]; the buffer must not be pushed to or
+    /// evicted from in between.
+    pub(crate) fn take_values(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.values)
+    }
+
+    /// Return the buffer taken by [`Self::take_values`].
+    pub(crate) fn restore_values(&mut self, values: Vec<f64>) {
+        debug_assert!(self.values.is_empty(), "restore over live values");
+        debug_assert_eq!(values.len(), self.z.len() * self.d, "restored shape mismatch");
+        self.values = values;
+    }
+
+    /// Replace every windowed point's labels (post-sweep write-back).
+    pub fn set_labels(&mut self, z: Vec<u32>, zsub: Vec<u8>) {
+        assert_eq!(z.len(), self.len(), "label write-back length mismatch");
+        assert_eq!(zsub.len(), self.len(), "sub-label write-back length mismatch");
+        self.z = z;
+        self.zsub = zsub;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_evict_fifo() {
+        let mut b = StreamBuffer::new(2, 3);
+        b.push(&[1.0, 2.0, 3.0, 4.0], &[0, 1], &[0, 1]);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.overflow(), 0);
+        b.push(&[5.0, 6.0, 7.0, 8.0], &[0, 0], &[1, 0]);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.overflow(), 1);
+        b.evict_front(1);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.values(), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(b.labels(), &[1, 0, 0]);
+        assert_eq!(b.sub_labels(), &[1, 1, 0]);
+    }
+
+    #[test]
+    fn label_writeback() {
+        let mut b = StreamBuffer::new(1, 8);
+        b.push(&[0.5, 1.5], &[0, 0], &[0, 0]);
+        b.set_labels(vec![1, 2], vec![1, 0]);
+        assert_eq!(b.labels(), &[1, 2]);
+        assert_eq!(b.sub_labels(), &[1, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn rejects_bad_shape() {
+        let mut b = StreamBuffer::new(3, 4);
+        b.push(&[1.0, 2.0], &[0], &[0]);
+    }
+}

@@ -1,0 +1,649 @@
+//! Incremental fitting: fold mini-batches into an existing [`DpmmState`]
+//! without a full refit.
+//!
+//! Per ingested batch the fitter runs four deterministic phases:
+//!
+//! 1. **Decay** (optional): the frozen evidence base is scaled by
+//!    `decay` (exponential forgetting, [`crate::stats::Stats::decay`]), so
+//!    drifting streams track the present instead of averaging history.
+//! 2. **MAP seeding**: new points get labels from the serving engine's MAP
+//!    assignment — posterior-mean [`KernelDesc`] scores with
+//!    count-proportional weights ([`StepPlan::map_from_state`]), argmaxed.
+//!    No RNG, so seeding is identical across thread counts and kernels.
+//! 3. **Grouped fold**: the batch enters the window's sufficient-statistics
+//!    contribution through the tiled `add_cols` path; points scrolling out
+//!    of the window are retired into the frozen base with `remove_cols` /
+//!    `add_cols` (their evidence stays in the model; only their labels
+//!    freeze).
+//! 4. **Restricted sweeps**: `sweeps` restricted-Gibbs passes over the
+//!    sliding window, reusing the fit path's shard kernels
+//!    ([`crate::backend::shard`]) verbatim — K stays fixed (no split/merge
+//!    moves), only recent labels move.
+//!
+//! # Determinism contract
+//!
+//! A fixed-seed ingest history (same batches, same batch boundaries) yields
+//! **bitwise-identical** labels and statistics regardless of the thread
+//! count and of the assignment kernel (tiled vs scalar). Three properties
+//! make that hold, and `tests/prop_kernel_equiv.rs` pins them:
+//!
+//! * the window shards into fixed-size chunks with per-shard forked RNGs in
+//!   shard order (thread scheduling never touches an RNG stream),
+//! * tiled and scalar kernels draw identical uniforms and produce identical
+//!   labels under the same plan (the PR-1 oracle contract),
+//! * statistics are **never** taken from the kernels' bundles (those differ
+//!   between kernels in final ulps); they are maintained by a canonical
+//!   single-threaded grouped fold that depends only on point values and
+//!   label sequences — so identical labels induce identical plans for the
+//!   next sweep, closing the induction.
+
+use super::buffer::StreamBuffer;
+use crate::backend::shard::{
+    map_shards_mut, shard_step_scalar, shard_step_tiled, AssignKernel, Shard, DEFAULT_TILE,
+};
+use crate::datagen::Data;
+use crate::model::{Cluster, DpmmState, LEFT, RIGHT};
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::sampler::{
+    sample_params, sample_sub_weights, sample_weights, SamplerOptions, StepParams, StepPlan,
+};
+use crate::serve::ModelSnapshot;
+use crate::stats::Stats;
+use crate::util::threadpool::{default_threads, parallel_map};
+use anyhow::{bail, Result};
+
+/// Fixed tile width of the canonical statistics fold. Deliberately **not**
+/// configurable: the fold's FP reduction order is part of the determinism
+/// contract, so it must not vary with tuning knobs.
+const FOLD_TILE: usize = 128;
+
+/// Streaming/incremental-fitting knobs.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Sliding-window capacity in points (older points freeze into the
+    /// evidence base and stop being resweepable).
+    pub window: usize,
+    /// Restricted-Gibbs sweeps over the window per ingested batch.
+    pub sweeps: usize,
+    /// Exponential forgetting factor applied to the frozen base per ingest
+    /// (1.0 = no forgetting; < 1.0 tracks drift).
+    pub decay: f64,
+    /// Worker threads for the window sweep (0 = core count / `DPMM_THREADS`).
+    pub threads: usize,
+    /// Window shard granularity — the unit of thread-invariant parallelism.
+    pub shard_size: usize,
+    /// Assignment-kernel tile width.
+    pub tile: usize,
+    /// Assignment kernel (tiled production kernel or the scalar oracle).
+    pub kernel: AssignKernel,
+    /// DP concentration for the restricted sweeps (snapshots don't carry α).
+    pub alpha: f64,
+    /// RNG seed for the sweep streams.
+    pub seed: u64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        Self {
+            window: 32 * 1024,
+            sweeps: 2,
+            decay: 1.0,
+            threads: 0,
+            shard_size: 8 * 1024,
+            tile: DEFAULT_TILE,
+            kernel: AssignKernel::from_env(),
+            alpha: 10.0,
+            seed: 0,
+        }
+    }
+}
+
+/// What one [`IncrementalFitter::ingest`] call did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestSummary {
+    /// Points accepted from this batch.
+    pub accepted: usize,
+    /// Windowed points after the ingest.
+    pub window: usize,
+    /// Points retired into the frozen base by this ingest.
+    pub evicted: usize,
+    /// Cluster count (fixed across ingests — no split/merge moves).
+    pub k: usize,
+}
+
+/// Streaming incremental fitter over a sliding window.
+pub struct IncrementalFitter {
+    state: DpmmState,
+    /// Frozen evidence per (cluster, sub-cluster): everything that ever
+    /// scrolled out of the window, plus the seed snapshot's statistics
+    /// (split half/half across the sub-sides to keep step (c)/(d) sampled).
+    base: Vec<[Stats; 2]>,
+    /// The window's live contribution per (cluster, sub-cluster); maintained
+    /// by the canonical grouped fold, never by the sweep kernels.
+    win: Vec<[Stats; 2]>,
+    buffer: StreamBuffer,
+    rng: Xoshiro256pp,
+    cfg: StreamConfig,
+    ingested: u64,
+}
+
+impl IncrementalFitter {
+    /// Seed from a frozen model export (`DPMMSNAP` file or
+    /// [`ModelSnapshot::from_checkpoint_file`]). The snapshot's statistics
+    /// become the initial evidence base; the window starts empty.
+    pub fn from_snapshot(snap: &ModelSnapshot, cfg: StreamConfig) -> Result<IncrementalFitter> {
+        if !(cfg.decay > 0.0 && cfg.decay <= 1.0) {
+            bail!("stream decay must be in (0, 1], got {}", cfg.decay);
+        }
+        if !(cfg.alpha > 0.0) {
+            bail!("stream alpha must be positive, got {}", cfg.alpha);
+        }
+        let prior = snap.prior.clone();
+        let mut clusters = Vec::with_capacity(snap.k());
+        let mut base = Vec::with_capacity(snap.k());
+        for c in &snap.clusters {
+            // Halve the seed statistics into the two sub-sides (0.5× is an
+            // exact FP scaling, so the halves sum back bitwise): the sub
+            // split is only a seed for step (c)/(d) parameter draws — the
+            // fitter never proposes splits, so it needs no real bipartition.
+            let mut half = c.stats.clone();
+            half.decay(0.5);
+            let params = prior.try_mean_params(&c.stats)?;
+            let sub_p = prior.try_mean_params(&half)?;
+            clusters.push(Cluster {
+                stats: c.stats.clone(),
+                sub_stats: [half.clone(), half.clone()],
+                params,
+                sub_params: [sub_p.clone(), sub_p],
+                weight: c.weight,
+                sub_weights: [0.5, 0.5],
+                age: 1,
+                since_restart: 0,
+            });
+            base.push([half.clone(), half]);
+        }
+        let k = clusters.len();
+        let d = prior.dim();
+        let state = DpmmState {
+            alpha: cfg.alpha,
+            prior: prior.clone(),
+            clusters,
+            n_total: snap.n_total as usize,
+        };
+        let win = (0..k).map(|_| [prior.empty_stats(), prior.empty_stats()]).collect();
+        Ok(IncrementalFitter {
+            state,
+            base,
+            win,
+            buffer: StreamBuffer::new(d, cfg.window.max(1)),
+            rng: Xoshiro256pp::seed_from_u64(cfg.seed),
+            cfg,
+            ingested: 0,
+        })
+    }
+
+    pub fn k(&self) -> usize {
+        self.state.k()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.state.prior.dim()
+    }
+
+    /// Points ingested over the fitter's lifetime.
+    pub fn ingested(&self) -> u64 {
+        self.ingested
+    }
+
+    /// Points currently in the resweepable window.
+    pub fn window_len(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Current labels of the windowed points (ingest order, oldest first).
+    pub fn window_labels(&self) -> &[u32] {
+        self.buffer.labels()
+    }
+
+    /// Current sub-labels of the windowed points.
+    pub fn window_sub_labels(&self) -> &[u8] {
+        self.buffer.sub_labels()
+    }
+
+    /// Per-cluster point masses (base + window evidence).
+    pub fn counts(&self) -> Vec<f64> {
+        self.state.counts()
+    }
+
+    pub fn state(&self) -> &DpmmState {
+        &self.state
+    }
+
+    /// Freeze the current model into a serving snapshot (this is what the
+    /// hot-swap path re-plans after every applied ingest).
+    pub fn snapshot(&self) -> Result<ModelSnapshot> {
+        ModelSnapshot::from_state(&self.state)
+    }
+
+    /// Fold one row-major mini-batch (`batch.len() / d` points) into the
+    /// model: decay → MAP seed → grouped fold → window eviction →
+    /// `cfg.sweeps` restricted sweeps. See the module docs.
+    pub fn ingest(&mut self, batch: &[f64]) -> Result<IngestSummary> {
+        let d = self.dim();
+        if batch.len() % d != 0 {
+            bail!(
+                "ingest batch length {} is not a multiple of the model dimension {d}",
+                batch.len()
+            );
+        }
+        if batch.iter().any(|v| !v.is_finite()) {
+            bail!("ingest batch contains non-finite values");
+        }
+        let n = batch.len() / d;
+        if n == 0 {
+            return Ok(IngestSummary {
+                accepted: 0,
+                window: self.buffer.len(),
+                evicted: 0,
+                k: self.k(),
+            });
+        }
+
+        // 1. Exponential forgetting on the frozen base (the window's
+        // contribution is recent by construction and keeps full weight
+        // until it scrolls out).
+        if self.cfg.decay < 1.0 {
+            for b in self.base.iter_mut() {
+                b[0].decay(self.cfg.decay);
+                b[1].decay(self.cfg.decay);
+            }
+            // The seed plan below must see the decayed evidence — without
+            // this resync a drifting cluster keeps its stale pre-decay
+            // weight in the MAP argmax for one more ingest.
+            self.sync_state();
+        }
+
+        // 2. Deterministic MAP seeding (no RNG — see module docs).
+        let threads = self.threads();
+        let plan = StepPlan::map_from_state(&self.state);
+        let (z0, zsub0) = map_seed(&plan, batch, n, d, threads);
+
+        // 3. Canonical grouped fold of the batch into the window stats.
+        let all: Vec<u32> = (0..n as u32).collect();
+        fold_groups(&mut self.win, batch, d, &all, &z0, &zsub0, true);
+        self.buffer.push(batch, &z0, &zsub0);
+
+        // 4. Retire overflow into the frozen base (labels freeze as-is).
+        let evicted = self.buffer.overflow();
+        if evicted > 0 {
+            let sel: Vec<u32> = (0..evicted as u32).collect();
+            let (vals, z, zsub) =
+                (self.buffer.values(), self.buffer.labels(), self.buffer.sub_labels());
+            fold_groups(&mut self.win, vals, d, &sel, z, zsub, false);
+            fold_groups(&mut self.base, vals, d, &sel, z, zsub, true);
+            self.buffer.evict_front(evicted);
+        }
+        self.sync_state();
+
+        // 5. Restricted sweeps over the window.
+        self.resweep(self.cfg.sweeps);
+
+        self.ingested += n as u64;
+        self.state.n_total += n;
+        Ok(IngestSummary {
+            accepted: n,
+            window: self.buffer.len(),
+            evicted,
+            k: self.k(),
+        })
+    }
+
+    fn threads(&self) -> usize {
+        if self.cfg.threads == 0 {
+            default_threads()
+        } else {
+            self.cfg.threads
+        }
+    }
+
+    /// Rebuild the state's cluster statistics as base + window (fixed merge
+    /// order: part of the determinism contract).
+    fn sync_state(&mut self) {
+        for (k, c) in self.state.clusters.iter_mut().enumerate() {
+            let mut sub_l = self.base[k][LEFT].clone();
+            sub_l.merge(&self.win[k][LEFT]);
+            let mut sub_r = self.base[k][RIGHT].clone();
+            sub_r.merge(&self.win[k][RIGHT]);
+            let mut stats = sub_l.clone();
+            stats.merge(&sub_r);
+            c.stats = stats;
+            c.sub_stats = [sub_l, sub_r];
+        }
+    }
+
+    /// `sweeps` restricted-Gibbs passes over the window: steps (a)–(d) on
+    /// the coordinator state, then the shard assignment kernels over
+    /// fixed-size window shards, then the canonical delta fold of every
+    /// moved label.
+    fn resweep(&mut self, sweeps: usize) {
+        let wlen = self.buffer.len();
+        if wlen == 0 || sweeps == 0 {
+            return;
+        }
+        let d = self.dim();
+        // Zero-copy hand-off: the window's contiguous row-major values move
+        // into the sweep's `Data` and move back at the end (no O(window·d)
+        // clone per ingest). No early return below may skip the restore.
+        let data = Data::new(wlen, d, self.buffer.take_values());
+        // Fixed shard structure with per-shard RNG streams forked in shard
+        // order — thread scheduling never reaches an RNG.
+        let mut shards: Vec<Shard> = data
+            .shard_ranges(self.cfg.shard_size.max(1))
+            .into_iter()
+            .map(|range| {
+                let mut s = Shard::new(range, self.rng.fork());
+                s.z.copy_from_slice(&self.buffer.labels()[s.range.clone()]);
+                s.zsub.copy_from_slice(&self.buffer.sub_labels()[s.range.clone()]);
+                s
+            })
+            .collect();
+        let threads = self.threads();
+        let opts = SamplerOptions { sub_restart_every: 0, ..SamplerOptions::default() };
+        for _ in 0..sweeps {
+            sample_weights(&mut self.state, &mut self.rng);
+            sample_sub_weights(&mut self.state, &mut self.rng);
+            sample_params(&mut self.state, &opts, &mut self.rng);
+            let plan = StepParams::snapshot(&self.state).plan();
+            let prev_z: Vec<u32> = shards.iter().flat_map(|s| s.z.iter().copied()).collect();
+            let prev_zsub: Vec<u8> =
+                shards.iter().flat_map(|s| s.zsub.iter().copied()).collect();
+            run_shards(
+                &data,
+                &mut shards,
+                &plan,
+                &self.state.prior,
+                self.cfg.kernel,
+                self.cfg.tile,
+                threads,
+            );
+            let new_z: Vec<u32> = shards.iter().flat_map(|s| s.z.iter().copied()).collect();
+            let new_zsub: Vec<u8> =
+                shards.iter().flat_map(|s| s.zsub.iter().copied()).collect();
+            // Canonical delta fold: only moved points touch the window
+            // accumulators (remove at the old coordinates, add at the new).
+            let changed: Vec<u32> = (0..wlen)
+                .filter(|&i| prev_z[i] != new_z[i] || prev_zsub[i] != new_zsub[i])
+                .map(|i| i as u32)
+                .collect();
+            if !changed.is_empty() {
+                fold_groups(&mut self.win, &data.values, d, &changed, &prev_z, &prev_zsub, false);
+                fold_groups(&mut self.win, &data.values, d, &changed, &new_z, &new_zsub, true);
+                self.sync_state();
+            }
+        }
+        let z: Vec<u32> = shards.iter().flat_map(|s| s.z.iter().copied()).collect();
+        let zsub: Vec<u8> = shards.iter().flat_map(|s| s.zsub.iter().copied()).collect();
+        self.buffer.set_labels(z, zsub);
+        self.buffer.restore_values(data.values);
+    }
+}
+
+/// Run the assignment kernel over every shard via the shared scoped pool
+/// ([`map_shards_mut`]). Kernel stats bundles are discarded — the fitter's
+/// canonical fold owns statistics (see module docs).
+fn run_shards(
+    data: &Data,
+    shards: &mut [Shard],
+    plan: &StepPlan,
+    prior: &crate::stats::Prior,
+    kernel: AssignKernel,
+    tile: usize,
+    threads: usize,
+) {
+    map_shards_mut(shards, threads, |shard| match kernel {
+        AssignKernel::Tiled => {
+            shard_step_tiled(data, shard, plan, prior, tile);
+        }
+        AssignKernel::Scalar => {
+            shard_step_scalar(data, shard, plan, prior);
+        }
+    });
+}
+
+/// Deterministic MAP seeding of a batch: per-point argmax over the frozen
+/// cluster descriptors, then over the winner's sub-descriptors. Pure
+/// scalar scoring (kernel-independent) in fixed chunks (thread-invariant).
+fn map_seed(
+    plan: &StepPlan,
+    batch: &[f64],
+    n: usize,
+    d: usize,
+    threads: usize,
+) -> (Vec<u32>, Vec<u8>) {
+    const CHUNK: usize = 4096;
+    let ranges: Vec<std::ops::Range<usize>> =
+        (0..n).step_by(CHUNK).map(|s| s..(s + CHUNK).min(n)).collect();
+    let parts = parallel_map(&ranges, threads, |_, range| {
+        let mut z = Vec::with_capacity(range.len());
+        let mut zsub = Vec::with_capacity(range.len());
+        for p in range.clone() {
+            let x = &batch[p * d..(p + 1) * d];
+            let mut best = f64::NEG_INFINITY;
+            let mut zi = 0usize;
+            for (c, desc) in plan.clusters.iter().enumerate() {
+                let s = desc.loglik(x);
+                if s > best {
+                    best = s;
+                    zi = c;
+                }
+            }
+            let l = plan.sub[zi][LEFT].loglik(x);
+            let r = plan.sub[zi][RIGHT].loglik(x);
+            z.push(zi as u32);
+            zsub.push(u8::from(r > l));
+        }
+        (z, zsub)
+    });
+    let mut z = Vec::with_capacity(n);
+    let mut zsub = Vec::with_capacity(n);
+    for (pz, ps) in parts {
+        z.extend(pz);
+        zsub.extend(ps);
+    }
+    (z, zsub)
+}
+
+/// Canonical grouped fold: apply the selected points to the per-(cluster,
+/// sub) accumulators via `add_cols` (`add = true`) or `remove_cols`. Tiles
+/// of [`FOLD_TILE`], ascending selection order, ascending (cluster, sub)
+/// group order — single-threaded and kernel-independent by design, so the
+/// resulting bit patterns depend only on values and labels.
+fn fold_groups(
+    target: &mut [[Stats; 2]],
+    values: &[f64],
+    d: usize,
+    sel: &[u32],
+    z: &[u32],
+    zsub: &[u8],
+    add: bool,
+) {
+    if sel.is_empty() {
+        return;
+    }
+    let k = target.len();
+    let mut panel = vec![0.0; d * FOLD_TILE];
+    let mut groups: Vec<[Vec<u32>; 2]> =
+        (0..k).map(|_| [Vec::new(), Vec::new()]).collect();
+    let mut start = 0;
+    while start < sel.len() {
+        let m = FOLD_TILE.min(sel.len() - start);
+        // Gather the tile feature-major (row stride = m).
+        for (t, &p) in sel[start..start + m].iter().enumerate() {
+            let row = &values[p as usize * d..(p as usize + 1) * d];
+            for (i, &v) in row.iter().enumerate() {
+                panel[i * m + t] = v;
+            }
+        }
+        for g in groups.iter_mut() {
+            g[0].clear();
+            g[1].clear();
+        }
+        for (t, &p) in sel[start..start + m].iter().enumerate() {
+            groups[z[p as usize] as usize][zsub[p as usize] as usize].push(t as u32);
+        }
+        for (c, g) in groups.iter().enumerate() {
+            for (h, gh) in g.iter().enumerate() {
+                if gh.is_empty() {
+                    continue;
+                }
+                if add {
+                    target[c][h].add_cols(&panel, m, gh);
+                } else {
+                    target[c][h].remove_cols(&panel, m, gh);
+                }
+            }
+        }
+        start += m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{NiwPrior, Prior};
+
+    /// A tiny two-blob snapshot to seed fitters from.
+    fn seed_snapshot() -> ModelSnapshot {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let mut state = DpmmState::new(1.0, prior.clone(), 2, 200, &mut rng);
+        for (k, center) in [(0usize, -6.0f64), (1, 6.0)] {
+            let mut s = prior.empty_stats();
+            for i in 0..100 {
+                s.add(&[center + 0.03 * (i % 9) as f64, 0.05 * (i % 7) as f64 - 0.15]);
+            }
+            state.clusters[k].stats = s;
+        }
+        ModelSnapshot::from_state(&state).unwrap()
+    }
+
+    fn blob_batch(center: f64, n: usize, phase: usize) -> Vec<f64> {
+        let mut v = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            v.push(center + 0.04 * ((i + phase) % 11) as f64 - 0.2);
+            v.push(0.03 * ((i * 3 + phase) % 5) as f64);
+        }
+        v
+    }
+
+    fn cfg() -> StreamConfig {
+        StreamConfig {
+            window: 64,
+            sweeps: 2,
+            threads: 2,
+            shard_size: 16,
+            kernel: AssignKernel::Tiled,
+            alpha: 2.0,
+            seed: 9,
+            ..StreamConfig::default()
+        }
+    }
+
+    #[test]
+    fn ingest_assigns_to_nearest_blob_and_tracks_counts() {
+        let snap = seed_snapshot();
+        let mut f = IncrementalFitter::from_snapshot(&snap, cfg()).unwrap();
+        let before = f.counts();
+        f.ingest(&blob_batch(-6.0, 30, 0)).unwrap();
+        let s = f.ingest(&blob_batch(6.0, 30, 1)).unwrap();
+        assert_eq!(s.accepted, 30);
+        assert_eq!(s.window, 60);
+        assert_eq!(s.evicted, 0);
+        let after = f.counts();
+        assert!((after[0] - before[0] - 30.0).abs() < 1e-6, "{before:?} -> {after:?}");
+        assert!((after[1] - before[1] - 30.0).abs() < 1e-6);
+        // Window labels follow the blobs.
+        let labels = f.window_labels();
+        assert!(labels[..30].iter().all(|&l| l == 0), "{labels:?}");
+        assert!(labels[30..].iter().all(|&l| l == 1));
+        assert_eq!(f.ingested(), 60);
+    }
+
+    #[test]
+    fn eviction_freezes_evidence_but_preserves_total_mass() {
+        let snap = seed_snapshot();
+        let mut f = IncrementalFitter::from_snapshot(&snap, cfg()).unwrap();
+        for phase in 0..4 {
+            f.ingest(&blob_batch(-6.0, 30, phase)).unwrap();
+        }
+        // window = 64 < 120 ingested: overflow retired into the base.
+        assert_eq!(f.window_len(), 64);
+        let total: f64 = f.counts().iter().sum();
+        assert!((total - 200.0 - 120.0).abs() < 1e-6, "total mass {total}");
+        // Model still snapshots cleanly after evictions.
+        let snap2 = f.snapshot().unwrap();
+        assert_eq!(snap2.k(), 2);
+    }
+
+    #[test]
+    fn decay_shrinks_old_mass() {
+        let snap = seed_snapshot();
+        let mut f = IncrementalFitter::from_snapshot(
+            &snap,
+            StreamConfig { decay: 0.5, ..cfg() },
+        )
+        .unwrap();
+        f.ingest(&blob_batch(-6.0, 10, 0)).unwrap();
+        // Base was 100+100 → decayed to 50+50; window adds 10.
+        let total: f64 = f.counts().iter().sum();
+        assert!((total - 110.0).abs() < 1e-6, "total {total}");
+    }
+
+    #[test]
+    fn rejects_bad_batches() {
+        let snap = seed_snapshot();
+        let mut f = IncrementalFitter::from_snapshot(&snap, cfg()).unwrap();
+        assert!(f.ingest(&[1.0, 2.0, 3.0]).is_err()); // not a multiple of d
+        assert!(f.ingest(&[f64::NAN, 0.0]).is_err());
+        let s = f.ingest(&[]).unwrap();
+        assert_eq!(s.accepted, 0);
+        assert!(
+            IncrementalFitter::from_snapshot(
+                &snap,
+                StreamConfig { decay: 0.0, ..cfg() }
+            )
+            .is_err()
+        );
+    }
+
+    #[test]
+    fn window_stats_match_label_recompute() {
+        // The delta-fold bookkeeping must agree with a from-scratch grouped
+        // recompute of the window contribution.
+        let snap = seed_snapshot();
+        let mut f = IncrementalFitter::from_snapshot(&snap, cfg()).unwrap();
+        for phase in 0..3 {
+            f.ingest(&blob_batch(if phase % 2 == 0 { -6.0 } else { 6.0 }, 25, phase))
+                .unwrap();
+        }
+        let d = f.dim();
+        let prior = f.state().prior.clone();
+        let mut fresh: Vec<[Stats; 2]> =
+            (0..f.k()).map(|_| [prior.empty_stats(), prior.empty_stats()]).collect();
+        let sel: Vec<u32> = (0..f.window_len() as u32).collect();
+        fold_groups(
+            &mut fresh,
+            f.buffer.values(),
+            d,
+            &sel,
+            f.window_labels(),
+            f.window_sub_labels(),
+            true,
+        );
+        for (k, (a, b)) in f.win.iter().zip(&fresh).enumerate() {
+            for h in 0..2 {
+                assert_eq!(a[h].count(), b[h].count(), "k={k} h={h}");
+            }
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Streaming ingestion + incremental fitting: absorb new data continuously
+//! and refresh the serving model without a restart.
+//!
+//! The batch pipeline (coordinator + backends) fits once over a fixed data
+//! matrix; the PR-2 serve layer then scores against that frozen fit. This
+//! subsystem closes the loop for production streams:
+//!
+//! * [`StreamBuffer`] — a FIFO sliding window of the most recent points
+//!   with their live labels (the only points whose assignments still move);
+//! * [`IncrementalFitter`] — folds mini-batches into an existing
+//!   [`crate::model::DpmmState`] through the grouped `add_cols` /
+//!   `remove_cols` sufficient-statistics path, seeding labels from the
+//!   serving engine's deterministic MAP assignment and then running
+//!   `sweeps` restricted-Gibbs passes over the window (reusing the fit
+//!   path's tiled/scalar shard kernels verbatim) instead of a full refit.
+//!   Optional exponential forgetting ([`crate::stats::Stats::decay`])
+//!   down-weights old evidence for drifting streams.
+//!
+//! Ingest is wired end-to-end: the serving wire protocol gains an `ingest`
+//! verb ([`crate::serve::wire::ServeMessage::Ingest`]), `dpmm stream`
+//! starts a serving endpoint whose micro-batcher applies queued ingests and
+//! **hot-swaps** a freshly re-planned [`crate::serve::ModelSnapshot`]
+//! between fused scoring passes (see [`crate::serve::server`] for the
+//! consistency guarantees), and `python/dpmmwrapper.py`'s `DpmmClient`
+//! speaks the same verb. `cargo bench --bench stream_ingest` quantifies
+//! incremental ingest against a full refit at matched NMI
+//! (`BENCH_stream.json`; EXPERIMENTS.md §Streaming has the protocol).
+//!
+//! The whole path is deterministic — see the contract in [`fitter`]'s docs,
+//! pinned by `tests/prop_kernel_equiv.rs` and
+//! `tests/prop_stats_roundtrip.rs`.
+
+pub mod buffer;
+pub mod fitter;
+
+pub use buffer::StreamBuffer;
+pub use fitter::{IncrementalFitter, IngestSummary, StreamConfig};

@@ -1,0 +1,183 @@
+//! End-to-end streaming test — the `dpmm stream` acceptance demo: start a
+//! serving endpoint from a checkpoint snapshot, ingest ≥10 mini-batches
+//! over TCP while predict requests fly concurrently, and observe the
+//! snapshot generation increment in `/stats` with **zero** dropped or
+//! errored predict requests across the swaps.
+
+use dpmm::config::{BackendChoice, DpmmParams};
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::{Data, Dataset};
+use dpmm::prelude::*;
+use dpmm::serve::{spawn_streaming, EngineConfig, ServeConfig};
+use dpmm::stream::{IncrementalFitter, StreamConfig};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dpmm_stream_{name}_{}.bin", std::process::id()))
+}
+
+/// Fit a small GMM with a final-iteration checkpoint; return the checkpoint
+/// path plus a held-out stream drawn from the same mixture.
+fn fit_with_checkpoint(name: &str, n: usize, n_stream: usize) -> (std::path::PathBuf, Dataset) {
+    let d = 2;
+    let mut rng = Xoshiro256pp::seed_from_u64(11);
+    let all = GmmSpec::default_with(n + n_stream, d, 3).generate(&mut rng);
+    let train = Data::new(n, d, all.points.values[..n * d].to_vec());
+    let stream = Dataset {
+        points: Data::new(n_stream, d, all.points.values[n * d..].to_vec()),
+        labels: all.labels[n..].to_vec(),
+        true_k: all.true_k,
+    };
+    let ckpt_path = tmp(name);
+    let mut params = DpmmParams::gaussian_default(d);
+    params.iterations = 40;
+    params.seed = 12;
+    params.backend = BackendChoice::Native { threads: 2, shard_size: 2048 };
+    params.checkpoint_path = Some(ckpt_path.to_string_lossy().into_owned());
+    params.checkpoint_every = params.iterations;
+    let fit = DpmmFit::new(params).fit(&train).unwrap();
+    assert!(fit.num_clusters() >= 2, "fit collapsed to K={}", fit.num_clusters());
+    (ckpt_path, stream)
+}
+
+#[test]
+fn ingest_over_tcp_hot_swaps_without_dropping_predicts() {
+    let (ckpt, stream) = fit_with_checkpoint("e2e", 3000, 1400);
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).unwrap();
+    let fitter = IncrementalFitter::from_snapshot(
+        &snapshot,
+        StreamConfig {
+            window: 2048,
+            sweeps: 1,
+            threads: 2,
+            alpha: 10.0,
+            seed: 99,
+            ..StreamConfig::default()
+        },
+    )
+    .unwrap();
+    let engine = ScoringEngine::new(&snapshot, EngineConfig::default()).unwrap();
+    let server =
+        spawn_streaming(engine, fitter, "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = server.addr().to_string();
+    let d = 2usize;
+
+    // Split the held-out stream: 12 ingest mini-batches of 100 points, the
+    // remaining 200 points are the concurrent predict traffic.
+    let batches = 12usize;
+    let per = 100usize;
+    let predict_pts = &stream.points.values[batches * per * d..];
+    assert!(predict_pts.len() >= 200 * d);
+
+    let stop = AtomicBool::new(false);
+    let predict_ok = AtomicU64::new(0);
+    let predict_err = AtomicU64::new(0);
+    let mut receipts = Vec::new();
+    std::thread::scope(|scope| {
+        // Two hammering predict clients, running across every hot-swap.
+        for c in 0..2usize {
+            let addr = addr.clone();
+            let stop = &stop;
+            let predict_ok = &predict_ok;
+            let predict_err = &predict_err;
+            scope.spawn(move || {
+                let mut client = DpmmClient::connect(&addr).unwrap();
+                let chunk = 50 * d;
+                let slots = predict_pts.len() / chunk;
+                let mut turn = c;
+                while !stop.load(Ordering::Relaxed) {
+                    let lo = (turn % slots) * chunk;
+                    match client.predict(&predict_pts[lo..lo + chunk], d) {
+                        Ok(p) => {
+                            assert_eq!(p.labels.len(), 50);
+                            predict_ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            predict_err.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    turn += 1;
+                }
+            });
+        }
+        // Main thread: the ingest stream.
+        let mut client = DpmmClient::connect(&addr).unwrap();
+        let info_before = client.info().unwrap();
+        for b in 0..batches {
+            let lo = b * per * d;
+            let receipt = client.ingest(&stream.points.values[lo..lo + per * d], d).unwrap();
+            assert_eq!(receipt.accepted, per as u64);
+            receipts.push(receipt);
+        }
+        let info_after = client.info().unwrap();
+        assert_eq!(
+            info_after.n_total,
+            info_before.n_total + (batches * per) as u64,
+            "served snapshot must reflect the ingested points"
+        );
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // Generations increment strictly: one bump per applied batch.
+    for (i, r) in receipts.iter().enumerate() {
+        assert_eq!(r.generation, 2 + i as u64, "receipt {i}: {r:?}");
+    }
+    // The window absorbed everything (capacity 2048 > 1200 ingested).
+    assert_eq!(receipts.last().unwrap().window, (batches * per) as u64);
+
+    // Zero dropped/errored predicts across all 12 swaps, and plenty ran.
+    let ok = predict_ok.load(Ordering::Relaxed);
+    let errs = predict_err.load(Ordering::Relaxed);
+    assert_eq!(errs, 0, "predict requests errored during hot-swaps");
+    assert!(ok > 0, "no predict requests completed during the ingest stream");
+
+    // /stats reflects the final state: generation 1 + 12, all points
+    // folded, no lag.
+    let mut client = DpmmClient::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.generation, 1 + batches as u64);
+    assert_eq!(stats.ingested, (batches * per) as u64);
+    assert_eq!(stats.ingest_pending, 0);
+
+    // The refreshed model still assigns sensibly: held-out NMI of MAP
+    // labels on the predict slice stays high after 12 swaps.
+    let n_eval = 200usize;
+    let eval = &predict_pts[..n_eval * d];
+    let pred = client.predict(eval, d).unwrap();
+    let truth: Vec<usize> = stream.labels[batches * per..batches * per + n_eval].to_vec();
+    let labels: Vec<usize> = pred.labels.iter().map(|&l| l as usize).collect();
+    let score = nmi(&truth, &labels);
+    assert!(score > 0.8, "post-swap held-out NMI too low: {score}");
+
+    server.stop().unwrap();
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn ingest_rejections_leave_previous_snapshot_serving() {
+    let (ckpt, _) = fit_with_checkpoint("reject", 1500, 300);
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).unwrap();
+    let fitter = IncrementalFitter::from_snapshot(
+        &snapshot,
+        StreamConfig { window: 256, sweeps: 1, threads: 1, seed: 5, ..StreamConfig::default() },
+    )
+    .unwrap();
+    let engine = ScoringEngine::new(&snapshot, EngineConfig::default()).unwrap();
+    let server =
+        spawn_streaming(engine, fitter, "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let mut client = DpmmClient::connect(&server.addr().to_string()).unwrap();
+
+    // NaN batch: typed error, generation unchanged, server keeps serving.
+    let err = client.ingest(&[f64::NAN, 0.0], 2).unwrap_err();
+    assert!(err.to_string().contains("non-finite"), "{err}");
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.generation, 1);
+    assert_eq!(stats.ingest_pending, 0, "rejected batch must not linger as lag");
+    assert!(client.predict(&[0.0, 0.0], 2).is_ok());
+
+    // A good batch afterwards still applies.
+    let receipt = client.ingest(&[0.1, 0.2, 0.3, 0.4], 2).unwrap();
+    assert_eq!(receipt.generation, 2);
+    server.stop().unwrap();
+    std::fs::remove_file(&ckpt).ok();
+}

@@ -12,7 +12,7 @@
 //!   before touching the global accumulator, which legally reorders FP
 //!   addition).
 
-use dpmm::backend::shard::{shard_step_scalar, shard_step_tiled, Shard};
+use dpmm::backend::shard::{shard_step_scalar, shard_step_tiled, AssignKernel, Shard};
 use dpmm::backend::StatsBundle;
 use dpmm::datagen::{Data, GmmSpec, MultinomialSpec};
 use dpmm::model::DpmmState;
@@ -20,7 +20,9 @@ use dpmm::rng::Xoshiro256pp;
 use dpmm::sampler::{
     sample_params, sample_sub_weights, sample_weights, SamplerOptions, StepParams, StepPlan,
 };
+use dpmm::serve::ModelSnapshot;
 use dpmm::stats::{DirMultPrior, NiwPrior, Prior, Stats};
+use dpmm::stream::{IncrementalFitter, StreamConfig};
 
 /// Build a randomized-but-valid parameter snapshot over `k` clusters by
 /// running the coordinator-side steps (a)–(d) on a fresh state.
@@ -141,6 +143,109 @@ fn single_cluster_is_equivalent() {
     let plan = random_plan(&prior, 1, ds.points.n, 42);
     for tile in [1usize, 32, 97, 100] {
         assert_equivalent(&ds.points, &prior, &plan, tile, 19);
+    }
+}
+
+/// Seed snapshot for the incremental-fit determinism case: a 3-blob
+/// Gaussian model built from poured statistics (no MCMC required).
+fn stream_seed_snapshot(d: usize) -> ModelSnapshot {
+    let prior = Prior::Niw(NiwPrior::weak(d));
+    let mut rng = Xoshiro256pp::seed_from_u64(123);
+    let mut state = DpmmState::new(4.0, prior.clone(), 3, 300, &mut rng);
+    for (k, center) in [-8.0f64, 0.0, 8.0].into_iter().enumerate() {
+        let mut s = prior.empty_stats();
+        for i in 0..100 {
+            let x: Vec<f64> = (0..d)
+                .map(|j| center + 0.15 * ((i * (j + 3) + k) % 13) as f64 - 0.9)
+                .collect();
+            s.add(&x);
+        }
+        state.clusters[k].stats = s;
+    }
+    ModelSnapshot::from_state(&state).unwrap()
+}
+
+/// A deterministic stream of mini-batches with varying sizes (odd tile and
+/// shard remainders included) hopping between the blobs.
+fn stream_batches(d: usize) -> Vec<Vec<f64>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(77);
+    let centers = [-8.0f64, 0.0, 8.0];
+    [37usize, 64, 5, 81, 128, 33]
+        .iter()
+        .map(|&n| {
+            let mut batch = Vec::with_capacity(n * d);
+            for _ in 0..n {
+                let c = centers[rng.next_range(3)];
+                for _ in 0..d {
+                    batch.push(c + (rng.next_f64() - 0.5) * 1.4);
+                }
+            }
+            batch
+        })
+        .collect()
+}
+
+#[test]
+fn incremental_fit_bitwise_deterministic_across_threads_and_kernels() {
+    // A fixed-seed incremental fit — same ingest order, same batch
+    // boundaries — must produce bitwise-identical window labels and
+    // per-cluster masses across 1, 2, and 8 worker threads AND across the
+    // scalar-oracle vs tiled assignment kernels. The fitter's canonical
+    // grouped statistics fold is what closes the induction: identical
+    // labels ⇒ identical (bitwise) statistics ⇒ identical next-sweep
+    // plans, regardless of which kernel or how many threads ran the sweep.
+    let d = 3;
+    let snap = stream_seed_snapshot(d);
+    let batches = stream_batches(d);
+    let run = |threads: usize, kernel: AssignKernel| {
+        let mut f = IncrementalFitter::from_snapshot(
+            &snap,
+            StreamConfig {
+                window: 4096, // no eviction: every ingested label stays comparable
+                sweeps: 2,
+                threads,
+                shard_size: 48, // several shards with an odd remainder
+                kernel,
+                alpha: 4.0,
+                seed: 2024,
+                ..StreamConfig::default()
+            },
+        )
+        .unwrap();
+        for b in &batches {
+            f.ingest(b).unwrap();
+        }
+        (
+            f.window_labels().to_vec(),
+            f.window_sub_labels().to_vec(),
+            f.counts(),
+        )
+    };
+    let reference = run(1, AssignKernel::Tiled);
+    assert_eq!(
+        reference.0.len(),
+        batches.iter().map(|b| b.len() / d).sum::<usize>()
+    );
+    for threads in [2usize, 8] {
+        let got = run(threads, AssignKernel::Tiled);
+        assert_eq!(got.0, reference.0, "labels diverged at threads={threads}");
+        assert_eq!(got.1, reference.1, "sub-labels diverged at threads={threads}");
+        assert_eq!(got.2, reference.2, "masses diverged at threads={threads}");
+    }
+    for threads in [1usize, 2, 8] {
+        let got = run(threads, AssignKernel::Scalar);
+        assert_eq!(
+            got.0, reference.0,
+            "labels diverged at scalar kernel, threads={threads}"
+        );
+        assert_eq!(
+            got.1, reference.1,
+            "sub-labels diverged at scalar kernel, threads={threads}"
+        );
+        assert_eq!(
+            got.2, reference.2,
+            "masses diverged at scalar kernel, threads={threads}"
+        );
     }
 }
 

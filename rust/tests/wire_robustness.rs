@@ -1,0 +1,289 @@
+//! Fuzz-style corruption tests over the shared frame codec — both message
+//! sets that ride on it (`serve/wire.rs` and `backend/distributed/wire.rs`)
+//! — plus live-server resilience: truncated frames, oversized length
+//! prefixes, garbage payloads, and mid-`ingest` disconnects must all
+//! surface as typed errors, never panic, and never leave the serving
+//! batcher wedged (the server still answers `/stats` and applies ingests
+//! afterwards).
+//!
+//! The fuzzing is deterministic (seeded Xoshiro): every mutation that a
+//! run exercises is reproducible from the seed in this file.
+
+use dpmm::backend::distributed::wire::{read_frame, write_frame, Message, MAX_FRAME};
+use dpmm::model::DpmmState;
+use dpmm::rng::{Rng, Xoshiro256pp};
+use dpmm::sampler::{MergeOp, SplitOp, StepParams};
+use dpmm::serve::wire::{ServeMessage, FLAG_LOG_PROBS};
+use dpmm::serve::{
+    spawn, spawn_streaming, DpmmClient, EngineConfig, ModelSnapshot, ScoringEngine, ServeConfig,
+};
+use dpmm::stats::{DirMultPrior, NiwPrior, Prior};
+use dpmm::stream::{IncrementalFitter, StreamConfig};
+use std::io::Write;
+use std::net::TcpStream;
+
+// ---------------------------------------------------------------------------
+// Codec-level fuzzing (no sockets).
+// ---------------------------------------------------------------------------
+
+/// One valid encoding of every serve-protocol message shape.
+fn serve_corpus() -> Vec<Vec<u8>> {
+    vec![
+        ServeMessage::Predict { flags: FLAG_LOG_PROBS, n: 3, d: 2, x: vec![1.5; 6] },
+        ServeMessage::Scores {
+            labels: vec![0, 1, 2],
+            map_score: vec![-1.0, -2.0, -3.0],
+            log_predictive: vec![-4.0, -5.0, -6.0],
+            log_probs: Some(vec![-0.1; 9]),
+            k: 3,
+        },
+        ServeMessage::Info,
+        ServeMessage::InfoReply { d: 8, k: 4, family: 0, n_total: 1000 },
+        ServeMessage::Stats,
+        ServeMessage::StatsReply {
+            requests: 1,
+            points: 2,
+            batches: 3,
+            uptime_secs: 4.0,
+            points_per_sec: 5.0,
+            mean_batch_points: 6.0,
+            generation: 7,
+            ingested: 8,
+            ingest_pending: 9,
+        },
+        ServeMessage::Ingest { n: 2, d: 2, x: vec![0.25; 4] },
+        ServeMessage::IngestReply { accepted: 2, generation: 3, window: 4 },
+        ServeMessage::Shutdown,
+        ServeMessage::Ack,
+        ServeMessage::Error("boom".into()),
+    ]
+    .into_iter()
+    .map(|m| m.encode())
+    .collect()
+}
+
+/// One valid encoding of every fit-protocol message shape.
+fn distributed_corpus() -> Vec<Vec<u8>> {
+    let prior = Prior::Niw(NiwPrior::weak(2));
+    let mut rng = Xoshiro256pp::seed_from_u64(5);
+    let mut state = DpmmState::new(1.0, prior.clone(), 2, 4, &mut rng);
+    let mut s = prior.empty_stats();
+    s.add(&[1.0, 2.0]);
+    state.clusters[0].stats = s.clone();
+    dpmm::sampler::sample_params(
+        &mut state,
+        &dpmm::sampler::SamplerOptions::default(),
+        &mut rng,
+    );
+    vec![
+        Message::Init { d: 2, prior: prior.clone(), seed: 1, threads: 2, x: vec![1.0; 4] },
+        Message::Init {
+            d: 3,
+            prior: Prior::DirMult(DirMultPrior::symmetric(3, 0.5)),
+            seed: 2,
+            threads: 1,
+            x: vec![1.0, 0.0, 2.0],
+        },
+        Message::Step(StepParams::snapshot(&state)),
+        Message::StatsReply(vec![[s.clone(), prior.empty_stats()]]),
+        Message::ApplySplits(vec![SplitOp { target: 0, new_index: 2 }]),
+        Message::ApplyMerges(vec![MergeOp { keep: 0, absorb: 1 }]),
+        Message::Remap(vec![Some(0), None]),
+        Message::RandomizeLabels { k: 3 },
+        Message::GetLabels,
+        Message::Labels(vec![0, 1, 0, 1]),
+        Message::Ack,
+        Message::Shutdown,
+        Message::Error("nope".into()),
+    ]
+    .into_iter()
+    .map(|m| m.encode())
+    .collect()
+}
+
+#[test]
+fn every_truncation_is_a_typed_error_never_a_panic() {
+    // Decode requires the cursor to land exactly on the end, so every
+    // strict prefix must fail — across both protocols and every message
+    // shape, at every byte boundary.
+    for enc in serve_corpus() {
+        for cut in 0..enc.len() {
+            assert!(
+                ServeMessage::decode(&enc[..cut]).is_err(),
+                "serve truncation at {cut}/{} decoded",
+                enc.len()
+            );
+        }
+        assert!(ServeMessage::decode(&enc).is_ok());
+    }
+    for enc in distributed_corpus() {
+        for cut in 0..enc.len() {
+            assert!(
+                Message::decode(&enc[..cut]).is_err(),
+                "fit truncation at {cut}/{} decoded",
+                enc.len()
+            );
+        }
+        assert!(Message::decode(&enc).is_ok());
+    }
+}
+
+#[test]
+fn random_byte_flips_never_panic() {
+    // Bit flips may still decode (a flipped f64 payload is a different but
+    // valid message) — the invariant under fuzzing is "Result, not panic",
+    // plus trailing-byte and unknown-tag rejection.
+    let mut rng = Xoshiro256pp::seed_from_u64(0xF1F1);
+    for enc in serve_corpus().into_iter().chain(distributed_corpus()) {
+        for _ in 0..64 {
+            let mut bad = enc.clone();
+            let flips = 1 + rng.next_range(4);
+            for _ in 0..flips {
+                let pos = rng.next_range(bad.len());
+                bad[pos] ^= 1u8 << rng.next_range(8);
+            }
+            let _ = ServeMessage::decode(&bad);
+            let _ = Message::decode(&bad);
+        }
+        // Appended garbage must be rejected (trailing-byte check).
+        let mut trailing = enc.clone();
+        trailing.push(0);
+        assert!(ServeMessage::decode(&trailing).is_err() || Message::decode(&trailing).is_err());
+    }
+    // Pure garbage buffers of many lengths.
+    for len in [0usize, 1, 2, 3, 9, 64, 1024] {
+        let garbage: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let _ = ServeMessage::decode(&garbage);
+        let _ = Message::decode(&garbage);
+    }
+}
+
+#[test]
+fn oversized_and_truncated_frames_are_rejected() {
+    // Oversized length prefix: rejected before any allocation.
+    let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+    let mut cursor = std::io::Cursor::new(huge.to_vec());
+    assert!(read_frame(&mut cursor).is_err());
+    // Frame header promising more bytes than the stream holds.
+    let mut buf = Vec::new();
+    write_frame(&mut buf, b"abcdef").unwrap();
+    for cut in 0..buf.len() {
+        let mut cursor = std::io::Cursor::new(buf[..cut].to_vec());
+        assert!(read_frame(&mut cursor).is_err(), "cut={cut}");
+    }
+    // write_frame refuses bodies the readers would reject.
+    let big = vec![0u8; MAX_FRAME + 1];
+    let mut sink = Vec::new();
+    assert!(write_frame(&mut sink, &big).is_err());
+    assert!(sink.is_empty(), "no bytes may hit the wire for a refused frame");
+}
+
+// ---------------------------------------------------------------------------
+// Live-server resilience.
+// ---------------------------------------------------------------------------
+
+/// Small Gaussian snapshot from poured statistics (no MCMC).
+fn small_snapshot() -> ModelSnapshot {
+    let prior = Prior::Niw(NiwPrior::weak(2));
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let mut state = DpmmState::new(1.0, prior.clone(), 2, 80, &mut rng);
+    for (k, c) in [(-5.0f64, 0usize), (5.0, 1)].map(|(c, k)| (k, c)) {
+        let mut s = prior.empty_stats();
+        for i in 0..40 {
+            s.add(&[c + 0.02 * (i % 9) as f64, 0.03 * (i % 5) as f64]);
+        }
+        state.clusters[k].stats = s;
+    }
+    ModelSnapshot::from_state(&state).unwrap()
+}
+
+fn streaming_server() -> (dpmm::serve::ServerHandle, String) {
+    let snap = small_snapshot();
+    let engine = ScoringEngine::new(&snap, EngineConfig::default()).unwrap();
+    let fitter = IncrementalFitter::from_snapshot(
+        &snap,
+        StreamConfig { window: 512, sweeps: 1, threads: 1, seed: 1, ..StreamConfig::default() },
+    )
+    .unwrap();
+    let handle = spawn_streaming(engine, fitter, "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = handle.addr().to_string();
+    (handle, addr)
+}
+
+#[test]
+fn corrupt_connections_do_not_wedge_the_batcher() {
+    let (server, addr) = streaming_server();
+
+    // (a) Raw garbage: the first 4 bytes parse as an over-cap length.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&[0xFF; 64]).unwrap();
+    } // dropped — server closes with a typed error, thread exits
+
+    // (b) Valid length prefix, then the peer dies mid-frame.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&100u32.to_le_bytes()).unwrap();
+        s.write_all(&[7u8; 10]).unwrap();
+    }
+
+    // (c) Mid-`ingest` disconnect: a real Ingest frame cut in half.
+    {
+        let msg = ServeMessage::Ingest { n: 8, d: 2, x: vec![1.0; 16] };
+        let mut frame = Vec::new();
+        dpmm::serve::wire::write_serve(&mut frame, &msg).unwrap();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&frame[..frame.len() / 2]).unwrap();
+    }
+
+    // (d) A complete frame whose body is garbage: typed Error *reply*, and
+    // the same connection keeps working.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut frame = Vec::new();
+        write_frame(&mut frame, &[0xAB, 0xCD, 0xEF]).unwrap();
+        s.write_all(&frame).unwrap();
+        let reply = dpmm::serve::wire::read_serve(&mut s).unwrap();
+        assert!(matches!(reply, ServeMessage::Error(_)), "{reply:?}");
+    }
+
+    // After all of that: a fresh client still gets /stats, ingest still
+    // applies (generation bumps), predict still answers.
+    let mut client = DpmmClient::connect(&addr).unwrap();
+    let before = client.stats().unwrap();
+    assert_eq!(before.generation, 1, "no corrupt bytes may have ingested");
+    assert_eq!(before.ingested, 0);
+    let receipt = client.ingest(&[-5.0, 0.0, 5.1, 0.1], 2).unwrap();
+    assert_eq!(receipt.accepted, 2);
+    assert_eq!(receipt.generation, 2);
+    let after = client.stats().unwrap();
+    assert_eq!(after.generation, 2);
+    assert_eq!(after.ingested, 2);
+    assert_eq!(after.ingest_pending, 0);
+    let pred = client.predict(&[-5.0, 0.0], 2).unwrap();
+    assert_eq!(pred.labels.len(), 1);
+
+    // Oversized ingest shape is a typed error reply, not a dropped
+    // connection; the client keeps working.
+    let err = client.ingest(&[1.0, 2.0, 3.0], 3).unwrap_err();
+    assert!(err.to_string().contains("dimension mismatch"), "{err}");
+    assert!(client.stats().is_ok());
+
+    server.stop().unwrap();
+}
+
+#[test]
+fn ingest_on_plain_serve_is_a_typed_error() {
+    let snap = small_snapshot();
+    let engine = ScoringEngine::new(&snap, EngineConfig::default()).unwrap();
+    let server = spawn(engine, "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = DpmmClient::connect(&addr).unwrap();
+    let err = client.ingest(&[0.0, 0.0], 2).unwrap_err();
+    assert!(err.to_string().contains("disabled"), "{err}");
+    // Non-streaming stats stay at generation 1 / zero lag.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.generation, 1);
+    assert_eq!(stats.ingest_pending, 0);
+    server.stop().unwrap();
+}

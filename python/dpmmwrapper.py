@@ -31,6 +31,17 @@ Against a ``dpmm stream`` endpoint the same client can also feed the model
 (`client.ingest(batch)`): the server folds the batch into its incremental
 fitter and hot-swaps a re-planned snapshot, so subsequent predictions see
 the new data — watch ``client.stats()["generation"]`` bump per ingest.
+
+Cluster mode is transparent to this client: when the server runs as
+``dpmm stream --workers=host:7878,host2:7878``, ingest batches are sharded
+across TCP worker machines behind the endpoint (restricted sweeps run
+worker-side; only O(K·d²) statistics deltas travel leader↔worker), but the
+client-facing wire is byte-identical. The only observable differences are
+aggregate: the receipt's ``window`` spans every worker's slice, and a
+worker failure surfaces as a typed :class:`ServerError` — ingest then
+stays halted until the stream leader restarts, while the endpoint keeps
+serving predictions from the last published generation
+(``tests/test_stream_client.py::TestClusterMode`` pins the client view).
 """
 
 import json
@@ -377,6 +388,15 @@ class DpmmClient:
         Blocks until the batch is folded and the re-planned snapshot is
         live; returns ``{"accepted", "generation", "window"}``. Predictions
         answered at or after the returned generation see the batch.
+
+        Works identically against a distributed endpoint
+        (``dpmm stream --workers=...``): the leader routes the batch to a
+        worker's window slice and ``window`` reports the global
+        (all-worker) resweepable total. A worker failing mid-ingest raises
+        :class:`ServerError`, and the endpoint keeps serving the last
+        published generation; further ingests keep erroring (the leader
+        halts ingest rather than risk folding statistics its workers never
+        agreed on) until the stream leader is restarted.
         """
         return _decode_ingest_reply(self._roundtrip(_encode_ingest(x)))
 

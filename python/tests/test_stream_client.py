@@ -40,7 +40,9 @@ class MockStreamServer:
     decoded ingest payload for assertions.
     """
 
-    def __init__(self, fail_next_ingest=False):
+    ERROR = b"ingest failed: batch contains non-finite values"
+
+    def __init__(self, fail_next_ingest=False, error_message=None):
         self._sock = socket.create_server(("127.0.0.1", 0))
         self.addr = "127.0.0.1:%d" % self._sock.getsockname()[1]
         self.generation = 1
@@ -48,6 +50,7 @@ class MockStreamServer:
         self.window = 0
         self.ingests = []  # decoded (n, d, ndarray) per Ingest frame
         self.fail_next_ingest = fail_next_ingest
+        self.error_message = error_message or self.ERROR
         self._thread = threading.Thread(target=self._serve, daemon=True)
         self._thread.start()
 
@@ -72,7 +75,7 @@ class MockStreamServer:
             self.ingests.append((n, d, x))
             if self.fail_next_ingest:
                 self.fail_next_ingest = False
-                msg = b"ingest failed: batch contains non-finite values"
+                msg = self.error_message
                 return (
                     struct.pack("<BBI", w.SERVE_PROTO_VERSION, w.TAG_ERROR, len(msg))
                     + msg
@@ -208,5 +211,56 @@ class TestIngestRoundtrip:
                 # Same connection keeps working; generation untouched.
                 assert client.stats()["generation"] == 1
                 assert client.ingest(np.zeros((1, 2)))["generation"] == 2
+        finally:
+            server.close()
+
+
+class TestClusterMode:
+    """Cluster-mode (`dpmm stream --workers=...`) contract tests.
+
+    Distribution happens entirely behind the server on the leader↔worker
+    protocol; the client-facing wire is byte-identical to the local mode.
+    These tests pin the two things a client *can* observe about a cluster:
+    the aggregate window spanning all worker slices, and worker failures
+    surfacing as typed ingest errors while the endpoint keeps serving the
+    last published generation.
+    """
+
+    def test_client_wire_is_topology_agnostic(self):
+        # The same DpmmClient bytes drive a clustered endpoint; the window
+        # in the receipt is the global (all-worker-slices) total.
+        server = MockStreamServer()
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                for b in range(3):
+                    receipt = client.ingest(np.full((100, 2), float(b)))
+                    assert receipt["accepted"] == 100
+                # Global window aggregates across worker slices.
+                assert receipt["window"] == 300
+                assert client.stats()["generation"] == 4
+        finally:
+            server.close()
+
+    def test_worker_death_surfaces_as_typed_error_and_serving_survives(self):
+        # Mirrors rust/tests/integration_stream_distributed.rs: a worker
+        # dying mid-ingest is a typed error reply, the generation does not
+        # advance, and the same connection keeps answering predict/stats.
+        # The real leader then *halts further ingest* (poisons itself)
+        # until the stream leader is restarted — it does not re-route or
+        # silently resume; only prediction/stats service continues. The
+        # second ingest below models the client's view after that restart.
+        server = MockStreamServer(
+            fail_next_ingest=True,
+            error_message=b"ingest failed: routing ingest batch 0 to worker 0: "
+            b"connection reset by peer",
+        )
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                with pytest.raises(w.ServerError, match="worker 0"):
+                    client.ingest(np.zeros((2, 2)))
+                assert client.stats()["generation"] == 1
+                assert client.stats()["ingest_pending"] == 0
+                # Post-restart: ingest applies and publishes again.
+                assert client.ingest(np.zeros((5, 2)))["generation"] == 2
         finally:
             server.close()

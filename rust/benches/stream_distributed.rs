@@ -1,0 +1,203 @@
+//! Distributed streaming ingest scaling: 1 vs 2 vs 4 workers at matched
+//! NMI.
+//!
+//! Protocol (EXPERIMENTS.md §Distributed streaming): fit a base model on
+//! an initial window of a synthetic GMM stream, export it through a
+//! checkpoint snapshot, then absorb B further mini-batches through a
+//! [`DistributedFitter`] over 1 / 2 / 4 in-process TCP workers
+//! (`spawn_local` — the multi-machine topology collapsed onto localhost;
+//! the wire path is identical to separate hosts). A local
+//! [`IncrementalFitter`] run over the same stream anchors the comparison.
+//!
+//! Quality is compared at the end of the stream: held-out NMI of MAP
+//! labels on the final batch. By the determinism contract the distributed
+//! NMI is *identical* across worker counts (same bits, different
+//! placement), so "matched NMI" holds exactly; the interesting outputs are
+//! ingest wall-clock and points/sec as worker count grows.
+//!
+//! Caveat baked into the JSON: in-process workers share this machine's
+//! cores, so the scaling curve is an upper bound on single-host overhead
+//! (framing, wire codec, leader folds), not a multi-host speedup claim —
+//! each worker runs `worker_threads = 1` so the compute genuinely shards.
+//!
+//! Machine-readable output: `BENCH_stream_distributed.json` (override with
+//! `BENCH_STREAM_DISTRIBUTED_OUT`). Scale: `DPMM_BENCH_SCALE=small|medium|full`.
+//!
+//! Run: `cargo bench --bench stream_distributed`
+
+#[path = "support/mod.rs"]
+mod support;
+
+use dpmm::backend::distributed::worker::spawn_local;
+use dpmm::config::DpmmParams;
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::Data;
+use dpmm::prelude::*;
+use dpmm::serve::{EngineConfig, ScoringEngine};
+use dpmm::stream::{
+    DistributedFitter, DistributedStreamConfig, IncrementalFitter, StreamConfig,
+};
+use dpmm::util::json::{self, Json};
+use std::time::Instant;
+
+const D: usize = 8;
+const K: usize = 5;
+
+struct Sizes {
+    n_base: usize,
+    batches: usize,
+    batch_n: usize,
+    window: usize,
+    base_iters: usize,
+}
+
+fn sizes() -> Sizes {
+    match support::scale() {
+        support::Scale::Small => {
+            Sizes { n_base: 6_000, batches: 12, batch_n: 2_000, window: 16_384, base_iters: 40 }
+        }
+        support::Scale::Medium => {
+            Sizes { n_base: 30_000, batches: 16, batch_n: 8_000, window: 65_536, base_iters: 60 }
+        }
+        support::Scale::Full => {
+            Sizes {
+                n_base: 100_000,
+                batches: 20,
+                batch_n: 50_000,
+                window: 262_144,
+                base_iters: 80,
+            }
+        }
+    }
+}
+
+/// MAP-label NMI of a model snapshot on held-out points.
+fn snapshot_nmi(snapshot: &ModelSnapshot, points: &[f64], truth: &[usize]) -> f64 {
+    let engine = ScoringEngine::new(snapshot, EngineConfig::default()).expect("engine");
+    let batch = engine.score(points, false).expect("score");
+    let labels: Vec<usize> = batch.labels.iter().map(|&l| l as usize).collect();
+    nmi(truth, &labels)
+}
+
+fn main() {
+    let Sizes { n_base, batches, batch_n, window, base_iters } = sizes();
+    let total = n_base + batches * batch_n;
+    println!(
+        "distributed stream bench: d={D} K={K} base={n_base} stream={batches}×{batch_n} \
+         window={window}"
+    );
+    let mut rng = Xoshiro256pp::seed_from_u64(4242);
+    let ds = GmmSpec::default_with(total, D, K).generate(&mut rng);
+
+    // Base fit on the initial window, exported through a checkpoint.
+    let train = Data::new(n_base, D, ds.points.values[..n_base * D].to_vec());
+    let ckpt =
+        std::env::temp_dir().join(format!("dpmm_bench_dstream_{}.ckpt", std::process::id()));
+    let mut params = DpmmParams::gaussian_default(D);
+    params.iterations = base_iters;
+    params.seed = 7;
+    params.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+    params.checkpoint_every = params.iterations;
+    DpmmFit::new(params).fit(&train).expect("base fit");
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).expect("snapshot");
+    std::fs::remove_file(&ckpt).ok();
+
+    // Evaluation slice: the final (most recent) batch.
+    let eval_lo = (n_base + (batches - 1) * batch_n) * D;
+    let eval_pts = &ds.points.values[eval_lo..eval_lo + batch_n * D];
+    let eval_truth = &ds.labels[n_base + (batches - 1) * batch_n..];
+
+    let batch_at = |b: usize| {
+        let lo = (n_base + b * batch_n) * D;
+        &ds.points.values[lo..lo + batch_n * D]
+    };
+
+    // --- local single-process anchor ------------------------------------
+    let mut local = IncrementalFitter::from_snapshot(
+        &snapshot,
+        StreamConfig { window, sweeps: 2, seed: 9, ..StreamConfig::default() },
+    )
+    .expect("local fitter");
+    let t0 = Instant::now();
+    for b in 0..batches {
+        local.ingest(batch_at(b)).expect("local ingest");
+    }
+    let local_secs = t0.elapsed().as_secs_f64();
+    let local_nmi =
+        snapshot_nmi(&local.snapshot().expect("snapshot"), eval_pts, eval_truth);
+    println!(
+        "[local ] {batches}×{batch_n}: {local_secs:.2}s \
+         ({:.0} pts/s, NMI {local_nmi:.3})",
+        (batches * batch_n) as f64 / local_secs
+    );
+
+    // --- distributed: 1 / 2 / 4 workers ---------------------------------
+    let mut results = Vec::new();
+    let mut nmis = Vec::new();
+    for n_workers in [1usize, 2, 4] {
+        let workers: Vec<String> =
+            (0..n_workers).map(|_| spawn_local().expect("spawn worker")).collect();
+        let mut fitter = DistributedFitter::from_snapshot(
+            &snapshot,
+            DistributedStreamConfig {
+                workers,
+                worker_threads: 1,
+                window,
+                sweeps: 2,
+                seed: 9,
+                ..DistributedStreamConfig::default()
+            },
+        )
+        .expect("distributed fitter");
+        let t0 = Instant::now();
+        for b in 0..batches {
+            fitter.ingest(batch_at(b)).expect("distributed ingest");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let pts_per_sec = (batches * batch_n) as f64 / secs.max(1e-9);
+        let w_nmi =
+            snapshot_nmi(&fitter.snapshot().expect("snapshot"), eval_pts, eval_truth);
+        println!(
+            "[{n_workers} worker] {batches}×{batch_n}: {secs:.2}s ({pts_per_sec:.0} pts/s, \
+             NMI {w_nmi:.3})"
+        );
+        nmis.push(w_nmi);
+        results.push(Json::obj(vec![
+            ("workers", n_workers.into()),
+            ("ingest_secs", secs.into()),
+            ("points_per_sec", pts_per_sec.into()),
+            ("nmi_final_batch", w_nmi.into()),
+        ]));
+    }
+    // The determinism contract makes "matched NMI" exact across worker
+    // counts — surface it as a checked invariant, not a tolerance claim.
+    let nmi_matched = nmis.iter().all(|&v| v == nmis[0]);
+    println!(
+        "NMI matched across worker counts: {nmi_matched} \
+         (bitwise-identical statistics by construction)"
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", "stream_distributed".into()),
+        ("d", D.into()),
+        ("k", K.into()),
+        ("n_base", n_base.into()),
+        ("batches", batches.into()),
+        ("batch_n", batch_n.into()),
+        ("window", window.into()),
+        ("note", "in-process localhost workers (worker_threads=1 each); scaling reflects single-host sharding + wire overhead, not multi-host bandwidth".into()),
+        ("local_anchor", Json::obj(vec![
+            ("ingest_secs", local_secs.into()),
+            ("points_per_sec", ((batches * batch_n) as f64 / local_secs.max(1e-9)).into()),
+            ("nmi_final_batch", local_nmi.into()),
+        ])),
+        ("nmi_matched_across_workers", Json::Bool(nmi_matched)),
+        ("runs", Json::Arr(results)),
+    ]);
+    let out = std::env::var("BENCH_STREAM_DISTRIBUTED_OUT")
+        .unwrap_or_else(|_| "BENCH_stream_distributed.json".into());
+    match std::fs::write(&out, json::to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

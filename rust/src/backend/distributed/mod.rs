@@ -5,6 +5,14 @@
 //! iteration afterwards exchanges only O(K·d²) parameters and statistics.
 //! This makes the backend suitable for low-bandwidth networks of weak
 //! agents — the paper's robotic-sensing motivation.
+//!
+//! The same workers also serve **streaming** sessions: a connection opened
+//! with `StreamInit` (instead of `Init`) holds a window slice of a
+//! distributed ingest stream and answers the v2 `Stream*` verbs — see
+//! [`wire`] for the versioned message-tag table and
+//! [`crate::stream::distributed`] for the leader half
+//! ([`DistributedBackend`] below is the *batch-fit* leader; the streaming
+//! leader is [`crate::stream::DistributedFitter`]).
 
 pub mod wire;
 pub mod worker;

@@ -1,10 +1,52 @@
 //! Binary wire format for the leader↔worker protocol.
 //!
 //! Hand-rolled little-endian codec (no serde available offline): every
-//! message is `[u32 length][u8 tag][payload]`. The payload encodes only
-//! parameters and sufficient statistics — the data matrix crosses the wire
-//! exactly once (Init), matching the paper's "we never transfer data; we
-//! transfer only sufficient statistics and parameters".
+//! message is `[u32 length][u8 version][u8 tag][payload]`. The payload
+//! encodes only parameters and sufficient statistics — in batch mode the
+//! data matrix crosses the wire exactly once (Init), and in streaming mode
+//! each point crosses exactly once (StreamIngest), matching the paper's
+//! "we never transfer data; we transfer only sufficient statistics and
+//! parameters".
+//!
+//! # Message-tag reference (protocol version 2)
+//!
+//! | tag | message          | payload layout                                           | since | direction |
+//! |-----|------------------|----------------------------------------------------------|-------|-----------|
+//! | 1   | `Init`           | `u32 d`, prior, `u64 seed`, `u32 threads`, `f64s x`      | v1    | leader → worker |
+//! | 2   | `Step`           | step-params (K · {`f64 logw`, params, 2×sub})            | v1    | leader → worker |
+//! | 3   | `StatsReply`     | `u32 K`, K × 2 stats                                     | v1    | worker → leader |
+//! | 4   | `ApplySplits`    | `u32 n`, n × {`u32 target`, `u32 new_index`}             | v1    | leader → worker |
+//! | 5   | `ApplyMerges`    | `u32 n`, n × {`u32 keep`, `u32 absorb`}                  | v1    | leader → worker |
+//! | 6   | `Remap`          | `u32 n`, n × {`u8 some`, [`u32 v`]}                      | v1    | leader → worker |
+//! | 7   | `RandomizeLabels`| `u32 k`                                                  | v1    | leader → worker |
+//! | 8   | `GetLabels`      | —                                                        | v1    | leader → worker |
+//! | 9   | `Labels`         | `u32s`                                                   | v1    | worker → leader |
+//! | 10  | `Ack`            | —                                                        | v1    | worker → leader |
+//! | 11  | `Shutdown`       | —                                                        | v1    | leader → worker |
+//! | 12  | `Error`          | `str`                                                    | v1    | worker → leader |
+//! | 13  | `StreamInit`     | `u32 d`, prior, `u32 threads`, `u8 kernel`               | v2    | leader → worker |
+//! | 14  | `StreamIngest`   | `u64 batch_id`, `u64 seed`, step-params (MAP), `f64s x`  | v2    | leader → worker |
+//! | 15  | `StreamSweep`    | step-params                                              | v2    | leader → worker |
+//! | 16  | `StreamEvict`    | `u64s batch_ids`                                         | v2    | leader → worker |
+//! | 17  | `StatsDelta`     | `u32 n`, n × batch-delta (see [`BatchDelta`])            | v2    | worker → leader |
+//!
+//! Sub-layouts: *prior* is `u8 family` + hyperparameters; *params* is
+//! `u8 family` + (μ, Σ | log θ); *stats* is `u8 family` + (n, Σx[, Σxxᵀ]);
+//! *batch-delta* is `u64 batch_id` + two stats bundles (`u32 k`, k × 2
+//! stats each; `k = 0` encodes an absent bundle). `f64s`/`u32s`/`u64s` are
+//! `u32`-length-prefixed runs.
+//!
+//! # Version-bump rules
+//!
+//! The version byte leads every frame; a decoder rejects any version other
+//! than its own [`PROTO_VERSION`], so a mixed-version fleet fails with a
+//! clear mismatch error instead of misparsing payloads. Bump the version
+//! when a payload layout changes **or** when new tags are added (v1 peers
+//! would report new tags as "unknown message tag", which is indistinguishable
+//! from corruption — the version byte turns it into an actionable error).
+//! History: **v1** — batch fit protocol (tags 1–12); **v2** — distributed
+//! streaming ingest (tags 13–17, this section's `Stream*`/`StatsDelta`
+//! family).
 
 use crate::linalg::Matrix;
 use crate::sampler::{MergeOp, SplitOp, StepParams};
@@ -12,8 +54,35 @@ use crate::stats::{DirMultParams, DirMultPrior, DirMultStats, NiwParams, NiwPrio
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 
-/// Protocol version byte (bump on wire changes).
-pub const PROTO_VERSION: u8 = 1;
+/// Protocol version byte (see the module docs for the bump rules).
+/// v2 added the distributed-streaming verbs (`StreamInit` / `StreamIngest`
+/// / `StreamSweep` / `StreamEvict` / `StatsDelta`).
+pub const PROTO_VERSION: u8 = 2;
+
+/// Sanity cap on cluster counts decoded from the wire (a corrupt count
+/// must not drive an unbounded allocation; real K is bounded by
+/// `max_clusters`, far below this).
+pub const MAX_WIRE_CLUSTERS: usize = 1 << 16;
+
+/// Sanity cap on per-message batch-delta entries (bounds the resident
+/// window batches a worker may report in one reply).
+pub const MAX_WIRE_BATCHES: usize = 1 << 20;
+
+/// One window batch's grouped sufficient-statistics delta, the unit of the
+/// streaming leader's canonical fold. Deltas are folded leader-side in
+/// ascending `batch_id` order regardless of which worker owns the batch —
+/// that fixed order is what makes the distributed stream's statistics
+/// bitwise-independent of the worker count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchDelta {
+    /// Global ingest-order id assigned by the leader.
+    pub batch_id: u64,
+    /// Per-(cluster, sub) statistics to retire from the leader's window
+    /// accumulators (empty = nothing to remove; K entries otherwise).
+    pub removed: Vec<[Stats; 2]>,
+    /// Per-(cluster, sub) statistics to fold in (empty or K entries).
+    pub added: Vec<[Stats; 2]>,
+}
 
 /// Leader→worker and worker→leader messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -34,6 +103,28 @@ pub enum Message {
     Shutdown,
     /// Worker-side failure description.
     Error(String),
+    /// Open a streaming session: model setup only, no data (points arrive
+    /// per-batch via `StreamIngest`). `kernel`: 0 = worker's
+    /// `DPMM_ASSIGN_KERNEL` environment, 1 = tiled, 2 = scalar oracle.
+    StreamInit { d: u32, prior: Prior, threads: u32, kernel: u8 },
+    /// Route one ingest mini-batch to this worker's window slice: MAP-seed
+    /// labels under `params` (a deterministic posterior-mean snapshot),
+    /// append to the window, reply with the batch's grouped stats delta.
+    /// `seed` starts the batch's persistent sweep-RNG stream (forked by the
+    /// leader in global batch order, so label trajectories never depend on
+    /// which worker owns the batch).
+    StreamIngest { batch_id: u64, seed: u64, params: StepParams, x: Vec<f64> },
+    /// Run one restricted-Gibbs assignment pass over every resident window
+    /// batch under `params`; reply with per-batch deltas of the moved
+    /// points (O(K·d²) per changed batch, never O(N·d)).
+    StreamSweep(StepParams),
+    /// Retire the named batches (oldest-first, leader-decided FIFO order)
+    /// from the window; reply with their current grouped statistics so the
+    /// leader can move the evidence from its window accumulators into the
+    /// frozen base.
+    StreamEvict { batch_ids: Vec<u64> },
+    /// Worker reply to the `Stream*` verbs: grouped per-batch stats deltas.
+    StatsDelta(Vec<BatchDelta>),
 }
 
 // ---------- primitive writers/readers ----------
@@ -83,6 +174,12 @@ impl Enc {
         self.u32(v.len() as u32);
         for &x in v {
             self.u32(x);
+        }
+    }
+    pub fn u64s(&mut self, v: &[u64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u64(x);
         }
     }
     pub fn matrix(&mut self, m: &Matrix) {
@@ -135,8 +232,19 @@ impl<'a> Dec<'a> {
         let n = self.u32()? as usize;
         Ok(String::from_utf8(self.take(n)?.to_vec())?)
     }
+    /// Guard a wire-declared element count against the bytes actually left
+    /// in the frame, *before* any allocation sized by it — a corrupt count
+    /// must produce a typed error, never a multi-GB `Vec` reservation (the
+    /// collects below pre-allocate from the iterator's exact size hint).
+    fn check_run(&self, n: usize, elem_bytes: usize) -> Result<()> {
+        match n.checked_mul(elem_bytes) {
+            Some(need) if need <= self.buf.len() - self.pos => Ok(()),
+            _ => bail!("declared run of {n} elements exceeds the frame remainder"),
+        }
+    }
     pub fn f64s(&mut self) -> Result<Vec<f64>> {
         let n = self.u32()? as usize;
+        self.check_run(n, 8)?;
         (0..n).map(|_| self.f64()).collect()
     }
     /// Raw (un-prefixed) f64 run of known length (see [`Enc::f64s_raw`]).
@@ -149,12 +257,20 @@ impl<'a> Dec<'a> {
     }
     pub fn u32s(&mut self) -> Result<Vec<u32>> {
         let n = self.u32()? as usize;
+        self.check_run(n, 4)?;
         (0..n).map(|_| self.u32()).collect()
+    }
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        self.check_run(n, 8)?;
+        (0..n).map(|_| self.u64()).collect()
     }
     pub fn matrix(&mut self) -> Result<Matrix> {
         let r = self.u32()? as usize;
         let c = self.u32()? as usize;
-        let data = (0..r * c).map(|_| self.f64()).collect::<Result<Vec<_>>>()?;
+        let rc = r.checked_mul(c).ok_or_else(|| anyhow!("matrix shape overflow"))?;
+        self.check_run(rc, 8)?;
+        let data = (0..rc).map(|_| self.f64()).collect::<Result<Vec<_>>>()?;
         Ok(Matrix::from_vec(r, c, data))
     }
     pub fn finished(&self) -> bool {
@@ -255,6 +371,42 @@ fn dec_stats(d: &mut Dec) -> Result<Stats> {
     })
 }
 
+/// Encode a per-(cluster, sub) stats bundle as `u32 k` + k × 2 stats
+/// (`k = 0` encodes an absent bundle — K is never 0 on a live model).
+fn enc_stats_bundle(e: &mut Enc, bundle: &[[Stats; 2]]) {
+    e.u32(bundle.len() as u32);
+    for [l, r] in bundle {
+        enc_stats(e, l);
+        enc_stats(e, r);
+    }
+}
+
+fn dec_stats_bundle(d: &mut Dec) -> Result<Vec<[Stats; 2]>> {
+    let k = d.u32()? as usize;
+    if k > MAX_WIRE_CLUSTERS {
+        bail!("stats bundle cluster count {k} exceeds the {MAX_WIRE_CLUSTERS} cap");
+    }
+    let mut bundle = Vec::with_capacity(k);
+    for _ in 0..k {
+        bundle.push([dec_stats(d)?, dec_stats(d)?]);
+    }
+    Ok(bundle)
+}
+
+fn enc_batch_delta(e: &mut Enc, delta: &BatchDelta) {
+    e.u64(delta.batch_id);
+    enc_stats_bundle(e, &delta.removed);
+    enc_stats_bundle(e, &delta.added);
+}
+
+fn dec_batch_delta(d: &mut Dec) -> Result<BatchDelta> {
+    Ok(BatchDelta {
+        batch_id: d.u64()?,
+        removed: dec_stats_bundle(d)?,
+        added: dec_stats_bundle(d)?,
+    })
+}
+
 fn enc_step_params(e: &mut Enc, p: &StepParams) {
     e.u32(p.k() as u32);
     for k in 0..p.k() {
@@ -269,6 +421,9 @@ fn enc_step_params(e: &mut Enc, p: &StepParams) {
 
 fn dec_step_params(d: &mut Dec) -> Result<StepParams> {
     let k = d.u32()? as usize;
+    if k > MAX_WIRE_CLUSTERS {
+        bail!("step-params cluster count {k} exceeds the {MAX_WIRE_CLUSTERS} cap");
+    }
     let mut p = StepParams {
         log_weights: Vec::with_capacity(k),
         params: Vec::with_capacity(k),
@@ -298,6 +453,11 @@ const TAG_LABELS: u8 = 9;
 const TAG_ACK: u8 = 10;
 const TAG_SHUTDOWN: u8 = 11;
 const TAG_ERROR: u8 = 12;
+const TAG_STREAM_INIT: u8 = 13;
+const TAG_STREAM_INGEST: u8 = 14;
+const TAG_STREAM_SWEEP: u8 = 15;
+const TAG_STREAM_EVICT: u8 = 16;
+const TAG_STATS_DELTA: u8 = 17;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
@@ -368,6 +528,35 @@ impl Message {
                 e.u8(TAG_ERROR);
                 e.str(msg);
             }
+            Message::StreamInit { d, prior, threads, kernel } => {
+                e.u8(TAG_STREAM_INIT);
+                e.u32(*d);
+                enc_prior(&mut e, prior);
+                e.u32(*threads);
+                e.u8(*kernel);
+            }
+            Message::StreamIngest { batch_id, seed, params, x } => {
+                e.u8(TAG_STREAM_INGEST);
+                e.u64(*batch_id);
+                e.u64(*seed);
+                enc_step_params(&mut e, params);
+                e.f64s(x);
+            }
+            Message::StreamSweep(p) => {
+                e.u8(TAG_STREAM_SWEEP);
+                enc_step_params(&mut e, p);
+            }
+            Message::StreamEvict { batch_ids } => {
+                e.u8(TAG_STREAM_EVICT);
+                e.u64s(batch_ids);
+            }
+            Message::StatsDelta(deltas) => {
+                e.u8(TAG_STATS_DELTA);
+                e.u32(deltas.len() as u32);
+                for delta in deltas {
+                    enc_batch_delta(&mut e, delta);
+                }
+            }
         }
         e.buf
     }
@@ -391,6 +580,9 @@ impl Message {
             TAG_STEP => Message::Step(dec_step_params(&mut d)?),
             TAG_STATS => {
                 let n = d.u32()? as usize;
+                if n > MAX_WIRE_CLUSTERS {
+                    bail!("stats reply cluster count {n} exceeds the {MAX_WIRE_CLUSTERS} cap");
+                }
                 let mut sub = Vec::with_capacity(n);
                 for _ in 0..n {
                     sub.push([dec_stats(&mut d)?, dec_stats(&mut d)?]);
@@ -429,6 +621,36 @@ impl Message {
             TAG_ACK => Message::Ack,
             TAG_SHUTDOWN => Message::Shutdown,
             TAG_ERROR => Message::Error(d.str()?),
+            TAG_STREAM_INIT => {
+                let dim = d.u32()?;
+                let prior = dec_prior(&mut d)?;
+                let threads = d.u32()?;
+                let kernel = d.u8()?;
+                if kernel > 2 {
+                    bail!("bad StreamInit kernel byte {kernel} (0 = env, 1 = tiled, 2 = scalar)");
+                }
+                Message::StreamInit { d: dim, prior, threads, kernel }
+            }
+            TAG_STREAM_INGEST => {
+                let batch_id = d.u64()?;
+                let seed = d.u64()?;
+                let params = dec_step_params(&mut d)?;
+                let x = d.f64s()?;
+                Message::StreamIngest { batch_id, seed, params, x }
+            }
+            TAG_STREAM_SWEEP => Message::StreamSweep(dec_step_params(&mut d)?),
+            TAG_STREAM_EVICT => Message::StreamEvict { batch_ids: d.u64s()? },
+            TAG_STATS_DELTA => {
+                let n = d.u32()? as usize;
+                if n > MAX_WIRE_BATCHES {
+                    bail!("stats delta batch count {n} exceeds the {MAX_WIRE_BATCHES} cap");
+                }
+                let mut deltas = Vec::with_capacity(n);
+                for _ in 0..n {
+                    deltas.push(dec_batch_delta(&mut d)?);
+                }
+                Message::StatsDelta(deltas)
+            }
             t => bail!("unknown message tag {t}"),
         };
         if !d.finished() {
@@ -616,6 +838,102 @@ mod tests {
         let r = prior.empty_stats();
         let msg = Message::StatsReply(vec![[l, r]]);
         assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    #[test]
+    fn roundtrip_stream_messages() {
+        use crate::model::DpmmState;
+        use crate::rng::Xoshiro256pp;
+        let prior = gauss_prior();
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let mut state = DpmmState::new(1.0, prior.clone(), 2, 10, &mut rng);
+        let mut s = prior.empty_stats();
+        s.add(&[1.0, 2.0, 3.0]);
+        state.clusters[0].stats = s.clone();
+        let params = crate::sampler::StepParams::map_snapshot(&state);
+        for msg in [
+            Message::StreamInit { d: 3, prior: prior.clone(), threads: 2, kernel: 0 },
+            Message::StreamInit { d: 3, prior: prior.clone(), threads: 1, kernel: 2 },
+            Message::StreamIngest {
+                batch_id: 7,
+                seed: 99,
+                params: params.clone(),
+                x: vec![0.5; 6],
+            },
+            Message::StreamSweep(params.clone()),
+            Message::StreamEvict { batch_ids: vec![0, 1, 5] },
+            Message::StreamEvict { batch_ids: vec![] },
+            Message::StatsDelta(vec![]),
+            Message::StatsDelta(vec![
+                BatchDelta { batch_id: 3, removed: vec![], added: vec![[s.clone(), prior.empty_stats()]] },
+                BatchDelta {
+                    batch_id: 4,
+                    removed: vec![[prior.empty_stats(), s.clone()]],
+                    added: vec![[s.clone(), s.clone()]],
+                },
+            ]),
+        ] {
+            let enc = msg.encode();
+            let dec = Message::decode(&enc).unwrap();
+            // StepParams round-trips structurally (Gaussian params are
+            // reconstructed from μ/Σ, so compare the carried fields).
+            match (&msg, &dec) {
+                (Message::StreamIngest { batch_id: a, seed: sa, params: pa, x: xa },
+                 Message::StreamIngest { batch_id: b, seed: sb, params: pb, x: xb }) => {
+                    assert_eq!((a, sa, xa), (b, sb, xb));
+                    assert_eq!(pa.k(), pb.k());
+                    assert_eq!(pa.log_weights, pb.log_weights);
+                }
+                (Message::StreamSweep(pa), Message::StreamSweep(pb)) => {
+                    assert_eq!(pa.k(), pb.k());
+                    assert_eq!(pa.sub_log_weights, pb.sub_log_weights);
+                }
+                _ => assert_eq!(dec, msg, "{msg:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_stream_fields() {
+        // Unknown kernel byte.
+        let mut e = Enc::new();
+        e.u8(PROTO_VERSION);
+        e.u8(13); // TAG_STREAM_INIT
+        e.u32(2);
+        super::enc_prior(&mut e, &gauss_prior());
+        e.u32(1);
+        e.u8(9); // bad kernel selector
+        assert!(Message::decode(&e.buf).is_err());
+        // Oversized cluster count in a stats bundle.
+        let mut e = Enc::new();
+        e.u8(PROTO_VERSION);
+        e.u8(17); // TAG_STATS_DELTA
+        e.u32(1);
+        e.u64(0);
+        e.u32((MAX_WIRE_CLUSTERS + 1) as u32);
+        assert!(Message::decode(&e.buf).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_declared_runs() {
+        // An f64 run declaring more elements than the frame holds must be
+        // a typed error before any allocation sized by the count.
+        let mut e = Enc::new();
+        e.u8(PROTO_VERSION);
+        e.u8(1); // TAG_INIT
+        e.u32(3);
+        enc_prior(&mut e, &gauss_prior());
+        e.u64(0);
+        e.u32(1);
+        e.u32(u32::MAX); // declared x length; no payload follows
+        assert!(Message::decode(&e.buf).is_err());
+        // Step-params cluster count over the cap (reachable from Step,
+        // StreamIngest, and StreamSweep alike).
+        let mut e = Enc::new();
+        e.u8(PROTO_VERSION);
+        e.u8(2); // TAG_STEP
+        e.u32((MAX_WIRE_CLUSTERS + 1) as u32);
+        assert!(Message::decode(&e.buf).is_err());
     }
 
     #[test]

@@ -1,22 +1,226 @@
 //! Worker process: owns one chunk of the data, answers the leader's
-//! protocol. Internally it is just a [`NativeBackend`] over the chunk —
-//! the same restricted-Gibbs kernel runs on every tier of the system.
+//! protocol. A connection runs one of two session kinds, decided by the
+//! leader's opening message:
+//!
+//! * **batch** (`Init`): the PR-0 fit mode — the worker wraps its chunk in
+//!   a [`NativeBackend`] and answers `Step`/`ApplySplits`/… (the same
+//!   restricted-Gibbs kernel runs on every tier of the system).
+//! * **streaming** (`StreamInit`): the worker holds a *window slice* of a
+//!   distributed stream — a [`StreamBuffer`] of routed mini-batches plus
+//!   one persistent sweep-RNG per batch — and answers
+//!   `StreamIngest`/`StreamSweep`/`StreamEvict` with grouped per-batch
+//!   sufficient-statistics deltas ([`BatchDelta`]). Points arrive once and
+//!   never leave; only O(K·d²) statistics flow back (see
+//!   [`crate::stream::distributed`] for the leader half and the
+//!   determinism contract).
 
-use super::wire::{read_message, write_message, Message};
+use super::wire::{read_message, write_message, BatchDelta, Message};
 use crate::backend::native::{NativeBackend, NativeConfig};
+use crate::backend::shard::{AssignKernel, Shard, DEFAULT_TILE};
 use crate::backend::Backend;
 use crate::datagen::Data;
 use crate::rng::Xoshiro256pp;
+use crate::sampler::StepParams;
+use crate::stats::{Prior, Stats};
+use crate::stream::fitter::{fold_groups, map_seed, run_shards};
+use crate::stream::StreamBuffer;
 use anyhow::{Context, Result};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-/// Worker session state (built on Init).
+/// Batch-mode session state (built on Init).
 struct WorkerState {
     backend: NativeBackend,
 }
 
-fn handle(stream: &mut TcpStream, state: &mut Option<WorkerState>) -> Result<bool> {
+/// One resident window batch of a streaming session: its point count plus
+/// the persistent RNG stream its sweeps draw from. The RNG is seeded by
+/// the leader in global batch order and travels with the batch, so label
+/// trajectories never depend on which worker owns it.
+struct StreamBatch {
+    id: u64,
+    n: usize,
+    rng: Xoshiro256pp,
+}
+
+/// Streaming-mode session state (built on StreamInit): this worker's slice
+/// of the distributed window.
+struct StreamState {
+    prior: Prior,
+    d: usize,
+    threads: usize,
+    kernel: AssignKernel,
+    /// Cluster count of the most recent leader plan (labels index into it;
+    /// grouped delta bundles are sized by it).
+    k: usize,
+    /// Window slice: resident points row-major with their live labels
+    /// (capacity is unbounded worker-side — eviction is leader-decided).
+    buffer: StreamBuffer,
+    /// Resident batches, oldest first, aligned with the buffer's rows.
+    batches: Vec<StreamBatch>,
+}
+
+/// What a connection is currently doing.
+enum Session {
+    Idle,
+    Batch(WorkerState),
+    Stream(StreamState),
+}
+
+fn empty_bundle(prior: &Prior, k: usize) -> Vec<[Stats; 2]> {
+    (0..k).map(|_| [prior.empty_stats(), prior.empty_stats()]).collect()
+}
+
+/// `StreamIngest`: MAP-seed the batch under the leader's deterministic
+/// posterior-mean plan, append it to the window slice, and report its
+/// grouped stats delta.
+fn stream_ingest(
+    ss: &mut StreamState,
+    batch_id: u64,
+    seed: u64,
+    params: StepParams,
+    x: Vec<f64>,
+) -> Message {
+    let d = ss.d;
+    if params.k() == 0 {
+        return Message::Error("StreamIngest with an empty parameter snapshot".into());
+    }
+    if x.len() % d != 0 {
+        return Message::Error(format!(
+            "ingest batch length {} is not a multiple of the model dimension {d}",
+            x.len()
+        ));
+    }
+    if x.iter().any(|v| !v.is_finite()) {
+        return Message::Error("ingest batch contains non-finite values".into());
+    }
+    let n = x.len() / d;
+    if n == 0 {
+        return Message::Error("StreamIngest with an empty batch".into());
+    }
+    let plan = params.plan();
+    if plan.d != d {
+        return Message::Error(format!(
+            "StreamIngest parameter dimension {} != session dimension {d}",
+            plan.d
+        ));
+    }
+    let (z, zsub) = map_seed(&plan, &x, n, d, ss.threads);
+    ss.k = params.k();
+    let mut added = empty_bundle(&ss.prior, ss.k);
+    let sel: Vec<u32> = (0..n as u32).collect();
+    fold_groups(&mut added, &x, d, &sel, &z, &zsub, true);
+    ss.buffer.push(&x, &z, &zsub);
+    ss.batches.push(StreamBatch { id: batch_id, n, rng: Xoshiro256pp::seed_from_u64(seed) });
+    Message::StatsDelta(vec![BatchDelta { batch_id, removed: Vec::new(), added }])
+}
+
+/// `StreamSweep`: one restricted-Gibbs assignment pass over every resident
+/// batch (one shard per batch, persistent per-batch RNG streams), replying
+/// with canonical per-batch deltas of the moved points only.
+fn stream_sweep(ss: &mut StreamState, params: StepParams) -> Message {
+    let wlen = ss.buffer.len();
+    if wlen == 0 {
+        return Message::StatsDelta(Vec::new());
+    }
+    if params.k() == 0 {
+        return Message::Error("StreamSweep with an empty parameter snapshot".into());
+    }
+    let d = ss.d;
+    let plan = params.plan();
+    if plan.d != d {
+        return Message::Error(format!(
+            "StreamSweep parameter dimension {} != session dimension {d}",
+            plan.d
+        ));
+    }
+    ss.k = params.k();
+    // Zero-copy hand-off of the window values into the sweep's `Data`
+    // (restored below — no early return may skip it).
+    let data = Data::new(wlen, d, ss.buffer.take_values());
+    // One shard per batch: shard boundaries are batch boundaries, so a
+    // batch's labels and RNG stream are identical wherever it resides.
+    let mut shards: Vec<Shard> = Vec::with_capacity(ss.batches.len());
+    let mut start = 0usize;
+    for b in ss.batches.iter_mut() {
+        let range = start..start + b.n;
+        let mut s =
+            Shard::new(range.clone(), std::mem::replace(&mut b.rng, Xoshiro256pp::seed_from_u64(0)));
+        s.z.copy_from_slice(&ss.buffer.labels()[range.clone()]);
+        s.zsub.copy_from_slice(&ss.buffer.sub_labels()[range]);
+        shards.push(s);
+        start += b.n;
+    }
+    run_shards(&data, &mut shards, &plan, &ss.prior, ss.kernel, DEFAULT_TILE, ss.threads);
+    // Per-batch canonical delta folds (single-threaded, batch-local
+    // selection order — the leader replays them in global batch id order).
+    let mut deltas = Vec::new();
+    let mut new_z = Vec::with_capacity(wlen);
+    let mut new_zsub = Vec::with_capacity(wlen);
+    for (b, shard) in ss.batches.iter_mut().zip(shards) {
+        let off = shard.range.start;
+        let prev_z = &ss.buffer.labels()[shard.range.clone()];
+        let prev_zsub = &ss.buffer.sub_labels()[shard.range.clone()];
+        let changed: Vec<u32> = (0..b.n)
+            .filter(|&i| prev_z[i] != shard.z[i] || prev_zsub[i] != shard.zsub[i])
+            .map(|i| i as u32)
+            .collect();
+        if !changed.is_empty() {
+            let values = &data.values[off * d..(off + b.n) * d];
+            let mut removed = empty_bundle(&ss.prior, ss.k);
+            let mut added = empty_bundle(&ss.prior, ss.k);
+            fold_groups(&mut removed, values, d, &changed, prev_z, prev_zsub, true);
+            fold_groups(&mut added, values, d, &changed, &shard.z, &shard.zsub, true);
+            deltas.push(BatchDelta { batch_id: b.id, removed, added });
+        }
+        new_z.extend_from_slice(&shard.z);
+        new_zsub.extend_from_slice(&shard.zsub);
+        b.rng = shard.rng;
+    }
+    ss.buffer.restore_values(data.values);
+    ss.buffer.set_labels(new_z, new_zsub);
+    Message::StatsDelta(deltas)
+}
+
+/// `StreamEvict`: retire the named batches (which must be the oldest
+/// residents, in order — eviction is the leader's global FIFO) and report
+/// their current grouped statistics so the leader can move the evidence
+/// from its window accumulators into the frozen base.
+fn stream_evict(ss: &mut StreamState, batch_ids: Vec<u64>) -> Message {
+    let d = ss.d;
+    let mut deltas = Vec::with_capacity(batch_ids.len());
+    for id in batch_ids {
+        match ss.batches.first() {
+            Some(b) if b.id == id => {}
+            Some(b) => {
+                return Message::Error(format!(
+                    "evict out of order: asked for batch {id}, oldest resident is {}",
+                    b.id
+                ))
+            }
+            None => {
+                return Message::Error(format!("evict of unknown batch {id}: window empty"))
+            }
+        }
+        let b = ss.batches.remove(0);
+        let mut stats = empty_bundle(&ss.prior, ss.k);
+        let sel: Vec<u32> = (0..b.n as u32).collect();
+        fold_groups(
+            &mut stats,
+            &ss.buffer.values()[..b.n * d],
+            d,
+            &sel,
+            &ss.buffer.labels()[..b.n],
+            &ss.buffer.sub_labels()[..b.n],
+            true,
+        );
+        ss.buffer.evict_front(b.n);
+        deltas.push(BatchDelta { batch_id: b.id, removed: Vec::new(), added: stats });
+    }
+    Message::StatsDelta(deltas)
+}
+
+fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
     let msg = read_message(stream)?;
     let reply = match msg {
         Message::Init { d, prior, seed, threads, x } => {
@@ -33,51 +237,88 @@ fn handle(stream: &mut TcpStream, state: &mut Option<WorkerState>) -> Result<boo
                 ..NativeConfig::default()
             };
             let backend = NativeBackend::new(data, prior, config, &mut rng);
-            *state = Some(WorkerState { backend });
+            *session = Session::Batch(WorkerState { backend });
             Message::Ack
         }
-        Message::Step(params) => match state.as_mut() {
-            Some(ws) => match ws.backend.step(&params) {
+        Message::StreamInit { d, prior, threads, kernel } => {
+            let d = d as usize;
+            if d == 0 || prior.dim() != d {
+                Message::Error(format!(
+                    "StreamInit dimension {d} does not match the prior's {}",
+                    prior.dim()
+                ))
+            } else {
+                let kernel = match kernel {
+                    0 => AssignKernel::from_env(),
+                    1 => AssignKernel::Tiled,
+                    _ => AssignKernel::Scalar,
+                };
+                *session = Session::Stream(StreamState {
+                    prior,
+                    d,
+                    threads: (threads as usize).max(1),
+                    kernel,
+                    k: 0,
+                    buffer: StreamBuffer::new(d, usize::MAX),
+                    batches: Vec::new(),
+                });
+                Message::Ack
+            }
+        }
+        Message::StreamIngest { batch_id, seed, params, x } => match session {
+            Session::Stream(ss) => stream_ingest(ss, batch_id, seed, params, x),
+            _ => Message::Error("StreamIngest before StreamInit".into()),
+        },
+        Message::StreamSweep(params) => match session {
+            Session::Stream(ss) => stream_sweep(ss, params),
+            _ => Message::Error("StreamSweep before StreamInit".into()),
+        },
+        Message::StreamEvict { batch_ids } => match session {
+            Session::Stream(ss) => stream_evict(ss, batch_ids),
+            _ => Message::Error("StreamEvict before StreamInit".into()),
+        },
+        Message::Step(params) => match session {
+            Session::Batch(ws) => match ws.backend.step(&params) {
                 Ok(bundle) => Message::StatsReply(bundle.sub_stats),
                 Err(e) => Message::Error(format!("step failed: {e}")),
             },
-            None => Message::Error("Step before Init".into()),
+            _ => Message::Error("Step before Init".into()),
         },
-        Message::ApplySplits(ops) => match state.as_mut() {
-            Some(ws) => {
+        Message::ApplySplits(ops) => match session {
+            Session::Batch(ws) => {
                 ws.backend.apply_splits(&ops)?;
                 Message::Ack
             }
-            None => Message::Error("ApplySplits before Init".into()),
+            _ => Message::Error("ApplySplits before Init".into()),
         },
-        Message::ApplyMerges(ops) => match state.as_mut() {
-            Some(ws) => {
+        Message::ApplyMerges(ops) => match session {
+            Session::Batch(ws) => {
                 ws.backend.apply_merges(&ops)?;
                 Message::Ack
             }
-            None => Message::Error("ApplyMerges before Init".into()),
+            _ => Message::Error("ApplyMerges before Init".into()),
         },
-        Message::Remap(map) => match state.as_mut() {
-            Some(ws) => {
+        Message::Remap(map) => match session {
+            Session::Batch(ws) => {
                 let map: Vec<Option<usize>> =
                     map.into_iter().map(|m| m.map(|v| v as usize)).collect();
                 ws.backend.remap(&map)?;
                 Message::Ack
             }
-            None => Message::Error("Remap before Init".into()),
+            _ => Message::Error("Remap before Init".into()),
         },
-        Message::RandomizeLabels { k } => match state.as_mut() {
-            Some(ws) => {
+        Message::RandomizeLabels { k } => match session {
+            Session::Batch(ws) => {
                 ws.backend.randomize_labels(k as usize);
                 Message::Ack
             }
-            None => Message::Error("RandomizeLabels before Init".into()),
+            _ => Message::Error("RandomizeLabels before Init".into()),
         },
-        Message::GetLabels => match state.as_ref() {
-            Some(ws) => {
+        Message::GetLabels => match session {
+            Session::Batch(ws) => {
                 Message::Labels(ws.backend.labels()?.into_iter().map(|l| l as u32).collect())
             }
-            None => Message::Error("GetLabels before Init".into()),
+            _ => Message::Error("GetLabels before Init".into()),
         },
         Message::Shutdown => {
             write_message(stream, &Message::Ack)?;
@@ -94,9 +335,9 @@ pub fn serve_connection(mut stream: TcpStream) -> Result<()> {
     // NODELAY + I/O timeouts: a leader that dies mid-protocol unblocks the
     // worker within one timeout instead of wedging it forever.
     super::wire::configure_stream(&stream).ok();
-    let mut state: Option<WorkerState> = None;
+    let mut session = Session::Idle;
     loop {
-        match handle(&mut stream, &mut state) {
+        match handle(&mut stream, &mut session) {
             Ok(true) => continue,
             Ok(false) => return Ok(()),
             Err(e) => {
@@ -132,7 +373,8 @@ pub fn serve(addr: &str) -> Result<()> {
 
 /// Spawn an in-process worker on an ephemeral port; returns its address.
 /// Used by tests, examples, and `--workers N` convenience mode (the paper's
-/// multi-machine topology collapsed onto localhost).
+/// multi-machine topology collapsed onto localhost). The worker serves
+/// whichever session kind — batch fit or streaming — the leader opens.
 pub fn spawn_local() -> Result<String> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();

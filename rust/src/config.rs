@@ -100,10 +100,13 @@ impl ServeSettings {
 }
 
 /// Settings for the streaming ingestion path (`dpmm stream`); maps onto
-/// [`crate::stream::StreamConfig`] plus the serving knobs it rides with.
+/// [`crate::stream::StreamConfig`] (single machine) or
+/// [`crate::stream::DistributedStreamConfig`] (when `--workers` is given)
+/// plus the serving knobs it rides with.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StreamSettings {
-    /// Sliding-window capacity in points.
+    /// Sliding-window capacity in points (global across workers in
+    /// distributed mode).
     pub window: usize,
     /// Restricted-Gibbs sweeps over the window per ingested batch.
     pub sweeps: usize,
@@ -113,18 +116,35 @@ pub struct StreamSettings {
     pub alpha: f64,
     /// RNG seed for the sweep streams.
     pub seed: u64,
+    /// Distributed ingest workers (`host:port` running `dpmm worker`;
+    /// empty = single-process streaming).
+    pub workers: Vec<String>,
+    /// Sweep threads per worker process (distributed mode only).
+    pub worker_threads: usize,
 }
 
 impl Default for StreamSettings {
     fn default() -> Self {
-        Self { window: 32 * 1024, sweeps: 2, decay: 1.0, alpha: 10.0, seed: 0 }
+        Self {
+            window: 32 * 1024,
+            sweeps: 2,
+            decay: 1.0,
+            alpha: 10.0,
+            seed: 0,
+            workers: Vec::new(),
+            worker_threads: 1,
+        }
     }
 }
 
 impl StreamSettings {
-    /// Parse `--window / --sweeps / --decay / --alpha / --seed` overrides.
+    /// Parse `--window / --sweeps / --decay / --alpha / --seed /
+    /// --workers / --worker_threads` overrides.
     pub fn from_args(args: &Args) -> Result<Self> {
-        let mut s = StreamSettings::default();
+        let mut s = StreamSettings { workers: args.get_list("workers"), ..Default::default() };
+        if let Some(wt) = args.get_usize("worker_threads")? {
+            s.worker_threads = wt.max(1);
+        }
         if let Some(w) = args.get_usize("window")? {
             s.window = w.max(1);
         }
@@ -488,6 +508,17 @@ mod tests {
         assert_eq!(s.decay, 0.97);
         assert_eq!(s.alpha, 5.0);
         assert_eq!(s.seed, StreamSettings::default().seed);
+        assert!(s.workers.is_empty(), "no --workers ⇒ single-process streaming");
+        let cluster = Args::parse(
+            ["stream", "--workers=h1:7878, h2:7878", "--worker_threads=4"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        let s = StreamSettings::from_args(&cluster).unwrap();
+        assert_eq!(s.workers, vec!["h1:7878", "h2:7878"]);
+        assert_eq!(s.worker_threads, 4);
         for bad in ["--decay=0", "--decay=1.5", "--alpha=-2"] {
             let args = Args::parse(
                 ["stream", bad].iter().map(|s| s.to_string()),

@@ -15,6 +15,7 @@
 //! dpmm stream --checkpoint=fit.ckpt|--snapshot=model.snap --addr=0.0.0.0:7979
 //!          [--window=32768] [--sweeps=2] [--decay=1.0] [--alpha=10] [--seed=0]
 //!          [--threads=0] [--tile=128] [--batch_points=65536]
+//!          [--workers=host:7878,host2:7878] [--worker_threads=1]
 //! dpmm predict --data=points.npy (--addr=host:7979 | --checkpoint=fit.ckpt | --snapshot=model.snap)
 //!          [--probs] [--labels_out=labels.npy] [--result_path=result.json]
 //! dpmm snapshot --checkpoint=fit.ckpt --out=model.snap
@@ -30,7 +31,9 @@ use dpmm::datagen::{self, Data, Dataset, GmmSpec, MultinomialSpec};
 use dpmm::metrics;
 use dpmm::rng::Xoshiro256pp;
 use dpmm::serve::{self, DpmmClient, EngineConfig, ModelSnapshot, Prediction, ScoringEngine};
-use dpmm::stream::{IncrementalFitter, StreamConfig};
+use dpmm::stream::{
+    DistributedFitter, DistributedStreamConfig, IncrementalFitter, StreamConfig,
+};
 use dpmm::util::{json, npy};
 
 const FLAGS: &[&str] = &["verbose", "help", "version", "probs"];
@@ -81,6 +84,7 @@ fn print_help() {
          \x20 worker    run a distributed worker (leader connects over TCP)\n\
          \x20 serve     serve posterior-predictive queries from a fitted model\n\
          \x20 stream    serve + streaming ingest with live snapshot hot-swap\n\
+         \x20           (--workers=host:port,... shards ingest across dpmm workers)\n\
          \x20 predict   score new points (against a server or a local model)\n\
          \x20 snapshot  export an immutable model snapshot from a checkpoint\n\
          \x20 info      show PJRT platform + AOT artifact manifest\n\
@@ -288,21 +292,8 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let settings = ServeSettings::from_args(args)?;
     let stream_settings = StreamSettings::from_args(args)?;
     let snapshot = load_snapshot_arg(args)?;
-    let fitter = IncrementalFitter::from_snapshot(
-        &snapshot,
-        StreamConfig {
-            window: stream_settings.window,
-            sweeps: stream_settings.sweeps,
-            decay: stream_settings.decay,
-            alpha: stream_settings.alpha,
-            seed: stream_settings.seed,
-            threads: settings.threads,
-            tile: settings.tile,
-            ..StreamConfig::default()
-        },
-    )?;
     eprintln!(
-        "streaming model: K={} d={} family={} (from N={}; window={} sweeps={} decay={})",
+        "streaming model: K={} d={} family={} (from N={}; window={} sweeps={} decay={}{})",
         snapshot.k(),
         snapshot.dim(),
         snapshot.prior.family(),
@@ -310,17 +301,51 @@ fn cmd_stream(args: &Args) -> Result<()> {
         stream_settings.window,
         stream_settings.sweeps,
         stream_settings.decay,
+        if stream_settings.workers.is_empty() {
+            String::new()
+        } else {
+            format!("; {} workers", stream_settings.workers.len())
+        },
     );
     let engine = ScoringEngine::new(
         &snapshot,
         EngineConfig { threads: settings.threads, tile: settings.tile },
     )?;
-    serve::serve_blocking_streaming(
-        engine,
-        fitter,
-        &settings.addr,
-        serve::ServeConfig { max_batch_points: settings.max_batch_points },
-    )
+    let serve_config = serve::ServeConfig { max_batch_points: settings.max_batch_points };
+    if stream_settings.workers.is_empty() {
+        let fitter = IncrementalFitter::from_snapshot(
+            &snapshot,
+            StreamConfig {
+                window: stream_settings.window,
+                sweeps: stream_settings.sweeps,
+                decay: stream_settings.decay,
+                alpha: stream_settings.alpha,
+                seed: stream_settings.seed,
+                threads: settings.threads,
+                tile: settings.tile,
+                ..StreamConfig::default()
+            },
+        )?;
+        serve::serve_blocking_streaming(engine, fitter, &settings.addr, serve_config)
+    } else {
+        // Distributed ingest: shard the window across `dpmm worker`
+        // processes; the serving path is identical (same wire, same
+        // hot-swap batcher).
+        let fitter = DistributedFitter::from_snapshot(
+            &snapshot,
+            DistributedStreamConfig {
+                workers: stream_settings.workers.clone(),
+                worker_threads: stream_settings.worker_threads,
+                window: stream_settings.window,
+                sweeps: stream_settings.sweeps,
+                decay: stream_settings.decay,
+                alpha: stream_settings.alpha,
+                seed: stream_settings.seed,
+                kernel: None,
+            },
+        )?;
+        serve::serve_blocking_streaming(engine, fitter, &settings.addr, serve_config)
+    }
 }
 
 fn cmd_predict(args: &Args) -> Result<()> {

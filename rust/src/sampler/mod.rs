@@ -157,6 +157,40 @@ impl StepParams {
         self.params.len()
     }
 
+    /// Deterministic MAP parameter snapshot: posterior-**mean** parameters
+    /// and count-proportional log-weights, no RNG anywhere — the
+    /// serializable form of [`StepPlan::map_from_state`]
+    /// (`StepParams::map_snapshot(s).plan()` computes the same
+    /// descriptors). The distributed streaming leader ships this across
+    /// the wire so workers MAP-seed freshly routed batches locally: every
+    /// worker derives its plan from the same bytes, so seeding is
+    /// identical regardless of which worker a batch lands on.
+    pub fn map_snapshot(state: &DpmmState) -> StepParams {
+        let prior = &state.prior;
+        let total: f64 = state.counts().iter().sum();
+        let total = if total > 0.0 { total } else { 1.0 };
+        let mut p = StepParams {
+            log_weights: Vec::with_capacity(state.k()),
+            params: Vec::with_capacity(state.k()),
+            sub_log_weights: Vec::with_capacity(state.k()),
+            sub_params: Vec::with_capacity(state.k()),
+        };
+        for c in &state.clusters {
+            p.log_weights.push((c.count().max(1e-9) / total).ln());
+            p.params.push(prior.mean_params(&c.stats));
+            // Smoothed sub-shares so an empty side still gets a finite
+            // (losing) score rather than -inf.
+            let n = c.count().max(1e-9);
+            p.sub_log_weights
+                .push([LEFT, RIGHT].map(|h| ((c.sub_count(h) + 0.5) / (n + 1.0)).ln()));
+            p.sub_params.push([
+                prior.mean_params(&c.sub_stats[LEFT]),
+                prior.mean_params(&c.sub_stats[RIGHT]),
+            ]);
+        }
+        p
+    }
+
     /// Flatten this snapshot into the per-sweep kernel descriptors the
     /// assignment hot path consumes (one O(K·d²) precomputation per sweep,
     /// amortized over every point instead of re-derived per point).
@@ -259,31 +293,11 @@ impl StepPlan {
     /// restricted sweeps: seeding must be identical across thread counts and
     /// assignment kernels, which rules out sampled parameters.
     pub fn map_from_state(state: &DpmmState) -> StepPlan {
-        let prior = &state.prior;
-        let total: f64 = state.counts().iter().sum();
-        let total = if total > 0.0 { total } else { 1.0 };
-        let clusters = state
-            .clusters
-            .iter()
-            .map(|c| {
-                let lw = (c.count().max(1e-9) / total).ln();
-                KernelDesc::new(&prior.mean_params(&c.stats), lw)
-            })
-            .collect::<Vec<_>>();
-        let sub = state
-            .clusters
-            .iter()
-            .map(|c| {
-                // Smoothed sub-shares so an empty side still gets a finite
-                // (losing) score rather than -inf.
-                let n = c.count().max(1e-9);
-                [LEFT, RIGHT].map(|h| {
-                    let lw = ((c.sub_count(h) + 0.5) / (n + 1.0)).ln();
-                    KernelDesc::new(&prior.mean_params(&c.sub_stats[h]), lw)
-                })
-            })
-            .collect();
-        StepPlan { d: prior.dim(), clusters, sub }
+        // Same descriptor arithmetic as building the serializable MAP
+        // snapshot and planning it: KernelDesc::new over posterior-mean
+        // parameters with the same folded log-weights, so the local and
+        // distributed streaming paths seed from identical plans.
+        StepPlan::new(&StepParams::map_snapshot(state))
     }
 
     pub fn new(params: &StepParams) -> Self {

@@ -33,13 +33,19 @@
 //! # Streaming ingest and snapshot hot-swap
 //!
 //! A server started as `dpmm stream` pairs the scoring engine with a
-//! [`crate::stream::IncrementalFitter`] and accepts the `ingest` verb.
+//! [`crate::stream::StreamFitter`] — the in-process
+//! [`crate::stream::IncrementalFitter`], or the
+//! [`crate::stream::DistributedFitter`] leader when `--workers` shards
+//! ingest across TCP worker machines — and accepts the `ingest` verb.
 //! The live engine sits behind an `RwLock<Arc<ScoringEngine>>`; the
 //! micro-batcher — the only writer — folds queued mini-batches into the
 //! fitter **between fused scoring passes**, re-plans a fresh
 //! [`ModelSnapshot`], and atomically publishes the successor engine
-//! (ArcSwap-style pointer replace). Consistency guarantees, in order of
-//! what a client can rely on:
+//! (ArcSwap-style pointer replace). The guarantees below hold identically
+//! in both topologies (clients cannot tell them apart on the wire); in
+//! distributed mode a worker failure surfaces as an ingest error while
+//! the last published generation keeps serving. Consistency guarantees,
+//! in order of what a client can rely on:
 //!
 //! 1. **Pass-level atomicity** — every predict request is scored entirely
 //!    under one snapshot generation; a request never sees a half-updated

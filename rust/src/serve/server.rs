@@ -39,7 +39,7 @@
 use super::engine::{EngineConfig, ScoreBatch, ScoringEngine};
 use super::wire::{write_serve, ServeMessage, FLAG_LOG_PROBS};
 use crate::backend::distributed::wire::{configure_stream, MAX_FRAME};
-use crate::stream::IncrementalFitter;
+use crate::stream::StreamFitter;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::Read;
@@ -133,9 +133,12 @@ struct BatchQueue {
 
 /// Streaming state: the incremental fitter plus its pending mini-batches.
 /// Both are touched only by the batcher thread (handlers just enqueue), so
-/// fitter application is serialized by construction.
+/// fitter application is serialized by construction. The fitter is a trait
+/// object: the batcher drives the local in-process
+/// [`crate::stream::IncrementalFitter`] and the distributed leader
+/// ([`crate::stream::DistributedFitter`]) identically.
 struct StreamShared {
-    fitter: Mutex<IncrementalFitter>,
+    fitter: Mutex<Box<dyn StreamFitter>>,
     jobs: Mutex<VecDeque<IngestJob>>,
 }
 
@@ -198,19 +201,22 @@ pub fn spawn(engine: ScoringEngine, addr: &str, config: ServeConfig) -> Result<S
 }
 
 /// Start a **streaming** server: predictions plus the `ingest` verb, with
-/// snapshot hot-swap between fused passes (see the module docs).
+/// snapshot hot-swap between fused passes (see the module docs). Accepts
+/// any [`StreamFitter`] — the local in-process fitter or the distributed
+/// leader — so `dpmm stream` scales from one machine to a worker cluster
+/// without touching the serving path.
 pub fn spawn_streaming(
     engine: ScoringEngine,
-    fitter: IncrementalFitter,
+    fitter: impl StreamFitter + 'static,
     addr: &str,
     config: ServeConfig,
 ) -> Result<ServerHandle> {
-    spawn_inner(engine, Some(fitter), addr, config)
+    spawn_inner(engine, Some(Box::new(fitter)), addr, config)
 }
 
 fn spawn_inner(
     engine: ScoringEngine,
-    fitter: Option<IncrementalFitter>,
+    fitter: Option<Box<dyn StreamFitter>>,
     addr: &str,
     config: ServeConfig,
 ) -> Result<ServerHandle> {
@@ -263,10 +269,10 @@ pub fn serve_blocking(engine: ScoringEngine, addr: &str, config: ServeConfig) ->
 }
 
 /// Start a streaming server and block until it shuts down (the
-/// `dpmm stream` entrypoint).
+/// `dpmm stream` entrypoint, local or distributed).
 pub fn serve_blocking_streaming(
     engine: ScoringEngine,
-    fitter: IncrementalFitter,
+    fitter: impl StreamFitter + 'static,
     addr: &str,
     config: ServeConfig,
 ) -> Result<()> {

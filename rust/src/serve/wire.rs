@@ -8,16 +8,45 @@
 //! memcpy a contiguous row-major buffer straight onto the socket; this is
 //! also what `python/dpmmwrapper.py`'s `DpmmClient` speaks via `struct` +
 //! `ndarray.tobytes()`.
+//!
+//! Clients are agnostic to the server's ingest topology: `dpmm stream`
+//! with or without `--workers` speaks the identical client-facing wire —
+//! distribution happens behind the server on the fit protocol's `Stream*`
+//! verbs (see the tag table in [`crate::backend::distributed::wire`]).
+//!
+//! # Message-tag reference (serve protocol version 2)
+//!
+//! | tag | message       | payload layout                                               | since | direction |
+//! |-----|---------------|--------------------------------------------------------------|-------|-----------|
+//! | 1   | `Predict`     | `u8 flags`, `u32 n`, `u32 d`, raw n·d f64s                   | v1    | client → server |
+//! | 2   | `Scores`      | `u8 flags`, `u32 n`, `u32 k`, n×`u32` labels, raw f64 runs: map_score[n], log_predictive[n][, log_probs[n·k]] | v1 | server → client |
+//! | 3   | `Info`        | —                                                            | v1    | client → server |
+//! | 4   | `InfoReply`   | `u32 d`, `u32 k`, `u8 family`, `u64 n_total`                 | v1    | server → client |
+//! | 5   | `Stats`       | —                                                            | v1    | client → server |
+//! | 6   | `StatsReply`  | `u64 requests`, `u64 points`, `u64 batches`, `f64 uptime`, `f64 pts/s`, `f64 mean_batch`, `u64 generation`, `u64 ingested`, `u64 ingest_pending` | v2 | server → client |
+//! | 7   | `Shutdown`    | —                                                            | v1    | client → server |
+//! | 8   | `Ack`         | —                                                            | v1    | server → client |
+//! | 9   | `Error`       | `str`                                                        | v1    | server → client |
+//! | 10  | `Ingest`      | `u32 n`, `u32 d`, raw n·d f64s                               | v2    | client → server |
+//! | 11  | `IngestReply` | `u64 accepted`, `u64 generation`, `u64 window`               | v2    | server → client |
+//!
+//! # Version-bump rules
+//!
+//! Same discipline as the fit protocol: the version byte leads every
+//! frame, decoders reject any other version, and the byte is bumped on
+//! payload-layout changes **and** on new tags. History: **v1** — predict /
+//! info / stats / shutdown; **v2** — `StatsReply` grew
+//! `generation`/`ingested`/`ingest_pending` and the `Ingest`/`IngestReply`
+//! verbs were added (v1 peers would misparse the new stats layout as
+//! trailing/truncated bytes, so the version byte turns that into a clear
+//! mismatch error).
 
 use crate::backend::distributed::wire::{read_frame, write_frame, Dec, Enc};
 use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
 
-/// Serving-protocol version byte (independent of the fit protocol's).
-/// v2: `StatsReply` grew generation/ingested/ingest_pending and the
-/// `Ingest`/`IngestReply` verbs were added — v1 peers would misparse the
-/// new stats layout as trailing/truncated bytes, so the version byte turns
-/// that into a clear mismatch error instead.
+/// Serving-protocol version byte (independent of the fit protocol's; see
+/// the module docs for the tag table and bump rules).
 pub const SERVE_PROTO_VERSION: u8 = 2;
 
 /// Request flag: also return the normalized per-cluster log posterior

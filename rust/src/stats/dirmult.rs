@@ -103,6 +103,15 @@ impl DirMultStats {
         }
     }
 
+    /// Inverse of [`merge`](Self::merge): subtract another accumulator
+    /// elementwise (see [`crate::stats::NiwStats::unmerge`]).
+    pub fn unmerge(&mut self, other: &DirMultStats) {
+        self.n -= other.n;
+        for (s, &v) in self.sum_x.iter_mut().zip(&other.sum_x) {
+            *s -= v;
+        }
+    }
+
     pub fn reset(&mut self) {
         self.n = 0.0;
         self.sum_x.iter_mut().for_each(|v| *v = 0.0);

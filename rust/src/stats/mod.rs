@@ -275,6 +275,34 @@ impl Stats {
         self.try_merge(other).unwrap_or_else(|e| panic!("{e}"))
     }
 
+    /// Fallible inverse of [`Self::try_merge`]: subtract another
+    /// statistics object's accumulators elementwise. This is how the
+    /// distributed streaming leader retires worker-reported grouped deltas
+    /// from its window accumulators (it never sees the points, so the
+    /// pointwise [`Self::remove_cols`] inverse is unavailable).
+    /// Deterministic; inverse up to FP rounding.
+    pub fn try_unmerge(&mut self, other: &Stats) -> Result<(), FamilyMismatch> {
+        match (self, other) {
+            (Stats::Gauss(a), Stats::Gauss(b)) => {
+                a.unmerge(b);
+                Ok(())
+            }
+            (Stats::Mult(a), Stats::Mult(b)) => {
+                a.unmerge(b);
+                Ok(())
+            }
+            (a, b) => {
+                Err(FamilyMismatch { op: "unmerge", prior: a.family(), stats: b.family() })
+            }
+        }
+    }
+
+    /// Infallible [`Self::try_unmerge`] for trusted same-family callers.
+    /// Panics on a family mismatch.
+    pub fn unmerge(&mut self, other: &Stats) {
+        self.try_unmerge(other).unwrap_or_else(|e| panic!("{e}"))
+    }
+
     pub fn reset(&mut self) {
         match self {
             Stats::Gauss(s) => s.reset(),

@@ -160,6 +160,21 @@ impl NiwStats {
         self.sum_xxt.add_assign(&other.sum_xxt);
     }
 
+    /// Inverse of [`merge`](Self::merge): subtract another accumulator
+    /// elementwise. The distributed streaming leader uses this to retire a
+    /// worker-reported grouped delta from its window accumulators without
+    /// access to the underlying points. Deterministic, but (like
+    /// [`remove_cols`](Self::remove_cols)) inverse only up to FP rounding.
+    pub fn unmerge(&mut self, other: &NiwStats) {
+        self.n -= other.n;
+        for (s, &v) in self.sum_x.iter_mut().zip(&other.sum_x) {
+            *s -= v;
+        }
+        for (s, &v) in self.sum_xxt.data_mut().iter_mut().zip(other.sum_xxt.data()) {
+            *s -= v;
+        }
+    }
+
     pub fn reset(&mut self) {
         self.n = 0.0;
         self.sum_x.iter_mut().for_each(|v| *v = 0.0);

@@ -1,0 +1,643 @@
+//! Distributed streaming ingest: the leader side of `dpmm stream
+//! --workers=host:port,...`.
+//!
+//! The local [`IncrementalFitter`](super::IncrementalFitter) caps ingest
+//! throughput and window size at one machine's cores and RAM. This module
+//! shards the stream across the same TCP workers the batch backend uses
+//! (`dpmm worker`): the leader routes each ingest mini-batch to the
+//! least-loaded worker's window slice, workers MAP-seed and resweep their
+//! slices locally, and only **grouped sufficient-statistics deltas**
+//! ([`BatchDelta`]) cross the wire — O(K·d²) per changed batch per sweep,
+//! never O(N·d), the paper's low-bandwidth distribution property carried
+//! over to streaming.
+//!
+//! # Division of labor
+//!
+//! The **leader** ([`DistributedFitter`]) owns exactly what the local
+//! fitter's coordinator half owns: the model state, the frozen `base` and
+//! windowed `win` accumulators, the single RNG that samples weights and
+//! parameters, and — new here — the **global batch FIFO** that decides
+//! eviction. Per ingested batch it runs the same five phases as the local
+//! fitter (decay → seed → fold → evict → `sweeps` restricted sweeps), but
+//! phases 2 and 5 execute worker-side:
+//!
+//! * **Ingest**: the leader picks the least-loaded worker (fewest windowed
+//!   points, ties → lowest index), assigns the batch a global id and a
+//!   forked RNG seed, and ships it with a deterministic MAP parameter
+//!   snapshot ([`StepParams::map_snapshot`]). The worker seeds labels,
+//!   appends the batch to its window slice, and returns the batch's
+//!   grouped stats delta.
+//! * **Evict**: when the global window overflows, the leader retires whole
+//!   batches in global FIFO order ([`Message::StreamEvict`]); the owning
+//!   worker returns the batch's current grouped statistics, which the
+//!   leader moves from `win` into `base` (labels freeze as-is). Eviction
+//!   is batch-granular: the window occupancy may dip below the capacity by
+//!   up to one batch, but the eviction *sequence* is partition-independent.
+//! * **Sweep**: per restricted sweep the leader samples weights/parameters
+//!   (steps (a)–(d)) exactly like the local fitter and broadcasts one
+//!   [`StepParams`]; every worker reruns the assignment kernels over its
+//!   resident batches (one shard per batch, each with its persistent RNG
+//!   stream) and replies with per-batch deltas of the moved points.
+//!
+//! # Determinism across worker counts
+//!
+//! A fixed-seed ingest history yields **bitwise-identical** leader-side
+//! statistics for any worker count (and tiled vs scalar kernels), because
+//! nothing observable depends on *which* worker owns a batch:
+//!
+//! * each batch's sweep RNG is seeded by the leader in global batch order
+//!   and lives with the batch, so label trajectories depend only on the
+//!   batch's values, its seed, and the broadcast plans;
+//! * per-point assignment given a plan is conditionally independent (the
+//!   restricted sweep interacts only through statistics → next plan), so
+//!   co-residency of batches on a worker never affects labels;
+//! * all statistics folds happen leader-side through one canonical path:
+//!   per-batch deltas (each computed by the worker's single-threaded
+//!   grouped [`fold_groups`](super::fitter) fold over that batch alone)
+//!   are applied in **ascending global batch id order**, and eviction
+//!   order is the leader's global FIFO.
+//!
+//! `tests/integration_stream_distributed.rs` pins the 1-vs-2-worker and
+//! tiled-vs-scalar bitwise contracts end-to-end.
+
+use super::fitter::{
+    seed_state_from_snapshot, sync_model_stats, IngestSummary, StreamFitter,
+};
+use crate::backend::distributed::wire::{
+    self, request, write_message, BatchDelta, Message,
+};
+use crate::backend::shard::AssignKernel;
+use crate::model::DpmmState;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::sampler::{
+    sample_params, sample_sub_weights, sample_weights, SamplerOptions, StepParams,
+};
+use crate::serve::ModelSnapshot;
+use crate::stats::Stats;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::net::TcpStream;
+
+/// Distributed streaming knobs (the leader-side analog of
+/// [`super::StreamConfig`]; per-worker thread/kernel execution is
+/// configured at `StreamInit` instead of per-sweep).
+#[derive(Debug, Clone)]
+pub struct DistributedStreamConfig {
+    /// Worker addresses (`host:port`), each running `dpmm worker`.
+    pub workers: Vec<String>,
+    /// Sweep threads per worker process.
+    pub worker_threads: usize,
+    /// Global sliding-window capacity in points (across all workers).
+    /// Eviction is batch-granular in global FIFO order.
+    pub window: usize,
+    /// Restricted-Gibbs sweeps over the window per ingested batch.
+    pub sweeps: usize,
+    /// Exponential forgetting factor applied to the frozen base per ingest.
+    pub decay: f64,
+    /// DP concentration for the restricted sweeps.
+    pub alpha: f64,
+    /// RNG seed for the leader's weight/parameter draws and the per-batch
+    /// sweep-stream forks.
+    pub seed: u64,
+    /// Assignment kernel shipped to every worker (`None` = each worker's
+    /// own `DPMM_ASSIGN_KERNEL` environment decides).
+    pub kernel: Option<AssignKernel>,
+}
+
+impl Default for DistributedStreamConfig {
+    fn default() -> Self {
+        Self {
+            workers: Vec::new(),
+            worker_threads: 1,
+            window: 32 * 1024,
+            sweeps: 2,
+            decay: 1.0,
+            alpha: 10.0,
+            seed: 0,
+            kernel: None,
+        }
+    }
+}
+
+/// One windowed batch in the leader's global FIFO.
+#[derive(Debug, Clone, Copy)]
+struct BatchRec {
+    id: u64,
+    owner: usize,
+    n: usize,
+}
+
+/// Leader of a distributed streaming cluster: implements the same
+/// [`StreamFitter`] surface as the local fitter, with sweeps executed by
+/// TCP workers (see the module docs).
+pub struct DistributedFitter {
+    state: DpmmState,
+    /// Frozen evidence per (cluster, sub): seed snapshot + everything
+    /// evicted from the window.
+    base: Vec<[Stats; 2]>,
+    /// The distributed window's live contribution per (cluster, sub) —
+    /// maintained exclusively by the leader's canonical delta folds.
+    win: Vec<[Stats; 2]>,
+    conns: Vec<TcpStream>,
+    /// Windowed batches, oldest first (global ingest order).
+    fifo: VecDeque<BatchRec>,
+    /// Windowed points per worker (the routing load measure).
+    worker_points: Vec<usize>,
+    window_points: usize,
+    next_batch_id: u64,
+    rng: Xoshiro256pp,
+    cfg: DistributedStreamConfig,
+    ingested: u64,
+    /// Set when a mid-protocol failure may have left worker window state
+    /// (labels, resident batches, RNG streams) diverged from the leader's
+    /// accumulators. Once poisoned, every further ingest fails fast with
+    /// this reason — silently resuming would fold deltas against stats the
+    /// leader never saw and corrupt the model without any error. The
+    /// serving layer keeps answering predicts from the last published
+    /// snapshot throughout; recovery is restarting the stream leader
+    /// (which re-seeds every worker window from a fresh snapshot).
+    poisoned: Option<String>,
+}
+
+impl DistributedFitter {
+    /// Connect to the workers, open a streaming session on each, and seed
+    /// the leader model from a frozen snapshot (the same seeding path as
+    /// the local fitter, so fixed-seed histories start bitwise-identical).
+    pub fn from_snapshot(
+        snap: &ModelSnapshot,
+        cfg: DistributedStreamConfig,
+    ) -> Result<DistributedFitter> {
+        if cfg.workers.is_empty() {
+            bail!("distributed streaming needs at least one worker address (--workers=host:port,...)");
+        }
+        if !(cfg.decay > 0.0 && cfg.decay <= 1.0) {
+            bail!("stream decay must be in (0, 1], got {}", cfg.decay);
+        }
+        if !(cfg.alpha > 0.0) {
+            bail!("stream alpha must be positive, got {}", cfg.alpha);
+        }
+        let (state, base) = seed_state_from_snapshot(snap, cfg.alpha)?;
+        let k = state.k();
+        let prior = state.prior.clone();
+        let win: Vec<[Stats; 2]> =
+            (0..k).map(|_| [prior.empty_stats(), prior.empty_stats()]).collect();
+        let kernel_byte = match cfg.kernel {
+            None => 0u8,
+            Some(AssignKernel::Tiled) => 1,
+            Some(AssignKernel::Scalar) => 2,
+        };
+        let mut conns = Vec::with_capacity(cfg.workers.len());
+        for addr in &cfg.workers {
+            let mut stream = TcpStream::connect(addr)
+                .with_context(|| format!("connecting to stream worker {addr}"))?;
+            wire::configure_stream(&stream)
+                .with_context(|| format!("configuring socket to stream worker {addr}"))?;
+            let init = Message::StreamInit {
+                d: prior.dim() as u32,
+                prior: prior.clone(),
+                threads: cfg.worker_threads.max(1) as u32,
+                kernel: kernel_byte,
+            };
+            match request(&mut stream, &init)? {
+                Message::Ack => {}
+                other => bail!("worker {addr} StreamInit reply: {other:?}"),
+            }
+            conns.push(stream);
+        }
+        let w = conns.len();
+        Ok(DistributedFitter {
+            state,
+            base,
+            win,
+            conns,
+            fifo: VecDeque::new(),
+            worker_points: vec![0; w],
+            window_points: 0,
+            next_batch_id: 0,
+            rng: Xoshiro256pp::seed_from_u64(cfg.seed),
+            cfg,
+            ingested: 0,
+            poisoned: None,
+        })
+    }
+
+    pub fn k(&self) -> usize {
+        self.state.k()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.state.prior.dim()
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Points ingested over the fitter's lifetime.
+    pub fn ingested(&self) -> u64 {
+        self.ingested
+    }
+
+    /// Points currently resweepable across all worker window slices.
+    pub fn window_len(&self) -> usize {
+        self.window_points
+    }
+
+    /// Per-cluster point masses (base + window evidence).
+    pub fn counts(&self) -> Vec<f64> {
+        self.state.counts()
+    }
+
+    pub fn state(&self) -> &DpmmState {
+        &self.state
+    }
+
+    /// Freeze the current model into a serving snapshot.
+    pub fn snapshot(&self) -> Result<ModelSnapshot> {
+        ModelSnapshot::from_state(&self.state)
+    }
+
+    /// Close every worker's streaming session cleanly.
+    pub fn shutdown(&mut self) -> Result<()> {
+        for conn in self.conns.iter_mut() {
+            write_message(conn, &Message::Shutdown).ok();
+            wire::read_message(conn).ok();
+        }
+        Ok(())
+    }
+
+    /// Fold one row-major mini-batch through the cluster: route → seed →
+    /// fold → evict → sweeps (see the module docs). A worker failure
+    /// surfaces as an error; the caller (the serving batcher) keeps the
+    /// previous published snapshot live in that case, and the fitter
+    /// **poisons itself** — worker windows may have committed state the
+    /// leader never folded, so resuming ingest would silently corrupt the
+    /// statistics. Batch-validation errors (shape, non-finite values)
+    /// happen before any wire traffic and do not poison.
+    pub fn ingest(&mut self, batch: &[f64]) -> Result<IngestSummary> {
+        if let Some(why) = &self.poisoned {
+            bail!(
+                "distributed stream halted by an earlier mid-ingest worker failure \
+                 ({why}); restart the stream leader to re-seed the worker windows"
+            );
+        }
+        let d = self.dim();
+        if batch.len() % d != 0 {
+            bail!(
+                "ingest batch length {} is not a multiple of the model dimension {d}",
+                batch.len()
+            );
+        }
+        if batch.iter().any(|v| !v.is_finite()) {
+            bail!("ingest batch contains non-finite values");
+        }
+        let n = batch.len() / d;
+        if n == 0 {
+            return Ok(IngestSummary {
+                accepted: 0,
+                window: self.window_points,
+                evicted: 0,
+                k: self.k(),
+            });
+        }
+        // Everything past this point talks to workers; any failure may
+        // leave remote window state the leader did not account for.
+        let result = self.ingest_wire(batch, n, d);
+        if let Err(e) = &result {
+            self.poisoned = Some(format!("{e:#}"));
+        }
+        result
+    }
+
+    /// The wire-touching body of [`Self::ingest`] (see its docs; the
+    /// wrapper owns validation and poisoning).
+    fn ingest_wire(&mut self, batch: &[f64], n: usize, d: usize) -> Result<IngestSummary> {
+        // 1. Exponential forgetting on the frozen base (leader-side only —
+        // workers hold points and labels, never evidence accumulators).
+        if self.cfg.decay < 1.0 {
+            for b in self.base.iter_mut() {
+                b[0].decay(self.cfg.decay);
+                b[1].decay(self.cfg.decay);
+            }
+            sync_model_stats(&mut self.state, &self.base, &self.win);
+        }
+
+        // 2. Route to the least-loaded worker (ties → lowest index).
+        // Ownership decides only *where* the batch lives; the model
+        // trajectory is ownership-independent (see the module docs).
+        let owner = (0..self.worker_points.len())
+            .min_by_key(|&i| self.worker_points[i])
+            .expect("at least one worker");
+        let batch_id = self.next_batch_id;
+        self.next_batch_id += 1;
+        let seed = self.rng.next_u64();
+        let map_params = StepParams::map_snapshot(&self.state);
+        let reply = request(
+            &mut self.conns[owner],
+            &Message::StreamIngest { batch_id, seed, params: map_params, x: batch.to_vec() },
+        )
+        .with_context(|| format!("routing ingest batch {batch_id} to worker {owner}"))?;
+        let deltas = expect_deltas(reply, owner)?;
+        let delta = single_delta(&deltas, batch_id, owner)?;
+        self.apply_window_delta(&delta.removed, &delta.added)?;
+        self.fifo.push_back(BatchRec { id: batch_id, owner, n });
+        self.worker_points[owner] += n;
+        self.window_points += n;
+
+        // 3. Leader-decided batch-granular eviction in global FIFO order:
+        // the worker reports the batch's current grouped statistics, which
+        // move from the window accumulators into the frozen base. The FIFO
+        // record is popped only after the round-trip and the folds succeed
+        // — popping first would let a transient failure desynchronize the
+        // leader's eviction order from the workers' forever.
+        let mut evicted = 0usize;
+        while self.window_points > self.cfg.window.max(1) {
+            let rec = *self.fifo.front().expect("window overflow with an empty FIFO");
+            let reply = request(
+                &mut self.conns[rec.owner],
+                &Message::StreamEvict { batch_ids: vec![rec.id] },
+            )
+            .with_context(|| {
+                format!("evicting batch {} from worker {}", rec.id, rec.owner)
+            })?;
+            let deltas = expect_deltas(reply, rec.owner)?;
+            let delta = single_delta(&deltas, rec.id, rec.owner)?;
+            check_bundle(&delta.added, self.k(), d, "evict")?;
+            for (kk, d) in delta.added.iter().enumerate() {
+                for h in 0..2 {
+                    self.win[kk][h].try_unmerge(&d[h])?;
+                    self.base[kk][h].try_merge(&d[h])?;
+                }
+            }
+            self.fifo.pop_front();
+            self.worker_points[rec.owner] -= rec.n;
+            self.window_points -= rec.n;
+            evicted += rec.n;
+        }
+        sync_model_stats(&mut self.state, &self.base, &self.win);
+
+        // 4. Restricted sweeps: leader samples steps (a)–(d), workers run
+        // (e)/(f) over their window slices, leader folds the per-batch
+        // deltas in ascending global batch id order.
+        let opts = SamplerOptions { sub_restart_every: 0, ..SamplerOptions::default() };
+        for _ in 0..self.cfg.sweeps {
+            if self.window_points == 0 {
+                break;
+            }
+            sample_weights(&mut self.state, &mut self.rng);
+            sample_sub_weights(&mut self.state, &mut self.rng);
+            sample_params(&mut self.state, &opts, &mut self.rng);
+            let msg = Message::StreamSweep(StepParams::snapshot(&self.state));
+            // Write to all first (overlap worker compute), then collect.
+            for conn in self.conns.iter_mut() {
+                write_message(conn, &msg)?;
+            }
+            let mut all: Vec<BatchDelta> = Vec::new();
+            for (i, conn) in self.conns.iter_mut().enumerate() {
+                match wire::read_message(conn)? {
+                    Message::StatsDelta(ds) => all.extend(ds),
+                    Message::Error(e) => bail!("worker {i}: {e}"),
+                    other => bail!("worker {i}: unexpected sweep reply {other:?}"),
+                }
+            }
+            // Canonical fold order: ascending global batch id — the fold
+            // sequence is identical no matter how batches are partitioned
+            // across workers. Every delta must name a batch the leader
+            // actually has windowed, exactly once: a ghost id (corrupt
+            // frame, confused worker) folded blindly would corrupt the
+            // accumulators with no error.
+            let resident: std::collections::HashSet<u64> =
+                self.fifo.iter().map(|r| r.id).collect();
+            all.sort_by_key(|dlt| dlt.batch_id);
+            for pair in all.windows(2) {
+                if pair[0].batch_id == pair[1].batch_id {
+                    bail!("duplicate sweep delta for batch {}", pair[0].batch_id);
+                }
+            }
+            for dlt in &all {
+                if !resident.contains(&dlt.batch_id) {
+                    bail!("sweep delta for unknown batch {}", dlt.batch_id);
+                }
+                self.apply_window_delta(&dlt.removed, &dlt.added)?;
+            }
+            if !all.is_empty() {
+                sync_model_stats(&mut self.state, &self.base, &self.win);
+            }
+        }
+
+        self.ingested += n as u64;
+        self.state.n_total += n;
+        Ok(IngestSummary {
+            accepted: n,
+            window: self.window_points,
+            evicted,
+            k: self.k(),
+        })
+    }
+
+    /// `win -= removed; win += added` for one batch delta, with wire-input
+    /// validation (cluster count, family, dimensionality).
+    fn apply_window_delta(
+        &mut self,
+        removed: &[[Stats; 2]],
+        added: &[[Stats; 2]],
+    ) -> Result<()> {
+        let k = self.k();
+        let d = self.dim();
+        check_bundle(removed, k, d, "removed")?;
+        check_bundle(added, k, d, "added")?;
+        for (kk, d) in removed.iter().enumerate() {
+            for h in 0..2 {
+                self.win[kk][h].try_unmerge(&d[h])?;
+            }
+        }
+        for (kk, d) in added.iter().enumerate() {
+            for h in 0..2 {
+                self.win[kk][h].try_merge(&d[h])?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for DistributedFitter {
+    fn drop(&mut self) {
+        self.shutdown().ok();
+    }
+}
+
+impl StreamFitter for DistributedFitter {
+    fn dim(&self) -> usize {
+        DistributedFitter::dim(self)
+    }
+    fn k(&self) -> usize {
+        DistributedFitter::k(self)
+    }
+    fn ingest(&mut self, batch: &[f64]) -> Result<IngestSummary> {
+        DistributedFitter::ingest(self, batch)
+    }
+    fn snapshot(&self) -> Result<ModelSnapshot> {
+        DistributedFitter::snapshot(self)
+    }
+    fn ingested(&self) -> u64 {
+        DistributedFitter::ingested(self)
+    }
+}
+
+/// Unwrap a `StatsDelta` reply.
+fn expect_deltas(reply: Message, worker: usize) -> Result<Vec<BatchDelta>> {
+    match reply {
+        Message::StatsDelta(ds) => Ok(ds),
+        other => bail!("worker {worker}: expected StatsDelta, got {other:?}"),
+    }
+}
+
+/// Require exactly one delta, for the named batch.
+fn single_delta(deltas: &[BatchDelta], batch_id: u64, worker: usize) -> Result<BatchDelta> {
+    match deltas {
+        [d] if d.batch_id == batch_id => Ok(d.clone()),
+        [d] => bail!("worker {worker}: delta for batch {}, want {batch_id}", d.batch_id),
+        _ => bail!("worker {worker}: {} deltas for batch {batch_id}, want 1", deltas.len()),
+    }
+}
+
+/// A wire-decoded stats bundle must be empty or exactly K entries of the
+/// model's dimensionality (`try_merge` checks families but zips over
+/// dimensions, so a corrupt width must be rejected before folding).
+fn check_bundle(bundle: &[[Stats; 2]], k: usize, d: usize, what: &str) -> Result<()> {
+    if bundle.is_empty() {
+        return Ok(());
+    }
+    if bundle.len() != k {
+        bail!("worker returned {} `{what}` clusters, want {k}", bundle.len());
+    }
+    for (kk, pair) in bundle.iter().enumerate() {
+        for s in pair {
+            if s.dim() != d {
+                bail!(
+                    "worker `{what}` stats for cluster {kk} have dimension {}, want {d}",
+                    s.dim()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::distributed::worker::spawn_local;
+    use crate::serve::ModelSnapshot;
+    use crate::stats::{NiwPrior, Prior};
+
+    /// A tiny two-blob snapshot (mirrors the local fitter's test seed).
+    fn seed_snapshot() -> ModelSnapshot {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut rng = Xoshiro256pp::seed_from_u64(0);
+        let mut state = DpmmState::new(1.0, prior.clone(), 2, 200, &mut rng);
+        for (k, center) in [(0usize, -6.0f64), (1, 6.0)] {
+            let mut s = prior.empty_stats();
+            for i in 0..100 {
+                s.add(&[center + 0.03 * (i % 9) as f64, 0.05 * (i % 7) as f64 - 0.15]);
+            }
+            state.clusters[k].stats = s;
+        }
+        ModelSnapshot::from_state(&state).unwrap()
+    }
+
+    fn blob_batch(center: f64, n: usize, phase: usize) -> Vec<f64> {
+        let mut v = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            v.push(center + 0.04 * ((i + phase) % 11) as f64 - 0.2);
+            v.push(0.03 * ((i * 3 + phase) % 5) as f64);
+        }
+        v
+    }
+
+    fn cluster_fitter(workers: usize, window: usize) -> DistributedFitter {
+        let snap = seed_snapshot();
+        let addrs: Vec<String> = (0..workers).map(|_| spawn_local().unwrap()).collect();
+        DistributedFitter::from_snapshot(
+            &snap,
+            DistributedStreamConfig {
+                workers: addrs,
+                worker_threads: 2,
+                window,
+                sweeps: 2,
+                alpha: 2.0,
+                seed: 9,
+                ..DistributedStreamConfig::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn distributed_ingest_tracks_blob_masses() {
+        let mut f = cluster_fitter(2, 4096);
+        let before = f.counts();
+        f.ingest(&blob_batch(-6.0, 30, 0)).unwrap();
+        let s = f.ingest(&blob_batch(6.0, 30, 1)).unwrap();
+        assert_eq!(s.accepted, 30);
+        assert_eq!(s.window, 60);
+        assert_eq!(s.evicted, 0);
+        assert_eq!(s.k, 2);
+        let after = f.counts();
+        assert!((after[0] - before[0] - 30.0).abs() < 1e-6, "{before:?} -> {after:?}");
+        assert!((after[1] - before[1] - 30.0).abs() < 1e-6);
+        assert_eq!(f.ingested(), 60);
+        assert!(f.snapshot().is_ok());
+        f.shutdown().unwrap();
+    }
+
+    #[test]
+    fn eviction_preserves_total_mass() {
+        // window = 64 < 4 × 30 ingested: whole batches retire in FIFO
+        // order, and the evidence stays in the model.
+        let mut f = cluster_fitter(2, 64);
+        let mut evicted = 0;
+        for phase in 0..4 {
+            evicted += f.ingest(&blob_batch(-6.0, 30, phase)).unwrap().evicted;
+        }
+        assert!(evicted > 0, "window 64 must have overflowed");
+        assert!(f.window_len() <= 64);
+        assert_eq!(f.window_len() + evicted, 120);
+        let total: f64 = f.counts().iter().sum();
+        assert!((total - 200.0 - 120.0).abs() < 1e-6, "total mass {total}");
+    }
+
+    #[test]
+    fn rejects_bad_batches_and_configs() {
+        let mut f = cluster_fitter(1, 128);
+        assert!(f.ingest(&[1.0, 2.0, 3.0]).is_err()); // not a multiple of d
+        assert!(f.ingest(&[f64::NAN, 0.0]).is_err());
+        let s = f.ingest(&[]).unwrap();
+        assert_eq!(s.accepted, 0);
+        let snap = seed_snapshot();
+        assert!(DistributedFitter::from_snapshot(
+            &snap,
+            DistributedStreamConfig::default() // no workers
+        )
+        .is_err());
+        assert!(DistributedFitter::from_snapshot(
+            &snap,
+            DistributedStreamConfig {
+                workers: vec![spawn_local().unwrap()],
+                decay: 0.0,
+                ..DistributedStreamConfig::default()
+            }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn least_loaded_routing_balances_workers() {
+        let mut f = cluster_fitter(2, 1 << 20);
+        for phase in 0..6 {
+            f.ingest(&blob_batch(-6.0, 20, phase)).unwrap();
+        }
+        // Equal batch sizes ⇒ strict alternation ⇒ a 60/60 split.
+        assert_eq!(f.worker_points, vec![60, 60]);
+    }
+}

@@ -7,7 +7,7 @@
 //!    `decay` (exponential forgetting, [`crate::stats::Stats::decay`]), so
 //!    drifting streams track the present instead of averaging history.
 //! 2. **MAP seeding**: new points get labels from the serving engine's MAP
-//!    assignment — posterior-mean [`KernelDesc`] scores with
+//!    assignment — posterior-mean [`crate::sampler::KernelDesc`] scores with
 //!    count-proportional weights ([`StepPlan::map_from_state`]), argmaxed.
 //!    No RNG, so seeding is identical across thread counts and kernels.
 //! 3. **Grouped fold**: the batch enters the window's sufficient-statistics
@@ -56,6 +56,27 @@ use anyhow::{bail, Result};
 /// configurable: the fold's FP reduction order is part of the determinism
 /// contract, so it must not vary with tuning knobs.
 const FOLD_TILE: usize = 128;
+
+/// Backend-generic streaming fitter surface, driven by the serving
+/// batcher: the local in-process [`IncrementalFitter`] and the distributed
+/// leader ([`crate::stream::DistributedFitter`]) implement the same
+/// contract, so [`crate::serve::spawn_streaming`] hot-swaps re-planned
+/// snapshots from either without knowing where the sweeps ran.
+pub trait StreamFitter: Send {
+    /// Model dimensionality (must match the serving engine's).
+    fn dim(&self) -> usize;
+    /// Cluster count (fixed across ingests — streaming never splits or
+    /// merges).
+    fn k(&self) -> usize;
+    /// Fold one row-major mini-batch (`batch.len() / dim()` points) into
+    /// the model.
+    fn ingest(&mut self, batch: &[f64]) -> Result<IngestSummary>;
+    /// Freeze the current model into a serving snapshot (what the hot-swap
+    /// path re-plans after every applied ingest group).
+    fn snapshot(&self) -> Result<ModelSnapshot>;
+    /// Points ingested over the fitter's lifetime.
+    fn ingested(&self) -> u64;
+}
 
 /// Streaming/incremental-fitting knobs.
 #[derive(Debug, Clone)]
@@ -138,38 +159,10 @@ impl IncrementalFitter {
         if !(cfg.alpha > 0.0) {
             bail!("stream alpha must be positive, got {}", cfg.alpha);
         }
-        let prior = snap.prior.clone();
-        let mut clusters = Vec::with_capacity(snap.k());
-        let mut base = Vec::with_capacity(snap.k());
-        for c in &snap.clusters {
-            // Halve the seed statistics into the two sub-sides (0.5× is an
-            // exact FP scaling, so the halves sum back bitwise): the sub
-            // split is only a seed for step (c)/(d) parameter draws — the
-            // fitter never proposes splits, so it needs no real bipartition.
-            let mut half = c.stats.clone();
-            half.decay(0.5);
-            let params = prior.try_mean_params(&c.stats)?;
-            let sub_p = prior.try_mean_params(&half)?;
-            clusters.push(Cluster {
-                stats: c.stats.clone(),
-                sub_stats: [half.clone(), half.clone()],
-                params,
-                sub_params: [sub_p.clone(), sub_p],
-                weight: c.weight,
-                sub_weights: [0.5, 0.5],
-                age: 1,
-                since_restart: 0,
-            });
-            base.push([half.clone(), half]);
-        }
-        let k = clusters.len();
+        let (state, base) = seed_state_from_snapshot(snap, cfg.alpha)?;
+        let k = state.k();
+        let prior = state.prior.clone();
         let d = prior.dim();
-        let state = DpmmState {
-            alpha: cfg.alpha,
-            prior: prior.clone(),
-            clusters,
-            n_total: snap.n_total as usize,
-        };
         let win = (0..k).map(|_| [prior.empty_stats(), prior.empty_stats()]).collect();
         Ok(IncrementalFitter {
             state,
@@ -309,16 +302,7 @@ impl IncrementalFitter {
     /// Rebuild the state's cluster statistics as base + window (fixed merge
     /// order: part of the determinism contract).
     fn sync_state(&mut self) {
-        for (k, c) in self.state.clusters.iter_mut().enumerate() {
-            let mut sub_l = self.base[k][LEFT].clone();
-            sub_l.merge(&self.win[k][LEFT]);
-            let mut sub_r = self.base[k][RIGHT].clone();
-            sub_r.merge(&self.win[k][RIGHT]);
-            let mut stats = sub_l.clone();
-            stats.merge(&sub_r);
-            c.stats = stats;
-            c.sub_stats = [sub_l, sub_r];
-        }
+        sync_model_stats(&mut self.state, &self.base, &self.win);
     }
 
     /// `sweeps` restricted-Gibbs passes over the window: steps (a)–(d) on
@@ -388,10 +372,90 @@ impl IncrementalFitter {
     }
 }
 
+impl StreamFitter for IncrementalFitter {
+    // Inherent methods win name resolution, so these delegate, not recurse.
+    fn dim(&self) -> usize {
+        IncrementalFitter::dim(self)
+    }
+    fn k(&self) -> usize {
+        IncrementalFitter::k(self)
+    }
+    fn ingest(&mut self, batch: &[f64]) -> Result<IngestSummary> {
+        IncrementalFitter::ingest(self, batch)
+    }
+    fn snapshot(&self) -> Result<ModelSnapshot> {
+        IncrementalFitter::snapshot(self)
+    }
+    fn ingested(&self) -> u64 {
+        IncrementalFitter::ingested(self)
+    }
+}
+
+/// Build the coordinator-side model state + halved frozen evidence base
+/// from a serving snapshot — the shared seeding path of the local
+/// [`IncrementalFitter`] and the distributed streaming leader, so both
+/// start every fixed-seed history from bitwise-identical statistics.
+pub(crate) fn seed_state_from_snapshot(
+    snap: &ModelSnapshot,
+    alpha: f64,
+) -> Result<(DpmmState, Vec<[Stats; 2]>)> {
+    let prior = snap.prior.clone();
+    let mut clusters = Vec::with_capacity(snap.k());
+    let mut base = Vec::with_capacity(snap.k());
+    for c in &snap.clusters {
+        // Halve the seed statistics into the two sub-sides (0.5× is an
+        // exact FP scaling, so the halves sum back bitwise): the sub
+        // split is only a seed for step (c)/(d) parameter draws — the
+        // fitter never proposes splits, so it needs no real bipartition.
+        let mut half = c.stats.clone();
+        half.decay(0.5);
+        let params = prior.try_mean_params(&c.stats)?;
+        let sub_p = prior.try_mean_params(&half)?;
+        clusters.push(Cluster {
+            stats: c.stats.clone(),
+            sub_stats: [half.clone(), half.clone()],
+            params,
+            sub_params: [sub_p.clone(), sub_p],
+            weight: c.weight,
+            sub_weights: [0.5, 0.5],
+            age: 1,
+            since_restart: 0,
+        });
+        base.push([half.clone(), half]);
+    }
+    let state = DpmmState {
+        alpha,
+        prior,
+        clusters,
+        n_total: snap.n_total as usize,
+    };
+    Ok((state, base))
+}
+
+/// Rebuild every cluster's statistics as base + window contribution, in a
+/// fixed merge order (base, then window, left then right) — part of the
+/// determinism contract shared by the local and distributed fitters.
+pub(crate) fn sync_model_stats(
+    state: &mut DpmmState,
+    base: &[[Stats; 2]],
+    win: &[[Stats; 2]],
+) {
+    for (k, c) in state.clusters.iter_mut().enumerate() {
+        let mut sub_l = base[k][LEFT].clone();
+        sub_l.merge(&win[k][LEFT]);
+        let mut sub_r = base[k][RIGHT].clone();
+        sub_r.merge(&win[k][RIGHT]);
+        let mut stats = sub_l.clone();
+        stats.merge(&sub_r);
+        c.stats = stats;
+        c.sub_stats = [sub_l, sub_r];
+    }
+}
+
 /// Run the assignment kernel over every shard via the shared scoped pool
 /// ([`map_shards_mut`]). Kernel stats bundles are discarded — the fitter's
 /// canonical fold owns statistics (see module docs).
-fn run_shards(
+pub(crate) fn run_shards(
     data: &Data,
     shards: &mut [Shard],
     plan: &StepPlan,
@@ -413,7 +477,7 @@ fn run_shards(
 /// Deterministic MAP seeding of a batch: per-point argmax over the frozen
 /// cluster descriptors, then over the winner's sub-descriptors. Pure
 /// scalar scoring (kernel-independent) in fixed chunks (thread-invariant).
-fn map_seed(
+pub(crate) fn map_seed(
     plan: &StepPlan,
     batch: &[f64],
     n: usize,
@@ -458,7 +522,7 @@ fn map_seed(
 /// of [`FOLD_TILE`], ascending selection order, ascending (cluster, sub)
 /// group order — single-threaded and kernel-independent by design, so the
 /// resulting bit patterns depend only on values and labels.
-fn fold_groups(
+pub(crate) fn fold_groups(
     target: &mut [[Stats; 2]],
     values: &[f64],
     d: usize,

@@ -1,5 +1,6 @@
 //! Streaming ingestion + incremental fitting: absorb new data continuously
-//! and refresh the serving model without a restart.
+//! and refresh the serving model without a restart — on one machine or
+//! across a TCP worker cluster.
 //!
 //! The batch pipeline (coordinator + backends) fits once over a fixed data
 //! matrix; the PR-2 serve layer then scores against that frozen fit. This
@@ -7,31 +8,48 @@
 //!
 //! * [`StreamBuffer`] — a FIFO sliding window of the most recent points
 //!   with their live labels (the only points whose assignments still move);
-//! * [`IncrementalFitter`] — folds mini-batches into an existing
-//!   [`crate::model::DpmmState`] through the grouped `add_cols` /
-//!   `remove_cols` sufficient-statistics path, seeding labels from the
-//!   serving engine's deterministic MAP assignment and then running
-//!   `sweeps` restricted-Gibbs passes over the window (reusing the fit
-//!   path's tiled/scalar shard kernels verbatim) instead of a full refit.
-//!   Optional exponential forgetting ([`crate::stats::Stats::decay`])
-//!   down-weights old evidence for drifting streams.
+//! * [`IncrementalFitter`] — the single-machine fitter: folds mini-batches
+//!   into an existing [`crate::model::DpmmState`] through the grouped
+//!   `add_cols` / `remove_cols` sufficient-statistics path, seeding labels
+//!   from the serving engine's deterministic MAP assignment and then
+//!   running `sweeps` restricted-Gibbs passes over the window (reusing the
+//!   fit path's tiled/scalar shard kernels verbatim) instead of a full
+//!   refit. Optional exponential forgetting
+//!   ([`crate::stats::Stats::decay`]) down-weights old evidence for
+//!   drifting streams.
+//! * [`DistributedFitter`] — the same contract sharded across `dpmm
+//!   worker` processes: the leader routes each mini-batch to the
+//!   least-loaded worker's window slice, workers MAP-seed and resweep
+//!   locally, and only O(K·d²) grouped statistics deltas return per sweep
+//!   (see [`distributed`] for the design and the determinism argument).
+//!   `dpmm stream --workers=host:port,...` turns one serving endpoint
+//!   into a horizontally scalable ingest+serve cluster.
 //!
-//! Ingest is wired end-to-end: the serving wire protocol gains an `ingest`
-//! verb ([`crate::serve::wire::ServeMessage::Ingest`]), `dpmm stream`
-//! starts a serving endpoint whose micro-batcher applies queued ingests and
-//! **hot-swaps** a freshly re-planned [`crate::serve::ModelSnapshot`]
-//! between fused scoring passes (see [`crate::serve::server`] for the
-//! consistency guarantees), and `python/dpmmwrapper.py`'s `DpmmClient`
-//! speaks the same verb. `cargo bench --bench stream_ingest` quantifies
-//! incremental ingest against a full refit at matched NMI
-//! (`BENCH_stream.json`; EXPERIMENTS.md §Streaming has the protocol).
+//! Both fitters implement [`StreamFitter`], the surface the serving
+//! micro-batcher drives: it applies queued ingests and **hot-swaps** a
+//! freshly re-planned [`crate::serve::ModelSnapshot`] between fused
+//! scoring passes (see [`crate::serve::server`] for the consistency
+//! guarantees). The serving wire protocol carries ingest via
+//! [`crate::serve::wire::ServeMessage::Ingest`], and
+//! `python/dpmmwrapper.py`'s `DpmmClient` speaks the same verb — the
+//! client wire is identical in local and cluster mode.
 //!
-//! The whole path is deterministic — see the contract in [`fitter`]'s docs,
-//! pinned by `tests/prop_kernel_equiv.rs` and
-//! `tests/prop_stats_roundtrip.rs`.
+//! Benchmarks: `cargo bench --bench stream_ingest` quantifies incremental
+//! ingest against a full refit at matched NMI (`BENCH_stream.json`), and
+//! `cargo bench --bench stream_distributed` measures 1-vs-2-vs-4-worker
+//! ingest throughput (`BENCH_stream_distributed.json`); EXPERIMENTS.md
+//! §Streaming and §Distributed streaming have the protocols.
+//!
+//! The whole path is deterministic — bitwise-identical labels and
+//! statistics across thread counts, assignment kernels, *and worker
+//! counts* — see the contracts in [`fitter`]'s and [`distributed`]'s docs,
+//! pinned by `tests/prop_kernel_equiv.rs`, `tests/prop_stats_roundtrip.rs`,
+//! and `tests/integration_stream_distributed.rs`.
 
 pub mod buffer;
+pub mod distributed;
 pub mod fitter;
 
 pub use buffer::StreamBuffer;
-pub use fitter::{IncrementalFitter, IngestSummary, StreamConfig};
+pub use distributed::{DistributedFitter, DistributedStreamConfig};
+pub use fitter::{IncrementalFitter, IngestSummary, StreamConfig, StreamFitter};

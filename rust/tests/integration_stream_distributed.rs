@@ -1,0 +1,337 @@
+//! End-to-end distributed streaming — the `dpmm stream --workers=...`
+//! acceptance suite:
+//!
+//! * a leader + 2 TCP workers ingest ≥12 mini-batches while predict
+//!   requests hammer the server concurrently: batches route to worker
+//!   window slices, restricted sweeps run worker-side, the leader folds
+//!   O(K·d²) stat deltas, the snapshot generation advances per applied
+//!   ingest, and **zero** predicts error across the hot-swaps;
+//! * a fixed-seed ingest history is **bitwise-identical** across 1, 2, and
+//!   3 workers and across the tiled vs scalar assignment kernels — the
+//!   distributed extension of `prop_kernel_equiv.rs`'s thread/kernel
+//!   contract;
+//! * worker death mid-ingest surfaces as a typed error while the server
+//!   keeps serving the last published generation (the distributed mirror
+//!   of `wire_robustness.rs`'s local guarantees).
+
+use dpmm::backend::distributed::wire::{read_message, write_message, Message};
+use dpmm::backend::distributed::worker::spawn_local;
+use dpmm::backend::shard::AssignKernel;
+use dpmm::config::{BackendChoice, DpmmParams};
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::{Data, Dataset};
+use dpmm::model::DpmmState;
+use dpmm::prelude::*;
+use dpmm::serve::{spawn_streaming, EngineConfig, ServeConfig};
+use dpmm::stats::{NiwPrior, Prior, Stats};
+use dpmm::stream::{DistributedFitter, DistributedStreamConfig};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dpmm_dstream_{name}_{}.bin", std::process::id()))
+}
+
+/// Fit a small GMM with a final-iteration checkpoint; return the checkpoint
+/// path plus a held-out stream drawn from the same mixture.
+fn fit_with_checkpoint(name: &str, n: usize, n_stream: usize) -> (std::path::PathBuf, Dataset) {
+    let d = 2;
+    let mut rng = Xoshiro256pp::seed_from_u64(21);
+    let all = GmmSpec::default_with(n + n_stream, d, 3).generate(&mut rng);
+    let train = Data::new(n, d, all.points.values[..n * d].to_vec());
+    let stream = Dataset {
+        points: Data::new(n_stream, d, all.points.values[n * d..].to_vec()),
+        labels: all.labels[n..].to_vec(),
+        true_k: all.true_k,
+    };
+    let ckpt_path = tmp(name);
+    let mut params = DpmmParams::gaussian_default(d);
+    params.iterations = 40;
+    params.seed = 17;
+    params.backend = BackendChoice::Native { threads: 2, shard_size: 2048 };
+    params.checkpoint_path = Some(ckpt_path.to_string_lossy().into_owned());
+    params.checkpoint_every = params.iterations;
+    let fit = DpmmFit::new(params).fit(&train).unwrap();
+    assert!(fit.num_clusters() >= 2, "fit collapsed to K={}", fit.num_clusters());
+    (ckpt_path, stream)
+}
+
+#[test]
+fn distributed_ingest_over_tcp_hot_swaps_without_dropping_predicts() {
+    let (ckpt, stream) = fit_with_checkpoint("e2e", 3000, 1400);
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).unwrap();
+    let workers: Vec<String> = (0..2).map(|_| spawn_local().unwrap()).collect();
+    let fitter = DistributedFitter::from_snapshot(
+        &snapshot,
+        DistributedStreamConfig {
+            workers,
+            worker_threads: 2,
+            window: 2048,
+            sweeps: 1,
+            alpha: 10.0,
+            seed: 99,
+            ..DistributedStreamConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(fitter.num_workers(), 2);
+    let engine = ScoringEngine::new(&snapshot, EngineConfig::default()).unwrap();
+    let server =
+        spawn_streaming(engine, fitter, "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = server.addr().to_string();
+    let d = 2usize;
+
+    // 12 ingest mini-batches of 100 points; the remaining 200 points are
+    // the concurrent predict traffic (≥10 hot-swaps under load).
+    let batches = 12usize;
+    let per = 100usize;
+    let predict_pts = &stream.points.values[batches * per * d..];
+    assert!(predict_pts.len() >= 200 * d);
+
+    let stop = AtomicBool::new(false);
+    let predict_ok = AtomicU64::new(0);
+    let predict_err = AtomicU64::new(0);
+    let mut receipts = Vec::new();
+    std::thread::scope(|scope| {
+        // Two hammering predict clients, running across every hot-swap.
+        for c in 0..2usize {
+            let addr = addr.clone();
+            let stop = &stop;
+            let predict_ok = &predict_ok;
+            let predict_err = &predict_err;
+            scope.spawn(move || {
+                let mut client = DpmmClient::connect(&addr).unwrap();
+                let chunk = 50 * d;
+                let slots = predict_pts.len() / chunk;
+                let mut turn = c;
+                while !stop.load(Ordering::Relaxed) {
+                    let lo = (turn % slots) * chunk;
+                    match client.predict(&predict_pts[lo..lo + chunk], d) {
+                        Ok(p) => {
+                            assert_eq!(p.labels.len(), 50);
+                            predict_ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            predict_err.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    turn += 1;
+                }
+            });
+        }
+        // Main thread: the ingest stream over TCP.
+        let mut client = DpmmClient::connect(&addr).unwrap();
+        let info_before = client.info().unwrap();
+        for b in 0..batches {
+            let lo = b * per * d;
+            let receipt = client.ingest(&stream.points.values[lo..lo + per * d], d).unwrap();
+            assert_eq!(receipt.accepted, per as u64);
+            receipts.push(receipt);
+        }
+        let info_after = client.info().unwrap();
+        assert_eq!(
+            info_after.n_total,
+            info_before.n_total + (batches * per) as u64,
+            "served snapshot must reflect the distributed-ingested points"
+        );
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // Generations advance strictly: one bump per applied batch.
+    for (i, r) in receipts.iter().enumerate() {
+        assert_eq!(r.generation, 2 + i as u64, "receipt {i}: {r:?}");
+    }
+    // window = 2048 > 1200 ingested: nothing evicted, all points windowed
+    // across the two worker slices.
+    assert_eq!(receipts.last().unwrap().window, (batches * per) as u64);
+
+    // Zero dropped/errored predicts across all 12 swaps, and plenty ran.
+    let ok = predict_ok.load(Ordering::Relaxed);
+    let errs = predict_err.load(Ordering::Relaxed);
+    assert_eq!(errs, 0, "predict requests errored during distributed hot-swaps");
+    assert!(ok > 0, "no predict requests completed during the ingest stream");
+
+    // /stats reflects the final state.
+    let mut client = DpmmClient::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.generation, 1 + batches as u64);
+    assert_eq!(stats.ingested, (batches * per) as u64);
+    assert_eq!(stats.ingest_pending, 0);
+
+    // The refreshed model still assigns sensibly after the swaps.
+    let n_eval = 200usize;
+    let eval = &predict_pts[..n_eval * d];
+    let pred = client.predict(eval, d).unwrap();
+    let truth: Vec<usize> = stream.labels[batches * per..batches * per + n_eval].to_vec();
+    let labels: Vec<usize> = pred.labels.iter().map(|&l| l as usize).collect();
+    let score = nmi(&truth, &labels);
+    assert!(score > 0.8, "post-swap held-out NMI too low: {score}");
+
+    server.stop().unwrap();
+    std::fs::remove_file(&ckpt).ok();
+}
+
+/// Seed snapshot from poured statistics (no MCMC), mirroring
+/// `prop_kernel_equiv.rs`'s incremental-determinism fixture.
+fn seed_snapshot(d: usize) -> ModelSnapshot {
+    let prior = Prior::Niw(NiwPrior::weak(d));
+    let mut rng = Xoshiro256pp::seed_from_u64(123);
+    let mut state = DpmmState::new(4.0, prior.clone(), 3, 300, &mut rng);
+    for (k, center) in [-8.0f64, 0.0, 8.0].into_iter().enumerate() {
+        let mut s = prior.empty_stats();
+        for i in 0..100 {
+            let x: Vec<f64> = (0..d)
+                .map(|j| center + 0.15 * ((i * (j + 3) + k) % 13) as f64 - 0.9)
+                .collect();
+            s.add(&x);
+        }
+        state.clusters[k].stats = s;
+    }
+    ModelSnapshot::from_state(&state).unwrap()
+}
+
+/// A deterministic stream of mini-batches with varying sizes (odd tile
+/// remainders included) hopping between the blobs.
+fn stream_batches(d: usize) -> Vec<Vec<f64>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(77);
+    let centers = [-8.0f64, 0.0, 8.0];
+    [37usize, 64, 5, 81, 128, 33]
+        .iter()
+        .map(|&n| {
+            let mut batch = Vec::with_capacity(n * d);
+            for _ in 0..n {
+                let c = centers[rng.next_range(3)];
+                for _ in 0..d {
+                    batch.push(c + (rng.next_f64() - 0.5) * 1.4);
+                }
+            }
+            batch
+        })
+        .collect()
+}
+
+/// Bitwise fingerprint of a model state's statistics (counts, moment sums,
+/// sub-cluster splits) — `Stats` compares by exact f64 values.
+fn state_stats(state: &DpmmState) -> Vec<(Stats, [Stats; 2])> {
+    state.clusters.iter().map(|c| (c.stats.clone(), c.sub_stats.clone())).collect()
+}
+
+#[test]
+fn fixed_seed_history_bitwise_identical_across_worker_counts_and_kernels() {
+    // The distributed extension of the PR-3 determinism contract: the same
+    // ingest history (same batches, same boundaries, same seed) must yield
+    // bitwise-identical leader-side statistics no matter how many workers
+    // the window shards across, how many threads each worker sweeps with,
+    // and which assignment kernel (tiled vs scalar) the workers run. The
+    // window (160) is smaller than the 348 ingested points, so the
+    // leader-driven FIFO eviction path is exercised too.
+    let d = 3;
+    let snap = seed_snapshot(d);
+    let batches = stream_batches(d);
+    let run = |n_workers: usize, worker_threads: usize, kernel: AssignKernel| {
+        let workers: Vec<String> = (0..n_workers).map(|_| spawn_local().unwrap()).collect();
+        let mut f = DistributedFitter::from_snapshot(
+            &snap,
+            DistributedStreamConfig {
+                workers,
+                worker_threads,
+                window: 160,
+                sweeps: 2,
+                alpha: 4.0,
+                seed: 2024,
+                kernel: Some(kernel),
+                ..DistributedStreamConfig::default()
+            },
+        )
+        .unwrap();
+        for b in &batches {
+            f.ingest(b).unwrap();
+        }
+        (f.counts(), state_stats(f.state()), f.window_len(), f.ingested())
+    };
+    let reference = run(1, 2, AssignKernel::Tiled);
+    assert_eq!(reference.3, batches.iter().map(|b| b.len() / d).sum::<usize>() as u64);
+    assert!(reference.2 <= 160, "window must respect the cap, got {}", reference.2);
+    for (workers, threads) in [(2usize, 2usize), (2, 1), (3, 2)] {
+        let got = run(workers, threads, AssignKernel::Tiled);
+        assert_eq!(
+            got, reference,
+            "statistics diverged at workers={workers} threads={threads} (tiled)"
+        );
+    }
+    for workers in [1usize, 2] {
+        let got = run(workers, 2, AssignKernel::Scalar);
+        assert_eq!(got, reference, "statistics diverged at workers={workers} (scalar kernel)");
+    }
+}
+
+/// A fake worker that completes the StreamInit handshake and then drops
+/// the connection on the first follow-up message — "death mid-ingest".
+fn spawn_dying_worker() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        if let Ok((mut stream, _)) = listener.accept() {
+            match read_message(&mut stream) {
+                Ok(Message::StreamInit { .. }) => {
+                    write_message(&mut stream, &Message::Ack).ok();
+                }
+                _ => return,
+            }
+            // Wait for the first real verb, then die without replying.
+            let _ = read_message(&mut stream);
+            drop(stream);
+        }
+    });
+    addr
+}
+
+#[test]
+fn worker_death_mid_ingest_leaves_last_generation_serving() {
+    let snap = seed_snapshot(2);
+    // Worker 0 (the least-loaded tie-break target) dies on first ingest;
+    // worker 1 is healthy but never reached for batch 0.
+    let workers = vec![spawn_dying_worker(), spawn_local().unwrap()];
+    let fitter = DistributedFitter::from_snapshot(
+        &snap,
+        DistributedStreamConfig {
+            workers,
+            window: 1024,
+            sweeps: 1,
+            alpha: 4.0,
+            seed: 7,
+            ..DistributedStreamConfig::default()
+        },
+    )
+    .unwrap();
+    let engine = ScoringEngine::new(&snap, EngineConfig::default()).unwrap();
+    let server =
+        spawn_streaming(engine, fitter, "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = DpmmClient::connect(&addr).unwrap();
+
+    // The ingest fails with a typed error (never a hang or a dead server).
+    let err = client.ingest(&[-8.0, 0.1, 8.0, -0.1], 2).unwrap_err();
+    assert!(
+        err.to_string().contains("ingest failed"),
+        "expected an ingest failure surface, got: {err}"
+    );
+
+    // The server still serves the last published generation.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.generation, 1, "failed distributed ingest must not publish");
+    assert_eq!(stats.ingested, 0);
+    assert_eq!(stats.ingest_pending, 0, "failed batch must not linger as lag");
+    let pred = client.predict(&[-8.0, 0.0, 0.0, 0.0, 8.0, 0.0], 2).unwrap();
+    assert_eq!(pred.labels.len(), 3);
+
+    // The leader poisons itself after the mid-protocol failure: further
+    // ingests fail fast with the halt reason (resuming could fold stats
+    // the workers never agreed on) while the serving path stays healthy.
+    let err = client.ingest(&[0.0, 0.0], 2).unwrap_err();
+    assert!(err.to_string().contains("halted"), "expected a poisoned-fitter error: {err}");
+    assert!(client.predict(&[0.0, 0.0], 2).is_ok());
+    assert_eq!(client.stats().unwrap().generation, 1);
+
+    server.stop().unwrap();
+}

@@ -256,3 +256,64 @@ fn decay_scales_mass_geometrically() {
     quarter.decay(0.25);
     assert_eq!(twice, quarter);
 }
+
+#[test]
+fn merge_unmerge_roundtrip_within_rounding() {
+    // merge → unmerge of the same delta must return to the starting
+    // accumulator within one rounding step at the working magnitude —
+    // the distributed streaming leader's whole window bookkeeping is
+    // merge/unmerge of worker-reported deltas, so drift here would
+    // accumulate across every sweep of a long stream.
+    let mut rng = Xoshiro256pp::seed_from_u64(41);
+    for prior in [
+        Prior::Niw(NiwPrior::weak(3)),
+        Prior::DirMult(DirMultPrior::symmetric(5, 1.0)),
+    ] {
+        for scale in [1.0, 1e4] {
+            let before = warm_stats(&mut rng, &prior, 50, scale);
+            let delta = warm_stats(&mut rng, &prior, 17, scale);
+            let mut s = before.clone();
+            s.merge(&delta);
+            s.unmerge(&delta);
+            assert_eq!(s.count(), before.count(), "counts must round-trip exactly");
+            let close = |a: f64, b: f64, mag: f64| (a - b).abs() <= 2.0 * tol(mag);
+            match (&s, &before, &delta) {
+                (Stats::Gauss(a), Stats::Gauss(b), Stats::Gauss(dl)) => {
+                    for ((x, y), m) in a.sum_x.iter().zip(&b.sum_x).zip(&dl.sum_x) {
+                        assert!(close(*x, *y, y.abs() + m.abs()), "{x} vs {y}");
+                    }
+                    for ((x, y), m) in a
+                        .sum_xxt
+                        .data()
+                        .iter()
+                        .zip(b.sum_xxt.data())
+                        .zip(dl.sum_xxt.data())
+                    {
+                        assert!(close(*x, *y, y.abs() + m.abs()), "{x} vs {y}");
+                    }
+                }
+                (Stats::Mult(a), Stats::Mult(b), Stats::Mult(dl)) => {
+                    for ((x, y), m) in a.sum_x.iter().zip(&b.sum_x).zip(&dl.sum_x) {
+                        assert!(close(*x, *y, y.abs() + m.abs()), "{x} vs {y}");
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+    // Unmerging an empty delta is a bitwise no-op.
+    let prior = Prior::Niw(NiwPrior::weak(2));
+    let s = warm_stats(&mut rng, &prior, 10, 1.0);
+    let mut t = s.clone();
+    t.unmerge(&prior.empty_stats());
+    // -0.0 from subtracting 0.0 compares equal; counts and sums intact.
+    assert_eq!(t, s);
+}
+
+#[test]
+#[should_panic(expected = "mismatch")]
+fn unmerge_rejects_cross_family() {
+    let mut g = Prior::Niw(NiwPrior::weak(2)).empty_stats();
+    let m = Prior::DirMult(DirMultPrior::symmetric(2, 1.0)).empty_stats();
+    g.unmerge(&m);
+}

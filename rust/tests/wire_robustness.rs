@@ -95,6 +95,22 @@ fn distributed_corpus() -> Vec<Vec<u8>> {
         Message::Ack,
         Message::Shutdown,
         Message::Error("nope".into()),
+        // v2 streaming verbs ride the same codec: every corruption class
+        // below must hold for them too.
+        Message::StreamInit { d: 2, prior: prior.clone(), threads: 2, kernel: 0 },
+        Message::StreamIngest {
+            batch_id: 5,
+            seed: 11,
+            params: StepParams::map_snapshot(&state),
+            x: vec![0.5; 6],
+        },
+        Message::StreamSweep(StepParams::snapshot(&state)),
+        Message::StreamEvict { batch_ids: vec![0, 1] },
+        Message::StatsDelta(vec![dpmm::backend::distributed::wire::BatchDelta {
+            batch_id: 9,
+            removed: vec![[s.clone(), prior.empty_stats()]],
+            added: vec![[prior.empty_stats(), s.clone()]],
+        }]),
     ]
     .into_iter()
     .map(|m| m.encode())

@@ -36,12 +36,16 @@ Cluster mode is transparent to this client: when the server runs as
 ``dpmm stream --workers=host:7878,host2:7878``, ingest batches are sharded
 across TCP worker machines behind the endpoint (restricted sweeps run
 worker-side; only O(K·d²) statistics deltas travel leader↔worker), but the
-client-facing wire is byte-identical. The only observable differences are
-aggregate: the receipt's ``window`` spans every worker's slice, and a
-worker failure surfaces as a typed :class:`ServerError` — ingest then
-stays halted until the stream leader restarts, while the endpoint keeps
-serving predictions from the last published generation
-(``tests/test_stream_client.py::TestClusterMode`` pins the client view).
+client-facing wire is byte-identical. The cluster is elastic and
+fault-tolerant: a worker dying mid-stream is absorbed by the leader (its
+window batches re-shard onto the survivors and the ingest still succeeds),
+surfacing only through ``client.stats()`` — ``degraded`` flips true and
+``workers_alive`` drops below ``workers_total``. Only losing the *last*
+worker halts ingest (``halted`` true, ingests raise :class:`ServerError`),
+while the endpoint keeps serving predictions from the last published
+generation (``tests/test_stream_client.py::TestClusterMode`` pins the
+client view). See ``docs/DETERMINISM.md`` for what stays reproducible
+under churn.
 """
 
 import json
@@ -147,7 +151,7 @@ def fit(
 # All integers little-endian; point payloads are raw float64 runs.
 # ---------------------------------------------------------------------------
 
-SERVE_PROTO_VERSION = 2  # v2: ingest verbs + extended stats layout
+SERVE_PROTO_VERSION = 3  # v3: stats layout grew the cluster-health fields
 FLAG_LOG_PROBS = 1
 
 TAG_PREDICT = 1
@@ -275,7 +279,7 @@ def _decode_stats(payload):
         raise ServerError(_decode_error(body))
     if tag != TAG_STATS_REPLY:
         raise ProtocolError(f"unexpected reply tag {tag} (want StatsReply)")
-    head, _ = _take(body, 72, "stats reply")
+    head, _ = _take(body, 82, "stats reply")
     (
         requests,
         points,
@@ -286,7 +290,11 @@ def _decode_stats(payload):
         generation,
         ingested,
         ingest_pending,
-    ) = struct.unpack("<QQQdddQQQ", head)
+        workers_total,
+        workers_alive,
+        degraded,
+        halted,
+    ) = struct.unpack("<QQQdddQQQIIBB", head)
     return {
         "requests": requests,
         "points": points,
@@ -297,6 +305,10 @@ def _decode_stats(payload):
         "generation": generation,
         "ingested": ingested,
         "ingest_pending": ingest_pending,
+        "workers_total": workers_total,
+        "workers_alive": workers_alive,
+        "degraded": bool(degraded),
+        "halted": bool(halted),
     }
 
 
@@ -356,11 +368,26 @@ class DpmmClient:
     # -- API ---------------------------------------------------------------
 
     def predict(self, x, probs=False):
-        """Score an (n, d) array.
+        """Score an ``(n, d)`` array against the served model.
 
-        Returns ``(labels, map_score, log_predictive)`` int64/float64
-        arrays, plus a fourth ``(n, k)`` ``log_probs`` array when
-        ``probs=True``.
+        Args:
+          x: array-like of shape ``(n, d)``; cast to contiguous float64.
+          probs: also return the normalized per-cluster log posterior
+            membership matrix.
+
+        Returns:
+          ``(labels, map_score, log_predictive)`` — int64 MAP labels,
+          float64 MAP scores, and float64 log predictive densities (the
+          anomaly score; lower = more anomalous) — plus a fourth
+          ``(n, k)`` float64 ``log_probs`` array when ``probs=True``.
+
+        Raises:
+          ServerError: the server rejected the request (e.g. dimension
+            mismatch); the connection stays usable.
+          ProtocolError: malformed bytes on the wire.
+
+        Every prediction is scored entirely under one snapshot generation
+        (pass-level atomicity) — see ``docs/WIRE_PROTOCOLS.md``.
         """
         reply = self._roundtrip(_encode_predict(x, probs=probs))
         labels, map_score, log_predictive, log_probs = _decode_scores(reply)
@@ -375,28 +402,49 @@ class DpmmClient:
     def stats(self):
         """Server throughput counters (the `/stats` endpoint).
 
-        Streaming servers additionally report ``generation`` (live snapshot
-        generation, bumped per applied ingest), ``ingested`` (points folded
-        over the server's lifetime) and ``ingest_pending`` (ingest lag).
+        Returns:
+          dict with throughput keys (``requests``, ``points``,
+          ``batches``, ``uptime_secs``, ``points_per_sec``,
+          ``mean_batch_points``), streaming freshness keys
+          (``generation`` — live snapshot generation, bumped per applied
+          ingest group; ``ingested`` — points folded over the server's
+          lifetime; ``ingest_pending`` — ingest lag), and cluster-health
+          keys (``workers_total``, ``workers_alive``, ``degraded``,
+          ``halted``; see :meth:`ingest` for their semantics — all zero /
+          False on local-mode and plain-serve endpoints).
         """
         return _decode_stats(self._roundtrip(_encode_simple(TAG_STATS)))
 
     def ingest(self, x):
-        """Stream an (n, d) array into the served model (``dpmm stream``
-        endpoints only).
+        """Stream an ``(n, d)`` array into the served model
+        (``dpmm stream`` endpoints only).
 
-        Blocks until the batch is folded and the re-planned snapshot is
-        live; returns ``{"accepted", "generation", "window"}``. Predictions
-        answered at or after the returned generation see the batch.
+        Args:
+          x: array-like of shape ``(n, d)``; cast to contiguous float64.
+
+        Returns:
+          ``{"accepted", "generation", "window"}`` — blocks until the
+          batch is folded and the re-planned snapshot is live, so
+          predictions answered at or after the returned ``generation``
+          see the batch (read-your-ingest).
+
+        Raises:
+          ServerError: the batch was rejected (shape/NaN), ingest is
+            disabled (plain ``dpmm serve``), or the cluster is halted.
+          ProtocolError: malformed bytes on the wire.
 
         Works identically against a distributed endpoint
         (``dpmm stream --workers=...``): the leader routes the batch to a
         worker's window slice and ``window`` reports the global
-        (all-worker) resweepable total. A worker failing mid-ingest raises
-        :class:`ServerError`, and the endpoint keeps serving the last
-        published generation; further ingests keep erroring (the leader
-        halts ingest rather than risk folding statistics its workers never
-        agreed on) until the stream leader is restarted.
+        (all-worker) resweepable total. The cluster is fault-tolerant: a
+        worker dying mid-ingest is absorbed (its window batches re-shard
+        onto survivors and this call still succeeds) and surfaces only as
+        ``stats()["degraded"]`` flipping true with ``workers_alive``
+        dropping. Only losing the last worker halts ingest —
+        ``stats()["halted"]`` flips true and further ingests raise
+        :class:`ServerError` until the leader restarts (or resumes from
+        its streaming checkpoint via ``dpmm stream --resume``) — while
+        predictions keep serving the last published generation.
         """
         return _decode_ingest_reply(self._roundtrip(_encode_ingest(x)))
 

@@ -120,7 +120,7 @@ class TestInfoAndStats:
 
     def test_stats_roundtrip(self):
         body = struct.pack(
-            "<BBQQQdddQQQ",
+            "<BBQQQdddQQQIIBB",
             w.SERVE_PROTO_VERSION,
             w.TAG_STATS_REPLY,
             10,
@@ -132,6 +132,10 @@ class TestInfoAndStats:
             3,
             600,
             50,
+            3,
+            2,
+            1,
+            0,
         )
         stats = w._decode_stats(body)
         assert stats["requests"] == 10
@@ -143,13 +147,17 @@ class TestInfoAndStats:
         assert stats["generation"] == 3
         assert stats["ingested"] == 600
         assert stats["ingest_pending"] == 50
+        assert stats["workers_total"] == 3
+        assert stats["workers_alive"] == 2
+        assert stats["degraded"] is True
+        assert stats["halted"] is False
 
     def test_stats_truncated_raises(self):
         body = struct.pack(
-            "<BBQQQddd",  # the old 48-byte layout is now a truncation
+            "<BBQQQdddQQQ",  # the v2 72-byte layout is now a truncation
             w.SERVE_PROTO_VERSION,
             w.TAG_STATS_REPLY,
-            1, 2, 3, 4.0, 5.0, 6.0,
+            1, 2, 3, 4.0, 5.0, 6.0, 7, 8, 9,
         )
         with pytest.raises(w.ProtocolError, match="truncated"):
             w._decode_stats(body)

@@ -42,7 +42,15 @@ class MockStreamServer:
 
     ERROR = b"ingest failed: batch contains non-finite values"
 
-    def __init__(self, fail_next_ingest=False, error_message=None):
+    def __init__(
+        self,
+        fail_next_ingest=False,
+        error_message=None,
+        workers_total=0,
+        workers_alive=None,
+        degraded=False,
+        halted=False,
+    ):
         self._sock = socket.create_server(("127.0.0.1", 0))
         self.addr = "127.0.0.1:%d" % self._sock.getsockname()[1]
         self.generation = 1
@@ -51,6 +59,10 @@ class MockStreamServer:
         self.ingests = []  # decoded (n, d, ndarray) per Ingest frame
         self.fail_next_ingest = fail_next_ingest
         self.error_message = error_message or self.ERROR
+        self.workers_total = workers_total
+        self.workers_alive = workers_total if workers_alive is None else workers_alive
+        self.degraded = degraded
+        self.halted = halted
         self._thread = threading.Thread(target=self._serve, daemon=True)
         self._thread.start()
 
@@ -93,7 +105,7 @@ class MockStreamServer:
             )
         if tag == w.TAG_STATS:
             return struct.pack(
-                "<BBQQQdddQQQ",
+                "<BBQQQdddQQQIIBB",
                 w.SERVE_PROTO_VERSION,
                 w.TAG_STATS_REPLY,
                 len(self.ingests),
@@ -105,6 +117,10 @@ class MockStreamServer:
                 self.generation,
                 self.ingested,
                 0,
+                self.workers_total,
+                self.workers_alive,
+                int(self.degraded),
+                int(self.halted),
             )
         raise AssertionError(f"mock server got unexpected tag {tag}")
 
@@ -220,16 +236,17 @@ class TestClusterMode:
 
     Distribution happens entirely behind the server on the leader↔worker
     protocol; the client-facing wire is byte-identical to the local mode.
-    These tests pin the two things a client *can* observe about a cluster:
-    the aggregate window spanning all worker slices, and worker failures
-    surfacing as typed ingest errors while the endpoint keeps serving the
-    last published generation.
+    These tests pin what a client *can* observe about a cluster: the
+    aggregate window spanning all worker slices, worker failures absorbed
+    into degraded-mode `/stats` fields (serve protocol v3), and the
+    halted state when no workers remain — while the endpoint keeps
+    serving predictions from the last published generation throughout.
     """
 
     def test_client_wire_is_topology_agnostic(self):
         # The same DpmmClient bytes drive a clustered endpoint; the window
         # in the receipt is the global (all-worker-slices) total.
-        server = MockStreamServer()
+        server = MockStreamServer(workers_total=2)
         try:
             with w.DpmmClient(server.addr, timeout=5.0) as client:
                 for b in range(3):
@@ -237,30 +254,61 @@ class TestClusterMode:
                     assert receipt["accepted"] == 100
                 # Global window aggregates across worker slices.
                 assert receipt["window"] == 300
-                assert client.stats()["generation"] == 4
+                stats = client.stats()
+                assert stats["generation"] == 4
+                assert stats["workers_total"] == 2
+                assert stats["workers_alive"] == 2
+                assert stats["degraded"] is False
+                assert stats["halted"] is False
         finally:
             server.close()
 
-    def test_worker_death_surfaces_as_typed_error_and_serving_survives(self):
-        # Mirrors rust/tests/integration_stream_distributed.rs: a worker
-        # dying mid-ingest is a typed error reply, the generation does not
-        # advance, and the same connection keeps answering predict/stats.
-        # The real leader then *halts further ingest* (poisons itself)
-        # until the stream leader is restarted — it does not re-route or
-        # silently resume; only prediction/stats service continues. The
-        # second ingest below models the client's view after that restart.
+    def test_worker_death_surfaces_as_degraded_mode_and_ingest_continues(self):
+        # Mirrors rust/tests/integration_stream_distributed.rs
+        # (worker_death_mid_ingest_is_absorbed_by_survivors): a worker
+        # dying mid-ingest is ABSORBED by the leader — the batch re-routes
+        # to a survivor, the ingest succeeds, and the failure surfaces
+        # only through the /stats cluster-health fields.
+        server = MockStreamServer(workers_total=3, workers_alive=2, degraded=True)
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                receipt = client.ingest(np.zeros((100, 2)))
+                assert receipt["accepted"] == 100
+                stats = client.stats()
+                assert stats["workers_total"] == 3
+                assert stats["workers_alive"] == 2
+                assert stats["degraded"] is True
+                assert stats["halted"] is False
+                # Ingest keeps publishing on the survivors.
+                assert client.ingest(np.zeros((5, 2)))["generation"] == 3
+        finally:
+            server.close()
+
+    def test_losing_the_last_worker_halts_ingest_with_a_typed_error(self):
+        # Mirrors rust/tests/integration_stream_distributed.rs
+        # (losing_the_last_worker_halts_ingest_but_not_serving): with no
+        # survivors the leader halts — ingests raise typed errors, /stats
+        # reports halted, and the generation stops advancing (the server
+        # still answers stats/predict from the last published snapshot).
         server = MockStreamServer(
             fail_next_ingest=True,
-            error_message=b"ingest failed: routing ingest batch 0 to worker 0: "
-            b"connection reset by peer",
+            error_message=b"ingest failed: distributed stream halted (no live "
+            b"workers remain (all 1 failed)); resume from the last checkpoint "
+            b"with --resume",
+            workers_total=1,
+            workers_alive=0,
+            degraded=True,
+            halted=True,
         )
         try:
             with w.DpmmClient(server.addr, timeout=5.0) as client:
-                with pytest.raises(w.ServerError, match="worker 0"):
+                with pytest.raises(w.ServerError, match="halted"):
                     client.ingest(np.zeros((2, 2)))
-                assert client.stats()["generation"] == 1
-                assert client.stats()["ingest_pending"] == 0
-                # Post-restart: ingest applies and publishes again.
-                assert client.ingest(np.zeros((5, 2)))["generation"] == 2
+                stats = client.stats()
+                assert stats["generation"] == 1
+                assert stats["ingest_pending"] == 0
+                assert stats["workers_alive"] == 0
+                assert stats["degraded"] is True
+                assert stats["halted"] is True
         finally:
             server.close()

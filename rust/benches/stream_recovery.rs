@@ -1,0 +1,207 @@
+//! Failure-recovery cost of the elastic distributed stream: what one
+//! worker death costs in ingest latency, and how throughput settles on
+//! the survivors.
+//!
+//! Protocol (EXPERIMENTS.md §Fault tolerance): fit a base model, then
+//! absorb B mini-batches through a [`DistributedFitter`] over 3
+//! in-process TCP workers twice — once healthy (steady-state anchor), and
+//! once with one worker behind a frame-counting proxy that kills the
+//! connection mid-session. The leader re-shards the dead worker's
+//! resident batches onto the survivors (MAP re-seed + re-sweep), so the
+//! batch that observes the death pays recovery latency; every later batch
+//! runs on 2 workers. Reported: per-phase points/sec (steady, recovery
+//! batch, post-recovery), the recovery batch's latency multiple over
+//! steady state, plus streaming checkpoint save/resume wall-clock.
+//!
+//! Machine-readable output: `BENCH_stream_recovery.json` (override with
+//! `BENCH_STREAM_RECOVERY_OUT`). Scale: `DPMM_BENCH_SCALE=small|medium|full`.
+//!
+//! Run: `cargo bench --bench stream_recovery`
+
+#[path = "support/mod.rs"]
+mod support;
+
+use dpmm::backend::distributed::worker::{spawn_local, spawn_local_dying};
+use dpmm::config::DpmmParams;
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::Data;
+use dpmm::prelude::*;
+use dpmm::stream::{DistributedFitter, DistributedStreamConfig};
+use dpmm::util::json::{self, Json};
+use std::time::Instant;
+
+const D: usize = 8;
+const K: usize = 5;
+
+struct Sizes {
+    n_base: usize,
+    batches: usize,
+    batch_n: usize,
+    window: usize,
+    base_iters: usize,
+}
+
+fn sizes() -> Sizes {
+    match support::scale() {
+        support::Scale::Small => {
+            Sizes { n_base: 6_000, batches: 12, batch_n: 2_000, window: 65_536, base_iters: 40 }
+        }
+        support::Scale::Medium => {
+            Sizes { n_base: 30_000, batches: 18, batch_n: 8_000, window: 262_144, base_iters: 60 }
+        }
+        support::Scale::Full => {
+            Sizes {
+                n_base: 100_000,
+                batches: 24,
+                batch_n: 50_000,
+                window: 1 << 21,
+                base_iters: 80,
+            }
+        }
+    }
+}
+
+fn cfg(workers: Vec<String>, window: usize) -> DistributedStreamConfig {
+    DistributedStreamConfig {
+        workers,
+        worker_threads: 1,
+        window,
+        sweeps: 1,
+        seed: 9,
+        ..DistributedStreamConfig::default()
+    }
+}
+
+fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+fn main() {
+    let Sizes { n_base, batches, batch_n, window, base_iters } = sizes();
+    let total = n_base + batches * batch_n;
+    println!(
+        "stream recovery bench: d={D} K={K} base={n_base} stream={batches}×{batch_n} \
+         window={window}"
+    );
+    let mut rng = Xoshiro256pp::seed_from_u64(4242);
+    let ds = GmmSpec::default_with(total, D, K).generate(&mut rng);
+    let train = Data::new(n_base, D, ds.points.values[..n_base * D].to_vec());
+    let ckpt =
+        std::env::temp_dir().join(format!("dpmm_bench_recovery_{}.ckpt", std::process::id()));
+    let mut params = DpmmParams::gaussian_default(D);
+    params.iterations = base_iters;
+    params.seed = 7;
+    params.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+    params.checkpoint_every = params.iterations;
+    DpmmFit::new(params).fit(&train).expect("base fit");
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).expect("snapshot");
+    std::fs::remove_file(&ckpt).ok();
+
+    let batch_at = |b: usize| {
+        let lo = (n_base + b * batch_n) * D;
+        &ds.points.values[lo..lo + batch_n * D]
+    };
+
+    // --- healthy 3-worker anchor ----------------------------------------
+    let workers: Vec<String> = (0..3).map(|_| spawn_local().expect("worker")).collect();
+    let mut healthy = DistributedFitter::from_snapshot(&snapshot, cfg(workers, window))
+        .expect("healthy fitter");
+    let mut steady_secs = Vec::with_capacity(batches);
+    for b in 0..batches {
+        let t0 = Instant::now();
+        healthy.ingest(batch_at(b)).expect("healthy ingest");
+        steady_secs.push(t0.elapsed().as_secs_f64());
+    }
+    let steady_mean = mean(&steady_secs);
+    println!(
+        "[steady   ] 3 workers: {:.3}s/batch ({:.0} pts/s)",
+        steady_mean,
+        batch_n as f64 / steady_mean.max(1e-9)
+    );
+
+    // Checkpoint save/resume wall-clock rides on the healthy fitter.
+    let stream_ckpt = std::env::temp_dir()
+        .join(format!("dpmm_bench_recovery_stream_{}.ckpt", std::process::id()));
+    let t0 = Instant::now();
+    healthy.save_stream_checkpoint(&stream_ckpt).expect("stream checkpoint");
+    let checkpoint_secs = t0.elapsed().as_secs_f64();
+    healthy.shutdown().ok();
+    drop(healthy);
+    let resume_workers: Vec<String> = (0..3).map(|_| spawn_local().expect("worker")).collect();
+    let t0 = Instant::now();
+    let resumed = DistributedFitter::resume(&stream_ckpt, cfg(resume_workers, window))
+        .expect("resume");
+    let resume_secs = t0.elapsed().as_secs_f64();
+    println!("[durability] checkpoint {checkpoint_secs:.3}s, resume {resume_secs:.3}s");
+    drop(resumed);
+    std::fs::remove_file(&stream_ckpt).ok();
+
+    // --- one worker dies mid-stream -------------------------------------
+    // Budget the proxy's request count so death lands near the midpoint:
+    // per batch its worker sees ~1 sweep + 1/3 of the ingests, +1 for the
+    // session open. The exact batch is detected, not assumed.
+    let die_after = 1 + (batches / 2) + (batches / 2) / 3;
+    let workers = vec![
+        spawn_local_dying(die_after).expect("dying worker"),
+        spawn_local().expect("worker"),
+        spawn_local().expect("worker"),
+    ];
+    let mut faulty = DistributedFitter::from_snapshot(&snapshot, cfg(workers, window))
+        .expect("faulty fitter");
+    let mut batch_secs = Vec::with_capacity(batches);
+    let mut recovery_batch: Option<usize> = None;
+    for b in 0..batches {
+        let t0 = Instant::now();
+        faulty.ingest(batch_at(b)).expect("ingest must survive the worker death");
+        batch_secs.push(t0.elapsed().as_secs_f64());
+        if recovery_batch.is_none() && faulty.health().degraded {
+            recovery_batch = Some(b);
+        }
+    }
+    let health = faulty.health();
+    assert!(health.degraded && !health.halted, "the bench run must exercise recovery");
+    let rb = recovery_batch.expect("death must have been observed");
+    let recovery_latency = batch_secs[rb];
+    let pre = mean(&batch_secs[..rb]);
+    let post = mean(&batch_secs[rb + 1..]);
+    println!(
+        "[recovery ] death at batch {rb}: {recovery_latency:.3}s (steady {steady_mean:.3}s, \
+         ×{:.1}); post-recovery {post:.3}s/batch on 2 workers",
+        recovery_latency / steady_mean.max(1e-9)
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", "stream_recovery".into()),
+        ("d", D.into()),
+        ("k", K.into()),
+        ("n_base", n_base.into()),
+        ("batches", batches.into()),
+        ("batch_n", batch_n.into()),
+        ("window", window.into()),
+        ("note", "in-process localhost workers (worker_threads=1); one worker killed mid-session via a frame-counting proxy; recovery = mirror retirement + MAP re-ingest of its resident batches onto survivors".into()),
+        ("steady_secs_per_batch", steady_mean.into()),
+        ("steady_points_per_sec", (batch_n as f64 / steady_mean.max(1e-9)).into()),
+        ("recovery_batch_index", rb.into()),
+        ("recovery_batch_secs", recovery_latency.into()),
+        ("recovery_latency_multiple", (recovery_latency / steady_mean.max(1e-9)).into()),
+        ("pre_failure_secs_per_batch", pre.into()),
+        ("post_recovery_secs_per_batch", post.into()),
+        (
+            "post_recovery_points_per_sec",
+            (batch_n as f64 / post.max(1e-9)).into(),
+        ),
+        ("checkpoint_save_secs", checkpoint_secs.into()),
+        ("checkpoint_resume_secs", resume_secs.into()),
+        ("degraded_after", Json::Bool(health.degraded)),
+        ("halted_after", Json::Bool(health.halted)),
+    ]);
+    let out = std::env::var("BENCH_STREAM_RECOVERY_OUT")
+        .unwrap_or_else(|_| "BENCH_stream_recovery.json".into());
+    match std::fs::write(&out, json::to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -1,52 +1,24 @@
-//! Binary wire format for the leader↔worker protocol.
+//! Binary wire format for the leader↔worker ("fit") protocol.
 //!
 //! Hand-rolled little-endian codec (no serde available offline): every
 //! message is `[u32 length][u8 version][u8 tag][payload]`. The payload
 //! encodes only parameters and sufficient statistics — in batch mode the
 //! data matrix crosses the wire exactly once (Init), and in streaming mode
-//! each point crosses exactly once (StreamIngest), matching the paper's
-//! "we never transfer data; we transfer only sufficient statistics and
-//! parameters".
+//! each point crosses exactly once (StreamIngest, or once more per
+//! rebalance/recovery StreamRestore), matching the paper's "we never
+//! transfer data; we transfer only sufficient statistics and parameters".
 //!
-//! # Message-tag reference (protocol version 2)
+//! **The canonical protocol reference — the versioned tag tables, payload
+//! sub-layouts, the v1→v3 history, and the failure semantics of every
+//! verb — lives in `docs/WIRE_PROTOCOLS.md`.** Keep that file in sync
+//! with any change here; the version byte leads every frame and decoders
+//! reject any version other than [`PROTO_VERSION`], so bump it when a
+//! payload layout changes **or** when new tags are added.
 //!
-//! | tag | message          | payload layout                                           | since | direction |
-//! |-----|------------------|----------------------------------------------------------|-------|-----------|
-//! | 1   | `Init`           | `u32 d`, prior, `u64 seed`, `u32 threads`, `f64s x`      | v1    | leader → worker |
-//! | 2   | `Step`           | step-params (K · {`f64 logw`, params, 2×sub})            | v1    | leader → worker |
-//! | 3   | `StatsReply`     | `u32 K`, K × 2 stats                                     | v1    | worker → leader |
-//! | 4   | `ApplySplits`    | `u32 n`, n × {`u32 target`, `u32 new_index`}             | v1    | leader → worker |
-//! | 5   | `ApplyMerges`    | `u32 n`, n × {`u32 keep`, `u32 absorb`}                  | v1    | leader → worker |
-//! | 6   | `Remap`          | `u32 n`, n × {`u8 some`, [`u32 v`]}                      | v1    | leader → worker |
-//! | 7   | `RandomizeLabels`| `u32 k`                                                  | v1    | leader → worker |
-//! | 8   | `GetLabels`      | —                                                        | v1    | leader → worker |
-//! | 9   | `Labels`         | `u32s`                                                   | v1    | worker → leader |
-//! | 10  | `Ack`            | —                                                        | v1    | worker → leader |
-//! | 11  | `Shutdown`       | —                                                        | v1    | leader → worker |
-//! | 12  | `Error`          | `str`                                                    | v1    | worker → leader |
-//! | 13  | `StreamInit`     | `u32 d`, prior, `u32 threads`, `u8 kernel`               | v2    | leader → worker |
-//! | 14  | `StreamIngest`   | `u64 batch_id`, `u64 seed`, step-params (MAP), `f64s x`  | v2    | leader → worker |
-//! | 15  | `StreamSweep`    | step-params                                              | v2    | leader → worker |
-//! | 16  | `StreamEvict`    | `u64s batch_ids`                                         | v2    | leader → worker |
-//! | 17  | `StatsDelta`     | `u32 n`, n × batch-delta (see [`BatchDelta`])            | v2    | worker → leader |
-//!
-//! Sub-layouts: *prior* is `u8 family` + hyperparameters; *params* is
-//! `u8 family` + (μ, Σ | log θ); *stats* is `u8 family` + (n, Σx[, Σxxᵀ]);
-//! *batch-delta* is `u64 batch_id` + two stats bundles (`u32 k`, k × 2
-//! stats each; `k = 0` encodes an absent bundle). `f64s`/`u32s`/`u64s` are
-//! `u32`-length-prefixed runs.
-//!
-//! # Version-bump rules
-//!
-//! The version byte leads every frame; a decoder rejects any version other
-//! than its own [`PROTO_VERSION`], so a mixed-version fleet fails with a
-//! clear mismatch error instead of misparsing payloads. Bump the version
-//! when a payload layout changes **or** when new tags are added (v1 peers
-//! would report new tags as "unknown message tag", which is indistinguishable
-//! from corruption — the version byte turns it into an actionable error).
-//! History: **v1** — batch fit protocol (tags 1–12); **v2** — distributed
-//! streaming ingest (tags 13–17, this section's `Stream*`/`StatsDelta`
-//! family).
+//! Tag summary: v1 = batch fit (tags 1–12), v2 = distributed streaming
+//! ingest (tags 13–17, `Stream*`/`StatsDelta`), v3 = elastic membership +
+//! leader durability (tags 18–22: `StreamJoin`, `StreamBatchState`,
+//! `StreamRebalance`, `StreamBatchStateReply`, `StreamRestore`).
 
 use crate::linalg::Matrix;
 use crate::sampler::{MergeOp, SplitOp, StepParams};
@@ -54,10 +26,12 @@ use crate::stats::{DirMultParams, DirMultPrior, DirMultStats, NiwParams, NiwPrio
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 
-/// Protocol version byte (see the module docs for the bump rules).
+/// Protocol version byte (bump rules and history: `docs/WIRE_PROTOCOLS.md`).
 /// v2 added the distributed-streaming verbs (`StreamInit` / `StreamIngest`
-/// / `StreamSweep` / `StreamEvict` / `StatsDelta`).
-pub const PROTO_VERSION: u8 = 2;
+/// / `StreamSweep` / `StreamEvict` / `StatsDelta`); v3 added elastic
+/// membership and leader durability (`StreamJoin` / `StreamBatchState` /
+/// `StreamRebalance` / `StreamBatchStateReply` / `StreamRestore`).
+pub const PROTO_VERSION: u8 = 3;
 
 /// Sanity cap on cluster counts decoded from the wire (a corrupt count
 /// must not drive an unbounded allocation; real K is bounded by
@@ -82,6 +56,25 @@ pub struct BatchDelta {
     pub removed: Vec<[Stats; 2]>,
     /// Per-(cluster, sub) statistics to fold in (empty or K entries).
     pub added: Vec<[Stats; 2]>,
+}
+
+/// One resident window batch's full per-point state — labels, sub-labels,
+/// and the persistent sweep-RNG stream — as reported by
+/// [`Message::StreamBatchState`] / detached by [`Message::StreamRebalance`]
+/// and re-installed by [`Message::StreamRestore`]. Point values are *not*
+/// carried: the leader retains every windowed batch's raw values for
+/// durability, so only the O(n) label state crosses the wire here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchState {
+    /// Global ingest-order id assigned by the leader.
+    pub batch_id: u64,
+    /// Current cluster label per point.
+    pub z: Vec<u32>,
+    /// Current sub-cluster label per point.
+    pub zsub: Vec<u8>,
+    /// The batch's persistent sweep-RNG state (travels with the batch so
+    /// label trajectories never depend on which worker owns it).
+    pub rng: [u64; 4],
 }
 
 /// Leader→worker and worker→leader messages.
@@ -125,6 +118,31 @@ pub enum Message {
     StreamEvict { batch_ids: Vec<u64> },
     /// Worker reply to the `Stream*` verbs: grouped per-batch stats deltas.
     StatsDelta(Vec<BatchDelta>),
+    /// Open a streaming session on a worker that joins a **live** stream
+    /// (same session setup as `StreamInit`; the distinct verb makes elastic
+    /// joins explicit on the wire and lets a pre-v3 worker fail with a
+    /// version mismatch instead of mid-session confusion). The leader
+    /// follows up with `StreamRestore`s for any rebalanced batches.
+    StreamJoin { d: u32, prior: Prior, threads: u32, kernel: u8 },
+    /// Non-destructively report the per-point state (labels + RNG) of the
+    /// named resident batches — `batch_ids` empty = all residents, oldest
+    /// first. The leader's periodic streaming checkpoint uses this to
+    /// capture worker window state without disturbing it.
+    StreamBatchState { batch_ids: Vec<u64> },
+    /// Detach the named batches from this worker's window and reply with
+    /// their state (`StreamBatchStateReply`) so the leader can re-install
+    /// them elsewhere via `StreamRestore`. Rebalancing moves label state
+    /// verbatim — no re-seeding, no RNG forks — so a rebalance never forks
+    /// the model trajectory (see docs/DETERMINISM.md).
+    StreamRebalance { batch_ids: Vec<u64> },
+    /// Worker reply to `StreamBatchState` / `StreamRebalance`.
+    StreamBatchStateReply(Vec<BatchState>),
+    /// Install one batch verbatim into this worker's window: raw values
+    /// plus explicit labels and RNG state (no MAP seeding — the restore
+    /// path must reproduce the exact pre-move / pre-checkpoint state).
+    /// `k` is the model's cluster count (sizes stats bundles on a session
+    /// that has not ingested yet). Reply: `Ack`.
+    StreamRestore { batch_id: u64, k: u32, x: Vec<f64>, z: Vec<u32>, zsub: Vec<u8>, rng: [u64; 4] },
 }
 
 // ---------- primitive writers/readers ----------
@@ -175,6 +193,11 @@ impl Enc {
         for &x in v {
             self.u32(x);
         }
+    }
+    /// Length-prefixed raw byte run (sub-label vectors and the like).
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
     }
     pub fn u64s(&mut self, v: &[u64]) {
         self.u32(v.len() as u32);
@@ -264,6 +287,12 @@ impl<'a> Dec<'a> {
         let n = self.u32()? as usize;
         self.check_run(n, 8)?;
         (0..n).map(|_| self.u64()).collect()
+    }
+    /// Length-prefixed raw byte run (mirror of [`Enc::bytes`]).
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        self.check_run(n, 1)?;
+        Ok(self.take(n)?.to_vec())
     }
     pub fn matrix(&mut self) -> Result<Matrix> {
         let r = self.u32()? as usize;
@@ -407,6 +436,30 @@ fn dec_batch_delta(d: &mut Dec) -> Result<BatchDelta> {
     })
 }
 
+fn enc_batch_state(e: &mut Enc, s: &BatchState) {
+    e.u64(s.batch_id);
+    e.u32s(&s.z);
+    e.bytes(&s.zsub);
+    for &w in &s.rng {
+        e.u64(w);
+    }
+}
+
+fn dec_batch_state(d: &mut Dec) -> Result<BatchState> {
+    let batch_id = d.u64()?;
+    let z = d.u32s()?;
+    let zsub = d.bytes()?;
+    if zsub.len() != z.len() {
+        bail!(
+            "batch {batch_id} state has {} labels but {} sub-labels",
+            z.len(),
+            zsub.len()
+        );
+    }
+    let rng = [d.u64()?, d.u64()?, d.u64()?, d.u64()?];
+    Ok(BatchState { batch_id, z, zsub, rng })
+}
+
 fn enc_step_params(e: &mut Enc, p: &StepParams) {
     e.u32(p.k() as u32);
     for k in 0..p.k() {
@@ -458,6 +511,11 @@ const TAG_STREAM_INGEST: u8 = 14;
 const TAG_STREAM_SWEEP: u8 = 15;
 const TAG_STREAM_EVICT: u8 = 16;
 const TAG_STATS_DELTA: u8 = 17;
+const TAG_STREAM_JOIN: u8 = 18;
+const TAG_STREAM_BATCH_STATE: u8 = 19;
+const TAG_STREAM_REBALANCE: u8 = 20;
+const TAG_STREAM_BATCH_STATE_REPLY: u8 = 21;
+const TAG_STREAM_RESTORE: u8 = 22;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
@@ -557,6 +615,39 @@ impl Message {
                     enc_batch_delta(&mut e, delta);
                 }
             }
+            Message::StreamJoin { d, prior, threads, kernel } => {
+                e.u8(TAG_STREAM_JOIN);
+                e.u32(*d);
+                enc_prior(&mut e, prior);
+                e.u32(*threads);
+                e.u8(*kernel);
+            }
+            Message::StreamBatchState { batch_ids } => {
+                e.u8(TAG_STREAM_BATCH_STATE);
+                e.u64s(batch_ids);
+            }
+            Message::StreamRebalance { batch_ids } => {
+                e.u8(TAG_STREAM_REBALANCE);
+                e.u64s(batch_ids);
+            }
+            Message::StreamBatchStateReply(states) => {
+                e.u8(TAG_STREAM_BATCH_STATE_REPLY);
+                e.u32(states.len() as u32);
+                for s in states {
+                    enc_batch_state(&mut e, s);
+                }
+            }
+            Message::StreamRestore { batch_id, k, x, z, zsub, rng } => {
+                e.u8(TAG_STREAM_RESTORE);
+                e.u64(*batch_id);
+                e.u32(*k);
+                e.f64s(x);
+                e.u32s(z);
+                e.bytes(zsub);
+                for &w in rng {
+                    e.u64(w);
+                }
+            }
         }
         e.buf
     }
@@ -650,6 +741,45 @@ impl Message {
                     deltas.push(dec_batch_delta(&mut d)?);
                 }
                 Message::StatsDelta(deltas)
+            }
+            TAG_STREAM_JOIN => {
+                let dim = d.u32()?;
+                let prior = dec_prior(&mut d)?;
+                let threads = d.u32()?;
+                let kernel = d.u8()?;
+                if kernel > 2 {
+                    bail!("bad StreamJoin kernel byte {kernel} (0 = env, 1 = tiled, 2 = scalar)");
+                }
+                Message::StreamJoin { d: dim, prior, threads, kernel }
+            }
+            TAG_STREAM_BATCH_STATE => Message::StreamBatchState { batch_ids: d.u64s()? },
+            TAG_STREAM_REBALANCE => Message::StreamRebalance { batch_ids: d.u64s()? },
+            TAG_STREAM_BATCH_STATE_REPLY => {
+                let n = d.u32()? as usize;
+                if n > MAX_WIRE_BATCHES {
+                    bail!("batch state count {n} exceeds the {MAX_WIRE_BATCHES} cap");
+                }
+                let mut states = Vec::with_capacity(n);
+                for _ in 0..n {
+                    states.push(dec_batch_state(&mut d)?);
+                }
+                Message::StreamBatchStateReply(states)
+            }
+            TAG_STREAM_RESTORE => {
+                let batch_id = d.u64()?;
+                let k = d.u32()?;
+                let x = d.f64s()?;
+                let z = d.u32s()?;
+                let zsub = d.bytes()?;
+                if zsub.len() != z.len() {
+                    bail!(
+                        "StreamRestore batch {batch_id} has {} labels but {} sub-labels",
+                        z.len(),
+                        zsub.len()
+                    );
+                }
+                let rng = [d.u64()?, d.u64()?, d.u64()?, d.u64()?];
+                Message::StreamRestore { batch_id, k, x, z, zsub, rng }
             }
             t => bail!("unknown message tag {t}"),
         };
@@ -891,6 +1021,49 @@ mod tests {
                 _ => assert_eq!(dec, msg, "{msg:?}"),
             }
         }
+    }
+
+    #[test]
+    fn roundtrip_v3_elastic_messages() {
+        let prior = gauss_prior();
+        for msg in [
+            Message::StreamJoin { d: 3, prior: prior.clone(), threads: 2, kernel: 1 },
+            Message::StreamBatchState { batch_ids: vec![] },
+            Message::StreamBatchState { batch_ids: vec![4, 5, 6] },
+            Message::StreamRebalance { batch_ids: vec![9] },
+            Message::StreamBatchStateReply(vec![]),
+            Message::StreamBatchStateReply(vec![
+                BatchState { batch_id: 3, z: vec![0, 1, 0], zsub: vec![1, 0, 1], rng: [1, 2, 3, 4] },
+                BatchState { batch_id: 4, z: vec![], zsub: vec![], rng: [0, 0, 0, 1] },
+            ]),
+            Message::StreamRestore {
+                batch_id: 11,
+                k: 2,
+                x: vec![0.5; 9],
+                z: vec![1, 0, 1],
+                zsub: vec![0, 0, 1],
+                rng: [7, 8, 9, 10],
+            },
+        ] {
+            let enc = msg.encode();
+            assert_eq!(Message::decode(&enc).unwrap(), msg, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_label_runs() {
+        // A BatchState whose z and zsub lengths disagree is corruption.
+        let mut e = Enc::new();
+        e.u8(PROTO_VERSION);
+        e.u8(21); // TAG_STREAM_BATCH_STATE_REPLY
+        e.u32(1);
+        e.u64(0);
+        e.u32s(&[0, 1]);
+        e.bytes(&[0]); // one sub-label for two labels
+        for _ in 0..4 {
+            e.u64(0);
+        }
+        assert!(Message::decode(&e.buf).is_err());
     }
 
     #[test]

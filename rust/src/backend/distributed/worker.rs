@@ -5,23 +5,26 @@
 //! * **batch** (`Init`): the PR-0 fit mode — the worker wraps its chunk in
 //!   a [`NativeBackend`] and answers `Step`/`ApplySplits`/… (the same
 //!   restricted-Gibbs kernel runs on every tier of the system).
-//! * **streaming** (`StreamInit`): the worker holds a *window slice* of a
-//!   distributed stream — a [`StreamBuffer`] of routed mini-batches plus
-//!   one persistent sweep-RNG per batch — and answers
+//! * **streaming** (`StreamInit` / `StreamJoin`): the worker holds a
+//!   *window slice* of a distributed stream — a [`StreamBuffer`] of routed
+//!   mini-batches plus one persistent sweep-RNG per batch — and answers
 //!   `StreamIngest`/`StreamSweep`/`StreamEvict` with grouped per-batch
-//!   sufficient-statistics deltas ([`BatchDelta`]). Points arrive once and
-//!   never leave; only O(K·d²) statistics flow back (see
-//!   [`crate::stream::distributed`] for the leader half and the
-//!   determinism contract).
+//!   sufficient-statistics deltas ([`BatchDelta`]), plus the elastic v3
+//!   verbs: `StreamBatchState` (checkpoint capture),
+//!   `StreamRebalance`/`StreamRestore` (batches move between workers with
+//!   labels and RNG streams intact). Points arrive once per residency;
+//!   only O(K·d²) statistics flow back per sweep (see
+//!   [`crate::stream::distributed`] for the leader half and
+//!   docs/DETERMINISM.md for the contract).
 
-use super::wire::{read_message, write_message, BatchDelta, Message};
+use super::wire::{read_message, write_message, BatchDelta, BatchState, Message};
 use crate::backend::native::{NativeBackend, NativeConfig};
 use crate::backend::shard::{AssignKernel, Shard, DEFAULT_TILE};
 use crate::backend::Backend;
 use crate::datagen::Data;
 use crate::rng::Xoshiro256pp;
 use crate::sampler::StepParams;
-use crate::stats::{Prior, Stats};
+use crate::stats::Prior;
 use crate::stream::fitter::{fold_groups, map_seed, run_shards};
 use crate::stream::StreamBuffer;
 use anyhow::{Context, Result};
@@ -67,10 +70,6 @@ enum Session {
     Stream(StreamState),
 }
 
-fn empty_bundle(prior: &Prior, k: usize) -> Vec<[Stats; 2]> {
-    (0..k).map(|_| [prior.empty_stats(), prior.empty_stats()]).collect()
-}
-
 /// `StreamIngest`: MAP-seed the batch under the leader's deterministic
 /// posterior-mean plan, append it to the window slice, and report its
 /// grouped stats delta.
@@ -107,7 +106,7 @@ fn stream_ingest(
     }
     let (z, zsub) = map_seed(&plan, &x, n, d, ss.threads);
     ss.k = params.k();
-    let mut added = empty_bundle(&ss.prior, ss.k);
+    let mut added = ss.prior.empty_bundle(ss.k);
     let sel: Vec<u32> = (0..n as u32).collect();
     fold_groups(&mut added, &x, d, &sel, &z, &zsub, true);
     ss.buffer.push(&x, &z, &zsub);
@@ -167,8 +166,8 @@ fn stream_sweep(ss: &mut StreamState, params: StepParams) -> Message {
             .collect();
         if !changed.is_empty() {
             let values = &data.values[off * d..(off + b.n) * d];
-            let mut removed = empty_bundle(&ss.prior, ss.k);
-            let mut added = empty_bundle(&ss.prior, ss.k);
+            let mut removed = ss.prior.empty_bundle(ss.k);
+            let mut added = ss.prior.empty_bundle(ss.k);
             fold_groups(&mut removed, values, d, &changed, prev_z, prev_zsub, true);
             fold_groups(&mut added, values, d, &changed, &shard.z, &shard.zsub, true);
             deltas.push(BatchDelta { batch_id: b.id, removed, added });
@@ -182,42 +181,134 @@ fn stream_sweep(ss: &mut StreamState, params: StepParams) -> Message {
     Message::StatsDelta(deltas)
 }
 
-/// `StreamEvict`: retire the named batches (which must be the oldest
-/// residents, in order — eviction is the leader's global FIFO) and report
-/// their current grouped statistics so the leader can move the evidence
-/// from its window accumulators into the frozen base.
+/// Point offset of batch `idx` inside the window slice (batches are laid
+/// out back-to-back in `buffer` in `batches` order).
+fn batch_offset(batches: &[StreamBatch], idx: usize) -> usize {
+    batches[..idx].iter().map(|b| b.n).sum()
+}
+
+/// `StreamEvict`: retire the named batches and report their current
+/// grouped statistics so the leader can move the evidence from its window
+/// accumulators into the frozen base. Eviction order is the leader's
+/// global FIFO; after a rebalance the named batch may sit anywhere in this
+/// worker's slice, so lookup is by id, not by front position.
 fn stream_evict(ss: &mut StreamState, batch_ids: Vec<u64>) -> Message {
     let d = ss.d;
     let mut deltas = Vec::with_capacity(batch_ids.len());
     for id in batch_ids {
-        match ss.batches.first() {
-            Some(b) if b.id == id => {}
-            Some(b) => {
-                return Message::Error(format!(
-                    "evict out of order: asked for batch {id}, oldest resident is {}",
-                    b.id
-                ))
-            }
-            None => {
-                return Message::Error(format!("evict of unknown batch {id}: window empty"))
-            }
-        }
-        let b = ss.batches.remove(0);
-        let mut stats = empty_bundle(&ss.prior, ss.k);
+        let idx = match ss.batches.iter().position(|b| b.id == id) {
+            Some(i) => i,
+            None => return Message::Error(format!("evict of unknown batch {id}")),
+        };
+        let off = batch_offset(&ss.batches, idx);
+        let b = ss.batches.remove(idx);
+        let mut stats = ss.prior.empty_bundle(ss.k);
         let sel: Vec<u32> = (0..b.n as u32).collect();
         fold_groups(
             &mut stats,
-            &ss.buffer.values()[..b.n * d],
+            &ss.buffer.values()[off * d..(off + b.n) * d],
             d,
             &sel,
-            &ss.buffer.labels()[..b.n],
-            &ss.buffer.sub_labels()[..b.n],
+            &ss.buffer.labels()[off..off + b.n],
+            &ss.buffer.sub_labels()[off..off + b.n],
             true,
         );
-        ss.buffer.evict_front(b.n);
+        ss.buffer.remove_span(off, b.n);
         deltas.push(BatchDelta { batch_id: b.id, removed: Vec::new(), added: stats });
     }
     Message::StatsDelta(deltas)
+}
+
+/// `StreamBatchState`: non-destructive per-batch state report (labels +
+/// RNG). `batch_ids` empty = every resident batch, slice order. The
+/// leader's periodic streaming checkpoint is the caller.
+fn stream_batch_state(ss: &StreamState, batch_ids: Vec<u64>) -> Message {
+    let ids: Vec<u64> = if batch_ids.is_empty() {
+        ss.batches.iter().map(|b| b.id).collect()
+    } else {
+        batch_ids
+    };
+    let mut states = Vec::with_capacity(ids.len());
+    for id in ids {
+        let idx = match ss.batches.iter().position(|b| b.id == id) {
+            Some(i) => i,
+            None => return Message::Error(format!("batch state of unknown batch {id}")),
+        };
+        let off = batch_offset(&ss.batches, idx);
+        let b = &ss.batches[idx];
+        states.push(BatchState {
+            batch_id: id,
+            z: ss.buffer.labels()[off..off + b.n].to_vec(),
+            zsub: ss.buffer.sub_labels()[off..off + b.n].to_vec(),
+            rng: b.rng.state(),
+        });
+    }
+    Message::StreamBatchStateReply(states)
+}
+
+/// `StreamRebalance`: detach the named batches from this slice and reply
+/// with their state so the leader can `StreamRestore` them on another
+/// worker. Values are dropped here (the leader retains them); labels and
+/// RNG streams move verbatim, so a rebalance never forks the trajectory.
+fn stream_rebalance(ss: &mut StreamState, batch_ids: Vec<u64>) -> Message {
+    let mut states = Vec::with_capacity(batch_ids.len());
+    for id in batch_ids {
+        let idx = match ss.batches.iter().position(|b| b.id == id) {
+            Some(i) => i,
+            None => return Message::Error(format!("rebalance of unknown batch {id}")),
+        };
+        let off = batch_offset(&ss.batches, idx);
+        let b = ss.batches.remove(idx);
+        states.push(BatchState {
+            batch_id: b.id,
+            z: ss.buffer.labels()[off..off + b.n].to_vec(),
+            zsub: ss.buffer.sub_labels()[off..off + b.n].to_vec(),
+            rng: b.rng.state(),
+        });
+        ss.buffer.remove_span(off, b.n);
+    }
+    Message::StreamBatchStateReply(states)
+}
+
+/// `StreamRestore`: install one batch verbatim (values + labels + RNG, no
+/// MAP seeding) — the receive side of rebalance/recovery and the worker
+/// half of `dpmm stream --resume`.
+fn stream_restore(
+    ss: &mut StreamState,
+    batch_id: u64,
+    k: u32,
+    x: Vec<f64>,
+    z: Vec<u32>,
+    zsub: Vec<u8>,
+    rng: [u64; 4],
+) -> Message {
+    let d = ss.d;
+    let n = z.len();
+    if n == 0 {
+        return Message::Error(format!("StreamRestore of empty batch {batch_id}"));
+    }
+    if k == 0 {
+        return Message::Error(format!("StreamRestore batch {batch_id} with k = 0"));
+    }
+    if x.len() != n * d {
+        return Message::Error(format!(
+            "StreamRestore batch {batch_id}: {} values for {n} points of dimension {d}",
+            x.len()
+        ));
+    }
+    if x.iter().any(|v| !v.is_finite()) {
+        return Message::Error(format!("StreamRestore batch {batch_id} has non-finite values"));
+    }
+    if z.iter().any(|&l| l >= k) || zsub.iter().any(|&s| s > 1) {
+        return Message::Error(format!("StreamRestore batch {batch_id} has out-of-range labels"));
+    }
+    if ss.batches.iter().any(|b| b.id == batch_id) {
+        return Message::Error(format!("StreamRestore of already-resident batch {batch_id}"));
+    }
+    ss.k = k as usize;
+    ss.buffer.push(&x, &z, &zsub);
+    ss.batches.push(StreamBatch { id: batch_id, n, rng: Xoshiro256pp::from_state(rng) });
+    Message::Ack
 }
 
 fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
@@ -240,7 +331,11 @@ fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
             *session = Session::Batch(WorkerState { backend });
             Message::Ack
         }
-        Message::StreamInit { d, prior, threads, kernel } => {
+        // StreamJoin is StreamInit for a live session: identical setup
+        // worker-side; the distinct verb makes elastic joins explicit and
+        // versioned on the wire.
+        Message::StreamInit { d, prior, threads, kernel }
+        | Message::StreamJoin { d, prior, threads, kernel } => {
             let d = d as usize;
             if d == 0 || prior.dim() != d {
                 Message::Error(format!(
@@ -276,6 +371,18 @@ fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
         Message::StreamEvict { batch_ids } => match session {
             Session::Stream(ss) => stream_evict(ss, batch_ids),
             _ => Message::Error("StreamEvict before StreamInit".into()),
+        },
+        Message::StreamBatchState { batch_ids } => match session {
+            Session::Stream(ss) => stream_batch_state(ss, batch_ids),
+            _ => Message::Error("StreamBatchState before StreamInit".into()),
+        },
+        Message::StreamRebalance { batch_ids } => match session {
+            Session::Stream(ss) => stream_rebalance(ss, batch_ids),
+            _ => Message::Error("StreamRebalance before StreamInit".into()),
+        },
+        Message::StreamRestore { batch_id, k, x, z, zsub, rng } => match session {
+            Session::Stream(ss) => stream_restore(ss, batch_id, k, x, z, zsub, rng),
+            _ => Message::Error("StreamRestore before StreamInit".into()),
         },
         Message::Step(params) => match session {
             Session::Batch(ws) => match ws.backend.step(&params) {
@@ -384,6 +491,36 @@ pub fn spawn_local() -> Result<String> {
                 eprintln!("worker error: {e}");
             }
         }
+    });
+    Ok(addr)
+}
+
+/// Spawn an in-process worker that serves exactly `die_after` leader
+/// requests through a frame-level proxy in front of a real
+/// [`spawn_local`] worker, then drops both connections — a deterministic
+/// "death mid-session" at request granularity, so two runs with the same
+/// schedule observe the identical failure point. Fault-injection harness
+/// for the recovery tests and `benches/stream_recovery.rs` (the elastic
+/// leader's contracts are pinned against it; see docs/DETERMINISM.md).
+pub fn spawn_local_dying(die_after: usize) -> Result<String> {
+    use super::wire::{read_frame, write_frame};
+    let upstream = spawn_local()?;
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    std::thread::spawn(move || {
+        let Ok((mut leader, _)) = listener.accept() else { return };
+        let Ok(mut worker) = TcpStream::connect(&upstream) else { return };
+        for _ in 0..die_after {
+            let Ok(req) = read_frame(&mut leader) else { return };
+            if write_frame(&mut worker, &req).is_err() {
+                return;
+            }
+            let Ok(reply) = read_frame(&mut worker) else { return };
+            if write_frame(&mut leader, &reply).is_err() {
+                return;
+            }
+        }
+        // Die mid-session: both sockets drop here.
     });
     Ok(addr)
 }

@@ -121,6 +121,14 @@ pub struct StreamSettings {
     pub workers: Vec<String>,
     /// Sweep threads per worker process (distributed mode only).
     pub worker_threads: usize,
+    /// Streaming-state checkpoint file (leader durability); written
+    /// atomically every `checkpoint_every` ingested batches.
+    pub checkpoint_path: Option<String>,
+    /// Checkpoint cadence in ingested batches (0 = never periodic).
+    pub checkpoint_every: usize,
+    /// Resume from `checkpoint_path` instead of seeding fresh from
+    /// `--checkpoint`/`--snapshot` (bitwise-identical replay).
+    pub resume: bool,
 }
 
 impl Default for StreamSettings {
@@ -133,17 +141,31 @@ impl Default for StreamSettings {
             seed: 0,
             workers: Vec::new(),
             worker_threads: 1,
+            checkpoint_path: None,
+            checkpoint_every: 16,
+            resume: false,
         }
     }
 }
 
 impl StreamSettings {
     /// Parse `--window / --sweeps / --decay / --alpha / --seed /
-    /// --workers / --worker_threads` overrides.
+    /// --workers / --worker_threads / --checkpoint_path /
+    /// --checkpoint_every / --resume` overrides.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut s = StreamSettings { workers: args.get_list("workers"), ..Default::default() };
         if let Some(wt) = args.get_usize("worker_threads")? {
             s.worker_threads = wt.max(1);
+        }
+        if let Some(cp) = args.get("checkpoint_path") {
+            s.checkpoint_path = Some(cp.to_string());
+        }
+        if let Some(ce) = args.get_usize("checkpoint_every")? {
+            s.checkpoint_every = ce;
+        }
+        s.resume = args.flag("resume");
+        if s.resume && s.checkpoint_path.is_none() {
+            bail!("--resume needs --checkpoint_path=<stream.ckpt> to resume from");
         }
         if let Some(w) = args.get_usize("window")? {
             s.window = w.max(1);
@@ -519,6 +541,26 @@ mod tests {
         let s = StreamSettings::from_args(&cluster).unwrap();
         assert_eq!(s.workers, vec!["h1:7878", "h2:7878"]);
         assert_eq!(s.worker_threads, 4);
+        assert!(s.checkpoint_path.is_none());
+        assert!(!s.resume);
+        let durable = Args::parse(
+            ["stream", "--checkpoint_path=st.ckpt", "--checkpoint_every=4", "--resume"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["resume"],
+        )
+        .unwrap();
+        let s = StreamSettings::from_args(&durable).unwrap();
+        assert_eq!(s.checkpoint_path.as_deref(), Some("st.ckpt"));
+        assert_eq!(s.checkpoint_every, 4);
+        assert!(s.resume);
+        // --resume without a checkpoint path is a config error.
+        let bad = Args::parse(
+            ["stream", "--resume"].iter().map(|s| s.to_string()),
+            &["resume"],
+        )
+        .unwrap();
+        assert!(StreamSettings::from_args(&bad).is_err());
         for bad in ["--decay=0", "--decay=1.5", "--alpha=-2"] {
             let args = Args::parse(
                 ["stream", bad].iter().map(|s| s.to_string()),

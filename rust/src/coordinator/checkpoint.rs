@@ -6,6 +6,13 @@
 //! Layout: `[magic][version][alpha][prior][K × cluster][iter][labels]`.
 //! Labels are stored coordinator-side in the file even though they live in
 //! the backend at run time — on restore they are pushed back via a remap.
+//!
+//! Version byte: **1** = fit checkpoint (this module); **3** = streaming
+//! checkpoint — the same model section followed by a streaming-state
+//! section (`crate::stream::checkpoint`; v2 was never shipped). Fit and
+//! serve loaders keep accepting v1 unchanged, and
+//! [`crate::serve::ModelSnapshot::from_checkpoint_file`] reads the model
+//! section of either version.
 
 use crate::model::{Cluster, DpmmState};
 use crate::stats::{Params, Prior, Stats};
@@ -209,6 +216,13 @@ impl Checkpoint {
             bail!("not a dpmm checkpoint (bad magic)");
         }
         let ver = read_u8(&mut r)?;
+        if ver == crate::stream::checkpoint::STREAM_CHECKPOINT_VERSION {
+            bail!(
+                "this is a streaming checkpoint (version {ver}) — resume it with \
+                 `dpmm stream --resume`, or serve from it directly; it cannot seed \
+                 a batch fit (it has no full label vector)"
+            );
+        }
         if ver != VERSION {
             bail!("unsupported checkpoint version {ver}");
         }

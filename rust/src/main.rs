@@ -16,6 +16,7 @@
 //!          [--window=32768] [--sweeps=2] [--decay=1.0] [--alpha=10] [--seed=0]
 //!          [--threads=0] [--tile=128] [--batch_points=65536]
 //!          [--workers=host:7878,host2:7878] [--worker_threads=1]
+//!          [--checkpoint_path=stream.ckpt] [--checkpoint_every=16] [--resume]
 //! dpmm predict --data=points.npy (--addr=host:7979 | --checkpoint=fit.ckpt | --snapshot=model.snap)
 //!          [--probs] [--labels_out=labels.npy] [--result_path=result.json]
 //! dpmm snapshot --checkpoint=fit.ckpt --out=model.snap
@@ -32,11 +33,12 @@ use dpmm::metrics;
 use dpmm::rng::Xoshiro256pp;
 use dpmm::serve::{self, DpmmClient, EngineConfig, ModelSnapshot, Prediction, ScoringEngine};
 use dpmm::stream::{
-    DistributedFitter, DistributedStreamConfig, IncrementalFitter, StreamConfig,
+    DistributedFitter, DistributedStreamConfig, IncrementalFitter, StreamCheckpointCfg,
+    StreamConfig,
 };
 use dpmm::util::{json, npy};
 
-const FLAGS: &[&str] = &["verbose", "help", "version", "probs"];
+const FLAGS: &[&str] = &["verbose", "help", "version", "probs", "resume"];
 
 fn main() {
     let args = match Args::from_env(FLAGS) {
@@ -84,7 +86,8 @@ fn print_help() {
          \x20 worker    run a distributed worker (leader connects over TCP)\n\
          \x20 serve     serve posterior-predictive queries from a fitted model\n\
          \x20 stream    serve + streaming ingest with live snapshot hot-swap\n\
-         \x20           (--workers=host:port,... shards ingest across dpmm workers)\n\
+         \x20           (--workers=host:port,... shards ingest across dpmm workers;\n\
+         \x20            --checkpoint_path + --resume give durable, replayable state)\n\
          \x20 predict   score new points (against a server or a local model)\n\
          \x20 snapshot  export an immutable model snapshot from a checkpoint\n\
          \x20 info      show PJRT platform + AOT artifact manifest\n\
@@ -291,6 +294,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_stream(args: &Args) -> Result<()> {
     let settings = ServeSettings::from_args(args)?;
     let stream_settings = StreamSettings::from_args(args)?;
+    let serve_config = serve::ServeConfig { max_batch_points: settings.max_batch_points };
+    let ckpt_cfg = stream_settings.checkpoint_path.as_ref().map(|p| StreamCheckpointCfg {
+        path: p.clone(),
+        every_batches: stream_settings.checkpoint_every,
+    });
+    let engine_config = EngineConfig { threads: settings.threads, tile: settings.tile };
+
+    // --resume: replay the streaming checkpoint to a bitwise-identical
+    // leader state (window/sweeps/decay/alpha come from the file); the
+    // serving engine plans from the resumed model, not a snapshot file.
+    if stream_settings.resume {
+        let path = stream_settings
+            .checkpoint_path
+            .clone()
+            .expect("validated by StreamSettings::from_args");
+        eprintln!("resuming stream from checkpoint {path}");
+        return if stream_settings.workers.is_empty() {
+            let fitter = IncrementalFitter::resume(
+                &path,
+                StreamConfig {
+                    threads: settings.threads,
+                    tile: settings.tile,
+                    checkpoint: ckpt_cfg,
+                    ..StreamConfig::default()
+                },
+            )?;
+            let engine = ScoringEngine::new(&fitter.snapshot()?, engine_config)?;
+            serve::serve_blocking_streaming(engine, fitter, &settings.addr, serve_config)
+        } else {
+            let fitter = DistributedFitter::resume(
+                &path,
+                DistributedStreamConfig {
+                    workers: stream_settings.workers.clone(),
+                    worker_threads: stream_settings.worker_threads,
+                    checkpoint: ckpt_cfg,
+                    ..DistributedStreamConfig::default()
+                },
+            )?;
+            let engine = ScoringEngine::new(&fitter.snapshot()?, engine_config)?;
+            serve::serve_blocking_streaming(engine, fitter, &settings.addr, serve_config)
+        };
+    }
+
     let snapshot = load_snapshot_arg(args)?;
     eprintln!(
         "streaming model: K={} d={} family={} (from N={}; window={} sweeps={} decay={}{})",
@@ -307,11 +353,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
             format!("; {} workers", stream_settings.workers.len())
         },
     );
-    let engine = ScoringEngine::new(
-        &snapshot,
-        EngineConfig { threads: settings.threads, tile: settings.tile },
-    )?;
-    let serve_config = serve::ServeConfig { max_batch_points: settings.max_batch_points };
+    let engine = ScoringEngine::new(&snapshot, engine_config)?;
     if stream_settings.workers.is_empty() {
         let fitter = IncrementalFitter::from_snapshot(
             &snapshot,
@@ -323,6 +365,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
                 seed: stream_settings.seed,
                 threads: settings.threads,
                 tile: settings.tile,
+                checkpoint: ckpt_cfg,
                 ..StreamConfig::default()
             },
         )?;
@@ -330,7 +373,8 @@ fn cmd_stream(args: &Args) -> Result<()> {
     } else {
         // Distributed ingest: shard the window across `dpmm worker`
         // processes; the serving path is identical (same wire, same
-        // hot-swap batcher).
+        // hot-swap batcher). Worker failures are absorbed (batches
+        // re-shard onto survivors; /stats reports degraded mode).
         let fitter = DistributedFitter::from_snapshot(
             &snapshot,
             DistributedStreamConfig {
@@ -342,6 +386,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
                 alpha: stream_settings.alpha,
                 seed: stream_settings.seed,
                 kernel: None,
+                checkpoint: ckpt_cfg,
             },
         )?;
         serve::serve_blocking_streaming(engine, fitter, &settings.addr, serve_config)

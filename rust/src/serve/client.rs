@@ -34,6 +34,17 @@ pub struct ServeStats {
     pub ingested: u64,
     /// Ingest lag: points queued but not yet folded into a live snapshot.
     pub ingest_pending: u64,
+    /// Worker slots in the distributed streaming session (0 = local
+    /// streaming or plain serve).
+    pub workers_total: u32,
+    /// Workers currently reachable.
+    pub workers_alive: u32,
+    /// A worker failed this session and its window batches were
+    /// re-sharded onto survivors (latches until restart/resume).
+    pub degraded: bool,
+    /// Ingest is halted (unrecoverable failure); predictions keep serving
+    /// the last published snapshot.
+    pub halted: bool,
 }
 
 /// Outcome of one accepted ingest mini-batch.
@@ -62,6 +73,24 @@ pub struct Prediction {
 /// Blocking client over one TCP connection. One request in flight at a
 /// time; open several clients for concurrency (the server micro-batches
 /// across connections).
+///
+/// ```no_run
+/// use dpmm::serve::DpmmClient;
+///
+/// let mut client = DpmmClient::connect("127.0.0.1:7979")?;
+/// let pred = client.predict(&[0.5, -0.25, 1.0, 2.0], 2)?; // two 2-d points
+/// println!("labels = {:?} (K = {})", pred.labels, pred.k);
+///
+/// // Streaming endpoints (`dpmm stream`) also accept ingest, and /stats
+/// // surfaces freshness + cluster health:
+/// let receipt = client.ingest(&[3.0, 4.0], 2)?;
+/// let stats = client.stats()?;
+/// assert!(stats.generation >= receipt.generation);
+/// if stats.degraded {
+///     eprintln!("{}/{} workers alive", stats.workers_alive, stats.workers_total);
+/// }
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct DpmmClient {
     stream: TcpStream,
 }
@@ -136,6 +165,10 @@ impl DpmmClient {
                 generation,
                 ingested,
                 ingest_pending,
+                workers_total,
+                workers_alive,
+                degraded,
+                halted,
             } => Ok(ServeStats {
                 requests,
                 points,
@@ -146,6 +179,10 @@ impl DpmmClient {
                 generation,
                 ingested,
                 ingest_pending,
+                workers_total,
+                workers_alive,
+                degraded: degraded != 0,
+                halted: halted != 0,
             }),
             other => Err(anyhow!("unexpected stats reply {other:?}")),
         }

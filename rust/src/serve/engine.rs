@@ -93,6 +93,19 @@ impl ScoreBatch {
 }
 
 /// The frozen-model scoring engine.
+///
+/// ```no_run
+/// use dpmm::serve::{EngineConfig, ModelSnapshot, ScoringEngine};
+///
+/// let snapshot = ModelSnapshot::load("model.snap")?;
+/// let engine = ScoringEngine::new(&snapshot, EngineConfig::default())?;
+/// // The derived FrozenPlan caches whitening factors + predictive params:
+/// assert_eq!(engine.plan().k(), engine.k());
+/// // Batched scoring: MAP labels, MAP scores, and anomaly scores.
+/// let batch = engine.score(&[0.5, -0.25, 1.0, 2.0], false)?; // two 2-d points
+/// println!("labels = {:?}", batch.labels);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct ScoringEngine {
     plan: FrozenPlan,
     threads: usize,

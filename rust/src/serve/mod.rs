@@ -1,66 +1,47 @@
 //! Online inference serving: the request path from a fitted chain to
 //! "which cluster is this new point in?" at production rates.
 //!
-//! The fit path (coordinator + backends) stops at a posterior sample; this
-//! subsystem freezes that sample and serves it. Four layers, mirroring the
-//! backend module layout:
+//! Four layers (the full architecture map with data flow lives in
+//! `docs/ARCHITECTURE.md`):
 //!
 //! * [`snapshot`] — [`ModelSnapshot`], the immutable export of a fit
-//!   (prior + per-cluster statistics + weights, `DPMMSNAP` file format),
-//!   and its derived [`snapshot::FrozenPlan`]: cached whitening factors,
-//!   folded log-weights, and exact Student-t / Dirichlet-multinomial
-//!   posterior-predictive parameters — the frozen analog of the fit path's
-//!   per-sweep [`crate::sampler::StepPlan`].
-//! * [`engine`] — [`ScoringEngine`], batched MAP assignment, per-cluster
-//!   log-probabilities, and anomaly scores (log predictive density) over
-//!   point tiles via the same fused whitened-GEMM kernels the sampler's
-//!   assignment step uses ([`crate::linalg`]), parallelized with the
-//!   process-wide thread pool. Deterministic: no RNG on the request path.
-//! * [`server`] / [`client`] — a TCP server speaking the length-prefixed
-//!   [`wire`] codec with a micro-batching queue that coalesces concurrent
-//!   requests into single fused tile passes, plus `/stats` throughput
-//!   reporting and graceful shutdown; [`DpmmClient`] is the blocking Rust
-//!   client (`python/dpmmwrapper.py` mirrors it for Python).
-//! * [`wire`] — the serving message set over the shared frame codec of
-//!   [`crate::backend::distributed::wire`].
+//!   (`DPMMSNAP` file; also loadable straight from a `DPMMCKPT`
+//!   checkpoint) and its derived [`snapshot::FrozenPlan`];
+//! * [`engine`] — [`ScoringEngine`], batched MAP assignment, membership
+//!   log-probabilities, and anomaly scores via the fit path's fused tile
+//!   GEMMs; RNG-free and deterministic;
+//! * [`server`] / [`client`] — a micro-batching TCP server (coalesces
+//!   concurrent requests into single fused engine passes) + the blocking
+//!   Rust client; `python/dpmmwrapper.py` mirrors the client;
+//! * [`wire`] — the serving message set over the shared frame codec
+//!   (tag tables and history: `docs/WIRE_PROTOCOLS.md`).
 //!
-//! Entry points: `dpmm serve --checkpoint fit.ckpt --addr 0.0.0.0:7979`,
-//! `dpmm predict --data x.npy --addr host:7979` (or `--checkpoint` /
-//! `--snapshot` for engine-direct scoring without a server), and
-//! `cargo bench --bench serve_throughput` (writes `BENCH_serve.json`).
-//! See EXPERIMENTS.md §Serving for design rationale and measurements.
+//! Entry points: `dpmm serve`, `dpmm predict`, `dpmm snapshot`; see the
+//! README's quickstart and EXPERIMENTS.md §Serving for measurements.
 //!
-//! # Streaming ingest and snapshot hot-swap
+//! # Streaming ingest, hot-swap, and fault tolerance
 //!
-//! A server started as `dpmm stream` pairs the scoring engine with a
-//! [`crate::stream::StreamFitter`] — the in-process
-//! [`crate::stream::IncrementalFitter`], or the
-//! [`crate::stream::DistributedFitter`] leader when `--workers` shards
-//! ingest across TCP worker machines — and accepts the `ingest` verb.
-//! The live engine sits behind an `RwLock<Arc<ScoringEngine>>`; the
-//! micro-batcher — the only writer — folds queued mini-batches into the
-//! fitter **between fused scoring passes**, re-plans a fresh
-//! [`ModelSnapshot`], and atomically publishes the successor engine
-//! (ArcSwap-style pointer replace). The guarantees below hold identically
-//! in both topologies (clients cannot tell them apart on the wire); in
-//! distributed mode a worker failure surfaces as an ingest error while
-//! the last published generation keeps serving. Consistency guarantees,
-//! in order of what a client can rely on:
+//! A server started as `dpmm stream` pairs the engine with a
+//! [`crate::stream::StreamFitter`] (local fitter, or the distributed
+//! leader when `--workers` is given) and accepts the `ingest` verb. The
+//! micro-batcher — the only writer — folds queued mini-batches between
+//! fused scoring passes and atomically publishes a re-planned engine.
+//! Client-visible guarantees, in order of what can be relied on:
 //!
-//! 1. **Pass-level atomicity** — every predict request is scored entirely
-//!    under one snapshot generation; a request never sees a half-updated
-//!    plan, and its reply's `k` is the K of the snapshot that actually
-//!    scored it.
+//! 1. **Pass-level atomicity** — every predict is scored entirely under
+//!    one snapshot generation;
 //! 2. **Read-your-ingest** — an `IngestReply { generation }` is sent only
-//!    after the re-planned snapshot is live, so any prediction answered at
-//!    or after that generation reflects the ingested batch.
-//! 3. **Monotonic freshness** — `/stats` reports the live snapshot
-//!    generation plus ingest lag (points accepted but not yet folded);
-//!    generation never decreases, and lag returning to zero means the
-//!    model has caught up with the stream.
-//! 4. **Failure isolation** — a rejected batch (shape/NaN/ingest error)
-//!    leaves the previous snapshot serving; corruption on the wire is a
-//!    typed error reply, never a dead batcher.
+//!    after the re-planned snapshot is live;
+//! 3. **Monotonic freshness** — `/stats` reports the live generation plus
+//!    ingest lag; generation never decreases;
+//! 4. **Failure isolation** — rejected batches and wire corruption leave
+//!    the previous snapshot serving; in distributed mode a worker failure
+//!    is absorbed by the leader (batches re-shard onto survivors) and
+//!    surfaces through the `/stats` cluster-health fields
+//!    ([`crate::stream::StreamHealth`]) instead of killing ingest.
+//!
+//! The determinism and fault-tolerance contracts behind (4) are specified
+//! in `docs/DETERMINISM.md`.
 
 pub mod client;
 pub mod engine;

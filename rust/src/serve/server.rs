@@ -74,10 +74,26 @@ struct Counters {
     ingested: AtomicU64,
     /// Points accepted onto the ingest queue but not yet folded.
     ingest_pending: AtomicU64,
+    /// Cluster health mirror (see [`crate::stream::StreamHealth`]):
+    /// initialized from the fitter at spawn, refreshed by the batcher
+    /// after every applied ingest group. Mirrored into atomics so `/stats`
+    /// never blocks on the fitter lock (the batcher may hold it for a
+    /// whole distributed ingest).
+    workers_total: AtomicU64,
+    workers_alive: AtomicU64,
+    degraded: AtomicBool,
+    halted: AtomicBool,
     start: Instant,
 }
 
 impl Counters {
+    fn set_health(&self, h: crate::stream::StreamHealth) {
+        self.workers_total.store(h.workers_total as u64, Ordering::Relaxed);
+        self.workers_alive.store(h.workers_alive as u64, Ordering::Relaxed);
+        self.degraded.store(h.degraded, Ordering::Relaxed);
+        self.halted.store(h.halted, Ordering::Relaxed);
+    }
+
     /// `generation` is passed in by the caller, read under the engine read
     /// lock — the publisher bumps it while holding the write lock, so the
     /// reported generation always matches the engine a concurrent predict
@@ -96,6 +112,10 @@ impl Counters {
             generation,
             ingested: self.ingested.load(Ordering::Relaxed),
             ingest_pending: self.ingest_pending.load(Ordering::Relaxed),
+            workers_total: self.workers_total.load(Ordering::Relaxed) as u32,
+            workers_alive: self.workers_alive.load(Ordering::Relaxed) as u32,
+            degraded: u8::from(self.degraded.load(Ordering::Relaxed)),
+            halted: u8::from(self.halted.load(Ordering::Relaxed)),
         }
     }
 }
@@ -232,6 +252,10 @@ fn spawn_inner(
     let listener = TcpListener::bind(addr).with_context(|| format!("serve bind {addr}"))?;
     let bound = listener.local_addr()?;
     let engine_config = engine.config();
+    let health = fitter
+        .as_ref()
+        .map(|f| f.health())
+        .unwrap_or_else(crate::stream::StreamHealth::local);
     let shared = Arc::new(Shared {
         engine: RwLock::new(Arc::new(engine)),
         engine_config,
@@ -247,6 +271,10 @@ fn spawn_inner(
             generation: AtomicU64::new(1),
             ingested: AtomicU64::new(0),
             ingest_pending: AtomicU64::new(0),
+            workers_total: AtomicU64::new(health.workers_total as u64),
+            workers_alive: AtomicU64::new(health.workers_alive as u64),
+            degraded: AtomicBool::new(health.degraded),
+            halted: AtomicBool::new(health.halted),
             start: Instant::now(),
         },
         shutdown: AtomicBool::new(false),
@@ -681,6 +709,9 @@ fn apply_ingests(shared: &Shared, stream: &StreamShared) {
             (job, r)
         })
         .collect();
+    // Refresh the /stats health mirror: a distributed fitter may have
+    // killed + recovered workers (degraded) or halted during these folds.
+    shared.counters.set_health(fitter.health());
     // Re-plan once for everything that folded *data*; empty batches
     // (accepted = 0) must not trigger a rebuild or a generation bump —
     // they reply with the generation already live.

@@ -161,6 +161,11 @@ impl ModelSnapshot {
     /// Read a snapshot straight out of a **checkpoint** file: parses prior
     /// and per-cluster statistics, skips sampled weights and the O(N) label
     /// vector, and never touches an RNG (no parameter resampling).
+    ///
+    /// Accepts both fit checkpoints (v1) and streaming checkpoints (v3 —
+    /// their model section shares the v1 layout; the trailing streaming
+    /// section is simply not read), so `dpmm serve`/`dpmm predict` work
+    /// against either file.
     pub fn from_checkpoint_file(path: impl AsRef<Path>) -> Result<ModelSnapshot> {
         let path = path.as_ref();
         let mut r = BufReader::new(
@@ -172,7 +177,9 @@ impl ModelSnapshot {
             bail!("not a dpmm checkpoint (bad magic)");
         }
         let ver = checkpoint::read_u8(&mut r)?;
-        if ver != checkpoint::VERSION {
+        if ver != checkpoint::VERSION
+            && ver != crate::stream::checkpoint::STREAM_CHECKPOINT_VERSION
+        {
             bail!("unsupported checkpoint version {ver}");
         }
         let _alpha = checkpoint::read_f64(&mut r)?;

@@ -1,4 +1,4 @@
-//! Binary wire format for the serving protocol.
+//! Binary wire format for the serving (client↔server) protocol.
 //!
 //! Reuses the fit path's length-prefixed frame codec and little-endian
 //! primitive layer ([`crate::backend::distributed::wire`]) with its own
@@ -6,48 +6,33 @@
 //! but share framing, sanity caps, and corruption handling. Point payloads
 //! travel as raw f64 runs (shape sent once up front) so a client can
 //! memcpy a contiguous row-major buffer straight onto the socket; this is
-//! also what `python/dpmmwrapper.py`'s `DpmmClient` speaks via `struct` +
-//! `ndarray.tobytes()`.
+//! also what `python/dpmmwrapper.py`'s `DpmmClient` speaks.
+//!
+//! **The canonical protocol reference — the versioned tag table, payload
+//! layouts, v1→v3 history, and failure semantics — lives in
+//! `docs/WIRE_PROTOCOLS.md`.** Keep it in sync with any change here; the
+//! version byte leads every frame, decoders reject any other version, and
+//! the byte is bumped on payload-layout changes **and** on new tags.
+//!
+//! Tag summary: v1 = predict/info/stats/shutdown (tags 1–9); v2 =
+//! `Ingest`/`IngestReply` (tags 10–11) + streaming stats fields; v3 =
+//! `StatsReply` grew the cluster-health fields (`workers_total`,
+//! `workers_alive`, `degraded`, `halted`) surfacing the distributed
+//! stream's degraded mode.
 //!
 //! Clients are agnostic to the server's ingest topology: `dpmm stream`
 //! with or without `--workers` speaks the identical client-facing wire —
 //! distribution happens behind the server on the fit protocol's `Stream*`
-//! verbs (see the tag table in [`crate::backend::distributed::wire`]).
-//!
-//! # Message-tag reference (serve protocol version 2)
-//!
-//! | tag | message       | payload layout                                               | since | direction |
-//! |-----|---------------|--------------------------------------------------------------|-------|-----------|
-//! | 1   | `Predict`     | `u8 flags`, `u32 n`, `u32 d`, raw n·d f64s                   | v1    | client → server |
-//! | 2   | `Scores`      | `u8 flags`, `u32 n`, `u32 k`, n×`u32` labels, raw f64 runs: map_score[n], log_predictive[n][, log_probs[n·k]] | v1 | server → client |
-//! | 3   | `Info`        | —                                                            | v1    | client → server |
-//! | 4   | `InfoReply`   | `u32 d`, `u32 k`, `u8 family`, `u64 n_total`                 | v1    | server → client |
-//! | 5   | `Stats`       | —                                                            | v1    | client → server |
-//! | 6   | `StatsReply`  | `u64 requests`, `u64 points`, `u64 batches`, `f64 uptime`, `f64 pts/s`, `f64 mean_batch`, `u64 generation`, `u64 ingested`, `u64 ingest_pending` | v2 | server → client |
-//! | 7   | `Shutdown`    | —                                                            | v1    | client → server |
-//! | 8   | `Ack`         | —                                                            | v1    | server → client |
-//! | 9   | `Error`       | `str`                                                        | v1    | server → client |
-//! | 10  | `Ingest`      | `u32 n`, `u32 d`, raw n·d f64s                               | v2    | client → server |
-//! | 11  | `IngestReply` | `u64 accepted`, `u64 generation`, `u64 window`               | v2    | server → client |
-//!
-//! # Version-bump rules
-//!
-//! Same discipline as the fit protocol: the version byte leads every
-//! frame, decoders reject any other version, and the byte is bumped on
-//! payload-layout changes **and** on new tags. History: **v1** — predict /
-//! info / stats / shutdown; **v2** — `StatsReply` grew
-//! `generation`/`ingested`/`ingest_pending` and the `Ingest`/`IngestReply`
-//! verbs were added (v1 peers would misparse the new stats layout as
-//! trailing/truncated bytes, so the version byte turns that into a clear
-//! mismatch error).
+//! verbs.
 
 use crate::backend::distributed::wire::{read_frame, write_frame, Dec, Enc};
 use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
 
 /// Serving-protocol version byte (independent of the fit protocol's; see
-/// the module docs for the tag table and bump rules).
-pub const SERVE_PROTO_VERSION: u8 = 2;
+/// `docs/WIRE_PROTOCOLS.md` for the tag table and bump rules). v3 grew
+/// `StatsReply` by the cluster-health fields.
+pub const SERVE_PROTO_VERSION: u8 = 3;
 
 /// Request flag: also return the normalized per-cluster log posterior
 /// membership matrix (`n × K`).
@@ -94,6 +79,17 @@ pub enum ServeMessage {
         /// Ingest lag: points accepted onto the queue but not yet folded
         /// into a live snapshot.
         ingest_pending: u64,
+        /// Worker slots in the distributed session (0 = local streaming
+        /// or plain serve).
+        workers_total: u32,
+        /// Workers currently reachable.
+        workers_alive: u32,
+        /// 1 = a worker failed this session and its window batches were
+        /// re-sharded onto survivors (latches until restart/resume).
+        degraded: u8,
+        /// 1 = ingest is halted (unrecoverable failure); predictions keep
+        /// serving the last published snapshot.
+        halted: u8,
     },
     /// Streaming ingest: fold `n` points of dimension `d` (row-major raw
     /// payload) into the served model. Only `dpmm stream` endpoints accept
@@ -166,6 +162,10 @@ impl ServeMessage {
                 generation,
                 ingested,
                 ingest_pending,
+                workers_total,
+                workers_alive,
+                degraded,
+                halted,
             } => {
                 e.u8(TAG_STATS_REPLY);
                 e.u64(*requests);
@@ -177,6 +177,10 @@ impl ServeMessage {
                 e.u64(*generation);
                 e.u64(*ingested);
                 e.u64(*ingest_pending);
+                e.u32(*workers_total);
+                e.u32(*workers_alive);
+                e.u8(*degraded);
+                e.u8(*halted);
             }
             ServeMessage::Ingest { n, d, x } => {
                 e.u8(TAG_INGEST);
@@ -259,6 +263,10 @@ impl ServeMessage {
                 generation: d.u64()?,
                 ingested: d.u64()?,
                 ingest_pending: d.u64()?,
+                workers_total: d.u32()?,
+                workers_alive: d.u32()?,
+                degraded: d.u8()?,
+                halted: d.u8()?,
             },
             TAG_INGEST => {
                 let n = d.u32()?;
@@ -335,6 +343,10 @@ mod tests {
                 generation: 4,
                 ingested: 512,
                 ingest_pending: 128,
+                workers_total: 3,
+                workers_alive: 2,
+                degraded: 1,
+                halted: 0,
             },
             ServeMessage::Ingest { n: 2, d: 3, x: vec![0.5; 6] },
             ServeMessage::Ingest { n: 0, d: 8, x: vec![] },

@@ -104,6 +104,13 @@ impl Prior {
         }
     }
 
+    /// Fresh per-(cluster, sub-cluster) statistics bundle of `k` entries —
+    /// the unit shape of the streaming accumulators and the wire's grouped
+    /// stats deltas (shared by the stream leader and the worker).
+    pub fn empty_bundle(&self, k: usize) -> Vec<[Stats; 2]> {
+        (0..k).map(|_| [self.empty_stats(), self.empty_stats()]).collect()
+    }
+
     /// Fallible [`Self::sample_params`] for untrusted (deserialized) inputs.
     pub fn try_sample_params(
         &self,

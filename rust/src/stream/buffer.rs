@@ -83,6 +83,17 @@ impl StreamBuffer {
         self.zsub.drain(..n);
     }
 
+    /// Drop `n` points starting at point index `start` (any position — the
+    /// distributed worker removes whole batches from the middle of its
+    /// window slice on rebalance and on out-of-FIFO-order eviction after a
+    /// rebalance).
+    pub fn remove_span(&mut self, start: usize, n: usize) {
+        assert!(start + n <= self.len(), "remove_span out of range");
+        self.values.drain(start * self.d..(start + n) * self.d);
+        self.z.drain(start..start + n);
+        self.zsub.drain(start..start + n);
+    }
+
     /// Temporarily take ownership of the window's value buffer — a
     /// zero-copy hand-off to a sweep's [`crate::datagen::Data`] so the
     /// whole window is not cloned on every ingest. Pair with
@@ -126,6 +137,17 @@ mod tests {
         assert_eq!(b.values(), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
         assert_eq!(b.labels(), &[1, 0, 0]);
         assert_eq!(b.sub_labels(), &[1, 1, 0]);
+    }
+
+    #[test]
+    fn remove_span_mid_window() {
+        let mut b = StreamBuffer::new(2, 16);
+        b.push(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], &[0, 1, 2, 3], &[0, 1, 0, 1]);
+        b.remove_span(1, 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.values(), &[1.0, 2.0, 7.0, 8.0]);
+        assert_eq!(b.labels(), &[0, 3]);
+        assert_eq!(b.sub_labels(), &[0, 1]);
     }
 
     #[test]

@@ -1,0 +1,667 @@
+//! Streaming-state checkpoints: leader durability for `dpmm stream`.
+//!
+//! A fit checkpoint (`DPMMCKPT` v1, [`crate::coordinator::checkpoint`])
+//! freezes a batch MCMC chain. A **streaming** checkpoint additionally has
+//! to capture everything the stream leader needs to replay to a
+//! bitwise-identical state after a restart: the RNG lineage, the frozen
+//! `base` and windowed `win` accumulators, and the full window contents —
+//! raw mini-batch values with their live labels and, in distributed mode,
+//! each batch's persistent sweep-RNG stream (collected from the workers
+//! via `StreamBatchState` at save time).
+//!
+//! # File format (`DPMMCKPT` version 3)
+//!
+//! The file starts with the **same model section as a v1 fit checkpoint**
+//! (magic, version byte, α, N, prior, K clusters) so
+//! [`crate::serve::ModelSnapshot::from_checkpoint_file`] can serve straight
+//! from a streaming checkpoint. The label vector is empty (window labels
+//! live in the streaming section), and a `STRM` section follows:
+//!
+//! ```text
+//! [8]  magic  "DPMMCKPT"
+//! [1]  version = 3            (v1 = fit checkpoint, no streaming section;
+//!                              v2 was never shipped — the number aligns
+//!                              with fit-wire protocol v3)
+//!      f64 alpha · u64 n_total · prior · u32 K
+//!      K × { stats, sub_l, sub_r, f64 weight, f64 sw0, f64 sw1, u64 age }
+//!      u64 iter (ingested batches; informational) · u64 n_labels = 0
+//! [4]  magic  "STRM"
+//! [1]  section version = 1
+//! [1]  mode: 0 = local window, 1 = distributed batch FIFO
+//! [32] leader RNG state (4 × u64)
+//!      u64 ingested points · u64 next_batch_id
+//!      u64 window · u32 sweeps · f64 decay · f64 stream alpha
+//!      u32 K · K × 2 stats (base) · K × 2 stats (win)
+//!      mode 0: u64 wlen · f64s values · wlen × u32 z · wlen × u8 zsub
+//!      mode 1: u32 n_batches · n × { u64 id, u32 n, f64s x,
+//!                                    n × u32 z, n × u8 zsub, 4 × u64 rng }
+//! ```
+//!
+//! Loading is fully validated: corrupt or truncated streaming sections are
+//! **typed errors**, never aborts (`tests/integration_stream_recovery.rs`
+//! and the checkpoint tests pin this), and a v1 file is rejected by the
+//! resume path with an error that says it has no streaming section — while
+//! fit/serve loaders keep accepting v1 files unchanged.
+//!
+//! The determinism contract for `--resume` (fixed seed + same ingest
+//! history ⇒ bitwise-identical stats, across worker counts and kernels)
+//! and its boundaries are documented in docs/DETERMINISM.md.
+
+use crate::coordinator::checkpoint::{
+    read_f64, read_f64s, read_prior, read_stats, read_u32, read_u64, read_u8, write_f64s,
+    write_prior, write_stats, MAGIC,
+};
+use crate::model::{Cluster, DpmmState};
+use crate::stats::{Prior, Stats};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// `DPMMCKPT` version byte for checkpoints carrying a streaming section.
+/// v2 was never shipped; the jump keeps the file version aligned with the
+/// fit-wire protocol version that introduced leader durability.
+pub const STREAM_CHECKPOINT_VERSION: u8 = 3;
+
+/// Streaming-section magic (follows the model section).
+const STRM_MAGIC: &[u8; 4] = b"STRM";
+const STRM_VERSION: u8 = 1;
+
+/// Cadence/path knobs for periodic leader checkpoints, shared by the local
+/// and distributed fitters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamCheckpointCfg {
+    /// Checkpoint file path (written atomically: temp file + rename).
+    pub path: String,
+    /// Save every N successfully ingested batches (0 = only on explicit
+    /// [`save`](crate::stream::IncrementalFitter::save_stream_checkpoint)
+    /// calls).
+    pub every_batches: usize,
+}
+
+/// One windowed batch's full dump (distributed mode).
+#[derive(Debug, Clone)]
+pub struct BatchDump {
+    pub id: u64,
+    pub x: Vec<f64>,
+    pub z: Vec<u32>,
+    pub zsub: Vec<u8>,
+    pub rng: [u64; 4],
+}
+
+/// Window contents by topology.
+#[derive(Debug, Clone)]
+pub enum WindowContents {
+    /// Single-process window: the `StreamBuffer`'s rows and labels.
+    Local { values: Vec<f64>, z: Vec<u32>, zsub: Vec<u8> },
+    /// Distributed window: the leader's global batch FIFO, ascending id.
+    Distributed { batches: Vec<BatchDump> },
+}
+
+/// Everything a stream fitter needs to resume bitwise-identically.
+#[derive(Debug, Clone)]
+pub struct StreamCheckpoint {
+    pub alpha_model: f64,
+    pub n_total: usize,
+    pub prior: Prior,
+    pub clusters: Vec<Cluster>,
+    /// Leader RNG lineage at save time.
+    pub rng: [u64; 4],
+    pub ingested: u64,
+    pub next_batch_id: u64,
+    /// Stream config captured at save time — resume **uses these** (not
+    /// the CLI values) because the determinism contract requires the same
+    /// window/sweeps/decay/α before and after the restart.
+    pub window: usize,
+    pub sweeps: usize,
+    pub decay: f64,
+    pub alpha: f64,
+    pub base: Vec<[Stats; 2]>,
+    pub win: Vec<[Stats; 2]>,
+    pub contents: WindowContents,
+}
+
+impl StreamCheckpoint {
+    /// Rebuild the coordinator-side model state. Params are deterministic
+    /// posterior means — they are resampled from the (exact) statistics at
+    /// the first post-resume sweep before anything reads them, so no RNG
+    /// is consumed here and the resumed trajectory stays bitwise-aligned.
+    pub fn state(&self) -> DpmmState {
+        DpmmState {
+            alpha: self.alpha,
+            prior: self.prior.clone(),
+            clusters: self.clusters.clone(),
+            n_total: self.n_total,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.clusters.len()
+    }
+}
+
+fn write_u32v(w: &mut impl Write, v: &[u32]) -> Result<()> {
+    for &x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32v(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    (0..n).map(|_| read_u32(r)).collect()
+}
+
+fn write_rng(w: &mut impl Write, s: &[u64; 4]) -> Result<()> {
+    for &x in s {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read + validate a serialized RNG state. All-zero is the xoshiro fixed
+/// point — unreachable from any legitimately seeded stream, so it can
+/// only mean corruption and must be a typed error (a silent fallback
+/// would resume a trajectory that is neither the original nor flagged).
+fn read_rng(r: &mut impl Read) -> Result<[u64; 4]> {
+    let s = [read_u64(r)?, read_u64(r)?, read_u64(r)?, read_u64(r)?];
+    if s == [0, 0, 0, 0] {
+        bail!("streaming checkpoint holds an all-zero RNG state (corrupt)");
+    }
+    Ok(s)
+}
+
+fn write_bundle(w: &mut impl Write, bundle: &[[Stats; 2]]) -> Result<()> {
+    for [l, rr] in bundle {
+        write_stats(w, l)?;
+        write_stats(w, rr)?;
+    }
+    Ok(())
+}
+
+fn read_bundle(r: &mut impl Read, k: usize, prior: &Prior, what: &str) -> Result<Vec<[Stats; 2]>> {
+    let d = prior.dim();
+    let mut bundle = Vec::with_capacity(k);
+    for kk in 0..k {
+        let pair = [read_stats(r)?, read_stats(r)?];
+        for s in &pair {
+            if s.family() != prior.family() || s.dim() != d {
+                bail!(
+                    "streaming checkpoint `{what}` stats for cluster {kk} do not match \
+                     the prior (family {}, dimension {})",
+                    s.family(),
+                    s.dim()
+                );
+            }
+        }
+        bundle.push(pair);
+    }
+    Ok(bundle)
+}
+
+/// Borrowed view of everything [`save_stream_checkpoint`] serializes.
+pub(crate) struct StreamSave<'a> {
+    pub state: &'a DpmmState,
+    pub rng: [u64; 4],
+    pub ingested: u64,
+    pub next_batch_id: u64,
+    pub window: usize,
+    pub sweeps: usize,
+    pub decay: f64,
+    pub alpha: f64,
+    pub base: &'a [[Stats; 2]],
+    pub win: &'a [[Stats; 2]],
+    pub contents: WindowContents,
+}
+
+/// Write a streaming checkpoint atomically (temp file + rename, so an
+/// interrupted save never clobbers the previous good checkpoint).
+pub(crate) fn save_stream_checkpoint(path: impl AsRef<Path>, s: &StreamSave<'_>) -> Result<()> {
+    let path = path.as_ref();
+    let tmp = path.with_extension("tmp");
+    {
+        let mut w = BufWriter::new(
+            std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?,
+        );
+        // Model section (v1-compatible layout under version byte 3).
+        w.write_all(MAGIC)?;
+        w.write_all(&[STREAM_CHECKPOINT_VERSION])?;
+        w.write_all(&s.state.alpha.to_le_bytes())?;
+        w.write_all(&(s.state.n_total as u64).to_le_bytes())?;
+        write_prior(&mut w, &s.state.prior)?;
+        w.write_all(&(s.state.k() as u32).to_le_bytes())?;
+        for c in &s.state.clusters {
+            write_stats(&mut w, &c.stats)?;
+            write_stats(&mut w, &c.sub_stats[0])?;
+            write_stats(&mut w, &c.sub_stats[1])?;
+            w.write_all(&c.weight.to_le_bytes())?;
+            w.write_all(&c.sub_weights[0].to_le_bytes())?;
+            w.write_all(&c.sub_weights[1].to_le_bytes())?;
+            w.write_all(&(c.age as u64).to_le_bytes())?;
+        }
+        w.write_all(&s.next_batch_id.to_le_bytes())?; // "iter": informational
+        w.write_all(&0u64.to_le_bytes())?; // no global label vector
+        // Streaming section.
+        w.write_all(STRM_MAGIC)?;
+        w.write_all(&[STRM_VERSION])?;
+        let mode: u8 = match &s.contents {
+            WindowContents::Local { .. } => 0,
+            WindowContents::Distributed { .. } => 1,
+        };
+        w.write_all(&[mode])?;
+        write_rng(&mut w, &s.rng)?;
+        w.write_all(&s.ingested.to_le_bytes())?;
+        w.write_all(&s.next_batch_id.to_le_bytes())?;
+        w.write_all(&(s.window as u64).to_le_bytes())?;
+        w.write_all(&(s.sweeps as u32).to_le_bytes())?;
+        w.write_all(&s.decay.to_le_bytes())?;
+        w.write_all(&s.alpha.to_le_bytes())?;
+        w.write_all(&(s.state.k() as u32).to_le_bytes())?;
+        write_bundle(&mut w, s.base)?;
+        write_bundle(&mut w, s.win)?;
+        match &s.contents {
+            WindowContents::Local { values, z, zsub } => {
+                w.write_all(&(z.len() as u64).to_le_bytes())?;
+                write_f64s(&mut w, values)?;
+                write_u32v(&mut w, z)?;
+                w.write_all(zsub)?;
+            }
+            WindowContents::Distributed { batches } => {
+                w.write_all(&(batches.len() as u32).to_le_bytes())?;
+                for b in batches {
+                    w.write_all(&b.id.to_le_bytes())?;
+                    w.write_all(&(b.z.len() as u32).to_le_bytes())?;
+                    write_f64s(&mut w, &b.x)?;
+                    write_u32v(&mut w, &b.z)?;
+                    w.write_all(&b.zsub)?;
+                    write_rng(&mut w, &b.rng)?;
+                }
+            }
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Load + fully validate a streaming checkpoint. Every corruption class —
+/// bad magic, wrong versions, truncation at any depth, label/shape
+/// mismatches, non-finite values — is a typed error, never an abort.
+pub fn load_stream_checkpoint(path: impl AsRef<Path>) -> Result<StreamCheckpoint> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("reading checkpoint magic")?;
+    if &magic != MAGIC {
+        bail!("not a dpmm checkpoint (bad magic)");
+    }
+    let ver = read_u8(&mut r)?;
+    if ver == crate::coordinator::checkpoint::VERSION {
+        bail!(
+            "checkpoint is a version-1 fit checkpoint with no streaming section — \
+             `--resume` needs a checkpoint written by `dpmm stream` \
+             (start fresh from it with --checkpoint instead)"
+        );
+    }
+    if ver != STREAM_CHECKPOINT_VERSION {
+        bail!("unsupported checkpoint version {ver}");
+    }
+    let alpha_model = read_f64(&mut r)?;
+    let n_total = read_u64(&mut r)? as usize;
+    let prior = read_prior(&mut r)?;
+    let d = prior.dim();
+    let k = read_u32(&mut r)? as usize;
+    if k == 0 || k > 1 << 16 {
+        bail!("implausible cluster count {k} in streaming checkpoint");
+    }
+    let mut clusters = Vec::with_capacity(k);
+    for kk in 0..k {
+        let stats = read_stats(&mut r)?;
+        let sub_l = read_stats(&mut r)?;
+        let sub_r = read_stats(&mut r)?;
+        for s in [&stats, &sub_l, &sub_r] {
+            if s.family() != prior.family() || s.dim() != d {
+                bail!("streaming checkpoint cluster {kk} stats do not match the prior");
+            }
+        }
+        let weight = read_f64(&mut r)?;
+        let sw0 = read_f64(&mut r)?;
+        let sw1 = read_f64(&mut r)?;
+        let age = read_u64(&mut r)? as usize;
+        let params = prior
+            .try_mean_params(&stats)
+            .with_context(|| format!("streaming checkpoint cluster {kk}"))?;
+        let sub_params = [
+            prior
+                .try_mean_params(&sub_l)
+                .with_context(|| format!("streaming checkpoint cluster {kk} (left sub)"))?,
+            prior
+                .try_mean_params(&sub_r)
+                .with_context(|| format!("streaming checkpoint cluster {kk} (right sub)"))?,
+        ];
+        clusters.push(Cluster {
+            stats,
+            sub_stats: [sub_l, sub_r],
+            params,
+            sub_params,
+            weight,
+            sub_weights: [sw0, sw1],
+            age,
+            since_restart: 0,
+        });
+    }
+    let _iter = read_u64(&mut r)?;
+    let n_labels = read_u64(&mut r)? as usize;
+    if n_labels != 0 {
+        bail!("streaming checkpoint carries a global label vector ({n_labels} labels)");
+    }
+    let mut strm = [0u8; 4];
+    r.read_exact(&mut strm).context("reading streaming section magic")?;
+    if &strm != STRM_MAGIC {
+        bail!("streaming checkpoint has a corrupt streaming-section header");
+    }
+    let sver = read_u8(&mut r)?;
+    if sver != STRM_VERSION {
+        bail!("unsupported streaming-section version {sver}");
+    }
+    let mode = read_u8(&mut r)?;
+    if mode > 1 {
+        bail!("bad streaming-section mode byte {mode} (0 = local, 1 = distributed)");
+    }
+    let rng = read_rng(&mut r)?;
+    let ingested = read_u64(&mut r)?;
+    let next_batch_id = read_u64(&mut r)?;
+    let window = read_u64(&mut r)? as usize;
+    let sweeps = read_u32(&mut r)? as usize;
+    let decay = read_f64(&mut r)?;
+    let alpha = read_f64(&mut r)?;
+    if window == 0 || window > 1 << 40 {
+        bail!("streaming checkpoint has implausible window capacity {window}");
+    }
+    if sweeps > 1 << 16 {
+        bail!("streaming checkpoint has implausible sweep count {sweeps}");
+    }
+    if !(decay > 0.0 && decay <= 1.0) {
+        bail!("streaming checkpoint has invalid decay {decay}");
+    }
+    if !alpha.is_finite() || alpha <= 0.0 {
+        bail!("streaming checkpoint has invalid stream alpha {alpha}");
+    }
+    let sk = read_u32(&mut r)? as usize;
+    if sk != k {
+        bail!("streaming section cluster count {sk} != model section {k}");
+    }
+    let base = read_bundle(&mut r, k, &prior, "base")?;
+    let win = read_bundle(&mut r, k, &prior, "win")?;
+    let check_labels = |z: &[u32], zsub: &[u8], what: &str| -> Result<()> {
+        if z.iter().any(|&l| l as usize >= k) {
+            bail!("streaming checkpoint {what} has labels out of range (K = {k})");
+        }
+        if zsub.iter().any(|&s| s > 1) {
+            bail!("streaming checkpoint {what} has sub-labels out of range");
+        }
+        Ok(())
+    };
+    let contents = match mode {
+        0 => {
+            let wlen = read_u64(&mut r)? as usize;
+            if wlen > window {
+                bail!("streaming checkpoint window holds {wlen} points over its {window} cap");
+            }
+            let values = read_f64s(&mut r)?;
+            if values.len() != wlen * d {
+                bail!(
+                    "streaming checkpoint window values have length {} for {wlen} points \
+                     of dimension {d}",
+                    values.len()
+                );
+            }
+            if values.iter().any(|v| !v.is_finite()) {
+                bail!("streaming checkpoint window has non-finite values");
+            }
+            let z = read_u32v(&mut r, wlen)?;
+            let mut zsub = vec![0u8; wlen];
+            r.read_exact(&mut zsub).context("reading window sub-labels")?;
+            check_labels(&z, &zsub, "window")?;
+            WindowContents::Local { values, z, zsub }
+        }
+        _ => {
+            let n_batches = read_u32(&mut r)? as usize;
+            if n_batches > 1 << 20 {
+                bail!("streaming checkpoint has implausible batch count {n_batches}");
+            }
+            let mut batches = Vec::with_capacity(n_batches);
+            let mut last_id: Option<u64> = None;
+            for _ in 0..n_batches {
+                let id = read_u64(&mut r)?;
+                if let Some(prev) = last_id {
+                    if id <= prev {
+                        bail!("streaming checkpoint batch FIFO is not ascending ({prev} → {id})");
+                    }
+                }
+                if id >= next_batch_id {
+                    bail!("streaming checkpoint batch id {id} >= next_batch_id {next_batch_id}");
+                }
+                last_id = Some(id);
+                let n = read_u32(&mut r)? as usize;
+                if n == 0 || n > window {
+                    bail!("streaming checkpoint batch {id} has implausible size {n}");
+                }
+                let x = read_f64s(&mut r)?;
+                if x.len() != n * d {
+                    bail!(
+                        "streaming checkpoint batch {id} values have length {} for {n} \
+                         points of dimension {d}",
+                        x.len()
+                    );
+                }
+                if x.iter().any(|v| !v.is_finite()) {
+                    bail!("streaming checkpoint batch {id} has non-finite values");
+                }
+                let z = read_u32v(&mut r, n)?;
+                let mut zsub = vec![0u8; n];
+                r.read_exact(&mut zsub)
+                    .with_context(|| format!("reading batch {id} sub-labels"))?;
+                check_labels(&z, &zsub, "batch")?;
+                let brng = read_rng(&mut r)?;
+                batches.push(BatchDump { id, x, z, zsub, rng: brng });
+            }
+            WindowContents::Distributed { batches }
+        }
+    };
+    Ok(StreamCheckpoint {
+        alpha_model,
+        n_total,
+        prior,
+        clusters,
+        rng,
+        ingested,
+        next_batch_id,
+        window,
+        sweeps,
+        decay,
+        alpha,
+        base,
+        win,
+        contents,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::stats::NiwPrior;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dpmm_sckpt_{name}_{}.bin", std::process::id()))
+    }
+
+    fn sample_save() -> (DpmmState, Vec<[Stats; 2]>, Vec<[Stats; 2]>) {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut state = DpmmState::new(2.0, prior.clone(), 2, 40, &mut rng);
+        let mut base = Vec::new();
+        let mut win = Vec::new();
+        for (ci, c) in state.clusters.iter_mut().enumerate() {
+            let mut s = prior.empty_stats();
+            s.add(&[ci as f64 * 4.0, 1.0]);
+            s.add(&[ci as f64 * 4.0 + 0.5, -1.0]);
+            c.stats = s.clone();
+            let mut half = s.clone();
+            half.decay(0.5);
+            c.sub_stats = [half.clone(), half.clone()];
+            base.push([half.clone(), half.clone()]);
+            win.push([prior.empty_stats(), prior.empty_stats()]);
+        }
+        (state, base, win)
+    }
+
+    #[test]
+    fn local_roundtrip_is_exact() {
+        let (state, base, win) = sample_save();
+        let save = StreamSave {
+            state: &state,
+            rng: [11, 22, 33, 44],
+            ingested: 9,
+            next_batch_id: 0,
+            window: 64,
+            sweeps: 2,
+            decay: 0.9,
+            alpha: 3.0,
+            base: &base,
+            win: &win,
+            contents: WindowContents::Local {
+                values: vec![0.5, -0.5, 1.0, 2.0],
+                z: vec![0, 1],
+                zsub: vec![1, 0],
+            },
+        };
+        let p = tmp("local");
+        save_stream_checkpoint(&p, &save).unwrap();
+        let back = load_stream_checkpoint(&p).unwrap();
+        assert_eq!(back.rng, [11, 22, 33, 44]);
+        assert_eq!(back.ingested, 9);
+        assert_eq!((back.window, back.sweeps), (64, 2));
+        assert_eq!((back.decay, back.alpha), (0.9, 3.0));
+        assert_eq!(back.k(), 2);
+        assert_eq!(back.base, base);
+        assert_eq!(back.win, win);
+        match &back.contents {
+            WindowContents::Local { values, z, zsub } => {
+                assert_eq!(values, &vec![0.5, -0.5, 1.0, 2.0]);
+                assert_eq!(z, &vec![0, 1]);
+                assert_eq!(zsub, &vec![1, 0]);
+            }
+            _ => panic!("wrong mode"),
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn distributed_roundtrip_is_exact() {
+        let (state, base, win) = sample_save();
+        let batches = vec![
+            BatchDump { id: 3, x: vec![1.0, 2.0], z: vec![0], zsub: vec![0], rng: [1, 2, 3, 4] },
+            BatchDump {
+                id: 7,
+                x: vec![3.0, 4.0, 5.0, 6.0],
+                z: vec![1, 1],
+                zsub: vec![0, 1],
+                rng: [5, 6, 7, 8],
+            },
+        ];
+        let save = StreamSave {
+            state: &state,
+            rng: [9, 9, 9, 9],
+            ingested: 3,
+            next_batch_id: 8,
+            window: 128,
+            sweeps: 1,
+            decay: 1.0,
+            alpha: 2.0,
+            base: &base,
+            win: &win,
+            contents: WindowContents::Distributed { batches: batches.clone() },
+        };
+        let p = tmp("dist");
+        save_stream_checkpoint(&p, &save).unwrap();
+        let back = load_stream_checkpoint(&p).unwrap();
+        assert_eq!(back.next_batch_id, 8);
+        match &back.contents {
+            WindowContents::Distributed { batches: got } => {
+                assert_eq!(got.len(), 2);
+                for (a, b) in got.iter().zip(&batches) {
+                    assert_eq!((a.id, &a.x, &a.z, &a.zsub, a.rng), (b.id, &b.x, &b.z, &b.zsub, b.rng));
+                }
+            }
+            _ => panic!("wrong mode"),
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v1_fit_checkpoints_are_rejected_with_a_clear_error() {
+        use crate::coordinator::Checkpoint;
+        let (state, _, _) = sample_save();
+        let n = state.n_total;
+        let ckpt = Checkpoint { state, iter: 5, labels: vec![0; n] };
+        let p = tmp("v1");
+        ckpt.save(&p).unwrap();
+        let err = load_stream_checkpoint(&p).unwrap_err();
+        assert!(err.to_string().contains("no streaming section"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupt_streaming_sections_are_typed_errors() {
+        let (state, base, win) = sample_save();
+        let save = StreamSave {
+            state: &state,
+            rng: [1, 2, 3, 4],
+            ingested: 2,
+            next_batch_id: 1,
+            window: 32,
+            sweeps: 1,
+            decay: 1.0,
+            alpha: 2.0,
+            base: &base,
+            win: &win,
+            contents: WindowContents::Distributed {
+                batches: vec![BatchDump {
+                    id: 0,
+                    x: vec![1.0, 2.0],
+                    z: vec![0],
+                    zsub: vec![1],
+                    rng: [4, 3, 2, 1],
+                }],
+            },
+        };
+        let p = tmp("corrupt");
+        save_stream_checkpoint(&p, &save).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // Truncation at many depths (incl. inside the streaming section).
+        for cut in [9, 40, bytes.len() / 2, bytes.len() - 37, bytes.len() - 1] {
+            std::fs::write(&p, &bytes[..cut.min(bytes.len() - 1)]).unwrap();
+            assert!(load_stream_checkpoint(&p).is_err(), "cut={cut}");
+        }
+        // Corrupt STRM magic.
+        let strm_at = bytes
+            .windows(4)
+            .position(|w| w == STRM_MAGIC)
+            .expect("streaming section present");
+        let mut bad = bytes.clone();
+        bad[strm_at] = b'X';
+        std::fs::write(&p, &bad).unwrap();
+        let err = load_stream_checkpoint(&p).unwrap_err();
+        assert!(err.to_string().contains("streaming-section"), "{err}");
+        // Bad mode byte.
+        let mut bad = bytes.clone();
+        bad[strm_at + 5] = 9;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(load_stream_checkpoint(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

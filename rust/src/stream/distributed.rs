@@ -7,7 +7,7 @@
 //! (`dpmm worker`): the leader routes each ingest mini-batch to the
 //! least-loaded worker's window slice, workers MAP-seed and resweep their
 //! slices locally, and only **grouped sufficient-statistics deltas**
-//! ([`BatchDelta`]) cross the wire — O(K·d²) per changed batch per sweep,
+//! ([`BatchDelta`]) cross the wire per sweep — O(K·d²) per changed batch,
 //! never O(N·d), the paper's low-bandwidth distribution property carried
 //! over to streaming.
 //!
@@ -16,55 +16,51 @@
 //! The **leader** ([`DistributedFitter`]) owns exactly what the local
 //! fitter's coordinator half owns: the model state, the frozen `base` and
 //! windowed `win` accumulators, the single RNG that samples weights and
-//! parameters, and — new here — the **global batch FIFO** that decides
-//! eviction. Per ingested batch it runs the same five phases as the local
-//! fitter (decay → seed → fold → evict → `sweeps` restricted sweeps), but
-//! phases 2 and 5 execute worker-side:
+//! parameters, and the **global batch FIFO** that decides eviction. For
+//! durability and recovery it additionally retains, per windowed batch,
+//! the raw mini-batch values and a **mirror** of that batch's current
+//! contribution to `win` (maintained from the same deltas it folds).
+//! Per ingested batch it runs the same five phases as the local fitter
+//! (decay → seed → fold → evict → `sweeps` restricted sweeps), with the
+//! seed and sweep phases executing worker-side.
 //!
-//! * **Ingest**: the leader picks the least-loaded worker (fewest windowed
-//!   points, ties → lowest index), assigns the batch a global id and a
-//!   forked RNG seed, and ships it with a deterministic MAP parameter
-//!   snapshot ([`StepParams::map_snapshot`]). The worker seeds labels,
-//!   appends the batch to its window slice, and returns the batch's
-//!   grouped stats delta.
-//! * **Evict**: when the global window overflows, the leader retires whole
-//!   batches in global FIFO order ([`Message::StreamEvict`]); the owning
-//!   worker returns the batch's current grouped statistics, which the
-//!   leader moves from `win` into `base` (labels freeze as-is). Eviction
-//!   is batch-granular: the window occupancy may dip below the capacity by
-//!   up to one batch, but the eviction *sequence* is partition-independent.
-//! * **Sweep**: per restricted sweep the leader samples weights/parameters
-//!   (steps (a)–(d)) exactly like the local fitter and broadcasts one
-//!   [`StepParams`]; every worker reruns the assignment kernels over its
-//!   resident batches (one shard per batch, each with its persistent RNG
-//!   stream) and replies with per-batch deltas of the moved points.
+//! # Fault tolerance and elasticity (PR 5)
 //!
-//! # Determinism across worker counts
+//! * **Worker failure** no longer poisons the stream: the leader marks the
+//!   worker dead, retires each of its resident batches' mirrors from
+//!   `win`, and re-ingests the retained raw batches onto survivors through
+//!   the ordinary `StreamIngest` path (MAP re-seed under the current
+//!   [`StepParams::map_snapshot`], fresh leader-forked RNG streams). The
+//!   stream continues; `/stats` surfaces a typed degraded mode. Only
+//!   losing the *last* live worker halts ingest.
+//! * **Elastic membership**: [`DistributedFitter::join_worker`] /
+//!   [`DistributedFitter::remove_worker`] move whole batches between live
+//!   workers with labels and RNG streams intact (`StreamRebalance` →
+//!   `StreamRestore`), so planned churn never forks the model trajectory.
+//! * **Leader durability**: [`DistributedFitter::save_stream_checkpoint`]
+//!   captures the full streaming state (worker label/RNG state collected
+//!   via `StreamBatchState`) into a `DPMMCKPT` v3 file;
+//!   [`DistributedFitter::resume`] replays it to a bitwise-identical
+//!   leader state — across *any* worker count, because ownership never
+//!   affects the trajectory.
 //!
-//! A fixed-seed ingest history yields **bitwise-identical** leader-side
-//! statistics for any worker count (and tiled vs scalar kernels), because
-//! nothing observable depends on *which* worker owns a batch:
-//!
-//! * each batch's sweep RNG is seeded by the leader in global batch order
-//!   and lives with the batch, so label trajectories depend only on the
-//!   batch's values, its seed, and the broadcast plans;
-//! * per-point assignment given a plan is conditionally independent (the
-//!   restricted sweep interacts only through statistics → next plan), so
-//!   co-residency of batches on a worker never affects labels;
-//! * all statistics folds happen leader-side through one canonical path:
-//!   per-batch deltas (each computed by the worker's single-threaded
-//!   grouped [`fold_groups`](super::fitter) fold over that batch alone)
-//!   are applied in **ascending global batch id order**, and eviction
-//!   order is the leader's global FIFO.
-//!
-//! `tests/integration_stream_distributed.rs` pins the 1-vs-2-worker and
-//! tiled-vs-scalar bitwise contracts end-to-end.
+//! The determinism contract (what is bitwise-stable across worker counts,
+//! kernels, restarts, and planned churn — and exactly where unplanned
+//! failures legitimately fork the RNG lineage) is documented in
+//! docs/DETERMINISM.md and pinned by
+//! `tests/integration_stream_distributed.rs` and
+//! `tests/integration_stream_recovery.rs`.
 
+use super::checkpoint::{
+    load_stream_checkpoint, save_stream_checkpoint, BatchDump, StreamCheckpointCfg, StreamSave,
+    WindowContents,
+};
 use super::fitter::{
-    seed_state_from_snapshot, sync_model_stats, IngestSummary, StreamFitter,
+    fold_groups, seed_state_from_snapshot, sync_model_stats, IngestSummary, StreamFitter,
+    StreamHealth,
 };
 use crate::backend::distributed::wire::{
-    self, request, write_message, BatchDelta, Message,
+    self, request, write_message, BatchDelta, BatchState, Message,
 };
 use crate::backend::shard::AssignKernel;
 use crate::model::DpmmState;
@@ -73,10 +69,11 @@ use crate::sampler::{
     sample_params, sample_sub_weights, sample_weights, SamplerOptions, StepParams,
 };
 use crate::serve::ModelSnapshot;
-use crate::stats::Stats;
-use anyhow::{bail, Context, Result};
-use std::collections::VecDeque;
+use crate::stats::{Prior, Stats};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::TcpStream;
+use std::path::Path;
 
 /// Distributed streaming knobs (the leader-side analog of
 /// [`super::StreamConfig`]; per-worker thread/kernel execution is
@@ -102,6 +99,9 @@ pub struct DistributedStreamConfig {
     /// Assignment kernel shipped to every worker (`None` = each worker's
     /// own `DPMM_ASSIGN_KERNEL` environment decides).
     pub kernel: Option<AssignKernel>,
+    /// Periodic leader checkpointing (`None` = only explicit
+    /// [`DistributedFitter::save_stream_checkpoint`] calls).
+    pub checkpoint: Option<StreamCheckpointCfg>,
 }
 
 impl Default for DistributedStreamConfig {
@@ -115,21 +115,98 @@ impl Default for DistributedStreamConfig {
             alpha: 10.0,
             seed: 0,
             kernel: None,
+            checkpoint: None,
         }
     }
 }
 
-/// One windowed batch in the leader's global FIFO.
-#[derive(Debug, Clone, Copy)]
+/// One worker connection slot. Slots are never removed: a dead worker
+/// stays as a tombstone (`conn = None`, `retired = false`) so `/stats`
+/// honestly reports the failure; a gracefully removed worker is marked
+/// `retired` and does not count as degraded.
+struct WorkerSlot {
+    addr: String,
+    conn: Option<TcpStream>,
+    /// Windowed points resident on this worker (the routing load measure).
+    points: usize,
+    /// Left via [`DistributedFitter::remove_worker`] (planned, not a failure).
+    retired: bool,
+}
+
+/// One windowed batch in the leader's global FIFO (ascending `id`).
 struct BatchRec {
     id: u64,
     owner: usize,
     n: usize,
+    /// Raw row-major values, retained for durability: recovery re-ships
+    /// them after a worker death; checkpoints persist them. Costs
+    /// O(window·d) leader memory — the price of not losing the window.
+    x: Vec<f64>,
+    /// Mirror of this batch's current contribution to `win`, maintained
+    /// from the same deltas the leader folds. Empty = nothing folded
+    /// (transient, mid-recovery only). Recovery retires exactly this from
+    /// `win` when the owning worker dies.
+    stats: Vec<[Stats; 2]>,
+}
+
+fn kernel_byte(kernel: Option<AssignKernel>) -> u8 {
+    match kernel {
+        None => 0,
+        Some(AssignKernel::Tiled) => 1,
+        Some(AssignKernel::Scalar) => 2,
+    }
+}
+
+/// Connect to a worker and open a streaming session (`StreamInit` for a
+/// fresh cluster, `StreamJoin` for elastic mid-session joins).
+fn open_session(
+    addr: &str,
+    prior: &Prior,
+    threads: usize,
+    kernel: u8,
+    join: bool,
+) -> Result<TcpStream> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to stream worker {addr}"))?;
+    wire::configure_stream(&stream)
+        .with_context(|| format!("configuring socket to stream worker {addr}"))?;
+    let d = prior.dim() as u32;
+    let prior = prior.clone();
+    let threads = threads.max(1) as u32;
+    let msg = if join {
+        Message::StreamJoin { d, prior, threads, kernel }
+    } else {
+        Message::StreamInit { d, prior, threads, kernel }
+    };
+    match request(&mut stream, &msg)? {
+        Message::Ack => Ok(stream),
+        other => bail!("worker {addr} session-open reply: {other:?}"),
+    }
 }
 
 /// Leader of a distributed streaming cluster: implements the same
 /// [`StreamFitter`] surface as the local fitter, with sweeps executed by
-/// TCP workers (see the module docs).
+/// TCP workers, worker-failure recovery, elastic membership, and
+/// checkpointed durability (see the module docs).
+///
+/// ```no_run
+/// use dpmm::serve::ModelSnapshot;
+/// use dpmm::stream::{DistributedFitter, DistributedStreamConfig};
+///
+/// let snapshot = ModelSnapshot::from_checkpoint_file("fit.ckpt")?;
+/// let mut fitter = DistributedFitter::from_snapshot(
+///     &snapshot,
+///     DistributedStreamConfig {
+///         workers: vec!["10.0.0.1:7878".into(), "10.0.0.2:7878".into()],
+///         window: 1 << 20,
+///         ..DistributedStreamConfig::default()
+///     },
+/// )?;
+/// fitter.ingest(&[0.5, -0.25, 1.0, 2.0])?; // two 2-d points
+/// fitter.join_worker("10.0.0.3:7878")?; // elastic scale-out, no fork
+/// fitter.save_stream_checkpoint("stream.ckpt")?; // durable leader state
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct DistributedFitter {
     state: DpmmState,
     /// Frozen evidence per (cluster, sub): seed snapshot + everything
@@ -138,25 +215,24 @@ pub struct DistributedFitter {
     /// The distributed window's live contribution per (cluster, sub) —
     /// maintained exclusively by the leader's canonical delta folds.
     win: Vec<[Stats; 2]>,
-    conns: Vec<TcpStream>,
-    /// Windowed batches, oldest first (global ingest order).
+    slots: Vec<WorkerSlot>,
+    /// Windowed batches, oldest first (ascending global batch id).
     fifo: VecDeque<BatchRec>,
-    /// Windowed points per worker (the routing load measure).
-    worker_points: Vec<usize>,
     window_points: usize,
     next_batch_id: u64,
     rng: Xoshiro256pp,
     cfg: DistributedStreamConfig,
     ingested: u64,
-    /// Set when a mid-protocol failure may have left worker window state
-    /// (labels, resident batches, RNG streams) diverged from the leader's
-    /// accumulators. Once poisoned, every further ingest fails fast with
-    /// this reason — silently resuming would fold deltas against stats the
-    /// leader never saw and corrupt the model without any error. The
-    /// serving layer keeps answering predicts from the last published
-    /// snapshot throughout; recovery is restarting the stream leader
-    /// (which re-seeds every worker window from a fresh snapshot).
-    poisoned: Option<String>,
+    batches_since_ckpt: usize,
+    /// First worker-failure description. Latches for the session (the
+    /// tombstone slot stays visible in `/stats`); a `--resume` restart
+    /// begins clean.
+    degraded: Option<String>,
+    /// Set when ingest can no longer continue (no live workers, or a
+    /// leader-side fold invariant broke). Every further ingest fails fast
+    /// with this reason; recovery is `dpmm stream --resume` from the last
+    /// checkpoint (or a fresh start from a snapshot).
+    halted: Option<String>,
 }
 
 impl DistributedFitter {
@@ -179,46 +255,120 @@ impl DistributedFitter {
         let (state, base) = seed_state_from_snapshot(snap, cfg.alpha)?;
         let k = state.k();
         let prior = state.prior.clone();
-        let win: Vec<[Stats; 2]> =
-            (0..k).map(|_| [prior.empty_stats(), prior.empty_stats()]).collect();
-        let kernel_byte = match cfg.kernel {
-            None => 0u8,
-            Some(AssignKernel::Tiled) => 1,
-            Some(AssignKernel::Scalar) => 2,
-        };
-        let mut conns = Vec::with_capacity(cfg.workers.len());
+        let win: Vec<[Stats; 2]> = prior.empty_bundle(k);
+        let kb = kernel_byte(cfg.kernel);
+        let mut slots = Vec::with_capacity(cfg.workers.len());
         for addr in &cfg.workers {
-            let mut stream = TcpStream::connect(addr)
-                .with_context(|| format!("connecting to stream worker {addr}"))?;
-            wire::configure_stream(&stream)
-                .with_context(|| format!("configuring socket to stream worker {addr}"))?;
-            let init = Message::StreamInit {
-                d: prior.dim() as u32,
-                prior: prior.clone(),
-                threads: cfg.worker_threads.max(1) as u32,
-                kernel: kernel_byte,
-            };
-            match request(&mut stream, &init)? {
-                Message::Ack => {}
-                other => bail!("worker {addr} StreamInit reply: {other:?}"),
-            }
-            conns.push(stream);
+            let conn = open_session(addr, &prior, cfg.worker_threads, kb, false)?;
+            slots.push(WorkerSlot { addr: addr.clone(), conn: Some(conn), points: 0, retired: false });
         }
-        let w = conns.len();
+        let seed = cfg.seed;
         Ok(DistributedFitter {
             state,
             base,
             win,
-            conns,
+            slots,
             fifo: VecDeque::new(),
-            worker_points: vec![0; w],
             window_points: 0,
             next_batch_id: 0,
-            rng: Xoshiro256pp::seed_from_u64(cfg.seed),
+            rng: Xoshiro256pp::seed_from_u64(seed),
             cfg,
             ingested: 0,
-            poisoned: None,
+            batches_since_ckpt: 0,
+            degraded: None,
+            halted: None,
         })
+    }
+
+    /// Resume a distributed stream from a leader checkpoint written by
+    /// [`Self::save_stream_checkpoint`]: the model, accumulators, RNG
+    /// lineage, and every windowed batch (values + labels + per-batch
+    /// sweep-RNG streams) are restored exactly, and the batches are
+    /// redistributed across `cfg.workers` least-loaded-first. Because the
+    /// trajectory is ownership-independent, the resumed stream is
+    /// **bitwise-identical** to the uninterrupted one for any worker
+    /// count. `window`/`sweeps`/`decay`/`alpha` come from the checkpoint
+    /// (the contract requires them unchanged); `workers`, threads, and
+    /// kernel come from `cfg`.
+    pub fn resume(
+        path: impl AsRef<Path>,
+        cfg: DistributedStreamConfig,
+    ) -> Result<DistributedFitter> {
+        if cfg.workers.is_empty() {
+            bail!("resuming a distributed stream needs at least one worker address");
+        }
+        let ck = load_stream_checkpoint(&path)?;
+        let batches = match ck.contents {
+            WindowContents::Distributed { ref batches } => batches.clone(),
+            WindowContents::Local { .. } => bail!(
+                "checkpoint {} holds a local (single-process) window — resume it \
+                 without --workers",
+                path.as_ref().display()
+            ),
+        };
+        let mut state = ck.state();
+        sync_model_stats(&mut state, &ck.base, &ck.win);
+        let prior = state.prior.clone();
+        let k = state.k();
+        let d = prior.dim();
+        let kb = kernel_byte(cfg.kernel);
+        let mut slots = Vec::with_capacity(cfg.workers.len());
+        for addr in &cfg.workers {
+            let conn = open_session(addr, &prior, cfg.worker_threads, kb, false)?;
+            slots.push(WorkerSlot { addr: addr.clone(), conn: Some(conn), points: 0, retired: false });
+        }
+        let mut fitter = DistributedFitter {
+            state,
+            base: ck.base,
+            win: ck.win,
+            slots,
+            fifo: VecDeque::new(),
+            window_points: 0,
+            next_batch_id: ck.next_batch_id,
+            rng: Xoshiro256pp::from_state(ck.rng),
+            cfg: DistributedStreamConfig {
+                window: ck.window,
+                sweeps: ck.sweeps,
+                decay: ck.decay,
+                alpha: ck.alpha,
+                ..cfg
+            },
+            ingested: ck.ingested,
+            batches_since_ckpt: 0,
+            degraded: None,
+            halted: None,
+        };
+        // Re-install every batch verbatim, ascending id, least-loaded
+        // worker first (ownership is trajectory-neutral).
+        for b in &batches {
+            let n = b.z.len();
+            let owner = fitter.route_owner()?;
+            let msg = Message::StreamRestore {
+                batch_id: b.id,
+                k: k as u32,
+                x: b.x.clone(),
+                z: b.z.clone(),
+                zsub: b.zsub.clone(),
+                rng: b.rng,
+            };
+            match fitter.request_to(owner, &msg)? {
+                Message::Ack => {}
+                other => bail!("worker {owner} StreamRestore reply: {other:?}"),
+            }
+            let mut mirror = prior.empty_bundle(k);
+            let sel: Vec<u32> = (0..n as u32).collect();
+            fold_groups(&mut mirror, &b.x, d, &sel, &b.z, &b.zsub, true);
+            fitter.fifo.push_back(BatchRec {
+                id: b.id,
+                owner,
+                n,
+                x: b.x.clone(),
+                stats: mirror,
+            });
+            fitter.slots[owner].points += n;
+            fitter.window_points += n;
+        }
+        Ok(fitter)
     }
 
     pub fn k(&self) -> usize {
@@ -229,8 +379,19 @@ impl DistributedFitter {
         self.state.prior.dim()
     }
 
+    /// Worker slots that have not gracefully retired (live + failed).
     pub fn num_workers(&self) -> usize {
-        self.conns.len()
+        self.slots.iter().filter(|s| !s.retired).count()
+    }
+
+    /// Workers currently reachable.
+    pub fn workers_alive(&self) -> usize {
+        self.slots.iter().filter(|s| s.conn.is_some()).count()
+    }
+
+    /// Windowed points per worker slot (dead/retired slots report 0).
+    pub fn worker_points(&self) -> Vec<usize> {
+        self.slots.iter().map(|s| s.points).collect()
     }
 
     /// Points ingested over the fitter's lifetime.
@@ -252,6 +413,16 @@ impl DistributedFitter {
         &self.state
     }
 
+    /// Cluster liveness/degradation summary (what `/stats` surfaces).
+    pub fn health(&self) -> StreamHealth {
+        StreamHealth {
+            workers_total: self.num_workers() as u32,
+            workers_alive: self.workers_alive() as u32,
+            degraded: self.degraded.is_some(),
+            halted: self.halted.is_some(),
+        }
+    }
+
     /// Freeze the current model into a serving snapshot.
     pub fn snapshot(&self) -> Result<ModelSnapshot> {
         ModelSnapshot::from_state(&self.state)
@@ -259,26 +430,450 @@ impl DistributedFitter {
 
     /// Close every worker's streaming session cleanly.
     pub fn shutdown(&mut self) -> Result<()> {
-        for conn in self.conns.iter_mut() {
-            write_message(conn, &Message::Shutdown).ok();
-            wire::read_message(conn).ok();
+        for slot in self.slots.iter_mut() {
+            if let Some(conn) = slot.conn.as_mut() {
+                write_message(conn, &Message::Shutdown).ok();
+                wire::read_message(conn).ok();
+            }
         }
         Ok(())
     }
 
-    /// Fold one row-major mini-batch through the cluster: route → seed →
-    /// fold → evict → sweeps (see the module docs). A worker failure
-    /// surfaces as an error; the caller (the serving batcher) keeps the
-    /// previous published snapshot live in that case, and the fitter
-    /// **poisons itself** — worker windows may have committed state the
-    /// leader never folded, so resuming ingest would silently corrupt the
-    /// statistics. Batch-validation errors (shape, non-finite values)
-    /// happen before any wire traffic and do not poison.
-    pub fn ingest(&mut self, batch: &[f64]) -> Result<IngestSummary> {
-        if let Some(why) = &self.poisoned {
+    // ---------- wire plumbing ----------
+
+    fn request_to(&mut self, w: usize, msg: &Message) -> Result<Message> {
+        let conn = self.slots[w]
+            .conn
+            .as_mut()
+            .ok_or_else(|| anyhow!("worker {w} ({}) is down", self.slots[w].addr))?;
+        request(conn, msg)
+    }
+
+    /// Least-loaded live worker (ties → lowest index); `Err` = none left.
+    fn route_owner(&self) -> Result<usize> {
+        self.route_owner_excluding(None)
+    }
+
+    /// [`Self::route_owner`] skipping one slot (the rebalance source —
+    /// moving a batch "onto" its own source would strand it there).
+    fn route_owner_excluding(&self, exclude: Option<usize>) -> Result<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| s.conn.is_some() && Some(*i) != exclude)
+            .min_by_key(|(i, s)| (s.points, *i))
+            .map(|(i, _)| i)
+            .ok_or_else(|| {
+                anyhow!("no live workers remain (all {} failed)", self.slots.len())
+            })
+    }
+
+    /// Mark a worker dead and latch the degraded reason. Idempotent.
+    fn fail_worker(&mut self, w: usize, why: &str) {
+        if self.slots[w].conn.take().is_some() {
+            let msg = format!("worker {w} ({}) failed: {why}", self.slots[w].addr);
+            eprintln!("dpmm stream: {msg}; re-sharding its batches onto survivors");
+            if self.degraded.is_none() {
+                self.degraded = Some(msg);
+            }
+        }
+    }
+
+    // ---------- recovery ----------
+
+    /// Re-home every batch whose owner died: retire its mirror from `win`,
+    /// then re-ingest the retained raw values onto survivors through the
+    /// ordinary MAP-seed path (fresh leader-forked RNG stream — this is
+    /// the one place unplanned churn forks the lineage; see
+    /// docs/DETERMINISM.md). Survivors that fail mid-recovery are killed
+    /// and the loop continues; `Err` only when no live worker remains —
+    /// and that **latches `halted` here**, not only in the `ingest`
+    /// wrapper: recovery also runs from the checkpoint/join/remove paths,
+    /// and a failure there leaves the same inconsistent accumulators
+    /// (mirrors retired, batches unhomed) that must gate future ingests.
+    fn recover_dead_workers(&mut self) -> Result<()> {
+        let result = self.recover_dead_workers_inner();
+        if let Err(e) = &result {
+            self.halt(&format!("{e:#}"));
+        }
+        result
+    }
+
+    /// Latch the terminal halt reason (first failure wins).
+    fn halt(&mut self, why: &str) {
+        if self.halted.is_none() {
+            self.halted = Some(why.to_string());
+        }
+    }
+
+    fn recover_dead_workers_inner(&mut self) -> Result<()> {
+        loop {
+            let pos = self
+                .fifo
+                .iter()
+                .position(|r| self.slots[r.owner].conn.is_none());
+            let Some(pos) = pos else { return Ok(()) };
+            let mirror = std::mem::take(&mut self.fifo[pos].stats);
+            if !mirror.is_empty() {
+                for (kk, pair) in mirror.iter().enumerate() {
+                    for h in 0..2 {
+                        self.win[kk][h].try_unmerge(&pair[h]).map_err(|e| {
+                            anyhow!("retiring dead worker's batch mirror: {e}")
+                        })?;
+                    }
+                }
+                sync_model_stats(&mut self.state, &self.base, &self.win);
+            }
+            let (old_owner, n) = (self.fifo[pos].owner, self.fifo[pos].n);
+            self.slots[old_owner].points = self.slots[old_owner].points.saturating_sub(n);
+            self.reingest_detached(pos)?;
+        }
+    }
+
+    /// Re-ingest the (detached, mirror-retired) batch at FIFO position
+    /// `pos` onto the least-loaded survivor, retrying across failures.
+    fn reingest_detached(&mut self, pos: usize) -> Result<()> {
+        loop {
+            let owner = self.route_owner()?;
+            let seed = self.rng.next_u64();
+            let params = StepParams::map_snapshot(&self.state);
+            let (id, n, x) = {
+                let rec = &self.fifo[pos];
+                (rec.id, rec.n, rec.x.clone())
+            };
+            let msg = Message::StreamIngest { batch_id: id, seed, params, x };
+            match self.request_to(owner, &msg) {
+                Ok(reply) => match self.accept_ingest_delta(reply, owner, id) {
+                    Ok(added) => {
+                        let rec = &mut self.fifo[pos];
+                        rec.stats = added;
+                        rec.owner = owner;
+                        self.slots[owner].points += n;
+                        sync_model_stats(&mut self.state, &self.base, &self.win);
+                        return Ok(());
+                    }
+                    Err(e) => self.fail_worker(owner, &format!("{e:#}")),
+                },
+                Err(e) => self.fail_worker(owner, &format!("{e:#}")),
+            }
+        }
+    }
+
+    /// Validate + fold one `StreamIngest` reply: exactly one delta for the
+    /// expected batch, well-formed bundle; folds `added` into `win` and
+    /// returns it (the caller installs it as the batch mirror). `Err`
+    /// means the *worker's reply* was unusable (caller kills the worker);
+    /// nothing is folded on error.
+    fn accept_ingest_delta(
+        &mut self,
+        reply: Message,
+        worker: usize,
+        batch_id: u64,
+    ) -> Result<Vec<[Stats; 2]>> {
+        let deltas = match reply {
+            Message::StatsDelta(ds) => ds,
+            other => bail!("worker {worker}: expected StatsDelta, got {other:?}"),
+        };
+        let delta = match deltas.as_slice() {
+            [d] if d.batch_id == batch_id => d,
+            [d] => bail!("worker {worker}: delta for batch {}, want {batch_id}", d.batch_id),
+            _ => bail!("worker {worker}: {} deltas for batch {batch_id}, want 1", deltas.len()),
+        };
+        if !delta.removed.is_empty() {
+            bail!("worker {worker}: ingest delta for batch {batch_id} removes statistics");
+        }
+        check_bundle(&delta.added, self.k(), self.dim(), &self.state.prior, "added")?;
+        if delta.added.is_empty() {
+            bail!("worker {worker}: ingest delta for batch {batch_id} is empty");
+        }
+        for (kk, pair) in delta.added.iter().enumerate() {
+            for h in 0..2 {
+                self.win[kk][h]
+                    .try_merge(&pair[h])
+                    .map_err(|e| anyhow!("folding ingest delta: {e}"))?;
+            }
+        }
+        Ok(delta.added.clone())
+    }
+
+    // ---------- elastic membership ----------
+
+    /// Join a new worker to the live session and rebalance: whole batches
+    /// move from overloaded workers onto the newcomer with labels and RNG
+    /// streams intact, so the model trajectory is **bitwise-unchanged** by
+    /// the join (pinned by `tests/integration_stream_recovery.rs`).
+    pub fn join_worker(&mut self, addr: &str) -> Result<()> {
+        if let Some(why) = &self.halted {
+            bail!("stream is halted ({why}); cannot join workers");
+        }
+        let prior = self.state.prior.clone();
+        let conn = open_session(
+            addr,
+            &prior,
+            self.cfg.worker_threads,
+            kernel_byte(self.cfg.kernel),
+            true,
+        )?;
+        self.slots.push(WorkerSlot {
+            addr: addr.to_string(),
+            conn: Some(conn),
+            points: 0,
+            retired: false,
+        });
+        let new_idx = self.slots.len() - 1;
+        self.rebalance_onto(new_idx)?;
+        self.recover_dead_workers()
+    }
+
+    /// Gracefully remove a live worker: its batches rebalance onto the
+    /// remaining live workers (labels/RNG intact — no trajectory fork),
+    /// the session closes, and the slot is marked retired (not degraded).
+    pub fn remove_worker(&mut self, addr: &str) -> Result<()> {
+        if let Some(why) = &self.halted {
+            bail!("stream is halted ({why}); cannot remove workers");
+        }
+        let w = self
+            .slots
+            .iter()
+            .position(|s| s.addr == addr && s.conn.is_some())
+            .ok_or_else(|| anyhow!("no live worker at {addr}"))?;
+        if self.workers_alive() <= 1 {
+            bail!("cannot remove the last live worker");
+        }
+        let ids: Vec<u64> =
+            self.fifo.iter().filter(|r| r.owner == w).map(|r| r.id).collect();
+        for id in ids {
+            self.move_batch(id, w, None)?;
+        }
+        // Mid-drain failures can bounce batches back onto the source (the
+        // restore fallback of last resort). Shutting it down anyway would
+        // force a lineage-forking recovery of those batches, so refuse:
+        // the cluster stays consistent and the caller can retry.
+        if self.fifo.iter().any(|r| r.owner == w) {
             bail!(
-                "distributed stream halted by an earlier mid-ingest worker failure \
-                 ({why}); restart the stream leader to re-seed the worker windows"
+                "could not drain worker {addr}: other workers failed mid-rebalance and \
+                 some batches remain resident; retry once the cluster is healthy"
+            );
+        }
+        if let Some(conn) = self.slots[w].conn.as_mut() {
+            write_message(conn, &Message::Shutdown).ok();
+            wire::read_message(conn).ok();
+        }
+        self.slots[w].conn = None;
+        self.slots[w].retired = true;
+        self.recover_dead_workers()
+    }
+
+    /// Move batches from overloaded workers onto `target` until it holds
+    /// roughly its fair share (oldest-first, deterministic rule).
+    fn rebalance_onto(&mut self, target: usize) -> Result<()> {
+        let alive = self.workers_alive().max(1);
+        let fair = self.window_points / alive;
+        let ids: Vec<u64> = self.fifo.iter().map(|r| r.id).collect();
+        for id in ids {
+            if self.slots[target].conn.is_none() {
+                break; // target died mid-rebalance; recovery handles it
+            }
+            let Some(pos) = self.fifo.binary_search_by_key(&id, |r| r.id).ok() else {
+                continue;
+            };
+            let (owner, n) = (self.fifo[pos].owner, self.fifo[pos].n);
+            if owner == target || self.slots[target].points + n > fair {
+                continue;
+            }
+            if self.slots[owner].conn.is_none() || self.slots[owner].points <= fair {
+                continue;
+            }
+            self.move_batch(id, owner, Some(target))?;
+        }
+        Ok(())
+    }
+
+    /// Move one batch from `source` to `prefer` (or the least-loaded other
+    /// live worker): detach via `StreamRebalance`, re-install verbatim via
+    /// `StreamRestore`. Worker failures along the way are killed and left
+    /// for [`Self::recover_dead_workers`]; `Err` = no live workers remain.
+    fn move_batch(&mut self, id: u64, source: usize, prefer: Option<usize>) -> Result<()> {
+        let pos = self
+            .fifo
+            .binary_search_by_key(&id, |r| r.id)
+            .map_err(|_| anyhow!("move of unknown batch {id}"))?;
+        let n = self.fifo[pos].n;
+        let state = match self.request_to(source, &Message::StreamRebalance { batch_ids: vec![id] }) {
+            Ok(Message::StreamBatchStateReply(states)) => match states.into_iter().next() {
+                Some(st) if st.batch_id == id && st.z.len() == n => st,
+                _ => {
+                    self.fail_worker(source, "malformed StreamRebalance reply");
+                    return Ok(()); // recovery re-homes this batch
+                }
+            },
+            Ok(other) => {
+                self.fail_worker(source, &format!("unexpected StreamRebalance reply {other:?}"));
+                return Ok(());
+            }
+            Err(e) => {
+                self.fail_worker(source, &format!("{e:#}"));
+                return Ok(());
+            }
+        };
+        // Detached from the source; the leader now holds the only copy of
+        // the labels/RNG. Install on the preferred target, falling back to
+        // any other live worker, and — if every other worker is gone —
+        // back onto the still-live source itself: re-installing there is
+        // always valid and strictly better than stranding the batch
+        // (a stranded batch would poison a later evict of it).
+        self.slots[source].points = self.slots[source].points.saturating_sub(n);
+        let k = self.k() as u32;
+        let mut prefer = prefer;
+        loop {
+            let target = match prefer.filter(|&t| self.slots[t].conn.is_some()) {
+                Some(t) => t,
+                None => match self.route_owner_excluding(Some(source)) {
+                    Ok(t) => t,
+                    Err(_) if self.slots[source].conn.is_some() => source,
+                    Err(e) => {
+                        // Detached batch + no live worker anywhere: the
+                        // labels/RNG just left with the sockets. Halt —
+                        // this state must gate every future ingest.
+                        self.halt(&format!("{e:#}"));
+                        return Err(e);
+                    }
+                },
+            };
+            prefer = None;
+            let msg = Message::StreamRestore {
+                batch_id: id,
+                k,
+                x: self.fifo[pos].x.clone(),
+                z: state.z.clone(),
+                zsub: state.zsub.clone(),
+                rng: state.rng,
+            };
+            match self.request_to(target, &msg) {
+                Ok(Message::Ack) => {
+                    self.fifo[pos].owner = target;
+                    self.slots[target].points += n;
+                    return Ok(());
+                }
+                Ok(other) => {
+                    self.fail_worker(target, &format!("unexpected StreamRestore reply {other:?}"))
+                }
+                Err(e) => self.fail_worker(target, &format!("{e:#}")),
+            }
+        }
+    }
+
+    // ---------- checkpointing ----------
+
+    /// Write a durable leader checkpoint (atomic temp-file + rename):
+    /// model, accumulators, RNG lineage, routing table, and every windowed
+    /// batch's values + labels + per-batch RNG streams (collected from the
+    /// workers via `StreamBatchState`). `&mut self` because a worker found
+    /// dead during collection is failed + recovered like any other op.
+    pub fn save_stream_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(why) = &self.halted {
+            bail!("stream is halted ({why}); refusing to checkpoint inconsistent state");
+        }
+        let mut states: HashMap<u64, BatchState> = HashMap::new();
+        let mut attempts = 0;
+        'gather: loop {
+            attempts += 1;
+            if attempts > self.slots.len() + 1 {
+                bail!("could not collect worker batch state for the checkpoint");
+            }
+            states.clear();
+            let workers: Vec<usize> = (0..self.slots.len())
+                .filter(|&w| self.slots[w].conn.is_some())
+                .collect();
+            for w in workers {
+                let ids: Vec<u64> =
+                    self.fifo.iter().filter(|r| r.owner == w).map(|r| r.id).collect();
+                if ids.is_empty() {
+                    continue;
+                }
+                let want: HashSet<u64> = ids.iter().copied().collect();
+                match self.request_to(w, &Message::StreamBatchState { batch_ids: ids }) {
+                    Ok(Message::StreamBatchStateReply(ss)) => {
+                        let got: HashSet<u64> = ss.iter().map(|s| s.batch_id).collect();
+                        if got != want {
+                            self.fail_worker(w, "StreamBatchState reply named wrong batches");
+                            self.recover_dead_workers()?;
+                            continue 'gather;
+                        }
+                        for st in ss {
+                            states.insert(st.batch_id, st);
+                        }
+                    }
+                    Ok(other) => {
+                        self.fail_worker(w, &format!("unexpected StreamBatchState reply {other:?}"));
+                        self.recover_dead_workers()?;
+                        continue 'gather;
+                    }
+                    Err(e) => {
+                        self.fail_worker(w, &format!("{e:#}"));
+                        self.recover_dead_workers()?;
+                        continue 'gather;
+                    }
+                }
+            }
+            break;
+        }
+        let mut batches = Vec::with_capacity(self.fifo.len());
+        for rec in &self.fifo {
+            let st = states
+                .remove(&rec.id)
+                .ok_or_else(|| anyhow!("no worker state collected for batch {}", rec.id))?;
+            if st.z.len() != rec.n {
+                bail!(
+                    "worker reported {} labels for batch {} of {} points",
+                    st.z.len(),
+                    rec.id,
+                    rec.n
+                );
+            }
+            batches.push(BatchDump {
+                id: rec.id,
+                x: rec.x.clone(),
+                z: st.z,
+                zsub: st.zsub,
+                rng: st.rng,
+            });
+        }
+        save_stream_checkpoint(
+            path,
+            &StreamSave {
+                state: &self.state,
+                rng: self.rng.state(),
+                ingested: self.ingested,
+                next_batch_id: self.next_batch_id,
+                window: self.cfg.window,
+                sweeps: self.cfg.sweeps,
+                decay: self.cfg.decay,
+                alpha: self.cfg.alpha,
+                base: &self.base,
+                win: &self.win,
+                contents: WindowContents::Distributed { batches },
+            },
+        )
+    }
+
+    // ---------- ingest ----------
+
+    /// Fold one row-major mini-batch through the cluster: route → seed →
+    /// fold → evict → sweeps (see the module docs). Worker failures are
+    /// absorbed: the dead worker's batches re-shard onto survivors and the
+    /// ingest completes (degraded mode surfaces through [`Self::health`]).
+    /// Only an unrecoverable failure — no live workers left, or a
+    /// leader-side fold invariant breaking — errors, and then the fitter
+    /// **halts**: every further ingest fails fast, because continuing
+    /// could fold statistics the workers never agreed on. Batch-validation
+    /// errors (shape, non-finite values) happen before any wire traffic
+    /// and neither halt nor degrade.
+    pub fn ingest(&mut self, batch: &[f64]) -> Result<IngestSummary> {
+        if let Some(why) = &self.halted {
+            bail!(
+                "distributed stream halted ({why}); resume from the last checkpoint \
+                 with --resume, or restart the stream leader from a snapshot"
             );
         }
         let d = self.dim();
@@ -300,18 +895,16 @@ impl DistributedFitter {
                 k: self.k(),
             });
         }
-        // Everything past this point talks to workers; any failure may
-        // leave remote window state the leader did not account for.
-        let result = self.ingest_wire(batch, n, d);
+        let result = self.ingest_elastic(batch, n, d);
         if let Err(e) = &result {
-            self.poisoned = Some(format!("{e:#}"));
+            self.halt(&format!("{e:#}"));
         }
         result
     }
 
-    /// The wire-touching body of [`Self::ingest`] (see its docs; the
-    /// wrapper owns validation and poisoning).
-    fn ingest_wire(&mut self, batch: &[f64], n: usize, d: usize) -> Result<IngestSummary> {
+    /// The worker-facing body of [`Self::ingest`] (the wrapper owns
+    /// validation and halting).
+    fn ingest_elastic(&mut self, batch: &[f64], n: usize, d: usize) -> Result<IngestSummary> {
         // 1. Exponential forgetting on the frozen base (leader-side only —
         // workers hold points and labels, never evidence accumulators).
         if self.cfg.decay < 1.0 {
@@ -322,63 +915,85 @@ impl DistributedFitter {
             sync_model_stats(&mut self.state, &self.base, &self.win);
         }
 
-        // 2. Route to the least-loaded worker (ties → lowest index).
-        // Ownership decides only *where* the batch lives; the model
-        // trajectory is ownership-independent (see the module docs).
-        let owner = (0..self.worker_points.len())
-            .min_by_key(|&i| self.worker_points[i])
-            .expect("at least one worker");
+        // 2. Route to the least-loaded live worker; on failure, kill the
+        // worker, recover its resident batches, and retry on a survivor.
         let batch_id = self.next_batch_id;
         self.next_batch_id += 1;
-        let seed = self.rng.next_u64();
-        let map_params = StepParams::map_snapshot(&self.state);
-        let reply = request(
-            &mut self.conns[owner],
-            &Message::StreamIngest { batch_id, seed, params: map_params, x: batch.to_vec() },
-        )
-        .with_context(|| format!("routing ingest batch {batch_id} to worker {owner}"))?;
-        let deltas = expect_deltas(reply, owner)?;
-        let delta = single_delta(&deltas, batch_id, owner)?;
-        self.apply_window_delta(&delta.removed, &delta.added)?;
-        self.fifo.push_back(BatchRec { id: batch_id, owner, n });
-        self.worker_points[owner] += n;
-        self.window_points += n;
-
-        // 3. Leader-decided batch-granular eviction in global FIFO order:
-        // the worker reports the batch's current grouped statistics, which
-        // move from the window accumulators into the frozen base. The FIFO
-        // record is popped only after the round-trip and the folds succeed
-        // — popping first would let a transient failure desynchronize the
-        // leader's eviction order from the workers' forever.
-        let mut evicted = 0usize;
-        while self.window_points > self.cfg.window.max(1) {
-            let rec = *self.fifo.front().expect("window overflow with an empty FIFO");
-            let reply = request(
-                &mut self.conns[rec.owner],
-                &Message::StreamEvict { batch_ids: vec![rec.id] },
-            )
-            .with_context(|| {
-                format!("evicting batch {} from worker {}", rec.id, rec.owner)
-            })?;
-            let deltas = expect_deltas(reply, rec.owner)?;
-            let delta = single_delta(&deltas, rec.id, rec.owner)?;
-            check_bundle(&delta.added, self.k(), d, "evict")?;
-            for (kk, d) in delta.added.iter().enumerate() {
-                for h in 0..2 {
-                    self.win[kk][h].try_unmerge(&d[h])?;
-                    self.base[kk][h].try_merge(&d[h])?;
+        loop {
+            let owner = self.route_owner()?;
+            let seed = self.rng.next_u64();
+            let params = StepParams::map_snapshot(&self.state);
+            let msg = Message::StreamIngest { batch_id, seed, params, x: batch.to_vec() };
+            match self.request_to(owner, &msg) {
+                Ok(reply) => match self.accept_ingest_delta(reply, owner, batch_id) {
+                    Ok(added) => {
+                        // Reclaim the wire message's point buffer as the
+                        // retained durability copy — the happy path pays
+                        // exactly one O(n·d) copy of the batch.
+                        let Message::StreamIngest { x, .. } = msg else { unreachable!() };
+                        self.fifo.push_back(BatchRec {
+                            id: batch_id,
+                            owner,
+                            n,
+                            x,
+                            stats: added,
+                        });
+                        self.slots[owner].points += n;
+                        self.window_points += n;
+                        break;
+                    }
+                    Err(e) => {
+                        self.fail_worker(owner, &format!("{e:#}"));
+                        self.recover_dead_workers()?;
+                    }
+                },
+                Err(e) => {
+                    self.fail_worker(owner, &format!("{e:#}"));
+                    self.recover_dead_workers()?;
                 }
             }
-            self.fifo.pop_front();
-            self.worker_points[rec.owner] -= rec.n;
-            self.window_points -= rec.n;
-            evicted += rec.n;
+        }
+        sync_model_stats(&mut self.state, &self.base, &self.win);
+
+        // 3. Leader-decided batch-granular eviction in global FIFO order:
+        // the owning worker reports the batch's current grouped statistics,
+        // which move from the window accumulators into the frozen base. On
+        // a failure the owner is killed, the batch re-homes to a survivor
+        // (MAP re-seeded), and the evict retries there.
+        let mut evicted = 0usize;
+        while self.window_points > self.cfg.window.max(1) {
+            let (id, owner, bn) = {
+                let rec = self.fifo.front().expect("window overflow with an empty FIFO");
+                (rec.id, rec.owner, rec.n)
+            };
+            let reply = match self.request_to(owner, &Message::StreamEvict { batch_ids: vec![id] }) {
+                Ok(reply) => reply,
+                Err(e) => {
+                    self.fail_worker(owner, &format!("{e:#}"));
+                    self.recover_dead_workers()?;
+                    continue;
+                }
+            };
+            match self.accept_evict_stats(reply, owner, id) {
+                Ok(()) => {
+                    self.fifo.pop_front();
+                    self.slots[owner].points = self.slots[owner].points.saturating_sub(bn);
+                    self.window_points -= bn;
+                    evicted += bn;
+                }
+                Err(e) => {
+                    self.fail_worker(owner, &format!("{e:#}"));
+                    self.recover_dead_workers()?;
+                }
+            }
         }
         sync_model_stats(&mut self.state, &self.base, &self.win);
 
         // 4. Restricted sweeps: leader samples steps (a)–(d), workers run
         // (e)/(f) over their window slices, leader folds the per-batch
-        // deltas in ascending global batch id order.
+        // deltas in ascending global batch id order. A worker lost
+        // mid-sweep contributes no deltas this sweep; its batches are
+        // re-sharded before the next one.
         let opts = SamplerOptions { sub_restart_every: 0, ..SamplerOptions::default() };
         for _ in 0..self.cfg.sweeps {
             if self.window_points == 0 {
@@ -387,46 +1002,25 @@ impl DistributedFitter {
             sample_weights(&mut self.state, &mut self.rng);
             sample_sub_weights(&mut self.state, &mut self.rng);
             sample_params(&mut self.state, &opts, &mut self.rng);
-            let msg = Message::StreamSweep(StepParams::snapshot(&self.state));
-            // Write to all first (overlap worker compute), then collect.
-            for conn in self.conns.iter_mut() {
-                write_message(conn, &msg)?;
-            }
-            let mut all: Vec<BatchDelta> = Vec::new();
-            for (i, conn) in self.conns.iter_mut().enumerate() {
-                match wire::read_message(conn)? {
-                    Message::StatsDelta(ds) => all.extend(ds),
-                    Message::Error(e) => bail!("worker {i}: {e}"),
-                    other => bail!("worker {i}: unexpected sweep reply {other:?}"),
-                }
-            }
-            // Canonical fold order: ascending global batch id — the fold
-            // sequence is identical no matter how batches are partitioned
-            // across workers. Every delta must name a batch the leader
-            // actually has windowed, exactly once: a ghost id (corrupt
-            // frame, confused worker) folded blindly would corrupt the
-            // accumulators with no error.
-            let resident: std::collections::HashSet<u64> =
-                self.fifo.iter().map(|r| r.id).collect();
-            all.sort_by_key(|dlt| dlt.batch_id);
-            for pair in all.windows(2) {
-                if pair[0].batch_id == pair[1].batch_id {
-                    bail!("duplicate sweep delta for batch {}", pair[0].batch_id);
-                }
-            }
-            for dlt in &all {
-                if !resident.contains(&dlt.batch_id) {
-                    bail!("sweep delta for unknown batch {}", dlt.batch_id);
-                }
-                self.apply_window_delta(&dlt.removed, &dlt.added)?;
-            }
-            if !all.is_empty() {
-                sync_model_stats(&mut self.state, &self.base, &self.win);
-            }
+            self.sweep_once()?;
         }
 
         self.ingested += n as u64;
         self.state.n_total += n;
+
+        // 5. Periodic durable checkpoint. Best-effort on the periodic
+        // path: an unwritable path must not kill a healthy stream (an
+        // explicit save_stream_checkpoint call still errors loudly).
+        self.batches_since_ckpt += 1;
+        if let Some(ck) = self.cfg.checkpoint.clone() {
+            if ck.every_batches > 0 && self.batches_since_ckpt >= ck.every_batches {
+                self.batches_since_ckpt = 0;
+                if let Err(e) = self.save_stream_checkpoint(&ck.path) {
+                    eprintln!("dpmm stream: warning: periodic checkpoint failed: {e:#}");
+                }
+            }
+        }
+
         Ok(IngestSummary {
             accepted: n,
             window: self.window_points,
@@ -435,25 +1029,132 @@ impl DistributedFitter {
         })
     }
 
-    /// `win -= removed; win += added` for one batch delta, with wire-input
-    /// validation (cluster count, family, dimensionality).
-    fn apply_window_delta(
-        &mut self,
-        removed: &[[Stats; 2]],
-        added: &[[Stats; 2]],
-    ) -> Result<()> {
-        let k = self.k();
-        let d = self.dim();
-        check_bundle(removed, k, d, "removed")?;
-        check_bundle(added, k, d, "added")?;
-        for (kk, d) in removed.iter().enumerate() {
-            for h in 0..2 {
-                self.win[kk][h].try_unmerge(&d[h])?;
+    /// One broadcast sweep: write `StreamSweep` to every live worker,
+    /// collect + validate per-worker deltas (garbage kills the sender),
+    /// fold in ascending batch-id order, then recover any casualties.
+    fn sweep_once(&mut self) -> Result<()> {
+        let msg = Message::StreamSweep(StepParams::snapshot(&self.state));
+        let alive: Vec<usize> = (0..self.slots.len())
+            .filter(|&w| self.slots[w].conn.is_some())
+            .collect();
+        let mut written = Vec::with_capacity(alive.len());
+        let mut casualties: Vec<(usize, String)> = Vec::new();
+        for &w in &alive {
+            let conn = self.slots[w].conn.as_mut().expect("alive slot");
+            match write_message(conn, &msg) {
+                Ok(()) => written.push(w),
+                Err(e) => casualties.push((w, format!("{e:#}"))),
             }
         }
-        for (kk, d) in added.iter().enumerate() {
+        let mut results: Vec<(usize, Vec<BatchDelta>)> = Vec::new();
+        for &w in &written {
+            let conn = self.slots[w].conn.as_mut().expect("alive slot");
+            match wire::read_message(conn) {
+                Ok(Message::StatsDelta(ds)) => results.push((w, ds)),
+                Ok(Message::Error(e)) => casualties.push((w, format!("worker error: {e}"))),
+                Ok(other) => casualties.push((w, format!("unexpected sweep reply {other:?}"))),
+                Err(e) => casualties.push((w, format!("{e:#}"))),
+            }
+        }
+        for (w, why) in &casualties {
+            self.fail_worker(*w, why);
+        }
+        let mut all: Vec<BatchDelta> = Vec::new();
+        for (w, ds) in results {
+            match self.validate_worker_deltas(w, &ds) {
+                Ok(()) => all.extend(ds),
+                Err(e) => self.fail_worker(w, &format!("{e:#}")),
+            }
+        }
+        // Canonical fold order: ascending global batch id — identical no
+        // matter how batches are partitioned across workers.
+        all.sort_by_key(|dlt| dlt.batch_id);
+        for dlt in &all {
+            self.apply_sweep_delta(dlt)?;
+        }
+        if !all.is_empty() {
+            sync_model_stats(&mut self.state, &self.base, &self.win);
+        }
+        self.recover_dead_workers()
+    }
+
+    /// Every delta from worker `w` must name a batch that is resident,
+    /// owned by `w`, named once, with well-formed bundles — anything else
+    /// means the worker is confused or the frame was corrupt, and folding
+    /// it blindly would corrupt the accumulators with no error.
+    fn validate_worker_deltas(&self, w: usize, ds: &[BatchDelta]) -> Result<()> {
+        let k = self.k();
+        let d = self.dim();
+        let mut seen = HashSet::with_capacity(ds.len());
+        for dlt in ds {
+            let pos = self
+                .fifo
+                .binary_search_by_key(&dlt.batch_id, |r| r.id)
+                .map_err(|_| anyhow!("sweep delta for unknown batch {}", dlt.batch_id))?;
+            if self.fifo[pos].owner != w {
+                bail!("worker {w} sent a delta for batch {} it does not own", dlt.batch_id);
+            }
+            if !seen.insert(dlt.batch_id) {
+                bail!("duplicate sweep delta for batch {}", dlt.batch_id);
+            }
+            check_bundle(&dlt.removed, k, d, &self.state.prior, "removed")?;
+            check_bundle(&dlt.added, k, d, &self.state.prior, "added")?;
+        }
+        Ok(())
+    }
+
+    /// `win -= removed; win += added`, and the same on the batch's mirror
+    /// so recovery always knows the batch's net contribution.
+    fn apply_sweep_delta(&mut self, dlt: &BatchDelta) -> Result<()> {
+        for (kk, pair) in dlt.removed.iter().enumerate() {
             for h in 0..2 {
-                self.win[kk][h].try_merge(&d[h])?;
+                self.win[kk][h].try_unmerge(&pair[h])?;
+            }
+        }
+        for (kk, pair) in dlt.added.iter().enumerate() {
+            for h in 0..2 {
+                self.win[kk][h].try_merge(&pair[h])?;
+            }
+        }
+        let pos = self
+            .fifo
+            .binary_search_by_key(&dlt.batch_id, |r| r.id)
+            .expect("delta validated as resident");
+        let rec = &mut self.fifo[pos];
+        for (kk, pair) in dlt.removed.iter().enumerate() {
+            for h in 0..2 {
+                rec.stats[kk][h].try_unmerge(&pair[h])?;
+            }
+        }
+        for (kk, pair) in dlt.added.iter().enumerate() {
+            for h in 0..2 {
+                rec.stats[kk][h].try_merge(&pair[h])?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate + fold one `StreamEvict` reply: the reported statistics
+    /// move from `win` into the frozen `base`. Nothing is folded on `Err`.
+    fn accept_evict_stats(&mut self, reply: Message, worker: usize, id: u64) -> Result<()> {
+        let deltas = match reply {
+            Message::StatsDelta(ds) => ds,
+            other => bail!("worker {worker}: expected StatsDelta, got {other:?}"),
+        };
+        let delta = match deltas.as_slice() {
+            [d] if d.batch_id == id => d,
+            _ => bail!("worker {worker}: malformed evict reply for batch {id}"),
+        };
+        // An empty bundle would pop the batch while leaving its evidence
+        // stranded in `win` — silent mass loss, so it kills the worker.
+        if delta.added.is_empty() {
+            bail!("worker {worker}: evict reply for batch {id} carries no statistics");
+        }
+        check_bundle(&delta.added, self.k(), self.dim(), &self.state.prior, "evict")?;
+        for (kk, pair) in delta.added.iter().enumerate() {
+            for h in 0..2 {
+                self.win[kk][h].try_unmerge(&pair[h])?;
+                self.base[kk][h].try_merge(&pair[h])?;
             }
         }
         Ok(())
@@ -482,29 +1183,21 @@ impl StreamFitter for DistributedFitter {
     fn ingested(&self) -> u64 {
         DistributedFitter::ingested(self)
     }
-}
-
-/// Unwrap a `StatsDelta` reply.
-fn expect_deltas(reply: Message, worker: usize) -> Result<Vec<BatchDelta>> {
-    match reply {
-        Message::StatsDelta(ds) => Ok(ds),
-        other => bail!("worker {worker}: expected StatsDelta, got {other:?}"),
-    }
-}
-
-/// Require exactly one delta, for the named batch.
-fn single_delta(deltas: &[BatchDelta], batch_id: u64, worker: usize) -> Result<BatchDelta> {
-    match deltas {
-        [d] if d.batch_id == batch_id => Ok(d.clone()),
-        [d] => bail!("worker {worker}: delta for batch {}, want {batch_id}", d.batch_id),
-        _ => bail!("worker {worker}: {} deltas for batch {batch_id}, want 1", deltas.len()),
+    fn health(&self) -> StreamHealth {
+        DistributedFitter::health(self)
     }
 }
 
 /// A wire-decoded stats bundle must be empty or exactly K entries of the
-/// model's dimensionality (`try_merge` checks families but zips over
-/// dimensions, so a corrupt width must be rejected before folding).
-fn check_bundle(bundle: &[[Stats; 2]], k: usize, d: usize, what: &str) -> Result<()> {
+/// model's family and dimensionality (`try_merge` checks families but zips
+/// over dimensions, so a corrupt width must be rejected before folding).
+fn check_bundle(
+    bundle: &[[Stats; 2]],
+    k: usize,
+    d: usize,
+    prior: &Prior,
+    what: &str,
+) -> Result<()> {
     if bundle.is_empty() {
         return Ok(());
     }
@@ -513,6 +1206,13 @@ fn check_bundle(bundle: &[[Stats; 2]], k: usize, d: usize, what: &str) -> Result
     }
     for (kk, pair) in bundle.iter().enumerate() {
         for s in pair {
+            if s.family() != prior.family() {
+                bail!(
+                    "worker `{what}` stats for cluster {kk} have family {}, want {}",
+                    s.family(),
+                    prior.family()
+                );
+            }
             if s.dim() != d {
                 bail!(
                     "worker `{what}` stats for cluster {kk} have dimension {}, want {d}",
@@ -588,6 +1288,9 @@ mod tests {
         assert!((after[1] - before[1] - 30.0).abs() < 1e-6);
         assert_eq!(f.ingested(), 60);
         assert!(f.snapshot().is_ok());
+        let h = f.health();
+        assert_eq!((h.workers_total, h.workers_alive), (2, 2));
+        assert!(!h.degraded && !h.halted);
         f.shutdown().unwrap();
     }
 
@@ -612,6 +1315,8 @@ mod tests {
         let mut f = cluster_fitter(1, 128);
         assert!(f.ingest(&[1.0, 2.0, 3.0]).is_err()); // not a multiple of d
         assert!(f.ingest(&[f64::NAN, 0.0]).is_err());
+        // Validation failures must not halt the stream.
+        assert!(!f.health().halted);
         let s = f.ingest(&[]).unwrap();
         assert_eq!(s.accepted, 0);
         let snap = seed_snapshot();
@@ -638,6 +1343,24 @@ mod tests {
             f.ingest(&blob_batch(-6.0, 20, phase)).unwrap();
         }
         // Equal batch sizes ⇒ strict alternation ⇒ a 60/60 split.
-        assert_eq!(f.worker_points, vec![60, 60]);
+        assert_eq!(f.worker_points(), vec![60, 60]);
+    }
+
+    #[test]
+    fn graceful_remove_rebalances_without_degrading() {
+        let mut f = cluster_fitter(2, 1 << 20);
+        for phase in 0..4 {
+            f.ingest(&blob_batch(-6.0, 20, phase)).unwrap();
+        }
+        let victim = f.slots[1].addr.clone();
+        f.remove_worker(&victim).unwrap();
+        let h = f.health();
+        assert_eq!((h.workers_total, h.workers_alive), (1, 1));
+        assert!(!h.degraded, "graceful leave must not report degraded");
+        assert_eq!(f.worker_points(), vec![80, 0]);
+        // The survivor keeps ingesting.
+        f.ingest(&blob_batch(6.0, 20, 9)).unwrap();
+        assert_eq!(f.window_len(), 100);
+        assert!(f.remove_worker(&f.slots[0].addr.clone()).is_err(), "last worker");
     }
 }

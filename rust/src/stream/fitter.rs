@@ -38,6 +38,10 @@
 //!   next sweep, closing the induction.
 
 use super::buffer::StreamBuffer;
+use super::checkpoint::{
+    load_stream_checkpoint, save_stream_checkpoint, StreamCheckpointCfg, StreamSave,
+    WindowContents,
+};
 use crate::backend::shard::{
     map_shards_mut, shard_step_scalar, shard_step_tiled, AssignKernel, Shard, DEFAULT_TILE,
 };
@@ -50,12 +54,40 @@ use crate::sampler::{
 use crate::serve::ModelSnapshot;
 use crate::stats::Stats;
 use crate::util::threadpool::{default_threads, parallel_map};
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
 
 /// Fixed tile width of the canonical statistics fold. Deliberately **not**
 /// configurable: the fold's FP reduction order is part of the determinism
 /// contract, so it must not vary with tuning knobs.
 const FOLD_TILE: usize = 128;
+
+/// Liveness/degradation summary of a stream fitter's execution substrate,
+/// surfaced through the serving `/stats` endpoint (serve protocol v3).
+/// Local fitters report zero workers and are never degraded; the
+/// distributed leader reports its worker fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamHealth {
+    /// Worker slots in the session (live + failed; gracefully removed
+    /// workers are excluded).
+    pub workers_total: u32,
+    /// Workers currently reachable.
+    pub workers_alive: u32,
+    /// A worker failed this session and its batches were re-sharded onto
+    /// survivors (latches until restart/resume — the failure stays
+    /// visible even after capacity recovers via joins).
+    pub degraded: bool,
+    /// Ingest is halted (unrecoverable: no live workers, or a fold
+    /// invariant broke); predictions keep serving the last snapshot.
+    pub halted: bool,
+}
+
+impl StreamHealth {
+    /// Health of a single-process fitter: no workers, never degraded.
+    pub fn local() -> StreamHealth {
+        StreamHealth { workers_total: 0, workers_alive: 0, degraded: false, halted: false }
+    }
+}
 
 /// Backend-generic streaming fitter surface, driven by the serving
 /// batcher: the local in-process [`IncrementalFitter`] and the distributed
@@ -76,6 +108,11 @@ pub trait StreamFitter: Send {
     fn snapshot(&self) -> Result<ModelSnapshot>;
     /// Points ingested over the fitter's lifetime.
     fn ingested(&self) -> u64;
+    /// Execution-substrate health (worker fleet state in distributed
+    /// mode), mirrored into the serving `/stats` reply.
+    fn health(&self) -> StreamHealth {
+        StreamHealth::local()
+    }
 }
 
 /// Streaming/incremental-fitting knobs.
@@ -101,6 +138,9 @@ pub struct StreamConfig {
     pub alpha: f64,
     /// RNG seed for the sweep streams.
     pub seed: u64,
+    /// Periodic streaming-state checkpointing (`None` = only explicit
+    /// [`IncrementalFitter::save_stream_checkpoint`] calls).
+    pub checkpoint: Option<StreamCheckpointCfg>,
 }
 
 impl Default for StreamConfig {
@@ -115,6 +155,7 @@ impl Default for StreamConfig {
             kernel: AssignKernel::from_env(),
             alpha: 10.0,
             seed: 0,
+            checkpoint: None,
         }
     }
 }
@@ -133,6 +174,21 @@ pub struct IngestSummary {
 }
 
 /// Streaming incremental fitter over a sliding window.
+///
+/// ```no_run
+/// use dpmm::serve::ModelSnapshot;
+/// use dpmm::stream::{IncrementalFitter, StreamConfig};
+///
+/// let snapshot = ModelSnapshot::load("model.snap")?;
+/// let mut fitter = IncrementalFitter::from_snapshot(
+///     &snapshot,
+///     StreamConfig { window: 65_536, sweeps: 2, ..StreamConfig::default() },
+/// )?;
+/// let summary = fitter.ingest(&[0.5, -0.25, 1.0, 2.0])?; // two 2-d points
+/// println!("window now holds {} points", summary.window);
+/// fitter.save_stream_checkpoint("stream.ckpt")?; // durable, resumable
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct IncrementalFitter {
     state: DpmmState,
     /// Frozen evidence per (cluster, sub-cluster): everything that ever
@@ -146,6 +202,7 @@ pub struct IncrementalFitter {
     rng: Xoshiro256pp,
     cfg: StreamConfig,
     ingested: u64,
+    batches_since_ckpt: usize,
 }
 
 impl IncrementalFitter {
@@ -163,7 +220,7 @@ impl IncrementalFitter {
         let k = state.k();
         let prior = state.prior.clone();
         let d = prior.dim();
-        let win = (0..k).map(|_| [prior.empty_stats(), prior.empty_stats()]).collect();
+        let win = prior.empty_bundle(k);
         Ok(IncrementalFitter {
             state,
             base,
@@ -172,7 +229,74 @@ impl IncrementalFitter {
             rng: Xoshiro256pp::seed_from_u64(cfg.seed),
             cfg,
             ingested: 0,
+            batches_since_ckpt: 0,
         })
+    }
+
+    /// Resume from a streaming checkpoint written by
+    /// [`Self::save_stream_checkpoint`]: model, accumulators, RNG lineage,
+    /// and the full window (values + labels) are restored exactly, so a
+    /// resumed fixed-seed ingest history is **bitwise-identical** to the
+    /// uninterrupted one. `window`/`sweeps`/`decay`/`alpha` come from the
+    /// checkpoint (the determinism contract requires them unchanged);
+    /// execution knobs (threads, shard size, tile, kernel) come from `cfg`
+    /// — they never affect results, only speed.
+    pub fn resume(path: impl AsRef<Path>, cfg: StreamConfig) -> Result<IncrementalFitter> {
+        let ck = load_stream_checkpoint(&path)?;
+        let WindowContents::Local { values, z, zsub } = ck.contents else {
+            bail!(
+                "checkpoint {} holds a distributed window — resume it with --workers",
+                path.as_ref().display()
+            );
+        };
+        let mut state = ck.state();
+        sync_model_stats(&mut state, &ck.base, &ck.win);
+        let d = state.prior.dim();
+        let mut buffer = StreamBuffer::new(d, ck.window.max(1));
+        buffer.push(&values, &z, &zsub);
+        Ok(IncrementalFitter {
+            state,
+            base: ck.base,
+            win: ck.win,
+            buffer,
+            rng: Xoshiro256pp::from_state(ck.rng),
+            cfg: StreamConfig {
+                window: ck.window,
+                sweeps: ck.sweeps,
+                decay: ck.decay,
+                alpha: ck.alpha,
+                ..cfg
+            },
+            ingested: ck.ingested,
+            batches_since_ckpt: 0,
+        })
+    }
+
+    /// Write a durable streaming checkpoint (atomic temp-file + rename):
+    /// model, `base`/`win` accumulators, RNG lineage, and the full window
+    /// contents. [`Self::resume`] replays it bitwise-identically.
+    pub fn save_stream_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        save_stream_checkpoint(
+            path,
+            &StreamSave {
+                state: &self.state,
+                rng: self.rng.state(),
+                ingested: self.ingested,
+                next_batch_id: 0,
+                window: self.cfg.window,
+                sweeps: self.cfg.sweeps,
+                decay: self.cfg.decay,
+                alpha: self.cfg.alpha,
+                base: &self.base,
+                win: &self.win,
+                contents: WindowContents::Local {
+                    values: self.buffer.values().to_vec(),
+                    z: self.buffer.labels().to_vec(),
+                    zsub: self.buffer.sub_labels().to_vec(),
+                },
+            },
+        )
+        .with_context(|| "writing streaming checkpoint".to_string())
     }
 
     pub fn k(&self) -> usize {
@@ -283,6 +407,21 @@ impl IncrementalFitter {
 
         self.ingested += n as u64;
         self.state.n_total += n;
+
+        // 6. Periodic durable checkpoint. Best-effort on this path: an
+        // unwritable checkpoint must not kill a healthy stream (explicit
+        // `save_stream_checkpoint` calls still error loudly).
+        self.batches_since_ckpt += 1;
+        if let Some(ck) = &self.cfg.checkpoint {
+            if ck.every_batches > 0 && self.batches_since_ckpt >= ck.every_batches {
+                self.batches_since_ckpt = 0;
+                let path = ck.path.clone();
+                if let Err(e) = self.save_stream_checkpoint(&path) {
+                    eprintln!("dpmm stream: warning: periodic checkpoint failed: {e:#}");
+                }
+            }
+        }
+
         Ok(IngestSummary {
             accepted: n,
             window: self.buffer.len(),
@@ -678,6 +817,41 @@ mod tests {
             )
             .is_err()
         );
+    }
+
+    #[test]
+    fn resume_replays_bitwise_identically() {
+        let snap = seed_snapshot();
+        let batches: Vec<Vec<f64>> = (0..6)
+            .map(|p| blob_batch(if p % 2 == 0 { -6.0 } else { 6.0 }, 20 + p, p))
+            .collect();
+        // Uninterrupted run.
+        let mut full = IncrementalFitter::from_snapshot(&snap, cfg()).unwrap();
+        for b in &batches {
+            full.ingest(b).unwrap();
+        }
+        // Interrupted run: checkpoint after 3 batches, resume, finish.
+        let mut first = IncrementalFitter::from_snapshot(&snap, cfg()).unwrap();
+        for b in &batches[..3] {
+            first.ingest(b).unwrap();
+        }
+        let p = std::env::temp_dir()
+            .join(format!("dpmm_fitter_resume_{}.ckpt", std::process::id()));
+        first.save_stream_checkpoint(&p).unwrap();
+        drop(first);
+        let mut resumed = IncrementalFitter::resume(&p, cfg()).unwrap();
+        for b in &batches[3..] {
+            resumed.ingest(b).unwrap();
+        }
+        assert_eq!(resumed.ingested(), full.ingested());
+        assert_eq!(resumed.window_len(), full.window_len());
+        assert_eq!(resumed.window_labels(), full.window_labels());
+        assert_eq!(resumed.window_sub_labels(), full.window_sub_labels());
+        for (a, b) in resumed.state().clusters.iter().zip(&full.state().clusters) {
+            assert_eq!(a.stats, b.stats, "cluster stats must be bitwise-identical");
+            assert_eq!(a.sub_stats, b.sub_stats);
+        }
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -1,55 +1,40 @@
 //! Streaming ingestion + incremental fitting: absorb new data continuously
 //! and refresh the serving model without a restart — on one machine or
-//! across a TCP worker cluster.
+//! across an elastic, fault-tolerant TCP worker cluster.
 //!
-//! The batch pipeline (coordinator + backends) fits once over a fixed data
-//! matrix; the PR-2 serve layer then scores against that frozen fit. This
-//! subsystem closes the loop for production streams:
+//! Components (the architecture map with data flow lives in
+//! `docs/ARCHITECTURE.md`; the streaming determinism and fault-tolerance
+//! contracts in `docs/DETERMINISM.md`):
 //!
-//! * [`StreamBuffer`] — a FIFO sliding window of the most recent points
-//!   with their live labels (the only points whose assignments still move);
-//! * [`IncrementalFitter`] — the single-machine fitter: folds mini-batches
-//!   into an existing [`crate::model::DpmmState`] through the grouped
-//!   `add_cols` / `remove_cols` sufficient-statistics path, seeding labels
-//!   from the serving engine's deterministic MAP assignment and then
-//!   running `sweeps` restricted-Gibbs passes over the window (reusing the
-//!   fit path's tiled/scalar shard kernels verbatim) instead of a full
-//!   refit. Optional exponential forgetting
-//!   ([`crate::stats::Stats::decay`]) down-weights old evidence for
-//!   drifting streams.
+//! * [`StreamBuffer`] — FIFO sliding window of recent points + live labels;
+//! * [`IncrementalFitter`] — single-machine streaming: MAP-seed, grouped
+//!   statistics folds, restricted sweeps over the window, optional
+//!   exponential forgetting;
 //! * [`DistributedFitter`] — the same contract sharded across `dpmm
-//!   worker` processes: the leader routes each mini-batch to the
-//!   least-loaded worker's window slice, workers MAP-seed and resweep
-//!   locally, and only O(K·d²) grouped statistics deltas return per sweep
-//!   (see [`distributed`] for the design and the determinism argument).
-//!   `dpmm stream --workers=host:port,...` turns one serving endpoint
-//!   into a horizontally scalable ingest+serve cluster.
+//!   worker` processes (`dpmm stream --workers=...`), with worker-failure
+//!   recovery, elastic join/leave, and checkpointed leader durability;
+//! * [`checkpoint`] — the `DPMMCKPT` v3 streaming-state section both
+//!   fitters save and `--resume` replays bitwise-identically.
 //!
 //! Both fitters implement [`StreamFitter`], the surface the serving
-//! micro-batcher drives: it applies queued ingests and **hot-swaps** a
-//! freshly re-planned [`crate::serve::ModelSnapshot`] between fused
-//! scoring passes (see [`crate::serve::server`] for the consistency
-//! guarantees). The serving wire protocol carries ingest via
-//! [`crate::serve::wire::ServeMessage::Ingest`], and
-//! `python/dpmmwrapper.py`'s `DpmmClient` speaks the same verb — the
-//! client wire is identical in local and cluster mode.
+//! micro-batcher drives ([`crate::serve`] hot-swaps a re-planned
+//! [`crate::serve::ModelSnapshot`] between fused scoring passes and
+//! surfaces [`StreamHealth`] through `/stats`). The client-facing wire is
+//! identical in local and cluster mode; both protocols are specified in
+//! `docs/WIRE_PROTOCOLS.md`.
 //!
-//! Benchmarks: `cargo bench --bench stream_ingest` quantifies incremental
-//! ingest against a full refit at matched NMI (`BENCH_stream.json`), and
-//! `cargo bench --bench stream_distributed` measures 1-vs-2-vs-4-worker
-//! ingest throughput (`BENCH_stream_distributed.json`); EXPERIMENTS.md
-//! §Streaming and §Distributed streaming have the protocols.
-//!
-//! The whole path is deterministic — bitwise-identical labels and
-//! statistics across thread counts, assignment kernels, *and worker
-//! counts* — see the contracts in [`fitter`]'s and [`distributed`]'s docs,
-//! pinned by `tests/prop_kernel_equiv.rs`, `tests/prop_stats_roundtrip.rs`,
-//! and `tests/integration_stream_distributed.rs`.
+//! Benchmarks: `stream_ingest` (incremental vs refit), `stream_distributed`
+//! (worker scaling), `stream_recovery` (failure/recovery latency); see
+//! EXPERIMENTS.md. Contracts are pinned by `tests/prop_kernel_equiv.rs`,
+//! `tests/integration_stream_distributed.rs`, and
+//! `tests/integration_stream_recovery.rs`.
 
 pub mod buffer;
+pub mod checkpoint;
 pub mod distributed;
 pub mod fitter;
 
 pub use buffer::StreamBuffer;
+pub use checkpoint::{load_stream_checkpoint, StreamCheckpoint, StreamCheckpointCfg};
 pub use distributed::{DistributedFitter, DistributedStreamConfig};
-pub use fitter::{IncrementalFitter, IngestSummary, StreamConfig, StreamFitter};
+pub use fitter::{IncrementalFitter, IngestSummary, StreamConfig, StreamFitter, StreamHealth};

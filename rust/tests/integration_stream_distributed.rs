@@ -10,9 +10,12 @@
 //!   3 workers and across the tiled vs scalar assignment kernels — the
 //!   distributed extension of `prop_kernel_equiv.rs`'s thread/kernel
 //!   contract;
-//! * worker death mid-ingest surfaces as a typed error while the server
-//!   keeps serving the last published generation (the distributed mirror
-//!   of `wire_robustness.rs`'s local guarantees).
+//! * worker death mid-ingest is **absorbed** when survivors remain (the
+//!   dead worker's batches re-shard, ingest completes, `/stats` reports
+//!   degraded mode), and only losing the *last* worker halts ingest —
+//!   while the server keeps serving the last published generation either
+//!   way. Deeper failure/recovery/resume scenarios live in
+//!   `integration_stream_recovery.rs`.
 
 use dpmm::backend::distributed::wire::{read_message, write_message, Message};
 use dpmm::backend::distributed::worker::spawn_local;
@@ -287,10 +290,12 @@ fn spawn_dying_worker() -> String {
 }
 
 #[test]
-fn worker_death_mid_ingest_leaves_last_generation_serving() {
+fn worker_death_mid_ingest_is_absorbed_by_survivors() {
     let snap = seed_snapshot(2);
     // Worker 0 (the least-loaded tie-break target) dies on first ingest;
-    // worker 1 is healthy but never reached for batch 0.
+    // worker 1 is healthy — the leader must absorb the failure, re-route,
+    // and complete the ingest instead of poisoning itself (PR-5 elastic
+    // semantics; pre-PR-5 this halted the stream).
     let workers = vec![spawn_dying_worker(), spawn_local().unwrap()];
     let fitter = DistributedFitter::from_snapshot(
         &snap,
@@ -310,26 +315,70 @@ fn worker_death_mid_ingest_leaves_last_generation_serving() {
     let addr = server.addr().to_string();
     let mut client = DpmmClient::connect(&addr).unwrap();
 
-    // The ingest fails with a typed error (never a hang or a dead server).
+    // Pre-failure /stats: full fleet, clean health (serve proto v3).
+    let stats = client.stats().unwrap();
+    assert_eq!((stats.workers_total, stats.workers_alive), (2, 2));
+    assert!(!stats.degraded && !stats.halted);
+
+    // The ingest SUCCEEDS: worker 0 dies, the batch re-routes to worker 1.
+    let receipt = client.ingest(&[-8.0, 0.1, 8.0, -0.1], 2).unwrap();
+    assert_eq!(receipt.accepted, 2);
+    assert_eq!(receipt.generation, 2, "recovered ingest must publish");
+
+    // Degraded mode is a typed /stats surface, not a dead stream.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.generation, 2);
+    assert_eq!(stats.ingested, 2);
+    assert_eq!(stats.ingest_pending, 0);
+    assert_eq!((stats.workers_total, stats.workers_alive), (2, 1));
+    assert!(stats.degraded, "a worker failure must surface as degraded");
+    assert!(!stats.halted, "survivors remain — ingest must not halt");
+
+    // Ingest and predict keep working on the survivor.
+    let receipt = client.ingest(&[0.0, 0.0], 2).unwrap();
+    assert_eq!(receipt.generation, 3);
+    let pred = client.predict(&[-8.0, 0.0, 0.0, 0.0, 8.0, 0.0], 2).unwrap();
+    assert_eq!(pred.labels.len(), 3);
+
+    server.stop().unwrap();
+}
+
+#[test]
+fn losing_the_last_worker_halts_ingest_but_not_serving() {
+    let snap = seed_snapshot(2);
+    let fitter = DistributedFitter::from_snapshot(
+        &snap,
+        DistributedStreamConfig {
+            workers: vec![spawn_dying_worker()],
+            window: 1024,
+            sweeps: 1,
+            alpha: 4.0,
+            seed: 7,
+            ..DistributedStreamConfig::default()
+        },
+    )
+    .unwrap();
+    let engine = ScoringEngine::new(&snap, EngineConfig::default()).unwrap();
+    let server =
+        spawn_streaming(engine, fitter, "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = DpmmClient::connect(&addr).unwrap();
+
+    // No survivors → typed error, never a hang or a dead server.
     let err = client.ingest(&[-8.0, 0.1, 8.0, -0.1], 2).unwrap_err();
     assert!(
         err.to_string().contains("ingest failed"),
         "expected an ingest failure surface, got: {err}"
     );
-
-    // The server still serves the last published generation.
     let stats = client.stats().unwrap();
     assert_eq!(stats.generation, 1, "failed distributed ingest must not publish");
-    assert_eq!(stats.ingested, 0);
     assert_eq!(stats.ingest_pending, 0, "failed batch must not linger as lag");
-    let pred = client.predict(&[-8.0, 0.0, 0.0, 0.0, 8.0, 0.0], 2).unwrap();
-    assert_eq!(pred.labels.len(), 3);
+    assert_eq!((stats.workers_total, stats.workers_alive), (1, 0));
+    assert!(stats.degraded && stats.halted);
 
-    // The leader poisons itself after the mid-protocol failure: further
-    // ingests fail fast with the halt reason (resuming could fold stats
-    // the workers never agreed on) while the serving path stays healthy.
+    // Halted ingest fails fast; serving continues from the last snapshot.
     let err = client.ingest(&[0.0, 0.0], 2).unwrap_err();
-    assert!(err.to_string().contains("halted"), "expected a poisoned-fitter error: {err}");
+    assert!(err.to_string().contains("halted"), "expected a halted-fitter error: {err}");
     assert!(client.predict(&[0.0, 0.0], 2).is_ok());
     assert_eq!(client.stats().unwrap().generation, 1);
 

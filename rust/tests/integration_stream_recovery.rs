@@ -1,0 +1,279 @@
+//! Elastic fault tolerance + leader durability — the PR-5 acceptance
+//! suite for `dpmm stream`:
+//!
+//! * **kill-one-of-three mid-stream**: a worker dies partway through a
+//!   multi-batch ingest history; ingest continues without poisoning, the
+//!   fitter reports degraded mode, and a rerun with the same seed and the
+//!   same failure schedule produces **bitwise-identical** statistics (the
+//!   documented determinism contract under churn);
+//! * **checkpoint/resume**: `--resume` from a mid-session streaming
+//!   checkpoint replays to a bitwise-identical leader state, across 1/2/3
+//!   workers × tiled/scalar kernels (ownership and kernels are
+//!   trajectory-neutral);
+//! * **elastic join**: a worker joining a live session rebalances window
+//!   slices (labels + RNG streams move verbatim) and provably does NOT
+//!   fork the trajectory — the final stats bit-match a never-joined run;
+//! * **file-format forward-compat**: v3 streaming checkpoints serve
+//!   through `ModelSnapshot::from_checkpoint_file`, v1 fit checkpoints
+//!   keep loading everywhere they used to, and `Checkpoint::load` rejects
+//!   v3 with a typed, actionable error.
+//!
+//! The contracts these tests pin are specified in docs/DETERMINISM.md.
+
+use dpmm::backend::distributed::worker::{spawn_local, spawn_local_dying};
+use dpmm::backend::shard::AssignKernel;
+use dpmm::coordinator::Checkpoint;
+use dpmm::model::DpmmState;
+use dpmm::prelude::*;
+use dpmm::serve::EngineConfig;
+use dpmm::stats::{NiwPrior, Prior, Stats};
+use dpmm::stream::{
+    DistributedFitter, DistributedStreamConfig, IncrementalFitter, StreamConfig, StreamHealth,
+};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dpmm_recovery_{name}_{}.bin", std::process::id()))
+}
+
+/// Seed snapshot from poured statistics (no MCMC) — three well-separated
+/// blobs, mirroring `integration_stream_distributed.rs`.
+fn seed_snapshot(d: usize) -> ModelSnapshot {
+    let prior = Prior::Niw(NiwPrior::weak(d));
+    let mut rng = Xoshiro256pp::seed_from_u64(123);
+    let mut state = DpmmState::new(4.0, prior.clone(), 3, 300, &mut rng);
+    for (k, center) in [-8.0f64, 0.0, 8.0].into_iter().enumerate() {
+        let mut s = prior.empty_stats();
+        for i in 0..100 {
+            let x: Vec<f64> = (0..d)
+                .map(|j| center + 0.15 * ((i * (j + 3) + k) % 13) as f64 - 0.9)
+                .collect();
+            s.add(&x);
+        }
+        state.clusters[k].stats = s;
+    }
+    ModelSnapshot::from_state(&state).unwrap()
+}
+
+/// Deterministic blob-hopping mini-batches (`count` batches × `n` points).
+fn stream_batches(d: usize, count: usize, n: usize) -> Vec<Vec<f64>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(77);
+    let centers = [-8.0f64, 0.0, 8.0];
+    (0..count)
+        .map(|_| {
+            let mut batch = Vec::with_capacity(n * d);
+            for _ in 0..n {
+                let c = centers[rng.next_range(3)];
+                for _ in 0..d {
+                    batch.push(c + (rng.next_f64() - 0.5) * 1.4);
+                }
+            }
+            batch
+        })
+        .collect()
+}
+
+/// Bitwise fingerprint of the model statistics.
+fn state_stats(state: &DpmmState) -> Vec<(Stats, [Stats; 2])> {
+    state.clusters.iter().map(|c| (c.stats.clone(), c.sub_stats.clone())).collect()
+}
+
+fn dist_cfg(workers: Vec<String>, kernel: AssignKernel) -> DistributedStreamConfig {
+    DistributedStreamConfig {
+        workers,
+        worker_threads: 2,
+        window: 1 << 16,
+        sweeps: 1,
+        alpha: 4.0,
+        seed: 2024,
+        kernel: Some(kernel),
+        ..DistributedStreamConfig::default()
+    }
+}
+
+type Fingerprint = (Vec<f64>, Vec<(Stats, [Stats; 2])>, u64, usize);
+
+fn fingerprint(f: &DistributedFitter) -> Fingerprint {
+    (f.counts(), state_stats(f.state()), f.ingested(), f.window_len())
+}
+
+#[test]
+fn kill_one_of_three_mid_stream_ingest_continues_and_is_schedule_deterministic() {
+    let d = 2;
+    let snap = seed_snapshot(d);
+    let batches = stream_batches(d, 6, 60);
+    // The flaky worker survives StreamInit + a few verbs, then dies while
+    // it owns resident batches — exercising mirror retirement + re-shard,
+    // not just route-retry.
+    let run = || -> (Fingerprint, StreamHealth) {
+        let workers = vec![
+            spawn_local_dying(4).unwrap(),
+            spawn_local().unwrap(),
+            spawn_local().unwrap(),
+        ];
+        let mut f =
+            DistributedFitter::from_snapshot(&snap, dist_cfg(workers, AssignKernel::Tiled))
+                .unwrap();
+        for b in &batches {
+            // Every ingest succeeds — the kill is absorbed, never surfaced.
+            f.ingest(b).unwrap();
+        }
+        (fingerprint(&f), f.health())
+    };
+    let (fp_a, health) = run();
+    assert_eq!(fp_a.2, 6 * 60, "all points ingested despite the kill");
+    assert_eq!(fp_a.3, 6 * 60, "window intact (no eviction at this capacity)");
+    assert_eq!((health.workers_total, health.workers_alive), (3, 2));
+    assert!(health.degraded, "the kill must surface as degraded");
+    assert!(!health.halted);
+    // Total mass is conserved through mirror retirement + re-ingest.
+    let total: f64 = fp_a.0.iter().sum();
+    assert!((total - 300.0 - 360.0).abs() < 1e-6, "total mass {total}");
+    // Fixed seed + same failure schedule ⇒ bitwise-identical statistics.
+    let (fp_b, _) = run();
+    assert_eq!(fp_a, fp_b, "same failure schedule must replay bitwise-identically");
+}
+
+#[test]
+fn resume_from_checkpoint_is_bitwise_identical_across_workers_and_kernels() {
+    let d = 3;
+    let snap = seed_snapshot(d);
+    let batches = stream_batches(d, 6, 50);
+    // Reference: one uninterrupted 2-worker run.
+    let reference = {
+        let workers: Vec<String> = (0..2).map(|_| spawn_local().unwrap()).collect();
+        let mut f =
+            DistributedFitter::from_snapshot(&snap, dist_cfg(workers, AssignKernel::Tiled))
+                .unwrap();
+        for b in &batches {
+            f.ingest(b).unwrap();
+        }
+        fingerprint(&f)
+    };
+    // Interrupted runs: 3 batches → checkpoint → resume with a *different*
+    // worker count and kernel → remaining 3 batches. Ownership and kernel
+    // are trajectory-neutral, so every variant must bit-match.
+    for (restart_workers, kernel) in
+        [(1usize, AssignKernel::Tiled), (3, AssignKernel::Tiled), (2, AssignKernel::Scalar)]
+    {
+        let workers: Vec<String> = (0..2).map(|_| spawn_local().unwrap()).collect();
+        let mut first =
+            DistributedFitter::from_snapshot(&snap, dist_cfg(workers, AssignKernel::Tiled))
+                .unwrap();
+        for b in &batches[..3] {
+            first.ingest(b).unwrap();
+        }
+        let ckpt = tmp(&format!("resume_{restart_workers}_{kernel:?}"));
+        first.save_stream_checkpoint(&ckpt).unwrap();
+        first.shutdown().unwrap();
+        drop(first);
+        let new_workers: Vec<String> =
+            (0..restart_workers).map(|_| spawn_local().unwrap()).collect();
+        let mut resumed =
+            DistributedFitter::resume(&ckpt, dist_cfg(new_workers, kernel)).unwrap();
+        for b in &batches[3..] {
+            resumed.ingest(b).unwrap();
+        }
+        assert_eq!(
+            fingerprint(&resumed),
+            reference,
+            "resume diverged at workers={restart_workers} kernel={kernel:?}"
+        );
+        std::fs::remove_file(&ckpt).ok();
+    }
+}
+
+#[test]
+fn join_worker_rebalances_without_forking_the_trajectory() {
+    let d = 2;
+    let snap = seed_snapshot(d);
+    let batches = stream_batches(d, 6, 100);
+    // Reference: two workers for the whole history.
+    let reference = {
+        let workers: Vec<String> = (0..2).map(|_| spawn_local().unwrap()).collect();
+        let mut f =
+            DistributedFitter::from_snapshot(&snap, dist_cfg(workers, AssignKernel::Tiled))
+                .unwrap();
+        for b in &batches {
+            f.ingest(b).unwrap();
+        }
+        fingerprint(&f)
+    };
+    // Elastic: third worker joins after batch 3; batches rebalance onto it
+    // with labels + RNG streams intact.
+    let workers: Vec<String> = (0..2).map(|_| spawn_local().unwrap()).collect();
+    let mut f = DistributedFitter::from_snapshot(&snap, dist_cfg(workers, AssignKernel::Tiled))
+        .unwrap();
+    for b in &batches[..3] {
+        f.ingest(b).unwrap();
+    }
+    f.join_worker(&spawn_local().unwrap()).unwrap();
+    let points = f.worker_points();
+    assert_eq!(points.len(), 3);
+    assert!(points[2] > 0, "join must rebalance load onto the newcomer: {points:?}");
+    assert_eq!(points.iter().sum::<usize>(), 300, "rebalance must conserve the window");
+    for b in &batches[3..] {
+        f.ingest(b).unwrap();
+    }
+    let health = f.health();
+    assert_eq!((health.workers_total, health.workers_alive), (3, 3));
+    assert!(!health.degraded, "a planned join must not report degraded");
+    assert_eq!(
+        fingerprint(&f),
+        reference,
+        "a planned join must not change a single bit of the trajectory"
+    );
+}
+
+#[test]
+fn stream_checkpoints_serve_directly_and_fit_loader_rejects_them() {
+    let d = 2;
+    let snap = seed_snapshot(d);
+    let mut fitter = IncrementalFitter::from_snapshot(
+        &snap,
+        StreamConfig { window: 4096, sweeps: 1, threads: 1, seed: 5, ..StreamConfig::default() },
+    )
+    .unwrap();
+    for b in stream_batches(d, 3, 40) {
+        fitter.ingest(&b).unwrap();
+    }
+    let path = tmp("serve_from_v3");
+    fitter.save_stream_checkpoint(&path).unwrap();
+
+    // Serve path: the v3 model section loads like a v1 checkpoint.
+    let via_ckpt = ModelSnapshot::from_checkpoint_file(&path).unwrap();
+    assert_eq!(via_ckpt.k(), 3);
+    let engine = ScoringEngine::new(&via_ckpt, EngineConfig::default()).unwrap();
+    let scored = engine.score(&[-8.0, 0.0, 8.0, 0.0], false).unwrap();
+    assert_eq!(scored.labels.len(), 2);
+
+    // Fit-resume path: typed, actionable rejection (not "unsupported").
+    let mut rng = Xoshiro256pp::seed_from_u64(0);
+    let err = Checkpoint::load(&path, &mut rng).unwrap_err();
+    assert!(err.to_string().contains("streaming checkpoint"), "{err}");
+    assert!(err.to_string().contains("--resume"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn pre_v3_fit_checkpoints_still_load_for_fit_and_serve() {
+    // A v1 checkpoint written by the (unchanged) fit path must keep
+    // loading through both loaders — the forward-compat guarantee.
+    let prior = Prior::Niw(NiwPrior::weak(2));
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let mut state = DpmmState::new(2.0, prior.clone(), 2, 6, &mut rng);
+    for (ci, c) in state.clusters.iter_mut().enumerate() {
+        let mut s = prior.empty_stats();
+        s.add(&[ci as f64 * 6.0, 0.5]);
+        s.add(&[ci as f64 * 6.0 + 0.25, -0.5]);
+        s.add(&[ci as f64 * 6.0 - 0.25, 0.0]);
+        c.stats = s;
+    }
+    let ckpt = Checkpoint { state, iter: 11, labels: vec![0, 0, 0, 1, 1, 1] };
+    let path = tmp("v1_compat");
+    ckpt.save(&path).unwrap();
+    let back = Checkpoint::load(&path, &mut rng).unwrap();
+    assert_eq!(back.iter, 11);
+    let snap = ModelSnapshot::from_checkpoint_file(&path).unwrap();
+    assert_eq!(snap.k(), 2);
+    std::fs::remove_file(&path).ok();
+}

@@ -50,6 +50,10 @@ fn serve_corpus() -> Vec<Vec<u8>> {
             generation: 7,
             ingested: 8,
             ingest_pending: 9,
+            workers_total: 3,
+            workers_alive: 2,
+            degraded: 1,
+            halted: 0,
         },
         ServeMessage::Ingest { n: 2, d: 2, x: vec![0.25; 4] },
         ServeMessage::IngestReply { accepted: 2, generation: 3, window: 4 },
@@ -111,6 +115,27 @@ fn distributed_corpus() -> Vec<Vec<u8>> {
             removed: vec![[s.clone(), prior.empty_stats()]],
             added: vec![[prior.empty_stats(), s.clone()]],
         }]),
+        // v3 elastic-membership / durability verbs: the same corruption
+        // classes (truncation at every byte, bit flips, trailing garbage)
+        // must hold for them too.
+        Message::StreamJoin { d: 2, prior: prior.clone(), threads: 1, kernel: 2 },
+        Message::StreamBatchState { batch_ids: vec![] },
+        Message::StreamBatchState { batch_ids: vec![3, 4] },
+        Message::StreamRebalance { batch_ids: vec![7] },
+        Message::StreamBatchStateReply(vec![dpmm::backend::distributed::wire::BatchState {
+            batch_id: 6,
+            z: vec![0, 1, 1],
+            zsub: vec![1, 0, 0],
+            rng: [1, 2, 3, 4],
+        }]),
+        Message::StreamRestore {
+            batch_id: 12,
+            k: 2,
+            x: vec![0.25; 6],
+            z: vec![1, 0, 1],
+            zsub: vec![0, 1, 0],
+            rng: [5, 6, 7, 8],
+        },
     ]
     .into_iter()
     .map(|m| m.encode())

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Offline markdown link check over README.md and docs/.
+
+Validates every repo-relative link target exists, and that `#anchor`
+fragments resolve to a real heading in the target markdown file.
+External links (http/https/mailto) are skipped — CI runs this offline,
+and dead-external detection belongs to a different (flaky) class of
+check. Exit code 1 + a per-link report on any failure.
+
+Run from anywhere: `python tools/check_markdown_links.py`.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+# Inline links only — [text](target). Reference-style links are unused in
+# this repo; add a second pass here if that changes.
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"^(```|~~~)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading slug (good enough for our ASCII headings)."""
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_]", "", h)
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def visible_lines(path: Path):
+    """Markdown lines outside fenced code blocks."""
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield line
+
+
+def headings(path: Path) -> set:
+    return {
+        slugify(line.lstrip("#"))
+        for line in visible_lines(path)
+        if line.startswith("#")
+    }
+
+
+def check_file(md: Path) -> list:
+    errors = []
+    for line in visible_lines(md):
+        for target in LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = md if not path_part else (md.parent / path_part).resolve()
+            rel = md.relative_to(ROOT)
+            if not dest.exists():
+                errors.append(f"{rel}: broken link target: {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if anchor not in headings(dest):
+                    errors.append(
+                        f"{rel}: anchor #{anchor} not found in {path_part or rel}"
+                    )
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    missing = [f for f in files if not f.exists()]
+    if missing:
+        print(f"link check: expected files missing: {missing}", file=sys.stderr)
+        return 1
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"\nlink check: {len(errors)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"link check: OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -54,6 +54,7 @@ import socket
 import struct
 import subprocess
 import tempfile
+import time
 
 import numpy as np
 
@@ -151,7 +152,7 @@ def fit(
 # All integers little-endian; point payloads are raw float64 runs.
 # ---------------------------------------------------------------------------
 
-SERVE_PROTO_VERSION = 3  # v3: stats layout grew the cluster-health fields
+SERVE_PROTO_VERSION = 4  # v4: stats layout grew the per-worker liveness counts
 FLAG_LOG_PROBS = 1
 
 TAG_PREDICT = 1
@@ -279,7 +280,7 @@ def _decode_stats(payload):
         raise ServerError(_decode_error(body))
     if tag != TAG_STATS_REPLY:
         raise ProtocolError(f"unexpected reply tag {tag} (want StatsReply)")
-    head, _ = _take(body, 82, "stats reply")
+    head, _ = _take(body, 94, "stats reply")
     (
         requests,
         points,
@@ -292,9 +293,12 @@ def _decode_stats(payload):
         ingest_pending,
         workers_total,
         workers_alive,
+        workers_healthy,
+        workers_suspect,
+        workers_dead,
         degraded,
         halted,
-    ) = struct.unpack("<QQQdddQQQIIBB", head)
+    ) = struct.unpack("<QQQdddQQQIIIIIBB", head)
     return {
         "requests": requests,
         "points": points,
@@ -307,6 +311,9 @@ def _decode_stats(payload):
         "ingest_pending": ingest_pending,
         "workers_total": workers_total,
         "workers_alive": workers_alive,
+        "workers_healthy": workers_healthy,
+        "workers_suspect": workers_suspect,
+        "workers_dead": workers_dead,
         "degraded": bool(degraded),
         "halted": bool(halted),
     }
@@ -341,9 +348,39 @@ class DpmmClient:
     throughput. Usable as a context manager.
     """
 
-    def __init__(self, addr, timeout=300.0):
+    #: Connect errors worth retrying — the endpoint exists but is briefly
+    #: unreachable (starting up, connection backlog, TCP reset). Anything
+    #: else (bad hostname, unroutable address) is raised immediately:
+    #: retrying cannot fix it. Mirrors the transient/fatal split in
+    #: ``rust/src/backend/distributed/wire.rs``.
+    _TRANSIENT_CONNECT = (ConnectionError, socket.timeout, TimeoutError)
+
+    def __init__(self, addr, timeout=300.0, connect_retries=3, retry_base=0.05,
+                 retry_max=2.0):
+        """Connect to ``host:port``, retrying transient connect failures.
+
+        Args:
+          addr: ``host:port`` of a ``dpmm serve`` / ``dpmm stream`` endpoint.
+          timeout: socket timeout in seconds for connect and each reply.
+          connect_retries: total connect attempts (>= 1) before giving up.
+          retry_base: backoff delay in seconds before the first retry;
+            doubles per attempt (bounded exponential backoff).
+          retry_max: backoff delay cap in seconds.
+        """
         host, _, port = addr.rpartition(":")
-        self._sock = socket.create_connection((host, int(port)), timeout=timeout)
+        attempts = max(1, int(connect_retries))
+        delay = max(0.0, float(retry_base))
+        for attempt in range(1, attempts + 1):
+            try:
+                self._sock = socket.create_connection(
+                    (host, int(port)), timeout=timeout
+                )
+                break
+            except self._TRANSIENT_CONNECT:
+                if attempt == attempts:
+                    raise
+                time.sleep(delay)
+                delay = min(delay * 2 if delay > 0 else retry_base, retry_max)
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
 
     # -- plumbing ----------------------------------------------------------
@@ -411,7 +448,14 @@ class DpmmClient:
           lifetime; ``ingest_pending`` — ingest lag), and cluster-health
           keys (``workers_total``, ``workers_alive``, ``degraded``,
           ``halted``; see :meth:`ingest` for their semantics — all zero /
-          False on local-mode and plain-serve endpoints).
+          False on local-mode and plain-serve endpoints). When the leader
+          runs with heartbeat supervision (``--heartbeat_ms``), the
+          per-worker liveness counts are live too: ``workers_healthy``
+          (answering probes), ``workers_suspect`` (missing probes but
+          still inside the grace period), and ``workers_dead`` (rated
+          dead or already evicted). With supervision off,
+          ``workers_healthy`` equals ``workers_alive`` and
+          ``workers_suspect`` is 0.
         """
         return _decode_stats(self._roundtrip(_encode_simple(TAG_STATS)))
 

@@ -120,7 +120,7 @@ class TestInfoAndStats:
 
     def test_stats_roundtrip(self):
         body = struct.pack(
-            "<BBQQQdddQQQIIBB",
+            "<BBQQQdddQQQIIIIIBB",
             w.SERVE_PROTO_VERSION,
             w.TAG_STATS_REPLY,
             10,
@@ -134,6 +134,9 @@ class TestInfoAndStats:
             50,
             3,
             2,
+            2,
+            0,
+            1,
             1,
             0,
         )
@@ -149,15 +152,18 @@ class TestInfoAndStats:
         assert stats["ingest_pending"] == 50
         assert stats["workers_total"] == 3
         assert stats["workers_alive"] == 2
+        assert stats["workers_healthy"] == 2
+        assert stats["workers_suspect"] == 0
+        assert stats["workers_dead"] == 1
         assert stats["degraded"] is True
         assert stats["halted"] is False
 
     def test_stats_truncated_raises(self):
         body = struct.pack(
-            "<BBQQQdddQQQ",  # the v2 72-byte layout is now a truncation
+            "<BBQQQdddQQQII",  # the v3 82-byte layout is now a truncation
             w.SERVE_PROTO_VERSION,
             w.TAG_STATS_REPLY,
-            1, 2, 3, 4.0, 5.0, 6.0, 7, 8, 9,
+            1, 2, 3, 4.0, 5.0, 6.0, 7, 8, 9, 10, 11,
         )
         with pytest.raises(w.ProtocolError, match="truncated"):
             w._decode_stats(body)

@@ -48,6 +48,9 @@ class MockStreamServer:
         error_message=None,
         workers_total=0,
         workers_alive=None,
+        workers_healthy=None,
+        workers_suspect=0,
+        workers_dead=None,
         degraded=False,
         halted=False,
     ):
@@ -61,6 +64,17 @@ class MockStreamServer:
         self.error_message = error_message or self.ERROR
         self.workers_total = workers_total
         self.workers_alive = workers_total if workers_alive is None else workers_alive
+        # Liveness defaults mirror the Rust leader with supervision off:
+        # healthy == alive, suspect == 0, dead == total - alive.
+        self.workers_healthy = (
+            self.workers_alive if workers_healthy is None else workers_healthy
+        )
+        self.workers_suspect = workers_suspect
+        self.workers_dead = (
+            self.workers_total - self.workers_alive
+            if workers_dead is None
+            else workers_dead
+        )
         self.degraded = degraded
         self.halted = halted
         self._thread = threading.Thread(target=self._serve, daemon=True)
@@ -105,7 +119,7 @@ class MockStreamServer:
             )
         if tag == w.TAG_STATS:
             return struct.pack(
-                "<BBQQQdddQQQIIBB",
+                "<BBQQQdddQQQIIIIIBB",
                 w.SERVE_PROTO_VERSION,
                 w.TAG_STATS_REPLY,
                 len(self.ingests),
@@ -119,6 +133,9 @@ class MockStreamServer:
                 0,
                 self.workers_total,
                 self.workers_alive,
+                self.workers_healthy,
+                self.workers_suspect,
+                self.workers_dead,
                 int(self.degraded),
                 int(self.halted),
             )
@@ -238,9 +255,10 @@ class TestClusterMode:
     protocol; the client-facing wire is byte-identical to the local mode.
     These tests pin what a client *can* observe about a cluster: the
     aggregate window spanning all worker slices, worker failures absorbed
-    into degraded-mode `/stats` fields (serve protocol v3), and the
-    halted state when no workers remain — while the endpoint keeps
-    serving predictions from the last published generation throughout.
+    into degraded-mode `/stats` fields (serve protocol v4, including the
+    heartbeat supervisor's per-worker liveness counts), and the halted
+    state when no workers remain — while the endpoint keeps serving
+    predictions from the last published generation throughout.
     """
 
     def test_client_wire_is_topology_agnostic(self):
@@ -258,8 +276,36 @@ class TestClusterMode:
                 assert stats["generation"] == 4
                 assert stats["workers_total"] == 2
                 assert stats["workers_alive"] == 2
+                assert stats["workers_healthy"] == 2
+                assert stats["workers_suspect"] == 0
+                assert stats["workers_dead"] == 0
                 assert stats["degraded"] is False
                 assert stats["halted"] is False
+        finally:
+            server.close()
+
+    def test_supervisor_liveness_counts_surface_in_stats(self):
+        # A leader running with --heartbeat_ms rates each worker Healthy /
+        # Suspect / Dead; /stats (serve protocol v4) carries the counts so
+        # clients can see a failing-but-not-yet-evicted worker (suspect)
+        # before degraded flips.
+        server = MockStreamServer(
+            workers_total=3,
+            workers_alive=3,
+            workers_healthy=2,
+            workers_suspect=1,
+            workers_dead=0,
+        )
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                stats = client.stats()
+                assert stats["workers_total"] == 3
+                assert stats["workers_alive"] == 3
+                assert stats["workers_healthy"] == 2
+                assert stats["workers_suspect"] == 1
+                assert stats["workers_dead"] == 0
+                # A suspect worker is not yet a failure.
+                assert stats["degraded"] is False
         finally:
             server.close()
 
@@ -281,6 +327,21 @@ class TestClusterMode:
                 assert stats["halted"] is False
                 # Ingest keeps publishing on the survivors.
                 assert client.ingest(np.zeros((5, 2)))["generation"] == 3
+        finally:
+            server.close()
+
+    def test_dead_worker_counts_alongside_degraded_mode(self):
+        # After an eviction the dead count covers both heartbeat-rated and
+        # already-failed workers.
+        server = MockStreamServer(
+            workers_total=3, workers_alive=2, degraded=True
+        )
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                stats = client.stats()
+                assert stats["workers_healthy"] == 2
+                assert stats["workers_dead"] == 1
+                assert stats["degraded"] is True
         finally:
             server.close()
 
@@ -312,3 +373,81 @@ class TestClusterMode:
                 assert stats["halted"] is True
         finally:
             server.close()
+
+
+class TestConnectRetry:
+    """Transient-connect retry/backoff in `DpmmClient.__init__`.
+
+    Mirrors the leader-side retry layer in
+    rust/src/backend/distributed/wire.rs: transient connect failures
+    (refused / reset / timeout) are retried with bounded exponential
+    backoff; fatal errors (e.g. name resolution) short-circuit on the
+    first attempt.
+    """
+
+    def test_transient_refusal_absorbed_by_retry(self, monkeypatch):
+        server = MockStreamServer()
+        real_connect = socket.create_connection
+        attempts = []
+
+        def flaky(addr, timeout=None):
+            attempts.append(addr)
+            if len(attempts) <= 2:
+                raise ConnectionRefusedError("connection refused")
+            return real_connect(addr, timeout=timeout)
+
+        sleeps = []
+        monkeypatch.setattr(w.socket, "create_connection", flaky)
+        monkeypatch.setattr(w.time, "sleep", sleeps.append)
+        try:
+            with w.DpmmClient(
+                server.addr, timeout=5.0, connect_retries=3, retry_base=0.01
+            ) as client:
+                # The surviving connection is fully functional.
+                assert client.stats()["generation"] == 1
+            assert len(attempts) == 3
+            # Bounded exponential backoff: base, then doubled.
+            assert sleeps == [0.01, 0.02]
+        finally:
+            server.close()
+
+    def test_exhausted_retries_reraise_the_transient_error(self, monkeypatch):
+        def refused(addr, timeout=None):
+            raise ConnectionRefusedError("connection refused")
+
+        sleeps = []
+        monkeypatch.setattr(w.socket, "create_connection", refused)
+        monkeypatch.setattr(w.time, "sleep", sleeps.append)
+        with pytest.raises(ConnectionRefusedError):
+            w.DpmmClient("127.0.0.1:1", connect_retries=3, retry_base=0.01)
+        # N attempts → N-1 backoff sleeps, delays never decrease.
+        assert len(sleeps) == 2
+        assert sleeps == sorted(sleeps)
+
+    def test_backoff_delay_is_capped(self, monkeypatch):
+        def refused(addr, timeout=None):
+            raise ConnectionRefusedError("connection refused")
+
+        sleeps = []
+        monkeypatch.setattr(w.socket, "create_connection", refused)
+        monkeypatch.setattr(w.time, "sleep", sleeps.append)
+        with pytest.raises(ConnectionRefusedError):
+            w.DpmmClient(
+                "127.0.0.1:1", connect_retries=6, retry_base=0.5, retry_max=1.0
+            )
+        assert sleeps == [0.5, 1.0, 1.0, 1.0, 1.0]
+
+    def test_fatal_connect_error_is_not_retried(self, monkeypatch):
+        attempts = []
+
+        def unresolvable(addr, timeout=None):
+            attempts.append(addr)
+            raise socket.gaierror("name or service not known")
+
+        sleeps = []
+        monkeypatch.setattr(w.socket, "create_connection", unresolvable)
+        monkeypatch.setattr(w.time, "sleep", sleeps.append)
+        with pytest.raises(socket.gaierror):
+            w.DpmmClient("no-such-host:7979", connect_retries=5)
+        assert len(attempts) == 1, "fatal errors must short-circuit"
+        assert sleeps == []

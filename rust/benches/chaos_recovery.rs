@@ -1,0 +1,242 @@
+//! Chaos drill for the supervised distributed stream: what the heartbeat
+//! registry, retry/backoff layer, and eviction machinery cost in
+//! wall-clock, measured with scripted faults (not random ones).
+//!
+//! Protocol: fit a base model, then
+//!
+//! 1. **detection/recovery** — stream over 3 in-process workers (one
+//!    behind a transparent [`FaultProxy`]) with heartbeat supervision
+//!    enabled; silence the proxied worker between batches and measure (a)
+//!    detection latency (kill → `Dead` verdict, heartbeat only, no ingest
+//!    traffic) and (b) recovery time (the supervised eviction + re-shard
+//!    of its window slice onto survivors);
+//! 2. **retry absorption** — open a leader against a worker whose proxy
+//!    refuses the first two connects; report the retry count and the
+//!    session-open overhead versus a fault-free open.
+//!
+//! Machine-readable output: `BENCH_chaos.json` (override with
+//! `BENCH_CHAOS_OUT`). Scale: `DPMM_BENCH_SCALE=small|medium|full`.
+//!
+//! Run: `cargo bench --bench chaos_recovery`
+
+#[path = "support/mod.rs"]
+mod support;
+
+use dpmm::backend::distributed::fault::{FaultAction, FaultProxy};
+use dpmm::backend::distributed::worker::spawn_local;
+use dpmm::config::DpmmParams;
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::Data;
+use dpmm::prelude::*;
+use dpmm::stream::{DistributedFitter, DistributedStreamConfig};
+use dpmm::util::json::{self, Json};
+use std::time::{Duration, Instant};
+
+const D: usize = 8;
+const K: usize = 5;
+const HEARTBEAT_MS: u64 = 50;
+const GRACE_MS: u64 = 500;
+
+struct Sizes {
+    n_base: usize,
+    batches: usize,
+    batch_n: usize,
+    window: usize,
+    base_iters: usize,
+}
+
+fn sizes() -> Sizes {
+    match support::scale() {
+        support::Scale::Small => {
+            Sizes { n_base: 6_000, batches: 10, batch_n: 2_000, window: 65_536, base_iters: 40 }
+        }
+        support::Scale::Medium => {
+            Sizes { n_base: 30_000, batches: 16, batch_n: 8_000, window: 262_144, base_iters: 60 }
+        }
+        support::Scale::Full => {
+            Sizes {
+                n_base: 100_000,
+                batches: 24,
+                batch_n: 50_000,
+                window: 1 << 21,
+                base_iters: 80,
+            }
+        }
+    }
+}
+
+fn cfg(workers: Vec<String>, window: usize) -> DistributedStreamConfig {
+    DistributedStreamConfig {
+        workers,
+        worker_threads: 1,
+        window,
+        sweeps: 1,
+        seed: 9,
+        heartbeat_ms: HEARTBEAT_MS,
+        heartbeat_grace_ms: GRACE_MS,
+        ..DistributedStreamConfig::default()
+    }
+}
+
+fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+fn count_events(lines: &[String], event: &str) -> usize {
+    let needle = format!("\"event\":\"{event}\"");
+    lines.iter().filter(|l| l.contains(&needle)).count()
+}
+
+fn main() {
+    let Sizes { n_base, batches, batch_n, window, base_iters } = sizes();
+    let total = n_base + batches * batch_n;
+    println!(
+        "chaos recovery bench: d={D} K={K} base={n_base} stream={batches}×{batch_n} \
+         window={window} heartbeat={HEARTBEAT_MS}ms grace={GRACE_MS}ms"
+    );
+    let mut rng = Xoshiro256pp::seed_from_u64(4242);
+    let ds = GmmSpec::default_with(total, D, K).generate(&mut rng);
+    let train = Data::new(n_base, D, ds.points.values[..n_base * D].to_vec());
+    let ckpt = std::env::temp_dir().join(format!("dpmm_bench_chaos_{}.ckpt", std::process::id()));
+    let mut params = DpmmParams::gaussian_default(D);
+    params.iterations = base_iters;
+    params.seed = 7;
+    params.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+    params.checkpoint_every = params.iterations;
+    DpmmFit::new(params).fit(&train).expect("base fit");
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt).expect("snapshot");
+    std::fs::remove_file(&ckpt).ok();
+
+    let batch_at = |b: usize| {
+        let lo = (n_base + b * batch_n) * D;
+        &ds.points.values[lo..lo + batch_n * D]
+    };
+
+    // --- 1. supervised detection + eviction recovery --------------------
+    let proxy = FaultProxy::spawn(spawn_local().expect("worker"), Vec::new()).expect("proxy");
+    let workers = vec![
+        proxy.addr().to_string(),
+        spawn_local().expect("worker"),
+        spawn_local().expect("worker"),
+    ];
+    let mut fitter =
+        DistributedFitter::from_snapshot(&snapshot, cfg(workers, window)).expect("fitter");
+    let half = batches / 2;
+    let mut steady = Vec::with_capacity(half);
+    for b in 0..half {
+        let t0 = Instant::now();
+        fitter.ingest(batch_at(b)).expect("steady ingest");
+        steady.push(t0.elapsed().as_secs_f64());
+    }
+    let steady_mean = mean(&steady);
+    println!(
+        "[steady   ] 3 workers: {steady_mean:.3}s/batch ({:.0} pts/s)",
+        batch_n as f64 / steady_mean.max(1e-9)
+    );
+
+    proxy.kill();
+    let killed_at = Instant::now();
+    let deadline = Duration::from_millis(GRACE_MS * 10 + 5000);
+    let (detection_secs, recovery_secs) = loop {
+        let t_poll = Instant::now();
+        let evicted = fitter.poll_supervision().expect("poll");
+        if evicted > 0 {
+            let recovery = t_poll.elapsed().as_secs_f64();
+            break (killed_at.elapsed().as_secs_f64() - recovery, recovery);
+        }
+        assert!(killed_at.elapsed() < deadline, "eviction never happened");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    println!(
+        "[detect   ] heartbeat-only detection in {detection_secs:.3}s \
+         (grace {:.1}s); eviction + re-shard {recovery_secs:.3}s",
+        GRACE_MS as f64 / 1000.0
+    );
+    let mut post = Vec::with_capacity(batches - half);
+    for b in half..batches {
+        let t0 = Instant::now();
+        fitter.ingest(batch_at(b)).expect("post-eviction ingest");
+        post.push(t0.elapsed().as_secs_f64());
+    }
+    let post_mean = mean(&post);
+    let health = fitter.health();
+    assert!(health.degraded && !health.halted, "the drill must exercise eviction");
+    let lines = fitter.events().recent();
+    let evictions = count_events(&lines, "evict_worker");
+    let reshards = count_events(&lines, "reingest");
+    println!(
+        "[recovery ] post-eviction {post_mean:.3}s/batch on 2 workers \
+         ({evictions} eviction, {reshards} batch re-shards)"
+    );
+    fitter.shutdown().ok();
+    drop(fitter);
+
+    // --- 2. transient connect fault absorbed by retry/backoff -----------
+    let t0 = Instant::now();
+    let clean_workers: Vec<String> = (0..3).map(|_| spawn_local().expect("worker")).collect();
+    let clean = DistributedFitter::from_snapshot(&snapshot, cfg(clean_workers, window))
+        .expect("clean open");
+    let clean_open_secs = t0.elapsed().as_secs_f64();
+    drop(clean);
+    let flaky = FaultProxy::spawn(spawn_local().expect("worker"), vec![
+        FaultAction::RefuseConnect(2),
+    ])
+    .expect("proxy");
+    let workers = vec![
+        flaky.addr().to_string(),
+        spawn_local().expect("worker"),
+        spawn_local().expect("worker"),
+    ];
+    let t0 = Instant::now();
+    let mut fitter = DistributedFitter::from_snapshot(&snapshot, cfg(workers, window))
+        .expect("retry must absorb the scripted refusals");
+    let flaky_open_secs = t0.elapsed().as_secs_f64();
+    fitter.ingest(batch_at(0)).expect("ingest after retried open");
+    let retry_lines = fitter.events().recent();
+    let retries = count_events(&retry_lines, "retry");
+    let retry_health = fitter.health();
+    assert!(!retry_health.degraded, "a retried transient fault must not degrade");
+    assert_eq!(count_events(&retry_lines, "evict_worker"), 0);
+    println!(
+        "[retry    ] {retries} retries absorbed the refused connects: open \
+         {flaky_open_secs:.3}s vs fault-free {clean_open_secs:.3}s"
+    );
+    fitter.shutdown().ok();
+
+    let doc = Json::obj(vec![
+        ("bench", "chaos_recovery".into()),
+        ("d", D.into()),
+        ("k", K.into()),
+        ("n_base", n_base.into()),
+        ("batches", batches.into()),
+        ("batch_n", batch_n.into()),
+        ("window", window.into()),
+        ("heartbeat_ms", (HEARTBEAT_MS as usize).into()),
+        ("heartbeat_grace_ms", (GRACE_MS as usize).into()),
+        ("note", "in-process localhost workers (worker_threads=1); one worker silenced via FaultProxy::kill with NO ingest traffic in flight (heartbeat-only detection); transient scenario refuses the first two session connects".into()),
+        ("steady_secs_per_batch", steady_mean.into()),
+        ("steady_points_per_sec", (batch_n as f64 / steady_mean.max(1e-9)).into()),
+        ("detection_secs", detection_secs.into()),
+        ("recovery_secs", recovery_secs.into()),
+        ("evictions", evictions.into()),
+        ("reshard_events", reshards.into()),
+        ("post_eviction_secs_per_batch", post_mean.into()),
+        (
+            "post_eviction_points_per_sec",
+            (batch_n as f64 / post_mean.max(1e-9)).into(),
+        ),
+        ("retry_count", retries.into()),
+        ("clean_open_secs", clean_open_secs.into()),
+        ("flaky_open_secs", flaky_open_secs.into()),
+        ("degraded_after", Json::Bool(health.degraded)),
+        ("halted_after", Json::Bool(health.halted)),
+    ]);
+    let out = std::env::var("BENCH_CHAOS_OUT").unwrap_or_else(|_| "BENCH_chaos.json".into());
+    match std::fs::write(&out, json::to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

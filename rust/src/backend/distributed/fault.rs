@@ -1,0 +1,271 @@
+//! Deterministic fault-injection harness: a scripted frame-level TCP proxy
+//! placed in front of a real worker.
+//!
+//! [`FaultProxy`] generalizes the ad-hoc "die after N requests" proxy the
+//! recovery tests used through PR 5 (`spawn_local_dying` is now a thin
+//! wrapper over it). A proxy is driven by a [`FaultPlan`] — an ordered
+//! script of [`FaultAction`]s consumed left to right across *all*
+//! connections it accepts — so two runs with the same plan and the same
+//! leader schedule observe the identical failure point. Once the plan is
+//! exhausted the proxy forwards transparently forever, which is what makes
+//! "refuse twice, then behave" bitwise-comparable to a fault-free run.
+//!
+//! Faults are injected at frame granularity (`[u32 length][body]`, see
+//! [`super::wire`]), not byte granularity: the protocol's failure
+//! classification (transient vs fatal, `wire::classify_error`) is defined
+//! over whole-frame outcomes, and frame boundaries are the only points the
+//! leader's retry layer can safely resume from.
+//!
+//! Used by `tests/integration_stream_supervision.rs`,
+//! `tests/integration_stream_recovery.rs` (via `spawn_local_dying`) and
+//! `benches/chaos_recovery.rs`.
+
+use super::wire::{read_frame, write_frame};
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One scripted step of a [`FaultPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Accept-then-instantly-close the next `k` downstream connections.
+    /// The dialer's connect succeeds but its first request dies with a
+    /// reset/EOF — classified transient, exactly like a true
+    /// `ECONNREFUSED` (which a bound listener cannot produce on demand).
+    /// Consumed at connection open; ignored while a connection is live.
+    RefuseConnect(usize),
+    /// Forward the next `n` request/reply frame pairs transparently.
+    Forward(usize),
+    /// Sleep this many milliseconds before forwarding the next request
+    /// upstream (a slow link: the dialer's read blocks for the duration).
+    Delay(u64),
+    /// Forward the next request, then cut the connection halfway through
+    /// writing the reply frame: the dialer sees a mid-frame EOF
+    /// (transient), never a decodable-but-corrupt payload (fatal).
+    TruncateFrame,
+    /// Kill the proxy: drop the live connection mid-session, stop
+    /// accepting, and refuse everything thereafter — a worker crash. This
+    /// is `spawn_local_dying`'s terminal action.
+    Drop,
+}
+
+/// An ordered fault script, consumed left to right across a proxy's
+/// lifetime. Empty plan = transparent proxy.
+pub type FaultPlan = Vec<FaultAction>;
+
+/// What the shared plan says to do with the next frame pair.
+enum Step {
+    Forward,
+    Delay(u64),
+    Truncate,
+}
+
+/// Handle to a running scripted proxy. Dropping the handle does *not* stop
+/// the proxy (plans usually outlive the spawning scope in tests); call
+/// [`FaultProxy::kill`] to silence it deterministically.
+pub struct FaultProxy {
+    addr: String,
+    killed: Arc<AtomicBool>,
+}
+
+impl FaultProxy {
+    /// Bind an ephemeral port and proxy every accepted connection to
+    /// `upstream` under `plan`. Each downstream connection gets its own
+    /// fresh upstream connection (sessions are per-connection worker-side).
+    pub fn spawn(upstream: String, plan: FaultPlan) -> Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let killed = Arc::new(AtomicBool::new(false));
+        let plan = Arc::new(Mutex::new(VecDeque::from(plan)));
+        {
+            let killed = Arc::clone(&killed);
+            std::thread::spawn(move || {
+                for down in listener.incoming() {
+                    let Ok(down) = down else { return };
+                    if killed.load(Ordering::SeqCst) {
+                        // Listener drops on return: every later connect is
+                        // refused outright — the proxy is dead.
+                        return;
+                    }
+                    let upstream = upstream.clone();
+                    let plan = Arc::clone(&plan);
+                    let killed = Arc::clone(&killed);
+                    std::thread::spawn(move || {
+                        let _ = run_connection(down, &upstream, &plan, &killed);
+                    });
+                }
+            });
+        }
+        Ok(FaultProxy { addr, killed })
+    }
+
+    /// Address leaders should dial instead of the real worker's.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Silence the proxy from the outside — the deterministic trigger for
+    /// "worker went dark": the accept loop exits (dropping the listener, so
+    /// heartbeat probes get connection-refused) and live forwarders stop at
+    /// their next frame boundary.
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::SeqCst);
+        // Wake the accept loop so the listener drops promptly.
+        let _ = TcpStream::connect(&self.addr);
+    }
+}
+
+fn run_connection(
+    mut down: TcpStream,
+    upstream: &str,
+    plan: &Mutex<VecDeque<FaultAction>>,
+    killed: &AtomicBool,
+) -> Result<()> {
+    // Connection-open actions first, before touching the upstream.
+    {
+        let mut g = plan.lock().unwrap();
+        match g.front_mut() {
+            Some(FaultAction::RefuseConnect(k)) => {
+                *k -= 1;
+                if *k == 0 {
+                    g.pop_front();
+                }
+                return Ok(()); // `down` drops: connect succeeded, session dies instantly
+            }
+            Some(FaultAction::Drop) => {
+                g.pop_front();
+                killed.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+            _ => {}
+        }
+    }
+    let mut up = TcpStream::connect(upstream)?;
+    loop {
+        if killed.load(Ordering::SeqCst) {
+            return Ok(()); // both sockets drop mid-session
+        }
+        // Select (and consume) the action governing the next frame pair
+        // *before* reading it, so `Drop` right after `Forward(n)` kills the
+        // session immediately after the n-th reply — not one request later.
+        let step = {
+            let mut g = plan.lock().unwrap();
+            match g.front_mut() {
+                None | Some(FaultAction::RefuseConnect(_)) => Step::Forward,
+                Some(FaultAction::Forward(n)) => {
+                    *n -= 1;
+                    if *n == 0 {
+                        g.pop_front();
+                    }
+                    Step::Forward
+                }
+                Some(FaultAction::Delay(ms)) => {
+                    let ms = *ms;
+                    g.pop_front();
+                    Step::Delay(ms)
+                }
+                Some(FaultAction::TruncateFrame) => {
+                    g.pop_front();
+                    Step::Truncate
+                }
+                Some(FaultAction::Drop) => {
+                    g.pop_front();
+                    killed.store(true, Ordering::SeqCst);
+                    return Ok(());
+                }
+            }
+        };
+        let Ok(req) = read_frame(&mut down) else {
+            return Ok(()); // downstream went away; plan state stays put
+        };
+        if let Step::Delay(ms) = step {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        write_frame(&mut up, &req)?;
+        let reply = read_frame(&mut up)?;
+        match step {
+            Step::Truncate => {
+                // Advertise the full reply but deliver only half of it,
+                // then cut: downstream reads a mid-frame EOF.
+                down.write_all(&(reply.len() as u32).to_le_bytes())?;
+                down.write_all(&reply[..reply.len() / 2])?;
+                return Ok(());
+            }
+            _ => write_frame(&mut down, &reply)?,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::wire::{request, Message};
+    use super::super::worker::spawn_local;
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_transparent_and_serves_many_connections() {
+        let proxy = FaultProxy::spawn(spawn_local().unwrap(), Vec::new()).unwrap();
+        for _ in 0..3 {
+            let mut s = TcpStream::connect(proxy.addr()).unwrap();
+            match request(&mut s, &Message::Ping).unwrap() {
+                Message::Pong { .. } => {}
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn refuse_connect_consumes_then_behaves() {
+        let proxy =
+            FaultProxy::spawn(spawn_local().unwrap(), vec![FaultAction::RefuseConnect(2)])
+                .unwrap();
+        for _ in 0..2 {
+            let mut s = TcpStream::connect(proxy.addr()).unwrap();
+            assert!(request(&mut s, &Message::Ping).is_err());
+        }
+        let mut s = TcpStream::connect(proxy.addr()).unwrap();
+        assert!(matches!(request(&mut s, &Message::Ping).unwrap(), Message::Pong { .. }));
+    }
+
+    #[test]
+    fn truncated_reply_reads_as_mid_frame_eof() {
+        let proxy =
+            FaultProxy::spawn(spawn_local().unwrap(), vec![FaultAction::TruncateFrame]).unwrap();
+        let mut s = TcpStream::connect(proxy.addr()).unwrap();
+        let err = request(&mut s, &Message::Ping).unwrap_err();
+        assert!(
+            matches!(
+                super::super::wire::classify_error(&err),
+                super::super::wire::FaultClass::Transient
+            ),
+            "truncated frame should classify transient: {err:#}"
+        );
+    }
+
+    #[test]
+    fn kill_silences_future_connections() {
+        let proxy = FaultProxy::spawn(spawn_local().unwrap(), Vec::new()).unwrap();
+        let mut s = TcpStream::connect(proxy.addr()).unwrap();
+        assert!(matches!(request(&mut s, &Message::Ping).unwrap(), Message::Pong { .. }));
+        proxy.kill();
+        // The accept loop exits asynchronously; poll until connects are
+        // refused (or an accepted-then-dropped socket fails its request).
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match TcpStream::connect(proxy.addr()) {
+                Err(_) => break,
+                Ok(mut s) => {
+                    if request(&mut s, &Message::Ping).is_err() {
+                        break;
+                    }
+                }
+            }
+            assert!(std::time::Instant::now() < deadline, "proxy never went silent");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}

@@ -14,6 +14,7 @@
 //! ([`DistributedBackend`] below is the *batch-fit* leader; the streaming
 //! leader is [`crate::stream::DistributedFitter`]).
 
+pub mod fault;
 pub mod wire;
 pub mod worker;
 

@@ -18,7 +18,15 @@
 //! Tag summary: v1 = batch fit (tags 1–12), v2 = distributed streaming
 //! ingest (tags 13–17, `Stream*`/`StatsDelta`), v3 = elastic membership +
 //! leader durability (tags 18–22: `StreamJoin`, `StreamBatchState`,
-//! `StreamRebalance`, `StreamBatchStateReply`, `StreamRestore`).
+//! `StreamRebalance`, `StreamBatchStateReply`, `StreamRestore`), v4 =
+//! supervision heartbeats (tags 23–24: `Ping`/`Pong`).
+//!
+//! This module also hosts the transport-level retry layer
+//! ([`RetryPolicy`], [`classify_error`]): transient socket faults
+//! (refused/reset/timed-out connections) are retried under bounded
+//! exponential backoff with deterministically seeded jitter, while
+//! protocol-level faults (decode errors, worker `Error` replies) fail
+//! fast — a blipped connection is not a dead worker.
 
 use crate::linalg::Matrix;
 use crate::sampler::{MergeOp, SplitOp, StepParams};
@@ -30,8 +38,9 @@ use std::io::{Read, Write};
 /// v2 added the distributed-streaming verbs (`StreamInit` / `StreamIngest`
 /// / `StreamSweep` / `StreamEvict` / `StatsDelta`); v3 added elastic
 /// membership and leader durability (`StreamJoin` / `StreamBatchState` /
-/// `StreamRebalance` / `StreamBatchStateReply` / `StreamRestore`).
-pub const PROTO_VERSION: u8 = 3;
+/// `StreamRebalance` / `StreamBatchStateReply` / `StreamRestore`); v4
+/// added the supervision heartbeat (`Ping` / `Pong`).
+pub const PROTO_VERSION: u8 = 4;
 
 /// Sanity cap on cluster counts decoded from the wire (a corrupt count
 /// must not drive an unbounded allocation; real K is bounded by
@@ -143,6 +152,17 @@ pub enum Message {
     /// `k` is the model's cluster count (sizes stats bundles on a session
     /// that has not ingested yet). Reply: `Ack`.
     StreamRestore { batch_id: u64, k: u32, x: Vec<f64>, z: Vec<u32>, zsub: Vec<u8>, rng: [u64; 4] },
+    /// Supervision heartbeat (v4). Answered in **any** worker session
+    /// state — Idle included — so a leader-side supervisor can probe
+    /// liveness over its own connection without opening a streaming
+    /// session or contending with the fitter's request/reply channel.
+    /// Reply: `Pong`.
+    Ping,
+    /// Worker heartbeat reply (v4): `load` = points resident in the
+    /// window slice, `depth` = resident window batches, `generation` = a
+    /// monotone count of verbs the worker process has served (a wedged
+    /// worker answers pings but its generation stalls).
+    Pong { load: u64, depth: u64, generation: u64 },
 }
 
 // ---------- primitive writers/readers ----------
@@ -516,6 +536,8 @@ const TAG_STREAM_BATCH_STATE: u8 = 19;
 const TAG_STREAM_REBALANCE: u8 = 20;
 const TAG_STREAM_BATCH_STATE_REPLY: u8 = 21;
 const TAG_STREAM_RESTORE: u8 = 22;
+const TAG_PING: u8 = 23;
+const TAG_PONG: u8 = 24;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
@@ -647,6 +669,13 @@ impl Message {
                 for &w in rng {
                     e.u64(w);
                 }
+            }
+            Message::Ping => e.u8(TAG_PING),
+            Message::Pong { load, depth, generation } => {
+                e.u8(TAG_PONG);
+                e.u64(*load);
+                e.u64(*depth);
+                e.u64(*generation);
             }
         }
         e.buf
@@ -781,6 +810,10 @@ impl Message {
                 let rng = [d.u64()?, d.u64()?, d.u64()?, d.u64()?];
                 Message::StreamRestore { batch_id, k, x, z, zsub, rng }
             }
+            TAG_PING => Message::Ping,
+            TAG_PONG => {
+                Message::Pong { load: d.u64()?, depth: d.u64()?, generation: d.u64()? }
+            }
             t => bail!("unknown message tag {t}"),
         };
         if !d.finished() {
@@ -839,18 +872,45 @@ pub fn read_message(r: &mut impl Read) -> Result<Message> {
 /// default is generous because a healthy distributed step can legitimately
 /// keep a worker silent for minutes while its shard computes.
 pub fn net_timeout() -> Option<std::time::Duration> {
-    match std::env::var("DPMM_NET_TIMEOUT_SECS") {
-        Ok(v) => match v.trim().parse::<u64>() {
-            Ok(0) => None,
-            Ok(secs) => Some(std::time::Duration::from_secs(secs)),
-            Err(_) => {
-                eprintln!(
-                    "warning: unparsable DPMM_NET_TIMEOUT_SECS='{v}'; using default 300s"
-                );
-                Some(std::time::Duration::from_secs(300))
-            }
+    static POLICY_LOGGED: std::sync::Once = std::sync::Once::new();
+    let (timeout, policy, warning) =
+        parse_net_timeout(std::env::var("DPMM_NET_TIMEOUT_SECS").ok().as_deref());
+    if let Some(w) = warning {
+        eprintln!("warning: {w}");
+    }
+    // Log the chosen policy exactly once per process — `0 = disabled` in
+    // particular used to be silent, indistinguishable from the default.
+    POLICY_LOGGED.call_once(|| eprintln!("dpmm net: socket timeout policy: {policy}"));
+    timeout
+}
+
+/// Pure parse half of [`net_timeout`]: returns the timeout, a one-line
+/// policy description for the startup log, and a warning for rejected
+/// values (negative, fractional, NaN-ish, or otherwise unparsable inputs
+/// all fall back to the default through the same path).
+fn parse_net_timeout(
+    raw: Option<&str>,
+) -> (Option<std::time::Duration>, String, Option<String>) {
+    const DEFAULT_SECS: u64 = 300;
+    let default = Some(std::time::Duration::from_secs(DEFAULT_SECS));
+    match raw {
+        None => (default, format!("{DEFAULT_SECS}s (default)"), None),
+        Some(v) => match v.trim().parse::<u64>() {
+            Ok(0) => (None, "disabled (DPMM_NET_TIMEOUT_SECS=0)".into(), None),
+            Ok(secs) => (
+                Some(std::time::Duration::from_secs(secs)),
+                format!("{secs}s (DPMM_NET_TIMEOUT_SECS)"),
+                None,
+            ),
+            Err(_) => (
+                default,
+                format!("{DEFAULT_SECS}s (default; invalid override)"),
+                Some(format!(
+                    "rejecting DPMM_NET_TIMEOUT_SECS='{v}' (want a whole number of \
+                     seconds >= 0); using default {DEFAULT_SECS}s"
+                )),
+            ),
         },
-        Err(_) => Some(std::time::Duration::from_secs(300)),
     }
 }
 
@@ -876,6 +936,139 @@ pub fn request(stream: &mut std::net::TcpStream, msg: &Message) -> Result<Messag
     Ok(reply)
 }
 
+// ---------- transient-fault retry layer ----------
+
+/// Classification of a failed connect/request for the retry layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Socket-level blip (refused / reset / timed-out / broken pipe):
+    /// safe to retry from a fresh connection — the peer's protocol layer
+    /// either never saw the request or died without answering it.
+    Transient,
+    /// Protocol-level failure (decode error, worker `Error` reply,
+    /// version mismatch): a retry would deterministically repeat it.
+    Fatal,
+}
+
+/// Classify an error chain: any `std::io::Error` of a connectivity kind
+/// makes the failure [`FaultClass::Transient`]; everything else —
+/// including a worker's typed `Error` reply — is [`FaultClass::Fatal`].
+pub fn classify_error(err: &anyhow::Error) -> FaultClass {
+    use std::io::ErrorKind::*;
+    for cause in err.chain() {
+        if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+            return match io.kind() {
+                ConnectionRefused | ConnectionReset | ConnectionAborted | NotConnected
+                | BrokenPipe | WouldBlock | TimedOut | Interrupted | UnexpectedEof => {
+                    FaultClass::Transient
+                }
+                _ => FaultClass::Fatal,
+            };
+        }
+    }
+    FaultClass::Fatal
+}
+
+/// One retry decision, reported to the caller's observer before the
+/// backoff sleep (the streaming leader forwards these to its structured
+/// event log).
+#[derive(Debug)]
+pub struct RetryEvent<'a> {
+    /// Human-readable name of the operation being retried.
+    pub what: &'a str,
+    /// 1-based index of the attempt that just failed.
+    pub attempt: u32,
+    pub max_attempts: u32,
+    /// The jittered backoff about to be slept.
+    pub delay: std::time::Duration,
+    pub error: &'a anyhow::Error,
+}
+
+/// Bounded exponential backoff with deterministically seeded jitter.
+///
+/// Delays double from `base_delay_ms` per retry and saturate at
+/// `max_delay_ms`; each is stretched by a jitter factor in
+/// `[1, 1 + jitter_frac)` drawn from this policy's **own**
+/// [`Xoshiro256pp`](crate::rng::Xoshiro256pp) stream — never the model
+/// RNG, so retry timing cannot perturb a trajectory — then re-clamped to
+/// the cap. With `jitter_frac <= 1` the schedule is therefore monotone
+/// non-decreasing and bitwise-reproducible under a fixed seed
+/// (docs/DETERMINISM.md).
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// Backoff before the first retry, in milliseconds.
+    pub base_delay_ms: u64,
+    /// Saturation cap for the (jittered) backoff, in milliseconds.
+    pub max_delay_ms: u64,
+    /// Jitter stretch range: each delay is multiplied by a draw from
+    /// `[1, 1 + jitter_frac)`. Must stay `<= 1.0` to keep the schedule
+    /// monotone.
+    pub jitter_frac: f64,
+    rng: crate::rng::Xoshiro256pp,
+}
+
+impl RetryPolicy {
+    pub fn new(max_attempts: u32, base_delay_ms: u64, max_delay_ms: u64, seed: u64) -> Self {
+        RetryPolicy {
+            max_attempts: max_attempts.max(1),
+            base_delay_ms,
+            max_delay_ms: max_delay_ms.max(base_delay_ms),
+            jitter_frac: 0.25,
+            rng: crate::rng::Xoshiro256pp::seed_from_u64(seed),
+        }
+    }
+
+    /// A policy that never retries (single attempt, no delay).
+    pub fn disabled() -> Self {
+        RetryPolicy::new(1, 0, 0, 0)
+    }
+
+    /// The jittered backoff before retry `retry_index` (0-based: the wait
+    /// after the first failed attempt is index 0). Consumes one draw from
+    /// the jitter stream.
+    pub fn next_delay(&mut self, retry_index: u32) -> std::time::Duration {
+        use crate::rng::Rng as _;
+        let factor = 1u64.checked_shl(retry_index).unwrap_or(u64::MAX);
+        let raw = self.base_delay_ms.saturating_mul(factor).min(self.max_delay_ms);
+        let jittered = (raw as f64 * (1.0 + self.jitter_frac * self.rng.next_f64())) as u64;
+        std::time::Duration::from_millis(jittered.min(self.max_delay_ms))
+    }
+
+    /// Run `op` under this policy: transient failures retry with backoff
+    /// up to `max_attempts` total attempts; fatal failures short-circuit
+    /// immediately. Every retry decision is reported to `on_retry` before
+    /// the sleep.
+    pub fn run<T>(
+        &mut self,
+        what: &str,
+        mut op: impl FnMut() -> Result<T>,
+        mut on_retry: impl FnMut(&RetryEvent),
+    ) -> Result<T> {
+        let max = self.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let err = match op() {
+                Ok(v) => return Ok(v),
+                Err(e) => e,
+            };
+            if classify_error(&err) == FaultClass::Fatal {
+                return Err(err.context(format!("{what}: fatal on attempt {attempt}/{max}")));
+            }
+            if attempt >= max {
+                return Err(err.context(format!("{what}: failed after {attempt} attempts")));
+            }
+            let delay = self.next_delay(attempt - 1);
+            on_retry(&RetryEvent { what, attempt, max_attempts: max, delay, error: &err });
+            if !delay.is_zero() {
+                std::thread::sleep(delay);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -897,6 +1090,9 @@ mod tests {
             Message::ApplySplits(vec![SplitOp { target: 1, new_index: 4 }]),
             Message::ApplyMerges(vec![MergeOp { keep: 0, absorb: 3 }]),
             Message::Remap(vec![Some(0), None, Some(1)]),
+            Message::Ping,
+            Message::Pong { load: 0, depth: 0, generation: 0 },
+            Message::Pong { load: 12_000, depth: 7, generation: u64::MAX },
         ] {
             let enc = msg.encode();
             assert_eq!(Message::decode(&enc).unwrap(), msg);
@@ -1143,6 +1339,143 @@ mod tests {
         let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
         let mut cursor = std::io::Cursor::new(huge.to_vec());
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    // ----- retry/backoff layer -----
+
+    fn transient_err() -> anyhow::Error {
+        anyhow::Error::from(std::io::Error::new(
+            std::io::ErrorKind::ConnectionRefused,
+            "connection refused",
+        ))
+    }
+
+    #[test]
+    fn classifies_io_blips_transient_and_protocol_faults_fatal() {
+        use std::io::ErrorKind::*;
+        for kind in [ConnectionRefused, ConnectionReset, BrokenPipe, TimedOut, UnexpectedEof] {
+            let e = anyhow::Error::from(std::io::Error::new(kind, "blip"));
+            assert_eq!(classify_error(&e), FaultClass::Transient, "{kind:?}");
+            // Context wrapping must not hide the io cause.
+            let wrapped = e.context("opening session");
+            assert_eq!(classify_error(&wrapped), FaultClass::Transient, "{kind:?} wrapped");
+        }
+        // A worker's typed Error reply and decode failures carry no io
+        // cause — retrying would repeat them.
+        assert_eq!(classify_error(&anyhow!("worker error: bad batch")), FaultClass::Fatal);
+        let e = anyhow::Error::from(std::io::Error::new(
+            std::io::ErrorKind::PermissionDenied,
+            "nope",
+        ));
+        assert_eq!(classify_error(&e), FaultClass::Fatal);
+    }
+
+    #[test]
+    fn retry_attempts_are_bounded() {
+        let mut policy = RetryPolicy::new(4, 1, 2, 7);
+        let mut calls = 0u32;
+        let mut retries = 0u32;
+        let err = policy
+            .run::<()>(
+                "test op",
+                || {
+                    calls += 1;
+                    Err(transient_err())
+                },
+                |_| retries += 1,
+            )
+            .unwrap_err();
+        assert_eq!(calls, 4, "exactly max_attempts calls");
+        assert_eq!(retries, 3, "one retry event per backoff");
+        assert!(err.to_string().contains("after 4 attempts"), "{err:#}");
+    }
+
+    #[test]
+    fn retry_succeeds_after_scripted_transient_failures() {
+        let mut policy = RetryPolicy::new(5, 1, 2, 7);
+        let mut calls = 0u32;
+        let out = policy
+            .run(
+                "test op",
+                || {
+                    calls += 1;
+                    if calls <= 2 {
+                        Err(transient_err())
+                    } else {
+                        Ok(42)
+                    }
+                },
+                |_| {},
+            )
+            .unwrap();
+        assert_eq!((out, calls), (42, 3), "refuse x2 then accept is absorbed");
+    }
+
+    #[test]
+    fn fatal_errors_short_circuit_without_retry() {
+        let mut policy = RetryPolicy::new(10, 1, 2, 7);
+        let mut calls = 0u32;
+        let mut retries = 0u32;
+        let err = policy
+            .run::<()>(
+                "test op",
+                || {
+                    calls += 1;
+                    Err(anyhow!("worker error: poisoned"))
+                },
+                |_| retries += 1,
+            )
+            .unwrap_err();
+        assert_eq!((calls, retries), (1, 0), "fatal must not retry");
+        assert!(err.to_string().contains("fatal"), "{err:#}");
+    }
+
+    #[test]
+    fn backoff_delays_are_monotone_bounded_and_seed_deterministic() {
+        let schedule = |seed: u64| -> Vec<u128> {
+            let mut p = RetryPolicy::new(16, 10, 200, seed);
+            (0..12).map(|i| p.next_delay(i).as_millis()).collect()
+        };
+        let a = schedule(99);
+        for w in a.windows(2) {
+            assert!(w[1] >= w[0], "delays must be monotone non-decreasing: {a:?}");
+        }
+        for (i, &d) in a.iter().enumerate() {
+            assert!(d >= 10 && d <= 200, "delay {i} = {d}ms escaped [base, cap]");
+        }
+        assert_eq!(*a.last().unwrap(), 200, "schedule must saturate at the cap");
+        // Jitter actually stretches the raw exponential…
+        let mut flat = RetryPolicy::new(16, 10, 200, 99);
+        flat.jitter_frac = 0.0;
+        let unjittered: Vec<u128> = (0..12).map(|i| flat.next_delay(i).as_millis()).collect();
+        assert_ne!(a, unjittered, "expected jitter to stretch the schedule");
+        // …but is a pure function of the seed.
+        assert_eq!(a, schedule(99), "same seed must give a bitwise-identical schedule");
+        assert_ne!(a, schedule(100), "different seeds must jitter differently");
+    }
+
+    // ----- net-timeout env policy -----
+
+    #[test]
+    fn net_timeout_policy_parses_and_rejects() {
+        use std::time::Duration;
+        // Default, explicit override, and the (now logged) disabled case.
+        let (t, policy, warn) = parse_net_timeout(None);
+        assert_eq!(t, Some(Duration::from_secs(300)));
+        assert!(policy.contains("default") && warn.is_none());
+        let (t, policy, warn) = parse_net_timeout(Some("45"));
+        assert_eq!(t, Some(Duration::from_secs(45)));
+        assert!(policy.contains("45s") && warn.is_none());
+        let (t, policy, warn) = parse_net_timeout(Some("0"));
+        assert_eq!(t, None);
+        assert!(policy.contains("disabled") && warn.is_none());
+        // Negative, NaN-ish, and fractional inputs all reject through the
+        // same warning path and fall back to the default.
+        for bad in ["-5", "NaN", "nan", "2.5", "fast", ""] {
+            let (t, _, warn) = parse_net_timeout(Some(bad));
+            assert_eq!(t, Some(Duration::from_secs(300)), "input {bad:?}");
+            assert!(warn.is_some_and(|w| w.contains(bad)), "input {bad:?} must warn");
+        }
     }
 
     #[test]

@@ -29,7 +29,20 @@ use crate::stream::fitter::{fold_groups, map_seed, run_shards};
 use crate::stream::StreamBuffer;
 use anyhow::{Context, Result};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Process-wide count of protocol verbs served, reported in
+/// [`Message::Pong::generation`]. A worker that still answers pings but
+/// whose generation stops advancing while the leader keeps issuing work is
+/// wedged, not idle — the supervisor can tell the two apart.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+/// Window occupancy (points / resident batches) last published by a
+/// streaming verb. Heartbeat probes arrive on their own short-lived
+/// connections with no session state of their own, so the streaming
+/// session mirrors its load here after every verb it handles.
+static STREAM_POINTS: AtomicU64 = AtomicU64::new(0);
+static STREAM_DEPTH: AtomicU64 = AtomicU64::new(0);
 
 /// Batch-mode session state (built on Init).
 struct WorkerState {
@@ -313,7 +326,16 @@ fn stream_restore(
 
 fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
     let msg = read_message(stream)?;
+    GENERATION.fetch_add(1, Ordering::Relaxed);
     let reply = match msg {
+        // Supervision heartbeat (v4): valid in *any* session state — the
+        // leader's supervisor probes on fresh connections that never open a
+        // session, so the load figures come from the process-wide mirror.
+        Message::Ping => Message::Pong {
+            load: STREAM_POINTS.load(Ordering::Relaxed),
+            depth: STREAM_DEPTH.load(Ordering::Relaxed),
+            generation: GENERATION.load(Ordering::Relaxed),
+        },
         Message::Init { d, prior, seed, threads, x } => {
             let d = d as usize;
             let n = x.len() / d.max(1);
@@ -433,6 +455,10 @@ fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
         }
         other => Message::Error(format!("unexpected message {other:?}")),
     };
+    if let Session::Stream(ss) = &*session {
+        STREAM_POINTS.store(ss.buffer.len() as u64, Ordering::Relaxed);
+        STREAM_DEPTH.store(ss.batches.len() as u64, Ordering::Relaxed);
+    }
     write_message(stream, &reply)?;
     Ok(true)
 }
@@ -461,8 +487,12 @@ pub fn serve_connection(mut stream: TcpStream) -> Result<()> {
     }
 }
 
-/// Bind and serve leaders forever (the `dpmm worker` CLI entrypoint).
-/// One leader at a time — the paper's topology has exactly one master.
+/// Bind and serve connections forever (the `dpmm worker` CLI entrypoint).
+/// One session per connection, each on its own thread: the paper's
+/// topology has exactly one master, but since PROTO v4 the leader's
+/// *supervisor* opens short heartbeat probes concurrently with the
+/// long-lived fit/stream session, so connections must not queue behind
+/// each other.
 pub fn serve(addr: &str) -> Result<()> {
     let listener =
         TcpListener::bind(addr).with_context(|| format!("worker bind {addr}"))?;
@@ -471,9 +501,12 @@ pub fn serve(addr: &str) -> Result<()> {
         // A leader that times out or dies mid-protocol ends its connection
         // (I/O timeout via wire::configure_stream) but must not take the
         // worker process down — stay up for the next leader.
-        if let Err(e) = serve_connection(stream?) {
-            eprintln!("worker: leader connection ended with error: {e:#}");
-        }
+        let stream = stream?;
+        std::thread::spawn(move || {
+            if let Err(e) = serve_connection(stream) {
+                eprintln!("worker: leader connection ended with error: {e:#}");
+            }
+        });
     }
     Ok(())
 }
@@ -481,15 +514,20 @@ pub fn serve(addr: &str) -> Result<()> {
 /// Spawn an in-process worker on an ephemeral port; returns its address.
 /// Used by tests, examples, and `--workers N` convenience mode (the paper's
 /// multi-machine topology collapsed onto localhost). The worker serves
-/// whichever session kind — batch fit or streaming — the leader opens.
+/// whichever session kind — batch fit or streaming — the leader opens, and
+/// like [`serve`] handles each connection on its own thread so heartbeat
+/// probes are answered while a session is live.
 pub fn spawn_local() -> Result<String> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     std::thread::spawn(move || {
-        if let Ok((stream, _)) = listener.accept() {
-            if let Err(e) = serve_connection(stream) {
-                eprintln!("worker error: {e}");
-            }
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { return };
+            std::thread::spawn(move || {
+                if let Err(e) = serve_connection(stream) {
+                    eprintln!("worker error: {e}");
+                }
+            });
         }
     });
     Ok(addr)
@@ -499,28 +537,15 @@ pub fn spawn_local() -> Result<String> {
 /// requests through a frame-level proxy in front of a real
 /// [`spawn_local`] worker, then drops both connections — a deterministic
 /// "death mid-session" at request granularity, so two runs with the same
-/// schedule observe the identical failure point. Fault-injection harness
-/// for the recovery tests and `benches/stream_recovery.rs` (the elastic
-/// leader's contracts are pinned against it; see docs/DETERMINISM.md).
+/// schedule observe the identical failure point. Since PROTO v4 this is a
+/// thin wrapper over the scripted [`super::fault::FaultProxy`] harness
+/// (plan: forward `die_after` pairs, then [`super::fault::FaultAction::Drop`]);
+/// the recovery tests and `benches/stream_recovery.rs` pin the elastic
+/// leader's contracts against it (see docs/DETERMINISM.md).
 pub fn spawn_local_dying(die_after: usize) -> Result<String> {
-    use super::wire::{read_frame, write_frame};
+    use super::fault::{FaultAction, FaultProxy};
     let upstream = spawn_local()?;
-    let listener = TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?.to_string();
-    std::thread::spawn(move || {
-        let Ok((mut leader, _)) = listener.accept() else { return };
-        let Ok(mut worker) = TcpStream::connect(&upstream) else { return };
-        for _ in 0..die_after {
-            let Ok(req) = read_frame(&mut leader) else { return };
-            if write_frame(&mut worker, &req).is_err() {
-                return;
-            }
-            let Ok(reply) = read_frame(&mut worker) else { return };
-            if write_frame(&mut leader, &reply).is_err() {
-                return;
-            }
-        }
-        // Die mid-session: both sockets drop here.
-    });
-    Ok(addr)
+    let proxy =
+        FaultProxy::spawn(upstream, vec![FaultAction::Forward(die_after), FaultAction::Drop])?;
+    Ok(proxy.addr().to_string())
 }

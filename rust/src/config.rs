@@ -129,6 +129,19 @@ pub struct StreamSettings {
     /// Resume from `checkpoint_path` instead of seeding fresh from
     /// `--checkpoint`/`--snapshot` (bitwise-identical replay).
     pub resume: bool,
+    /// Heartbeat probe interval in ms (distributed mode; 0 = supervision
+    /// off, the default — failures are then detected reactively mid-sweep).
+    pub heartbeat_ms: u64,
+    /// Silence tolerated before a worker is rated `Dead` and proactively
+    /// evicted (must be ≥ the probe interval to allow at least one retry).
+    pub heartbeat_grace_ms: u64,
+    /// Max connect/session-open attempts per worker (≥ 1; transient
+    /// failures are retried with exponential backoff, fatal ones are not).
+    pub connect_retries: usize,
+    /// Base backoff delay before the first retry, in ms.
+    pub retry_base_ms: u64,
+    /// Backoff delay cap, in ms.
+    pub retry_max_ms: u64,
 }
 
 impl Default for StreamSettings {
@@ -144,6 +157,11 @@ impl Default for StreamSettings {
             checkpoint_path: None,
             checkpoint_every: 16,
             resume: false,
+            heartbeat_ms: 0,
+            heartbeat_grace_ms: 3000,
+            connect_retries: 3,
+            retry_base_ms: 50,
+            retry_max_ms: 2000,
         }
     }
 }
@@ -151,11 +169,36 @@ impl Default for StreamSettings {
 impl StreamSettings {
     /// Parse `--window / --sweeps / --decay / --alpha / --seed /
     /// --workers / --worker_threads / --checkpoint_path /
-    /// --checkpoint_every / --resume` overrides.
+    /// --checkpoint_every / --resume / --heartbeat_ms /
+    /// --heartbeat_grace_ms / --connect_retries / --retry_base_ms /
+    /// --retry_max_ms` overrides.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut s = StreamSettings { workers: args.get_list("workers"), ..Default::default() };
         if let Some(wt) = args.get_usize("worker_threads")? {
             s.worker_threads = wt.max(1);
+        }
+        if let Some(hb) = args.get_u64("heartbeat_ms")? {
+            s.heartbeat_ms = hb;
+        }
+        if let Some(g) = args.get_u64("heartbeat_grace_ms")? {
+            s.heartbeat_grace_ms = g;
+        }
+        if s.heartbeat_ms > 0 && s.heartbeat_grace_ms < s.heartbeat_ms {
+            bail!(
+                "--heartbeat_grace_ms ({}) must be >= --heartbeat_ms ({}) so a \
+                 worker gets at least one full probe interval before eviction",
+                s.heartbeat_grace_ms,
+                s.heartbeat_ms
+            );
+        }
+        if let Some(r) = args.get_usize("connect_retries")? {
+            s.connect_retries = r.max(1);
+        }
+        if let Some(b) = args.get_u64("retry_base_ms")? {
+            s.retry_base_ms = b;
+        }
+        if let Some(m) = args.get_u64("retry_max_ms")? {
+            s.retry_max_ms = m;
         }
         if let Some(cp) = args.get("checkpoint_path") {
             s.checkpoint_path = Some(cp.to_string());
@@ -569,6 +612,54 @@ mod tests {
             .unwrap();
             assert!(StreamSettings::from_args(&args).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn stream_supervision_settings_from_args() {
+        let s = StreamSettings::from_args(
+            &Args::parse(["stream"].iter().map(|s| s.to_string()), &[]).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(s.heartbeat_ms, 0, "supervision is off by default");
+        assert_eq!(s.heartbeat_grace_ms, 3000);
+        assert_eq!(s.connect_retries, 3);
+        let args = Args::parse(
+            [
+                "stream",
+                "--heartbeat_ms=200",
+                "--heartbeat_grace_ms=900",
+                "--connect_retries=5",
+                "--retry_base_ms=10",
+                "--retry_max_ms=400",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        let s = StreamSettings::from_args(&args).unwrap();
+        assert_eq!(s.heartbeat_ms, 200);
+        assert_eq!(s.heartbeat_grace_ms, 900);
+        assert_eq!(s.connect_retries, 5);
+        assert_eq!(s.retry_base_ms, 10);
+        assert_eq!(s.retry_max_ms, 400);
+        // Grace shorter than the probe interval would evict a worker before
+        // its first missed probe could be retried.
+        let bad = Args::parse(
+            ["stream", "--heartbeat_ms=500", "--heartbeat_grace_ms=100"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        assert!(StreamSettings::from_args(&bad).is_err());
+        // connect_retries is clamped to at least one attempt.
+        let one = Args::parse(
+            ["stream", "--connect_retries=0"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(StreamSettings::from_args(&one).unwrap().connect_retries, 1);
     }
 
     #[test]

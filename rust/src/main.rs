@@ -17,9 +17,13 @@
 //!          [--threads=0] [--tile=128] [--batch_points=65536]
 //!          [--workers=host:7878,host2:7878] [--worker_threads=1]
 //!          [--checkpoint_path=stream.ckpt] [--checkpoint_every=16] [--resume]
+//!          [--heartbeat_ms=0] [--heartbeat_grace_ms=3000]
+//!          [--connect_retries=3] [--retry_base_ms=50] [--retry_max_ms=2000]
 //! dpmm predict --data=points.npy (--addr=host:7979 | --checkpoint=fit.ckpt | --snapshot=model.snap)
 //!          [--probs] [--labels_out=labels.npy] [--result_path=result.json]
 //! dpmm snapshot --checkpoint=fit.ckpt --out=model.snap
+//! dpmm chaos [--workers_n=3] [--batches=8] [--batch_n=2000] [--heartbeat_ms=100]
+//!          [--heartbeat_grace_ms=600] [--seed=0] [--result_path=chaos.json]
 //! dpmm info [--artifacts=artifacts]
 //! ```
 
@@ -64,9 +68,11 @@ fn main() {
         Some("stream") => cmd_stream(&args),
         Some("predict") => cmd_predict(&args),
         Some("snapshot") => cmd_snapshot(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("info") => cmd_info(&args),
         Some(other) => Err(anyhow!(
-            "unknown subcommand '{other}' (fit|generate|worker|serve|stream|predict|snapshot|info)"
+            "unknown subcommand '{other}' \
+             (fit|generate|worker|serve|stream|predict|snapshot|chaos|info)"
         )),
         None => unreachable!(),
     };
@@ -88,8 +94,12 @@ fn print_help() {
          \x20 stream    serve + streaming ingest with live snapshot hot-swap\n\
          \x20           (--workers=host:port,... shards ingest across dpmm workers;\n\
          \x20            --checkpoint_path + --resume give durable, replayable state)\n\
+         \x20           (--heartbeat_ms enables proactive worker supervision;\n\
+         \x20            --connect_retries tunes transient-fault retry/backoff)\n\
          \x20 predict   score new points (against a server or a local model)\n\
          \x20 snapshot  export an immutable model snapshot from a checkpoint\n\
+         \x20 chaos     run a deterministic fault-injection drill against an\n\
+         \x20           in-process worker cluster and report detection/recovery stats\n\
          \x20 info      show PJRT platform + AOT artifact manifest\n\
          \n\
          see the doc comment in rust/src/main.rs for the full option list"
@@ -329,6 +339,11 @@ fn cmd_stream(args: &Args) -> Result<()> {
                     workers: stream_settings.workers.clone(),
                     worker_threads: stream_settings.worker_threads,
                     checkpoint: ckpt_cfg,
+                    heartbeat_ms: stream_settings.heartbeat_ms,
+                    heartbeat_grace_ms: stream_settings.heartbeat_grace_ms,
+                    connect_retries: stream_settings.connect_retries as u32,
+                    retry_base_ms: stream_settings.retry_base_ms,
+                    retry_max_ms: stream_settings.retry_max_ms,
                     ..DistributedStreamConfig::default()
                 },
             )?;
@@ -387,6 +402,11 @@ fn cmd_stream(args: &Args) -> Result<()> {
                 seed: stream_settings.seed,
                 kernel: None,
                 checkpoint: ckpt_cfg,
+                heartbeat_ms: stream_settings.heartbeat_ms,
+                heartbeat_grace_ms: stream_settings.heartbeat_grace_ms,
+                connect_retries: stream_settings.connect_retries as u32,
+                retry_base_ms: stream_settings.retry_base_ms,
+                retry_max_ms: stream_settings.retry_max_ms,
             },
         )?;
         serve::serve_blocking_streaming(engine, fitter, &settings.addr, serve_config)
@@ -475,6 +495,155 @@ fn cmd_snapshot(args: &Args) -> Result<()> {
         snap.prior.family(),
         snap.n_total
     );
+    Ok(())
+}
+
+/// Deterministic fault-injection drill: build an in-process worker
+/// cluster, script faults through [`FaultProxy`], and report what the
+/// supervision/retry machinery actually did — heartbeat detection latency,
+/// eviction + re-shard recovery time, and the retry count needed to absorb
+/// a transient connect fault. The fault *schedule* is scripted (not
+/// random), so failures land at the same protocol points on every run;
+/// only the wall-clock numbers vary.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use dpmm::backend::distributed::fault::{FaultAction, FaultProxy};
+    use dpmm::backend::distributed::worker::spawn_local;
+    use std::time::{Duration, Instant};
+
+    let workers_n = args.get_usize("workers_n")?.unwrap_or(3).max(2);
+    let batches = args.get_usize("batches")?.unwrap_or(8).max(2);
+    let batch_n = args.get_usize("batch_n")?.unwrap_or(2000).max(16);
+    let heartbeat_ms = args.get_u64("heartbeat_ms")?.unwrap_or(100).max(1);
+    let grace_ms = args.get_u64("heartbeat_grace_ms")?.unwrap_or(600).max(heartbeat_ms);
+    let seed = args.get_u64("seed")?.unwrap_or(0);
+
+    // Quick base fit on synthetic data (same recipe as the recovery bench).
+    const D: usize = 4;
+    let n_base = 4_000;
+    let total = n_base + batches * batch_n;
+    let mut rng = Xoshiro256pp::seed_from_u64(seed.wrapping_add(4242));
+    let ds = GmmSpec::default_with(total, D, 4).generate(&mut rng);
+    let train = Data::new(n_base, D, ds.points.values[..n_base * D].to_vec());
+    let ckpt = std::env::temp_dir().join(format!("dpmm_chaos_{}.ckpt", std::process::id()));
+    let mut params = DpmmParams::gaussian_default(D);
+    params.iterations = 30;
+    params.seed = seed.wrapping_add(7);
+    params.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+    params.checkpoint_every = params.iterations;
+    DpmmFit::new(params).fit(&train)?;
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt)?;
+    std::fs::remove_file(&ckpt).ok();
+    let batch_at = |b: usize| {
+        let lo = (n_base + b * batch_n) * D;
+        &ds.points.values[lo..lo + batch_n * D]
+    };
+    let cfg = |workers: Vec<String>| DistributedStreamConfig {
+        workers,
+        worker_threads: 1,
+        window: 1 << 16,
+        sweeps: 1,
+        seed,
+        heartbeat_ms,
+        heartbeat_grace_ms: grace_ms,
+        ..DistributedStreamConfig::default()
+    };
+
+    // --- drill 1: silenced worker → heartbeat detection + eviction ------
+    // Worker 0 sits behind a transparent proxy we silence mid-stream.
+    let proxy = FaultProxy::spawn(spawn_local()?, Vec::new())?;
+    let mut workers = vec![proxy.addr().to_string()];
+    for _ in 1..workers_n {
+        workers.push(spawn_local()?);
+    }
+    let mut fitter = DistributedFitter::from_snapshot(&snapshot, cfg(workers))?;
+    let half = batches / 2;
+    let mut steady = Vec::with_capacity(half);
+    for b in 0..half {
+        let t0 = Instant::now();
+        fitter.ingest(batch_at(b))?;
+        steady.push(t0.elapsed().as_secs_f64());
+    }
+    let steady_mean = steady.iter().sum::<f64>() / steady.len().max(1) as f64;
+    eprintln!("[chaos] steady: {workers_n} workers, {steady_mean:.3}s/batch");
+    proxy.kill();
+    let killed_at = Instant::now();
+    // No ingest in flight: detection must come from the heartbeat alone.
+    let deadline = Duration::from_millis(grace_ms * 5 + 2000);
+    let evicted = loop {
+        let n = fitter.poll_supervision()?;
+        if n > 0 {
+            break n;
+        }
+        if killed_at.elapsed() > deadline {
+            bail!(
+                "supervisor failed to evict the silenced worker within {:?} \
+                 (heartbeat_ms={heartbeat_ms}, grace_ms={grace_ms})",
+                deadline
+            );
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let detection_secs = killed_at.elapsed().as_secs_f64();
+    eprintln!("[chaos] detected + evicted {evicted} worker(s) in {detection_secs:.3}s");
+    let mut post = Vec::with_capacity(batches - half);
+    for b in half..batches {
+        let t0 = Instant::now();
+        fitter.ingest(batch_at(b))?;
+        post.push(t0.elapsed().as_secs_f64());
+    }
+    let post_mean = post.iter().sum::<f64>() / post.len().max(1) as f64;
+    let health = fitter.health();
+    let event_lines = fitter.events().recent();
+    let evict_events =
+        event_lines.iter().filter(|l| l.contains("\"event\":\"evict_worker\"")).count();
+    if health.halted {
+        bail!("leader halted during the drill — survivors should have absorbed the load");
+    }
+    fitter.shutdown().ok();
+    drop(fitter);
+
+    // --- drill 2: transient connect fault absorbed by retry/backoff -----
+    // The proxy refuses the first two session opens, then forwards; the
+    // leader's bounded backoff must absorb this with zero evictions.
+    let flaky = FaultProxy::spawn(spawn_local()?, vec![FaultAction::RefuseConnect(2)])?;
+    let mut workers = vec![flaky.addr().to_string()];
+    for _ in 1..workers_n {
+        workers.push(spawn_local()?);
+    }
+    let mut fitter = DistributedFitter::from_snapshot(&snapshot, cfg(workers))?;
+    fitter.ingest(batch_at(0))?;
+    let retry_lines = fitter.events().recent();
+    let retry_attempts =
+        retry_lines.iter().filter(|l| l.contains("\"event\":\"retry\"")).count();
+    let retry_health = fitter.health();
+    if retry_health.degraded {
+        bail!("transient connect fault degraded the cluster instead of being retried");
+    }
+    eprintln!("[chaos] transient connect fault absorbed after {retry_attempts} retries");
+    fitter.shutdown().ok();
+
+    let result = json::Json::obj(vec![
+        ("workers", json::Json::from(workers_n)),
+        ("batches", json::Json::from(batches)),
+        ("batch_n", json::Json::from(batch_n)),
+        ("heartbeat_ms", json::Json::from(heartbeat_ms as usize)),
+        ("heartbeat_grace_ms", json::Json::from(grace_ms as usize)),
+        ("steady_secs_per_batch", json::Json::from(steady_mean)),
+        ("detection_secs", json::Json::from(detection_secs)),
+        ("evicted_workers", json::Json::from(evicted)),
+        ("evict_events", json::Json::from(evict_events)),
+        ("post_eviction_secs_per_batch", json::Json::from(post_mean)),
+        ("degraded_after_eviction", json::Json::Bool(health.degraded)),
+        ("retry_attempts", json::Json::from(retry_attempts)),
+        ("retry_degraded", json::Json::Bool(retry_health.degraded)),
+    ]);
+    match args.get("result_path") {
+        Some(p) => {
+            std::fs::write(p, json::to_string_pretty(&result))?;
+            eprintln!("wrote {p}");
+        }
+        None => println!("{}", json::to_string(&result)),
+    }
     Ok(())
 }
 

@@ -81,6 +81,9 @@ struct Counters {
     /// whole distributed ingest).
     workers_total: AtomicU64,
     workers_alive: AtomicU64,
+    workers_healthy: AtomicU64,
+    workers_suspect: AtomicU64,
+    workers_dead: AtomicU64,
     degraded: AtomicBool,
     halted: AtomicBool,
     start: Instant,
@@ -90,6 +93,9 @@ impl Counters {
     fn set_health(&self, h: crate::stream::StreamHealth) {
         self.workers_total.store(h.workers_total as u64, Ordering::Relaxed);
         self.workers_alive.store(h.workers_alive as u64, Ordering::Relaxed);
+        self.workers_healthy.store(h.workers_healthy as u64, Ordering::Relaxed);
+        self.workers_suspect.store(h.workers_suspect as u64, Ordering::Relaxed);
+        self.workers_dead.store(h.workers_dead as u64, Ordering::Relaxed);
         self.degraded.store(h.degraded, Ordering::Relaxed);
         self.halted.store(h.halted, Ordering::Relaxed);
     }
@@ -114,6 +120,9 @@ impl Counters {
             ingest_pending: self.ingest_pending.load(Ordering::Relaxed),
             workers_total: self.workers_total.load(Ordering::Relaxed) as u32,
             workers_alive: self.workers_alive.load(Ordering::Relaxed) as u32,
+            workers_healthy: self.workers_healthy.load(Ordering::Relaxed) as u32,
+            workers_suspect: self.workers_suspect.load(Ordering::Relaxed) as u32,
+            workers_dead: self.workers_dead.load(Ordering::Relaxed) as u32,
             degraded: u8::from(self.degraded.load(Ordering::Relaxed)),
             halted: u8::from(self.halted.load(Ordering::Relaxed)),
         }
@@ -202,8 +211,7 @@ impl ServerHandle {
     pub fn stop(mut self) -> Result<()> {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.queue.ready.notify_all();
-        // Wake the blocking accept with a loopback connection.
-        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(2));
+        wake_accept(&self.addr, Duration::from_secs(2));
         if let Some(h) = self.accept.take() {
             h.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
         }
@@ -273,6 +281,9 @@ fn spawn_inner(
             ingest_pending: AtomicU64::new(0),
             workers_total: AtomicU64::new(health.workers_total as u64),
             workers_alive: AtomicU64::new(health.workers_alive as u64),
+            workers_healthy: AtomicU64::new(health.workers_healthy as u64),
+            workers_suspect: AtomicU64::new(health.workers_suspect as u64),
+            workers_dead: AtomicU64::new(health.workers_dead as u64),
             degraded: AtomicBool::new(health.degraded),
             halted: AtomicBool::new(health.halted),
             start: Instant::now(),
@@ -325,6 +336,20 @@ fn block_on(mut handle: ServerHandle) -> Result<()> {
         h.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
     }
     handle.stop()
+}
+
+/// Wake the blocking `accept` with a loopback connection so it re-checks
+/// the shutdown flag (both shutdown paths — [`ServerHandle::stop`] and the
+/// wire `Shutdown` verb — funnel through here). Best-effort, but a failed
+/// wake is worth a log line: if it never lands, the accept thread stays
+/// parked until the next real client happens to connect.
+fn wake_accept(addr: &SocketAddr, timeout: Duration) {
+    if let Err(e) = TcpStream::connect_timeout(addr, timeout) {
+        eprintln!(
+            "serve: shutdown wake-connect to {addr} failed ({e}); \
+             accept loop will exit on its next incoming connection"
+        );
+    }
 }
 
 fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
@@ -483,8 +508,11 @@ fn handle_message(
             shared.shutdown.store(true, Ordering::SeqCst);
             shared.queue.ready.notify_all();
             // Wake the accept loop so it observes the flag.
-            if let Ok(local) = stream.local_addr() {
-                let _ = TcpStream::connect_timeout(&local, Duration::from_secs(1));
+            match stream.local_addr() {
+                Ok(local) => wake_accept(&local, Duration::from_secs(1)),
+                Err(e) => eprintln!(
+                    "serve: cannot resolve listener address for shutdown wake: {e}"
+                ),
             }
             None
         }
@@ -612,8 +640,14 @@ fn ingest_reply(shared: &Shared, n: usize, d: usize, x: Vec<f64>) -> ServeMessag
 /// The single batch consumer: apply ingests (hot-swap) → drain → fuse →
 /// one engine pass → scatter.
 fn batcher_loop(shared: &Shared) {
+    // Give the fitter an idle-maintenance tick at most this often — the
+    // distributed leader uses it to run supervised eviction (heartbeat
+    // verdicts → proactive re-shard) even when no ingest traffic arrives.
+    const TICK_EVERY: Duration = Duration::from_millis(500);
+    let mut last_tick = Instant::now();
     loop {
-        // Wait for work on either queue.
+        // Wait for work on either queue; wake on the poll interval too so
+        // an idle server still ticks the fitter below.
         {
             let mut q = shared.queue.jobs.lock().unwrap();
             loop {
@@ -626,6 +660,9 @@ fn batcher_loop(shared: &Shared) {
                     .as_ref()
                     .is_some_and(|s| !s.jobs.lock().unwrap().is_empty());
                 if !q.is_empty() || ingest_waiting {
+                    break;
+                }
+                if last_tick.elapsed() >= TICK_EVERY {
                     break;
                 }
                 let (guard, _) = shared
@@ -641,6 +678,19 @@ fn batcher_loop(shared: &Shared) {
         // each subsequent pass captures the new Arc before touching points.
         if let Some(stream) = &shared.stream {
             apply_ingests(shared, stream);
+        }
+        // Idle-time fitter maintenance, outside the request-queue lock so
+        // enqueues never block on it. `tick()` is a no-op for the local
+        // fitter and for a leader without supervision enabled.
+        if last_tick.elapsed() >= TICK_EVERY {
+            last_tick = Instant::now();
+            if let Some(stream) = &shared.stream {
+                let mut fitter = stream.fitter.lock().unwrap();
+                if let Err(e) = fitter.tick() {
+                    eprintln!("serve: stream maintenance tick failed: {e:#}");
+                }
+                shared.counters.set_health(fitter.health());
+            }
         }
         // Coalesce everything pending, up to the fused-pass cap (a single
         // over-cap request still goes through whole).

@@ -18,7 +18,9 @@
 //! `Ingest`/`IngestReply` (tags 10–11) + streaming stats fields; v3 =
 //! `StatsReply` grew the cluster-health fields (`workers_total`,
 //! `workers_alive`, `degraded`, `halted`) surfacing the distributed
-//! stream's degraded mode.
+//! stream's degraded mode; v4 = `StatsReply` grew the supervisor's
+//! per-worker liveness counts (`workers_healthy`, `workers_suspect`,
+//! `workers_dead`).
 //!
 //! Clients are agnostic to the server's ingest topology: `dpmm stream`
 //! with or without `--workers` speaks the identical client-facing wire —
@@ -31,8 +33,9 @@ use std::io::{Read, Write};
 
 /// Serving-protocol version byte (independent of the fit protocol's; see
 /// `docs/WIRE_PROTOCOLS.md` for the tag table and bump rules). v3 grew
-/// `StatsReply` by the cluster-health fields.
-pub const SERVE_PROTO_VERSION: u8 = 3;
+/// `StatsReply` by the cluster-health fields; v4 by the supervisor's
+/// liveness counts.
+pub const SERVE_PROTO_VERSION: u8 = 4;
 
 /// Request flag: also return the normalized per-cluster log posterior
 /// membership matrix (`n × K`).
@@ -84,6 +87,14 @@ pub enum ServeMessage {
         workers_total: u32,
         /// Workers currently reachable.
         workers_alive: u32,
+        /// Live workers the leader's heartbeat supervisor rates Healthy
+        /// (v4; equals `workers_alive` when supervision is disabled).
+        workers_healthy: u32,
+        /// Live workers with failing probes still inside the eviction
+        /// grace period (v4; 0 when supervision is disabled).
+        workers_suspect: u32,
+        /// Workers rated Dead or already failed/evicted this session (v4).
+        workers_dead: u32,
         /// 1 = a worker failed this session and its window batches were
         /// re-sharded onto survivors (latches until restart/resume).
         degraded: u8,
@@ -164,6 +175,9 @@ impl ServeMessage {
                 ingest_pending,
                 workers_total,
                 workers_alive,
+                workers_healthy,
+                workers_suspect,
+                workers_dead,
                 degraded,
                 halted,
             } => {
@@ -179,6 +193,9 @@ impl ServeMessage {
                 e.u64(*ingest_pending);
                 e.u32(*workers_total);
                 e.u32(*workers_alive);
+                e.u32(*workers_healthy);
+                e.u32(*workers_suspect);
+                e.u32(*workers_dead);
                 e.u8(*degraded);
                 e.u8(*halted);
             }
@@ -265,6 +282,9 @@ impl ServeMessage {
                 ingest_pending: d.u64()?,
                 workers_total: d.u32()?,
                 workers_alive: d.u32()?,
+                workers_healthy: d.u32()?,
+                workers_suspect: d.u32()?,
+                workers_dead: d.u32()?,
                 degraded: d.u8()?,
                 halted: d.u8()?,
             },
@@ -345,6 +365,9 @@ mod tests {
                 ingest_pending: 128,
                 workers_total: 3,
                 workers_alive: 2,
+                workers_healthy: 1,
+                workers_suspect: 1,
+                workers_dead: 1,
                 degraded: 1,
                 halted: 0,
             },

@@ -59,8 +59,9 @@ use super::fitter::{
     fold_groups, seed_state_from_snapshot, sync_model_stats, IngestSummary, StreamFitter,
     StreamHealth,
 };
+use super::supervisor::{EventLog, Liveness, Supervisor, SupervisorConfig};
 use crate::backend::distributed::wire::{
-    self, request, write_message, BatchDelta, BatchState, Message,
+    self, request, write_message, BatchDelta, BatchState, Message, RetryPolicy,
 };
 use crate::backend::shard::AssignKernel;
 use crate::model::DpmmState;
@@ -70,10 +71,18 @@ use crate::sampler::{
 };
 use crate::serve::ModelSnapshot;
 use crate::stats::{Prior, Stats};
+use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::net::TcpStream;
 use std::path::Path;
+use std::sync::Arc;
+
+/// Salt XOR-ed into `cfg.seed` for the connect-retry jitter stream: the
+/// jitter RNG must be deterministic under a fixed seed (reproducible retry
+/// schedules) yet fully decoupled from the model RNG lineage, so retries
+/// can never perturb a trajectory.
+const RETRY_SEED_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
 
 /// Distributed streaming knobs (the leader-side analog of
 /// [`super::StreamConfig`]; per-worker thread/kernel execution is
@@ -102,6 +111,25 @@ pub struct DistributedStreamConfig {
     /// Periodic leader checkpointing (`None` = only explicit
     /// [`DistributedFitter::save_stream_checkpoint`] calls).
     pub checkpoint: Option<StreamCheckpointCfg>,
+    /// Heartbeat probe interval in milliseconds (`0` = supervision
+    /// disabled, the default). When enabled, a leader-side supervisor
+    /// thread pings every worker's control socket and rates it `Healthy →
+    /// Suspect → Dead`; `Dead` workers are proactively evicted (their
+    /// batches re-shard onto survivors) instead of waiting for sweep I/O
+    /// to fail (see [`super::supervisor`]).
+    pub heartbeat_ms: u64,
+    /// How long probes may fail (since the last successful pong) before a
+    /// worker is rated `Dead` and evicted.
+    pub heartbeat_grace_ms: u64,
+    /// Maximum connect attempts per worker-session open (`1` = no retry).
+    /// A transient socket blip absorbed here costs nothing: the model RNG
+    /// is untouched, so the trajectory is bitwise-identical to a
+    /// fault-free run.
+    pub connect_retries: u32,
+    /// Exponential-backoff base delay between connect retries (ms).
+    pub retry_base_ms: u64,
+    /// Backoff delay cap (ms).
+    pub retry_max_ms: u64,
 }
 
 impl Default for DistributedStreamConfig {
@@ -116,6 +144,11 @@ impl Default for DistributedStreamConfig {
             seed: 0,
             kernel: None,
             checkpoint: None,
+            heartbeat_ms: 0,
+            heartbeat_grace_ms: 3000,
+            connect_retries: 3,
+            retry_base_ms: 50,
+            retry_max_ms: 2000,
         }
     }
 }
@@ -184,6 +217,53 @@ fn open_session(
     }
 }
 
+/// [`open_session`] under the connect-retry policy: transient socket blips
+/// (refused / reset / mid-frame EOF) are retried with bounded seeded
+/// backoff, each retry logged as a structured `retry` event; fatal errors
+/// (protocol-level) short-circuit. See `wire::classify_error`.
+fn open_session_retry(
+    addr: &str,
+    prior: &Prior,
+    threads: usize,
+    kernel: u8,
+    join: bool,
+    retry: &mut RetryPolicy,
+    events: &EventLog,
+) -> Result<TcpStream> {
+    retry.run(
+        &format!("open stream session to {addr}"),
+        || open_session(addr, prior, threads, kernel, join),
+        |ev| {
+            events.emit(
+                "retry",
+                vec![
+                    ("what", Json::from(ev.what)),
+                    ("addr", Json::from(addr)),
+                    ("attempt", Json::from(ev.attempt as usize)),
+                    ("max_attempts", Json::from(ev.max_attempts as usize)),
+                    ("delay_ms", Json::from(ev.delay.as_millis() as f64)),
+                    ("error", Json::from(format!("{:#}", ev.error))),
+                ],
+            );
+        },
+    )
+}
+
+/// Start the heartbeat supervisor if the config enables it.
+fn spawn_supervisor(
+    cfg: &DistributedStreamConfig,
+    addrs: &[String],
+    events: &Arc<EventLog>,
+) -> Option<Supervisor> {
+    (cfg.heartbeat_ms > 0).then(|| {
+        Supervisor::spawn(
+            addrs,
+            SupervisorConfig::new(cfg.heartbeat_ms, cfg.heartbeat_grace_ms),
+            Arc::clone(events),
+        )
+    })
+}
+
 /// Leader of a distributed streaming cluster: implements the same
 /// [`StreamFitter`] surface as the local fitter, with sweeps executed by
 /// TCP workers, worker-failure recovery, elastic membership, and
@@ -233,6 +313,15 @@ pub struct DistributedFitter {
     /// with this reason; recovery is `dpmm stream --resume` from the last
     /// checkpoint (or a fresh start from a snapshot).
     halted: Option<String>,
+    /// Structured recovery event log (shared with the supervisor thread
+    /// and the retry callbacks; see [`EventLog`]).
+    events: Arc<EventLog>,
+    /// Heartbeat registry (`None` = supervision disabled). Verdicts are
+    /// consumed by [`Self::poll_supervision`].
+    supervisor: Option<Supervisor>,
+    /// Connect-retry policy with its own seeded jitter stream (never the
+    /// model RNG).
+    retry: RetryPolicy,
 }
 
 impl DistributedFitter {
@@ -257,11 +346,20 @@ impl DistributedFitter {
         let prior = state.prior.clone();
         let win: Vec<[Stats; 2]> = prior.empty_bundle(k);
         let kb = kernel_byte(cfg.kernel);
+        let events = EventLog::from_env();
+        let mut retry = RetryPolicy::new(
+            cfg.connect_retries,
+            cfg.retry_base_ms,
+            cfg.retry_max_ms,
+            cfg.seed ^ RETRY_SEED_SALT,
+        );
         let mut slots = Vec::with_capacity(cfg.workers.len());
         for addr in &cfg.workers {
-            let conn = open_session(addr, &prior, cfg.worker_threads, kb, false)?;
+            let conn =
+                open_session_retry(addr, &prior, cfg.worker_threads, kb, false, &mut retry, &events)?;
             slots.push(WorkerSlot { addr: addr.clone(), conn: Some(conn), points: 0, retired: false });
         }
+        let supervisor = spawn_supervisor(&cfg, &cfg.workers, &events);
         let seed = cfg.seed;
         Ok(DistributedFitter {
             state,
@@ -277,6 +375,9 @@ impl DistributedFitter {
             batches_since_ckpt: 0,
             degraded: None,
             halted: None,
+            events,
+            supervisor,
+            retry,
         })
     }
 
@@ -312,11 +413,20 @@ impl DistributedFitter {
         let k = state.k();
         let d = prior.dim();
         let kb = kernel_byte(cfg.kernel);
+        let events = EventLog::from_env();
+        let mut retry = RetryPolicy::new(
+            cfg.connect_retries,
+            cfg.retry_base_ms,
+            cfg.retry_max_ms,
+            cfg.seed ^ RETRY_SEED_SALT,
+        );
         let mut slots = Vec::with_capacity(cfg.workers.len());
         for addr in &cfg.workers {
-            let conn = open_session(addr, &prior, cfg.worker_threads, kb, false)?;
+            let conn =
+                open_session_retry(addr, &prior, cfg.worker_threads, kb, false, &mut retry, &events)?;
             slots.push(WorkerSlot { addr: addr.clone(), conn: Some(conn), points: 0, retired: false });
         }
+        let supervisor = spawn_supervisor(&cfg, &cfg.workers, &events);
         let mut fitter = DistributedFitter {
             state,
             base: ck.base,
@@ -337,6 +447,9 @@ impl DistributedFitter {
             batches_since_ckpt: 0,
             degraded: None,
             halted: None,
+            events,
+            supervisor,
+            retry,
         };
         // Re-install every batch verbatim, ascending id, least-loaded
         // worker first (ownership is trajectory-neutral).
@@ -414,13 +527,70 @@ impl DistributedFitter {
     }
 
     /// Cluster liveness/degradation summary (what `/stats` surfaces).
+    /// With supervision enabled the healthy/suspect/dead counts are the
+    /// heartbeat registry's live verdicts; without it, every reachable
+    /// worker counts as healthy and every failed slot as dead.
     pub fn health(&self) -> StreamHealth {
+        let total = self.num_workers() as u32;
+        let alive = self.workers_alive() as u32;
+        let (healthy, suspect, dead_live) = match &self.supervisor {
+            Some(sup) => sup.counts(),
+            None => (alive, 0, 0),
+        };
         StreamHealth {
-            workers_total: self.num_workers() as u32,
-            workers_alive: self.workers_alive() as u32,
+            workers_total: total,
+            workers_alive: alive,
+            workers_healthy: healthy,
+            workers_suspect: suspect,
+            workers_dead: dead_live + total.saturating_sub(alive),
             degraded: self.degraded.is_some(),
             halted: self.halted.is_some(),
         }
+    }
+
+    /// The structured recovery event log (shared with the supervisor
+    /// thread and retry callbacks). Tests assert against
+    /// [`EventLog::recent`]; operators point `DPMM_EVENT_LOG` at a file.
+    pub fn events(&self) -> &Arc<EventLog> {
+        &self.events
+    }
+
+    /// Act on the heartbeat registry's verdicts: proactively evict every
+    /// worker currently rated [`Liveness::Dead`] and re-shard its window
+    /// batches onto survivors — *before* any ingest or sweep trips over
+    /// the corpse. Called at the top of every ingest and from the serving
+    /// batcher's idle [`StreamFitter::tick`]; tests and embedding callers
+    /// may call it directly. Returns the number of workers evicted. No-op
+    /// (`Ok(0)`) when supervision is disabled or the stream is halted.
+    pub fn poll_supervision(&mut self) -> Result<usize> {
+        if self.halted.is_some() {
+            return Ok(0);
+        }
+        let dead: Vec<usize> = match &self.supervisor {
+            Some(sup) => sup
+                .verdicts()
+                .into_iter()
+                .filter(|&(w, l)| l == Liveness::Dead && self.slots[w].conn.is_some())
+                .map(|(w, _)| w)
+                .collect(),
+            None => return Ok(0),
+        };
+        if dead.is_empty() {
+            return Ok(0);
+        }
+        for &w in &dead {
+            self.events.emit(
+                "evict_worker",
+                vec![
+                    ("worker", Json::from(w)),
+                    ("addr", Json::from(self.slots[w].addr.as_str())),
+                    ("reason", Json::from("heartbeat grace expired")),
+                ],
+            );
+            self.fail_worker(w, "heartbeat grace expired (supervised eviction)");
+        }
+        self.recover_dead_workers()?;
+        Ok(dead.len())
     }
 
     /// Freeze the current model into a serving snapshot.
@@ -473,6 +643,17 @@ impl DistributedFitter {
         if self.slots[w].conn.take().is_some() {
             let msg = format!("worker {w} ({}) failed: {why}", self.slots[w].addr);
             eprintln!("dpmm stream: {msg}; re-sharding its batches onto survivors");
+            self.events.emit(
+                "worker_failed",
+                vec![
+                    ("worker", Json::from(w)),
+                    ("addr", Json::from(self.slots[w].addr.as_str())),
+                    ("reason", Json::from(why)),
+                ],
+            );
+            if let Some(sup) = &self.supervisor {
+                sup.retire(w);
+            }
             if self.degraded.is_none() {
                 self.degraded = Some(msg);
             }
@@ -502,6 +683,7 @@ impl DistributedFitter {
     /// Latch the terminal halt reason (first failure wins).
     fn halt(&mut self, why: &str) {
         if self.halted.is_none() {
+            self.events.emit("halt", vec![("reason", Json::from(why))]);
             self.halted = Some(why.to_string());
         }
     }
@@ -550,6 +732,14 @@ impl DistributedFitter {
                         rec.owner = owner;
                         self.slots[owner].points += n;
                         sync_model_stats(&mut self.state, &self.base, &self.win);
+                        self.events.emit(
+                            "reingest",
+                            vec![
+                                ("batch", Json::from(id as usize)),
+                                ("to", Json::from(owner)),
+                                ("points", Json::from(n)),
+                            ],
+                        );
                         return Ok(());
                     }
                     Err(e) => self.fail_worker(owner, &format!("{e:#}")),
@@ -607,12 +797,14 @@ impl DistributedFitter {
             bail!("stream is halted ({why}); cannot join workers");
         }
         let prior = self.state.prior.clone();
-        let conn = open_session(
+        let conn = open_session_retry(
             addr,
             &prior,
             self.cfg.worker_threads,
             kernel_byte(self.cfg.kernel),
             true,
+            &mut self.retry,
+            &self.events,
         )?;
         self.slots.push(WorkerSlot {
             addr: addr.to_string(),
@@ -621,6 +813,13 @@ impl DistributedFitter {
             retired: false,
         });
         let new_idx = self.slots.len() - 1;
+        if let Some(sup) = &self.supervisor {
+            sup.register(addr);
+        }
+        self.events.emit(
+            "join",
+            vec![("worker", Json::from(new_idx)), ("addr", Json::from(addr))],
+        );
         self.rebalance_onto(new_idx)?;
         self.recover_dead_workers()
     }
@@ -661,6 +860,13 @@ impl DistributedFitter {
         }
         self.slots[w].conn = None;
         self.slots[w].retired = true;
+        if let Some(sup) = &self.supervisor {
+            sup.retire(w);
+        }
+        self.events.emit(
+            "remove",
+            vec![("worker", Json::from(w)), ("addr", Json::from(addr))],
+        );
         self.recover_dead_workers()
     }
 
@@ -753,6 +959,15 @@ impl DistributedFitter {
                 Ok(Message::Ack) => {
                     self.fifo[pos].owner = target;
                     self.slots[target].points += n;
+                    self.events.emit(
+                        "rebalance",
+                        vec![
+                            ("batch", Json::from(id as usize)),
+                            ("from", Json::from(source)),
+                            ("to", Json::from(target)),
+                            ("points", Json::from(n)),
+                        ],
+                    );
                     return Ok(());
                 }
                 Ok(other) => {
@@ -876,6 +1091,10 @@ impl DistributedFitter {
                  with --resume, or restart the stream leader from a snapshot"
             );
         }
+        // Act on heartbeat verdicts first: a worker the supervisor already
+        // declared dead is evicted before this ingest routes anything at
+        // it (proactive, instead of burning a send + I/O timeout on it).
+        self.poll_supervision()?;
         let d = self.dim();
         if batch.len() % d != 0 {
             bail!(
@@ -1185,6 +1404,9 @@ impl StreamFitter for DistributedFitter {
     }
     fn health(&self) -> StreamHealth {
         DistributedFitter::health(self)
+    }
+    fn tick(&mut self) -> Result<()> {
+        DistributedFitter::poll_supervision(self).map(|_| ())
     }
 }
 

@@ -63,7 +63,7 @@ use std::path::Path;
 const FOLD_TILE: usize = 128;
 
 /// Liveness/degradation summary of a stream fitter's execution substrate,
-/// surfaced through the serving `/stats` endpoint (serve protocol v3).
+/// surfaced through the serving `/stats` endpoint (serve protocol v4).
 /// Local fitters report zero workers and are never degraded; the
 /// distributed leader reports its worker fleet.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,6 +73,15 @@ pub struct StreamHealth {
     pub workers_total: u32,
     /// Workers currently reachable.
     pub workers_alive: u32,
+    /// Live workers the supervisor's heartbeat registry currently rates
+    /// `Healthy` (fit-wire v4 `Ping`/`Pong`). With supervision disabled
+    /// every live worker counts as healthy.
+    pub workers_healthy: u32,
+    /// Live workers rated `Suspect`: probes failing, but still inside the
+    /// eviction grace period. Always 0 with supervision disabled.
+    pub workers_suspect: u32,
+    /// Workers rated `Dead` or already failed/evicted this session.
+    pub workers_dead: u32,
     /// A worker failed this session and its batches were re-sharded onto
     /// survivors (latches until restart/resume — the failure stays
     /// visible even after capacity recovers via joins).
@@ -85,7 +94,15 @@ pub struct StreamHealth {
 impl StreamHealth {
     /// Health of a single-process fitter: no workers, never degraded.
     pub fn local() -> StreamHealth {
-        StreamHealth { workers_total: 0, workers_alive: 0, degraded: false, halted: false }
+        StreamHealth {
+            workers_total: 0,
+            workers_alive: 0,
+            workers_healthy: 0,
+            workers_suspect: 0,
+            workers_dead: 0,
+            degraded: false,
+            halted: false,
+        }
     }
 }
 
@@ -112,6 +129,13 @@ pub trait StreamFitter: Send {
     /// mode), mirrored into the serving `/stats` reply.
     fn health(&self) -> StreamHealth {
         StreamHealth::local()
+    }
+    /// Idle-time maintenance hook, called by the serving batcher between
+    /// ingest groups: the distributed leader acts on supervisor verdicts
+    /// here (proactive eviction + re-shard) so a dead worker is handled
+    /// even when no ingest is in flight. No-op for local fitters.
+    fn tick(&mut self) -> Result<()> {
+        Ok(())
     }
 }
 

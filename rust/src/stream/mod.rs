@@ -13,6 +13,10 @@
 //! * [`DistributedFitter`] — the same contract sharded across `dpmm
 //!   worker` processes (`dpmm stream --workers=...`), with worker-failure
 //!   recovery, elastic join/leave, and checkpointed leader durability;
+//! * [`supervisor`] — proactive cluster supervision: a heartbeat registry
+//!   rating each worker `Healthy → Suspect → Dead` (fit-wire v4
+//!   `Ping`/`Pong`), plus the structured JSON [`EventLog`] every recovery
+//!   decision is written to;
 //! * [`checkpoint`] — the `DPMMCKPT` v3 streaming-state section both
 //!   fitters save and `--resume` replays bitwise-identically.
 //!
@@ -33,8 +37,10 @@ pub mod buffer;
 pub mod checkpoint;
 pub mod distributed;
 pub mod fitter;
+pub mod supervisor;
 
 pub use buffer::StreamBuffer;
 pub use checkpoint::{load_stream_checkpoint, StreamCheckpoint, StreamCheckpointCfg};
 pub use distributed::{DistributedFitter, DistributedStreamConfig};
 pub use fitter::{IncrementalFitter, IngestSummary, StreamConfig, StreamFitter, StreamHealth};
+pub use supervisor::{EventLog, Liveness, Supervisor, SupervisorConfig};

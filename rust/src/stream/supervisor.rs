@@ -1,0 +1,453 @@
+//! Cluster supervision: heartbeat registry + structured recovery event log.
+//!
+//! Through PR 5 the distributed leader was purely *reactive*: a dead worker
+//! was only discovered when sweep/ingest I/O against it failed (worst case
+//! one full `DPMM_NET_TIMEOUT_SECS` later). This module adds the proactive
+//! half of ROADMAP item 5:
+//!
+//! * [`Supervisor`] — a leader-side thread that probes every registered
+//!   worker's control socket with the fit-wire v4 `Ping`/`Pong` verbs on a
+//!   configurable interval, and tracks per-worker liveness through the
+//!   `Healthy → Suspect → Dead` state machine: a failed probe makes a
+//!   worker `Suspect`; once no probe has succeeded for the grace period it
+//!   is `Dead`. The fitter polls verdicts between ingests (and from the
+//!   serving batcher's `tick`) and runs the PR 5 eviction + re-shard
+//!   machinery *before* any sweep trips over the corpse.
+//! * [`EventLog`] — every recovery decision (retry, liveness transition,
+//!   eviction, re-ingest, rebalance, halt) emits one timestamped JSON line
+//!   to stderr or a file (`DPMM_EVENT_LOG=path`), and into a bounded
+//!   in-memory ring that tests assert against without scraping stderr.
+//!
+//! Probes ride fresh short-lived connections (`connect → Ping → Pong →
+//! close`): workers answer `Ping` in any session state and serve each
+//! connection on its own thread, so heartbeats never queue behind a sweep.
+//! Supervision is **off by default** (`heartbeat_ms = 0`) and never draws
+//! from the model RNG, so enabling it cannot perturb a trajectory — see
+//! docs/DETERMINISM.md.
+
+use crate::backend::distributed::wire::{self, Message};
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+// ---------- structured event log ----------
+
+/// Lines kept in the in-memory ring for test/debug inspection.
+const RECENT_CAP: usize = 4096;
+
+enum EventSink {
+    Stderr,
+    File(std::fs::File),
+}
+
+/// Structured recovery event log: one compact JSON object per line, with
+/// millisecond UNIX timestamps. Shared (`Arc`) between the fitter, its
+/// supervisor thread, and the retry layer's callbacks.
+pub struct EventLog {
+    sink: Mutex<EventSink>,
+    recent: Mutex<VecDeque<String>>,
+}
+
+impl EventLog {
+    /// Log to stderr (the default sink).
+    pub fn to_stderr() -> EventLog {
+        EventLog { sink: Mutex::new(EventSink::Stderr), recent: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Log to a file, appending.
+    pub fn to_file(path: &std::path::Path) -> Result<EventLog> {
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening event log {}", path.display()))?;
+        Ok(EventLog { sink: Mutex::new(EventSink::File(file)), recent: Mutex::new(VecDeque::new()) })
+    }
+
+    /// Sink selected by `DPMM_EVENT_LOG` (a path; unset/empty = stderr).
+    /// Falls back to stderr (with a warning) if the path can't be opened.
+    pub fn from_env() -> Arc<EventLog> {
+        match std::env::var("DPMM_EVENT_LOG") {
+            Ok(path) if !path.is_empty() => match EventLog::to_file(std::path::Path::new(&path)) {
+                Ok(log) => Arc::new(log),
+                Err(e) => {
+                    eprintln!("warning: {e:#}; event log falls back to stderr");
+                    Arc::new(EventLog::to_stderr())
+                }
+            },
+            _ => Arc::new(EventLog::to_stderr()),
+        }
+    }
+
+    /// Emit one event line. `fields` are appended to the implicit
+    /// `ts_ms`/`event` pair; the line goes to the sink and the ring.
+    pub fn emit(&self, event: &str, fields: Vec<(&str, Json)>) {
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        let mut pairs = vec![("ts_ms", Json::from(ts_ms)), ("event", Json::from(event))];
+        pairs.extend(fields);
+        let line = json::to_string(&Json::obj(pairs));
+        match &mut *self.sink.lock().unwrap() {
+            EventSink::Stderr => eprintln!("{line}"),
+            EventSink::File(f) => {
+                let _ = writeln!(f, "{line}");
+            }
+        }
+        let mut recent = self.recent.lock().unwrap();
+        if recent.len() == RECENT_CAP {
+            recent.pop_front();
+        }
+        recent.push_back(line);
+    }
+
+    /// The most recent event lines, oldest first (bounded ring).
+    pub fn recent(&self) -> Vec<String> {
+        self.recent.lock().unwrap().iter().cloned().collect()
+    }
+}
+
+// ---------- liveness registry ----------
+
+/// Per-worker liveness verdict of the heartbeat registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Liveness {
+    /// Last probe succeeded.
+    Healthy,
+    /// Probes are failing, but the grace period has not yet elapsed since
+    /// the last success — could be a blip.
+    Suspect,
+    /// No successful probe within the grace period: evict.
+    Dead,
+}
+
+impl Liveness {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Liveness::Healthy => "healthy",
+            Liveness::Suspect => "suspect",
+            Liveness::Dead => "dead",
+        }
+    }
+}
+
+/// Supervision knobs (leader side).
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorConfig {
+    /// Probe round interval.
+    pub interval_ms: u64,
+    /// How long probes may fail (since the last success) before the worker
+    /// is rated `Dead`.
+    pub grace_ms: u64,
+    /// Per-probe connect/IO timeout.
+    pub probe_timeout_ms: u64,
+}
+
+impl SupervisorConfig {
+    /// Derive a config from the two user-facing knobs: probes time out at
+    /// the grace period (clamped to [50 ms, 1 s]) so one wedged worker
+    /// can't stall a probe round for long.
+    pub fn new(interval_ms: u64, grace_ms: u64) -> SupervisorConfig {
+        SupervisorConfig {
+            interval_ms: interval_ms.max(1),
+            grace_ms,
+            probe_timeout_ms: grace_ms.clamp(50, 1000),
+        }
+    }
+}
+
+/// One registered worker's probe state.
+struct Probe {
+    addr: String,
+    /// `false` once the fitter evicted or gracefully removed the worker —
+    /// the slot index stays valid but probing stops.
+    enabled: bool,
+    liveness: Liveness,
+    last_ok: Instant,
+    consecutive_failures: u32,
+    /// Last `Pong` payload (window points / batches / verb counter).
+    load: u64,
+    depth: u64,
+    generation: u64,
+}
+
+struct Registry {
+    probes: Mutex<Vec<Probe>>,
+    stop: AtomicBool,
+    cfg: SupervisorConfig,
+    events: Arc<EventLog>,
+}
+
+/// Leader-side heartbeat supervisor: one background thread probing every
+/// enabled registry entry. Registration order is the fitter's worker-slot
+/// order, so verdict indices map 1:1 onto slots.
+pub struct Supervisor {
+    shared: Arc<Registry>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// One `connect → Ping → Pong → close` probe.
+fn probe_once(addr: &str, timeout: Duration) -> Result<(u64, u64, u64)> {
+    use std::net::ToSocketAddrs;
+    let sa = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .with_context(|| format!("no socket address for {addr}"))?;
+    let mut s = TcpStream::connect_timeout(&sa, timeout)?;
+    s.set_nodelay(true).ok();
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    match wire::request(&mut s, &Message::Ping)? {
+        Message::Pong { load, depth, generation } => Ok((load, depth, generation)),
+        other => bail!("unexpected heartbeat reply {other:?}"),
+    }
+}
+
+fn supervise_loop(reg: &Registry) {
+    let timeout = Duration::from_millis(reg.cfg.probe_timeout_ms);
+    let grace = Duration::from_millis(reg.cfg.grace_ms);
+    loop {
+        if reg.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let targets: Vec<(usize, String)> = {
+            let g = reg.probes.lock().unwrap();
+            g.iter()
+                .enumerate()
+                .filter(|(_, p)| p.enabled)
+                .map(|(i, p)| (i, p.addr.clone()))
+                .collect()
+        };
+        for (idx, addr) in targets {
+            if reg.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let res = probe_once(&addr, timeout);
+            let mut g = reg.probes.lock().unwrap();
+            let p = &mut g[idx];
+            if !p.enabled {
+                continue; // evicted while we probed
+            }
+            let prev = p.liveness;
+            match res {
+                Ok((load, depth, generation)) => {
+                    p.load = load;
+                    p.depth = depth;
+                    p.generation = generation;
+                    p.last_ok = Instant::now();
+                    p.consecutive_failures = 0;
+                    p.liveness = Liveness::Healthy;
+                }
+                Err(e) => {
+                    p.consecutive_failures += 1;
+                    p.liveness = if p.last_ok.elapsed() >= grace {
+                        Liveness::Dead
+                    } else {
+                        Liveness::Suspect
+                    };
+                    if p.liveness != prev {
+                        reg.events.emit(
+                            "liveness",
+                            vec![
+                                ("worker", Json::from(idx)),
+                                ("addr", Json::from(addr.as_str())),
+                                ("from", Json::from(prev.as_str())),
+                                ("to", Json::from(p.liveness.as_str())),
+                                ("failures", Json::from(p.consecutive_failures as usize)),
+                                ("error", Json::from(format!("{e:#}"))),
+                            ],
+                        );
+                    }
+                }
+            }
+            if p.liveness != prev && p.liveness == Liveness::Healthy {
+                reg.events.emit(
+                    "liveness",
+                    vec![
+                        ("worker", Json::from(idx)),
+                        ("addr", Json::from(addr.as_str())),
+                        ("from", Json::from(prev.as_str())),
+                        ("to", Json::from("healthy")),
+                    ],
+                );
+            }
+        }
+        // Sleep the interval in small steps so stop/drop returns promptly.
+        let mut left = reg.cfg.interval_ms;
+        while left > 0 && !reg.stop.load(Ordering::SeqCst) {
+            let step = left.min(10);
+            std::thread::sleep(Duration::from_millis(step));
+            left -= step;
+        }
+    }
+}
+
+impl Supervisor {
+    /// Start supervising `addrs` (in worker-slot order).
+    pub fn spawn(addrs: &[String], cfg: SupervisorConfig, events: Arc<EventLog>) -> Supervisor {
+        let probes = addrs
+            .iter()
+            .map(|a| Probe {
+                addr: a.clone(),
+                enabled: true,
+                liveness: Liveness::Healthy,
+                last_ok: Instant::now(),
+                consecutive_failures: 0,
+                load: 0,
+                depth: 0,
+                generation: 0,
+            })
+            .collect();
+        let shared = Arc::new(Registry {
+            probes: Mutex::new(probes),
+            stop: AtomicBool::new(false),
+            cfg,
+            events,
+        });
+        let reg = Arc::clone(&shared);
+        let thread = std::thread::spawn(move || supervise_loop(&reg));
+        Supervisor { shared, thread: Some(thread) }
+    }
+
+    /// Register a newly joined worker (must mirror the fitter's slot push).
+    pub fn register(&self, addr: &str) {
+        self.shared.probes.lock().unwrap().push(Probe {
+            addr: addr.to_string(),
+            enabled: true,
+            liveness: Liveness::Healthy,
+            last_ok: Instant::now(),
+            consecutive_failures: 0,
+            load: 0,
+            depth: 0,
+            generation: 0,
+        });
+    }
+
+    /// Stop probing slot `idx` (evicted or gracefully removed). The index
+    /// keeps its place so later registrations stay slot-aligned.
+    pub fn retire(&self, idx: usize) {
+        if let Some(p) = self.shared.probes.lock().unwrap().get_mut(idx) {
+            p.enabled = false;
+        }
+    }
+
+    /// Current verdicts for enabled probes, as `(slot index, liveness)`.
+    pub fn verdicts(&self) -> Vec<(usize, Liveness)> {
+        self.shared
+            .probes
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.enabled)
+            .map(|(i, p)| (i, p.liveness))
+            .collect()
+    }
+
+    /// `(healthy, suspect, dead)` counts over enabled probes.
+    pub fn counts(&self) -> (u32, u32, u32) {
+        let g = self.shared.probes.lock().unwrap();
+        let mut c = (0u32, 0u32, 0u32);
+        for p in g.iter().filter(|p| p.enabled) {
+            match p.liveness {
+                Liveness::Healthy => c.0 += 1,
+                Liveness::Suspect => c.1 += 1,
+                Liveness::Dead => c.2 += 1,
+            }
+        }
+        c
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::distributed::fault::FaultProxy;
+    use crate::backend::distributed::worker::spawn_local;
+
+    #[test]
+    fn event_log_ring_keeps_lines_in_order() {
+        let log = EventLog::to_stderr();
+        log.emit("retry", vec![("worker", Json::from(1usize))]);
+        log.emit("evict", vec![("worker", Json::from(2usize))]);
+        let lines = log.recent();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"event\":\"retry\"") && lines[0].contains("\"ts_ms\""));
+        assert!(lines[1].contains("\"event\":\"evict\"") && lines[1].contains("\"worker\":2"));
+        // Every line is valid JSON.
+        for l in &lines {
+            json::parse(l).unwrap();
+        }
+    }
+
+    #[test]
+    fn event_log_file_sink_appends_lines() {
+        let path = std::env::temp_dir().join(format!("dpmm_eventlog_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let log = EventLog::to_file(&path).unwrap();
+        log.emit("halt", vec![("why", Json::from("test"))]);
+        log.emit("join", vec![("addr", Json::from("x:1"))]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().next().unwrap().contains("\"event\":\"halt\""));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn heartbeat_rates_live_worker_healthy_and_silenced_worker_dead() {
+        let proxy = FaultProxy::spawn(spawn_local().unwrap(), Vec::new()).unwrap();
+        let events = Arc::new(EventLog::to_stderr());
+        let sup = Supervisor::spawn(
+            &[proxy.addr().to_string()],
+            SupervisorConfig::new(25, 250),
+            Arc::clone(&events),
+        );
+        let deadline = Instant::now() + Duration::from_secs(10);
+        // Healthy while the proxy forwards…
+        loop {
+            let v = sup.verdicts();
+            if v == vec![(0, Liveness::Healthy)] {
+                break;
+            }
+            assert!(Instant::now() < deadline, "worker never rated healthy: {v:?}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(sup.counts(), (1, 0, 0));
+        // …Dead within the grace period once silenced.
+        proxy.kill();
+        let silenced = Instant::now();
+        loop {
+            if sup.verdicts() == vec![(0, Liveness::Dead)] {
+                break;
+            }
+            assert!(Instant::now() < deadline, "worker never rated dead");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // Detection latency is bounded by grace + one probe round (+ slack).
+        assert!(silenced.elapsed() < Duration::from_secs(5));
+        assert_eq!(sup.counts(), (0, 0, 1));
+        // The transition trail is in the event log.
+        let lines = events.recent();
+        assert!(lines.iter().any(|l| l.contains("\"to\":\"suspect\"")), "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("\"to\":\"dead\"")), "{lines:?}");
+        sup.retire(0);
+        assert_eq!(sup.counts(), (0, 0, 0));
+        assert!(sup.verdicts().is_empty());
+    }
+}

@@ -1,0 +1,293 @@
+//! Supervised cluster membership — the PR-6 acceptance suite for
+//! `dpmm stream` heartbeat supervision, retry/backoff, and the
+//! fault-injection harness:
+//!
+//! * **proactive eviction**: a worker silenced by [`FaultProxy::kill`] is
+//!   detected by the heartbeat registry and evicted within the configured
+//!   grace period — with **no in-flight sweep** (the leader only polls
+//!   supervision verdicts) — and its window slice re-shards onto the
+//!   survivors;
+//! * **transient absorption**: a scripted connect fault (refuse ×2, then
+//!   accept) is absorbed by the bounded retry/backoff layer with a
+//!   trajectory **bitwise-identical** to the fault-free run and zero
+//!   evictions;
+//! * **no premature halt**: the leader keeps ingesting while ≥ 1 worker is
+//!   live, across two successive supervised evictions, and every
+//!   eviction/retry/re-shard decision appears in the structured JSON
+//!   event log.
+//!
+//! The contracts these tests pin are specified in docs/DETERMINISM.md
+//! ("Supervision & fault model" in docs/ARCHITECTURE.md describes the
+//! machinery).
+
+use dpmm::backend::distributed::fault::{FaultAction, FaultProxy};
+use dpmm::backend::distributed::worker::spawn_local;
+use dpmm::backend::shard::AssignKernel;
+use dpmm::model::DpmmState;
+use dpmm::prelude::*;
+use dpmm::stats::{NiwPrior, Prior, Stats};
+use dpmm::stream::{DistributedFitter, DistributedStreamConfig};
+use dpmm::util::json;
+use std::time::{Duration, Instant};
+
+/// Seed snapshot from poured statistics (no MCMC) — three well-separated
+/// blobs, mirroring `integration_stream_recovery.rs`.
+fn seed_snapshot(d: usize) -> ModelSnapshot {
+    let prior = Prior::Niw(NiwPrior::weak(d));
+    let mut rng = Xoshiro256pp::seed_from_u64(123);
+    let mut state = DpmmState::new(4.0, prior.clone(), 3, 300, &mut rng);
+    for (k, center) in [-8.0f64, 0.0, 8.0].into_iter().enumerate() {
+        let mut s = prior.empty_stats();
+        for i in 0..100 {
+            let x: Vec<f64> = (0..d)
+                .map(|j| center + 0.15 * ((i * (j + 3) + k) % 13) as f64 - 0.9)
+                .collect();
+            s.add(&x);
+        }
+        state.clusters[k].stats = s;
+    }
+    ModelSnapshot::from_state(&state).unwrap()
+}
+
+/// Deterministic blob-hopping mini-batches (`count` batches × `n` points).
+fn stream_batches(d: usize, count: usize, n: usize) -> Vec<Vec<f64>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(77);
+    let centers = [-8.0f64, 0.0, 8.0];
+    (0..count)
+        .map(|_| {
+            let mut batch = Vec::with_capacity(n * d);
+            for _ in 0..n {
+                let c = centers[rng.next_range(3)];
+                for _ in 0..d {
+                    batch.push(c + (rng.next_f64() - 0.5) * 1.4);
+                }
+            }
+            batch
+        })
+        .collect()
+}
+
+fn state_stats(state: &DpmmState) -> Vec<(Stats, [Stats; 2])> {
+    state.clusters.iter().map(|c| (c.stats.clone(), c.sub_stats.clone())).collect()
+}
+
+type Fingerprint = (Vec<f64>, Vec<(Stats, [Stats; 2])>, u64, usize);
+
+fn fingerprint(f: &DistributedFitter) -> Fingerprint {
+    (f.counts(), state_stats(f.state()), f.ingested(), f.window_len())
+}
+
+const HEARTBEAT_MS: u64 = 50;
+const GRACE_MS: u64 = 600;
+
+fn supervised_cfg(workers: Vec<String>) -> DistributedStreamConfig {
+    DistributedStreamConfig {
+        workers,
+        worker_threads: 2,
+        window: 1 << 16,
+        sweeps: 1,
+        alpha: 4.0,
+        seed: 2024,
+        kernel: Some(AssignKernel::Tiled),
+        heartbeat_ms: HEARTBEAT_MS,
+        heartbeat_grace_ms: GRACE_MS,
+        ..DistributedStreamConfig::default()
+    }
+}
+
+/// Drive `poll_supervision` until it reports >= 1 eviction; returns the
+/// latency from `since` to the eviction. Panics past `deadline`.
+fn wait_for_eviction(f: &mut DistributedFitter, since: Instant, deadline: Duration) -> Duration {
+    loop {
+        let evicted = f.poll_supervision().expect("supervision poll must not error");
+        if evicted > 0 {
+            return since.elapsed();
+        }
+        assert!(
+            since.elapsed() < deadline,
+            "supervisor failed to evict the silenced worker within {deadline:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn count_events(lines: &[String], event: &str) -> usize {
+    let needle = format!("\"event\":\"{event}\"");
+    lines.iter().filter(|l| l.contains(&needle)).count()
+}
+
+#[test]
+fn silenced_worker_is_evicted_by_heartbeat_within_grace_and_resharded() {
+    let d = 2;
+    let snap = seed_snapshot(d);
+    let batches = stream_batches(d, 6, 60);
+    // Worker 0 sits behind a transparent proxy; the others are direct.
+    let proxy = FaultProxy::spawn(spawn_local().unwrap(), Vec::new()).unwrap();
+    let workers = vec![
+        proxy.addr().to_string(),
+        spawn_local().unwrap(),
+        spawn_local().unwrap(),
+    ];
+    let mut f = DistributedFitter::from_snapshot(&snap, supervised_cfg(workers)).unwrap();
+    for b in &batches[..3] {
+        f.ingest(b).unwrap();
+    }
+    let owned_before = f.worker_points();
+    assert!(
+        owned_before[0] > 0,
+        "the proxied worker must own window points for the re-shard to matter: \
+         {owned_before:?}"
+    );
+
+    // Silence the worker. From here the leader performs NO ingest (so no
+    // sweep is in flight): detection must come from the heartbeat alone.
+    proxy.kill();
+    let killed_at = Instant::now();
+    let latency = wait_for_eviction(
+        &mut f,
+        killed_at,
+        // Generous CI ceiling; the point is that eviction happens without
+        // traffic, and promptly after the grace period expires.
+        Duration::from_millis(GRACE_MS * 5 + 2000),
+    );
+    assert!(
+        latency >= Duration::from_millis(GRACE_MS),
+        "eviction before the grace period would evict on a single missed probe"
+    );
+
+    // The dead worker's slice re-sharded onto survivors; nothing was lost.
+    let owned_after = f.worker_points();
+    assert_eq!(owned_after[0], 0, "evicted worker must own nothing: {owned_after:?}");
+    assert_eq!(
+        owned_after.iter().sum::<usize>(),
+        3 * 60,
+        "re-shard must conserve the window"
+    );
+    let health = f.health();
+    assert_eq!((health.workers_total, health.workers_alive), (3, 2));
+    assert!(health.degraded && !health.halted);
+    assert_eq!(health.workers_dead, 1, "the evicted worker counts as dead");
+
+    // Ingest continues on the survivors.
+    for b in &batches[3..] {
+        f.ingest(b).unwrap();
+    }
+    assert_eq!(f.ingested(), 6 * 60);
+
+    // Every decision is in the structured event log, as parseable JSON.
+    let lines = f.events().recent();
+    for line in &lines {
+        json::parse(line).unwrap_or_else(|e| panic!("unparseable event {line:?}: {e}"));
+    }
+    assert_eq!(count_events(&lines, "evict_worker"), 1);
+    assert_eq!(count_events(&lines, "worker_failed"), 1);
+    assert!(count_events(&lines, "reingest") > 0, "re-shard decisions must be logged");
+    assert!(
+        lines.iter().any(|l| l.contains("\"to\":\"dead\"")),
+        "the liveness transition to dead must be logged"
+    );
+}
+
+#[test]
+fn transient_connect_fault_is_absorbed_bitwise_identically_with_zero_evictions() {
+    let d = 2;
+    let snap = seed_snapshot(d);
+    let batches = stream_batches(d, 5, 50);
+    // Fault-free reference: three direct workers.
+    let reference = {
+        let workers: Vec<String> = (0..3).map(|_| spawn_local().unwrap()).collect();
+        let mut f = DistributedFitter::from_snapshot(&snap, supervised_cfg(workers)).unwrap();
+        for b in &batches {
+            f.ingest(b).unwrap();
+        }
+        (fingerprint(&f), f.health())
+    };
+
+    // Scripted transient fault: the proxy refuses the first two connects
+    // (session open), then becomes transparent. Session opens complete
+    // before the supervisor starts probing, so the schedule is exact.
+    let flaky =
+        FaultProxy::spawn(spawn_local().unwrap(), vec![FaultAction::RefuseConnect(2)]).unwrap();
+    let workers = vec![
+        flaky.addr().to_string(),
+        spawn_local().unwrap(),
+        spawn_local().unwrap(),
+    ];
+    let mut f = DistributedFitter::from_snapshot(&snap, supervised_cfg(workers)).unwrap();
+    for b in &batches {
+        f.ingest(b).unwrap();
+    }
+    let _ = f.poll_supervision().unwrap();
+    let health = f.health();
+
+    // The retry layer actually fired, and was logged.
+    let lines = f.events().recent();
+    assert!(
+        count_events(&lines, "retry") >= 1,
+        "the scripted refusal must surface as retry events: {lines:?}"
+    );
+    // ... but absorbed: zero evictions, zero degradation, full liveness.
+    assert_eq!(count_events(&lines, "evict_worker"), 0);
+    assert_eq!(count_events(&lines, "worker_failed"), 0);
+    assert_eq!((health.workers_total, health.workers_alive), (3, 3));
+    assert!(!health.degraded && !health.halted);
+
+    // And the trajectory is bit-for-bit the fault-free one: retry backoff
+    // draws from its own seeded RNG stream, never the model's.
+    assert_eq!(
+        fingerprint(&f),
+        reference.0,
+        "an absorbed transient fault must not change a single bit"
+    );
+    assert!(!reference.1.degraded);
+}
+
+#[test]
+fn leader_survives_successive_evictions_while_any_worker_lives() {
+    let d = 2;
+    let snap = seed_snapshot(d);
+    let batches = stream_batches(d, 6, 40);
+    // Two of three workers sit behind killable proxies.
+    let proxy_a = FaultProxy::spawn(spawn_local().unwrap(), Vec::new()).unwrap();
+    let proxy_b = FaultProxy::spawn(spawn_local().unwrap(), Vec::new()).unwrap();
+    let workers = vec![
+        proxy_a.addr().to_string(),
+        proxy_b.addr().to_string(),
+        spawn_local().unwrap(),
+    ];
+    let mut f = DistributedFitter::from_snapshot(&snap, supervised_cfg(workers)).unwrap();
+    let deadline = Duration::from_millis(GRACE_MS * 5 + 2000);
+
+    for b in &batches[..2] {
+        f.ingest(b).unwrap();
+    }
+    proxy_a.kill();
+    wait_for_eviction(&mut f, Instant::now(), deadline);
+    for b in &batches[2..4] {
+        f.ingest(b).unwrap();
+    }
+    let health = f.health();
+    assert_eq!(health.workers_alive, 2);
+    assert!(health.degraded && !health.halted);
+
+    proxy_b.kill();
+    wait_for_eviction(&mut f, Instant::now(), deadline);
+    for b in &batches[4..] {
+        f.ingest(b).unwrap();
+    }
+    let health = f.health();
+    assert_eq!(health.workers_alive, 1, "one survivor must carry the whole window");
+    assert!(health.degraded);
+    assert!(!health.halted, "the leader must never halt while a worker lives");
+    assert_eq!(f.ingested(), 6 * 40, "every batch must land despite two evictions");
+    let points = f.worker_points();
+    assert_eq!(points[0], 0);
+    assert_eq!(points[1], 0);
+    assert_eq!(points[2], 6 * 40, "the survivor owns the full window");
+
+    // Both evictions and their re-shards are in the event log.
+    let lines = f.events().recent();
+    assert_eq!(count_events(&lines, "evict_worker"), 2);
+    assert_eq!(count_events(&lines, "worker_failed"), 2);
+    assert!(count_events(&lines, "reingest") > 0);
+}

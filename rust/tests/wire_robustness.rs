@@ -52,6 +52,9 @@ fn serve_corpus() -> Vec<Vec<u8>> {
             ingest_pending: 9,
             workers_total: 3,
             workers_alive: 2,
+            workers_healthy: 2,
+            workers_suspect: 0,
+            workers_dead: 1,
             degraded: 1,
             halted: 0,
         },
@@ -136,6 +139,11 @@ fn distributed_corpus() -> Vec<Vec<u8>> {
             zsub: vec![0, 1, 0],
             rng: [5, 6, 7, 8],
         },
+        // v4 heartbeat verbs: probed on sessionless connections by the
+        // leader's supervisor, so their codec must survive the same
+        // corruption classes.
+        Message::Ping,
+        Message::Pong { load: 4096, depth: 7, generation: 123 },
     ]
     .into_iter()
     .map(|m| m.encode())

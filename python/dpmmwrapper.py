@@ -152,7 +152,8 @@ def fit(
 # All integers little-endian; point payloads are raw float64 runs.
 # ---------------------------------------------------------------------------
 
-SERVE_PROTO_VERSION = 4  # v4: stats layout grew the per-worker liveness counts
+SERVE_PROTO_VERSION = 5  # v5: Metrics/MetricsReply telemetry scrape verbs
+
 FLAG_LOG_PROBS = 1
 
 TAG_PREDICT = 1
@@ -166,6 +167,8 @@ TAG_ACK = 8
 TAG_ERROR = 9
 TAG_INGEST = 10
 TAG_INGEST_REPLY = 11
+TAG_METRICS = 12
+TAG_METRICS_REPLY = 13
 
 _MAX_FRAME = 1 << 30
 
@@ -332,6 +335,74 @@ def _decode_ingest_reply(payload):
     return {"accepted": accepted, "generation": generation, "window": window}
 
 
+def _decode_metrics(payload):
+    """Decode a MetricsReply payload → the Prometheus exposition text."""
+    tag, body = _split_payload(payload)
+    if tag == TAG_ERROR:
+        raise ServerError(_decode_error(body))
+    if tag != TAG_METRICS_REPLY:
+        raise ProtocolError(f"unexpected reply tag {tag} (want MetricsReply)")
+    head, body = _take(body, 4, "metrics length")
+    (n,) = struct.unpack("<I", head)
+    raw, body = _take(body, n, "metrics text")
+    if body:
+        raise ProtocolError(f"{len(body)} trailing bytes after MetricsReply")
+    return raw.decode("utf-8")
+
+
+def _find_label_end(line, start):
+    """Index of the `}` closing the label set opened at ``start``.
+
+    Label *values* may contain escaped quotes/backslashes and literal
+    ``}``/spaces inside their quotes, so a naive ``line.find("}")`` is
+    wrong; scan with quote/escape state instead.
+    """
+    in_quotes = False
+    escaped = False
+    for i in range(start, len(line)):
+        c = line[i]
+        if escaped:
+            escaped = False
+        elif c == "\\":
+            escaped = in_quotes
+        elif c == '"':
+            in_quotes = not in_quotes
+        elif c == "}" and not in_quotes:
+            return i
+    raise ProtocolError(f"unterminated label set in metrics line: {line!r}")
+
+
+def parse_metrics_text(text):
+    """Parse Prometheus text exposition into ``{sample_key: float}``.
+
+    Sample keys keep their label set verbatim as rendered by the server
+    (e.g. ``'dpmm_sweep_phase_seconds_count{phase="score"}'``); unlabeled
+    samples key on the bare metric name. ``# HELP`` / ``# TYPE`` comment
+    lines and blank lines are skipped; an optional trailing timestamp per
+    the format spec is ignored. Mirrors ``rust/src/telemetry/text.rs``.
+    """
+    out = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        brace = line.find("{")
+        space = line.find(" ")
+        if brace != -1 and (space == -1 or brace < space):
+            end = _find_label_end(line, brace)
+            key = line[: end + 1]
+            rest = line[end + 1 :].strip()
+        else:
+            key, _, rest = line.partition(" ")
+        if not rest:
+            raise ProtocolError(f"metrics line has no value: {line!r}")
+        try:
+            out[key] = float(rest.split()[0])
+        except ValueError:
+            raise ProtocolError(f"bad metrics value in line: {line!r}") from None
+    return out
+
+
 def _decode_ack(payload):
     tag, body = _split_payload(payload)
     if tag == TAG_ERROR:
@@ -491,6 +562,23 @@ class DpmmClient:
         predictions keep serving the last published generation.
         """
         return _decode_ingest_reply(self._roundtrip(_encode_ingest(x)))
+
+    def metrics(self, raw=False):
+        """Fetch the server's telemetry registry (Prometheus text format).
+
+        The reply is the same document the server's ``--metrics_addr``
+        HTTP listener serves — every counter / gauge / histogram in the
+        process-global registry (catalog: ``docs/OBSERVABILITY.md``).
+
+        Args:
+          raw: return the exposition text unchanged instead of parsing.
+
+        Returns:
+          ``{sample_key: float}`` dict (see :func:`parse_metrics_text`
+          for the key shape), or the raw text when ``raw=True``.
+        """
+        text = _decode_metrics(self._roundtrip(_encode_simple(TAG_METRICS)))
+        return text if raw else parse_metrics_text(text)
 
     def shutdown_server(self):
         """Gracefully stop the server (acknowledged before it exits)."""

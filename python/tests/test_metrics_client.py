@@ -1,0 +1,221 @@
+"""Telemetry-scrape tests for `dpmmwrapper.DpmmClient.metrics`.
+
+Mirrors the serve protocol v5 Metrics/MetricsReply wire layout
+(rust/src/serve/wire.rs tags 12-13: body-less request, UTF-8 string reply
+framed as u32 length + bytes) against a mock loopback server, and pins the
+Prometheus text-exposition parser against the renderer's output shape
+(rust/src/telemetry/text.rs) — no Rust binary needed, numpy-free logic.
+"""
+
+import os
+import socket
+import struct
+import sys
+import threading
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import dpmmwrapper as w
+
+# A scrape document exactly as rust/src/telemetry/text.rs renders one:
+# HELP/TYPE comments, bare-name samples, labeled samples, and a histogram
+# exploded into _bucket{le=...}/_sum/_count series.
+EXPOSITION = """\
+# HELP dpmm_process_uptime_seconds Seconds since telemetry init.
+# TYPE dpmm_process_uptime_seconds gauge
+dpmm_process_uptime_seconds 12.5
+# HELP dpmm_sweeps_total Full collapsed-Gibbs sweeps completed.
+# TYPE dpmm_sweeps_total counter
+dpmm_sweeps_total 42
+# HELP dpmm_sweep_phase_seconds Wall time per sweep phase.
+# TYPE dpmm_sweep_phase_seconds histogram
+dpmm_sweep_phase_seconds_bucket{phase="score",le="0.001"} 0
+dpmm_sweep_phase_seconds_bucket{phase="score",le="+Inf"} 3
+dpmm_sweep_phase_seconds_sum{phase="score"} 0.75
+dpmm_sweep_phase_seconds_count{phase="score"} 3
+# HELP dpmm_build_info Build metadata as labels.
+# TYPE dpmm_build_info gauge
+dpmm_build_info{version="0.1.0"} 1
+"""
+
+
+def _read_exact(conn, n):
+    chunks = []
+    while n > 0:
+        chunk = conn.recv(n)
+        if not chunk:
+            raise ConnectionError("client closed mid-frame")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+def _metrics_reply(text):
+    raw = text.encode("utf-8")
+    return (
+        struct.pack("<BBI", w.SERVE_PROTO_VERSION, w.TAG_METRICS_REPLY, len(raw))
+        + raw
+    )
+
+
+class MockMetricsServer:
+    """Single-connection mock answering the v5 Metrics verb with a canned
+    exposition document (byte layout mirroring rust/src/serve/wire.rs)."""
+
+    def __init__(self, text=EXPOSITION, fail=False):
+        self._sock = socket.create_server(("127.0.0.1", 0))
+        self.addr = "127.0.0.1:%d" % self._sock.getsockname()[1]
+        self.text = text
+        self.fail = fail
+        self.requests = []  # raw payloads the client sent
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def _serve(self):
+        conn, _ = self._sock.accept()
+        with conn:
+            try:
+                while True:
+                    (length,) = struct.unpack("<I", _read_exact(conn, 4))
+                    payload = _read_exact(conn, length)
+                    self.requests.append(payload)
+                    reply = self._reply(payload)
+                    conn.sendall(struct.pack("<I", len(reply)) + reply)
+            except (ConnectionError, OSError):
+                pass
+
+    def _reply(self, payload):
+        ver, tag = payload[0], payload[1]
+        assert ver == w.SERVE_PROTO_VERSION
+        assert tag == w.TAG_METRICS, f"mock server got unexpected tag {tag}"
+        if self.fail:
+            msg = b"scrape failed"
+            return (
+                struct.pack("<BBI", w.SERVE_PROTO_VERSION, w.TAG_ERROR, len(msg))
+                + msg
+            )
+        return _metrics_reply(self.text)
+
+    def close(self):
+        self._sock.close()
+
+
+class TestDecodeMetrics:
+    def test_roundtrip(self):
+        assert w._decode_metrics(_metrics_reply(EXPOSITION)) == EXPOSITION
+
+    def test_empty_registry(self):
+        assert w._decode_metrics(_metrics_reply("")) == ""
+
+    def test_error_reply_raises(self):
+        msg = b"scrape failed"
+        body = struct.pack("<BBI", w.SERVE_PROTO_VERSION, w.TAG_ERROR, len(msg))
+        with pytest.raises(w.ServerError, match="scrape failed"):
+            w._decode_metrics(body + msg)
+
+    def test_wrong_tag_raises(self):
+        body = struct.pack("<BB", w.SERVE_PROTO_VERSION, w.TAG_ACK)
+        with pytest.raises(w.ProtocolError, match="unexpected reply tag"):
+            w._decode_metrics(body)
+
+    def test_truncated_and_trailing_raise(self):
+        good = _metrics_reply("dpmm_sweeps_total 1\n")
+        with pytest.raises(w.ProtocolError, match="truncated"):
+            w._decode_metrics(good[:-4])
+        with pytest.raises(w.ProtocolError, match="trailing"):
+            w._decode_metrics(good + b"\x00")
+
+    def test_version_mismatch_raises(self):
+        bad = bytearray(_metrics_reply(""))
+        bad[0] = 42
+        with pytest.raises(w.ProtocolError, match="version mismatch"):
+            w._decode_metrics(bytes(bad))
+
+
+class TestParseMetricsText:
+    def test_skips_comments_and_blank_lines(self):
+        parsed = w.parse_metrics_text(EXPOSITION)
+        assert parsed["dpmm_process_uptime_seconds"] == 12.5
+        assert parsed["dpmm_sweeps_total"] == 42.0
+        assert not any(k.startswith("#") for k in parsed)
+
+    def test_labeled_samples_keep_label_set_verbatim(self):
+        parsed = w.parse_metrics_text(EXPOSITION)
+        assert parsed['dpmm_sweep_phase_seconds_count{phase="score"}'] == 3.0
+        assert parsed['dpmm_sweep_phase_seconds_sum{phase="score"}'] == 0.75
+        assert (
+            parsed['dpmm_sweep_phase_seconds_bucket{phase="score",le="+Inf"}']
+            == 3.0
+        )
+        assert parsed['dpmm_build_info{version="0.1.0"}'] == 1.0
+
+    def test_label_values_may_contain_spaces_and_braces(self):
+        # The renderer escapes quotes/backslashes but spaces and '}' travel
+        # literally inside the quotes — the parser must not split on them.
+        text = 'dpmm_events_total{event="evict worker}x"} 7\n'
+        parsed = w.parse_metrics_text(text)
+        assert parsed['dpmm_events_total{event="evict worker}x"}'] == 7.0
+
+    def test_escaped_quote_in_label_value(self):
+        text = 'dpmm_events_total{event="say \\"hi\\""} 2\n'
+        parsed = w.parse_metrics_text(text)
+        assert parsed['dpmm_events_total{event="say \\"hi\\""}'] == 2.0
+
+    def test_optional_timestamp_is_ignored(self):
+        parsed = w.parse_metrics_text("dpmm_sweeps_total 5 1700000000000\n")
+        assert parsed == {"dpmm_sweeps_total": 5.0}
+
+    def test_special_float_values(self):
+        parsed = w.parse_metrics_text("a +Inf\nb -Inf\nc NaN\n")
+        assert parsed["a"] == float("inf")
+        assert parsed["b"] == float("-inf")
+        assert parsed["c"] != parsed["c"]  # NaN
+
+    def test_missing_value_raises(self):
+        with pytest.raises(w.ProtocolError, match="no value"):
+            w.parse_metrics_text("dpmm_sweeps_total\n")
+
+    def test_bad_value_raises(self):
+        with pytest.raises(w.ProtocolError, match="bad metrics value"):
+            w.parse_metrics_text("dpmm_sweeps_total oops\n")
+
+    def test_unterminated_label_set_raises(self):
+        with pytest.raises(w.ProtocolError, match="unterminated"):
+            w.parse_metrics_text('dpmm_events_total{event="x 1\n')
+
+
+class TestMetricsRoundtrip:
+    def test_metrics_parsed_against_mock_socket(self):
+        server = MockMetricsServer()
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                parsed = client.metrics()
+                assert parsed["dpmm_sweeps_total"] == 42.0
+                assert (
+                    parsed['dpmm_sweep_phase_seconds_count{phase="score"}'] == 3.0
+                )
+                # The request on the wire is the body-less v5 Metrics verb.
+                assert server.requests[0] == struct.pack(
+                    "<BB", w.SERVE_PROTO_VERSION, w.TAG_METRICS
+                )
+        finally:
+            server.close()
+
+    def test_metrics_raw_returns_exposition_text(self):
+        server = MockMetricsServer()
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                assert client.metrics(raw=True) == EXPOSITION
+        finally:
+            server.close()
+
+    def test_server_error_surfaces(self):
+        server = MockMetricsServer(fail=True)
+        try:
+            with w.DpmmClient(server.addr, timeout=5.0) as client:
+                with pytest.raises(w.ServerError, match="scrape failed"):
+                    client.metrics()
+        finally:
+            server.close()

@@ -1,0 +1,125 @@
+//! Observability overhead A/B: the same native assignment-step workload
+//! timed with telemetry instrumented (`set_enabled(true)`) and stripped
+//! (`set_enabled(false)`, which turns every `Stopwatch` into a no-op that
+//! skips even the clock read). The acceptance bar is ≤ 2% overhead on the
+//! instrumented leg — the coarse-ticking contract from
+//! `docs/OBSERVABILITY.md` (clock reads at shard-chunk boundaries only,
+//! metric updates are relaxed atomics).
+//!
+//! Reps interleave A/B so thermal/frequency drift hits both legs equally;
+//! the reported figure is the per-leg median. Machine-readable output goes
+//! to `BENCH_observability.json` (override with `BENCH_OBSERVABILITY_OUT`).
+//!
+//! Run: `cargo bench --bench observability_overhead`
+
+use dpmm::backend::native::{NativeBackend, NativeConfig};
+use dpmm::backend::shard::AssignKernel;
+use dpmm::backend::Backend;
+use dpmm::model::DpmmState;
+use dpmm::prelude::*;
+use dpmm::sampler::{sample_params, sample_sub_weights, sample_weights, SamplerOptions, StepParams};
+use dpmm::stats::Prior;
+use dpmm::telemetry;
+use dpmm::util::json::{self, Json};
+use std::sync::Arc;
+use std::time::Instant;
+
+const N: usize = 40_000;
+const D: usize = 8;
+const K: usize = 8;
+const REPS: usize = 9;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(f64::total_cmp);
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let threads: usize = std::env::var("DPMM_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    println!(
+        "observability overhead A/B (N={N}, d={D}, K={K}, threads={threads}, tiled kernel)\n"
+    );
+
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let ds = GmmSpec::default_with(N, D, K).generate(&mut rng);
+    let data = Arc::new(ds.points);
+    let prior = Prior::Niw(dpmm::stats::NiwPrior::weak(D));
+    let mut backend = NativeBackend::new(
+        Arc::clone(&data),
+        prior.clone(),
+        NativeConfig {
+            threads,
+            shard_size: 16 * 1024,
+            kernel: AssignKernel::Tiled,
+            ..NativeConfig::default()
+        },
+        &mut rng,
+    );
+    let mut state = DpmmState::new(10.0, prior, K, N, &mut rng);
+    let opts = SamplerOptions::default();
+    sample_weights(&mut state, &mut rng);
+    sample_sub_weights(&mut state, &mut rng);
+    sample_params(&mut state, &opts, &mut rng);
+    let snap = StepParams::snapshot(&state);
+
+    telemetry::catalog::register_defaults();
+    // Warm both legs (page-in, allocator, branch predictors).
+    for on in [true, false] {
+        telemetry::set_enabled(on);
+        backend.step(&snap).unwrap();
+    }
+
+    let mut enabled_s = Vec::with_capacity(REPS);
+    let mut disabled_s = Vec::with_capacity(REPS);
+    for rep in 0..REPS {
+        // Alternate which leg goes first inside each pair so neither leg
+        // systematically inherits a warmer cache.
+        let order = if rep % 2 == 0 { [true, false] } else { [false, true] };
+        for on in order {
+            telemetry::set_enabled(on);
+            let t0 = Instant::now();
+            backend.step(&snap).unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            if on {
+                enabled_s.push(dt);
+            } else {
+                disabled_s.push(dt);
+            }
+        }
+    }
+    telemetry::set_enabled(true);
+
+    let med_on = median(enabled_s.clone());
+    let med_off = median(disabled_s.clone());
+    let overhead_pct = (med_on - med_off) / med_off * 100.0;
+    println!("instrumented  median {:.4}s  (reps {:?})", med_on, enabled_s.len());
+    println!("stripped      median {:.4}s  (reps {:?})", med_off, disabled_s.len());
+    println!("overhead      {overhead_pct:+.2}%  (bar: <= 2%)");
+    if overhead_pct > 2.0 {
+        println!("WARNING: instrumentation overhead exceeds the 2% budget");
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", "observability_overhead".into()),
+        ("n", N.into()),
+        ("d", D.into()),
+        ("k", K.into()),
+        ("threads", threads.into()),
+        ("reps", REPS.into()),
+        ("enabled_s", Json::arr_f64(&enabled_s)),
+        ("disabled_s", Json::arr_f64(&disabled_s)),
+        ("enabled_median_s", med_on.into()),
+        ("disabled_median_s", med_off.into()),
+        ("overhead_pct", overhead_pct.into()),
+        ("budget_pct", 2.0.into()),
+    ]);
+    let out = std::env::var("BENCH_OBSERVABILITY_OUT")
+        .unwrap_or_else(|_| "BENCH_observability.json".into());
+    match std::fs::write(&out, json::to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

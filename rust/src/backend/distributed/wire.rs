@@ -19,7 +19,8 @@
 //! ingest (tags 13–17, `Stream*`/`StatsDelta`), v3 = elastic membership +
 //! leader durability (tags 18–22: `StreamJoin`, `StreamBatchState`,
 //! `StreamRebalance`, `StreamBatchStateReply`, `StreamRestore`), v4 =
-//! supervision heartbeats (tags 23–24: `Ping`/`Pong`).
+//! supervision heartbeats (tags 23–24: `Ping`/`Pong`), v5 = telemetry
+//! scrape (tags 25–26: `Metrics`/`MetricsReply`).
 //!
 //! This module also hosts the transport-level retry layer
 //! ([`RetryPolicy`], [`classify_error`]): transient socket faults
@@ -39,8 +40,9 @@ use std::io::{Read, Write};
 /// / `StreamSweep` / `StreamEvict` / `StatsDelta`); v3 added elastic
 /// membership and leader durability (`StreamJoin` / `StreamBatchState` /
 /// `StreamRebalance` / `StreamBatchStateReply` / `StreamRestore`); v4
-/// added the supervision heartbeat (`Ping` / `Pong`).
-pub const PROTO_VERSION: u8 = 4;
+/// added the supervision heartbeat (`Ping` / `Pong`); v5 added the
+/// telemetry scrape (`Metrics` / `MetricsReply`).
+pub const PROTO_VERSION: u8 = 5;
 
 /// Sanity cap on cluster counts decoded from the wire (a corrupt count
 /// must not drive an unbounded allocation; real K is bounded by
@@ -163,6 +165,13 @@ pub enum Message {
     /// monotone count of verbs the worker process has served (a wedged
     /// worker answers pings but its generation stalls).
     Pong { load: u64, depth: u64, generation: u64 },
+    /// Telemetry scrape (v5). Like `Ping`, answered in **any** session
+    /// state on the control socket — `dpmm top` and collectors probe on
+    /// fresh connections without opening a session. Reply: `MetricsReply`.
+    Metrics,
+    /// The worker's whole metric registry in Prometheus text exposition
+    /// format (v5; see `docs/OBSERVABILITY.md` for the catalog).
+    MetricsReply(String),
 }
 
 // ---------- primitive writers/readers ----------
@@ -538,6 +547,8 @@ const TAG_STREAM_BATCH_STATE_REPLY: u8 = 21;
 const TAG_STREAM_RESTORE: u8 = 22;
 const TAG_PING: u8 = 23;
 const TAG_PONG: u8 = 24;
+const TAG_METRICS: u8 = 25;
+const TAG_METRICS_REPLY: u8 = 26;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
@@ -677,6 +688,11 @@ impl Message {
                 e.u64(*depth);
                 e.u64(*generation);
             }
+            Message::Metrics => e.u8(TAG_METRICS),
+            Message::MetricsReply(text) => {
+                e.u8(TAG_METRICS_REPLY);
+                e.str(text);
+            }
         }
         e.buf
     }
@@ -814,6 +830,8 @@ impl Message {
             TAG_PONG => {
                 Message::Pong { load: d.u64()?, depth: d.u64()?, generation: d.u64()? }
             }
+            TAG_METRICS => Message::Metrics,
+            TAG_METRICS_REPLY => Message::MetricsReply(d.str()?),
             t => bail!("unknown message tag {t}"),
         };
         if !d.finished() {
@@ -1093,6 +1111,9 @@ mod tests {
             Message::Ping,
             Message::Pong { load: 0, depth: 0, generation: 0 },
             Message::Pong { load: 12_000, depth: 7, generation: u64::MAX },
+            Message::Metrics,
+            Message::MetricsReply(String::new()),
+            Message::MetricsReply("# HELP dpmm_x a\n# TYPE dpmm_x counter\ndpmm_x 1\n".into()),
         ] {
             let enc = msg.encode();
             assert_eq!(Message::decode(&enc).unwrap(), msg);

@@ -327,6 +327,7 @@ fn stream_restore(
 fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
     let msg = read_message(stream)?;
     GENERATION.fetch_add(1, Ordering::Relaxed);
+    crate::telemetry::catalog::worker_verbs_total().inc();
     let reply = match msg {
         // Supervision heartbeat (v4): valid in *any* session state — the
         // leader's supervisor probes on fresh connections that never open a
@@ -336,6 +337,9 @@ fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
             depth: STREAM_DEPTH.load(Ordering::Relaxed),
             generation: GENERATION.load(Ordering::Relaxed),
         },
+        // Telemetry scrape (v5): sessionless like Ping — `dpmm top` and
+        // collectors probe the control socket on fresh connections.
+        Message::Metrics => Message::MetricsReply(crate::telemetry::render()),
         Message::Init { d, prior, seed, threads, x } => {
             let d = d as usize;
             let n = x.len() / d.max(1);
@@ -458,6 +462,8 @@ fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
     if let Session::Stream(ss) = &*session {
         STREAM_POINTS.store(ss.buffer.len() as u64, Ordering::Relaxed);
         STREAM_DEPTH.store(ss.batches.len() as u64, Ordering::Relaxed);
+        crate::telemetry::catalog::stream_window_points().set(ss.buffer.len() as f64);
+        crate::telemetry::catalog::stream_window_batches().set(ss.batches.len() as f64);
     }
     write_message(stream, &reply)?;
     Ok(true)
@@ -494,6 +500,7 @@ pub fn serve_connection(mut stream: TcpStream) -> Result<()> {
 /// long-lived fit/stream session, so connections must not queue behind
 /// each other.
 pub fn serve(addr: &str) -> Result<()> {
+    crate::telemetry::catalog::register_defaults();
     let listener =
         TcpListener::bind(addr).with_context(|| format!("worker bind {addr}"))?;
     eprintln!("dpmm worker listening on {}", listener.local_addr()?);
@@ -518,6 +525,7 @@ pub fn serve(addr: &str) -> Result<()> {
 /// like [`serve`] handles each connection on its own thread so heartbeat
 /// probes are answered while a session is live.
 pub fn spawn_local() -> Result<String> {
+    crate::telemetry::catalog::register_defaults();
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     std::thread::spawn(move || {

@@ -198,6 +198,15 @@ pub fn shard_step_tiled(
     let mut scratch = TileScratch::new(k, d, tile);
     let TileScratch { xt, scores, y, maha, u_cl, u_sub, members, gather, lw_l, lw_r, side } =
         &mut scratch;
+    // Coarse-ticked phase timing: clock reads at tile boundaries only
+    // (never per point), and only when telemetry is enabled — the stripped
+    // path pays a single flag load per shard call. Durations accumulate
+    // locally and hit the histograms once at the end.
+    let timing = crate::telemetry::enabled();
+    let mut t_score = std::time::Duration::ZERO;
+    let mut t_draw = std::time::Duration::ZERO;
+    let mut t_stats = std::time::Duration::ZERO;
+    let mut tiles: u64 = 0;
     let mut start = 0;
     while start < n {
         let m = tile.min(n - start);
@@ -211,6 +220,7 @@ pub fn shard_step_tiled(
             u_sub[t] = shard.rng.next_f64();
         }
         transpose_tile(&data.values[base * d..(base + m) * d], d, m, xt);
+        let mut mark = if timing { Some(std::time::Instant::now()) } else { None };
         // Step (e), batched: one blocked triangular GEMM per cluster fills
         // the tile's score column with unit-stride writes per point.
         for (c, desc) in plan.clusters.iter().enumerate() {
@@ -228,6 +238,11 @@ pub fn shard_step_tiled(
                     }
                 }
             }
+        }
+        if let Some(t0) = mark {
+            let now = std::time::Instant::now();
+            t_score += now - t0;
+            mark = Some(now);
         }
         // Categorical draw per point: a stable exp-scan over the point's
         // unit-stride score column (one uniform + K exps; the equivalent
@@ -261,6 +276,11 @@ pub fn shard_step_tiled(
             }
             shard.z[start + t] = zi as u32;
             members[zi].push(t as u32);
+        }
+        if let Some(t0) = mark {
+            let now = std::time::Instant::now();
+            t_draw += now - t0;
+            mark = Some(now);
         }
         // Step (f) + statistics, batched per cluster over member columns.
         for (c, mem) in members.iter_mut().enumerate() {
@@ -312,7 +332,19 @@ pub fn shard_step_tiled(
             }
             mem.clear();
         }
+        if let Some(t0) = mark {
+            t_stats += t0.elapsed();
+        }
+        tiles += 1;
         start += m;
+    }
+    if timing {
+        use crate::telemetry::catalog;
+        catalog::sweep_phase("score").observe(t_score.as_secs_f64());
+        catalog::sweep_phase("draw").observe(t_draw.as_secs_f64());
+        catalog::sweep_phase("stats_fold").observe(t_stats.as_secs_f64());
+        catalog::gemm_seconds().observe(t_score.as_secs_f64());
+        catalog::gemm_tiles_total().add(tiles);
     }
     bundle
 }

@@ -66,6 +66,10 @@ pub struct ServeSettings {
     pub tile: usize,
     /// Cap on coalesced points per fused micro-batch pass.
     pub max_batch_points: usize,
+    /// Optional plain-TCP Prometheus text listener (`host:port`; port 0 =
+    /// ephemeral). `None` = no scrape listener — the serve-wire `Metrics`
+    /// verb still answers on the main address.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServeSettings {
@@ -75,12 +79,14 @@ impl Default for ServeSettings {
             threads: 0,
             tile: crate::backend::shard::DEFAULT_TILE,
             max_batch_points: 64 * 1024,
+            metrics_addr: None,
         }
     }
 }
 
 impl ServeSettings {
-    /// Parse `--addr / --threads / --tile / --batch_points` CLI overrides.
+    /// Parse `--addr / --threads / --tile / --batch_points /
+    /// --metrics_addr` CLI overrides.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut s = ServeSettings::default();
         if let Some(a) = args.get("addr") {
@@ -94,6 +100,9 @@ impl ServeSettings {
         }
         if let Some(b) = args.get_usize("batch_points")? {
             s.max_batch_points = b.max(1);
+        }
+        if let Some(m) = args.get("metrics_addr") {
+            s.metrics_addr = Some(m.to_string());
         }
         Ok(s)
     }
@@ -550,6 +559,14 @@ mod tests {
         assert_eq!(s.threads, 4);
         assert_eq!(s.max_batch_points, 128);
         assert_eq!(s.tile, ServeSettings::default().tile);
+        assert_eq!(s.metrics_addr, None);
+        let with_metrics = Args::parse(
+            ["serve", "--metrics_addr=127.0.0.1:9464"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        let s = ServeSettings::from_args(&with_metrics).unwrap();
+        assert_eq!(s.metrics_addr.as_deref(), Some("127.0.0.1:9464"));
         let bad = Args::parse(
             ["serve", "--threads=nope"].iter().map(|s| s.to_string()),
             &[],

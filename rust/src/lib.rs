@@ -50,6 +50,7 @@ pub mod sampler;
 pub mod serve;
 pub mod stats;
 pub mod stream;
+pub mod telemetry;
 pub mod util;
 
 /// Convenience re-exports for the common fitting workflow.

@@ -12,9 +12,10 @@
 //! dpmm worker --listen=0.0.0.0:7878
 //! dpmm serve --checkpoint=fit.ckpt|--snapshot=model.snap --addr=0.0.0.0:7979
 //!          [--threads=0] [--tile=128] [--batch_points=65536] [--export_snapshot=model.snap]
+//!          [--metrics_addr=0.0.0.0:9464]
 //! dpmm stream --checkpoint=fit.ckpt|--snapshot=model.snap --addr=0.0.0.0:7979
 //!          [--window=32768] [--sweeps=2] [--decay=1.0] [--alpha=10] [--seed=0]
-//!          [--threads=0] [--tile=128] [--batch_points=65536]
+//!          [--threads=0] [--tile=128] [--batch_points=65536] [--metrics_addr=0.0.0.0:9464]
 //!          [--workers=host:7878,host2:7878] [--worker_threads=1]
 //!          [--checkpoint_path=stream.ckpt] [--checkpoint_every=16] [--resume]
 //!          [--heartbeat_ms=0] [--heartbeat_grace_ms=3000]
@@ -22,6 +23,8 @@
 //! dpmm predict --data=points.npy (--addr=host:7979 | --checkpoint=fit.ckpt | --snapshot=model.snap)
 //!          [--probs] [--labels_out=labels.npy] [--result_path=result.json]
 //! dpmm snapshot --checkpoint=fit.ckpt --out=model.snap
+//! dpmm top [--addr=host:7979] [--workers=host:7878,...] [--interval_ms=2000] [--once]
+//! dpmm events [--file=events.jsonl] [--follow]
 //! dpmm chaos [--workers_n=3] [--batches=8] [--batch_n=2000] [--heartbeat_ms=100]
 //!          [--heartbeat_grace_ms=600] [--seed=0] [--result_path=chaos.json]
 //! dpmm info [--artifacts=artifacts]
@@ -42,7 +45,7 @@ use dpmm::stream::{
 };
 use dpmm::util::{json, npy};
 
-const FLAGS: &[&str] = &["verbose", "help", "version", "probs", "resume"];
+const FLAGS: &[&str] = &["verbose", "help", "version", "probs", "resume", "follow", "once"];
 
 fn main() {
     let args = match Args::from_env(FLAGS) {
@@ -68,11 +71,13 @@ fn main() {
         Some("stream") => cmd_stream(&args),
         Some("predict") => cmd_predict(&args),
         Some("snapshot") => cmd_snapshot(&args),
+        Some("top") => cmd_top(&args),
+        Some("events") => cmd_events(&args),
         Some("chaos") => cmd_chaos(&args),
         Some("info") => cmd_info(&args),
         Some(other) => Err(anyhow!(
             "unknown subcommand '{other}' \
-             (fit|generate|worker|serve|stream|predict|snapshot|chaos|info)"
+             (fit|generate|worker|serve|stream|predict|snapshot|top|events|chaos|info)"
         )),
         None => unreachable!(),
     };
@@ -98,6 +103,10 @@ fn print_help() {
          \x20            --connect_retries tunes transient-fault retry/backoff)\n\
          \x20 predict   score new points (against a server or a local model)\n\
          \x20 snapshot  export an immutable model snapshot from a checkpoint\n\
+         \x20 top       poll leader + worker metrics endpoints and render a\n\
+         \x20           one-screen fleet dashboard (--once for a single frame)\n\
+         \x20 events    tail a structured recovery-event log (--follow;\n\
+         \x20           flags dropped lines via the per-line seq field)\n\
          \x20 chaos     run a deterministic fault-injection drill against an\n\
          \x20           in-process worker cluster and report detection/recovery stats\n\
          \x20 info      show PJRT platform + AOT artifact manifest\n\
@@ -276,8 +285,22 @@ fn load_snapshot_arg(args: &Args) -> Result<ModelSnapshot> {
     }
 }
 
+/// Start the optional plain-TCP Prometheus scrape listener (`curl
+/// http://host:port/metrics`). The same exposition also answers the
+/// serve-wire `Metrics` verb on the main address.
+fn start_metrics_listener(settings: &ServeSettings) -> Result<()> {
+    if let Some(addr) = &settings.metrics_addr {
+        dpmm::telemetry::catalog::register_defaults();
+        let bound = dpmm::telemetry::text::serve_scrapes(addr)
+            .with_context(|| format!("metrics bind {addr}"))?;
+        eprintln!("metrics exposition on http://{bound}/metrics");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let settings = ServeSettings::from_args(args)?;
+    start_metrics_listener(&settings)?;
     let snapshot = load_snapshot_arg(args)?;
     if let Some(out) = args.get("export_snapshot") {
         snapshot.save(out).with_context(|| format!("writing {out}"))?;
@@ -303,6 +326,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_stream(args: &Args) -> Result<()> {
     let settings = ServeSettings::from_args(args)?;
+    // The stream leader runs in this process, so one listener exposes the
+    // serve-path and leader-side (ingest/fold/supervision) families alike.
+    start_metrics_listener(&settings)?;
     let stream_settings = StreamSettings::from_args(args)?;
     let serve_config = serve::ServeConfig { max_batch_points: settings.max_batch_points };
     let ckpt_cfg = stream_settings.checkpoint_path.as_ref().map(|p| StreamCheckpointCfg {
@@ -498,6 +524,185 @@ fn cmd_snapshot(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One sessionless fit-wire `Metrics` scrape of a worker control socket
+/// (`connect → Metrics → MetricsReply → close`, like the supervisor's
+/// heartbeat probes).
+fn worker_metrics(addr: &str, timeout: std::time::Duration) -> Result<String> {
+    use dpmm::backend::distributed::wire::{self, Message};
+    use std::net::{TcpStream, ToSocketAddrs};
+    let sa = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("no socket address for {addr}"))?;
+    let mut s = TcpStream::connect_timeout(&sa, timeout)?;
+    s.set_nodelay(true).ok();
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    match wire::request(&mut s, &Message::Metrics)? {
+        Message::MetricsReply(text) => Ok(text),
+        other => bail!("unexpected metrics reply {other:?}"),
+    }
+}
+
+/// Fleet dashboard: poll the serve/stream leader's `Metrics` verb and each
+/// worker's control socket, and render one screen per interval. `--once`
+/// prints a single frame (CI / scripting); otherwise the screen refreshes
+/// until interrupted.
+fn cmd_top(args: &Args) -> Result<()> {
+    use dpmm::telemetry::text::{find, parse, Sample};
+    use std::time::Duration;
+
+    let addr = args.get_or("addr", "127.0.0.1:7979").to_string();
+    let workers = args.get_list("workers");
+    let interval = Duration::from_millis(args.get_u64("interval_ms")?.unwrap_or(2000).max(100));
+    let once = args.flag("once");
+    let timeout = Duration::from_millis(1500);
+
+    let value = |s: &[Sample], name: &str, labels: &[(&str, &str)]| -> Option<f64> {
+        find(s, name, labels).map(|m| m.value)
+    };
+    // Histogram summary from exposition text: (count, mean seconds).
+    let hist = |s: &[Sample], name: &str| -> Option<(f64, f64)> {
+        let count = value(s, &format!("{name}_count"), &[])?;
+        let sum = value(s, &format!("{name}_sum"), &[])?;
+        Some((count, if count > 0.0 { sum / count } else { 0.0 }))
+    };
+    let ms = |mean: f64| format!("{:.2}ms", mean * 1e3);
+
+    loop {
+        let mut screen = String::new();
+        match DpmmClient::connect(&addr).and_then(|mut c| c.metrics()) {
+            Ok(text) => {
+                let s = parse(&text)?;
+                screen.push_str(&format!(
+                    "serve/leader {addr:<24} up {:>8.1}s   generation {}\n",
+                    value(&s, "dpmm_process_uptime_seconds", &[]).unwrap_or(0.0),
+                    value(&s, "dpmm_serve_generation", &[]).unwrap_or(0.0),
+                ));
+                if let Some((n, mean)) = hist(&s, "dpmm_serve_request_seconds") {
+                    screen.push_str(&format!(
+                        "  predict   {:>10} reqs   mean {}   queue {}\n",
+                        n,
+                        ms(mean),
+                        value(&s, "dpmm_serve_queue_depth", &[]).unwrap_or(0.0),
+                    ));
+                }
+                screen.push_str(&format!(
+                    "  ingest    {:>10} pts",
+                    value(&s, "dpmm_ingest_points_total", &[]).unwrap_or(0.0),
+                ));
+                if let Some((_, mean)) = hist(&s, "dpmm_ingest_apply_seconds") {
+                    screen.push_str(&format!("    apply mean {}", ms(mean)));
+                }
+                if let Some((_, mean)) = hist(&s, "dpmm_ingest_swap_lag_seconds") {
+                    screen.push_str(&format!("    swap lag mean {}", ms(mean)));
+                }
+                screen.push('\n');
+                screen.push_str(&format!(
+                    "  sweeps    {:>10}",
+                    value(&s, "dpmm_sweeps_total", &[]).unwrap_or(0.0),
+                ));
+                if let Some((_, mean)) = hist(&s, "dpmm_delta_fold_seconds") {
+                    screen.push_str(&format!("        delta fold mean {}", ms(mean)));
+                }
+                screen.push('\n');
+                screen.push_str(&format!(
+                    "  liveness  {} healthy / {} suspect / {} dead    events: evict {}  retry {}  rebalance {}\n",
+                    value(&s, "dpmm_worker_liveness", &[("state", "healthy")]).unwrap_or(0.0),
+                    value(&s, "dpmm_worker_liveness", &[("state", "suspect")]).unwrap_or(0.0),
+                    value(&s, "dpmm_worker_liveness", &[("state", "dead")]).unwrap_or(0.0),
+                    value(&s, "dpmm_events_total", &[("event", "evict_worker")]).unwrap_or(0.0),
+                    value(&s, "dpmm_events_total", &[("event", "retry")]).unwrap_or(0.0),
+                    value(&s, "dpmm_events_total", &[("event", "rebalance")]).unwrap_or(0.0),
+                ));
+            }
+            Err(e) => screen.push_str(&format!("serve/leader {addr:<24} UNREACHABLE: {e:#}\n")),
+        }
+        for w in &workers {
+            match worker_metrics(w, timeout) {
+                Ok(text) => {
+                    let s = parse(&text)?;
+                    screen.push_str(&format!(
+                        "worker {w:<30} up {:>8.1}s   verbs {:>8}   window {} pts / {} batches\n",
+                        value(&s, "dpmm_process_uptime_seconds", &[]).unwrap_or(0.0),
+                        value(&s, "dpmm_worker_verbs_total", &[]).unwrap_or(0.0),
+                        value(&s, "dpmm_stream_window_points", &[]).unwrap_or(0.0),
+                        value(&s, "dpmm_stream_window_batches", &[]).unwrap_or(0.0),
+                    ));
+                }
+                Err(e) => screen.push_str(&format!("worker {w:<30} UNREACHABLE: {e:#}\n")),
+            }
+        }
+        if once {
+            print!("{screen}");
+            return Ok(());
+        }
+        // Clear + home, then the frame (plain ANSI; no TUI dependency).
+        print!("\x1b[2J\x1b[H=== dpmm top (every {:.1}s, Ctrl-C to quit) ===\n{screen}", interval.as_secs_f64());
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        std::thread::sleep(interval);
+    }
+}
+
+/// Tail a structured recovery-event log (`DPMM_EVENT_LOG` JSONL). Every
+/// line carries a monotonic `seq`; a gap means lines were dropped or the
+/// file was truncated, and is flagged on stderr. `--follow` keeps reading
+/// as the producer appends.
+fn cmd_events(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Seek};
+
+    let path = args
+        .get("file")
+        .map(str::to_string)
+        .or_else(|| std::env::var("DPMM_EVENT_LOG").ok().filter(|p| !p.is_empty()))
+        .ok_or_else(|| anyhow!("events needs --file=<events.jsonl> (or DPMM_EVENT_LOG set)"))?;
+    let follow = args.flag("follow");
+    let file = std::fs::File::open(&path).with_context(|| format!("opening {path}"))?;
+    let mut reader = BufReader::new(file);
+    let mut last_seq: Option<u64> = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            if !follow {
+                return Ok(());
+            }
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            // A fresh producer (restart) may have truncated the file.
+            let pos = reader.stream_position()?;
+            let len = std::fs::metadata(&path)?.len();
+            if len < pos {
+                reader.seek(std::io::SeekFrom::Start(0))?;
+                last_seq = None;
+                eprintln!("[events] {path} truncated — restarting from the top");
+            }
+            continue;
+        }
+        let text = line.trim_end();
+        if text.is_empty() {
+            continue;
+        }
+        if let Ok(v) = json::parse(text) {
+            if let Some(seq) = v.get("seq").and_then(json::Json::as_usize) {
+                let seq = seq as u64;
+                if let Some(prev) = last_seq {
+                    if seq != prev + 1 {
+                        eprintln!(
+                            "[events] seq gap: {prev} -> {seq} ({} line(s) missing)",
+                            seq.saturating_sub(prev + 1)
+                        );
+                    }
+                }
+                last_seq = Some(seq);
+            }
+        }
+        println!("{text}");
+    }
+}
+
 /// Deterministic fault-injection drill: build an in-process worker
 /// cluster, script faults through [`FaultProxy`], and report what the
 /// supervision/retry machinery actually did — heartbeat detection latency,
@@ -622,6 +827,19 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     eprintln!("[chaos] transient connect fault absorbed after {retry_attempts} retries");
     fitter.shutdown().ok();
 
+    // Detection-latency percentiles from the process-global telemetry
+    // histogram (the drills run the supervisor in this process, so every
+    // silence → Dead verdict it issued is in `dpmm_supervision_detection_seconds`).
+    let det = dpmm::telemetry::catalog::detection_seconds();
+    let det_count = det.count();
+    eprintln!(
+        "[chaos] detection histogram: n={} p50={:.3}s p90={:.3}s p99={:.3}s",
+        det_count,
+        det.quantile(0.5),
+        det.quantile(0.9),
+        det.quantile(0.99),
+    );
+
     let result = json::Json::obj(vec![
         ("workers", json::Json::from(workers_n)),
         ("batches", json::Json::from(batches)),
@@ -630,6 +848,10 @@ fn cmd_chaos(args: &Args) -> Result<()> {
         ("heartbeat_grace_ms", json::Json::from(grace_ms as usize)),
         ("steady_secs_per_batch", json::Json::from(steady_mean)),
         ("detection_secs", json::Json::from(detection_secs)),
+        ("detection_hist_count", json::Json::from(det_count as usize)),
+        ("detection_p50_secs", json::Json::from(det.quantile(0.5))),
+        ("detection_p90_secs", json::Json::from(det.quantile(0.9))),
+        ("detection_p99_secs", json::Json::from(det.quantile(0.99))),
         ("evicted_workers", json::Json::from(evicted)),
         ("evict_events", json::Json::from(evict_events)),
         ("post_eviction_secs_per_batch", json::Json::from(post_mean)),

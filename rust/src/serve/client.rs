@@ -39,6 +39,14 @@ pub struct ServeStats {
     pub workers_total: u32,
     /// Workers currently reachable.
     pub workers_alive: u32,
+    /// Live workers the leader's heartbeat supervisor rates Healthy
+    /// (equals `workers_alive` when supervision is disabled).
+    pub workers_healthy: u32,
+    /// Live workers with failing probes still inside the eviction grace
+    /// period (0 when supervision is disabled).
+    pub workers_suspect: u32,
+    /// Workers rated Dead or already failed/evicted this session.
+    pub workers_dead: u32,
     /// A worker failed this session and its window batches were
     /// re-sharded onto survivors (latches until restart/resume).
     pub degraded: bool,
@@ -167,6 +175,9 @@ impl DpmmClient {
                 ingest_pending,
                 workers_total,
                 workers_alive,
+                workers_healthy,
+                workers_suspect,
+                workers_dead,
                 degraded,
                 halted,
             } => Ok(ServeStats {
@@ -181,6 +192,9 @@ impl DpmmClient {
                 ingest_pending,
                 workers_total,
                 workers_alive,
+                workers_healthy,
+                workers_suspect,
+                workers_dead,
                 degraded: degraded != 0,
                 halted: halted != 0,
             }),
@@ -202,6 +216,16 @@ impl DpmmClient {
                 Ok(IngestReceipt { accepted, generation, window })
             }
             other => Err(anyhow!("unexpected ingest reply {other:?}")),
+        }
+    }
+
+    /// Fetch the server's Prometheus text exposition (the same document
+    /// the `--metrics_addr` HTTP listener serves). Parse it with
+    /// [`crate::telemetry::text::parse`] if you need structured samples.
+    pub fn metrics(&mut self) -> Result<String> {
+        match self.request(&ServeMessage::Metrics)? {
+            ServeMessage::MetricsReply(text) => Ok(text),
+            other => Err(anyhow!("unexpected metrics reply {other:?}")),
         }
     }
 

@@ -143,6 +143,9 @@ struct Job {
 struct IngestJob {
     x: Vec<f64>,
     n: usize,
+    /// Started at enqueue; measures the client-visible freshness lag
+    /// (enqueue → snapshot generation swap). Inert when telemetry is off.
+    enqueued: crate::telemetry::Stopwatch,
     reply: mpsc::Sender<Result<IngestOutcome, String>>,
 }
 
@@ -257,6 +260,10 @@ fn spawn_inner(
             );
         }
     }
+    // Expose the full metric catalog from the first scrape, before any
+    // traffic (the serve endpoint answers the `Metrics` verb).
+    crate::telemetry::catalog::register_defaults();
+    crate::telemetry::catalog::serve_generation().set(1.0);
     let listener = TcpListener::bind(addr).with_context(|| format!("serve bind {addr}"))?;
     let bound = listener.local_addr()?;
     let engine_config = engine.config();
@@ -496,6 +503,9 @@ fn handle_message(
                 n_total: engine.n_total(),
             })
         }
+        ServeMessage::Metrics => {
+            Some(ServeMessage::MetricsReply(crate::telemetry::render()))
+        }
         ServeMessage::Stats => {
             let generation = {
                 let _live = shared.engine.read().unwrap();
@@ -551,6 +561,8 @@ fn predict_reply(shared: &Shared, flags: u8, n: usize, d: usize, x: Vec<f64>) ->
     }
     shared.counters.requests.fetch_add(1, Ordering::Relaxed);
     shared.counters.points.fetch_add(n as u64, Ordering::Relaxed);
+    crate::telemetry::catalog::serve_requests_total().inc();
+    let watch = crate::telemetry::Stopwatch::start();
     let (tx, rx) = mpsc::channel();
     {
         let mut q = shared.queue.jobs.lock().unwrap();
@@ -564,7 +576,7 @@ fn predict_reply(shared: &Shared, flags: u8, n: usize, d: usize, x: Vec<f64>) ->
         q.push_back(Job { x, n, want_probs, reply: tx });
     }
     shared.queue.ready.notify_one();
-    match rx.recv() {
+    let reply = match rx.recv() {
         Ok(Ok((batch, k))) => ServeMessage::Scores {
             labels: batch.labels,
             map_score: batch.map_score,
@@ -574,7 +586,10 @@ fn predict_reply(shared: &Shared, flags: u8, n: usize, d: usize, x: Vec<f64>) ->
         },
         Ok(Err(e)) => ServeMessage::Error(format!("scoring failed: {e}")),
         Err(_) => ServeMessage::Error("server shutting down".into()),
-    }
+    };
+    // Enqueue → reply handoff: queueing delay + fused-pass time.
+    watch.observe(crate::telemetry::catalog::serve_request_seconds());
+    reply
 }
 
 fn ingest_reply(shared: &Shared, n: usize, d: usize, x: Vec<f64>) -> ServeMessage {
@@ -615,7 +630,7 @@ fn ingest_reply(shared: &Shared, n: usize, d: usize, x: Vec<f64>) -> ServeMessag
         // drains under this lock too, so it can never decrement a pending
         // count that was not yet incremented (which would wrap the u64).
         shared.counters.ingest_pending.fetch_add(n as u64, Ordering::Relaxed);
-        q.push_back(IngestJob { x, n, reply: tx });
+        q.push_back(IngestJob { x, n, enqueued: crate::telemetry::Stopwatch::start(), reply: tx });
     }
     {
         // The batcher's wait predicate reads the ingest queue while holding
@@ -694,7 +709,7 @@ fn batcher_loop(shared: &Shared) {
         }
         // Coalesce everything pending, up to the fused-pass cap (a single
         // over-cap request still goes through whole).
-        let jobs = {
+        let (jobs, backlog) = {
             let mut q = shared.queue.jobs.lock().unwrap();
             let mut jobs: Vec<Job> = Vec::new();
             let mut points = 0usize;
@@ -705,8 +720,10 @@ fn batcher_loop(shared: &Shared) {
                 points += job.n;
                 jobs.push(q.pop_front().unwrap());
             }
-            jobs
+            (jobs, q.len())
         };
+        // Jobs left behind by the fused-pass cap = the live backlog.
+        crate::telemetry::catalog::serve_queue_depth().set(backlog as f64);
         if !jobs.is_empty() {
             shared.counters.batches.fetch_add(1, Ordering::Relaxed);
             run_fused_batch(shared, jobs);
@@ -750,6 +767,7 @@ fn apply_ingests(shared: &Shared, stream: &StreamShared) {
     if jobs.is_empty() {
         return;
     }
+    let apply_watch = crate::telemetry::Stopwatch::start();
     let mut fitter = stream.fitter.lock().unwrap();
     let folded: Vec<(IngestJob, Result<crate::stream::IngestSummary>)> = jobs
         .into_iter()
@@ -782,6 +800,10 @@ fn apply_ingests(shared: &Shared, stream: &StreamShared) {
     } else {
         Ok(shared.counters.generation.load(Ordering::Relaxed))
     };
+    apply_watch.observe(crate::telemetry::catalog::ingest_apply_seconds());
+    if let Ok(generation) = &published {
+        crate::telemetry::catalog::serve_generation().set(*generation as f64);
+    }
     for (job, r) in folded {
         let outcome = match (&published, r) {
             (Ok(generation), Ok(summary)) => {
@@ -812,6 +834,9 @@ fn apply_ingests(shared: &Shared, stream: &StreamShared) {
             }
             (_, Err(e)) => Err(format!("{e:#}")),
         };
+        if outcome.is_ok() {
+            job.enqueued.observe(crate::telemetry::catalog::ingest_swap_lag_seconds());
+        }
         let _ = job.reply.send(outcome);
     }
 }
@@ -819,6 +844,8 @@ fn apply_ingests(shared: &Shared, stream: &StreamShared) {
 fn run_fused_batch(shared: &Shared, jobs: Vec<Job>) {
     // One consistent plan for the whole pass (see the module docs).
     let engine = shared.engine();
+    let fused_points: usize = jobs.iter().map(|j| j.n).sum();
+    crate::telemetry::catalog::serve_batch_points().observe(fused_points as f64);
     let want_probs = jobs.iter().any(|j| j.want_probs);
     let total: usize = jobs.iter().map(|j| j.x.len()).sum();
     let mut fused = Vec::with_capacity(total);

@@ -20,7 +20,8 @@
 //! `workers_alive`, `degraded`, `halted`) surfacing the distributed
 //! stream's degraded mode; v4 = `StatsReply` grew the supervisor's
 //! per-worker liveness counts (`workers_healthy`, `workers_suspect`,
-//! `workers_dead`).
+//! `workers_dead`); v5 = the telemetry scrape verbs (tags 12–13:
+//! `Metrics`/`MetricsReply`, Prometheus text exposition).
 //!
 //! Clients are agnostic to the server's ingest topology: `dpmm stream`
 //! with or without `--workers` speaks the identical client-facing wire —
@@ -34,8 +35,8 @@ use std::io::{Read, Write};
 /// Serving-protocol version byte (independent of the fit protocol's; see
 /// `docs/WIRE_PROTOCOLS.md` for the tag table and bump rules). v3 grew
 /// `StatsReply` by the cluster-health fields; v4 by the supervisor's
-/// liveness counts.
-pub const SERVE_PROTO_VERSION: u8 = 4;
+/// liveness counts; v5 added the `Metrics`/`MetricsReply` scrape verbs.
+pub const SERVE_PROTO_VERSION: u8 = 5;
 
 /// Request flag: also return the normalized per-cluster log posterior
 /// membership matrix (`n × K`).
@@ -114,6 +115,12 @@ pub enum ServeMessage {
     Ack,
     /// Server-side failure description.
     Error(String),
+    /// Telemetry scrape request (v5). Reply: `MetricsReply`.
+    Metrics,
+    /// The server's whole metric registry in Prometheus text exposition
+    /// format (v5; catalog in `docs/OBSERVABILITY.md`). Also served over
+    /// plain HTTP-ish TCP via `--metrics_addr` for curl/collectors.
+    MetricsReply(String),
 }
 
 const TAG_PREDICT: u8 = 1;
@@ -127,6 +134,8 @@ const TAG_ACK: u8 = 8;
 const TAG_ERROR: u8 = 9;
 const TAG_INGEST: u8 = 10;
 const TAG_INGEST_REPLY: u8 = 11;
+const TAG_METRICS: u8 = 12;
+const TAG_METRICS_REPLY: u8 = 13;
 
 impl ServeMessage {
     pub fn encode(&self) -> Vec<u8> {
@@ -216,6 +225,11 @@ impl ServeMessage {
             ServeMessage::Error(msg) => {
                 e.u8(TAG_ERROR);
                 e.str(msg);
+            }
+            ServeMessage::Metrics => e.u8(TAG_METRICS),
+            ServeMessage::MetricsReply(text) => {
+                e.u8(TAG_METRICS_REPLY);
+                e.str(text);
             }
         }
         e.buf
@@ -308,6 +322,8 @@ impl ServeMessage {
             TAG_SHUTDOWN => ServeMessage::Shutdown,
             TAG_ACK => ServeMessage::Ack,
             TAG_ERROR => ServeMessage::Error(d.str()?),
+            TAG_METRICS => ServeMessage::Metrics,
+            TAG_METRICS_REPLY => ServeMessage::MetricsReply(d.str()?),
             t => bail!("unknown serve message tag {t}"),
         };
         if !d.finished() {
@@ -377,6 +393,9 @@ mod tests {
             ServeMessage::Shutdown,
             ServeMessage::Ack,
             ServeMessage::Error("nope".into()),
+            ServeMessage::Metrics,
+            ServeMessage::MetricsReply(String::new()),
+            ServeMessage::MetricsReply("# TYPE dpmm_serve_requests_total counter\n".into()),
         ] {
             let enc = msg.encode();
             assert_eq!(ServeMessage::decode(&enc).unwrap(), msg, "{msg:?}");

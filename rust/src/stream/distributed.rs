@@ -1118,6 +1118,9 @@ impl DistributedFitter {
         if let Err(e) = &result {
             self.halt(&format!("{e:#}"));
         }
+        if result.is_ok() {
+            crate::telemetry::catalog::ingest_points_total().add(n as u64);
+        }
         result
     }
 
@@ -1287,6 +1290,7 @@ impl DistributedFitter {
         }
         // Canonical fold order: ascending global batch id — identical no
         // matter how batches are partitioned across workers.
+        let watch = crate::telemetry::Stopwatch::start();
         all.sort_by_key(|dlt| dlt.batch_id);
         for dlt in &all {
             self.apply_sweep_delta(dlt)?;
@@ -1294,6 +1298,7 @@ impl DistributedFitter {
         if !all.is_empty() {
             sync_model_stats(&mut self.state, &self.base, &self.win);
         }
+        watch.observe(crate::telemetry::catalog::delta_fold_seconds());
         self.recover_dead_workers()
     }
 

@@ -431,6 +431,7 @@ impl IncrementalFitter {
 
         self.ingested += n as u64;
         self.state.n_total += n;
+        crate::telemetry::catalog::ingest_points_total().add(n as u64);
 
         // 6. Periodic durable checkpoint. Best-effort on this path: an
         // unwritable checkpoint must not kill a healthy stream (explicit
@@ -497,6 +498,8 @@ impl IncrementalFitter {
         let threads = self.threads();
         let opts = SamplerOptions { sub_restart_every: 0, ..SamplerOptions::default() };
         for _ in 0..sweeps {
+            crate::telemetry::catalog::sweeps_total().inc();
+            crate::telemetry::catalog::assign_points_total().add(wlen as u64);
             sample_weights(&mut self.state, &mut self.rng);
             sample_sub_weights(&mut self.state, &mut self.rng);
             sample_params(&mut self.state, &opts, &mut self.rng);

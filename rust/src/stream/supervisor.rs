@@ -31,7 +31,7 @@ use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::Write;
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
@@ -51,12 +51,19 @@ enum EventSink {
 pub struct EventLog {
     sink: Mutex<EventSink>,
     recent: Mutex<VecDeque<String>>,
+    /// Monotonic per-log sequence number: consumers (`dpmm events`) detect
+    /// dropped or truncated lines by gaps in `seq`.
+    seq: AtomicU64,
 }
 
 impl EventLog {
     /// Log to stderr (the default sink).
     pub fn to_stderr() -> EventLog {
-        EventLog { sink: Mutex::new(EventSink::Stderr), recent: Mutex::new(VecDeque::new()) }
+        EventLog {
+            sink: Mutex::new(EventSink::Stderr),
+            recent: Mutex::new(VecDeque::new()),
+            seq: AtomicU64::new(0),
+        }
     }
 
     /// Log to a file, appending.
@@ -66,7 +73,11 @@ impl EventLog {
             .append(true)
             .open(path)
             .with_context(|| format!("opening event log {}", path.display()))?;
-        Ok(EventLog { sink: Mutex::new(EventSink::File(file)), recent: Mutex::new(VecDeque::new()) })
+        Ok(EventLog {
+            sink: Mutex::new(EventSink::File(file)),
+            recent: Mutex::new(VecDeque::new()),
+            seq: AtomicU64::new(0),
+        })
     }
 
     /// Sink selected by `DPMM_EVENT_LOG` (a path; unset/empty = stderr).
@@ -85,13 +96,20 @@ impl EventLog {
     }
 
     /// Emit one event line. `fields` are appended to the implicit
-    /// `ts_ms`/`event` pair; the line goes to the sink and the ring.
+    /// `ts_ms`/`seq`/`event` triple; the line goes to the sink and the
+    /// ring, and bumps `dpmm_events_total{event=...}`.
     pub fn emit(&self, event: &str, fields: Vec<(&str, Json)>) {
+        crate::telemetry::catalog::events_total(event).inc();
         let ts_ms = SystemTime::now()
             .duration_since(UNIX_EPOCH)
             .map(|d| d.as_millis() as f64)
             .unwrap_or(0.0);
-        let mut pairs = vec![("ts_ms", Json::from(ts_ms)), ("event", Json::from(event))];
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let mut pairs = vec![
+            ("ts_ms", Json::from(ts_ms)),
+            ("seq", Json::from(seq as usize)),
+            ("event", Json::from(event)),
+        ];
         pairs.extend(fields);
         let line = json::to_string(&Json::obj(pairs));
         match &mut *self.sink.lock().unwrap() {
@@ -229,7 +247,9 @@ fn supervise_loop(reg: &Registry) {
             if reg.stop.load(Ordering::SeqCst) {
                 return;
             }
+            let watch = crate::telemetry::Stopwatch::start();
             let res = probe_once(&addr, timeout);
+            let rtt = watch.elapsed();
             let mut g = reg.probes.lock().unwrap();
             let p = &mut g[idx];
             if !p.enabled {
@@ -238,6 +258,9 @@ fn supervise_loop(reg: &Registry) {
             let prev = p.liveness;
             match res {
                 Ok((load, depth, generation)) => {
+                    if let Some(rtt) = rtt {
+                        crate::telemetry::catalog::heartbeat_rtt(&addr).observe_duration(rtt);
+                    }
                     p.load = load;
                     p.depth = depth;
                     p.generation = generation;
@@ -252,6 +275,12 @@ fn supervise_loop(reg: &Registry) {
                     } else {
                         Liveness::Suspect
                     };
+                    if p.liveness == Liveness::Dead && prev != Liveness::Dead {
+                        // Detection latency: silence onset (≈ last successful
+                        // probe) to the Dead verdict.
+                        crate::telemetry::catalog::detection_seconds()
+                            .observe(p.last_ok.elapsed().as_secs_f64());
+                    }
                     if p.liveness != prev {
                         reg.events.emit(
                             "liveness",
@@ -278,6 +307,20 @@ fn supervise_loop(reg: &Registry) {
                     ],
                 );
             }
+        }
+        {
+            let g = reg.probes.lock().unwrap();
+            let mut c = (0f64, 0f64, 0f64);
+            for p in g.iter().filter(|p| p.enabled) {
+                match p.liveness {
+                    Liveness::Healthy => c.0 += 1.0,
+                    Liveness::Suspect => c.1 += 1.0,
+                    Liveness::Dead => c.2 += 1.0,
+                }
+            }
+            crate::telemetry::catalog::worker_liveness("healthy").set(c.0);
+            crate::telemetry::catalog::worker_liveness("suspect").set(c.1);
+            crate::telemetry::catalog::worker_liveness("dead").set(c.2);
         }
         // Sleep the interval in small steps so stop/drop returns promptly.
         let mut left = reg.cfg.interval_ms;
@@ -390,6 +433,9 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert!(lines[0].contains("\"event\":\"retry\"") && lines[0].contains("\"ts_ms\""));
         assert!(lines[1].contains("\"event\":\"evict\"") && lines[1].contains("\"worker\":2"));
+        // Monotonic per-log sequence numbers for gap detection.
+        assert!(lines[0].contains("\"seq\":0"), "{}", lines[0]);
+        assert!(lines[1].contains("\"seq\":1"), "{}", lines[1]);
         // Every line is valid JSON.
         for l in &lines {
             json::parse(l).unwrap();

@@ -1,0 +1,270 @@
+//! The crate's metric catalog: one accessor per instrumented site, each
+//! caching its registry handle in a `OnceLock` so hot paths pay a single
+//! relaxed atomic op. `register_defaults()` touches every family so any
+//! endpoint (leader, worker, serve) exposes the full catalog from its
+//! first scrape, before any traffic. docs/OBSERVABILITY.md documents
+//! names, labels, and units for consumers.
+
+use super::{Counter, Gauge, Histogram};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// Latency buckets for sub-second request-path work (seconds).
+pub const LATENCY_BOUNDS: &[f64] =
+    &[0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5];
+
+/// Buckets for sweep/ingest phases that can run long (seconds).
+pub const PHASE_BOUNDS: &[f64] =
+    &[0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0];
+
+/// Heartbeat RTT buckets (seconds) — finer at the bottom end.
+pub const RTT_BOUNDS: &[f64] =
+    &[0.00005, 0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.5, 1.0];
+
+/// Detection-latency buckets (seconds) — the grace window scale.
+pub const DETECT_BOUNDS: &[f64] =
+    &[0.05, 0.1, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 3.0, 5.0, 10.0, 30.0];
+
+/// Batch-size buckets (points).
+pub const POINTS_BOUNDS: &[f64] =
+    &[1.0, 8.0, 64.0, 256.0, 1024.0, 4096.0, 16384.0, 65536.0, 262144.0];
+
+macro_rules! cached {
+    ($fn:ident, $ty:ty, $make:expr) => {
+        pub fn $fn() -> &'static Arc<$ty> {
+            static CELL: OnceLock<Arc<$ty>> = OnceLock::new();
+            CELL.get_or_init(|| $make)
+        }
+    };
+}
+
+// --- process -------------------------------------------------------------
+
+cached!(process_uptime, Gauge, {
+    super::gauge("dpmm_process_uptime_seconds", "Seconds since this process registered telemetry.")
+});
+
+cached!(build_info, Gauge, {
+    super::gauge_with(
+        "dpmm_build_info",
+        "Constant 1; the version label carries the crate version.",
+        &[("version", env!("CARGO_PKG_VERSION"))],
+    )
+});
+
+// --- sampler sweep phases ------------------------------------------------
+
+/// Per-phase sweep timings. Coordinator-level phases (via
+/// [`crate::util::timer::PhaseTimer`]): `params`, `assign` (the whole
+/// shard pass), `splitmerge`, `housekeeping`. Shard-kernel sub-phases
+/// (coarse-ticked per shard call): `score` (GEMM panel), `draw`
+/// (categorical draws), `stats_fold` (step (f) + statistics). A foreign
+/// name creates its series on first use.
+pub fn sweep_phase(phase: &str) -> Arc<Histogram> {
+    super::histogram_with(
+        "dpmm_sweep_phase_seconds",
+        "Sampler sweep time per phase (score/assign/stats_fold/splitmerge/...).",
+        &[("phase", phase)],
+        PHASE_BOUNDS,
+    )
+}
+
+cached!(sweeps_total, Counter, {
+    super::counter("dpmm_sweeps_total", "Completed restricted-Gibbs sweeps/iterations.")
+});
+
+cached!(assign_points_total, Counter, {
+    super::counter("dpmm_assign_points_total", "Points pushed through the assignment kernel.")
+});
+
+// --- GEMM hot path (coarse-ticked: per shard chunk, never per tile) ------
+
+cached!(gemm_seconds, Histogram, {
+    super::histogram(
+        "dpmm_gemm_seconds",
+        "Whitened-GEMM scoring time per shard chunk (coarse-ticked).",
+        LATENCY_BOUNDS,
+    )
+});
+
+cached!(gemm_tiles_total, Counter, {
+    super::counter("dpmm_gemm_tiles_total", "Score-panel tiles executed by the tiled kernel.")
+});
+
+// --- serve path ----------------------------------------------------------
+
+cached!(serve_requests_total, Counter, {
+    super::counter("dpmm_serve_requests_total", "Serve-wire requests answered (all verbs).")
+});
+
+cached!(serve_request_seconds, Histogram, {
+    super::histogram(
+        "dpmm_serve_request_seconds",
+        "Predict latency from dequeue-eligible to reply handoff.",
+        LATENCY_BOUNDS,
+    )
+});
+
+cached!(serve_queue_depth, Gauge, {
+    super::gauge("dpmm_serve_queue_depth", "Jobs waiting in the micro-batcher queue.")
+});
+
+cached!(serve_batch_points, Histogram, {
+    super::histogram(
+        "dpmm_serve_batch_points",
+        "Points coalesced into each fused scoring pass.",
+        POINTS_BOUNDS,
+    )
+});
+
+cached!(serve_generation, Gauge, {
+    super::gauge("dpmm_serve_generation", "Live snapshot generation (bumps per applied ingest).")
+});
+
+// --- streaming ingest ----------------------------------------------------
+
+cached!(ingest_points_total, Counter, {
+    super::counter("dpmm_ingest_points_total", "Points ingested into the streaming window.")
+});
+
+cached!(ingest_apply_seconds, Histogram, {
+    super::histogram(
+        "dpmm_ingest_apply_seconds",
+        "Fold + re-plan + engine hot-swap time per applied ingest group.",
+        PHASE_BOUNDS,
+    )
+});
+
+cached!(ingest_swap_lag_seconds, Histogram, {
+    super::histogram(
+        "dpmm_ingest_swap_lag_seconds",
+        "Ingest enqueue to snapshot generation swap (client-visible freshness lag).",
+        PHASE_BOUNDS,
+    )
+});
+
+// --- distributed stream (leader side) ------------------------------------
+
+cached!(delta_fold_seconds, Histogram, {
+    super::histogram(
+        "dpmm_delta_fold_seconds",
+        "Leader-side canonical fold of worker stats deltas, per sweep.",
+        LATENCY_BOUNDS,
+    )
+});
+
+/// Heartbeat round-trip time, one series per probed worker address.
+pub fn heartbeat_rtt(worker: &str) -> Arc<Histogram> {
+    super::histogram_with(
+        "dpmm_worker_heartbeat_rtt_seconds",
+        "Supervisor Ping->Pong round-trip per worker.",
+        &[("worker", worker)],
+        RTT_BOUNDS,
+    )
+}
+
+/// Worker liveness counts by state (`healthy` / `suspect` / `dead`).
+pub fn worker_liveness(state: &str) -> Arc<Gauge> {
+    super::gauge_with(
+        "dpmm_worker_liveness",
+        "Workers per supervisor liveness verdict.",
+        &[("state", state)],
+    )
+}
+
+cached!(detection_seconds, Histogram, {
+    super::histogram(
+        "dpmm_supervision_detection_seconds",
+        "Last successful probe to Dead verdict, per detected failure.",
+        DETECT_BOUNDS,
+    )
+});
+
+/// Structured-event counts by event name (fed by the EventLog emitter:
+/// retry, evict_worker, worker_failed, reingest, join, remove, rebalance,
+/// halt, liveness, ...).
+pub fn events_total(event: &str) -> Arc<Counter> {
+    super::counter_with(
+        "dpmm_events_total",
+        "Structured EventLog emissions by event name.",
+        &[("event", event)],
+    )
+}
+
+// --- worker side ----------------------------------------------------------
+
+cached!(worker_verbs_total, Counter, {
+    super::counter("dpmm_worker_verbs_total", "Fit-wire protocol verbs served by this worker.")
+});
+
+cached!(stream_window_points, Gauge, {
+    super::gauge("dpmm_stream_window_points", "Resident streaming-window points on this process.")
+});
+
+cached!(stream_window_batches, Gauge, {
+    super::gauge("dpmm_stream_window_batches", "Resident streaming-window batches on this process.")
+});
+
+// --- registration --------------------------------------------------------
+
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Touch every family so the first scrape of any endpoint already shows
+/// the full catalog (labeled families get their known label sets).
+/// Idempotent; called by every endpoint before it starts listening.
+pub fn register_defaults() {
+    START.get_or_init(Instant::now);
+    process_uptime();
+    build_info().set(1.0);
+    for phase in ["params", "score", "draw", "assign", "stats_fold", "splitmerge", "housekeeping"] {
+        sweep_phase(phase);
+    }
+    sweeps_total();
+    assign_points_total();
+    gemm_seconds();
+    gemm_tiles_total();
+    serve_requests_total();
+    serve_request_seconds();
+    serve_queue_depth();
+    serve_batch_points();
+    serve_generation();
+    ingest_points_total();
+    ingest_apply_seconds();
+    ingest_swap_lag_seconds();
+    delta_fold_seconds();
+    for state in ["healthy", "suspect", "dead"] {
+        worker_liveness(state);
+    }
+    detection_seconds();
+    for event in ["retry", "evict_worker", "worker_failed", "reingest", "rebalance"] {
+        events_total(event);
+    }
+    worker_verbs_total();
+    stream_window_points();
+    stream_window_batches();
+}
+
+/// Refresh derived gauges right before a scrape is rendered.
+pub(super) fn before_render() {
+    register_defaults();
+    if let Some(t0) = START.get() {
+        process_uptime().set(t0.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_expose_at_least_ten_families() {
+        register_defaults();
+        let text = crate::telemetry::render();
+        let families =
+            text.lines().filter(|l| l.starts_with("# TYPE dpmm_")).count();
+        assert!(families >= 10, "only {families} dpmm_* families:\n{text}");
+        // And the exposition is parseable by our own consumer.
+        let samples = crate::telemetry::text::parse(&text).unwrap();
+        assert!(crate::telemetry::text::find(&samples, "dpmm_build_info", &[]).is_some());
+    }
+}

@@ -1,0 +1,489 @@
+//! Process-global, lock-free telemetry: counters, gauges, and fixed-bucket
+//! histograms behind one registry, rendered in the Prometheus text
+//! exposition format (see [`text`]) and served by the `Metrics` verbs of
+//! both wire protocols plus the `--metrics_addr` plain-TCP listener.
+//!
+//! Design constraints (docs/OBSERVABILITY.md is the user-facing catalog):
+//!
+//! * **Atomics only on the hot path.** Updating a metric is a relaxed
+//!   atomic op; the registry's `Mutex` is touched only at registration,
+//!   and every call site caches its handle in a `OnceLock` static.
+//!   Instrumentation never draws from an RNG, never reorders work, and
+//!   never branches on data values — the bitwise-determinism contracts in
+//!   docs/DETERMINISM.md hold with telemetry on or off
+//!   (`tests/integration_telemetry.rs` pins this).
+//! * **Zero-cost when stripped.** `DPMM_TELEMETRY=0` (or
+//!   [`set_enabled`]`(false)`) turns every [`Stopwatch`] into a no-op that
+//!   skips even the `Instant::now()` call; `benches/observability_overhead.rs`
+//!   holds the instrumented-vs-stripped sweep delta under 2%.
+//! * **Coarse ticking.** Hot loops are timed at shard-chunk granularity,
+//!   never per point or per tile — a clock read costs as much as a d=2
+//!   tile column, so finer resolution would be observer effect, not data.
+
+pub mod catalog;
+pub mod text;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Runtime enable switch
+// ---------------------------------------------------------------------------
+
+static ENABLED: OnceLock<AtomicBool> = OnceLock::new();
+
+fn enabled_cell() -> &'static AtomicBool {
+    ENABLED.get_or_init(|| {
+        let on = match std::env::var("DPMM_TELEMETRY").as_deref() {
+            Ok("0") | Ok("off") | Ok("false") => false,
+            _ => true,
+        };
+        AtomicBool::new(on)
+    })
+}
+
+/// Whether instrumentation is live. Metric *values* always update (they
+/// are plain atomics); this gates only the clock reads ([`Stopwatch`]), so
+/// "stripped" mode measures the true cost of the timing calls.
+pub fn enabled() -> bool {
+    enabled_cell().load(Ordering::Relaxed)
+}
+
+/// Flip instrumentation at runtime (the overhead bench's A/B switch).
+pub fn set_enabled(on: bool) {
+    enabled_cell().store(on, Ordering::Relaxed);
+}
+
+/// A timing guard that is a no-op (no clock read at all) when telemetry is
+/// disabled. The one timing substrate for every layer: phase timers,
+/// request latency, delta folds, heartbeat RTT.
+#[derive(Debug)]
+pub struct Stopwatch(Option<Instant>);
+
+impl Stopwatch {
+    /// Start timing iff telemetry is enabled.
+    pub fn start() -> Self {
+        Stopwatch(if enabled() { Some(Instant::now()) } else { None })
+    }
+
+    /// Always start timing, even when telemetry is disabled (for callers
+    /// that need the duration themselves, e.g. [`crate::util::timer::PhaseTimer`]).
+    pub fn start_always() -> Self {
+        Stopwatch(Some(Instant::now()))
+    }
+
+    /// Elapsed time, if the watch was actually started.
+    pub fn elapsed(&self) -> Option<Duration> {
+        self.0.map(|t0| t0.elapsed())
+    }
+
+    /// Record the elapsed seconds into `h` (no-op when not started).
+    pub fn observe(self, h: &Histogram) {
+        if let Some(d) = self.elapsed() {
+            h.observe(d.as_secs_f64());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metric primitives
+// ---------------------------------------------------------------------------
+
+/// Monotonically increasing integer counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in an `AtomicU64`).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: per-bucket `AtomicU64` counts (non-cumulative
+/// in memory, rendered cumulatively), a CAS-looped f64 sum, and a total
+/// count. Bucket bounds are immutable after registration.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Strictly increasing upper bounds; an implicit +Inf bucket follows.
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` slots; the last is the +Inf overflow bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing: {bounds:?}"
+        );
+        assert!(
+            bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite (+Inf is implicit): {bounds:?}"
+        );
+        let buckets = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets,
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn observe_duration(&self, d: Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Cumulative bucket counts aligned with `bounds()` plus a final +Inf
+    /// entry (what the `_bucket{le=...}` samples render).
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.buckets
+            .iter()
+            .map(|b| {
+                acc += b.load(Ordering::Relaxed);
+                acc
+            })
+            .collect()
+    }
+
+    /// Estimate the q-quantile (0 ≤ q ≤ 1) by linear interpolation inside
+    /// the bucket that crosses it — the standard Prometheus
+    /// `histogram_quantile` estimate. Returns 0.0 on an empty histogram;
+    /// observations in the +Inf bucket clamp to the largest finite bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let cum = self.cumulative();
+        let total = *cum.last().unwrap_or(&0);
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut prev_cum = 0u64;
+        for (i, &c) in cum.iter().enumerate() {
+            if (c as f64) >= target {
+                if i >= self.bounds.len() {
+                    // +Inf bucket: no upper bound to interpolate toward.
+                    return self.bounds.last().copied().unwrap_or(0.0);
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let in_bucket = (c - prev_cum) as f64;
+                if in_bucket == 0.0 {
+                    return hi;
+                }
+                return lo + (hi - lo) * ((target - prev_cum as f64) / in_bucket);
+            }
+            prev_cum = c;
+        }
+        self.bounds.last().copied().unwrap_or(0.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// What a family's samples mean (drives `# TYPE` rendering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub(crate) enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+#[derive(Debug)]
+pub(crate) struct Series {
+    pub labels: Vec<(String, String)>,
+    pub metric: Metric,
+}
+
+/// All series sharing one metric name (one `# HELP`/`# TYPE` block).
+#[derive(Debug)]
+pub(crate) struct Family {
+    pub name: String,
+    pub help: String,
+    pub kind: Kind,
+    pub series: Vec<Series>,
+}
+
+/// The process-global metric registry. Series are registered once (under
+/// the mutex) and updated lock-free through their `Arc` handles forever
+/// after; call sites cache handles in `OnceLock` statics so the hot path
+/// never re-enters here.
+#[derive(Debug, Default)]
+pub struct Registry {
+    pub(crate) families: Mutex<Vec<Family>>,
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global registry (created on first use).
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::default)
+}
+
+impl Registry {
+    fn register(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let mut families = self.families.lock().unwrap();
+        let family = match families.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                assert!(
+                    f.kind == kind,
+                    "metric '{name}' re-registered as {kind:?}, was {:?}",
+                    f.kind
+                );
+                f
+            }
+            None => {
+                families.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    kind,
+                    series: Vec::new(),
+                });
+                families.last_mut().unwrap()
+            }
+        };
+        if let Some(s) = family
+            .series
+            .iter()
+            .find(|s| s.labels.len() == labels.len()
+                && s.labels.iter().zip(labels).all(|((k, v), (lk, lv))| k == lk && v == lv))
+        {
+            return s.metric.clone();
+        }
+        let metric = make();
+        family.series.push(Series {
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            metric: metric.clone(),
+        });
+        metric
+    }
+
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.register(name, help, Kind::Counter, labels, || {
+            Metric::Counter(Arc::new(Counter::default()))
+        }) {
+            Metric::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.register(name, help, Kind::Gauge, labels, || {
+            Metric::Gauge(Arc::new(Gauge::default()))
+        }) {
+            Metric::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        match self.register(name, help, Kind::Histogram, labels, || {
+            Metric::Histogram(Arc::new(Histogram::new(bounds)))
+        }) {
+            Metric::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+}
+
+// Convenience wrappers over the global registry.
+
+pub fn counter(name: &str, help: &str) -> Arc<Counter> {
+    registry().counter(name, help, &[])
+}
+
+pub fn counter_with(name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+    registry().counter(name, help, labels)
+}
+
+pub fn gauge(name: &str, help: &str) -> Arc<Gauge> {
+    registry().gauge(name, help, &[])
+}
+
+pub fn gauge_with(name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+    registry().gauge(name, help, labels)
+}
+
+pub fn histogram(name: &str, help: &str, bounds: &[f64]) -> Arc<Histogram> {
+    registry().histogram(name, help, &[], bounds)
+}
+
+pub fn histogram_with(
+    name: &str,
+    help: &str,
+    labels: &[(&str, &str)],
+    bounds: &[f64],
+) -> Arc<Histogram> {
+    registry().histogram(name, help, labels, bounds)
+}
+
+/// Render the whole registry as Prometheus text exposition (the payload of
+/// every `Metrics` wire verb and of the `--metrics_addr` listener).
+/// Refreshes derived gauges (uptime) first.
+pub fn render() -> String {
+    catalog::before_render();
+    text::render(registry())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = counter("test_mod_counter_total", "test");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Re-registration returns the same underlying series.
+        counter("test_mod_counter_total", "test").inc();
+        assert_eq!(c.get(), 6);
+        let g = gauge("test_mod_gauge", "test");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_buckets_fill_and_cumulate() {
+        let h = Histogram::new(&[0.1, 1.0, 10.0]);
+        for v in [0.05, 0.5, 0.5, 5.0, 50.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 56.05).abs() < 1e-12);
+        assert_eq!(h.cumulative(), vec![1, 3, 4, 5]);
+        // Boundary lands in its own bucket (le = inclusive upper bound).
+        let hb = Histogram::new(&[1.0]);
+        hb.observe(1.0);
+        assert_eq!(hb.cumulative(), vec![1, 1]);
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for _ in 0..50 {
+            h.observe(0.5); // first bucket
+        }
+        for _ in 0..50 {
+            h.observe(1.5); // second bucket
+        }
+        let p50 = h.quantile(0.5);
+        assert!((0.9..=1.1).contains(&p50), "p50 = {p50}");
+        let p99 = h.quantile(0.99);
+        assert!((1.9..=2.0).contains(&p99), "p99 = {p99}");
+        // Empty histogram is defined (0.0), +Inf clamps to the last bound.
+        assert_eq!(Histogram::new(&[1.0]).quantile(0.5), 0.0);
+        let inf = Histogram::new(&[1.0, 2.0]);
+        inf.observe(100.0);
+        assert_eq!(inf.quantile(0.99), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn histogram_rejects_unsorted_bounds() {
+        Histogram::new(&[1.0, 0.5]);
+    }
+
+    #[test]
+    fn stopwatch_noop_when_disabled() {
+        let was = enabled();
+        set_enabled(false);
+        assert!(Stopwatch::start().elapsed().is_none());
+        set_enabled(true);
+        assert!(Stopwatch::start().elapsed().is_some());
+        set_enabled(was);
+    }
+}

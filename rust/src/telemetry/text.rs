@@ -1,0 +1,387 @@
+//! Prometheus text exposition (format version 0.0.4): rendering the
+//! registry to scrape-able text, a minimal parser for the same dialect
+//! (used by `dpmm top` and the Python client's mirror), and the plain-TCP
+//! listener behind `--metrics_addr`.
+//!
+//! Rendering rules implemented here (and pinned by the golden tests):
+//!
+//! * one `# HELP` + `# TYPE` block per family, families sorted by name;
+//! * HELP text escapes `\` and newline; label values escape `\`, `"`,
+//!   and newline;
+//! * histograms render cumulative `_bucket{le="…"}` samples ending in
+//!   `le="+Inf"`, then `_sum` and `_count`.
+
+use super::{Kind, Metric, Registry};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// Escape a `# HELP` string: backslash and newline only (spec rule).
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value: backslash, double-quote, newline.
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Shortest stable f64 rendering (Rust's `{}` — deterministic, no locale).
+fn fmt_f64(v: f64) -> String {
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf".into() } else { "-Inf".into() };
+    }
+    format!("{v}")
+}
+
+fn fmt_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Labels plus one extra pair (for `le` on histogram buckets).
+fn fmt_labels_with(labels: &[(String, String)], key: &str, value: &str) -> String {
+    let mut inner: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    inner.push(format!("{key}=\"{}\"", escape_label(value)));
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Render every family in `reg` to exposition text. Families sort by
+/// name; series keep registration order (stable across scrapes).
+pub fn render(reg: &Registry) -> String {
+    let families = reg.families.lock().unwrap();
+    let mut order: Vec<usize> = (0..families.len()).collect();
+    order.sort_by(|&a, &b| families[a].name.cmp(&families[b].name));
+    let mut out = String::new();
+    for idx in order {
+        let f = &families[idx];
+        out.push_str(&format!("# HELP {} {}\n", f.name, escape_help(&f.help)));
+        out.push_str(&format!("# TYPE {} {}\n", f.name, f.kind.as_str()));
+        for s in &f.series {
+            match &s.metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("{}{} {}\n", f.name, fmt_labels(&s.labels), c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        f.name,
+                        fmt_labels(&s.labels),
+                        fmt_f64(g.get())
+                    ));
+                }
+                Metric::Histogram(h) => {
+                    let cum = h.cumulative();
+                    for (i, bound) in h.bounds().iter().enumerate() {
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            f.name,
+                            fmt_labels_with(&s.labels, "le", &fmt_f64(*bound)),
+                            cum[i]
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        f.name,
+                        fmt_labels_with(&s.labels, "le", "+Inf"),
+                        cum[h.bounds().len()]
+                    ));
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        f.name,
+                        fmt_labels(&s.labels),
+                        fmt_f64(h.sum())
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        f.name,
+                        fmt_labels(&s.labels),
+                        h.count()
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Parser (consumer side: `dpmm top`, tests)
+// ---------------------------------------------------------------------------
+
+/// One parsed sample line: `name{labels} value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+fn unescape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some(other) => out.push(other),
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn parse_labels(s: &str) -> Result<Vec<(String, String)>> {
+    let mut labels = Vec::new();
+    let mut rest = s;
+    loop {
+        rest = rest.trim_start_matches([',', ' ']);
+        if rest.is_empty() {
+            return Ok(labels);
+        }
+        let eq = rest.find('=').context("label missing '='")?;
+        let key = rest[..eq].trim().to_string();
+        rest = &rest[eq + 1..];
+        if !rest.starts_with('"') {
+            bail!("label value must be quoted");
+        }
+        rest = &rest[1..];
+        // Scan to the closing unescaped quote.
+        let mut end = None;
+        let mut escaped = false;
+        for (i, c) in rest.char_indices() {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                end = Some(i);
+                break;
+            }
+        }
+        let end = end.context("unterminated label value")?;
+        labels.push((key, unescape_label(&rest[..end])));
+        rest = &rest[end + 1..];
+    }
+}
+
+/// Parse exposition text into samples, skipping comments and blanks.
+/// Tolerant of anything it does not understand? No — malformed sample
+/// lines are errors, so tests catch drift between renderer and parser.
+pub fn parse(text: &str) -> Result<Vec<Sample>> {
+    let mut samples = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, value) = match line.find('}') {
+            Some(close) => {
+                let v = line[close + 1..].trim();
+                (&line[..close + 1], v)
+            }
+            None => {
+                let sp = line.find(' ').with_context(|| format!("no value in line {line:?}"))?;
+                (&line[..sp], line[sp + 1..].trim())
+            }
+        };
+        let (name, labels) = match head.find('{') {
+            Some(open) => {
+                if !head.ends_with('}') {
+                    bail!("malformed labels in line {line:?}");
+                }
+                (head[..open].to_string(), parse_labels(&head[open + 1..head.len() - 1])?)
+            }
+            None => (head.to_string(), Vec::new()),
+        };
+        let value = match value {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            "NaN" => f64::NAN,
+            v => v.parse::<f64>().with_context(|| format!("bad value in line {line:?}"))?,
+        };
+        samples.push(Sample { name, labels, value });
+    }
+    Ok(samples)
+}
+
+/// Find a sample by name and (subset of) labels.
+pub fn find<'a>(samples: &'a [Sample], name: &str, labels: &[(&str, &str)]) -> Option<&'a Sample> {
+    samples.iter().find(|s| {
+        s.name == name
+            && labels
+                .iter()
+                .all(|(k, v)| s.labels.iter().any(|(sk, sv)| sk == k && sv == v))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Plain-TCP exposition listener (`--metrics_addr`)
+// ---------------------------------------------------------------------------
+
+/// Answer one scrape connection: drain the request head (curl sends a GET
+/// line plus headers; a bare `nc` sends nothing), then write a minimal
+/// HTTP/1.0 response whose body is the current exposition and close.
+fn answer_scrape(stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5))).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    // Read request lines until the blank separator, EOF, or timeout; any
+    // of the three means "send the scrape now".
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) if line == "\r\n" || line == "\n" => break,
+            Ok(_) => continue,
+            Err(_) => break,
+        }
+    }
+    let body = super::render();
+    let mut stream = stream;
+    write!(
+        stream,
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    stream.flush()
+}
+
+/// Bind `addr` and serve scrapes on a background thread forever; returns
+/// the bound address (so `addr` may use port 0). One thread per scrape —
+/// scrape traffic is human/collector-paced, not request-path.
+pub fn serve_scrapes(addr: &str) -> Result<String> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("metrics listener bind {addr}"))?;
+    let bound = listener.local_addr()?.to_string();
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { return };
+            std::thread::spawn(move || {
+                let _ = answer_scrape(stream);
+            });
+        }
+    });
+    Ok(bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    /// Build a private registry with one of each kind and render it —
+    /// the golden-file test for escaping, ordering, and histogram layout.
+    #[test]
+    fn golden_exposition_rendering() {
+        let reg = Registry::default();
+        let c = reg.counter("zgolden_requests_total", "Requests served.", &[]);
+        c.add(7);
+        let g = reg.gauge(
+            "agolden_depth",
+            "Queue depth with \\ and\nnewline.",
+            &[("queue", "a\"b\\c\nd")],
+        );
+        g.set(2.5);
+        let h = reg.histogram("mgolden_seconds", "Latency.", &[("op", "x")], &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(5.0);
+        let got = render(&reg);
+        let want = concat!(
+            "# HELP agolden_depth Queue depth with \\\\ and\\nnewline.\n",
+            "# TYPE agolden_depth gauge\n",
+            "agolden_depth{queue=\"a\\\"b\\\\c\\nd\"} 2.5\n",
+            "# HELP mgolden_seconds Latency.\n",
+            "# TYPE mgolden_seconds histogram\n",
+            "mgolden_seconds_bucket{op=\"x\",le=\"0.1\"} 1\n",
+            "mgolden_seconds_bucket{op=\"x\",le=\"1\"} 2\n",
+            "mgolden_seconds_bucket{op=\"x\",le=\"+Inf\"} 3\n",
+            "mgolden_seconds_sum{op=\"x\"} 5.55\n",
+            "mgolden_seconds_count{op=\"x\"} 3\n",
+            "# HELP zgolden_requests_total Requests served.\n",
+            "# TYPE zgolden_requests_total counter\n",
+            "zgolden_requests_total 7\n",
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parse_roundtrips_rendered_text() {
+        let reg = Registry::default();
+        reg.counter("rt_total", "c", &[]).add(3);
+        reg.gauge("rt_gauge", "g", &[("k", "v w")]).set(-1.25);
+        let h = reg.histogram("rt_seconds", "h", &[], &[0.5]);
+        h.observe(0.1);
+        h.observe(2.0);
+        let text = render(&reg);
+        let samples = parse(&text).unwrap();
+        assert_eq!(find(&samples, "rt_total", &[]).unwrap().value, 3.0);
+        assert_eq!(find(&samples, "rt_gauge", &[("k", "v w")]).unwrap().value, -1.25);
+        assert_eq!(find(&samples, "rt_seconds_bucket", &[("le", "0.5")]).unwrap().value, 1.0);
+        assert_eq!(find(&samples, "rt_seconds_bucket", &[("le", "+Inf")]).unwrap().value, 2.0);
+        assert_eq!(find(&samples, "rt_seconds_count", &[]).unwrap().value, 2.0);
+        // Escaped label values survive the round trip.
+        let reg2 = Registry::default();
+        reg2.gauge("esc", "e", &[("p", "a\"b\\c\nd")]).set(1.0);
+        let samples2 = parse(&render(&reg2)).unwrap();
+        assert_eq!(samples2[0].labels[0].1, "a\"b\\c\nd");
+    }
+
+    /// Property: cumulative bucket counts are monotone non-decreasing and
+    /// end at `_count`, for arbitrary observation streams.
+    #[test]
+    fn histogram_bucket_monotonicity_property() {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(99);
+        use crate::rng::Rng;
+        for case in 0..50 {
+            let nb = 1 + (case % 7);
+            let mut bounds: Vec<f64> =
+                (0..nb).map(|i| (i as f64 + 1.0) * (0.1 + rng.next_f64())).collect();
+            bounds.sort_by(f64::total_cmp);
+            bounds.dedup();
+            let reg = Registry::default();
+            let h = reg.histogram("prop_seconds", "p", &[], &bounds);
+            let n = rng.next_range(200);
+            for _ in 0..n {
+                h.observe(rng.next_f64() * 10.0 - 1.0);
+            }
+            let cum = h.cumulative();
+            assert_eq!(cum.len(), bounds.len() + 1);
+            assert!(cum.windows(2).all(|w| w[0] <= w[1]), "non-monotone: {cum:?}");
+            assert_eq!(*cum.last().unwrap(), h.count());
+            assert_eq!(cum.last(), Some(&(n as u64)));
+            // The rendered text agrees with the in-memory view.
+            let samples = parse(&render(&reg)).unwrap();
+            let rendered: Vec<u64> = samples
+                .iter()
+                .filter(|s| s.name == "prop_seconds_bucket")
+                .map(|s| s.value as u64)
+                .collect();
+            assert_eq!(rendered, cum);
+        }
+    }
+
+    #[test]
+    fn scrape_listener_answers_http() {
+        use std::io::{Read, Write};
+        let addr = serve_scrapes("127.0.0.1:0").unwrap();
+        crate::telemetry::counter("scrape_test_total", "t").inc();
+        let mut conn = std::net::TcpStream::connect(&addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+        let mut reply = String::new();
+        conn.read_to_string(&mut reply).unwrap();
+        assert!(reply.starts_with("HTTP/1.0 200 OK\r\n"), "{reply}");
+        assert!(reply.contains("text/plain; version=0.0.4"));
+        assert!(reply.contains("scrape_test_total"));
+    }
+}

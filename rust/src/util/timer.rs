@@ -1,6 +1,16 @@
 //! Wall-clock timing helpers used by the coordinator metrics and the bench
 //! harnesses (the crate has no `criterion`; benches are `harness = false`
 //! binaries built on these).
+//!
+//! Since the telemetry subsystem landed there is **one timing substrate**:
+//! [`PhaseTimer`] keeps its local per-fit accumulation (the `FitResult`
+//! summary needs it regardless of telemetry), but every recorded phase is
+//! also observed into the process-global
+//! `dpmm_sweep_phase_seconds{phase=...}` histogram when telemetry is
+//! enabled, so the same numbers are scrapeable live. Hot *inner* loops
+//! must not use this type per item — they coarse-tick via
+//! [`crate::telemetry::Stopwatch`] at chunk granularity instead (a clock
+//! read costs as much as a small tile column; see docs/OBSERVABILITY.md).
 
 use std::time::{Duration, Instant};
 
@@ -24,6 +34,9 @@ impl PhaseTimer {
     }
 
     pub fn add(&mut self, name: &str, d: Duration) {
+        if crate::telemetry::enabled() {
+            crate::telemetry::catalog::sweep_phase(name).observe_duration(d);
+        }
         if let Some((_, acc)) = self.phases.iter_mut().find(|(n, _)| n == name) {
             *acc += d;
         } else {

@@ -1,0 +1,238 @@
+//! Fleet-wide telemetry — the PR-7 acceptance suite:
+//!
+//! * **determinism**: an instrumented distributed-stream run (telemetry
+//!   enabled) produces labels/stats **bitwise-identical** to a stripped run
+//!   (telemetry disabled) — instrumentation is atomics and clock reads
+//!   only, never RNG draws or reordering (docs/DETERMINISM.md);
+//! * **chaos visibility**: a scrape taken during a 3-worker chaos drill
+//!   (one worker silenced behind [`FaultProxy`]) shows the eviction
+//!   counters (`dpmm_events_total{event="evict_worker"}`) and the
+//!   detection-latency histogram incrementing, in valid Prometheus text;
+//! * **worker endpoint**: the fit-protocol `Metrics` verb answers
+//!   sessionless on a worker control socket with a well-formed exposition
+//!   carrying at least the 10-family default catalog.
+
+use dpmm::backend::distributed::fault::FaultProxy;
+use dpmm::backend::distributed::wire::{self, Message};
+use dpmm::backend::distributed::worker::spawn_local;
+use dpmm::backend::shard::AssignKernel;
+use dpmm::model::DpmmState;
+use dpmm::prelude::*;
+use dpmm::stats::{NiwPrior, Prior, Stats};
+use dpmm::stream::{DistributedFitter, DistributedStreamConfig};
+use dpmm::telemetry::{self, catalog, text};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Seed snapshot from poured statistics (no MCMC) — three well-separated
+/// blobs, mirroring `integration_stream_supervision.rs`.
+fn seed_snapshot(d: usize) -> ModelSnapshot {
+    let prior = Prior::Niw(NiwPrior::weak(d));
+    let mut rng = Xoshiro256pp::seed_from_u64(123);
+    let mut state = DpmmState::new(4.0, prior.clone(), 3, 300, &mut rng);
+    for (k, center) in [-8.0f64, 0.0, 8.0].into_iter().enumerate() {
+        let mut s = prior.empty_stats();
+        for i in 0..100 {
+            let x: Vec<f64> = (0..d)
+                .map(|j| center + 0.15 * ((i * (j + 3) + k) % 13) as f64 - 0.9)
+                .collect();
+            s.add(&x);
+        }
+        state.clusters[k].stats = s;
+    }
+    ModelSnapshot::from_state(&state).unwrap()
+}
+
+/// Deterministic blob-hopping mini-batches (`count` batches × `n` points).
+fn stream_batches(d: usize, count: usize, n: usize) -> Vec<Vec<f64>> {
+    let mut rng = Xoshiro256pp::seed_from_u64(77);
+    let centers = [-8.0f64, 0.0, 8.0];
+    (0..count)
+        .map(|_| {
+            let mut batch = Vec::with_capacity(n * d);
+            for _ in 0..n {
+                let c = centers[rng.next_range(3)];
+                for _ in 0..d {
+                    batch.push(c + (rng.next_f64() - 0.5) * 1.4);
+                }
+            }
+            batch
+        })
+        .collect()
+}
+
+fn state_stats(state: &DpmmState) -> Vec<(Stats, [Stats; 2])> {
+    state.clusters.iter().map(|c| (c.stats.clone(), c.sub_stats.clone())).collect()
+}
+
+type Fingerprint = (Vec<f64>, Vec<(Stats, [Stats; 2])>, u64, usize);
+
+fn fingerprint(f: &DistributedFitter) -> Fingerprint {
+    (f.counts(), state_stats(f.state()), f.ingested(), f.window_len())
+}
+
+const HEARTBEAT_MS: u64 = 50;
+const GRACE_MS: u64 = 600;
+
+fn supervised_cfg(workers: Vec<String>) -> DistributedStreamConfig {
+    DistributedStreamConfig {
+        workers,
+        worker_threads: 2,
+        window: 1 << 16,
+        sweeps: 1,
+        alpha: 4.0,
+        seed: 2024,
+        kernel: Some(AssignKernel::Tiled),
+        heartbeat_ms: HEARTBEAT_MS,
+        heartbeat_grace_ms: GRACE_MS,
+        ..DistributedStreamConfig::default()
+    }
+}
+
+/// Drive `poll_supervision` until it reports >= 1 eviction. Panics past
+/// `deadline`.
+fn wait_for_eviction(f: &mut DistributedFitter, since: Instant, deadline: Duration) {
+    loop {
+        let evicted = f.poll_supervision().expect("supervision poll must not error");
+        if evicted > 0 {
+            return;
+        }
+        assert!(
+            since.elapsed() < deadline,
+            "supervisor failed to evict the silenced worker within {deadline:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Distinct metric families in an exposition document (`# TYPE` lines).
+fn family_count(exposition: &str) -> usize {
+    exposition.lines().filter(|l| l.starts_with("# TYPE ")).count()
+}
+
+#[test]
+fn instrumented_run_is_bitwise_identical_to_stripped_run() {
+    let d = 2;
+    let snap = seed_snapshot(d);
+    let batches = stream_batches(d, 5, 50);
+    let run = |on: bool| {
+        telemetry::set_enabled(on);
+        let workers: Vec<String> = (0..3).map(|_| spawn_local().unwrap()).collect();
+        let mut f = DistributedFitter::from_snapshot(&snap, supervised_cfg(workers)).unwrap();
+        for b in &batches {
+            f.ingest(b).unwrap();
+        }
+        fingerprint(&f)
+    };
+    let was = telemetry::enabled();
+    let instrumented = run(true);
+    let stripped = run(false);
+    telemetry::set_enabled(was);
+    assert_eq!(
+        instrumented, stripped,
+        "telemetry must not change a single bit of the trajectory"
+    );
+}
+
+#[test]
+fn scrape_during_chaos_drill_shows_eviction_counters() {
+    let d = 2;
+    let snap = seed_snapshot(d);
+    let batches = stream_batches(d, 4, 60);
+    // Counters are process-global and cumulative: assert on deltas.
+    let evictions_before = catalog::events_total("evict_worker").get();
+    let detections_before = catalog::detection_seconds().count();
+
+    let proxy = FaultProxy::spawn(spawn_local().unwrap(), Vec::new()).unwrap();
+    let workers = vec![
+        proxy.addr().to_string(),
+        spawn_local().unwrap(),
+        spawn_local().unwrap(),
+    ];
+    let mut f = DistributedFitter::from_snapshot(&snap, supervised_cfg(workers)).unwrap();
+    for b in &batches {
+        f.ingest(b).unwrap();
+    }
+    proxy.kill();
+    wait_for_eviction(
+        &mut f,
+        Instant::now(),
+        Duration::from_millis(GRACE_MS * 5 + 2000),
+    );
+
+    // Scrape mid-drill: the document must parse, carry the full default
+    // catalog, and show the drill in its counters.
+    let exposition = telemetry::render();
+    assert!(
+        family_count(&exposition) >= 10,
+        "scrape must expose >= 10 metric families:\n{exposition}"
+    );
+    let samples = text::parse(&exposition).expect("scrape must be valid exposition text");
+
+    let evictions =
+        text::find(&samples, "dpmm_events_total", &[("event", "evict_worker")])
+            .expect("evict_worker events series must be exposed")
+            .value;
+    assert!(
+        evictions >= (evictions_before + 1) as f64,
+        "the eviction must increment dpmm_events_total{{event=\"evict_worker\"}}: \
+         before={evictions_before}, scraped={evictions}"
+    );
+    let detections =
+        text::find(&samples, "dpmm_supervision_detection_seconds_count", &[])
+            .expect("detection latency histogram must be exposed")
+            .value;
+    assert!(
+        detections >= (detections_before + 1) as f64,
+        "the Dead verdict must feed the detection-latency histogram: \
+         before={detections_before}, scraped={detections}"
+    );
+    // The supervisor publishes per-state liveness gauges every cycle.
+    for state in ["healthy", "suspect", "dead"] {
+        assert!(
+            text::find(&samples, "dpmm_worker_liveness", &[("state", state)]).is_some(),
+            "liveness gauge for state={state} must be exposed"
+        );
+    }
+    // Heartbeat RTT histograms exist per probed worker address.
+    assert!(
+        samples.iter().any(|s| s.name == "dpmm_worker_heartbeat_rtt_seconds_count"
+            && s.value > 0.0),
+        "successful probes must feed the heartbeat RTT histogram"
+    );
+
+    // The drill itself stayed healthy: ingest continued on survivors.
+    let health = f.health();
+    assert_eq!((health.workers_total, health.workers_alive), (3, 2));
+    assert!(health.degraded && !health.halted);
+}
+
+#[test]
+fn worker_control_socket_answers_sessionless_metrics_verb() {
+    let addr = spawn_local().unwrap();
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let reply = wire::request(&mut stream, &Message::Metrics).unwrap();
+    let Message::MetricsReply(exposition) = reply else {
+        panic!("expected MetricsReply, got {reply:?}");
+    };
+    assert!(
+        family_count(&exposition) >= 10,
+        "worker scrape must expose >= 10 metric families:\n{exposition}"
+    );
+    let samples = text::parse(&exposition).expect("worker scrape must parse");
+    assert!(
+        text::find(&samples, "dpmm_worker_verbs_total", &[]).is_some(),
+        "the worker verb counter family must be exposed"
+    );
+    // The scrape itself was counted (Metrics is a verb too) — a fresh
+    // connection right after shows the counter at >= 1.
+    let mut stream2 = TcpStream::connect(&addr).unwrap();
+    let Message::MetricsReply(second) = wire::request(&mut stream2, &Message::Metrics).unwrap()
+    else {
+        panic!("expected MetricsReply");
+    };
+    let verbs = text::find(&text::parse(&second).unwrap(), "dpmm_worker_verbs_total", &[])
+        .unwrap()
+        .value;
+    assert!(verbs >= 1.0, "the Metrics verb must count itself: {verbs}");
+}

@@ -1,0 +1,242 @@
+#!/usr/bin/env python3
+"""Prometheus text-exposition (0.0.4) lint for CI scrape validation.
+
+Reads an exposition document from a file argument (or stdin with `-`) and
+checks the invariants the dpmm renderer guarantees
+(rust/src/telemetry/text.rs):
+
+* every sample line parses as `name[{labels}] value [timestamp]` with a
+  legal metric name and a float-parseable value;
+* every sample's family is declared by a preceding `# TYPE` line, and
+  `# TYPE` names/kinds are unique and legal;
+* histogram families expose `_bucket` series ending in `le="+Inf"`, with
+  cumulative bucket counts monotone non-decreasing and the +Inf bucket
+  equal to `_count`;
+* counters never carry a negative value.
+
+Optional `--min-families N` enforces the catalog floor (the acceptance
+criterion: leader/worker/serve endpoints expose >= 10 dpmm_* families).
+
+Usage: check_metrics_format.py [--min-families N] FILE|-
+"""
+
+import argparse
+import re
+import sys
+
+NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+KINDS = {"counter", "gauge", "histogram", "summary", "untyped"}
+
+
+def fail(lineno, line, why):
+    print(f"metrics lint: line {lineno}: {why}: {line!r}", file=sys.stderr)
+    return 1
+
+
+def split_sample(line):
+    """Split a sample line into (name, labels-dict-or-None, value-str)."""
+    brace = line.find("{")
+    space = line.find(" ")
+    if brace != -1 and (space == -1 or brace < space):
+        # Scan for the '}' closing the label set (label values may contain
+        # spaces/braces inside their quotes, and escaped quotes).
+        in_quotes = False
+        escaped = False
+        end = None
+        for i in range(brace, len(line)):
+            c = line[i]
+            if escaped:
+                escaped = False
+            elif c == "\\":
+                escaped = in_quotes
+            elif c == '"':
+                in_quotes = not in_quotes
+            elif c == "}" and not in_quotes:
+                end = i
+                break
+        if end is None:
+            raise ValueError("unterminated label set")
+        name = line[:brace]
+        labels = parse_labels(line[brace + 1 : end])
+        rest = line[end + 1 :].strip()
+    else:
+        name, _, rest = line.partition(" ")
+        labels = {}
+    if not rest:
+        raise ValueError("no value")
+    return name, labels, rest.split()[0]
+
+
+def parse_labels(body):
+    labels = {}
+    rest = body
+    while True:
+        rest = rest.lstrip(", ")
+        if not rest:
+            return labels
+        eq = rest.find("=")
+        if eq == -1:
+            raise ValueError("label missing '='")
+        key = rest[:eq].strip()
+        if not NAME.match(key):
+            raise ValueError(f"bad label name {key!r}")
+        rest = rest[eq + 1 :]
+        if not rest.startswith('"'):
+            raise ValueError("label value not quoted")
+        rest = rest[1:]
+        out = []
+        escaped = False
+        end = None
+        for i, c in enumerate(rest):
+            if escaped:
+                out.append(c)
+                escaped = False
+            elif c == "\\":
+                escaped = True
+            elif c == '"':
+                end = i
+                break
+            else:
+                out.append(c)
+        if end is None:
+            raise ValueError("unterminated label value")
+        labels[key] = "".join(out)
+        rest = rest[end + 1 :]
+
+
+def parse_value(v):
+    if v == "+Inf":
+        return float("inf")
+    if v == "-Inf":
+        return float("-inf")
+    return float(v)  # 'NaN' handled by float()
+
+
+def lint(text, min_families=0):
+    errors = 0
+    types = {}  # family name -> kind
+    # histogram family -> {labelset-sans-le (frozenset): [(le, count)]}
+    buckets = {}
+    hist_counts = {}  # (family, labelset) -> _count value
+    samples = 0
+
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) >= 2 and parts[1] == "TYPE":
+                if len(parts) < 4:
+                    errors += fail(lineno, raw, "malformed # TYPE")
+                    continue
+                name, kind = parts[2], parts[3].strip()
+                if not NAME.match(name):
+                    errors += fail(lineno, raw, f"bad family name {name!r}")
+                if kind not in KINDS:
+                    errors += fail(lineno, raw, f"unknown kind {kind!r}")
+                if name in types:
+                    errors += fail(lineno, raw, f"duplicate # TYPE for {name}")
+                types[name] = kind
+            continue
+        try:
+            name, labels, value_str = split_sample(line)
+            value = parse_value(value_str)
+        except ValueError as e:
+            errors += fail(lineno, raw, str(e))
+            continue
+        if not NAME.match(name):
+            errors += fail(lineno, raw, f"bad metric name {name!r}")
+            continue
+        samples += 1
+        family = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            base = name[: -len(suffix)] if name.endswith(suffix) else None
+            if base and types.get(base) == "histogram":
+                family = base
+                break
+        if family not in types:
+            errors += fail(lineno, raw, f"sample before/without # TYPE for {family}")
+            continue
+        kind = types[family]
+        if kind == "counter" and value < 0:
+            errors += fail(lineno, raw, "negative counter value")
+        if kind == "histogram":
+            key = frozenset((k, v) for k, v in labels.items() if k != "le")
+            if name.endswith("_bucket"):
+                if "le" not in labels:
+                    errors += fail(lineno, raw, "_bucket sample without le label")
+                    continue
+                buckets.setdefault(family, {}).setdefault(key, []).append(
+                    (labels["le"], value)
+                )
+            elif name.endswith("_count"):
+                hist_counts[(family, key)] = value
+
+    for family, series in buckets.items():
+        for key, entries in series.items():
+            les = [le for le, _ in entries]
+            counts = [c for _, c in entries]
+            if les[-1] != "+Inf":
+                errors += 1
+                print(
+                    f"metrics lint: histogram {family}{dict(key)}: bucket series "
+                    f"must end at le=\"+Inf\" (got {les!r})",
+                    file=sys.stderr,
+                )
+                continue
+            if any(earlier > later for earlier, later in zip(counts, counts[1:])):
+                errors += 1
+                print(
+                    f"metrics lint: histogram {family}{dict(key)}: cumulative "
+                    f"buckets not monotone: {counts!r}",
+                    file=sys.stderr,
+                )
+            total = hist_counts.get((family, key))
+            if total is not None and counts[-1] != total:
+                errors += 1
+                print(
+                    f"metrics lint: histogram {family}{dict(key)}: +Inf bucket "
+                    f"{counts[-1]} != _count {total}",
+                    file=sys.stderr,
+                )
+
+    dpmm_families = sum(1 for n in types if n.startswith("dpmm_"))
+    if min_families and dpmm_families < min_families:
+        errors += 1
+        print(
+            f"metrics lint: only {dpmm_families} dpmm_* families "
+            f"(need >= {min_families})",
+            file=sys.stderr,
+        )
+    return errors, samples, len(types), dpmm_families
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("file", help="exposition file, or - for stdin")
+    ap.add_argument(
+        "--min-families",
+        type=int,
+        default=0,
+        help="require at least N dpmm_* metric families",
+    )
+    args = ap.parse_args()
+    text = (
+        sys.stdin.read()
+        if args.file == "-"
+        else open(args.file, encoding="utf-8").read()
+    )
+    errors, samples, families, dpmm_families = lint(text, args.min_families)
+    if errors:
+        print(f"metrics lint: {errors} error(s)", file=sys.stderr)
+        return 1
+    print(
+        f"metrics lint: OK ({samples} samples, {families} families, "
+        f"{dpmm_families} dpmm_*)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

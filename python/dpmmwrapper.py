@@ -181,6 +181,21 @@ class ProtocolError(RuntimeError):
     """Malformed or unexpected bytes on the wire."""
 
 
+class FrameTooLargeError(ProtocolError):
+    """A reply's length prefix exceeds the 1 GiB frame cap.
+
+    Mirrors the Rust side's ``MAX_FRAME`` rejection: the prefix is
+    untrusted, so the client refuses before allocating or reading the
+    claimed payload. Typed (rather than a bare :class:`ProtocolError`) so
+    callers can distinguish a hostile/corrupt peer from ordinary framing
+    corruption; carries the claimed length as ``claimed``.
+    """
+
+    def __init__(self, claimed):
+        super().__init__(f"reply frame too large: {claimed} bytes (cap {_MAX_FRAME})")
+        self.claimed = claimed
+
+
 def _frame(payload):
     """Wrap a payload in the length-prefixed frame."""
     return struct.pack("<I", len(payload)) + payload
@@ -470,7 +485,7 @@ class DpmmClient:
         self._sock.sendall(frame)
         (length,) = struct.unpack("<I", self._recv_exact(4))
         if length > _MAX_FRAME:
-            raise ProtocolError(f"reply frame too large: {length} bytes")
+            raise FrameTooLargeError(length)
         return self._recv_exact(length)
 
     # -- API ---------------------------------------------------------------

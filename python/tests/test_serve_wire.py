@@ -177,3 +177,50 @@ class TestInfoAndStats:
         for tag in (w.TAG_INFO, w.TAG_STATS, w.TAG_SHUTDOWN):
             frame = w._encode_simple(tag)
             assert frame == struct.pack("<IBB", 2, w.SERVE_PROTO_VERSION, tag)
+
+
+class _FakeSock:
+    """Minimal socket stand-in: scripted reply bytes, records sends."""
+
+    def __init__(self, reply):
+        self._buf = reply
+        self.sent = b""
+
+    def sendall(self, data):
+        self.sent += data
+
+    def recv(self, n):
+        chunk, self._buf = self._buf[:n], self._buf[n:]
+        return chunk
+
+
+class TestReplyFrameCap:
+    """The reply length prefix is untrusted: oversized claims must raise
+    the typed FrameTooLargeError before any payload is read (mirrors the
+    Rust MAX_FRAME rejection in rust/src/backend/distributed/wire.rs)."""
+
+    def _client_with_reply(self, reply):
+        client = object.__new__(w.DpmmClient)
+        client._sock = _FakeSock(reply)
+        return client
+
+    def test_oversized_prefix_raises_typed_error(self):
+        claimed = w._MAX_FRAME + 1
+        client = self._client_with_reply(struct.pack("<I", claimed))
+        with pytest.raises(w.FrameTooLargeError) as exc:
+            client._roundtrip(w._encode_simple(w.TAG_INFO))
+        assert exc.value.claimed == claimed
+        # Nothing past the prefix was consumed.
+        assert client._sock._buf == b""
+
+    def test_frame_too_large_is_a_protocol_error(self):
+        assert issubclass(w.FrameTooLargeError, w.ProtocolError)
+
+    def test_cap_boundary_reads_body_instead(self):
+        # Exactly MAX_FRAME passes the cap check and proceeds to the body
+        # read; the scripted socket then runs dry, which must surface as
+        # the generic mid-reply ProtocolError, not the cap error.
+        client = self._client_with_reply(struct.pack("<I", w._MAX_FRAME))
+        with pytest.raises(w.ProtocolError) as exc:
+            client._roundtrip(w._encode_simple(w.TAG_INFO))
+        assert not isinstance(exc.value, w.FrameTooLargeError)

@@ -56,6 +56,33 @@ fn step_time(n: usize, d: usize, k: usize, threads: usize, kernel: AssignKernel)
     t0.elapsed().as_secs_f64() / reps as f64
 }
 
+/// One assignment sweep with the SIMD bodies forced off, then on: labels
+/// and sub-labels must match bitwise (the dispatch contract the
+/// prop_kernel_equiv suite pins; re-verified here so BENCH_hotpath.json
+/// records speedups *and* the equivalence they are conditional on).
+fn simd_labels_match(n: usize, d: usize, k: usize) -> bool {
+    use dpmm::backend::shard::{shard_step_tiled, Shard};
+    let mut rng = Xoshiro256pp::seed_from_u64((n + d * 7 + k * 13) as u64);
+    let ds = GmmSpec::default_with(n, d, k).generate(&mut rng);
+    let prior = Prior::Niw(dpmm::stats::NiwPrior::weak(d));
+    let mut state = DpmmState::new(10.0, prior.clone(), k, n, &mut rng);
+    let opts = SamplerOptions::default();
+    sample_weights(&mut state, &mut rng);
+    sample_sub_weights(&mut state, &mut rng);
+    sample_params(&mut state, &opts, &mut rng);
+    let plan = StepParams::snapshot(&state).plan();
+    let run = |simd_on: bool| {
+        dpmm::linalg::set_simd_enabled(simd_on);
+        let mut shard = Shard::new(0..n, Xoshiro256pp::seed_from_u64(17));
+        shard_step_tiled(&ds.points, &mut shard, &plan, &prior, 128);
+        (shard.z, shard.zsub)
+    };
+    let scalar = run(false);
+    let simd = run(true);
+    dpmm::linalg::set_simd_enabled(false);
+    scalar == simd
+}
+
 fn fit_exponent(xs: &[f64], ys: &[f64]) -> f64 {
     // least squares on log-log
     let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
@@ -101,22 +128,40 @@ fn main() {
     );
     println!("  exponent ~ K^{k_exp:.2} (paper: 1.0)\n");
 
-    // d scaling (N=40k, K=8), tiled vs scalar oracle: T = d² per paper.
+    // d scaling (N=40k, K=8), three legs: scalar oracle, tiled with the
+    // portable scalar bodies, tiled with the explicit-SIMD bodies. T = d²
+    // per paper; the SIMD leg targets ≥1.5× over scalar-body tiled at
+    // d=16/32 with bitwise-identical labels (checked below, recorded in
+    // the JSON).
     let dims = [4usize, 8, 16, 32];
+    let simd_available = dpmm::linalg::set_simd_enabled(true);
+    dpmm::linalg::set_simd_enabled(false);
     let td: Vec<f64> = dims.iter().map(|&d| step_time(40_000, d, 8, 1, tiled)).collect();
     let td_scalar: Vec<f64> = dims
         .iter()
         .map(|&d| step_time(40_000, d, 8, 1, AssignKernel::Scalar))
         .collect();
+    let td_simd: Vec<f64> = if simd_available {
+        dpmm::linalg::set_simd_enabled(true);
+        let v = dims.iter().map(|&d| step_time(40_000, d, 8, 1, tiled)).collect();
+        dpmm::linalg::set_simd_enabled(false);
+        v
+    } else {
+        td.clone()
+    };
+    let labels_identical = dims.iter().all(|&d| simd_labels_match(40_000, d, 8));
     let speedup: Vec<f64> = td_scalar.iter().zip(&td).map(|(s, t)| s / t).collect();
+    let simd_speedup: Vec<f64> = td.iter().zip(&td_simd).map(|(t, s)| t / s).collect();
     let d_exp = fit_exponent(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>(), &td);
-    println!("d sweep (N=40k, K=8), tiled kernel vs scalar oracle:");
+    let simd_body = if simd_available { "avx2" } else { "scalar (no AVX2)" };
+    println!("d sweep (N=40k, K=8), scalar oracle vs tiled vs tiled+SIMD ({simd_body}):");
     for (i, &d) in dims.iter().enumerate() {
         println!(
-            "  d={d:<3} tiled {:.3}s  scalar {:.3}s  speedup {:.2}x",
-            td[i], td_scalar[i], speedup[i]
+            "  d={d:<3} scalar {:.3}s  tiled {:.3}s ({:.2}x)  simd {:.3}s ({:.2}x vs tiled)",
+            td_scalar[i], td[i], speedup[i], td_simd[i], simd_speedup[i]
         );
     }
+    println!("  labels bitwise-identical across bodies: {labels_identical}");
     println!("  exponent ~ d^{d_exp:.2} (paper: T = d², i.e. 2.0 asymptotically)\n");
 
     // Substrate micro-benches: coordinator-side O(K·d³).
@@ -164,7 +209,11 @@ fn main() {
                 ("xs", Json::arr_f64(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>())),
                 ("tiled_s", Json::arr_f64(&td)),
                 ("scalar_s", Json::arr_f64(&td_scalar)),
+                ("simd_s", Json::arr_f64(&td_simd)),
                 ("speedup", Json::arr_f64(&speedup)),
+                ("simd_vs_tiled", Json::arr_f64(&simd_speedup)),
+                ("simd_body", simd_body.into()),
+                ("labels_bitwise_identical", labels_identical.into()),
                 ("exponent", d_exp.into()),
             ]),
         ),

@@ -16,10 +16,39 @@ mod support;
 
 use dpmm::model::DpmmState;
 use dpmm::prelude::*;
-use dpmm::serve::{spawn, DpmmClient, EngineConfig, ModelSnapshot, ScoringEngine, ServeConfig};
+use dpmm::serve::wire::{decode_request, ServeMessage, ServeRequest};
+use dpmm::serve::{
+    spawn, DpmmClient, EngineConfig, ModelSnapshot, Precision, ScoringEngine, ServeConfig,
+};
 use dpmm::stats::{NiwPrior, Prior};
 use dpmm::util::json::{self, Json};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Counting wrapper around the system allocator: the decode leg below
+/// reports *allocations per request* for the owning vs zero-copy request
+/// decoders, which is the metric the zero-copy path is about (steady-state
+/// O(1) — one owned point buffer — instead of one Vec per payload field).
+struct CountingAlloc;
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 const D: usize = 32;
 const K: usize = 8;
@@ -59,8 +88,8 @@ fn main() {
     );
 
     // --- engine-direct: one-point-at-a-time baseline (single thread) ----
-    let engine1 = ScoringEngine::new(&snapshot, EngineConfig { threads: 1, tile: 128 })
-        .expect("engine");
+    let config1 = EngineConfig { threads: 1, tile: 128, ..EngineConfig::default() };
+    let engine1 = ScoringEngine::new(&snapshot, config1).expect("engine");
     let n_base = n_score.min(10_000);
     let t0 = Instant::now();
     let mut sink = 0u64;
@@ -99,15 +128,35 @@ fn main() {
         }
     }
     // Acceptance metric: largest single-thread batch vs scalar baseline.
-    let best_1t = {
+    let (best_1t, labels_f64) = {
         let t0 = Instant::now();
         let b = engine1.score(&heldout, false).unwrap();
-        std::hint::black_box(&b.labels);
-        pps(n_score, t0.elapsed().as_secs_f64())
+        let rate = pps(n_score, t0.elapsed().as_secs_f64());
+        (rate, b.labels)
     };
     let speedup = best_1t / baseline_pps;
     println!(
         "\nbatched(1 thread, full batch) vs one-at-a-time: {speedup:.2}x  (target ≥ 5x at d=32)"
+    );
+
+    // --- opt-in f32 scoring (serve-only; fitting stays f64) ---------------
+    let engine_f32 = ScoringEngine::new(
+        &snapshot,
+        EngineConfig { threads: 1, tile: 128, precision: Precision::F32 },
+    )
+    .expect("engine");
+    let (f32_1t, labels_f32) = {
+        let t0 = Instant::now();
+        let b = engine_f32.score(&heldout, false).unwrap();
+        let rate = pps(n_score, t0.elapsed().as_secs_f64());
+        (rate, b.labels)
+    };
+    let f32_speedup = f32_1t / best_1t;
+    let agree = labels_f64.iter().zip(&labels_f32).filter(|(a, b)| a == b).count();
+    let f32_agreement = agree as f64 / labels_f64.len().max(1) as f64;
+    println!(
+        "f32 engine (1 thread, full batch): {f32_1t:>12.0} points/s  \
+         ({f32_speedup:.2}x vs f64, label agreement {f32_agreement:.4})"
     );
 
     // --- over-TCP with micro-batching ------------------------------------
@@ -160,6 +209,50 @@ fn main() {
     );
     server.stop().expect("server stop");
 
+    // --- wire decode: owning vs zero-copy ---------------------------------
+    // One realistic Predict payload, decoded repeatedly. The owning decoder
+    // materializes a fresh Vec per payload field; the zero-copy decoder
+    // borrows the frame and refills one caller-owned buffer, so its
+    // steady-state allocation count per request is 0 here (and O(1) on the
+    // server, which owns exactly one point buffer per job).
+    let n_req = n_score.min(4096);
+    let payload = ServeMessage::Predict {
+        flags: 0,
+        n: n_req as u32,
+        d: D as u32,
+        x: heldout[..n_req * D].to_vec(),
+    }
+    .encode();
+    let reps = 200usize;
+    let mut sink_x = 0.0f64;
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        if let ServeMessage::Predict { x, .. } = ServeMessage::decode(&payload).unwrap() {
+            sink_x += x[0];
+        }
+    }
+    let owning_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+    let owning_allocs = (ALLOCS.load(Ordering::Relaxed) - a0) as f64 / reps as f64;
+    let mut point_buf = Vec::new();
+    if let ServeRequest::Predict { x, .. } = decode_request(&payload).unwrap() {
+        x.read_into(&mut point_buf); // warm the reusable buffer
+    }
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        if let ServeRequest::Predict { x, .. } = decode_request(&payload).unwrap() {
+            x.read_into(&mut point_buf);
+            sink_x += point_buf[0];
+        }
+    }
+    let zero_copy_ns = t0.elapsed().as_secs_f64() * 1e9 / reps as f64;
+    let zero_copy_allocs = (ALLOCS.load(Ordering::Relaxed) - a0) as f64 / reps as f64;
+    println!(
+        "\ndecode ({n_req} pts/req): owning {owning_ns:.0} ns/req ({owning_allocs:.1} allocs), \
+         zero-copy {zero_copy_ns:.0} ns/req ({zero_copy_allocs:.1} allocs)  [sink {sink_x:.1}]"
+    );
+
     let doc = Json::obj(vec![
         ("bench", "serve_throughput".into()),
         ("d", D.into()),
@@ -168,6 +261,19 @@ fn main() {
         ("baseline_points_per_sec", baseline_pps.into()),
         ("batched_1t_full_points_per_sec", best_1t.into()),
         ("speedup_batched_vs_baseline", speedup.into()),
+        ("f32_points_per_sec", f32_1t.into()),
+        ("f32_speedup_vs_f64", f32_speedup.into()),
+        ("f32_label_agreement", f32_agreement.into()),
+        (
+            "decode",
+            Json::obj(vec![
+                ("points_per_request", n_req.into()),
+                ("owning_ns_per_request", owning_ns.into()),
+                ("owning_allocs_per_request", owning_allocs.into()),
+                ("zero_copy_ns_per_request", zero_copy_ns.into()),
+                ("zero_copy_allocs_per_request", zero_copy_allocs.into()),
+            ]),
+        ),
         ("engine_sweep", Json::Arr(engine_sweep)),
         ("tcp_sweep", Json::Arr(tcp_sweep)),
         (

@@ -301,11 +301,26 @@ impl<'a> Dec<'a> {
     }
     /// Raw (un-prefixed) f64 run of known length (see [`Enc::f64s_raw`]).
     pub fn f64s_raw(&mut self, n: usize) -> Result<Vec<f64>> {
-        let bytes = self.take(n.checked_mul(8).ok_or_else(|| anyhow!("f64 run overflow"))?)?;
-        Ok(bytes
-            .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-            .collect())
+        let mut out = Vec::new();
+        self.f64s_raw_into(n, &mut out)?;
+        Ok(out)
+    }
+    /// Borrow the raw little-endian bytes of an un-prefixed f64 run
+    /// without decoding — the zero-copy path: the returned slice lives as
+    /// long as the frame, so a borrowing message view can defer (or skip)
+    /// the f64 conversion entirely.
+    pub fn f64s_raw_bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n.checked_mul(8).ok_or_else(|| anyhow!("f64 run overflow"))?)
+    }
+    /// Decode an un-prefixed f64 run into caller scratch (cleared and
+    /// refilled; steady-state decoding allocates nothing once the scratch
+    /// has grown to the working-set size).
+    pub fn f64s_raw_into(&mut self, n: usize, out: &mut Vec<f64>) -> Result<()> {
+        let bytes = self.f64s_raw_bytes(n)?;
+        out.clear();
+        out.reserve(n);
+        out.extend(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())));
+        Ok(())
     }
     pub fn u32s(&mut self) -> Result<Vec<u32>> {
         let n = self.u32()? as usize;
@@ -552,7 +567,17 @@ const TAG_METRICS_REPLY: u8 = 26;
 
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
-        let mut e = Enc::new();
+        let mut buf = Vec::new();
+        self.encode_into(&mut buf);
+        buf
+    }
+
+    /// Encode into a caller-owned buffer (cleared first; reusing one
+    /// buffer across messages makes steady-state encoding allocation-free
+    /// once it has grown to the working-set size).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut e = Enc { buf: std::mem::take(out) };
+        e.buf.clear();
         e.u8(PROTO_VERSION);
         match self {
             Message::Init { d, prior, seed, threads, x } => {
@@ -694,7 +719,7 @@ impl Message {
                 e.str(text);
             }
         }
-        e.buf
+        *out = e.buf;
     }
 
     pub fn decode(buf: &[u8]) -> Result<Message> {
@@ -858,17 +883,87 @@ pub fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
     Ok(())
 }
 
-/// Read one `[u32 length][body]` frame (with the [`MAX_FRAME`] sanity cap).
-pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+/// Frame cap for connections with **no open session** (worker control
+/// verbs like `Ping`/`Metrics`, or garbage from a stray client). The
+/// session-opening verbs legitimately carry bulk payloads up to
+/// [`MAX_FRAME`]; everything else a sessionless peer may send fits in a
+/// few KiB, so a length prefix above this cap is rejected after reading at
+/// most two payload bytes — an unauthenticated connection can no longer
+/// force a large allocation.
+pub const MAX_SESSIONLESS_FRAME: usize = 64 * 1024;
+
+/// Frame bodies are read in chunks of this size, grown as bytes actually
+/// arrive — a peer that declares a huge length but sends nothing costs at
+/// most one chunk of memory, not the declared length.
+const READ_CHUNK: usize = 1 << 20;
+
+/// Fill `buf` (which already holds any peeked head bytes) up to `len`
+/// bytes from `r`, growing in [`READ_CHUNK`] steps. Truncation surfaces as
+/// `UnexpectedEof`; memory never exceeds bytes-received plus one chunk.
+fn fill_chunked(r: &mut impl Read, buf: &mut Vec<u8>, len: usize) -> Result<()> {
+    while buf.len() < len {
+        let start = buf.len();
+        buf.resize(start + READ_CHUNK.min(len - start), 0);
+        r.read_exact(&mut buf[start..])?;
+    }
+    Ok(())
+}
+
+/// Read one `[u32 length][body]` frame into a caller-owned buffer (cleared
+/// and refilled — a long-lived connection reuses one buffer across frames
+/// and allocates nothing in steady state). `cap_for` sees the first two
+/// payload bytes (`[version, tag]`, or fewer for tiny frames) and returns
+/// the byte cap for this frame; a declared length over the cap — or over
+/// [`MAX_FRAME`] — is rejected before any payload allocation.
+pub fn read_frame_capped_into(
+    r: &mut impl Read,
+    buf: &mut Vec<u8>,
+    cap_for: impl FnOnce(&[u8]) -> usize,
+) -> Result<()> {
     let mut len_buf = [0u8; 4];
     r.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
     if len > MAX_FRAME {
         bail!("message too large: {len} bytes");
     }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body)?;
+    let mut head = [0u8; 2];
+    let head_n = len.min(2);
+    r.read_exact(&mut head[..head_n])?;
+    let cap = cap_for(&head[..head_n]);
+    if len > cap {
+        bail!("message too large for this session state: {len} bytes (cap {cap})");
+    }
+    buf.clear();
+    buf.extend_from_slice(&head[..head_n]);
+    fill_chunked(r, buf, len)
+}
+
+/// [`read_frame_capped_into`] with the plain [`MAX_FRAME`] cap.
+pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<()> {
+    read_frame_capped_into(r, buf, |_| MAX_FRAME)
+}
+
+/// Read one `[u32 length][body]` frame (with the [`MAX_FRAME`] sanity cap,
+/// incremental chunked reads, and a fresh buffer per call — prefer
+/// [`read_frame_into`] on long-lived connections).
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut body = Vec::new();
+    read_frame_into(r, &mut body)?;
     Ok(body)
+}
+
+/// The frame cap for a worker connection whose session is `Idle`: only the
+/// session-opening verbs (`Init`, `StreamInit`, `StreamJoin`) may carry
+/// bulk payloads; heartbeats, scrapes, and anything unrecognized are held
+/// to [`MAX_SESSIONLESS_FRAME`]. `head` is the `[version, tag]` peek from
+/// [`read_frame_capped_into`].
+pub fn idle_frame_cap(head: &[u8]) -> usize {
+    match head {
+        [PROTO_VERSION, TAG_INIT]
+        | [PROTO_VERSION, TAG_STREAM_INIT]
+        | [PROTO_VERSION, TAG_STREAM_JOIN] => MAX_FRAME,
+        _ => MAX_SESSIONLESS_FRAME,
+    }
 }
 
 /// Write a length-prefixed message to a stream.
@@ -876,9 +971,75 @@ pub fn write_message(w: &mut impl Write, msg: &Message) -> Result<()> {
     write_frame(w, &msg.encode())
 }
 
+/// [`write_message`] through a caller-owned scratch buffer (reused across
+/// calls, so steady-state encoding allocates nothing).
+pub fn write_message_into(w: &mut impl Write, msg: &Message, scratch: &mut Vec<u8>) -> Result<()> {
+    msg.encode_into(scratch);
+    write_frame(w, scratch)
+}
+
 /// Read a length-prefixed message (with a 1 GiB sanity cap).
 pub fn read_message(r: &mut impl Read) -> Result<Message> {
     Message::decode(&read_frame(r)?)
+}
+
+/// Read a message into a caller-owned frame buffer (the reusable-buffer
+/// framing path for long-lived sessions). `idle` applies the
+/// [`idle_frame_cap`] — pass `true` while the connection has no open
+/// session, so pre-session verbs cannot force large allocations.
+pub fn read_message_into(r: &mut impl Read, buf: &mut Vec<u8>, idle: bool) -> Result<Message> {
+    if idle {
+        read_frame_capped_into(r, buf, idle_frame_cap)?;
+    } else {
+        read_frame_into(r, buf)?;
+    }
+    Message::decode(buf)
+}
+
+// ---------- pluggable codec seam ----------
+
+/// Pluggable payload codec over the shared `[u32 length][payload]`
+/// framing. The transport layer — length prefix, [`MAX_FRAME`] /
+/// sessionless caps, chunked reads, buffer reuse — is fixed above; *what a
+/// payload means* is supplied by a `Codec` implementation, so the fit and
+/// serve protocols (and synthetic test codecs) ride one framing layer
+/// instead of re-implementing it.
+pub trait Codec {
+    type Msg;
+    /// Encode one message's payload (version byte + tag + body) into
+    /// `out` (cleared first — reuse one buffer across calls).
+    fn encode_into(&self, msg: &Self::Msg, out: &mut Vec<u8>);
+    /// Decode one complete payload. Must consume the whole frame
+    /// (trailing bytes are an error) and never panic on corrupt input.
+    fn decode(&self, frame: &[u8]) -> Result<Self::Msg>;
+}
+
+/// The fit-protocol codec ([`PROTO_VERSION`] payloads, [`Message`] set).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FitCodec;
+
+impl Codec for FitCodec {
+    type Msg = Message;
+    fn encode_into(&self, msg: &Message, out: &mut Vec<u8>) {
+        msg.encode_into(out);
+    }
+    fn decode(&self, frame: &[u8]) -> Result<Message> {
+        Message::decode(frame)
+    }
+}
+
+/// Round-trip one message through any [`Codec`] over any stream, reusing a
+/// caller-owned scratch buffer for both directions.
+pub fn request_with<C: Codec>(
+    codec: &C,
+    stream: &mut (impl Read + Write),
+    msg: &C::Msg,
+    scratch: &mut Vec<u8>,
+) -> Result<C::Msg> {
+    codec.encode_into(msg, scratch);
+    write_frame(stream, scratch)?;
+    read_frame_into(stream, scratch)?;
+    codec.decode(scratch)
 }
 
 /// Socket I/O timeout for all DPMM TCP peers (leader, worker, serve

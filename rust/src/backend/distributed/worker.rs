@@ -17,7 +17,7 @@
 //!   [`crate::stream::distributed`] for the leader half and
 //!   docs/DETERMINISM.md for the contract).
 
-use super::wire::{read_message, write_message, BatchDelta, BatchState, Message};
+use super::wire::{read_message_into, write_message_into, BatchDelta, BatchState, Message};
 use crate::backend::native::{NativeBackend, NativeConfig};
 use crate::backend::shard::{AssignKernel, Shard, DEFAULT_TILE};
 use crate::backend::Backend;
@@ -324,8 +324,15 @@ fn stream_restore(
     Message::Ack
 }
 
-fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
-    let msg = read_message(stream)?;
+/// Handle one verb. `buf` is the connection's reusable frame buffer (read
+/// and write sides both go through it, so steady-state framing allocates
+/// nothing). While the session is [`Session::Idle`] the read applies the
+/// sessionless frame cap: a garbage or hostile length prefix on a
+/// connection that never opened a session is rejected after two payload
+/// bytes instead of driving a up-to-1-GiB allocation.
+fn handle(stream: &mut TcpStream, session: &mut Session, buf: &mut Vec<u8>) -> Result<bool> {
+    let idle = matches!(session, Session::Idle);
+    let msg = read_message_into(stream, buf, idle)?;
     GENERATION.fetch_add(1, Ordering::Relaxed);
     crate::telemetry::catalog::worker_verbs_total().inc();
     let reply = match msg {
@@ -454,7 +461,7 @@ fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
             _ => Message::Error("GetLabels before Init".into()),
         },
         Message::Shutdown => {
-            write_message(stream, &Message::Ack)?;
+            write_message_into(stream, &Message::Ack, buf)?;
             return Ok(false);
         }
         other => Message::Error(format!("unexpected message {other:?}")),
@@ -465,7 +472,7 @@ fn handle(stream: &mut TcpStream, session: &mut Session) -> Result<bool> {
         crate::telemetry::catalog::stream_window_points().set(ss.buffer.len() as f64);
         crate::telemetry::catalog::stream_window_batches().set(ss.batches.len() as f64);
     }
-    write_message(stream, &reply)?;
+    write_message_into(stream, &reply, buf)?;
     Ok(true)
 }
 
@@ -475,8 +482,9 @@ pub fn serve_connection(mut stream: TcpStream) -> Result<()> {
     // worker within one timeout instead of wedging it forever.
     super::wire::configure_stream(&stream).ok();
     let mut session = Session::Idle;
+    let mut buf = Vec::new();
     loop {
-        match handle(&mut stream, &mut session) {
+        match handle(&mut stream, &mut session, &mut buf) {
             Ok(true) => continue,
             Ok(false) => return Ok(()),
             Err(e) => {

@@ -70,6 +70,10 @@ pub struct ServeSettings {
     /// ephemeral). `None` = no scrape listener — the serve-wire `Metrics`
     /// verb still answers on the main address.
     pub metrics_addr: Option<String>,
+    /// Scoring arithmetic width (`f64` default; `f32` opts into the
+    /// reduced-precision serving path — see [`crate::serve::Precision`]
+    /// for the tolerance contract). Fitting always runs f64.
+    pub precision: crate::serve::Precision,
 }
 
 impl Default for ServeSettings {
@@ -80,13 +84,15 @@ impl Default for ServeSettings {
             tile: crate::backend::shard::DEFAULT_TILE,
             max_batch_points: 64 * 1024,
             metrics_addr: None,
+            precision: crate::serve::Precision::F64,
         }
     }
 }
 
 impl ServeSettings {
     /// Parse `--addr / --threads / --tile / --batch_points /
-    /// --metrics_addr` CLI overrides.
+    /// --metrics_addr / --precision` CLI overrides. `--precision` falls
+    /// back to the `DPMM_SERVE_PRECISION` env var when absent.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut s = ServeSettings::default();
         if let Some(a) = args.get("addr") {
@@ -103,6 +109,13 @@ impl ServeSettings {
         }
         if let Some(m) = args.get("metrics_addr") {
             s.metrics_addr = Some(m.to_string());
+        }
+        let precision = args
+            .get("precision")
+            .map(str::to_string)
+            .or_else(|| std::env::var("DPMM_SERVE_PRECISION").ok());
+        if let Some(p) = precision {
+            s.precision = p.parse().map_err(|e: String| anyhow::anyhow!(e))?;
         }
         Ok(s)
     }
@@ -573,6 +586,19 @@ mod tests {
         )
         .unwrap();
         assert!(ServeSettings::from_args(&bad).is_err());
+        let f32_args = Args::parse(
+            ["serve", "--precision=f32"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        let s = ServeSettings::from_args(&f32_args).unwrap();
+        assert_eq!(s.precision, crate::serve::Precision::F32);
+        let bad_precision = Args::parse(
+            ["serve", "--precision=f16"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        assert!(ServeSettings::from_args(&bad_precision).is_err());
     }
 
     #[test]

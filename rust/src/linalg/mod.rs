@@ -9,7 +9,10 @@ mod matrix;
 mod tile;
 
 pub use matrix::Matrix;
-pub use tile::{dot_accumulate_tile, gemm_lower_blocked, lower_affine_sqnorm, transpose_tile};
+pub use tile::{
+    dot_accumulate_tile, gemm_lower_blocked, lower_affine_sqnorm, set_simd_enabled, simd_active,
+    simd_label, transpose_tile,
+};
 
 /// log(det(Σ)) of an SPD matrix via Cholesky: 2·Σ log Lᵢᵢ.
 pub fn spd_logdet(m: &Matrix) -> Option<f64> {

@@ -13,8 +13,185 @@
 //! `i`), so the tiled and scalar assignment paths produce bitwise-identical
 //! scores — and therefore bitwise-identical label sequences under a fixed
 //! seed. See EXPERIMENTS.md §Perf.
+//!
+//! # Explicit SIMD (runtime-dispatched)
+//!
+//! Each kernel has an AVX2 body selected at runtime behind [`simd_active`]
+//! (cached feature detection + the `DPMM_SIMD` knob). The vector lanes run
+//! *across the tile dimension `t`* — the per-element accumulation order
+//! (ascending `j`, then ascending `i`) is untouched, and the AVX2 bodies
+//! use separate multiply and add instructions (never FMA, whose single
+//! rounding differs), so every lane computes bit-for-bit the scalar
+//! expression `acc = acc + c·x`. SIMD on/off therefore preserves the
+//! bitwise label contract above; `tests/prop_kernel_equiv.rs` pins it.
+//! The AVX2 bodies additionally keep the output row in registers across
+//! the whole `j` loop (one store per row instead of one load+store per
+//! `(j, t)`), which is where the measured speedup over the
+//! auto-vectorized scalar bodies comes from.
 
 use super::Matrix;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+// ---------------------------------------------------------------------------
+// Runtime SIMD dispatch seam
+// ---------------------------------------------------------------------------
+
+/// Dispatch cache: 0 = unresolved, 1 = scalar bodies, 2 = AVX2 bodies.
+static SIMD_MODE: AtomicU8 = AtomicU8::new(0);
+const MODE_SCALAR: u8 = 1;
+const MODE_AVX2: u8 = 2;
+
+#[cfg(target_arch = "x86_64")]
+fn detect_simd() -> u8 {
+    if std::arch::is_x86_64_feature_detected!("avx2") {
+        MODE_AVX2
+    } else {
+        MODE_SCALAR
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_simd() -> u8 {
+    MODE_SCALAR
+}
+
+fn resolve_simd() -> u8 {
+    match std::env::var("DPMM_SIMD").as_deref() {
+        Ok("0") | Ok("off") | Ok("false") | Ok("scalar") => MODE_SCALAR,
+        // "auto", "on", "avx2", unset, anything else: use what the CPU has.
+        _ => detect_simd(),
+    }
+}
+
+fn simd_mode() -> u8 {
+    match SIMD_MODE.load(Ordering::Relaxed) {
+        0 => {
+            let m = resolve_simd();
+            SIMD_MODE.store(m, Ordering::Relaxed);
+            m
+        }
+        m => m,
+    }
+}
+
+/// Whether the explicit-SIMD kernel bodies are live (AVX2 detected and not
+/// disabled via `DPMM_SIMD=off`). Output is bitwise-identical either way;
+/// this only selects which body computes it.
+pub fn simd_active() -> bool {
+    simd_mode() == MODE_AVX2
+}
+
+/// Force the SIMD bodies on or off, overriding `DPMM_SIMD` (bench A/B
+/// switch and equivalence-test hook). Requesting `true` on hardware
+/// without AVX2 stays scalar; the return value is the mode actually in
+/// effect after the call.
+pub fn set_simd_enabled(on: bool) -> bool {
+    let mode = if on { detect_simd() } else { MODE_SCALAR };
+    SIMD_MODE.store(mode, Ordering::Relaxed);
+    mode == MODE_AVX2
+}
+
+/// Human-readable name of the active kernel body (for bench JSON legs).
+pub fn simd_label() -> &'static str {
+    if simd_active() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+/// AVX2 kernel bodies. Safety: every function is `#[target_feature
+/// (enable = "avx2")]` and only ever called behind [`simd_active`] (cached
+/// `is_x86_64_feature_detected!("avx2")`), and all pointer arithmetic is
+/// bounded by the callers' `debug_assert!`-checked slice lengths.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// `y[t] += c · x[t]` over `y.len()` lanes. Separate mul + add per
+    /// lane (no FMA) — bitwise the scalar expression.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and `x.len() >= y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(c: f64, x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        let cv = _mm256_set1_pd(c);
+        let mut t = 0;
+        while t + 4 <= n {
+            let xv = _mm256_loadu_pd(x.as_ptr().add(t));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(t));
+            _mm256_storeu_pd(y.as_mut_ptr().add(t), _mm256_add_pd(yv, _mm256_mul_pd(cv, xv)));
+            t += 4;
+        }
+        while t < n {
+            *y.get_unchecked_mut(t) += c * *x.get_unchecked(t);
+            t += 1;
+        }
+    }
+
+    /// Register-blocked `Y[i] = Σ_j L[i][j] · X[j]` row of the blocked
+    /// lower-triangular GEMM: for each 4-lane chunk of columns the
+    /// accumulator lives in a register across the whole `j` loop, starting
+    /// from the current `y` contents (zeros on first panel touch).
+    /// Ascending-`j` accumulation per lane — bitwise the scalar body.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available; `w_row.len()` rows of `x` at
+    /// stride `stride` and `y[..m]` must be in bounds.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_accumulate(w_row: &[f64], x: &[f64], stride: usize, m: usize, y: &mut [f64]) {
+        let mut t = 0;
+        while t + 4 <= m {
+            let mut acc = _mm256_loadu_pd(y.as_ptr().add(t));
+            for (j, &wij) in w_row.iter().enumerate() {
+                let xv = _mm256_loadu_pd(x.as_ptr().add(j * stride + t));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_set1_pd(wij), xv));
+            }
+            _mm256_storeu_pd(y.as_mut_ptr().add(t), acc);
+            t += 4;
+        }
+        while t < m {
+            let mut acc = *y.get_unchecked(t);
+            for (j, &wij) in w_row.iter().enumerate() {
+                acc += wij * *x.get_unchecked(j * stride + t);
+            }
+            *y.get_unchecked_mut(t) = acc;
+            t += 1;
+        }
+    }
+
+    /// One row of the fused affine + squared-norm kernel:
+    /// `maha[t] += (−b_i + Σ_j w_row[j]·x[j·m+t])²`, with the row value
+    /// held in a register across the whole `j` loop. Per-lane order is
+    /// exactly the scalar body's (`−bᵢ`, then ascending `j`, then square).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available; `w_row.len()` rows of `x` at
+    /// stride `m` and `maha[..m]` must be in bounds.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_affine_sqnorm(w_row: &[f64], bi: f64, x: &[f64], m: usize, maha: &mut [f64]) {
+        let mut t = 0;
+        while t + 4 <= m {
+            let mut yv = _mm256_set1_pd(-bi);
+            for (j, &wij) in w_row.iter().enumerate() {
+                let xv = _mm256_loadu_pd(x.as_ptr().add(j * m + t));
+                yv = _mm256_add_pd(yv, _mm256_mul_pd(_mm256_set1_pd(wij), xv));
+            }
+            let mh = _mm256_loadu_pd(maha.as_ptr().add(t));
+            _mm256_storeu_pd(maha.as_mut_ptr().add(t), _mm256_add_pd(mh, _mm256_mul_pd(yv, yv)));
+            t += 4;
+        }
+        while t < m {
+            let mut yt = -bi;
+            for (j, &wij) in w_row.iter().enumerate() {
+                yt += wij * *x.get_unchecked(j * m + t);
+            }
+            *maha.get_unchecked_mut(t) += yt * yt;
+            t += 1;
+        }
+    }
+}
 
 /// Transpose `m` row-major points of dimension `d` into the feature-major
 /// tile layout: `out[i * m + t] = rows[t * d + i]`.
@@ -45,23 +222,47 @@ pub fn gemm_lower_blocked(l: &Matrix, x: &Matrix) -> Matrix {
     let m = x.cols();
     let mut y = Matrix::zeros(d, m);
     let ld = l.data();
+    let simd = simd_active();
     let mut col = 0;
     while col < m {
         let w = PANEL.min(m - col);
         for i in 0..d {
-            let row_range = i * m + col..i * m + col + w;
-            for j in 0..=i {
-                let lij = ld[i * d + j];
-                let xrow = &x.data()[j * m + col..j * m + col + w];
-                let yrow = &mut y.data_mut()[row_range.clone()];
-                for (yv, &xv) in yrow.iter_mut().zip(xrow) {
-                    *yv += lij * xv;
-                }
-            }
+            let w_row = &ld[i * d..i * d + i + 1];
+            row_accumulate_into(
+                simd,
+                w_row,
+                &x.data()[col..],
+                m,
+                w,
+                &mut y.data_mut()[i * m + col..i * m + col + w],
+            );
         }
         col += w;
     }
     y
+}
+
+/// Dispatching row accumulator `y[t] += Σ_j w_row[j] · x[j·stride + t]`
+/// over `y[..m]` — shared by [`gemm_lower_blocked`] and
+/// [`dot_accumulate_tile`]. The scalar and AVX2 bodies are bitwise
+/// equivalent (see the module docs).
+#[inline]
+fn row_accumulate_into(simd: bool, w_row: &[f64], x: &[f64], stride: usize, m: usize, y: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd {
+        // Safety: `simd` is gated on simd_active() (cached AVX2
+        // detection); callers guarantee `w_row.len()` rows of `x` at
+        // `stride` and `y[..m]` are in bounds.
+        unsafe { avx2::row_accumulate(w_row, x, stride, m, y) };
+        return;
+    }
+    let _ = simd;
+    for (j, &wij) in w_row.iter().enumerate() {
+        let xrow = &x[j * stride..j * stride + m];
+        for (yv, &xv) in y[..m].iter_mut().zip(xrow) {
+            *yv += wij * xv;
+        }
+    }
 }
 
 /// Fused whitened-GEMM + squared-norm kernel:
@@ -87,11 +288,22 @@ pub fn lower_affine_sqnorm(
     debug_assert!(x.len() >= d * m);
     debug_assert!(y.len() >= m && maha.len() >= m);
     maha[..m].fill(0.0);
+    let simd = simd_active();
     let mut off = 0;
     for i in 0..d {
         let bi = b[i];
+        let w_row = &w[off..off + i + 1];
+        #[cfg(target_arch = "x86_64")]
+        if simd {
+            // Safety: gated on simd_active() (cached AVX2 detection); the
+            // debug-asserted shapes bound every access.
+            unsafe { avx2::row_affine_sqnorm(w_row, bi, x, m, &mut maha[..m]) };
+            off += d;
+            continue;
+        }
+        let _ = simd;
         y[..m].fill(-bi);
-        for (j, &wij) in w[off..off + i + 1].iter().enumerate() {
+        for (j, &wij) in w_row.iter().enumerate() {
             let xrow = &x[j * m..j * m + m];
             for (yv, &xv) in y[..m].iter_mut().zip(xrow) {
                 *yv += wij * xv;
@@ -112,12 +324,7 @@ pub fn dot_accumulate_tile(coef: &[f64], x: &[f64], m: usize, acc: &mut [f64]) {
     debug_assert!(x.len() >= coef.len() * m);
     debug_assert!(acc.len() >= m);
     acc[..m].fill(0.0);
-    for (j, &c) in coef.iter().enumerate() {
-        let xrow = &x[j * m..j * m + m];
-        for (a, &xv) in acc[..m].iter_mut().zip(xrow) {
-            *a += c * xv;
-        }
-    }
+    row_accumulate_into(simd_active(), coef, x, m, m, &mut acc[..m]);
 }
 
 #[cfg(test)]
@@ -216,6 +423,69 @@ mod tests {
         for t in 0..m {
             let want: f64 = pts.row(t).iter().zip(&coef).map(|(&x, &c)| x * c).sum();
             assert!((acc[t] - want).abs() < 1e-12);
+        }
+    }
+
+    /// The AVX2 bodies must be *bitwise* equal to the scalar bodies for
+    /// every kernel, including ragged remainders (m not a multiple of the
+    /// lane width). On hardware without AVX2 the forced-on mode falls back
+    /// to scalar and the comparison is trivially exact.
+    ///
+    /// The dispatch-override assertions live in the same test because
+    /// [`set_simd_enabled`] mutates process-global state: two tests
+    /// flipping it concurrently would race (the *kernels* are safe under
+    /// such races — both bodies are bitwise equal — but assertions about
+    /// the flag itself are not).
+    #[test]
+    fn simd_bodies_bitwise_match_scalar() {
+        let was = simd_active();
+        assert!(!set_simd_enabled(false));
+        assert!(!simd_active());
+        // Forcing on only sticks where AVX2 exists; either way the label
+        // and the active flag agree.
+        let on = set_simd_enabled(true);
+        assert_eq!(on, simd_active());
+        assert_eq!(simd_label(), if on { "avx2" } else { "scalar" });
+        set_simd_enabled(was);
+        for (d, m) in [(1, 1), (2, 3), (5, 9), (8, 128), (16, 131), (32, 7), (33, 130)] {
+            let l = lower(d, d as u64 + 1);
+            let mu: Vec<f64> = (0..d).map(|i| 0.17 * i as f64 - 0.4).collect();
+            let b: Vec<f64> =
+                (0..d).map(|i| (0..=i).map(|j| l[(i, j)] * mu[j]).sum()).collect();
+            let pts = dense(m, d, 31 + m as u64);
+            let mut xt = vec![0.0; d * m];
+            transpose_tile(pts.data(), d, m, &mut xt);
+            let coef: Vec<f64> = (0..d).map(|j| ((j + 2) as f64).ln()).collect();
+            let xcols = dense(d, m, 77);
+
+            let was = simd_active();
+            set_simd_enabled(false);
+            let mut y = vec![0.0; m];
+            let mut maha_s = vec![0.0; m];
+            lower_affine_sqnorm(l.data(), d, &b, &xt, m, &mut y, &mut maha_s);
+            let mut acc_s = vec![0.0; m];
+            dot_accumulate_tile(&coef, &xt, m, &mut acc_s);
+            let gemm_s = gemm_lower_blocked(&l, &xcols);
+
+            set_simd_enabled(true);
+            let mut maha_v = vec![0.0; m];
+            lower_affine_sqnorm(l.data(), d, &b, &xt, m, &mut y, &mut maha_v);
+            let mut acc_v = vec![0.0; m];
+            dot_accumulate_tile(&coef, &xt, m, &mut acc_v);
+            let gemm_v = gemm_lower_blocked(&l, &xcols);
+            set_simd_enabled(was);
+
+            for t in 0..m {
+                assert_eq!(
+                    maha_s[t].to_bits(),
+                    maha_v[t].to_bits(),
+                    "maha d={d} m={m} t={t}"
+                );
+                assert_eq!(acc_s[t].to_bits(), acc_v[t].to_bits(), "dot d={d} m={m} t={t}");
+            }
+            for (s, v) in gemm_s.data().iter().zip(gemm_v.data()) {
+                assert_eq!(s.to_bits(), v.to_bits(), "gemm d={d} m={m}");
+            }
         }
     }
 

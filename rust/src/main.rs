@@ -315,7 +315,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let engine = ScoringEngine::new(
         &snapshot,
-        EngineConfig { threads: settings.threads, tile: settings.tile },
+        EngineConfig { threads: settings.threads, tile: settings.tile, precision: settings.precision },
     )?;
     serve::serve_blocking(
         engine,
@@ -335,7 +335,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
         path: p.clone(),
         every_batches: stream_settings.checkpoint_every,
     });
-    let engine_config = EngineConfig { threads: settings.threads, tile: settings.tile };
+    let engine_config = EngineConfig { threads: settings.threads, tile: settings.tile, precision: settings.precision };
 
     // --resume: replay the streaming checkpoint to a bitwise-identical
     // leader state (window/sweeps/decay/alpha come from the file); the
@@ -462,7 +462,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
         }
         let engine = ScoringEngine::new(
             &snapshot,
-            EngineConfig { threads: settings.threads, tile: settings.tile },
+            EngineConfig { threads: settings.threads, tile: settings.tile, precision: settings.precision },
         )?;
         let k = engine.k();
         let b = engine.score(&values, probs)?;

@@ -25,11 +25,58 @@
 //! chunking and thread count (pure argmax/reduction — no RNG anywhere on
 //! the request path).
 
-use super::snapshot::{FrozenPlan, ModelSnapshot, PredictiveDesc};
+use super::snapshot::{FrozenPlan, Kernel32, ModelSnapshot, Plan32, PredictiveDesc};
 use crate::linalg::{dot_accumulate_tile, lower_affine_sqnorm, transpose_tile};
 use crate::sampler::KernelDesc;
 use crate::util::threadpool::{default_threads, parallel_map};
 use anyhow::{bail, Result};
+
+/// Arithmetic width of the serving hot loop (fitting always runs f64).
+///
+/// `F32` narrows the bulk GEMM operands — whitening factors, offsets, and
+/// the point tiles — to single precision, halving the memory traffic of
+/// the dominant kernels; scalar log-space finishing (`dof`, `log_norm`,
+/// logsumexp) stays f64.
+///
+/// # Tolerance contract
+///
+/// Relative to the f64 path, on inputs whose magnitudes are moderate
+/// (whitened data; the serving path's normal regime):
+///
+/// * `map_score`, `log_predictive`, and `log_probs` agree to roughly
+///   single-precision accuracy — expect ~1e-5 relative error, guaranteed
+///   within `1e-3` relative (plus `1e-3` absolute near zero);
+/// * `labels` match wherever the f64 top-two score gap exceeds the score
+///   error bound; near-exact ties may break differently. **Not** bitwise
+///   reproducible against the f64 path — use `F64` (the default) anywhere
+///   determinism contracts apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F64,
+    F32,
+}
+
+impl std::str::FromStr for Precision {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "f64" | "double" => Ok(Precision::F64),
+            "f32" | "single" => Ok(Precision::F32),
+            other => Err(format!("unknown precision {other:?} (expected f32 or f64)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        })
+    }
+}
 
 /// Tuning knobs for [`ScoringEngine`].
 #[derive(Debug, Clone)]
@@ -39,11 +86,17 @@ pub struct EngineConfig {
     /// Points per tile (the fit path's [`crate::backend::shard::DEFAULT_TILE`]
     /// default works here too).
     pub tile: usize,
+    /// Scoring arithmetic width (serve-only; see [`Precision`]).
+    pub precision: Precision,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { threads: 0, tile: crate::backend::shard::DEFAULT_TILE }
+        Self {
+            threads: 0,
+            tile: crate::backend::shard::DEFAULT_TILE,
+            precision: Precision::F64,
+        }
     }
 }
 
@@ -108,6 +161,9 @@ impl ScoreBatch {
 /// ```
 pub struct ScoringEngine {
     plan: FrozenPlan,
+    /// Single-precision operand mirror; present iff the engine was built
+    /// with [`Precision::F32`].
+    plan32: Option<Plan32>,
     threads: usize,
     tile: usize,
 }
@@ -119,7 +175,13 @@ impl ScoringEngine {
 
     pub fn from_plan(plan: FrozenPlan, config: EngineConfig) -> ScoringEngine {
         let threads = if config.threads == 0 { default_threads() } else { config.threads };
-        ScoringEngine { plan, threads, tile: config.tile.max(1) }
+        let plan32 = (config.precision == Precision::F32).then(|| plan.to_f32());
+        ScoringEngine { plan, plan32, threads, tile: config.tile.max(1) }
+    }
+
+    /// Scoring arithmetic width this engine was built with.
+    pub fn precision(&self) -> Precision {
+        if self.plan32.is_some() { Precision::F32 } else { Precision::F64 }
     }
 
     pub fn k(&self) -> usize {
@@ -147,7 +209,7 @@ impl ScoringEngine {
     /// The tuning knobs this engine was built with — lets the hot-swap path
     /// rebuild a successor engine identically configured after an ingest.
     pub fn config(&self) -> EngineConfig {
-        EngineConfig { threads: self.threads, tile: self.tile }
+        EngineConfig { threads: self.threads, tile: self.tile, precision: self.precision() }
     }
 
     /// Score a batch of row-major points (`points.len()` must be a multiple
@@ -233,6 +295,9 @@ impl ScoringEngine {
         range: std::ops::Range<usize>,
         want_probs: bool,
     ) -> ScoreBatch {
+        if let Some(p32) = &self.plan32 {
+            return self.score_range_f32(p32, points, range, want_probs);
+        }
         let d = self.plan.d;
         let k = self.plan.k();
         let tile = self.tile;
@@ -309,6 +374,151 @@ impl ScoringEngine {
         }
         out
     }
+
+    /// f32 mirror of [`Self::score_range`] (tolerance contract on
+    /// [`Precision`]): tiles transpose straight into f32, the bulk
+    /// Mahalanobis / dot kernels run single precision, and per-point
+    /// log-space finishing (Student-t tail, logsumexp) widens back to f64
+    /// using the aligned f64 plan scalars.
+    fn score_range_f32(
+        &self,
+        p32: &Plan32,
+        points: &[f64],
+        range: std::ops::Range<usize>,
+        want_probs: bool,
+    ) -> ScoreBatch {
+        let d = self.plan.d;
+        let k = self.plan.k();
+        let tile = self.tile;
+        let mut out = ScoreBatch::with_capacity(range.len(), k, want_probs);
+        let mut xt = vec![0.0f32; d * tile];
+        let mut scores = vec![0.0f32; k * tile];
+        let mut pred = vec![0.0f64; k * tile];
+        let mut y = vec![0.0f32; tile];
+        let mut maha = vec![0.0f32; tile];
+        let mut start = range.start;
+        while start < range.end {
+            let m = tile.min(range.end - start);
+            transpose_tile_f32(&points[start * d..(start + m) * d], d, m, &mut xt);
+            for (c, desc) in p32.clusters.iter().enumerate() {
+                match desc {
+                    Kernel32::Gauss { w, b, c: ck } => {
+                        lower_affine_sqnorm_f32(w, d, b, &xt, m, &mut y, &mut maha);
+                        for t in 0..m {
+                            scores[t * k + c] = ck - 0.5 * maha[t];
+                        }
+                    }
+                    Kernel32::Mult { log_theta, c: ck } => {
+                        dot_accumulate_f32(log_theta, &xt, m, &mut maha);
+                        for t in 0..m {
+                            scores[t * k + c] = ck + maha[t];
+                        }
+                    }
+                }
+            }
+            for (c, ((p, wb), &lw)) in self
+                .plan
+                .predictive
+                .iter()
+                .zip(&p32.predictive_wb)
+                .zip(&self.plan.log_weights)
+                .enumerate()
+            {
+                match wb {
+                    Some((w, b)) => {
+                        lower_affine_sqnorm_f32(w, d, b, &xt, m, &mut y, &mut maha);
+                        for t in 0..m {
+                            pred[t * k + c] = lw + p.student_t_from_maha(maha[t] as f64);
+                        }
+                    }
+                    // DirMult: lgamma-shaped, scalar f64 over original rows.
+                    None => {
+                        for t in 0..m {
+                            let row = &points[(start + t) * d..(start + t + 1) * d];
+                            pred[t * k + c] = lw + p.log_predictive(row);
+                        }
+                    }
+                }
+            }
+            for t in 0..m {
+                let col = &scores[t * k..(t + 1) * k];
+                let mut best = f32::NEG_INFINITY;
+                let mut label = 0u32;
+                for (c, &s) in col.iter().enumerate() {
+                    if s > best {
+                        best = s;
+                        label = c as u32;
+                    }
+                }
+                out.labels.push(label);
+                out.map_score.push(best as f64);
+                let pcol = &pred[t * k..(t + 1) * k];
+                let mx = pcol.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let lp = mx + pcol.iter().map(|&v| (v - mx).exp()).sum::<f64>().ln();
+                out.log_predictive.push(lp);
+                if let Some(probs) = out.log_probs.as_mut() {
+                    let mut row: Vec<f64> = col.iter().map(|&v| v as f64).collect();
+                    normalize_log(&mut row);
+                    probs.extend_from_slice(&row);
+                }
+            }
+            start += m;
+        }
+        out
+    }
+}
+
+/// f32 mirror of [`crate::linalg::transpose_tile`]: narrow to single
+/// precision *while* transposing, so each tile is written exactly once.
+fn transpose_tile_f32(rows: &[f64], d: usize, m: usize, out: &mut [f32]) {
+    for t in 0..m {
+        for i in 0..d {
+            out[i * m + t] = rows[t * d + i] as f32;
+        }
+    }
+}
+
+/// f32 mirror of [`crate::linalg::lower_affine_sqnorm`]: `maha[t] =
+/// ‖w·x_t − b‖²` over the feature-major tile, lower triangle of row-major
+/// `w` only.
+fn lower_affine_sqnorm_f32(
+    w: &[f32],
+    d: usize,
+    b: &[f32],
+    xt: &[f32],
+    m: usize,
+    y: &mut [f32],
+    maha: &mut [f32],
+) {
+    maha[..m].fill(0.0);
+    let mut off = 0;
+    for i in 0..d {
+        let bi = b[i];
+        for v in y[..m].iter_mut() {
+            *v = -bi;
+        }
+        for (j, &wij) in w[off..off + i + 1].iter().enumerate() {
+            let xrow = &xt[j * m..j * m + m];
+            for (yv, &xv) in y[..m].iter_mut().zip(xrow) {
+                *yv += wij * xv;
+            }
+        }
+        for (mh, &yv) in maha[..m].iter_mut().zip(&y[..m]) {
+            *mh += yv * yv;
+        }
+        off += d;
+    }
+}
+
+/// f32 mirror of [`crate::linalg::dot_accumulate_tile`].
+fn dot_accumulate_f32(coef: &[f32], xt: &[f32], m: usize, acc: &mut [f32]) {
+    acc[..m].fill(0.0);
+    for (j, &cj) in coef.iter().enumerate() {
+        let xrow = &xt[j * m..j * m + m];
+        for (av, &xv) in acc[..m].iter_mut().zip(xrow) {
+            *av += cj * xv;
+        }
+    }
 }
 
 /// In-place `v -= logsumexp(v)` (stable normalization of a log vector).
@@ -375,8 +585,8 @@ mod tests {
     #[test]
     fn batched_matches_scalar_baseline() {
         let snap = gauss_snapshot();
-        let engine =
-            ScoringEngine::new(&snap, EngineConfig { threads: 3, tile: 4 }).unwrap();
+        let config = EngineConfig { threads: 3, tile: 4, ..Default::default() };
+        let engine = ScoringEngine::new(&snap, config).unwrap();
         let mut pts = Vec::new();
         for i in 0..37 {
             pts.push(-6.0 + 0.35 * i as f64);
@@ -399,12 +609,14 @@ mod tests {
             pts.push(-7.0 + 0.14 * i as f64);
             pts.push(0.3 - 0.01 * i as f64);
         }
-        let reference = ScoringEngine::new(&snap, EngineConfig { threads: 1, tile: 128 })
+        let base = EngineConfig { threads: 1, tile: 128, ..Default::default() };
+        let reference = ScoringEngine::new(&snap, base)
             .unwrap()
             .score(&pts, true)
             .unwrap();
         for (threads, tile) in [(2, 7), (4, 1), (8, 64), (3, 256)] {
-            let got = ScoringEngine::new(&snap, EngineConfig { threads, tile })
+            let got =
+                ScoringEngine::new(&snap, EngineConfig { threads, tile, ..Default::default() })
                 .unwrap()
                 .score(&pts, true)
                 .unwrap();
@@ -448,7 +660,8 @@ mod tests {
     #[test]
     fn multinomial_scoring_works() {
         let snap = mult_snapshot();
-        let engine = ScoringEngine::new(&snap, EngineConfig { threads: 2, tile: 3 }).unwrap();
+        let config = EngineConfig { threads: 2, tile: 3, ..Default::default() };
+        let engine = ScoringEngine::new(&snap, config).unwrap();
         let pts = vec![
             6.0, 5.0, 1.0, 0.0, // topic 0
             0.0, 1.0, 7.0, 4.0, // topic 1
@@ -465,6 +678,66 @@ mod tests {
         // cluster: log p = 0 through the mixture.
         let empty = engine.score(&[0.0; 4], false).unwrap();
         assert!(empty.log_predictive[0].abs() < 1e-9);
+    }
+
+    /// The [`Precision`] tolerance contract: f32 scores track f64 within
+    /// 1e-3 relative (+1e-3 absolute near zero), and labels agree wherever
+    /// the f64 top-two margin is decisive. Swept over thread/tile shapes
+    /// so chunk boundaries are covered on both paths.
+    #[test]
+    fn f32_scores_match_f64_within_tolerance() {
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-3 + 1e-3 * a.abs().max(b.abs());
+        for snap in [gauss_snapshot(), mult_snapshot()] {
+            let d = snap.dim();
+            let mut pts = Vec::new();
+            for i in 0..57 {
+                for j in 0..d {
+                    // In-range magnitudes for both families (counts for
+                    // the multinomial, blob-scale reals for the Gaussian).
+                    pts.push(((i * 7 + j * 3) % 11) as f64 - if d == 2 { 5.0 } else { 0.0 });
+                }
+            }
+            let f64_engine = ScoringEngine::new(&snap, EngineConfig::default()).unwrap();
+            let reference = f64_engine.score(&pts, true).unwrap();
+            for (threads, tile) in [(1, 128), (3, 4), (2, 7)] {
+                let engine = ScoringEngine::new(
+                    &snap,
+                    EngineConfig { threads, tile, precision: Precision::F32 },
+                )
+                .unwrap();
+                assert_eq!(engine.precision(), Precision::F32);
+                assert_eq!(engine.config().precision, Precision::F32);
+                let got = engine.score(&pts, true).unwrap();
+                let k = snap.k();
+                for i in 0..57 {
+                    assert!(
+                        close(got.map_score[i], reference.map_score[i]),
+                        "map_score[{i}]: {} vs {}",
+                        got.map_score[i],
+                        reference.map_score[i]
+                    );
+                    assert!(
+                        close(got.log_predictive[i], reference.log_predictive[i]),
+                        "log_predictive[{i}]: {} vs {}",
+                        got.log_predictive[i],
+                        reference.log_predictive[i]
+                    );
+                    // Labels must agree when the f64 margin is decisive.
+                    let row = &reference.log_probs.as_ref().unwrap()[i * k..(i + 1) * k];
+                    let mut sorted: Vec<f64> = row.to_vec();
+                    sorted.sort_by(|a, b| b.total_cmp(a));
+                    if sorted[0] - sorted.get(1).copied().unwrap_or(f64::NEG_INFINITY) > 1e-2 {
+                        assert_eq!(got.labels[i], reference.labels[i], "point {i}");
+                    }
+                    for (a, b) in got.log_probs.as_ref().unwrap()[i * k..(i + 1) * k]
+                        .iter()
+                        .zip(row)
+                    {
+                        assert!(close(*a, *b), "log_probs[{i}]: {a} vs {b}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

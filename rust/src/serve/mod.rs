@@ -50,8 +50,8 @@ pub mod snapshot;
 pub mod wire;
 
 pub use client::{DpmmClient, IngestReceipt, Prediction, ServeStats, ServerInfo};
-pub use engine::{EngineConfig, ScoreBatch, ScoringEngine};
+pub use engine::{EngineConfig, Precision, ScoreBatch, ScoringEngine};
 pub use server::{
     serve_blocking, serve_blocking_streaming, spawn, spawn_streaming, ServeConfig, ServerHandle,
 };
-pub use snapshot::{FrozenPlan, ModelSnapshot, PredictiveDesc, SnapshotCluster};
+pub use snapshot::{FrozenPlan, Kernel32, ModelSnapshot, Plan32, PredictiveDesc, SnapshotCluster};

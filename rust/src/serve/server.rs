@@ -37,7 +37,10 @@
 //! error reply, not a hang.
 
 use super::engine::{EngineConfig, ScoreBatch, ScoringEngine};
-use super::wire::{write_serve, ServeMessage, FLAG_LOG_PROBS};
+use super::wire::{
+    decode_request, serve_request_frame_cap, write_serve, write_serve_into, ServeMessage,
+    ServeRequest, FLAG_LOG_PROBS,
+};
 use crate::backend::distributed::wire::{configure_stream, MAX_FRAME};
 use crate::stream::StreamFitter;
 use anyhow::{bail, Context, Result};
@@ -438,24 +441,47 @@ fn read_exact_interruptible(
     Ok(true)
 }
 
-/// Read one frame, or `None` on shutdown / clean EOF.
+/// Read one frame into the caller's reusable buffer; `false` on shutdown /
+/// clean EOF. The 4-byte length prefix is **untrusted**: the two head
+/// payload bytes (version, tag) are read first and pick the allocation cap
+/// via [`serve_request_frame_cap`] — only the bulk verbs (`Predict`,
+/// `Ingest`) may claim the full [`MAX_FRAME`] — and the body then fills in
+/// bounded chunks as bytes actually arrive, so a hostile length prefix
+/// costs at most the bytes sent plus one chunk, never an up-front 1 GiB
+/// allocation.
 fn read_frame_interruptible(
     stream: &mut TcpStream,
     shutdown: &AtomicBool,
-) -> Result<Option<Vec<u8>>> {
+    buf: &mut Vec<u8>,
+) -> Result<bool> {
+    const READ_CHUNK: usize = 1 << 20;
     let mut len_buf = [0u8; 4];
     if !read_exact_interruptible(stream, &mut len_buf, shutdown, true)? {
-        return Ok(None);
+        return Ok(false);
     }
     let len = u32::from_le_bytes(len_buf) as usize;
     if len > MAX_FRAME {
         bail!("serve message too large: {len} bytes");
     }
-    let mut body = vec![0u8; len];
-    if !read_exact_interruptible(stream, &mut body, shutdown, false)? {
-        return Ok(None);
+    let mut head = [0u8; 2];
+    let head_n = len.min(2);
+    if !read_exact_interruptible(stream, &mut head[..head_n], shutdown, false)? {
+        return Ok(false);
     }
-    Ok(Some(body))
+    let cap = serve_request_frame_cap(&head[..head_n]);
+    if len > cap {
+        bail!("serve message too large for this verb: {len} bytes (cap {cap})");
+    }
+    buf.clear();
+    buf.extend_from_slice(&head[..head_n]);
+    while buf.len() < len {
+        let start = buf.len();
+        buf.resize(start + READ_CHUNK.min(len - start), 0);
+        if !read_exact_interruptible(stream, &mut buf[start..], shutdown, false)? {
+            return Ok(false);
+        }
+    }
+    Ok(true)
 }
 
 fn handle_connection(mut stream: TcpStream, shared: &Shared) -> Result<()> {
@@ -463,21 +489,52 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) -> Result<()> {
     // read timeout so the blocking reader doubles as the shutdown poll.
     configure_stream(&stream)?;
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    // Per-connection reusable buffers: the frame body and the reply
+    // encoding each amortize to zero allocations per request on a
+    // keep-alive connection.
+    let mut frame = Vec::new();
+    let mut scratch = Vec::new();
     loop {
-        let body = match read_frame_interruptible(&mut stream, &shared.shutdown)? {
-            Some(b) => b,
-            None => return Ok(()),
-        };
-        let reply = match ServeMessage::decode(&body) {
-            Ok(msg) => handle_message(msg, shared, &mut stream)?,
+        if !read_frame_interruptible(&mut stream, &shared.shutdown, &mut frame)? {
+            return Ok(());
+        }
+        // Zero-copy decode: the bulk verbs' point payloads stay borrowed
+        // raw bytes until converted once into the owned buffer the job
+        // queue needs; no intermediate Vec is built per field.
+        let reply = match decode_request(&frame) {
+            Ok(req) => handle_request(req, shared, &mut stream)?,
             Err(e) => Some(ServeMessage::Error(format!("bad request: {e:#}"))),
         };
         match reply {
-            Some(msg) => write_serve(&mut stream, &msg)?,
+            Some(msg) => write_serve_into(&mut stream, &msg, &mut scratch)?,
             // Shutdown was acknowledged inside handle_message.
             None => return Ok(()),
         }
     }
+}
+
+/// Dispatch one decoded request view. The bulk verbs convert their borrowed
+/// payload into the owned `Vec<f64>` the batch queue requires (exactly one
+/// payload allocation per request); everything else flows through
+/// [`handle_message`] unchanged.
+fn handle_request(
+    req: ServeRequest<'_>,
+    shared: &Shared,
+    stream: &mut TcpStream,
+) -> Result<Option<ServeMessage>> {
+    Ok(match req {
+        ServeRequest::Predict { flags, n, d, x } => {
+            let mut owned = Vec::new();
+            x.read_into(&mut owned);
+            Some(predict_reply(shared, flags, n as usize, d as usize, owned))
+        }
+        ServeRequest::Ingest { n, d, x } => {
+            let mut owned = Vec::new();
+            x.read_into(&mut owned);
+            Some(ingest_reply(shared, n as usize, d as usize, owned))
+        }
+        ServeRequest::Other(msg) => handle_message(msg, shared, stream)?,
+    })
 }
 
 /// Process one request; `None` means the connection should close (the

@@ -141,6 +141,65 @@ impl FrozenPlan {
     pub fn k(&self) -> usize {
         self.clusters.len()
     }
+
+    /// Derive the single-precision operand mirror for the opt-in f32
+    /// scoring path (see [`crate::serve::Precision`]). Serve-only: the
+    /// narrowing happens once here at plan build — fitting and the
+    /// snapshot itself stay f64 — and the per-cluster scalar finishing
+    /// terms (`dof`, `log_norm`, weights) remain f64 via the aligned
+    /// [`FrozenPlan::predictive`] entries.
+    pub fn to_f32(&self) -> Plan32 {
+        let clusters = self
+            .clusters
+            .iter()
+            .map(|desc| match desc {
+                KernelDesc::Gauss { w, b, c } => Kernel32::Gauss {
+                    w: w.iter().map(|&v| v as f32).collect(),
+                    b: b.iter().map(|&v| v as f32).collect(),
+                    c: *c as f32,
+                },
+                KernelDesc::Mult { log_theta, c } => Kernel32::Mult {
+                    log_theta: log_theta.iter().map(|&v| v as f32).collect(),
+                    c: *c as f32,
+                },
+            })
+            .collect();
+        let predictive_wb = self
+            .predictive
+            .iter()
+            .map(|p| match p {
+                PredictiveDesc::StudentT { w, b, .. } => Some((
+                    w.iter().map(|&v| v as f32).collect(),
+                    b.iter().map(|&v| v as f32).collect(),
+                )),
+                // Compound predictive is lgamma-shaped; it stays on the
+                // f64 scalar path regardless of precision.
+                PredictiveDesc::DirMult { .. } => None,
+            })
+            .collect();
+        Plan32 { clusters, predictive_wb }
+    }
+}
+
+/// Single-precision mirror of one cluster's plug-in MAP descriptor
+/// (the f32 scoring path's GEMM operands; companion to [`KernelDesc`]).
+#[derive(Debug, Clone)]
+pub enum Kernel32 {
+    Gauss { w: Vec<f32>, b: Vec<f32>, c: f32 },
+    Mult { log_theta: Vec<f32>, c: f32 },
+}
+
+/// Single-precision operand mirror of a [`FrozenPlan`] — only the bulk
+/// GEMM inputs are narrowed; scalar log-space finishing stays f64 through
+/// the aligned f64 plan entries.
+#[derive(Debug, Clone)]
+pub struct Plan32 {
+    /// Aligned with [`FrozenPlan::clusters`].
+    pub clusters: Vec<Kernel32>,
+    /// Whitening factor + offset per predictive descriptor, aligned with
+    /// [`FrozenPlan::predictive`]; `None` marks DirMult entries (scalar
+    /// f64 path).
+    pub predictive_wb: Vec<Option<(Vec<f32>, Vec<f32>)>>,
 }
 
 impl ModelSnapshot {

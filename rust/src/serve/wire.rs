@@ -28,7 +28,9 @@
 //! distribution happens behind the server on the fit protocol's `Stream*`
 //! verbs.
 
-use crate::backend::distributed::wire::{read_frame, write_frame, Dec, Enc};
+use crate::backend::distributed::wire::{
+    read_frame, write_frame, Codec, Dec, Enc, MAX_FRAME, MAX_SESSIONLESS_FRAME,
+};
 use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
 
@@ -139,7 +141,17 @@ const TAG_METRICS_REPLY: u8 = 13;
 
 impl ServeMessage {
     pub fn encode(&self) -> Vec<u8> {
-        let mut e = Enc::new();
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode into a caller-owned buffer (cleared first). Lets senders on
+    /// the hot path reuse one scratch allocation per connection instead of
+    /// building a fresh `Vec` per message.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut e = Enc { buf: std::mem::take(out) };
+        e.buf.clear();
         e.u8(SERVE_PROTO_VERSION);
         match self {
             ServeMessage::Predict { flags, n, d, x } => {
@@ -232,7 +244,7 @@ impl ServeMessage {
                 e.str(text);
             }
         }
-        e.buf
+        *out = e.buf;
     }
 
     pub fn decode(buf: &[u8]) -> Result<ServeMessage> {
@@ -333,6 +345,114 @@ impl ServeMessage {
     }
 }
 
+/// A borrowed run of `n` raw little-endian f64s inside a decoded frame.
+///
+/// The zero-copy decode path ([`decode_request`]) hands the bulk payload
+/// back as this view instead of materializing a `Vec<f64>` per request;
+/// the server converts once into per-connection scratch via
+/// [`RawF64s::read_into`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RawF64s<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> RawF64s<'a> {
+    /// Number of f64 values in the run.
+    pub fn len(&self) -> usize {
+        self.bytes.len() / 8
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Decode the run into a caller-owned buffer (cleared first).
+    pub fn read_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(self.len());
+        out.extend(
+            self.bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())),
+        );
+    }
+
+    /// Decode the run into a fresh `Vec` (allocating path; tests/tools).
+    pub fn to_vec(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.read_into(&mut out);
+        out
+    }
+}
+
+/// Borrowed zero-copy view of one client request frame.
+///
+/// The two bulk-payload verbs (`Predict`, `Ingest`) decode to views whose
+/// point matrix borrows the frame's raw bytes — no per-request `Vec<f64>`
+/// is built at decode time. Every other verb carries a small payload and
+/// decodes through the owning [`ServeMessage`] path unchanged.
+#[derive(Debug, PartialEq)]
+pub enum ServeRequest<'a> {
+    Predict { flags: u8, n: u32, d: u32, x: RawF64s<'a> },
+    Ingest { n: u32, d: u32, x: RawF64s<'a> },
+    Other(ServeMessage),
+}
+
+/// Decode one request frame without copying the bulk payload (the
+/// zero-copy fast path the server's per-connection loop uses). Applies the
+/// same shape caps and truncation checks as [`ServeMessage::decode`].
+pub fn decode_request(frame: &[u8]) -> Result<ServeRequest<'_>> {
+    let mut d = Dec::new(frame);
+    let ver = d.u8()?;
+    if ver != SERVE_PROTO_VERSION {
+        bail!("serve protocol version mismatch: got {ver}, want {SERVE_PROTO_VERSION}");
+    }
+    match d.u8()? {
+        TAG_PREDICT => {
+            let flags = d.u8()?;
+            let n = d.u32()?;
+            let dim = d.u32()?;
+            let count = (n as usize)
+                .checked_mul(dim as usize)
+                .ok_or_else(|| anyhow!("predict shape overflow"))?;
+            if n as usize > MAX_PREDICT_POINTS {
+                bail!("predict batch too large: {n} points");
+            }
+            let x = RawF64s { bytes: d.f64s_raw_bytes(count)? };
+            if !d.finished() {
+                bail!("trailing bytes after serve message (tag {TAG_PREDICT})");
+            }
+            Ok(ServeRequest::Predict { flags, n, d: dim, x })
+        }
+        TAG_INGEST => {
+            let n = d.u32()?;
+            let dim = d.u32()?;
+            let count = (n as usize)
+                .checked_mul(dim as usize)
+                .ok_or_else(|| anyhow!("ingest shape overflow"))?;
+            if n as usize > MAX_PREDICT_POINTS {
+                bail!("ingest batch too large: {n} points");
+            }
+            let x = RawF64s { bytes: d.f64s_raw_bytes(count)? };
+            if !d.finished() {
+                bail!("trailing bytes after serve message (tag {TAG_INGEST})");
+            }
+            Ok(ServeRequest::Ingest { n, d: dim, x })
+        }
+        _ => Ok(ServeRequest::Other(ServeMessage::decode(frame)?)),
+    }
+}
+
+/// Per-frame allocation cap for a server reading *client requests*, keyed
+/// on the first two payload bytes (version, tag). Only the two bulk verbs
+/// may fill the full [`MAX_FRAME`]; every other request — including
+/// unknown tags and wrong-version garbage — is capped at
+/// [`MAX_SESSIONLESS_FRAME`] before its payload is ever buffered.
+pub fn serve_request_frame_cap(head: &[u8]) -> usize {
+    match head {
+        [SERVE_PROTO_VERSION, TAG_PREDICT] | [SERVE_PROTO_VERSION, TAG_INGEST] => MAX_FRAME,
+        _ => MAX_SESSIONLESS_FRAME,
+    }
+}
+
 /// Write one length-prefixed serve message.
 pub fn write_serve(w: &mut impl Write, msg: &ServeMessage) -> Result<()> {
     write_frame(w, &msg.encode())
@@ -341,6 +461,35 @@ pub fn write_serve(w: &mut impl Write, msg: &ServeMessage) -> Result<()> {
 /// Read one length-prefixed serve message.
 pub fn read_serve(r: &mut impl Read) -> Result<ServeMessage> {
     ServeMessage::decode(&read_frame(r)?)
+}
+
+/// [`write_serve`] through a caller-owned scratch buffer (no per-message
+/// encode allocation).
+pub fn write_serve_into(
+    w: &mut impl Write,
+    msg: &ServeMessage,
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
+    msg.encode_into(scratch);
+    write_frame(w, scratch)
+}
+
+/// Serving-protocol instance of the pluggable frame codec seam (see
+/// [`crate::backend::distributed::wire::Codec`]): framing and transport
+/// loops stay generic over which message set rides inside the frames.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeCodec;
+
+impl Codec for ServeCodec {
+    type Msg = ServeMessage;
+
+    fn encode_into(&self, msg: &ServeMessage, out: &mut Vec<u8>) {
+        msg.encode_into(out);
+    }
+
+    fn decode(&self, frame: &[u8]) -> Result<ServeMessage> {
+        ServeMessage::decode(frame)
+    }
 }
 
 #[cfg(test)]
@@ -460,5 +609,98 @@ mod tests {
         let mut cursor = std::io::Cursor::new(buf);
         assert_eq!(read_serve(&mut cursor).unwrap(), ServeMessage::Info);
         assert_eq!(read_serve(&mut cursor).unwrap(), ServeMessage::Shutdown);
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer_and_matches_encode() {
+        let msgs =
+            [ServeMessage::Predict { flags: 1, n: 2, d: 2, x: vec![1.0, 2.0, 3.0, 4.0] },
+             ServeMessage::Error("boom".into()),
+             ServeMessage::Ack];
+        let mut scratch = Vec::new();
+        for msg in &msgs {
+            msg.encode_into(&mut scratch);
+            assert_eq!(scratch, msg.encode(), "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn zero_copy_decode_matches_owning_decode() {
+        let x = vec![0.5, -1.25, 3.75, 42.0, -0.0, 1e-300];
+        let predict = ServeMessage::Predict { flags: FLAG_LOG_PROBS, n: 2, d: 3, x: x.clone() };
+        let frame = predict.encode();
+        match decode_request(&frame).unwrap() {
+            ServeRequest::Predict { flags, n, d, x: raw } => {
+                assert_eq!((flags, n, d), (FLAG_LOG_PROBS, 2, 3));
+                assert_eq!(raw.len(), 6);
+                assert_eq!(raw.to_vec(), x);
+                let mut scratch = vec![9.0; 64];
+                raw.read_into(&mut scratch);
+                assert_eq!(scratch, x);
+            }
+            other => panic!("expected Predict view, got {other:?}"),
+        }
+        let ingest = ServeMessage::Ingest { n: 1, d: 2, x: vec![7.0, 8.0] };
+        match decode_request(&ingest.encode()).unwrap() {
+            ServeRequest::Ingest { n: 1, d: 2, x: raw } => assert_eq!(raw.to_vec(), [7.0, 8.0]),
+            other => panic!("expected Ingest view, got {other:?}"),
+        }
+        // Non-bulk verbs fall through to the owning decoder.
+        assert_eq!(decode_request(&ServeMessage::Stats.encode()).unwrap(),
+                   ServeRequest::Other(ServeMessage::Stats));
+        // Same rejection behavior as the owning decoder.
+        let mut e = crate::backend::distributed::wire::Enc::new();
+        e.u8(SERVE_PROTO_VERSION);
+        e.u8(1); // TAG_PREDICT
+        e.u8(0);
+        e.u32(10);
+        e.u32(8);
+        e.f64(1.0); // truncated payload
+        assert!(decode_request(&e.buf).is_err());
+        let mut e = crate::backend::distributed::wire::Enc::new();
+        e.u8(SERVE_PROTO_VERSION);
+        e.u8(10); // TAG_INGEST
+        e.u32((MAX_PREDICT_POINTS + 1) as u32);
+        e.u32(1);
+        assert!(decode_request(&e.buf).is_err());
+    }
+
+    #[test]
+    fn request_frame_cap_gates_non_bulk_verbs() {
+        let bulk = [SERVE_PROTO_VERSION, 1]; // Predict
+        let ingest = [SERVE_PROTO_VERSION, 10]; // Ingest
+        assert_eq!(serve_request_frame_cap(&bulk), MAX_FRAME);
+        assert_eq!(serve_request_frame_cap(&ingest), MAX_FRAME);
+        for head in [
+            &[SERVE_PROTO_VERSION, 3][..], // Info
+            &[SERVE_PROTO_VERSION, 12],    // Metrics
+            &[SERVE_PROTO_VERSION, 99],    // unknown tag
+            &[7, 1],                       // wrong version byte
+            &[SERVE_PROTO_VERSION],        // single-byte frame
+            &[],                           // empty frame
+        ] {
+            assert_eq!(serve_request_frame_cap(head), MAX_SESSIONLESS_FRAME, "{head:?}");
+        }
+    }
+
+    #[test]
+    fn write_serve_into_roundtrips() {
+        let mut scratch = Vec::new();
+        let mut buf = Vec::new();
+        let msg = ServeMessage::Ingest { n: 1, d: 3, x: vec![1.0, 2.0, 3.0] };
+        write_serve_into(&mut buf, &msg, &mut scratch).unwrap();
+        write_serve_into(&mut buf, &ServeMessage::Ack, &mut scratch).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_serve(&mut cursor).unwrap(), msg);
+        assert_eq!(read_serve(&mut cursor).unwrap(), ServeMessage::Ack);
+    }
+
+    #[test]
+    fn serve_codec_roundtrips_through_seam() {
+        let codec = ServeCodec;
+        let msg = ServeMessage::Predict { flags: 0, n: 1, d: 2, x: vec![0.5, 1.5] };
+        let mut out = Vec::new();
+        codec.encode_into(&msg, &mut out);
+        assert_eq!(codec.decode(&out).unwrap(), msg);
     }
 }

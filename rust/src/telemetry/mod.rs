@@ -160,6 +160,14 @@ impl Histogram {
         }
     }
 
+    /// Record one observation. Lock-free: the bucket, the total count, and
+    /// the sum are updated as three independent Relaxed operations, so a
+    /// concurrent reader can observe them mid-update (e.g. the bucket
+    /// incremented before `count`). Renderers must therefore derive
+    /// `_count` from ONE [`Self::cumulative`] snapshot rather than pairing
+    /// `cumulative()` with a separate [`Self::count`] load — `text::render`
+    /// does exactly that to keep the Prometheus
+    /// `bucket{le="+Inf"} == _count` invariant under concurrent scrapes.
     pub fn observe(&self, v: f64) {
         let idx = self.bounds.partition_point(|&b| b < v);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);

@@ -85,11 +85,19 @@ pub fn render(reg: &Registry) -> String {
                             cum[i]
                         ));
                     }
+                    // `_count` is derived from the same cumulative view as
+                    // the buckets — NOT from the separate `count` atomic.
+                    // `observe()` increments bucket then count with Relaxed
+                    // ordering, so a concurrent scrape can catch the bucket
+                    // ahead of the counter; deriving both samples from one
+                    // snapshot keeps the Prometheus invariant
+                    // `bucket{le="+Inf"} == _count` unconditionally.
+                    let total = cum[h.bounds().len()];
                     out.push_str(&format!(
                         "{}_bucket{} {}\n",
                         f.name,
                         fmt_labels_with(&s.labels, "le", "+Inf"),
-                        cum[h.bounds().len()]
+                        total
                     ));
                     out.push_str(&format!(
                         "{}_sum{} {}\n",
@@ -101,7 +109,7 @@ pub fn render(reg: &Registry) -> String {
                         "{}_count{} {}\n",
                         f.name,
                         fmt_labels(&s.labels),
-                        h.count()
+                        total
                     ));
                 }
             }
@@ -232,7 +240,9 @@ pub fn find<'a>(samples: &'a [Sample], name: &str, labels: &[(&str, &str)]) -> O
 /// HTTP/1.0 response whose body is the current exposition and close.
 fn answer_scrape(stream: TcpStream) -> std::io::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_secs(5))).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
+    // Bound the drained request head: a peer streaming endless header
+    // lines must not grow `line` without limit or pin this thread.
+    let mut reader = BufReader::new(std::io::Read::take(stream.try_clone()?, 64 * 1024));
     let mut line = String::new();
     // Read request lines until the blank separator, EOF, or timeout; any
     // of the three means "send the scrape now".
@@ -369,6 +379,30 @@ mod tests {
                 .collect();
             assert_eq!(rendered, cum);
         }
+    }
+
+    /// Regression: a scrape racing `observe()` can see a bucket increment
+    /// whose matching `count` increment has not landed yet (both are
+    /// Relaxed, bucket first). The renderer must derive `_count` from the
+    /// same cumulative snapshot as the buckets so
+    /// `bucket{le="+Inf"} == _count` holds in every rendering. Simulated
+    /// deterministically by skewing the private `count` atomic to the
+    /// mid-observe state.
+    #[test]
+    fn histogram_count_matches_inf_bucket_under_scrape_skew() {
+        use std::sync::atomic::Ordering;
+        let reg = Registry::default();
+        let h = reg.histogram("skew_seconds", "s", &[], &[1.0]);
+        h.observe(0.5);
+        h.observe(2.0);
+        // The torn state: buckets say 2 observations, the counter still
+        // says 1 (as if the second observe() is between its two RMWs).
+        h.count.store(1, Ordering::Relaxed);
+        let samples = parse(&render(&reg)).unwrap();
+        let inf = find(&samples, "skew_seconds_bucket", &[("le", "+Inf")]).unwrap().value;
+        let count = find(&samples, "skew_seconds_count", &[]).unwrap().value;
+        assert_eq!(inf, 2.0);
+        assert_eq!(count, inf, "+Inf bucket and _count must come from one snapshot");
     }
 
     #[test]

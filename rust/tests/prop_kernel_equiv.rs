@@ -250,6 +250,53 @@ fn incremental_fit_bitwise_deterministic_across_threads_and_kernels() {
 }
 
 #[test]
+fn simd_bodies_are_bitwise_equivalent_end_to_end() {
+    // The SIMD dispatch contract (linalg::tile) is that the AVX2 bodies
+    // are bitwise-identical to the scalar tile bodies — same lane math,
+    // mul+add kept separate (no FMA contraction). Here the contract is
+    // checked end to end: a full assignment sweep with SIMD forced on must
+    // reproduce the scalar oracle's labels, sub-labels, and statistics
+    // exactly, across both priors and odd tile remainders. Toggling the
+    // process-wide SIMD mode mid-suite is safe precisely because of this
+    // invariant: every other test's outputs are unchanged by which body
+    // runs. On hosts without AVX2 the force-on request stays scalar and
+    // the sweep degenerates to the already-covered tiled-vs-scalar check.
+    let simd_live = dpmm::linalg::set_simd_enabled(true);
+    assert_eq!(dpmm::linalg::simd_active(), simd_live);
+    assert_eq!(dpmm::linalg::simd_label(), if simd_live { "avx2" } else { "scalar" });
+
+    // Gaussian: d=8 fills AVX2 f64 lanes evenly, d=3 leaves lane tails.
+    for (n, d, k) in [(130usize, 8usize, 5usize), (529, 3, 4)] {
+        let mut rng = Xoshiro256pp::seed_from_u64((n + d) as u64);
+        let ds = GmmSpec::default_with(n, d, k).generate(&mut rng);
+        let prior = Prior::Niw(NiwPrior::weak(d));
+        let plan = random_plan(&prior, k, ds.points.n, 500 + n as u64);
+        for tile in [1usize, 64, 100] {
+            assert_equivalent(&ds.points, &prior, &plan, tile, 31 + tile as u64);
+        }
+    }
+    // Multinomial: the dot-accumulate path.
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let ds = MultinomialSpec::default_with(180, 10, 3).generate(&mut rng);
+    let prior = Prior::DirMult(DirMultPrior::symmetric(10, 0.7));
+    let plan = random_plan(&prior, 3, ds.points.n, 600);
+    for tile in [1usize, 48, 128] {
+        assert_equivalent(&ds.points, &prior, &plan, tile, 41 + tile as u64);
+    }
+
+    // Explicitly off: back to the scalar bodies, same outputs by the same
+    // invariant.
+    assert!(!dpmm::linalg::set_simd_enabled(false));
+    assert_eq!(dpmm::linalg::simd_label(), "scalar");
+    let plan1 = random_plan(&prior, 3, ds.points.n, 600);
+    assert_equivalent(&ds.points, &prior, &plan1, 64, 47);
+
+    // Leave the process in its default (env/hardware-resolved) state for
+    // any tests that run after this one.
+    dpmm::linalg::set_simd_enabled(simd_live);
+}
+
+#[test]
 fn equivalence_holds_after_a_warm_sweep() {
     // Re-derive parameters from a first sweep's statistics so the second
     // sweep runs with data-driven (not prior-draw) parameters, then check

@@ -9,7 +9,10 @@
 //! The fuzzing is deterministic (seeded Xoshiro): every mutation that a
 //! run exercises is reproducible from the seed in this file.
 
-use dpmm::backend::distributed::wire::{read_frame, write_frame, Message, MAX_FRAME};
+use dpmm::backend::distributed::wire::{
+    idle_frame_cap, read_frame, read_frame_capped_into, write_frame, Message, MAX_FRAME,
+    MAX_SESSIONLESS_FRAME,
+};
 use dpmm::model::DpmmState;
 use dpmm::rng::{Rng, Xoshiro256pp};
 use dpmm::sampler::{MergeOp, SplitOp, StepParams};
@@ -227,6 +230,88 @@ fn oversized_and_truncated_frames_are_rejected() {
     assert!(sink.is_empty(), "no bytes may hit the wire for a refused frame");
 }
 
+/// A frame whose 4-byte prefix claims `len` but whose stream holds only the
+/// two head bytes — what a hostile or dying peer hands the capped reader.
+fn claim_only(len: usize, head: &[u8]) -> std::io::Cursor<Vec<u8>> {
+    let mut bytes = (len as u32).to_le_bytes().to_vec();
+    bytes.extend_from_slice(&head[..head.len().min(2)]);
+    std::io::Cursor::new(bytes)
+}
+
+#[test]
+fn sessionless_caps_reject_before_any_payload() {
+    // Heads come from real encodings so the test tracks the wire layout.
+    let ping = Message::Ping.encode();
+    let init = Message::Init {
+        d: 2,
+        prior: Prior::Niw(NiwPrior::weak(2)),
+        seed: 1,
+        threads: 1,
+        x: vec![1.0, 2.0],
+    }
+    .encode();
+    let mut buf = Vec::new();
+
+    // A sessionless verb claiming more than its cap is refused at the cap
+    // check — the stream holds zero payload bytes, so an attempt to read
+    // the payload would surface as EOF instead. The error message proves
+    // which check fired.
+    let mut r = claim_only(MAX_SESSIONLESS_FRAME + 1, &ping);
+    let err = read_frame_capped_into(&mut r, &mut buf, idle_frame_cap).unwrap_err();
+    assert!(err.to_string().contains("too large for this session state"), "{err}");
+
+    // A session-opening verb with the same declared length passes the cap
+    // check and only then fails on the missing payload (EOF, not the cap).
+    let mut r = claim_only(MAX_SESSIONLESS_FRAME + 1, &init);
+    let err = read_frame_capped_into(&mut r, &mut buf, idle_frame_cap).unwrap_err();
+    assert!(!err.to_string().contains("too large"), "{err}");
+
+    // Exactly at the cap is not an over-cap rejection either.
+    let mut r = claim_only(MAX_SESSIONLESS_FRAME, &ping);
+    let err = read_frame_capped_into(&mut r, &mut buf, idle_frame_cap).unwrap_err();
+    assert!(!err.to_string().contains("too large"), "{err}");
+
+    // Anything unrecognized — wrong version or garbage tag — is held to
+    // the sessionless cap. (Heads shorter than two bytes only occur when
+    // the declared length itself is < 2, i.e. far under every cap.)
+    for head in [&[0xFFu8, 0xFF][..], &[ping[0], 0xEE][..]] {
+        let mut r = claim_only(MAX_SESSIONLESS_FRAME + 1, head);
+        let err = read_frame_capped_into(&mut r, &mut buf, idle_frame_cap).unwrap_err();
+        assert!(err.to_string().contains("too large"), "head {head:?}: {err}");
+    }
+}
+
+#[test]
+fn chunked_reads_reuse_the_buffer_and_handle_any_size() {
+    // One frame spanning multiple read chunks (> 1 MiB), then tiny and
+    // empty frames through the same buffer: contents exact, length exact.
+    let big: Vec<u8> = (0..2_500_000usize).map(|i| (i % 251) as u8).collect();
+    let mut stream = Vec::new();
+    write_frame(&mut stream, &big).unwrap();
+    write_frame(&mut stream, b"ab").unwrap();
+    write_frame(&mut stream, b"").unwrap();
+    let mut cursor = std::io::Cursor::new(stream);
+    let mut buf = vec![0xAAu8; 64]; // dirty scratch must not leak through
+    read_frame_capped_into(&mut cursor, &mut buf, |_| MAX_FRAME).unwrap();
+    assert_eq!(buf, big);
+    read_frame_capped_into(&mut cursor, &mut buf, |_| MAX_FRAME).unwrap();
+    assert_eq!(buf, b"ab");
+    read_frame_capped_into(&mut cursor, &mut buf, |_| MAX_FRAME).unwrap();
+    assert!(buf.is_empty());
+
+    // Truncation at several depths inside a multi-chunk body: typed EOF
+    // error, never a panic, never a hang.
+    let mut full = Vec::new();
+    write_frame(&mut full, &big).unwrap();
+    for keep in [4, 5, 6, 1000, 1 << 20, (1 << 20) + 7, full.len() - 1] {
+        let mut cursor = std::io::Cursor::new(full[..keep].to_vec());
+        assert!(
+            read_frame_capped_into(&mut cursor, &mut buf, |_| MAX_FRAME).is_err(),
+            "keep={keep}"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Live-server resilience.
 // ---------------------------------------------------------------------------
@@ -318,6 +403,35 @@ fn corrupt_connections_do_not_wedge_the_batcher() {
     assert!(err.to_string().contains("dimension mismatch"), "{err}");
     assert!(client.stats().is_ok());
 
+    server.stop().unwrap();
+}
+
+#[test]
+fn oversized_non_bulk_serve_verb_is_dropped_before_buffering() {
+    let (server, addr) = streaming_server();
+    // An Info request claiming a 100 KB payload: over the 64 KiB
+    // sessionless cap, so the server must drop the connection at the cap
+    // check instead of waiting for (or buffering) the declared payload.
+    {
+        use std::io::Read as _;
+        let head = ServeMessage::Info.encode(); // [version, TAG_INFO]
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&100_000u32.to_le_bytes()).unwrap();
+        s.write_all(&head).unwrap();
+        // No payload follows. If the server were buffering up to the
+        // declared length this read would stall; bound it so a regression
+        // fails fast instead of hanging the suite.
+        s.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+        let mut byte = [0u8; 1];
+        assert_eq!(s.read(&mut byte).unwrap(), 0, "expected EOF, got a reply byte");
+    }
+    // Bulk verbs still carry payloads past the sessionless cap.
+    let mut client = DpmmClient::connect(&addr).unwrap();
+    let n = 9_000; // 9_000 * 2 * 8 B = ~144 KB > 64 KiB sessionless cap
+    let x: Vec<f64> = (0..n * 2).map(|i| (i % 13) as f64 * 0.5 - 3.0).collect();
+    let pred = client.predict(&x, 2).unwrap();
+    assert_eq!(pred.labels.len(), n);
+    assert!(client.stats().is_ok());
     server.stop().unwrap();
 }
 

@@ -118,6 +118,7 @@ def lint(text, min_families=0):
     # histogram family -> {labelset-sans-le (frozenset): [(le, count)]}
     buckets = {}
     hist_counts = {}  # (family, labelset) -> _count value
+    hist_sums = set()  # (family, labelset) with a _sum sample
     samples = 0
 
     for lineno, raw in enumerate(text.splitlines(), 1):
@@ -172,6 +173,8 @@ def lint(text, min_families=0):
                 )
             elif name.endswith("_count"):
                 hist_counts[(family, key)] = value
+            elif name.endswith("_sum"):
+                hist_sums.add((family, key))
 
     for family, series in buckets.items():
         for key, entries in series.items():
@@ -193,11 +196,27 @@ def lint(text, min_families=0):
                     file=sys.stderr,
                 )
             total = hist_counts.get((family, key))
-            if total is not None and counts[-1] != total:
+            if total is None:
+                # A bucket series without its _count silently passed the
+                # +Inf == _count check before; require the sample outright.
+                errors += 1
+                print(
+                    f"metrics lint: histogram {family}{dict(key)}: missing "
+                    f"_count sample",
+                    file=sys.stderr,
+                )
+            elif counts[-1] != total:
                 errors += 1
                 print(
                     f"metrics lint: histogram {family}{dict(key)}: +Inf bucket "
                     f"{counts[-1]} != _count {total}",
+                    file=sys.stderr,
+                )
+            if (family, key) not in hist_sums:
+                errors += 1
+                print(
+                    f"metrics lint: histogram {family}{dict(key)}: missing "
+                    f"_sum sample",
                     file=sys.stderr,
                 )
 

@@ -152,7 +152,7 @@ def fit(
 # All integers little-endian; point payloads are raw float64 runs.
 # ---------------------------------------------------------------------------
 
-SERVE_PROTO_VERSION = 5  # v5: Metrics/MetricsReply telemetry scrape verbs
+SERVE_PROTO_VERSION = 6  # v6: snapshot replication verbs + replica stats fields
 
 FLAG_LOG_PROBS = 1
 
@@ -169,6 +169,13 @@ TAG_INGEST = 10
 TAG_INGEST_REPLY = 11
 TAG_METRICS = 12
 TAG_METRICS_REPLY = 13
+TAG_SNAPSHOT_PUBLISH = 14
+TAG_PUBLISH_ACK = 15
+
+# StatsReply role byte (rust/src/serve/wire.rs ROLE_*).
+ROLE_STANDALONE = 0
+ROLE_LEADER = 1
+ROLE_REPLICA = 2
 
 _MAX_FRAME = 1 << 30
 
@@ -292,49 +299,52 @@ def _decode_info(payload):
     }
 
 
+# StatsReply body layout in wire order (rust/src/serve/wire.rs). The
+# struct format string and byte size both derive from this one table so a
+# new field can never leave a hand-counted byte literal stale elsewhere
+# (the old 82→94→v6 drift): tests and the mock server pack/unpack through
+# the same constants.
+_STATS_FIELDS = (
+    ("requests", "Q"),
+    ("points", "Q"),
+    ("batches", "Q"),
+    ("uptime_secs", "d"),
+    ("points_per_sec", "d"),
+    ("mean_batch_points", "d"),
+    ("generation", "Q"),
+    ("ingested", "Q"),
+    ("ingest_pending", "Q"),
+    ("workers_total", "I"),
+    ("workers_alive", "I"),
+    ("workers_healthy", "I"),
+    ("workers_suspect", "I"),
+    ("workers_dead", "I"),
+    ("degraded", "B"),
+    ("halted", "B"),
+    # v6 replication fields.
+    ("role", "B"),
+    ("replicas", "I"),
+    ("staleness", "Q"),
+    ("snapshot_age_secs", "d"),
+)
+_STATS_FMT = "<" + "".join(fmt for _, fmt in _STATS_FIELDS)
+_STATS_SIZE = struct.calcsize(_STATS_FMT)
+_STATS_BOOL_FIELDS = ("degraded", "halted")
+
+
 def _decode_stats(payload):
     tag, body = _split_payload(payload)
     if tag == TAG_ERROR:
         raise ServerError(_decode_error(body))
     if tag != TAG_STATS_REPLY:
         raise ProtocolError(f"unexpected reply tag {tag} (want StatsReply)")
-    head, _ = _take(body, 94, "stats reply")
-    (
-        requests,
-        points,
-        batches,
-        uptime,
-        pps,
-        mean_batch,
-        generation,
-        ingested,
-        ingest_pending,
-        workers_total,
-        workers_alive,
-        workers_healthy,
-        workers_suspect,
-        workers_dead,
-        degraded,
-        halted,
-    ) = struct.unpack("<QQQdddQQQIIIIIBB", head)
-    return {
-        "requests": requests,
-        "points": points,
-        "batches": batches,
-        "uptime_secs": uptime,
-        "points_per_sec": pps,
-        "mean_batch_points": mean_batch,
-        "generation": generation,
-        "ingested": ingested,
-        "ingest_pending": ingest_pending,
-        "workers_total": workers_total,
-        "workers_alive": workers_alive,
-        "workers_healthy": workers_healthy,
-        "workers_suspect": workers_suspect,
-        "workers_dead": workers_dead,
-        "degraded": bool(degraded),
-        "halted": bool(halted),
-    }
+    head, _ = _take(body, _STATS_SIZE, "stats reply")
+    out = dict(zip(
+        (name for name, _ in _STATS_FIELDS), struct.unpack(_STATS_FMT, head)
+    ))
+    for name in _STATS_BOOL_FIELDS:
+        out[name] = bool(out[name])
+    return out
 
 
 def _decode_ingest_reply(payload):
@@ -541,7 +551,13 @@ class DpmmClient:
           still inside the grace period), and ``workers_dead`` (rated
           dead or already evicted). With supervision off,
           ``workers_healthy`` equals ``workers_alive`` and
-          ``workers_suspect`` is 0.
+          ``workers_suspect`` is 0. Replication keys (v6): ``role``
+          (:data:`ROLE_STANDALONE` / :data:`ROLE_LEADER` /
+          :data:`ROLE_REPLICA`), ``replicas`` (fan-out endpoints a leader
+          publishes to), ``staleness`` (generations a replica has been
+          offered but not yet applied; 0 once caught up), and
+          ``snapshot_age_secs`` (seconds since the live snapshot last
+          swapped).
         """
         return _decode_stats(self._roundtrip(_encode_simple(TAG_STATS)))
 
@@ -601,6 +617,133 @@ class DpmmClient:
 
     def close(self):
         self._sock.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class DpmmReplicaSet:
+    """Round-robin read client over a replica set (``dpmm replica``
+    endpoints, optionally including the leader).
+
+    Reads (:meth:`predict` / :meth:`info` / :meth:`stats`) rotate across
+    ``addrs``; an endpoint that refuses connections or drops mid-request
+    is skipped for that request and retried lazily on a later rotation
+    (transient failover, mirroring the Rust ``ReplicaSetClient``). A
+    typed :class:`ServerError` is raised immediately without failover —
+    it is an application answer, and every replica of the same generation
+    would reply identically. Connections are opened lazily and reused;
+    usable as a context manager.
+    """
+
+    #: Errors that fail over to the next endpoint: the connection-level
+    #: transients of :data:`DpmmClient._TRANSIENT_CONNECT` plus a
+    #: connection dying mid-reply (surfaced as :class:`ProtocolError`).
+    _FAILOVER = DpmmClient._TRANSIENT_CONNECT + (OSError, ProtocolError)
+
+    def __init__(self, addrs, timeout=300.0, connect_retries=1,
+                 client_factory=None):
+        """Args:
+          addrs: list of ``host:port`` endpoints (at least one).
+          timeout: per-connection socket timeout in seconds.
+          connect_retries: connect attempts per endpoint per request
+            (default 1 — the set itself is the retry mechanism).
+          client_factory: ``addr -> client`` override (tests inject mock
+            transports here); defaults to :class:`DpmmClient`.
+        """
+        addrs = [str(a) for a in addrs]
+        if not addrs:
+            raise ValueError("DpmmReplicaSet needs at least one address")
+        self._addrs = addrs
+        self._conns = [None] * len(addrs)
+        self._next = 0
+        if client_factory is None:
+            def client_factory(addr):
+                return DpmmClient(
+                    addr, timeout=timeout, connect_retries=connect_retries
+                )
+        self._factory = client_factory
+
+    @property
+    def addrs(self):
+        return tuple(self._addrs)
+
+    def _drop(self, idx):
+        client, self._conns[idx] = self._conns[idx], None
+        if client is not None:
+            try:
+                client.close()
+            except Exception:
+                pass
+
+    def _with_failover(self, op):
+        """Run ``op(client)`` against one full rotation starting at the
+        round-robin cursor; first success wins and advances the cursor."""
+        n = len(self._addrs)
+        last_err = None
+        for step in range(n):
+            idx = (self._next + step) % n
+            client = self._conns[idx]
+            if client is None:
+                try:
+                    client = self._factory(self._addrs[idx])
+                except self._FAILOVER as e:
+                    last_err = e
+                    continue
+                self._conns[idx] = client
+            try:
+                out = op(client)
+            except ServerError:
+                self._next = (idx + 1) % n
+                raise
+            except self._FAILOVER as e:
+                self._drop(idx)
+                last_err = e
+                continue
+            self._next = (idx + 1) % n
+            return out
+        raise ConnectionError(
+            f"all {n} replica endpoints failed (last: {last_err})"
+        ) from last_err
+
+    def predict(self, x, probs=False):
+        """Score ``x`` on the next healthy replica (see
+        :meth:`DpmmClient.predict`)."""
+        return self._with_failover(lambda c: c.predict(x, probs=probs))
+
+    def info(self):
+        """Model metadata from the next healthy replica."""
+        return self._with_failover(lambda c: c.info())
+
+    def stats(self):
+        """`/stats` from the next healthy replica (includes ``role`` /
+        ``staleness`` / ``snapshot_age_secs``)."""
+        return self._with_failover(lambda c: c.stats())
+
+    def stats_all(self):
+        """Per-endpoint `/stats` in ``addrs`` order, ``None`` where
+        unreachable — the fleet staleness readout is
+        ``max(s["staleness"] for s in stats_all() if s)``."""
+        out = []
+        for idx, addr in enumerate(self._addrs):
+            try:
+                client = self._conns[idx]
+                if client is None:
+                    client = self._factory(addr)
+                    self._conns[idx] = client
+                out.append(client.stats())
+            except (ServerError,) + self._FAILOVER:
+                self._drop(idx)
+                out.append(None)
+        return out
+
+    def close(self):
+        for idx in range(len(self._conns)):
+            self._drop(idx)
 
     def __enter__(self):
         return self

@@ -1,0 +1,240 @@
+"""Replica-set client tests for `dpmmwrapper.DpmmReplicaSet`.
+
+Mock loopback servers (speaking the v6 serve wire byte-for-byte, as in
+test_stream_client.py) plus injected fake transports exercise round-robin
+rotation, transient failover on refused connects, the no-failover rule for
+typed server errors, and the stats-based staleness readout — no Rust
+binary, numpy only, so this runs in the slim CI python job.
+"""
+
+import os
+import socket
+import struct
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import dpmmwrapper as w
+
+
+def _read_exact(conn, n):
+    chunks = []
+    while n > 0:
+        chunk = conn.recv(n)
+        if not chunk:
+            raise ConnectionError("client closed mid-frame")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+class MockReplicaServer:
+    """Loopback mock of a `dpmm replica` endpoint: answers Predict with a
+    fixed single-cluster scoring and Stats with configurable replication
+    fields. Accepts any number of connections; counts predicts served."""
+
+    def __init__(self, generation=1, staleness=0, role=None):
+        self._sock = socket.create_server(("127.0.0.1", 0))
+        self.addr = "127.0.0.1:%d" % self._sock.getsockname()[1]
+        self.generation = generation
+        self.staleness = staleness
+        self.role = w.ROLE_REPLICA if role is None else role
+        self.predicts = 0
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._accept_loop, daemon=True)
+        self._thread.start()
+
+    def _accept_loop(self):
+        try:
+            while True:
+                conn, _ = self._sock.accept()
+                threading.Thread(
+                    target=self._serve_conn, args=(conn,), daemon=True
+                ).start()
+        except OSError:
+            pass
+
+    def _serve_conn(self, conn):
+        with conn:
+            try:
+                while True:
+                    (length,) = struct.unpack("<I", _read_exact(conn, 4))
+                    payload = _read_exact(conn, length)
+                    reply = self._reply(payload)
+                    conn.sendall(struct.pack("<I", len(reply)) + reply)
+            except (ConnectionError, OSError):
+                pass
+
+    def _reply(self, payload):
+        ver, tag = payload[0], payload[1]
+        assert ver == w.SERVE_PROTO_VERSION
+        if tag == w.TAG_PREDICT:
+            _, n, _ = struct.unpack("<BII", payload[2:11])
+            with self._lock:
+                self.predicts += 1
+            body = struct.pack("<BBBII", ver, w.TAG_SCORES, 0, n, 1)
+            body += np.zeros(n, dtype="<u4").tobytes()
+            body += np.full(n, -1.0, dtype="<f8").tobytes()
+            body += np.full(n, -2.0, dtype="<f8").tobytes()
+            return body
+        if tag == w.TAG_STATS:
+            return struct.pack("<BB", ver, w.TAG_STATS_REPLY) + struct.pack(
+                w._STATS_FMT,
+                *([self.predicts, 0, 0, 1.0, 0.0, 0.0, self.generation]
+                  + [0, 0] + [0] * 5 + [0, 0]
+                  + [self.role, 0, self.staleness, 0.5])
+            )
+        raise AssertionError(f"mock replica got unexpected tag {tag}")
+
+    def close(self):
+        self._sock.close()
+
+
+def _dead_addr():
+    """An address nothing listens on (bind, read the port, close)."""
+    s = socket.create_server(("127.0.0.1", 0))
+    addr = "127.0.0.1:%d" % s.getsockname()[1]
+    s.close()
+    return addr
+
+
+class FakeClient:
+    """In-process transport stand-in: scripted per-call behaviour."""
+
+    def __init__(self, name, log):
+        self.name = name
+        self.log = log
+        self.closed = False
+        self.fail_with = None  # exception instance to raise on next op
+
+    def predict(self, x, probs=False):
+        if self.fail_with is not None:
+            err, self.fail_with = self.fail_with, None
+            raise err
+        self.log.append(self.name)
+        return "labels", "map", "logpred"
+
+    def stats(self):
+        if self.fail_with is not None:
+            err, self.fail_with = self.fail_with, None
+            raise err
+        self.log.append(("stats", self.name))
+        return {"staleness": 0}
+
+    def close(self):
+        self.closed = True
+
+
+class TestRoundRobin:
+    def test_reads_rotate_across_endpoints(self):
+        log = []
+        made = []
+
+        def factory(addr):
+            c = FakeClient(addr, log)
+            made.append(c)
+            return c
+
+        rs = w.DpmmReplicaSet(["a", "b", "c"], client_factory=factory)
+        for _ in range(6):
+            rs.predict(np.zeros((1, 2)))
+        assert log == ["a", "b", "c", "a", "b", "c"]
+        # Connections are cached, not re-dialed per request.
+        assert len(made) == 3
+
+    def test_empty_set_rejected(self):
+        with pytest.raises(ValueError, match="at least one address"):
+            w.DpmmReplicaSet([])
+
+    def test_server_error_raises_without_failover(self):
+        # A typed server reply (e.g. dimension mismatch) is an answer:
+        # every replica at the same generation would say the same, so it
+        # must surface immediately instead of burning the whole rotation.
+        log = []
+        clients = {}
+
+        def factory(addr):
+            clients[addr] = FakeClient(addr, log)
+            return clients[addr]
+
+        rs = w.DpmmReplicaSet(["a", "b"], client_factory=factory)
+        rs.predict(np.zeros((1, 2)))  # round 1 -> "a"
+        rs.predict(np.zeros((1, 2)))  # round 2 -> "b"
+        clients["a"].fail_with = w.ServerError("dimension mismatch")
+        with pytest.raises(w.ServerError, match="dimension mismatch"):
+            rs.predict(np.zeros((1, 2)))  # round 3 -> "a" raises
+        assert log == ["a", "b"]  # no silent retry on the other replica
+
+
+class TestFailover:
+    def test_refused_connect_fails_over_to_live_replica(self):
+        server = MockReplicaServer()
+        try:
+            rs = w.DpmmReplicaSet([_dead_addr(), server.addr], timeout=5.0)
+            with rs:
+                labels, _, _ = rs.predict(np.zeros((3, 2)))
+            assert list(labels) == [0, 0, 0]
+            assert server.predicts == 1
+        finally:
+            server.close()
+
+    def test_dropped_connection_fails_over_mid_rotation(self):
+        log = []
+        clients = {}
+
+        def factory(addr):
+            clients[addr] = FakeClient(addr, log)
+            return clients[addr]
+
+        rs = w.DpmmReplicaSet(["a", "b"], client_factory=factory)
+        rs.predict(np.zeros((1, 2)))  # round 1 -> "a"
+        rs.predict(np.zeros((1, 2)))  # round 2 -> "b"
+        clients["a"].fail_with = ConnectionResetError("peer reset")
+        rs.predict(np.zeros((1, 2)))  # round 3: "a" drops, "b" answers
+        assert log == ["a", "b", "b"]
+        # The dead connection was closed and forgotten for lazy redial.
+        assert clients["a"].closed
+
+    def test_all_endpoints_down_raises_connection_error(self):
+        a, b = _dead_addr(), _dead_addr()
+        rs = w.DpmmReplicaSet([a, b], timeout=2.0)
+        with pytest.raises(ConnectionError, match="all 2 replica endpoints failed"):
+            rs.predict(np.zeros((1, 2)))
+
+
+class TestStalenessReadout:
+    def test_stats_all_reports_per_replica_staleness(self):
+        fresh = MockReplicaServer(generation=9, staleness=0)
+        lagging = MockReplicaServer(generation=7, staleness=2)
+        try:
+            dead = _dead_addr()
+            with w.DpmmReplicaSet(
+                [fresh.addr, lagging.addr, dead], timeout=5.0
+            ) as rs:
+                per = rs.stats_all()
+            assert per[0]["staleness"] == 0
+            assert per[0]["generation"] == 9
+            assert per[0]["role"] == w.ROLE_REPLICA
+            assert per[1]["staleness"] == 2
+            assert per[1]["generation"] == 7
+            assert per[2] is None
+            # The fleet readout the docs advertise.
+            assert max(s["staleness"] for s in per if s) == 2
+        finally:
+            fresh.close()
+            lagging.close()
+
+    def test_stats_rotates_like_predict(self):
+        s1 = MockReplicaServer(staleness=1)
+        s2 = MockReplicaServer(staleness=4)
+        try:
+            with w.DpmmReplicaSet([s1.addr, s2.addr], timeout=5.0) as rs:
+                seen = {rs.stats()["staleness"], rs.stats()["staleness"]}
+            assert seen == {1, 4}
+        finally:
+            s1.close()
+            s2.close()

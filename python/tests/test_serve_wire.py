@@ -118,11 +118,16 @@ class TestInfoAndStats:
         body = struct.pack("<BBIIBQ", w.SERVE_PROTO_VERSION, w.TAG_INFO_REPLY, 8, 4, 1, 7)
         assert w._decode_info(body)["family"] == "multinomial"
 
+    def test_stats_layout_derives_from_field_table(self):
+        # One shared table drives both the format string and the size, so
+        # the hand-counted byte literal era (82 -> 94 -> v6) can't recur.
+        assert w._STATS_FMT == "<QQQdddQQQIIIIIBBBIQd"
+        assert w._STATS_SIZE == 115
+        assert w._STATS_SIZE == struct.calcsize(w._STATS_FMT)
+
     def test_stats_roundtrip(self):
-        body = struct.pack(
-            "<BBQQQdddQQQIIIIIBB",
-            w.SERVE_PROTO_VERSION,
-            w.TAG_STATS_REPLY,
+        body = struct.pack("<BB", w.SERVE_PROTO_VERSION, w.TAG_STATS_REPLY) + struct.pack(
+            w._STATS_FMT,
             10,
             1000,
             4,
@@ -139,6 +144,10 @@ class TestInfoAndStats:
             1,
             1,
             0,
+            w.ROLE_REPLICA,
+            3,
+            2,
+            0.75,
         )
         stats = w._decode_stats(body)
         assert stats["requests"] == 10
@@ -157,6 +166,10 @@ class TestInfoAndStats:
         assert stats["workers_dead"] == 1
         assert stats["degraded"] is True
         assert stats["halted"] is False
+        assert stats["role"] == w.ROLE_REPLICA
+        assert stats["replicas"] == 3
+        assert stats["staleness"] == 2
+        assert stats["snapshot_age_secs"] == 0.75
 
     def test_stats_truncated_raises(self):
         body = struct.pack(
@@ -165,6 +178,17 @@ class TestInfoAndStats:
             w.TAG_STATS_REPLY,
             1, 2, 3, 4.0, 5.0, 6.0, 7, 8, 9, 10, 11,
         )
+        with pytest.raises(w.ProtocolError, match="truncated"):
+            w._decode_stats(body)
+
+    def test_stats_v5_layout_is_truncation(self):
+        # A 94-byte pre-replication reply must be rejected, not misparsed.
+        v5 = w._STATS_FIELDS[:16]
+        assert all(name not in ("role", "replicas", "staleness") for name, _ in v5)
+        fmt = "<" + "".join(f for _, f in v5)
+        assert struct.calcsize(fmt) == 94
+        body = struct.pack("<BB", w.SERVE_PROTO_VERSION, w.TAG_STATS_REPLY)
+        body += struct.pack(fmt, *([0] * 3 + [0.0] * 3 + [0] * 3 + [0] * 5 + [0, 0]))
         with pytest.raises(w.ProtocolError, match="truncated"):
             w._decode_stats(body)
 

@@ -77,6 +77,10 @@ class MockStreamServer:
         )
         self.degraded = degraded
         self.halted = halted
+        self.role = w.ROLE_LEADER if workers_total else w.ROLE_STANDALONE
+        self.replicas = 0
+        self.staleness = 0
+        self.snapshot_age_secs = 0.0
         self._thread = threading.Thread(target=self._serve, daemon=True)
         self._thread.start()
 
@@ -118,26 +122,32 @@ class MockStreamServer:
                 self.window,
             )
         if tag == w.TAG_STATS:
-            return struct.pack(
-                "<BBQQQdddQQQIIIIIBB",
-                w.SERVE_PROTO_VERSION,
-                w.TAG_STATS_REPLY,
-                len(self.ingests),
-                self.ingested,
-                1,
-                1.0,
-                float(self.ingested),
-                float(self.ingested),
-                self.generation,
-                self.ingested,
-                0,
-                self.workers_total,
-                self.workers_alive,
-                self.workers_healthy,
-                self.workers_suspect,
-                self.workers_dead,
-                int(self.degraded),
-                int(self.halted),
+            # Pack through the shared field table so this mock can never
+            # drift from the client's decode layout.
+            return struct.pack("<BB", w.SERVE_PROTO_VERSION, w.TAG_STATS_REPLY) + (
+                struct.pack(
+                    w._STATS_FMT,
+                    len(self.ingests),
+                    self.ingested,
+                    1,
+                    1.0,
+                    float(self.ingested),
+                    float(self.ingested),
+                    self.generation,
+                    self.ingested,
+                    0,
+                    self.workers_total,
+                    self.workers_alive,
+                    self.workers_healthy,
+                    self.workers_suspect,
+                    self.workers_dead,
+                    int(self.degraded),
+                    int(self.halted),
+                    self.role,
+                    self.replicas,
+                    self.staleness,
+                    self.snapshot_age_secs,
+                )
             )
         raise AssertionError(f"mock server got unexpected tag {tag}")
 

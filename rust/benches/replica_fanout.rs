@@ -1,0 +1,209 @@
+//! Replicated-serving bench: snapshot fan-out latency vs replica count,
+//! and what read replicas buy on predict throughput.
+//!
+//! Two questions, matching docs/ARCHITECTURE.md §Replicated serving:
+//!
+//! * **Fan-out latency** — how long after an `IngestReply { generation }`
+//!   does every replica serve that generation with staleness 0? Measured
+//!   per publish round for fleets of 1/2/4 replicas (the publisher runs
+//!   one thread per endpoint, so this should grow sub-linearly).
+//! * **Read scale-out** — points/s through the leader alone vs one
+//!   replica vs the round-robin `ReplicaSetClient` over the whole fleet,
+//!   with concurrent client threads.
+//!
+//! Machine-readable output: `BENCH_replica.json` (override with
+//! `BENCH_REPLICA_OUT`). Scale control: `DPMM_BENCH_SCALE=small|medium|full`.
+//!
+//! Run: `cargo bench --bench replica_fanout`
+
+#[path = "support/mod.rs"]
+mod support;
+
+use dpmm::model::DpmmState;
+use dpmm::prelude::*;
+use dpmm::serve::{
+    DpmmClient, EngineConfig, ModelSnapshot, ReplicaSetClient, ReplicatedFleet, ServeConfig,
+};
+use dpmm::stats::{NiwPrior, Prior};
+use dpmm::stream::{IncrementalFitter, StreamConfig};
+use dpmm::util::json::{self, Json};
+use std::time::{Duration, Instant};
+
+const D: usize = 8;
+const K: usize = 6;
+
+/// Frozen snapshot from poured statistics (no MCMC) + a held-out stream.
+fn build_model(n_fit: usize, n_extra: usize) -> (ModelSnapshot, Vec<f64>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(4242);
+    let ds = GmmSpec::default_with(n_fit + n_extra, D, K).generate(&mut rng);
+    let prior = Prior::Niw(NiwPrior::weak(D));
+    let mut state = DpmmState::new(10.0, prior, K, n_fit, &mut rng);
+    for i in 0..n_fit {
+        state.clusters[ds.labels[i]].stats.add(ds.points.row(i));
+    }
+    let snapshot = ModelSnapshot::from_state(&state).expect("snapshot");
+    let extra = ds.points.values[n_fit * D..].to_vec();
+    (snapshot, extra)
+}
+
+fn fleet(snapshot: &ModelSnapshot, n_replicas: usize) -> ReplicatedFleet {
+    let fitter = IncrementalFitter::from_snapshot(
+        snapshot,
+        StreamConfig { window: 4096, sweeps: 1, threads: 2, seed: 7, ..StreamConfig::default() },
+    )
+    .expect("fitter");
+    ReplicatedFleet::start(
+        snapshot,
+        fitter,
+        n_replicas,
+        EngineConfig::default(),
+        ServeConfig::default(),
+    )
+    .expect("fleet")
+}
+
+/// Seconds until every replica serves `generation` with staleness 0.
+fn converge(clients: &mut [DpmmClient], generation: u64) -> f64 {
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs(60);
+    for c in clients.iter_mut() {
+        loop {
+            let s = c.stats().expect("stats");
+            if s.generation >= generation && s.staleness == 0 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "replica stuck below generation {generation}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn pps(points: usize, secs: f64) -> f64 {
+    points as f64 / secs.max(1e-9)
+}
+
+fn main() {
+    let (n_fit, rounds, per_round, n_score) = match support::scale() {
+        support::Scale::Small => (20_000usize, 6usize, 256usize, 20_000usize),
+        support::Scale::Medium => (60_000, 10, 1024, 60_000),
+        support::Scale::Full => (200_000, 16, 4096, 200_000),
+    };
+    let n_extra = rounds * per_round + n_score;
+    let (snapshot, extra) = build_model(n_fit, n_extra);
+    let ingest_pts = &extra[..rounds * per_round * D];
+    let score_pts = &extra[rounds * per_round * D..];
+    println!(
+        "replica fan-out: d={D} K={} rounds={rounds}x{per_round} N_score={n_score}\n",
+        snapshot.k()
+    );
+
+    // --- fan-out latency vs replica count --------------------------------
+    let mut fanout = Vec::new();
+    for &n_replicas in &[1usize, 2, 4] {
+        let f = fleet(&snapshot, n_replicas);
+        let mut replica_clients: Vec<DpmmClient> = f
+            .replica_addrs()
+            .iter()
+            .map(|a| DpmmClient::connect(&a.to_string()).expect("connect replica"))
+            .collect();
+        // Boot publish settles first so round timings measure steady state.
+        converge(&mut replica_clients, 1);
+        let mut leader = DpmmClient::connect(&f.leader_addr().to_string()).expect("connect");
+        let mut times = Vec::with_capacity(rounds);
+        for r in 0..rounds {
+            let lo = r * per_round * D;
+            let receipt = leader.ingest(&ingest_pts[lo..lo + per_round * D], D).expect("ingest");
+            times.push(converge(&mut replica_clients, receipt.generation));
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let max = times.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "fan-out n_replicas={n_replicas}: mean {:.1} ms, max {:.1} ms to staleness 0",
+            mean * 1e3,
+            max * 1e3
+        );
+        fanout.push(Json::obj(vec![
+            ("replicas", n_replicas.into()),
+            ("mean_secs", mean.into()),
+            ("max_secs", max.into()),
+        ]));
+        f.stop().expect("fleet stop");
+    }
+
+    // --- read scale-out ---------------------------------------------------
+    let n_replicas = 4usize;
+    let f = fleet(&snapshot, n_replicas);
+    {
+        let mut replica_clients: Vec<DpmmClient> = f
+            .replica_addrs()
+            .iter()
+            .map(|a| DpmmClient::connect(&a.to_string()).expect("connect replica"))
+            .collect();
+        converge(&mut replica_clients, 1);
+    }
+    let leader_addr = f.leader_addr().to_string();
+    let replica_addrs: Vec<String> = f.replica_addrs().iter().map(|a| a.to_string()).collect();
+    let batch = 512usize;
+    let clients = 4usize;
+
+    let run = |label: &str, addrs: &[String]| -> f64 {
+        let per_client = n_score / clients;
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                scope.spawn(move || {
+                    let mut set = ReplicaSetClient::new(addrs).expect("replica set");
+                    let lo = c * per_client;
+                    let mut scored = 0usize;
+                    while scored < per_client {
+                        let m = batch.min(per_client - scored);
+                        let start = lo + scored;
+                        let p = set
+                            .predict(&score_pts[start * D..(start + m) * D], D)
+                            .expect("predict");
+                        std::hint::black_box(&p.labels);
+                        scored += m;
+                    }
+                });
+            }
+        });
+        let rate = pps(per_client * clients, t0.elapsed().as_secs_f64());
+        println!("tcp {label}: {rate:>12.0} points/s  ({clients} clients, batch {batch})");
+        rate
+    };
+    let leader_only = run("leader only     ", std::slice::from_ref(&leader_addr));
+    let one_replica = run("1 replica       ", std::slice::from_ref(&replica_addrs[0]));
+    let full_set = run(&format!("{n_replicas} replicas (rr) "), &replica_addrs);
+    println!(
+        "\nreplica-set vs leader-only predict throughput: {:.2}x",
+        full_set / leader_only.max(1e-9)
+    );
+    f.stop().expect("fleet stop");
+
+    let doc = Json::obj(vec![
+        ("bench", "replica_fanout".into()),
+        ("d", D.into()),
+        ("k", K.into()),
+        ("rounds", rounds.into()),
+        ("points_per_round", per_round.into()),
+        ("n_score", n_score.into()),
+        ("fanout", Json::Arr(fanout)),
+        (
+            "throughput",
+            Json::obj(vec![
+                ("clients", clients.into()),
+                ("batch", batch.into()),
+                ("leader_points_per_sec", leader_only.into()),
+                ("one_replica_points_per_sec", one_replica.into()),
+                ("replica_set_points_per_sec", full_set.into()),
+                ("replica_set_vs_leader", (full_set / leader_only.max(1e-9)).into()),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("BENCH_REPLICA_OUT").unwrap_or_else(|_| "BENCH_replica.json".into());
+    match std::fs::write(&out, json::to_string_pretty(&doc)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

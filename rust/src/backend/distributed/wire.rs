@@ -338,6 +338,14 @@ impl<'a> Dec<'a> {
         self.check_run(n, 1)?;
         Ok(self.take(n)?.to_vec())
     }
+    /// Length-prefixed raw byte run, borrowed from the frame — the
+    /// zero-copy mirror of [`Dec::bytes`] (the slice lives as long as the
+    /// frame; used for bulk opaque payloads like snapshot publishes).
+    pub fn bytes_borrowed(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.check_run(n, 1)?;
+        self.take(n)
+    }
     pub fn matrix(&mut self) -> Result<Matrix> {
         let r = self.u32()? as usize;
         let c = self.u32()? as usize;

@@ -176,6 +176,25 @@ mod tests {
     }
 
     #[test]
+    fn replica_subcommand_surface_parses() {
+        // `dpmm replica` + the leader-side --replicas list share the same
+        // plain --key=value surface; pin both here.
+        let a = parse(&[
+            "replica",
+            "--snapshot=model.snap",
+            "--addr=0.0.0.0:7980",
+            "--threads=2",
+            "--metrics_addr=0.0.0.0:9465",
+        ]);
+        assert_eq!(a.subcommand.as_deref(), Some("replica"));
+        assert_eq!(a.get("snapshot"), Some("model.snap"));
+        assert_eq!(a.get_usize("threads").unwrap(), Some(2));
+        assert_eq!(a.get("metrics_addr"), Some("0.0.0.0:9465"));
+        let b = parse(&["stream", "--checkpoint=fit.ckpt", "--replicas=r1:7979, r2:7979"]);
+        assert_eq!(b.get_list("replicas"), vec!["r1:7979", "r2:7979"]);
+    }
+
+    #[test]
     fn require_reports_key() {
         let a = parse(&[]);
         let e = a.require("params_path").unwrap_err().to_string();

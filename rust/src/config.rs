@@ -141,6 +141,11 @@ pub struct StreamSettings {
     /// Distributed ingest workers (`host:port` running `dpmm worker`;
     /// empty = single-process streaming).
     pub workers: Vec<String>,
+    /// Read-replica endpoints (`host:port` running `dpmm replica`) the
+    /// leader fans each published snapshot generation out to; empty = no
+    /// replication. Falls back to the `DPMM_REPLICAS` env var
+    /// (comma-separated) when the `--replicas` flag is absent.
+    pub replicas: Vec<String>,
     /// Sweep threads per worker process (distributed mode only).
     pub worker_threads: usize,
     /// Streaming-state checkpoint file (leader durability); written
@@ -175,6 +180,7 @@ impl Default for StreamSettings {
             alpha: 10.0,
             seed: 0,
             workers: Vec::new(),
+            replicas: Vec::new(),
             worker_threads: 1,
             checkpoint_path: None,
             checkpoint_every: 16,
@@ -190,12 +196,25 @@ impl Default for StreamSettings {
 
 impl StreamSettings {
     /// Parse `--window / --sweeps / --decay / --alpha / --seed /
-    /// --workers / --worker_threads / --checkpoint_path /
+    /// --workers / --replicas / --worker_threads / --checkpoint_path /
     /// --checkpoint_every / --resume / --heartbeat_ms /
     /// --heartbeat_grace_ms / --connect_retries / --retry_base_ms /
-    /// --retry_max_ms` overrides.
+    /// --retry_max_ms` overrides. `--replicas` falls back to the
+    /// `DPMM_REPLICAS` env var so a fleet's endpoint list can live in the
+    /// deploy environment instead of every launch command.
     pub fn from_args(args: &Args) -> Result<Self> {
         let mut s = StreamSettings { workers: args.get_list("workers"), ..Default::default() };
+        s.replicas = args.get_list("replicas");
+        if s.replicas.is_empty() {
+            if let Ok(env) = std::env::var("DPMM_REPLICAS") {
+                s.replicas = env
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|a| !a.is_empty())
+                    .map(str::to_string)
+                    .collect();
+            }
+        }
         if let Some(wt) = args.get_usize("worker_threads")? {
             s.worker_threads = wt.max(1);
         }
@@ -629,6 +648,14 @@ mod tests {
         assert_eq!(s.worker_threads, 4);
         assert!(s.checkpoint_path.is_none());
         assert!(!s.resume);
+        assert!(s.replicas.is_empty(), "no --replicas ⇒ no snapshot fan-out");
+        let replicated = Args::parse(
+            ["stream", "--replicas=r1:8001, r2:8002"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        let s = StreamSettings::from_args(&replicated).unwrap();
+        assert_eq!(s.replicas, vec!["r1:8001", "r2:8002"]);
         let durable = Args::parse(
             ["stream", "--checkpoint_path=st.ckpt", "--checkpoint_every=4", "--resume"]
                 .iter()

@@ -20,6 +20,9 @@
 //!          [--checkpoint_path=stream.ckpt] [--checkpoint_every=16] [--resume]
 //!          [--heartbeat_ms=0] [--heartbeat_grace_ms=3000]
 //!          [--connect_retries=3] [--retry_base_ms=50] [--retry_max_ms=2000]
+//!          [--replicas=host:7979,host2:7979]
+//! dpmm replica --snapshot=model.snap|--checkpoint=fit.ckpt --addr=0.0.0.0:7979
+//!          [--threads=0] [--tile=128] [--batch_points=65536] [--metrics_addr=0.0.0.0:9464]
 //! dpmm predict --data=points.npy (--addr=host:7979 | --checkpoint=fit.ckpt | --snapshot=model.snap)
 //!          [--probs] [--labels_out=labels.npy] [--result_path=result.json]
 //! dpmm snapshot --checkpoint=fit.ckpt --out=model.snap
@@ -69,6 +72,7 @@ fn main() {
         Some("worker") => cmd_worker(&args),
         Some("serve") => cmd_serve(&args),
         Some("stream") => cmd_stream(&args),
+        Some("replica") => cmd_replica(&args),
         Some("predict") => cmd_predict(&args),
         Some("snapshot") => cmd_snapshot(&args),
         Some("top") => cmd_top(&args),
@@ -77,7 +81,7 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some(other) => Err(anyhow!(
             "unknown subcommand '{other}' \
-             (fit|generate|worker|serve|stream|predict|snapshot|top|events|chaos|info)"
+             (fit|generate|worker|serve|stream|replica|predict|snapshot|top|events|chaos|info)"
         )),
         None => unreachable!(),
     };
@@ -100,7 +104,12 @@ fn print_help() {
          \x20           (--workers=host:port,... shards ingest across dpmm workers;\n\
          \x20            --checkpoint_path + --resume give durable, replayable state)\n\
          \x20           (--heartbeat_ms enables proactive worker supervision;\n\
-         \x20            --connect_retries tunes transient-fault retry/backoff)\n\
+         \x20            --connect_retries tunes transient-fault retry/backoff;\n\
+         \x20            --replicas=host:7979,... fans each generation out to\n\
+         \x20            dpmm replica read servers)\n\
+         \x20 replica   serve reads from leader-published snapshots: hot-swaps\n\
+         \x20           each generation a stream leader fans out, reports\n\
+         \x20           staleness in /stats, keeps serving if the leader dies\n\
          \x20 predict   score new points (against a server or a local model)\n\
          \x20 snapshot  export an immutable model snapshot from a checkpoint\n\
          \x20 top       poll leader + worker metrics endpoints and render a\n\
@@ -315,7 +324,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let engine = ScoringEngine::new(
         &snapshot,
-        EngineConfig { threads: settings.threads, tile: settings.tile, precision: settings.precision },
+        EngineConfig {
+            threads: settings.threads,
+            tile: settings.tile,
+            precision: settings.precision,
+        },
     )?;
     serve::serve_blocking(
         engine,
@@ -335,7 +348,18 @@ fn cmd_stream(args: &Args) -> Result<()> {
         path: p.clone(),
         every_batches: stream_settings.checkpoint_every,
     });
-    let engine_config = EngineConfig { threads: settings.threads, tile: settings.tile, precision: settings.precision };
+    let engine_config = EngineConfig {
+        threads: settings.threads,
+        tile: settings.tile,
+        precision: settings.precision,
+    };
+    if !stream_settings.replicas.is_empty() {
+        eprintln!(
+            "replicating snapshots to {} replica(s): {}",
+            stream_settings.replicas.len(),
+            stream_settings.replicas.join(", ")
+        );
+    }
 
     // --resume: replay the streaming checkpoint to a bitwise-identical
     // leader state (window/sweeps/decay/alpha come from the file); the
@@ -356,8 +380,16 @@ fn cmd_stream(args: &Args) -> Result<()> {
                     ..StreamConfig::default()
                 },
             )?;
-            let engine = ScoringEngine::new(&fitter.snapshot()?, engine_config)?;
-            serve::serve_blocking_streaming(engine, fitter, &settings.addr, serve_config)
+            let snap = fitter.snapshot()?;
+            let engine = ScoringEngine::new(&snap, engine_config)?;
+            serve::serve_blocking_streaming_replicated(
+                engine,
+                fitter,
+                &settings.addr,
+                serve_config,
+                &stream_settings.replicas,
+                &snap,
+            )
         } else {
             let fitter = DistributedFitter::resume(
                 &path,
@@ -373,8 +405,16 @@ fn cmd_stream(args: &Args) -> Result<()> {
                     ..DistributedStreamConfig::default()
                 },
             )?;
-            let engine = ScoringEngine::new(&fitter.snapshot()?, engine_config)?;
-            serve::serve_blocking_streaming(engine, fitter, &settings.addr, serve_config)
+            let snap = fitter.snapshot()?;
+            let engine = ScoringEngine::new(&snap, engine_config)?;
+            serve::serve_blocking_streaming_replicated(
+                engine,
+                fitter,
+                &settings.addr,
+                serve_config,
+                &stream_settings.replicas,
+                &snap,
+            )
         };
     }
 
@@ -410,7 +450,14 @@ fn cmd_stream(args: &Args) -> Result<()> {
                 ..StreamConfig::default()
             },
         )?;
-        serve::serve_blocking_streaming(engine, fitter, &settings.addr, serve_config)
+        serve::serve_blocking_streaming_replicated(
+            engine,
+            fitter,
+            &settings.addr,
+            serve_config,
+            &stream_settings.replicas,
+            &snapshot,
+        )
     } else {
         // Distributed ingest: shard the window across `dpmm worker`
         // processes; the serving path is identical (same wire, same
@@ -435,8 +482,46 @@ fn cmd_stream(args: &Args) -> Result<()> {
                 retry_max_ms: stream_settings.retry_max_ms,
             },
         )?;
-        serve::serve_blocking_streaming(engine, fitter, &settings.addr, serve_config)
+        serve::serve_blocking_streaming_replicated(
+            engine,
+            fitter,
+            &settings.addr,
+            serve_config,
+            &stream_settings.replicas,
+            &snapshot,
+        )
     }
+}
+
+/// Read replica: serve the seed model until a `dpmm stream --replicas=`
+/// leader starts publishing generations, then hot-swap each one in. The
+/// replica never fits — it only applies published `DPMMSNAP` payloads —
+/// and it keeps answering from its last applied snapshot if the leader
+/// dies (bounded staleness is visible in `/stats`).
+fn cmd_replica(args: &Args) -> Result<()> {
+    let settings = ServeSettings::from_args(args)?;
+    start_metrics_listener(&settings)?;
+    let snapshot = load_snapshot_arg(args)?;
+    eprintln!(
+        "replica seed model: K={} d={} family={} (from N={}; awaiting leader publishes)",
+        snapshot.k(),
+        snapshot.dim(),
+        snapshot.prior.family(),
+        snapshot.n_total
+    );
+    let engine = ScoringEngine::new(
+        &snapshot,
+        EngineConfig {
+            threads: settings.threads,
+            tile: settings.tile,
+            precision: settings.precision,
+        },
+    )?;
+    serve::serve_blocking_replica(
+        engine,
+        &settings.addr,
+        serve::ServeConfig { max_batch_points: settings.max_batch_points },
+    )
 }
 
 fn cmd_predict(args: &Args) -> Result<()> {
@@ -462,7 +547,11 @@ fn cmd_predict(args: &Args) -> Result<()> {
         }
         let engine = ScoringEngine::new(
             &snapshot,
-            EngineConfig { threads: settings.threads, tile: settings.tile, precision: settings.precision },
+            EngineConfig {
+                threads: settings.threads,
+                tile: settings.tile,
+                precision: settings.precision,
+            },
         )?;
         let k = engine.k();
         let b = engine.score(&values, probs)?;

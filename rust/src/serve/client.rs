@@ -53,6 +53,19 @@ pub struct ServeStats {
     /// Ingest is halted (unrecoverable failure); predictions keep serving
     /// the last published snapshot.
     pub halted: bool,
+    /// Serving role (v6): [`super::wire::ROLE_STANDALONE`] plain serve,
+    /// [`super::wire::ROLE_LEADER`] stream leader,
+    /// [`super::wire::ROLE_REPLICA`] read replica.
+    pub role: u8,
+    /// Leader: replica endpoints configured for snapshot fan-out (0
+    /// everywhere else).
+    pub replicas: u32,
+    /// Replica: leader generations offered but not yet live — nonzero
+    /// only mid-apply, so it converges to 0 between ingests (0 elsewhere).
+    pub staleness: u64,
+    /// Seconds since the live snapshot last changed (replica: last
+    /// applied publish; leader: last hot-swap; plain serve: uptime).
+    pub snapshot_age_secs: f64,
 }
 
 /// Outcome of one accepted ingest mini-batch.
@@ -180,6 +193,10 @@ impl DpmmClient {
                 workers_dead,
                 degraded,
                 halted,
+                role,
+                replicas,
+                staleness,
+                snapshot_age_secs,
             } => Ok(ServeStats {
                 requests,
                 points,
@@ -197,8 +214,25 @@ impl DpmmClient {
                 workers_dead,
                 degraded: degraded != 0,
                 halted: halted != 0,
+                role,
+                replicas,
+                staleness,
+                snapshot_age_secs,
             }),
             other => Err(anyhow!("unexpected stats reply {other:?}")),
+        }
+    }
+
+    /// Push one `DPMMSNAP` byte stream at the given generation (replica
+    /// endpoints only — this is the verb the leader's fan-out threads
+    /// speak; exposed for tests and custom replication topologies).
+    /// Returns the acked generation once the replica's re-planned engine
+    /// is live.
+    pub fn publish_snapshot(&mut self, generation: u64, snapshot: &[u8]) -> Result<u64> {
+        let msg = ServeMessage::SnapshotPublish { generation, snapshot: snapshot.to_vec() };
+        match self.request(&msg)? {
+            ServeMessage::PublishAck { generation } => Ok(generation),
+            other => Err(anyhow!("unexpected publish reply {other:?}")),
         }
     }
 
@@ -236,5 +270,131 @@ impl DpmmClient {
             ServeMessage::Ack => Ok(()),
             other => Err(anyhow!("unexpected shutdown reply {other:?}")),
         }
+    }
+}
+
+/// Round-robin client over a replica set, with transient-failure failover.
+///
+/// Each call starts at the next endpoint in rotation (spreading read load
+/// across the fleet) and fails over — dropping the broken connection and
+/// moving to the next endpoint — on any failure the distributed stream's
+/// [`classify_error`] rates [`FaultClass::Transient`] (refused connect,
+/// reset, timeout, ...). Protocol-level failures (a typed server `Error`,
+/// a decode mismatch) are returned immediately: every replica would
+/// deterministically repeat them. One full rotation without a survivor
+/// returns the last transient error.
+///
+/// Connections are lazy and cached per endpoint, so steady-state requests
+/// pay zero connect overhead and a replica that was down rejoins the
+/// rotation on its next turn.
+pub struct ReplicaSetClient {
+    addrs: Vec<String>,
+    conns: Vec<Option<DpmmClient>>,
+    next: usize,
+}
+
+impl ReplicaSetClient {
+    pub fn new(addrs: &[String]) -> Result<ReplicaSetClient> {
+        if addrs.is_empty() {
+            bail!("replica set needs at least one endpoint");
+        }
+        Ok(ReplicaSetClient {
+            addrs: addrs.to_vec(),
+            conns: addrs.iter().map(|_| None).collect(),
+            next: 0,
+        })
+    }
+
+    /// The configured endpoints, in rotation order.
+    pub fn addrs(&self) -> &[String] {
+        &self.addrs
+    }
+
+    /// Run `op` against the rotation: try each endpoint once starting at
+    /// the round-robin cursor, failing over on transient errors.
+    fn with_failover<T>(
+        &mut self,
+        mut op: impl FnMut(&mut DpmmClient) -> Result<T>,
+    ) -> Result<T> {
+        use crate::backend::distributed::wire::{classify_error, FaultClass};
+        let n = self.addrs.len();
+        let start = self.next;
+        let mut last_err: Option<anyhow::Error> = None;
+        for i in 0..n {
+            let idx = (start + i) % n;
+            if self.conns[idx].is_none() {
+                match DpmmClient::connect(&self.addrs[idx]) {
+                    Ok(c) => self.conns[idx] = Some(c),
+                    Err(e) => {
+                        if classify_error(&e) == FaultClass::Fatal {
+                            return Err(e);
+                        }
+                        last_err = Some(e);
+                        continue;
+                    }
+                }
+            }
+            match op(self.conns[idx].as_mut().unwrap()) {
+                Ok(v) => {
+                    // Advance the rotation past the endpoint that served us.
+                    self.next = (idx + 1) % n;
+                    return Ok(v);
+                }
+                Err(e) => {
+                    // A failed request leaves the connection's framing in
+                    // an unknown state either way; drop it.
+                    self.conns[idx] = None;
+                    if classify_error(&e) == FaultClass::Fatal {
+                        return Err(e);
+                    }
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow!("replica set exhausted with no recorded error"))
+            .context(format!("all {n} replica endpoints failed")))
+    }
+
+    /// [`DpmmClient::predict`] against the rotation.
+    pub fn predict(&mut self, points: &[f64], d: usize) -> Result<Prediction> {
+        self.with_failover(|c| c.predict(points, d))
+    }
+
+    /// [`DpmmClient::predict_opts`] against the rotation.
+    pub fn predict_opts(&mut self, points: &[f64], d: usize, probs: bool) -> Result<Prediction> {
+        self.with_failover(|c| c.predict_opts(points, d, probs))
+    }
+
+    /// [`DpmmClient::info`] against the rotation.
+    pub fn info(&mut self) -> Result<ServerInfo> {
+        self.with_failover(|c| c.info())
+    }
+
+    /// [`DpmmClient::stats`] against the rotation (one endpoint's view —
+    /// use [`Self::stats_all`] for the whole fleet).
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        self.with_failover(|c| c.stats())
+    }
+
+    /// `/stats` from **every** endpoint, in `addrs()` order (`None` where
+    /// an endpoint is unreachable) — the fleet-staleness readout.
+    pub fn stats_all(&mut self) -> Vec<Option<ServeStats>> {
+        let n = self.addrs.len();
+        (0..n)
+            .map(|idx| {
+                if self.conns[idx].is_none() {
+                    self.conns[idx] = DpmmClient::connect(&self.addrs[idx]).ok();
+                }
+                match self.conns[idx].as_mut().map(|c| c.stats()) {
+                    Some(Ok(s)) => Some(s),
+                    Some(Err(_)) => {
+                        self.conns[idx] = None;
+                        None
+                    }
+                    None => None,
+                }
+            })
+            .collect()
     }
 }

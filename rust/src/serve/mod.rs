@@ -38,20 +38,34 @@
 //!    the previous snapshot serving; in distributed mode a worker failure
 //!    is absorbed by the leader (batches re-shard onto survivors) and
 //!    surfaces through the `/stats` cluster-health fields
-//!    ([`crate::stream::StreamHealth`]) instead of killing ingest.
+//!    ([`crate::stream::StreamHealth`]) instead of killing ingest;
+//! 5. **Bounded-staleness replication** — a leader started with
+//!    `--replicas` fans each published generation out to `dpmm replica`
+//!    read servers ([`replica`]); replicas adopt the leader's generation
+//!    on apply, answer **bitwise-identically** to the leader at matching
+//!    generations (the engine is RNG-free and the publish payload is the
+//!    exact `DPMMSNAP` bytes), report staleness in `/stats`, and keep
+//!    serving their last applied snapshot if the leader dies.
 //!
-//! The determinism and fault-tolerance contracts behind (4) are specified
-//! in `docs/DETERMINISM.md`.
+//! The determinism and fault-tolerance contracts behind (4)–(5) are
+//! specified in `docs/DETERMINISM.md`.
 
 pub mod client;
 pub mod engine;
+pub mod replica;
 pub mod server;
 pub mod snapshot;
 pub mod wire;
 
-pub use client::{DpmmClient, IngestReceipt, Prediction, ServeStats, ServerInfo};
+pub use client::{
+    DpmmClient, IngestReceipt, Prediction, ReplicaSetClient, ServeStats, ServerInfo,
+};
 pub use engine::{EngineConfig, Precision, ScoreBatch, ScoringEngine};
+pub use replica::{Publisher, ReplicatedFleet};
 pub use server::{
-    serve_blocking, serve_blocking_streaming, spawn, spawn_streaming, ServeConfig, ServerHandle,
+    serve_blocking, serve_blocking_replica, serve_blocking_streaming,
+    serve_blocking_streaming_replicated, spawn, spawn_replica, spawn_streaming,
+    spawn_streaming_replicated, ServeConfig, ServerHandle,
 };
 pub use snapshot::{FrozenPlan, Kernel32, ModelSnapshot, Plan32, PredictiveDesc, SnapshotCluster};
+pub use wire::{ROLE_LEADER, ROLE_REPLICA, ROLE_STANDALONE};

@@ -1,0 +1,272 @@
+//! Leader-side snapshot fan-out to read replicas, plus the in-process
+//! fleet fixture the replica-equivalence tests and benches stand on.
+//!
+//! Topology: the stream leader *connects out* to each configured replica
+//! endpoint — a replica is just a serving endpoint that additionally
+//! accepts the `SnapshotPublish` verb — so replicas need no knowledge of
+//! the leader and keep serving their last applied snapshot if the leader
+//! dies (the availability half of the replication contract; the
+//! consistency half — bitwise-identical predictions at matching
+//! generations — follows from the engine being RNG-free and the publish
+//! payload being the exact `DPMMSNAP` bytes, see `docs/ARCHITECTURE.md`
+//! §Replicated serving).
+//!
+//! One [`Publisher`] thread per replica, all fed from a single
+//! latest-generation cell: a slow or dead replica never blocks the
+//! batcher (offers just overwrite the cell) and never delays its
+//! siblings. Intermediate generations are *coalesced* — a replica that
+//! was down through generations 3..7 receives only 7 on reconnect, which
+//! is exactly the bounded-staleness semantics `/stats` reports.
+//! Transient socket failures reconnect under the same
+//! [`RetryPolicy`]/[`classify_error`] regime the distributed stream uses
+//! for worker calls; fatal (protocol-level) rejections skip the
+//! generation instead of retrying it forever.
+
+use super::client::DpmmClient;
+use super::engine::{EngineConfig, ScoringEngine};
+use super::server::{spawn_replica, spawn_streaming_replicated, ServeConfig, ServerHandle};
+use super::snapshot::ModelSnapshot;
+use crate::backend::distributed::wire::{classify_error, FaultClass, RetryPolicy};
+use crate::stream::StreamFitter;
+use anyhow::{bail, Context, Result};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// How long a replica thread sleeps per poll while idle or backing off
+/// (bounds stop-latency; the condvar wake usually arrives first).
+const POLL: Duration = Duration::from_millis(50);
+
+/// The cell every replica thread drains: only the **latest** offered
+/// generation is retained (offers overwrite), so fan-out work is O(1) per
+/// publish regardless of how far behind a replica is.
+struct Latest {
+    generation: u64,
+    bytes: Arc<Vec<u8>>,
+}
+
+struct Inner {
+    latest: Mutex<Option<Latest>>,
+    ready: Condvar,
+    stop: AtomicBool,
+}
+
+/// Per-leader snapshot fan-out: one pusher thread per replica endpoint,
+/// created by [`spawn_streaming_replicated`] and stopped with the server.
+pub struct Publisher {
+    inner: Arc<Inner>,
+    addrs: Vec<String>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Publisher {
+    /// Start one pusher thread per endpoint, seeding the cell with the
+    /// leader's boot snapshot so stale-seeded replicas converge before
+    /// the first ingest.
+    pub fn start(addrs: &[String], boot_generation: u64, boot_bytes: Vec<u8>) -> Publisher {
+        let inner = Arc::new(Inner {
+            latest: Mutex::new(Some(Latest {
+                generation: boot_generation,
+                bytes: Arc::new(boot_bytes),
+            })),
+            ready: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let threads = addrs
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| {
+                let inner = Arc::clone(&inner);
+                let addr = addr.clone();
+                std::thread::spawn(move || replica_loop(&inner, &addr, i as u64))
+            })
+            .collect();
+        Publisher { inner, addrs: addrs.to_vec(), threads: Mutex::new(threads) }
+    }
+
+    /// Number of configured replica endpoints (the `/stats` `replicas`
+    /// field on the leader).
+    pub fn endpoints(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// Offer a freshly published generation to the fleet. Never blocks on
+    /// network I/O; an older in-flight offer is simply superseded.
+    pub fn offer(&self, generation: u64, bytes: Vec<u8>) {
+        let mut cell = self.inner.latest.lock().unwrap();
+        if cell.as_ref().map_or(true, |l| generation > l.generation) {
+            *cell = Some(Latest { generation, bytes: Arc::new(bytes) });
+        }
+        drop(cell);
+        self.inner.ready.notify_all();
+    }
+
+    /// Stop and join every pusher thread (idempotent). In-flight publishes
+    /// finish their current attempt; queued-but-unsent generations are
+    /// dropped — replicas stay on their last acked snapshot.
+    pub fn stop(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        self.inner.ready.notify_all();
+        let threads: Vec<_> = self.threads.lock().unwrap().drain(..).collect();
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Block until a generation newer than `last_sent` is offered; `None` on
+/// stop.
+fn next_work(inner: &Inner, last_sent: u64) -> Option<(u64, Arc<Vec<u8>>)> {
+    let mut cell = inner.latest.lock().unwrap();
+    loop {
+        if inner.stop.load(Ordering::SeqCst) {
+            return None;
+        }
+        if let Some(l) = cell.as_ref() {
+            if l.generation > last_sent {
+                return Some((l.generation, Arc::clone(&l.bytes)));
+            }
+        }
+        let (guard, _) = inner.ready.wait_timeout(cell, POLL).unwrap();
+        cell = guard;
+    }
+}
+
+/// Interruptible backoff sleep; false once the publisher is stopping.
+fn backoff(inner: &Inner, total: Duration) -> bool {
+    let mut slept = Duration::ZERO;
+    while slept < total {
+        if inner.stop.load(Ordering::SeqCst) {
+            return false;
+        }
+        let step = POLL.min(total - slept);
+        std::thread::sleep(step);
+        slept += step;
+    }
+    !inner.stop.load(Ordering::SeqCst)
+}
+
+fn replica_loop(inner: &Inner, addr: &str, seed: u64) {
+    // Reconnect backoff: jitter-seeded per replica index so a fleet-wide
+    // replica restart does not produce synchronized reconnect storms.
+    let mut policy = RetryPolicy::new(u32::MAX, 50, 2_000, 0x5EED_FA90 ^ seed);
+    let mut client: Option<DpmmClient> = None;
+    let mut last_sent = 0u64;
+    let mut failures = 0u32;
+    while let Some((generation, bytes)) = next_work(inner, last_sent) {
+        let watch = crate::telemetry::Stopwatch::start();
+        let attempt = (|| -> Result<u64> {
+            if client.is_none() {
+                client = Some(
+                    DpmmClient::connect(addr)
+                        .with_context(|| format!("replica fan-out connect {addr}"))?,
+                );
+            }
+            client.as_mut().unwrap().publish_snapshot(generation, &bytes)
+        })();
+        match attempt {
+            Ok(acked) => {
+                last_sent = generation.max(acked);
+                failures = 0;
+                watch.observe(crate::telemetry::catalog::replica_fanout_seconds());
+            }
+            Err(e) => {
+                // Any failure invalidates the connection (a half-written
+                // frame would desynchronize it); reconnect on next try.
+                client = None;
+                if classify_error(&e) == FaultClass::Fatal {
+                    // Protocol-level rejection (e.g. the endpoint is not a
+                    // replica, or it rejected the payload): retrying this
+                    // generation would deterministically repeat it. Skip
+                    // it; a future generation may still land.
+                    eprintln!(
+                        "replica fan-out: {addr} rejected generation {generation} \
+                         (skipping it): {e:#}"
+                    );
+                    last_sent = generation;
+                } else {
+                    failures += 1;
+                    let delay = policy.next_delay(failures.saturating_sub(1).min(16));
+                    if !backoff(inner, delay) {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// In-process leader + N replicas, the harness behind
+/// `tests/integration_replica.rs` and `benches/replica_fanout.rs` (all on
+/// loopback ephemeral ports). Replicas boot from the same snapshot the
+/// leader serves, so the fleet starts convergent at generation 1.
+pub struct ReplicatedFleet {
+    leader: Option<ServerHandle>,
+    leader_addr: SocketAddr,
+    replicas: Vec<ServerHandle>,
+    replica_addrs: Vec<SocketAddr>,
+}
+
+impl ReplicatedFleet {
+    /// Stand up `n_replicas` replica servers plus one streaming leader
+    /// publishing to all of them.
+    pub fn start(
+        snapshot: &ModelSnapshot,
+        fitter: impl StreamFitter + 'static,
+        n_replicas: usize,
+        engine_config: EngineConfig,
+        serve_config: ServeConfig,
+    ) -> Result<ReplicatedFleet> {
+        if n_replicas == 0 {
+            bail!("a replicated fleet needs at least one replica");
+        }
+        let mut replicas = Vec::with_capacity(n_replicas);
+        let mut replica_addrs = Vec::with_capacity(n_replicas);
+        for _ in 0..n_replicas {
+            let engine = ScoringEngine::new(snapshot, engine_config.clone())?;
+            let handle = spawn_replica(engine, "127.0.0.1:0", serve_config.clone())?;
+            replica_addrs.push(handle.addr());
+            replicas.push(handle);
+        }
+        let endpoints: Vec<String> = replica_addrs.iter().map(|a| a.to_string()).collect();
+        let engine = ScoringEngine::new(snapshot, engine_config)?;
+        let leader = spawn_streaming_replicated(
+            engine,
+            fitter,
+            "127.0.0.1:0",
+            serve_config,
+            &endpoints,
+            snapshot,
+        )?;
+        let leader_addr = leader.addr();
+        Ok(ReplicatedFleet { leader: Some(leader), leader_addr, replicas, replica_addrs })
+    }
+
+    pub fn leader_addr(&self) -> SocketAddr {
+        self.leader_addr
+    }
+
+    pub fn replica_addrs(&self) -> &[SocketAddr] {
+        &self.replica_addrs
+    }
+
+    /// Kill the leader (fan-out included), leaving every replica serving
+    /// its last applied generation — the availability scenario the
+    /// integration harness pins.
+    pub fn stop_leader(&mut self) -> Result<()> {
+        match self.leader.take() {
+            Some(leader) => leader.stop(),
+            None => Ok(()),
+        }
+    }
+
+    /// Stop the whole fleet (leader first, if still alive).
+    pub fn stop(mut self) -> Result<()> {
+        self.stop_leader()?;
+        for replica in self.replicas.drain(..) {
+            replica.stop()?;
+        }
+        Ok(())
+    }
+}

@@ -37,9 +37,11 @@
 //! error reply, not a hang.
 
 use super::engine::{EngineConfig, ScoreBatch, ScoringEngine};
+use super::replica::Publisher;
+use super::snapshot::ModelSnapshot;
 use super::wire::{
     decode_request, serve_request_frame_cap, write_serve, write_serve_into, ServeMessage,
-    ServeRequest, FLAG_LOG_PROBS,
+    ServeRequest, FLAG_LOG_PROBS, ROLE_LEADER, ROLE_REPLICA, ROLE_STANDALONE,
 };
 use crate::backend::distributed::wire::{configure_stream, MAX_FRAME};
 use crate::stream::StreamFitter;
@@ -89,6 +91,18 @@ struct Counters {
     workers_dead: AtomicU64,
     degraded: AtomicBool,
     halted: AtomicBool,
+    /// Serving role ([`ROLE_STANDALONE`] / [`ROLE_LEADER`] /
+    /// [`ROLE_REPLICA`]); fixed at spawn.
+    role: AtomicU64,
+    /// Leader: replica endpoints configured for snapshot fan-out.
+    replicas_configured: AtomicU64,
+    /// Replica: highest generation a leader has *offered* (publish frame
+    /// received), monotone via `fetch_max`. Staleness = this minus the
+    /// live `generation` — nonzero only while an apply is in flight.
+    known_latest: AtomicU64,
+    /// Nanoseconds from `start` to the last engine hot-swap (boot = 0),
+    /// so `/stats` can report snapshot age without another `Instant`.
+    last_swap_nanos: AtomicU64,
     start: Instant,
 }
 
@@ -103,6 +117,14 @@ impl Counters {
         self.halted.store(h.halted, Ordering::Relaxed);
     }
 
+    /// Stamp "the live snapshot just changed" for the `/stats`
+    /// `snapshot_age_secs` field. Called under the engine write lock by
+    /// both swap paths (ingest publish, replica apply).
+    fn mark_swap(&self) {
+        self.last_swap_nanos
+            .store(self.start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
     /// `generation` is passed in by the caller, read under the engine read
     /// lock — the publisher bumps it while holding the write lock, so the
     /// reported generation always matches the engine a concurrent predict
@@ -111,6 +133,10 @@ impl Counters {
         let points = self.points.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         let uptime = self.start.elapsed().as_secs_f64().max(1e-9);
+        let swap_age = (self.start.elapsed()
+            - Duration::from_nanos(self.last_swap_nanos.load(Ordering::Relaxed)))
+        .as_secs_f64()
+        .max(0.0);
         ServeMessage::StatsReply {
             requests: self.requests.load(Ordering::Relaxed),
             points,
@@ -128,6 +154,13 @@ impl Counters {
             workers_dead: self.workers_dead.load(Ordering::Relaxed) as u32,
             degraded: u8::from(self.degraded.load(Ordering::Relaxed)),
             halted: u8::from(self.halted.load(Ordering::Relaxed)),
+            role: self.role.load(Ordering::Relaxed) as u8,
+            replicas: self.replicas_configured.load(Ordering::Relaxed) as u32,
+            staleness: self
+                .known_latest
+                .load(Ordering::Relaxed)
+                .saturating_sub(generation),
+            snapshot_age_secs: swap_age,
         }
     }
 }
@@ -187,6 +220,13 @@ struct Shared {
     engine_config: EngineConfig,
     queue: BatchQueue,
     stream: Option<StreamShared>,
+    /// Leader-side snapshot fan-out to read replicas (None = no
+    /// `--replicas` configured). The batcher offers every published
+    /// generation; per-replica threads push them out (serve/replica.rs).
+    publisher: Option<Arc<Publisher>>,
+    /// True on a `dpmm replica` server: accept `SnapshotPublish` frames
+    /// and hot-swap to the leader's generation.
+    replica: bool,
     counters: Counters,
     shutdown: AtomicBool,
     config: ServeConfig,
@@ -218,6 +258,9 @@ impl ServerHandle {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.queue.ready.notify_all();
         wake_accept(&self.addr, Duration::from_secs(2));
+        if let Some(p) = &self.shared.publisher {
+            p.stop();
+        }
         if let Some(h) = self.accept.take() {
             h.join().map_err(|_| anyhow::anyhow!("accept thread panicked"))?;
         }
@@ -231,7 +274,7 @@ impl ServerHandle {
 /// Start a prediction-only server on `addr` (use port 0 for an ephemeral
 /// port) and return immediately with a handle.
 pub fn spawn(engine: ScoringEngine, addr: &str, config: ServeConfig) -> Result<ServerHandle> {
-    spawn_inner(engine, None, addr, config)
+    spawn_inner(engine, None, addr, config, None, false)
 }
 
 /// Start a **streaming** server: predictions plus the `ingest` verb, with
@@ -245,7 +288,41 @@ pub fn spawn_streaming(
     addr: &str,
     config: ServeConfig,
 ) -> Result<ServerHandle> {
-    spawn_inner(engine, Some(Box::new(fitter)), addr, config)
+    spawn_inner(engine, Some(Box::new(fitter)), addr, config, None, false)
+}
+
+/// [`spawn_streaming`] plus snapshot fan-out: every published generation
+/// is offered to a [`Publisher`] pushing `SnapshotPublish` frames to the
+/// given replica endpoints (the `dpmm stream --replicas=` entrypoint).
+/// `boot` must be the snapshot the engine was built from; it is published
+/// immediately (as generation 1) so stale-seeded replicas catch up before
+/// the first ingest.
+pub fn spawn_streaming_replicated(
+    engine: ScoringEngine,
+    fitter: impl StreamFitter + 'static,
+    addr: &str,
+    config: ServeConfig,
+    replicas: &[String],
+    boot: &ModelSnapshot,
+) -> Result<ServerHandle> {
+    if replicas.is_empty() {
+        return spawn_streaming(engine, fitter, addr, config);
+    }
+    let publisher = Arc::new(Publisher::start(replicas, 1, boot.to_bytes()?));
+    spawn_inner(engine, Some(Box::new(fitter)), addr, config, Some(publisher), false)
+}
+
+/// Start a **read replica**: a prediction-only server that additionally
+/// accepts leader `SnapshotPublish` frames and hot-swaps to each published
+/// generation (the `dpmm replica` entrypoint). Boots serving the given
+/// seed engine at generation 1; the leader's first publish overwrites both
+/// the model and the generation counter.
+pub fn spawn_replica(
+    engine: ScoringEngine,
+    addr: &str,
+    config: ServeConfig,
+) -> Result<ServerHandle> {
+    spawn_inner(engine, None, addr, config, None, true)
 }
 
 fn spawn_inner(
@@ -253,6 +330,8 @@ fn spawn_inner(
     fitter: Option<Box<dyn StreamFitter>>,
     addr: &str,
     config: ServeConfig,
+    publisher: Option<Arc<Publisher>>,
+    replica: bool,
 ) -> Result<ServerHandle> {
     if let Some(f) = &fitter {
         if f.dim() != engine.dim() {
@@ -274,6 +353,14 @@ fn spawn_inner(
         .as_ref()
         .map(|f| f.health())
         .unwrap_or_else(crate::stream::StreamHealth::local);
+    let role = if replica {
+        ROLE_REPLICA
+    } else if fitter.is_some() {
+        ROLE_LEADER
+    } else {
+        ROLE_STANDALONE
+    };
+    let replicas_configured = publisher.as_ref().map_or(0, |p| p.endpoints() as u64);
     let shared = Arc::new(Shared {
         engine: RwLock::new(Arc::new(engine)),
         engine_config,
@@ -282,6 +369,8 @@ fn spawn_inner(
             fitter: Mutex::new(f),
             jobs: Mutex::new(VecDeque::new()),
         }),
+        publisher,
+        replica,
         counters: Counters {
             requests: AtomicU64::new(0),
             points: AtomicU64::new(0),
@@ -296,6 +385,10 @@ fn spawn_inner(
             workers_dead: AtomicU64::new(health.workers_dead as u64),
             degraded: AtomicBool::new(health.degraded),
             halted: AtomicBool::new(health.halted),
+            role: AtomicU64::new(role as u64),
+            replicas_configured: AtomicU64::new(replicas_configured),
+            known_latest: AtomicU64::new(0),
+            last_swap_nanos: AtomicU64::new(0),
             start: Instant::now(),
         },
         shutdown: AtomicBool::new(false),
@@ -328,12 +421,42 @@ pub fn serve_blocking_streaming(
     block_on(spawn_streaming(engine, fitter, addr, config)?)
 }
 
+/// Start a streaming server with replica fan-out and block until it shuts
+/// down (the `dpmm stream --replicas=` entrypoint; no-fan-out when
+/// `replicas` is empty).
+pub fn serve_blocking_streaming_replicated(
+    engine: ScoringEngine,
+    fitter: impl StreamFitter + 'static,
+    addr: &str,
+    config: ServeConfig,
+    replicas: &[String],
+    boot: &ModelSnapshot,
+) -> Result<()> {
+    block_on(spawn_streaming_replicated(engine, fitter, addr, config, replicas, boot)?)
+}
+
+/// Start a read replica and block until it shuts down (the `dpmm replica`
+/// entrypoint).
+pub fn serve_blocking_replica(
+    engine: ScoringEngine,
+    addr: &str,
+    config: ServeConfig,
+) -> Result<()> {
+    block_on(spawn_replica(engine, addr, config)?)
+}
+
 fn block_on(mut handle: ServerHandle) -> Result<()> {
     {
         let engine = handle.shared.engine();
         eprintln!(
             "dpmm {} listening on {} (K={}, d={}, {})",
-            if handle.shared.stream.is_some() { "stream" } else { "serve" },
+            if handle.shared.replica {
+                "replica"
+            } else if handle.shared.stream.is_some() {
+                "stream"
+            } else {
+                "serve"
+            },
             handle.addr(),
             engine.k(),
             engine.dim(),
@@ -533,8 +656,55 @@ fn handle_request(
             x.read_into(&mut owned);
             Some(ingest_reply(shared, n as usize, d as usize, owned))
         }
+        ServeRequest::Publish { generation, snapshot } => {
+            Some(publish_reply(shared, generation, snapshot))
+        }
         ServeRequest::Other(msg) => handle_message(msg, shared, stream)?,
     })
+}
+
+/// Apply one leader `SnapshotPublish` on a replica: parse the `DPMMSNAP`
+/// byte stream straight out of the frame, build the successor engine with
+/// this replica's own knobs, hot-swap it, and **adopt the leader's
+/// generation** so "same generation" means "same snapshot bytes" across
+/// the fleet (the bitwise-equivalence contract the replica harness pins).
+/// The `PublishAck` goes out only after the swap, so an acked generation
+/// is immediately servable. Any failure leaves the previous engine live.
+fn publish_reply(shared: &Shared, generation: u64, snapshot: &[u8]) -> ServeMessage {
+    if !shared.replica {
+        return ServeMessage::Error(
+            "snapshot publish rejected: not a replica (start this server with `dpmm replica`)"
+                .into(),
+        );
+    }
+    // Record the offer before the (potentially slow) engine build: between
+    // here and the swap, /stats honestly reports staleness ≥ 1.
+    shared.counters.known_latest.fetch_max(generation, Ordering::Relaxed);
+    let live_gen = shared.counters.generation.load(Ordering::Relaxed);
+    crate::telemetry::catalog::replica_staleness()
+        .set(generation.saturating_sub(live_gen) as f64);
+    let swapped = ModelSnapshot::from_bytes(snapshot).and_then(|snap| {
+        let engine = ScoringEngine::new(&snap, shared.engine_config.clone())?;
+        let mut live = shared.engine.write().unwrap();
+        shared.counters.generation.store(generation, Ordering::Relaxed);
+        *live = Arc::new(engine);
+        shared.counters.mark_swap();
+        Ok(())
+    });
+    match swapped {
+        Ok(()) => {
+            crate::telemetry::catalog::serve_generation().set(generation as f64);
+            crate::telemetry::catalog::replica_staleness().set(
+                shared
+                    .counters
+                    .known_latest
+                    .load(Ordering::Relaxed)
+                    .saturating_sub(generation) as f64,
+            );
+            ServeMessage::PublishAck { generation }
+        }
+        Err(e) => ServeMessage::Error(format!("snapshot publish failed: {e:#}")),
+    }
 }
 
 /// Process one request; `None` means the connection should close (the
@@ -849,9 +1019,29 @@ fn apply_ingests(shared: &Shared, stream: &StreamShared) {
             // the (engine, generation) pair becomes visible atomically:
             // no /stats reader can observe the new engine with the old
             // generation or vice versa.
-            let mut live = shared.engine.write().unwrap();
-            let generation = shared.counters.generation.fetch_add(1, Ordering::Relaxed) + 1;
-            *live = Arc::new(engine);
+            let generation = {
+                let mut live = shared.engine.write().unwrap();
+                let generation =
+                    shared.counters.generation.fetch_add(1, Ordering::Relaxed) + 1;
+                *live = Arc::new(engine);
+                shared.counters.mark_swap();
+                generation
+            };
+            // Offer the freshly published generation to the replica
+            // fan-out (after the local swap: the leader always serves a
+            // generation before any replica acks it, so "read your
+            // ingest" at the leader implies "≤ bounded staleness"
+            // everywhere else). Serialization failure only degrades
+            // replication — the local publish above already happened.
+            if let Some(publisher) = &shared.publisher {
+                match snapshot.to_bytes() {
+                    Ok(bytes) => publisher.offer(generation, bytes),
+                    Err(e) => eprintln!(
+                        "serve: snapshot serialization for replication failed \
+                         (replicas stay on their last generation): {e:#}"
+                    ),
+                }
+            }
             Ok(generation)
         })
     } else {

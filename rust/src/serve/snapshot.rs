@@ -318,12 +318,14 @@ impl ModelSnapshot {
         self.prior.dim()
     }
 
-    /// Serialize: `[magic][version][n_total][prior][K × (stats, weight)]`.
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        let mut w = BufWriter::new(
-            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-        );
+    /// Serialize the `DPMMSNAP` byte stream into any writer:
+    /// `[magic][version][n_total][prior][K × (stats, weight)]`.
+    ///
+    /// This is the one encoder for every transport — the on-disk snapshot
+    /// file ([`ModelSnapshot::save`]) and the serve-wire replication
+    /// payload ([`ModelSnapshot::to_bytes`]) are byte-identical, so a
+    /// replica that persists a received publish produces a loadable file.
+    pub fn write_to(&self, mut w: impl Write) -> Result<()> {
         w.write_all(MAGIC)?;
         w.write_all(&[VERSION])?;
         w.write_all(&self.n_total.to_le_bytes())?;
@@ -333,17 +335,13 @@ impl ModelSnapshot {
             checkpoint::write_stats(&mut w, &c.stats)?;
             w.write_all(&c.weight.to_le_bytes())?;
         }
-        w.flush()?;
         Ok(())
     }
 
-    /// Load + validate a snapshot file (rejects bad magic/version, corrupt
-    /// or truncated payloads, and family/dimension mismatches).
-    pub fn load(path: impl AsRef<Path>) -> Result<ModelSnapshot> {
-        let path = path.as_ref();
-        let mut r = BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-        );
+    /// Decode + validate a `DPMMSNAP` byte stream from any reader (rejects
+    /// bad magic/version, corrupt or truncated payloads, and
+    /// family/dimension mismatches). Inverse of [`ModelSnapshot::write_to`].
+    pub fn read_from(mut r: impl Read) -> Result<ModelSnapshot> {
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
         if &magic != MAGIC {
@@ -366,6 +364,47 @@ impl ModelSnapshot {
             clusters.push(SnapshotCluster { stats, weight });
         }
         Self::assemble(prior, n_total, clusters)
+    }
+
+    /// The `DPMMSNAP` stream as an in-memory buffer — the replication
+    /// publish payload (serve wire v6 `SnapshotPublish`).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::with_capacity(64 + self.k() * (16 + 8 * self.dim() * self.dim()));
+        self.write_to(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Decode an in-memory `DPMMSNAP` stream; trailing bytes are an error
+    /// (a wire payload must be consumed exactly).
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelSnapshot> {
+        let mut r = bytes;
+        let snap = Self::read_from(&mut r)?;
+        if !r.is_empty() {
+            bail!("{} trailing bytes after snapshot payload", r.len());
+        }
+        Ok(snap)
+    }
+
+    /// Serialize to a snapshot file (the `DPMMSNAP` stream via
+    /// [`ModelSnapshot::write_to`]).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut w = BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        self.write_to(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load + validate a snapshot file (the `DPMMSNAP` stream via
+    /// [`ModelSnapshot::read_from`]).
+    pub fn load(path: impl AsRef<Path>) -> Result<ModelSnapshot> {
+        let path = path.as_ref();
+        let r = BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        Self::read_from(r)
     }
 
     /// Derive the frozen scoring plan: plug-in posterior-mean [`KernelDesc`]s
@@ -538,6 +577,23 @@ mod tests {
         assert_eq!(back, snap);
         assert!(back.plan().is_ok());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bytes_roundtrip_matches_file_bytes() {
+        let snap = ModelSnapshot::from_state(&gauss_state()).unwrap();
+        let bytes = snap.to_bytes().unwrap();
+        assert_eq!(ModelSnapshot::from_bytes(&bytes).unwrap(), snap);
+        // The wire payload and the on-disk file are the same stream.
+        let p = tmp("bytes");
+        snap.save(&p).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), bytes);
+        std::fs::remove_file(&p).ok();
+        // Trailing garbage after the stream is a typed error, not ignored.
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0u8; 3]);
+        let err = ModelSnapshot::from_bytes(&padded).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
     }
 
     #[test]

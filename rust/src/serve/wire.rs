@@ -21,7 +21,11 @@
 //! stream's degraded mode; v4 = `StatsReply` grew the supervisor's
 //! per-worker liveness counts (`workers_healthy`, `workers_suspect`,
 //! `workers_dead`); v5 = the telemetry scrape verbs (tags 12–13:
-//! `Metrics`/`MetricsReply`, Prometheus text exposition).
+//! `Metrics`/`MetricsReply`, Prometheus text exposition); v6 = the
+//! replication verbs (tags 14–15: `SnapshotPublish` carrying a whole
+//! `DPMMSNAP` byte stream leader → replica, answered by `PublishAck`
+//! once the re-planned engine is live) + the replication stats fields
+//! (`role`, `replicas`, `staleness`, `snapshot_age_secs`).
 //!
 //! Clients are agnostic to the server's ingest topology: `dpmm stream`
 //! with or without `--workers` speaks the identical client-facing wire —
@@ -37,8 +41,10 @@ use std::io::{Read, Write};
 /// Serving-protocol version byte (independent of the fit protocol's; see
 /// `docs/WIRE_PROTOCOLS.md` for the tag table and bump rules). v3 grew
 /// `StatsReply` by the cluster-health fields; v4 by the supervisor's
-/// liveness counts; v5 added the `Metrics`/`MetricsReply` scrape verbs.
-pub const SERVE_PROTO_VERSION: u8 = 5;
+/// liveness counts; v5 added the `Metrics`/`MetricsReply` scrape verbs;
+/// v6 added the `SnapshotPublish`/`PublishAck` replication verbs and the
+/// replication stats fields.
+pub const SERVE_PROTO_VERSION: u8 = 6;
 
 /// Request flag: also return the normalized per-cluster log posterior
 /// membership matrix (`n × K`).
@@ -48,6 +54,17 @@ pub const FLAG_LOG_PROBS: u8 = 1;
 /// must not allocate unbounded memory server-side; 1 GiB frame cap also
 /// applies underneath).
 pub const MAX_PREDICT_POINTS: usize = 1 << 24;
+
+/// Per-verb frame cap for `SnapshotPublish` (256 MiB): larger than any
+/// real model (K ≤ 2¹⁶ clusters of d² f64 statistics) but far below the
+/// 1 GiB [`MAX_FRAME`] a bulk point payload may fill, so a hostile
+/// publish-shaped length prefix is dropped before payload buffering.
+pub const MAX_REPLICATION_FRAME: usize = 1 << 28;
+
+/// `StatsReply::role` values (v6).
+pub const ROLE_STANDALONE: u8 = 0;
+pub const ROLE_LEADER: u8 = 1;
+pub const ROLE_REPLICA: u8 = 2;
 
 /// Client→server and server→client messages.
 #[derive(Debug, Clone, PartialEq)]
@@ -104,6 +121,21 @@ pub enum ServeMessage {
         /// 1 = ingest is halted (unrecoverable failure); predictions keep
         /// serving the last published snapshot.
         halted: u8,
+        /// Serving role (v6): [`ROLE_STANDALONE`] plain `dpmm serve`,
+        /// [`ROLE_LEADER`] a `dpmm stream` leader, [`ROLE_REPLICA`] a
+        /// `dpmm replica` read replica.
+        role: u8,
+        /// Leader: replica endpoints configured for snapshot fan-out
+        /// (v6; 0 everywhere else).
+        replicas: u32,
+        /// Replica: leader generations offered (publish received) but not
+        /// yet live — nonzero only while an apply is in flight, so it
+        /// converges to 0 whenever ingest pauses (v6; 0 elsewhere).
+        staleness: u64,
+        /// Seconds since the live snapshot last changed: on a replica,
+        /// time since the last applied publish; on a leader, time since
+        /// the last hot-swap; on plain serve, process uptime (v6).
+        snapshot_age_secs: f64,
     },
     /// Streaming ingest: fold `n` points of dimension `d` (row-major raw
     /// payload) into the served model. Only `dpmm stream` endpoints accept
@@ -123,6 +155,15 @@ pub enum ServeMessage {
     /// format (v5; catalog in `docs/OBSERVABILITY.md`). Also served over
     /// plain HTTP-ish TCP via `--metrics_addr` for curl/collectors.
     MetricsReply(String),
+    /// Leader → replica snapshot fan-out (v6): one whole `DPMMSNAP` byte
+    /// stream (exactly the checkpoint-file bytes) stamped with the
+    /// leader's serving generation. Only `dpmm replica` endpoints accept
+    /// it; everything else replies with a typed Error.
+    SnapshotPublish { generation: u64, snapshot: Vec<u8> },
+    /// Replica → leader reply to `SnapshotPublish`, sent once the
+    /// re-planned engine is live (read-your-publish: after the ack, every
+    /// predict on that replica scores against `generation` or newer).
+    PublishAck { generation: u64 },
 }
 
 const TAG_PREDICT: u8 = 1;
@@ -138,6 +179,8 @@ const TAG_INGEST: u8 = 10;
 const TAG_INGEST_REPLY: u8 = 11;
 const TAG_METRICS: u8 = 12;
 const TAG_METRICS_REPLY: u8 = 13;
+const TAG_SNAPSHOT_PUBLISH: u8 = 14;
+const TAG_PUBLISH_ACK: u8 = 15;
 
 impl ServeMessage {
     pub fn encode(&self) -> Vec<u8> {
@@ -201,6 +244,10 @@ impl ServeMessage {
                 workers_dead,
                 degraded,
                 halted,
+                role,
+                replicas,
+                staleness,
+                snapshot_age_secs,
             } => {
                 e.u8(TAG_STATS_REPLY);
                 e.u64(*requests);
@@ -219,6 +266,10 @@ impl ServeMessage {
                 e.u32(*workers_dead);
                 e.u8(*degraded);
                 e.u8(*halted);
+                e.u8(*role);
+                e.u32(*replicas);
+                e.u64(*staleness);
+                e.f64(*snapshot_age_secs);
             }
             ServeMessage::Ingest { n, d, x } => {
                 e.u8(TAG_INGEST);
@@ -242,6 +293,15 @@ impl ServeMessage {
             ServeMessage::MetricsReply(text) => {
                 e.u8(TAG_METRICS_REPLY);
                 e.str(text);
+            }
+            ServeMessage::SnapshotPublish { generation, snapshot } => {
+                e.u8(TAG_SNAPSHOT_PUBLISH);
+                e.u64(*generation);
+                e.bytes(snapshot);
+            }
+            ServeMessage::PublishAck { generation } => {
+                e.u8(TAG_PUBLISH_ACK);
+                e.u64(*generation);
             }
         }
         *out = e.buf;
@@ -313,6 +373,10 @@ impl ServeMessage {
                 workers_dead: d.u32()?,
                 degraded: d.u8()?,
                 halted: d.u8()?,
+                role: d.u8()?,
+                replicas: d.u32()?,
+                staleness: d.u64()?,
+                snapshot_age_secs: d.f64()?,
             },
             TAG_INGEST => {
                 let n = d.u32()?;
@@ -336,6 +400,11 @@ impl ServeMessage {
             TAG_ERROR => ServeMessage::Error(d.str()?),
             TAG_METRICS => ServeMessage::Metrics,
             TAG_METRICS_REPLY => ServeMessage::MetricsReply(d.str()?),
+            TAG_SNAPSHOT_PUBLISH => ServeMessage::SnapshotPublish {
+                generation: d.u64()?,
+                snapshot: d.bytes()?,
+            },
+            TAG_PUBLISH_ACK => ServeMessage::PublishAck { generation: d.u64()? },
             t => bail!("unknown serve message tag {t}"),
         };
         if !d.finished() {
@@ -393,6 +462,9 @@ impl<'a> RawF64s<'a> {
 pub enum ServeRequest<'a> {
     Predict { flags: u8, n: u32, d: u32, x: RawF64s<'a> },
     Ingest { n: u32, d: u32, x: RawF64s<'a> },
+    /// Leader snapshot fan-out (v6): the `DPMMSNAP` byte stream borrows
+    /// the frame — replicas parse it straight out of the read buffer.
+    Publish { generation: u64, snapshot: &'a [u8] },
     Other(ServeMessage),
 }
 
@@ -437,18 +509,28 @@ pub fn decode_request(frame: &[u8]) -> Result<ServeRequest<'_>> {
             }
             Ok(ServeRequest::Ingest { n, d: dim, x })
         }
+        TAG_SNAPSHOT_PUBLISH => {
+            let generation = d.u64()?;
+            let snapshot = d.bytes_borrowed()?;
+            if !d.finished() {
+                bail!("trailing bytes after serve message (tag {TAG_SNAPSHOT_PUBLISH})");
+            }
+            Ok(ServeRequest::Publish { generation, snapshot })
+        }
         _ => Ok(ServeRequest::Other(ServeMessage::decode(frame)?)),
     }
 }
 
 /// Per-frame allocation cap for a server reading *client requests*, keyed
-/// on the first two payload bytes (version, tag). Only the two bulk verbs
-/// may fill the full [`MAX_FRAME`]; every other request — including
+/// on the first two payload bytes (version, tag). Only the two bulk point
+/// verbs may fill the full [`MAX_FRAME`]; a snapshot publish gets the
+/// intermediate [`MAX_REPLICATION_FRAME`]; every other request — including
 /// unknown tags and wrong-version garbage — is capped at
 /// [`MAX_SESSIONLESS_FRAME`] before its payload is ever buffered.
 pub fn serve_request_frame_cap(head: &[u8]) -> usize {
     match head {
         [SERVE_PROTO_VERSION, TAG_PREDICT] | [SERVE_PROTO_VERSION, TAG_INGEST] => MAX_FRAME,
+        [SERVE_PROTO_VERSION, TAG_SNAPSHOT_PUBLISH] => MAX_REPLICATION_FRAME,
         _ => MAX_SESSIONLESS_FRAME,
     }
 }
@@ -535,6 +617,10 @@ mod tests {
                 workers_dead: 1,
                 degraded: 1,
                 halted: 0,
+                role: ROLE_REPLICA,
+                replicas: 0,
+                staleness: 2,
+                snapshot_age_secs: 0.75,
             },
             ServeMessage::Ingest { n: 2, d: 3, x: vec![0.5; 6] },
             ServeMessage::Ingest { n: 0, d: 8, x: vec![] },
@@ -545,6 +631,9 @@ mod tests {
             ServeMessage::Metrics,
             ServeMessage::MetricsReply(String::new()),
             ServeMessage::MetricsReply("# TYPE dpmm_serve_requests_total counter\n".into()),
+            ServeMessage::SnapshotPublish { generation: 7, snapshot: vec![0xD7; 33] },
+            ServeMessage::SnapshotPublish { generation: 0, snapshot: vec![] },
+            ServeMessage::PublishAck { generation: 7 },
         ] {
             let enc = msg.encode();
             assert_eq!(ServeMessage::decode(&enc).unwrap(), msg, "{msg:?}");
@@ -671,16 +760,44 @@ mod tests {
         let ingest = [SERVE_PROTO_VERSION, 10]; // Ingest
         assert_eq!(serve_request_frame_cap(&bulk), MAX_FRAME);
         assert_eq!(serve_request_frame_cap(&ingest), MAX_FRAME);
+        // Snapshot publishes get their own intermediate cap.
+        let publish = [SERVE_PROTO_VERSION, 14]; // SnapshotPublish
+        assert_eq!(serve_request_frame_cap(&publish), MAX_REPLICATION_FRAME);
+        assert!(MAX_REPLICATION_FRAME < MAX_FRAME);
         for head in [
             &[SERVE_PROTO_VERSION, 3][..], // Info
             &[SERVE_PROTO_VERSION, 12],    // Metrics
+            &[SERVE_PROTO_VERSION, 15],    // PublishAck (a reply, never a request)
             &[SERVE_PROTO_VERSION, 99],    // unknown tag
-            &[7, 1],                       // wrong version byte
+            &[9, 1],                       // wrong version byte
+            &[9, 14],                      // wrong version byte on a publish
             &[SERVE_PROTO_VERSION],        // single-byte frame
             &[],                           // empty frame
         ] {
             assert_eq!(serve_request_frame_cap(head), MAX_SESSIONLESS_FRAME, "{head:?}");
         }
+    }
+
+    #[test]
+    fn zero_copy_publish_decode_borrows_frame() {
+        let payload: Vec<u8> = (0..=255u8).cycle().take(1024).collect();
+        let msg = ServeMessage::SnapshotPublish { generation: 42, snapshot: payload.clone() };
+        let frame = msg.encode();
+        match decode_request(&frame).unwrap() {
+            ServeRequest::Publish { generation, snapshot } => {
+                assert_eq!(generation, 42);
+                assert_eq!(snapshot, &payload[..]);
+            }
+            other => panic!("expected Publish view, got {other:?}"),
+        }
+        // Truncated payload (declared length runs past the frame) rejected.
+        let mut truncated = frame.clone();
+        truncated.truncate(frame.len() - 100);
+        assert!(decode_request(&truncated).is_err());
+        // Trailing bytes after the declared run rejected.
+        let mut trailing = frame;
+        trailing.push(0);
+        assert!(decode_request(&trailing).is_err());
     }
 
     #[test]

@@ -121,6 +121,23 @@ cached!(serve_generation, Gauge, {
     super::gauge("dpmm_serve_generation", "Live snapshot generation (bumps per applied ingest).")
 });
 
+// --- replicated serving ---------------------------------------------------
+
+cached!(replica_staleness, Gauge, {
+    super::gauge(
+        "dpmm_replica_staleness_generations",
+        "Generations offered by the leader but not yet live on this replica.",
+    )
+});
+
+cached!(replica_fanout_seconds, Histogram, {
+    super::histogram(
+        "dpmm_replica_fanout_seconds",
+        "Leader-side snapshot publish to replica ack, per replica per generation.",
+        PHASE_BOUNDS,
+    )
+});
+
 // --- streaming ingest ----------------------------------------------------
 
 cached!(ingest_points_total, Counter, {
@@ -228,6 +245,8 @@ pub fn register_defaults() {
     serve_queue_depth();
     serve_batch_points();
     serve_generation();
+    replica_staleness();
+    replica_fanout_seconds();
     ingest_points_total();
     ingest_apply_seconds();
     ingest_swap_lag_seconds();

@@ -1,0 +1,264 @@
+//! Replica-equivalence harness — the `dpmm stream --replicas` acceptance
+//! demo: stand up an in-process leader + 3 read replicas, ingest
+//! mini-batches on the leader while predict traffic hammers the replicas,
+//! and pin the replication contract: every replica answers **bitwise
+//! identically** to the leader at matching generations, `/stats` staleness
+//! converges to 0 between ingests, and killing the leader leaves every
+//! replica serving the last published generation with zero errored
+//! predicts.
+
+use dpmm::config::{BackendChoice, DpmmParams};
+use dpmm::coordinator::DpmmFit;
+use dpmm::datagen::{Data, Dataset};
+use dpmm::prelude::*;
+use dpmm::serve::{
+    EngineConfig, Prediction, ReplicaSetClient, ReplicatedFleet, ServeConfig, ServeStats,
+    ROLE_LEADER, ROLE_REPLICA,
+};
+use dpmm::stream::{IncrementalFitter, StreamConfig};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dpmm_replica_{name}_{}.bin", std::process::id()))
+}
+
+/// Fit a small GMM with a final-iteration checkpoint; return the snapshot
+/// plus a held-out stream drawn from the same mixture.
+fn fit_snapshot(name: &str, n: usize, n_stream: usize) -> (ModelSnapshot, Dataset) {
+    let d = 2;
+    let mut rng = Xoshiro256pp::seed_from_u64(23);
+    let all = GmmSpec::default_with(n + n_stream, d, 3).generate(&mut rng);
+    let train = Data::new(n, d, all.points.values[..n * d].to_vec());
+    let stream = Dataset {
+        points: Data::new(n_stream, d, all.points.values[n * d..].to_vec()),
+        labels: all.labels[n..].to_vec(),
+        true_k: all.true_k,
+    };
+    let ckpt_path = tmp(name);
+    let mut params = DpmmParams::gaussian_default(d);
+    params.iterations = 40;
+    params.seed = 17;
+    params.backend = BackendChoice::Native { threads: 2, shard_size: 2048 };
+    params.checkpoint_path = Some(ckpt_path.to_string_lossy().into_owned());
+    params.checkpoint_every = params.iterations;
+    let fit = DpmmFit::new(params).fit(&train).unwrap();
+    assert!(fit.num_clusters() >= 2, "fit collapsed to K={}", fit.num_clusters());
+    let snapshot = ModelSnapshot::from_checkpoint_file(&ckpt_path).unwrap();
+    std::fs::remove_file(&ckpt_path).ok();
+    (snapshot, stream)
+}
+
+fn fleet(snapshot: &ModelSnapshot, n_replicas: usize) -> ReplicatedFleet {
+    let fitter = IncrementalFitter::from_snapshot(
+        snapshot,
+        StreamConfig {
+            window: 2048,
+            sweeps: 1,
+            threads: 2,
+            alpha: 10.0,
+            seed: 77,
+            ..StreamConfig::default()
+        },
+    )
+    .unwrap();
+    ReplicatedFleet::start(
+        snapshot,
+        fitter,
+        n_replicas,
+        EngineConfig::default(),
+        ServeConfig::default(),
+    )
+    .unwrap()
+}
+
+/// Poll one replica until it has applied `generation` with zero pending
+/// staleness (the "converges between ingests" contract).
+fn wait_caught_up(client: &mut DpmmClient, generation: u64) -> ServeStats {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let stats = client.stats().unwrap();
+        if stats.generation >= generation && stats.staleness == 0 {
+            return stats;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "replica stuck at generation {} (staleness {}) waiting for {generation}",
+            stats.generation,
+            stats.staleness,
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Bitwise comparison of two predictions (labels exact; every float
+/// compared by bit pattern, not tolerance).
+fn assert_bitwise_equal(leader: &Prediction, replica: &Prediction, what: &str) {
+    assert_eq!(leader.k, replica.k, "{what}: cluster count differs");
+    assert_eq!(leader.labels, replica.labels, "{what}: MAP labels differ");
+    let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&leader.map_score), bits(&replica.map_score), "{what}: map_score bits");
+    assert_eq!(
+        bits(&leader.log_predictive),
+        bits(&replica.log_predictive),
+        "{what}: log_predictive bits"
+    );
+    match (&leader.log_probs, &replica.log_probs) {
+        (Some(a), Some(b)) => assert_eq!(bits(a), bits(b), "{what}: log_probs bits"),
+        (a, b) => assert_eq!(a.is_some(), b.is_some(), "{what}: log_probs presence"),
+    }
+}
+
+#[test]
+fn replicas_answer_bitwise_identically_and_survive_leader_death() {
+    let (snapshot, stream) = fit_snapshot("e2e", 2500, 1400);
+    let d = 2usize;
+    let mut fleet = fleet(&snapshot, 3);
+    let leader_addr = fleet.leader_addr().to_string();
+    let replica_addrs: Vec<String> =
+        fleet.replica_addrs().iter().map(|a| a.to_string()).collect();
+
+    // Roles and fan-out width surface in /stats from the first request.
+    let mut leader = DpmmClient::connect(&leader_addr).unwrap();
+    let ls = leader.stats().unwrap();
+    assert_eq!(ls.role, ROLE_LEADER);
+    assert_eq!(ls.replicas, 3);
+    let mut replica_clients: Vec<DpmmClient> =
+        replica_addrs.iter().map(|a| DpmmClient::connect(a).unwrap()).collect();
+    for c in &mut replica_clients {
+        let rs = c.stats().unwrap();
+        assert_eq!(rs.role, ROLE_REPLICA);
+        assert_eq!(rs.replicas, 0);
+    }
+
+    // The boot publish converges stale-free before any ingest: replicas
+    // adopt the leader's generation 1 with zero staleness.
+    for c in &mut replica_clients {
+        wait_caught_up(c, 1);
+    }
+
+    // Concurrent phase: 10 ingest batches of 100 points on the leader
+    // while two clients hammer the replica set round-robin. Replication
+    // swaps must drop zero predicts.
+    let batches = 10usize;
+    let per = 100usize;
+    let predict_pts = &stream.points.values[batches * per * d..];
+    assert!(predict_pts.len() >= 200 * d);
+    let stop = AtomicBool::new(false);
+    let predict_ok = AtomicU64::new(0);
+    let predict_err = AtomicU64::new(0);
+    let mut last_generation = 0u64;
+    std::thread::scope(|scope| {
+        for c in 0..2usize {
+            let replica_addrs = &replica_addrs;
+            let stop = &stop;
+            let predict_ok = &predict_ok;
+            let predict_err = &predict_err;
+            scope.spawn(move || {
+                let mut set = ReplicaSetClient::new(replica_addrs).unwrap();
+                let chunk = 50 * d;
+                let slots = predict_pts.len() / chunk;
+                let mut turn = c;
+                while !stop.load(Ordering::Relaxed) {
+                    let lo = (turn % slots) * chunk;
+                    match set.predict(&predict_pts[lo..lo + chunk], d) {
+                        Ok(p) => {
+                            assert_eq!(p.labels.len(), 50);
+                            predict_ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            predict_err.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    turn += 1;
+                }
+            });
+        }
+        let mut ingest = DpmmClient::connect(&leader_addr).unwrap();
+        for b in 0..batches {
+            let lo = b * per * d;
+            let receipt =
+                ingest.ingest(&stream.points.values[lo..lo + per * d], d).unwrap();
+            assert_eq!(receipt.accepted, per as u64);
+            last_generation = receipt.generation;
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert_eq!(last_generation, 1 + batches as u64);
+    assert_eq!(
+        predict_err.load(Ordering::Relaxed),
+        0,
+        "replica predicts errored during publish hot-swaps"
+    );
+    assert!(predict_ok.load(Ordering::Relaxed) > 0, "no replica predicts completed");
+
+    // Quiesced: every replica reaches the leader's final generation with
+    // staleness 0, and answers bitwise-identically to the leader.
+    for c in &mut replica_clients {
+        let stats = wait_caught_up(c, last_generation);
+        assert_eq!(stats.generation, last_generation);
+    }
+    let eval = &predict_pts[..200 * d];
+    let from_leader = leader.predict_opts(eval, d, true).unwrap();
+    for (i, c) in replica_clients.iter_mut().enumerate() {
+        let from_replica = c.predict_opts(eval, d, true).unwrap();
+        assert_bitwise_equal(&from_leader, &from_replica, &format!("replica {i}"));
+    }
+
+    // Leader death: replicas keep serving the last published generation,
+    // and a fresh predict burst sees zero errors.
+    fleet.stop_leader().unwrap();
+    assert!(DpmmClient::connect(&leader_addr).is_err(), "leader should be down");
+    let mut set = ReplicaSetClient::new(&replica_addrs).unwrap();
+    for turn in 0..9 {
+        let lo = (turn % 4) * 50 * d;
+        let p = set.predict(&predict_pts[lo..lo + 50 * d], d).unwrap();
+        assert_eq!(p.labels.len(), 50);
+    }
+    for stats in set.stats_all() {
+        let stats = stats.expect("replica unreachable after leader death");
+        assert_eq!(stats.role, ROLE_REPLICA);
+        assert_eq!(
+            stats.generation, last_generation,
+            "replica fell off the last published generation"
+        );
+        assert_eq!(stats.staleness, 0);
+    }
+
+    // Sanity on quality: the final model still assigns the held-out slice
+    // sensibly when answered by a replica.
+    let p = set.predict(eval, d).unwrap();
+    let truth: Vec<usize> = stream.labels[batches * per..batches * per + 200].to_vec();
+    let labels: Vec<usize> = p.labels.iter().map(|&l| l as usize).collect();
+    let score = nmi(&truth, &labels);
+    assert!(score > 0.8, "replica-answered held-out NMI too low: {score}");
+
+    fleet.stop().unwrap();
+}
+
+#[test]
+fn publish_to_non_replica_is_rejected_typed() {
+    let (snapshot, _) = fit_snapshot("reject", 1200, 200);
+    let mut fleet = fleet(&snapshot, 1);
+    let mut leader = DpmmClient::connect(&fleet.leader_addr().to_string()).unwrap();
+    let bytes = snapshot.to_bytes().unwrap();
+    // A leader (or plain serve endpoint) is not a publish target: the verb
+    // answers a typed error and the connection stays usable.
+    let err = leader.publish_snapshot(7, &bytes).unwrap_err();
+    assert!(err.to_string().contains("not a replica"), "{err}");
+    assert!(leader.stats().is_ok(), "connection must survive the rejection");
+
+    // A corrupt payload against a real replica is also typed — and leaves
+    // the replica serving its previous snapshot.
+    let replica_addr = fleet.replica_addrs()[0].to_string();
+    let mut replica = DpmmClient::connect(&replica_addr).unwrap();
+    let mut corrupt = bytes.clone();
+    corrupt[0] ^= 0xFF; // break the DPMMSNAP magic — guaranteed typed rejection
+    let err = replica.publish_snapshot(9, &corrupt).unwrap_err();
+    assert!(err.to_string().contains("publish failed"), "{err}");
+    assert!(replica.predict(&[0.0, 0.0], 2).is_ok());
+    assert_eq!(replica.stats().unwrap().generation, 1);
+
+    fleet.stop_leader().unwrap();
+    fleet.stop().unwrap();
+}

@@ -1,0 +1,185 @@
+//! Property tests for the replication codec: the `SnapshotPublish`
+//! payload is the `DPMMSNAP` byte stream, so the replication contract is
+//! exactly "publish → receive is the identity". Pinned here:
+//!
+//! * `to_bytes` → `from_bytes` is a **fixed point**: once weights are
+//!   normalized, decode(encode(s)) == s (PartialEq over every accumulator
+//!   value) and the re-encoded bytes are byte-identical — for NIW and
+//!   DirMult families, across dimensions and cluster counts including the
+//!   K = 1 edge;
+//! * a received snapshot scores **bitwise-identically** to the one the
+//!   leader published (the engine is deterministic in its inputs, so byte
+//!   equality of the payload is prediction equality on the replica);
+//! * corrupt payloads — zero clusters, non-positive weights, truncations,
+//!   trailing bytes, bad magic — are rejected with typed errors, never a
+//!   panic (a hostile publish must not kill a replica's serve loop).
+//!
+//! Randomness is a seeded Xoshiro stream — deterministic, reproducible,
+//! no external property-testing crate needed.
+
+use dpmm::rng::{Rng, Xoshiro256pp};
+use dpmm::serve::{EngineConfig, ModelSnapshot, ScoringEngine, SnapshotCluster};
+use dpmm::stats::{DirMultPrior, NiwPrior, Prior};
+
+/// A synthetic snapshot with `k` warmed clusters (weights proportional to
+/// their point counts, as the fit-path exporter produces).
+fn synth_snapshot(rng: &mut Xoshiro256pp, prior: Prior, k: usize, scale: f64) -> ModelSnapshot {
+    let d = prior.dim();
+    let mut clusters = Vec::with_capacity(k);
+    let mut n_total = 0u64;
+    for c in 0..k {
+        let mut stats = prior.empty_stats();
+        let points = 3 + c * 5 + rng.next_range(9);
+        for _ in 0..points {
+            let x: Vec<f64> = (0..d)
+                .map(|_| match prior {
+                    Prior::Niw(_) => (rng.next_f64() - 0.5) * 2.0 * scale,
+                    Prior::DirMult(_) => rng.next_range(14) as f64,
+                })
+                .collect();
+            stats.add(&x);
+        }
+        n_total += points as u64;
+        clusters.push(SnapshotCluster { weight: stats.count(), stats });
+    }
+    ModelSnapshot { prior, n_total, clusters }
+}
+
+/// Normalize a freshly synthesized snapshot through one decode so weight
+/// normalization has happened; every later round-trip must be an exact
+/// fixed point of this canonical form.
+fn canonicalize(s: &ModelSnapshot) -> ModelSnapshot {
+    ModelSnapshot::from_bytes(&s.to_bytes().unwrap()).unwrap()
+}
+
+fn assert_fixed_point(canonical: &ModelSnapshot, ctx: &str) {
+    let bytes = canonical.to_bytes().unwrap();
+    let decoded = ModelSnapshot::from_bytes(&bytes).unwrap();
+    assert_eq!(&decoded, canonical, "{ctx}: decode(encode) must be the identity");
+    let re_encoded = decoded.to_bytes().unwrap();
+    assert_eq!(re_encoded, bytes, "{ctx}: re-encoded payload must be byte-identical");
+}
+
+#[test]
+fn niw_publish_roundtrip_is_identity() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0061);
+    for &d in &[1usize, 2, 3, 8] {
+        for &k in &[1usize, 2, 5, 17] {
+            for &scale in &[1.0f64, 1e-3, 1e4] {
+                let s = synth_snapshot(&mut rng, Prior::Niw(NiwPrior::weak(d)), k, scale);
+                let canonical = canonicalize(&s);
+                assert_eq!(canonical.k(), k);
+                assert_eq!(canonical.dim(), d);
+                assert_fixed_point(&canonical, &format!("niw d={d} K={k} scale={scale}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn dirmult_publish_roundtrip_is_identity() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0062);
+    for &d in &[2usize, 4, 16] {
+        for &k in &[1usize, 3, 9] {
+            let s = synth_snapshot(
+                &mut rng,
+                Prior::DirMult(DirMultPrior::symmetric(d, 0.5)),
+                k,
+                1.0,
+            );
+            let canonical = canonicalize(&s);
+            assert_fixed_point(&canonical, &format!("dirmult d={d} K={k}"));
+        }
+    }
+}
+
+#[test]
+fn received_snapshot_scores_bitwise_identically() {
+    // The replication determinism contract end to end at the codec level:
+    // an engine planned from the received payload produces bit-for-bit the
+    // leader's labels, MAP scores, predictive densities, and membership
+    // log-probabilities.
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0063);
+    for (prior, scale) in [
+        (Prior::Niw(NiwPrior::weak(3)), 2.0),
+        (Prior::DirMult(DirMultPrior::symmetric(6, 1.0)), 1.0),
+    ] {
+        let d = prior.dim();
+        let is_counts = matches!(prior, Prior::DirMult(_));
+        let published = canonicalize(&synth_snapshot(&mut rng, prior, 4, scale));
+        let received = ModelSnapshot::from_bytes(&published.to_bytes().unwrap()).unwrap();
+        let leader = ScoringEngine::new(&published, EngineConfig::default()).unwrap();
+        let replica = ScoringEngine::new(&received, EngineConfig::default()).unwrap();
+        let n = 64usize;
+        let points: Vec<f64> = (0..n * d)
+            .map(|_| {
+                if is_counts {
+                    rng.next_range(10) as f64
+                } else {
+                    (rng.next_f64() - 0.5) * 4.0
+                }
+            })
+            .collect();
+        let a = leader.score(&points, true).unwrap();
+        let b = replica.score(&points, true).unwrap();
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(bits(&a.map_score), bits(&b.map_score));
+        assert_eq!(bits(&a.log_predictive), bits(&b.log_predictive));
+        assert_eq!(
+            bits(a.log_probs.as_deref().unwrap()),
+            bits(b.log_probs.as_deref().unwrap()),
+        );
+    }
+}
+
+#[test]
+fn empty_and_degenerate_payloads_are_rejected_typed() {
+    // K = 0: write_to doesn't validate (the exporter never produces it),
+    // so an empty-cluster payload can exist on a hostile wire — the
+    // decoder must reject it before anything downstream divides by K.
+    let empty = ModelSnapshot {
+        prior: Prior::Niw(NiwPrior::weak(2)),
+        n_total: 0,
+        clusters: Vec::new(),
+    };
+    let err = ModelSnapshot::from_bytes(&empty.to_bytes().unwrap()).unwrap_err();
+    assert!(err.to_string().contains("implausible cluster count"), "{err}");
+
+    // A zero-weight (empty) cluster is typed too.
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0064);
+    let prior = Prior::Niw(NiwPrior::weak(2));
+    let mut s = synth_snapshot(&mut rng, prior.clone(), 2, 1.0);
+    s.clusters[1] = SnapshotCluster { stats: prior.empty_stats(), weight: 0.0 };
+    let err = ModelSnapshot::from_bytes(&s.to_bytes().unwrap()).unwrap_err();
+    assert!(err.to_string().contains("non-positive weight"), "{err}");
+}
+
+#[test]
+fn corrupt_payloads_never_panic() {
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED_0065);
+    let canonical = canonicalize(&synth_snapshot(&mut rng, Prior::Niw(NiwPrior::weak(2)), 3, 1.0));
+    let bytes = canonical.to_bytes().unwrap();
+
+    // Every truncation point decodes to a typed error.
+    for cut in [0, 1, 7, 8, 9, 17, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            ModelSnapshot::from_bytes(&bytes[..cut]).is_err(),
+            "truncation at {cut} must be rejected"
+        );
+    }
+    // Trailing bytes are rejected (a wire payload is consumed exactly).
+    let mut padded = bytes.clone();
+    padded.push(0);
+    let err = ModelSnapshot::from_bytes(&padded).unwrap_err();
+    assert!(err.to_string().contains("trailing"), "{err}");
+    // Bad magic and bad version.
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    let err = ModelSnapshot::from_bytes(&bad).unwrap_err();
+    assert!(err.to_string().contains("bad magic"), "{err}");
+    let mut bad = bytes.clone();
+    bad[8] = 0xEE;
+    let err = ModelSnapshot::from_bytes(&bad).unwrap_err();
+    assert!(err.to_string().contains("unsupported snapshot version"), "{err}");
+}

@@ -16,9 +16,12 @@ use dpmm::backend::distributed::wire::{
 use dpmm::model::DpmmState;
 use dpmm::rng::{Rng, Xoshiro256pp};
 use dpmm::sampler::{MergeOp, SplitOp, StepParams};
-use dpmm::serve::wire::{ServeMessage, FLAG_LOG_PROBS};
+use dpmm::serve::wire::{
+    serve_request_frame_cap, ServeMessage, FLAG_LOG_PROBS, MAX_REPLICATION_FRAME,
+};
 use dpmm::serve::{
-    spawn, spawn_streaming, DpmmClient, EngineConfig, ModelSnapshot, ScoringEngine, ServeConfig,
+    spawn, spawn_replica, spawn_streaming, DpmmClient, EngineConfig, ModelSnapshot, ScoringEngine,
+    ServeConfig,
 };
 use dpmm::stats::{DirMultPrior, NiwPrior, Prior};
 use dpmm::stream::{IncrementalFitter, StreamConfig};
@@ -60,12 +63,22 @@ fn serve_corpus() -> Vec<Vec<u8>> {
             workers_dead: 1,
             degraded: 1,
             halted: 0,
+            role: 2,
+            replicas: 4,
+            staleness: 5,
+            snapshot_age_secs: 1.5,
         },
         ServeMessage::Ingest { n: 2, d: 2, x: vec![0.25; 4] },
         ServeMessage::IngestReply { accepted: 2, generation: 3, window: 4 },
         ServeMessage::Shutdown,
         ServeMessage::Ack,
         ServeMessage::Error("boom".into()),
+        // v6 replication verbs: the publish body is an opaque `DPMMSNAP`
+        // byte stream, so the coverage here guards the frame/header layer;
+        // prop_replication.rs fuzzes the payload codec itself.
+        ServeMessage::SnapshotPublish { generation: 42, snapshot: vec![0xD7; 64] },
+        ServeMessage::SnapshotPublish { generation: 0, snapshot: vec![] },
+        ServeMessage::PublishAck { generation: 42 },
     ]
     .into_iter()
     .map(|m| m.encode())
@@ -282,6 +295,41 @@ fn sessionless_caps_reject_before_any_payload() {
 }
 
 #[test]
+fn replication_cap_is_per_verb_and_rejects_before_any_payload() {
+    // The publish verb carries whole model snapshots, so it gets its own
+    // 256 MiB budget — but that budget must not leak onto any other verb,
+    // and an over-budget claim must die at the cap check with zero payload
+    // bytes buffered.
+    let publish =
+        ServeMessage::SnapshotPublish { generation: 1, snapshot: vec![1, 2, 3] }.encode();
+    let ack = ServeMessage::PublishAck { generation: 1 }.encode();
+    let info = ServeMessage::Info.encode();
+    assert_eq!(serve_request_frame_cap(&publish), MAX_REPLICATION_FRAME);
+    // PublishAck is a reply, never a request: held to the sessionless cap
+    // like every other non-bulk head. Same for Info.
+    assert_eq!(serve_request_frame_cap(&ack), MAX_SESSIONLESS_FRAME);
+    assert_eq!(serve_request_frame_cap(&info), MAX_SESSIONLESS_FRAME);
+
+    let mut buf = Vec::new();
+    // Over the replication cap: refused at the cap check. The stream holds
+    // zero payload bytes, so reaching the payload read would surface as
+    // EOF instead — the error message proves which check fired.
+    let mut r = claim_only(MAX_REPLICATION_FRAME + 1, &publish);
+    let err = read_frame_capped_into(&mut r, &mut buf, serve_request_frame_cap).unwrap_err();
+    assert!(err.to_string().contains("too large for this session state"), "{err}");
+    // Exactly at the cap passes the check and only then fails on the
+    // missing payload (EOF, not the cap).
+    let mut r = claim_only(MAX_REPLICATION_FRAME, &publish);
+    let err = read_frame_capped_into(&mut r, &mut buf, serve_request_frame_cap).unwrap_err();
+    assert!(!err.to_string().contains("too large"), "{err}");
+    // The replication budget must not leak: the same oversized claim on a
+    // non-publish head dies at the sessionless cap.
+    let mut r = claim_only(MAX_SESSIONLESS_FRAME + 1, &ack);
+    let err = read_frame_capped_into(&mut r, &mut buf, serve_request_frame_cap).unwrap_err();
+    assert!(err.to_string().contains("too large"), "{err}");
+}
+
+#[test]
 fn chunked_reads_reuse_the_buffer_and_handle_any_size() {
     // One frame spanning multiple read chunks (> 1 MiB), then tiny and
     // empty frames through the same buffer: contents exact, length exact.
@@ -448,5 +496,59 @@ fn ingest_on_plain_serve_is_a_typed_error() {
     let stats = client.stats().unwrap();
     assert_eq!(stats.generation, 1);
     assert_eq!(stats.ingest_pending, 0);
+    server.stop().unwrap();
+}
+
+#[test]
+fn corrupt_publish_frames_do_not_kill_the_replica() {
+    let snap = small_snapshot();
+    let engine = ScoringEngine::new(&snap, EngineConfig::default()).unwrap();
+    let server = spawn_replica(engine, "127.0.0.1:0", ServeConfig::default()).unwrap();
+    let addr = server.addr().to_string();
+
+    // (a) A publish head claiming more than the 256 MiB replication cap:
+    // the replica must drop the connection at the cap check instead of
+    // buffering (or waiting for) a quarter-gigabyte that never arrives.
+    {
+        use std::io::Read as _;
+        let head = ServeMessage::SnapshotPublish { generation: 0, snapshot: vec![] }.encode();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&((MAX_REPLICATION_FRAME + 1) as u32).to_le_bytes()).unwrap();
+        s.write_all(&head[..2]).unwrap();
+        s.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+        let mut byte = [0u8; 1];
+        assert_eq!(s.read(&mut byte).unwrap(), 0, "expected EOF, got a reply byte");
+    }
+
+    // (b) A real publish frame cut in half mid-payload, then the peer dies.
+    {
+        let msg =
+            ServeMessage::SnapshotPublish { generation: 2, snapshot: snap.to_bytes().unwrap() };
+        let mut frame = Vec::new();
+        dpmm::serve::wire::write_serve(&mut frame, &msg).unwrap();
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&frame[..frame.len() / 2]).unwrap();
+    }
+
+    // (c) A complete, well-framed publish whose DPMMSNAP body is
+    // bit-flipped garbage: typed Error reply, connection survives, and the
+    // replica keeps serving its previous snapshot.
+    let mut client = DpmmClient::connect(&addr).unwrap();
+    let mut corrupt = snap.to_bytes().unwrap();
+    corrupt[0] ^= 0xFF; // break the magic — guaranteed rejection in the decoder
+    let err = client.publish_snapshot(3, &corrupt).unwrap_err();
+    assert!(err.to_string().contains("publish failed"), "{err}");
+    assert_eq!(client.stats().unwrap().generation, 1, "corrupt publish must not go live");
+    assert!(client.predict(&[0.0, 0.0], 2).is_ok());
+
+    // After all of that, a valid publish on the same connection still
+    // applies and the hot-swap is visible in /stats.
+    let acked = client.publish_snapshot(3, &snap.to_bytes().unwrap()).unwrap();
+    assert_eq!(acked, 3);
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.generation, 3);
+    assert_eq!(stats.staleness, 0);
+    let pred = client.predict(&[-5.0, 0.0], 2).unwrap();
+    assert_eq!(pred.labels.len(), 1);
     server.stop().unwrap();
 }

@@ -4,9 +4,12 @@
 //! the empirical scaling exponents, plus substrate micro-benchmarks
 //! (Cholesky, RNG) that bound the coordinator-side O(K·d³) work.
 //!
-//! The d sweep runs both assignment kernels — the tiled whitened-GEMM
-//! production path and the scalar correctness oracle — and reports the
-//! speedup (target: ≥2× single-thread at d=16/32; see EXPERIMENTS.md §Perf).
+//! The d sweep runs all three executors behind the `Executor` seam — the
+//! scalar correctness oracle, the tiled whitened-GEMM production path, and
+//! the device-emulation executor (stream-per-shard staged pipeline) — and
+//! reports the speedups (target: ≥2× single-thread at d=16/32; see
+//! EXPERIMENTS.md §Perf) plus the bitwise-equivalence flags the speedups
+//! are conditional on.
 //!
 //! Everything is also written as machine-readable JSON to
 //! `BENCH_hotpath.json` (override with `BENCH_HOTPATH_OUT`) so the perf
@@ -83,6 +86,38 @@ fn simd_labels_match(n: usize, d: usize, k: usize) -> bool {
     scalar == simd
 }
 
+/// One sweep through each executor (scalar oracle, tiled, device-emu) over
+/// the lowered [`ScoreGraph`]: returns (labels bitwise-identical across all
+/// three, device sufficient statistics bitwise-identical to the scalar
+/// oracle's). These are the flags the three-way speedups are conditional
+/// on; the conformance suite pins them, the bench re-verifies and records
+/// them next to the numbers.
+fn executor_equivalence(n: usize, d: usize, k: usize) -> (bool, bool) {
+    use dpmm::backend::executor::{DeviceEmuExecutor, Executor, ScalarExecutor, TiledExecutor};
+    use dpmm::backend::shard::Shard;
+    use dpmm::sampler::ScoreGraph;
+    let mut rng = Xoshiro256pp::seed_from_u64((n + d * 7 + k * 13) as u64);
+    let ds = GmmSpec::default_with(n, d, k).generate(&mut rng);
+    let prior = Prior::Niw(dpmm::stats::NiwPrior::weak(d));
+    let mut state = DpmmState::new(10.0, prior.clone(), k, n, &mut rng);
+    let opts = SamplerOptions::default();
+    sample_weights(&mut state, &mut rng);
+    sample_sub_weights(&mut state, &mut rng);
+    sample_params(&mut state, &opts, &mut rng);
+    let graph = ScoreGraph::lower(&StepParams::snapshot(&state).plan());
+    let run = |exec: &dyn Executor| {
+        let mut shard = Shard::new(0..n, Xoshiro256pp::seed_from_u64(17));
+        let bundle = exec.execute(&graph, &ds.points, &mut shard, &prior);
+        (shard.z, shard.zsub, bundle)
+    };
+    let (sz, szs, sb) = run(&ScalarExecutor);
+    let (tz, tzs, _tb) = run(&TiledExecutor { tile: 128 });
+    let (dz, dzs, db) = run(&DeviceEmuExecutor::default());
+    let labels = sz == tz && szs == tzs && sz == dz && szs == dzs;
+    let device_stats = sb.sub_stats == db.sub_stats;
+    (labels, device_stats)
+}
+
 fn fit_exponent(xs: &[f64], ys: &[f64]) -> f64 {
     // least squares on log-log
     let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
@@ -128,11 +163,11 @@ fn main() {
     );
     println!("  exponent ~ K^{k_exp:.2} (paper: 1.0)\n");
 
-    // d scaling (N=40k, K=8), three legs: scalar oracle, tiled with the
-    // portable scalar bodies, tiled with the explicit-SIMD bodies. T = d²
-    // per paper; the SIMD leg targets ≥1.5× over scalar-body tiled at
-    // d=16/32 with bitwise-identical labels (checked below, recorded in
-    // the JSON).
+    // d scaling (N=40k, K=8), four legs through the Executor seam: scalar
+    // oracle, tiled with the portable scalar bodies, tiled with the
+    // explicit-SIMD bodies, and the device-emulation executor. T = d² per
+    // paper; the SIMD leg targets ≥1.5× over scalar-body tiled at d=16/32
+    // with bitwise-identical labels (checked below, recorded in the JSON).
     let dims = [4usize, 8, 16, 32];
     let simd_available = dpmm::linalg::set_simd_enabled(true);
     dpmm::linalg::set_simd_enabled(false);
@@ -140,6 +175,10 @@ fn main() {
     let td_scalar: Vec<f64> = dims
         .iter()
         .map(|&d| step_time(40_000, d, 8, 1, AssignKernel::Scalar))
+        .collect();
+    let td_device: Vec<f64> = dims
+        .iter()
+        .map(|&d| step_time(40_000, d, 8, 1, AssignKernel::DeviceEmu))
         .collect();
     let td_simd: Vec<f64> = if simd_available {
         dpmm::linalg::set_simd_enabled(true);
@@ -150,18 +189,30 @@ fn main() {
         td.clone()
     };
     let labels_identical = dims.iter().all(|&d| simd_labels_match(40_000, d, 8));
+    let mut exec_labels_identical = true;
+    let mut device_stats_identical = true;
+    for &d in &dims {
+        let (labels, stats) = executor_equivalence(40_000, d, 8);
+        exec_labels_identical &= labels;
+        device_stats_identical &= stats;
+    }
     let speedup: Vec<f64> = td_scalar.iter().zip(&td).map(|(s, t)| s / t).collect();
     let simd_speedup: Vec<f64> = td.iter().zip(&td_simd).map(|(t, s)| t / s).collect();
+    let device_vs_tiled: Vec<f64> = td.iter().zip(&td_device).map(|(t, v)| t / v).collect();
     let d_exp = fit_exponent(&dims.iter().map(|&x| x as f64).collect::<Vec<_>>(), &td);
     let simd_body = if simd_available { "avx2" } else { "scalar (no AVX2)" };
-    println!("d sweep (N=40k, K=8), scalar oracle vs tiled vs tiled+SIMD ({simd_body}):");
+    println!("d sweep (N=40k, K=8), scalar vs tiled vs tiled+SIMD ({simd_body}) vs device-emu:");
     for (i, &d) in dims.iter().enumerate() {
         println!(
-            "  d={d:<3} scalar {:.3}s  tiled {:.3}s ({:.2}x)  simd {:.3}s ({:.2}x vs tiled)",
-            td_scalar[i], td[i], speedup[i], td_simd[i], simd_speedup[i]
+            "  d={d:<3} scalar {:.3}s  tiled {:.3}s ({:.2}x)  simd {:.3}s ({:.2}x vs tiled)  \
+             device {:.3}s ({:.2}x vs tiled)",
+            td_scalar[i], td[i], speedup[i], td_simd[i], simd_speedup[i], td_device[i],
+            device_vs_tiled[i]
         );
     }
-    println!("  labels bitwise-identical across bodies: {labels_identical}");
+    println!("  labels bitwise-identical across SIMD bodies: {labels_identical}");
+    println!("  labels bitwise-identical across executors: {exec_labels_identical}");
+    println!("  device stats bitwise-identical to scalar oracle: {device_stats_identical}");
     println!("  exponent ~ d^{d_exp:.2} (paper: T = d², i.e. 2.0 asymptotically)\n");
 
     // Substrate micro-benches: coordinator-side O(K·d³).
@@ -210,10 +261,14 @@ fn main() {
                 ("tiled_s", Json::arr_f64(&td)),
                 ("scalar_s", Json::arr_f64(&td_scalar)),
                 ("simd_s", Json::arr_f64(&td_simd)),
+                ("device_s", Json::arr_f64(&td_device)),
                 ("speedup", Json::arr_f64(&speedup)),
                 ("simd_vs_tiled", Json::arr_f64(&simd_speedup)),
+                ("device_vs_tiled", Json::arr_f64(&device_vs_tiled)),
                 ("simd_body", simd_body.into()),
                 ("labels_bitwise_identical", labels_identical.into()),
+                ("exec_labels_bitwise_identical", exec_labels_identical.into()),
+                ("device_stats_bitwise_identical", device_stats_identical.into()),
                 ("exponent", d_exp.into()),
             ]),
         ),

@@ -1,19 +1,123 @@
 //! §4.2 kernel table: the paper ships two CUDA matmul kernels and
 //! auto-selects by the d×N matrix size (their measured crossover:
-//! d×N ≈ 640k on a Quadro RTX 4000). We mirror the mechanism with two
-//! Pallas log-likelihood kernels (`direct` quadratic-form vs `matmul` MXU
-//! contraction) and calibrate the crossover by timing the AOT artifacts
-//! through the PJRT runtime.
+//! d×N ≈ 640k on a Quadro RTX 4000). We mirror the mechanism at two
+//! levels:
 //!
-//! Run: `make artifacts && cargo bench --bench table_kernel_crossover`
+//! 1. **Native executors** (always runs): the `Executor` seam gives us the
+//!    same direct-vs-batched dichotomy on the code that actually runs —
+//!    the scalar oracle scores one point at a time (the paper's `direct`
+//!    quadratic-form kernel), while the tiled and device-emulation
+//!    executors batch points into panels for the whitened-GEMM contraction
+//!    (the paper's `matmul` kernel). Timing all three over a (d, n) grid
+//!    on the lowered [`ScoreGraph`] locates the d·N crossover for this
+//!    host, bounded below/above by the grid cells each side wins.
+//! 2. **AOT artifacts** (when present): the original Pallas `direct` vs
+//!    `matmul` log-likelihood kernels through the PJRT runtime, as before.
+//!
+//! Run: `cargo bench --bench table_kernel_crossover`
+//! (add `make artifacts` first for the PJRT leg)
 
 #[path = "support/mod.rs"]
 mod support;
 
-use dpmm::runtime::{HostTensor, XlaRuntime};
+use dpmm::backend::executor::{DeviceEmuExecutor, Executor, ScalarExecutor, TiledExecutor};
+use dpmm::backend::shard::{Shard, DEFAULT_TILE};
+use dpmm::datagen::{Data, GmmSpec};
+use dpmm::model::DpmmState;
 use dpmm::rng::{Rng, Xoshiro256pp};
+use dpmm::runtime::{HostTensor, XlaRuntime};
+use dpmm::sampler::{
+    sample_params, sample_sub_weights, sample_weights, SamplerOptions, ScoreGraph, StepParams,
+};
+use dpmm::stats::{NiwPrior, Prior};
 use support::have_artifacts;
 use std::time::Instant;
+
+/// Time one assignment sweep of `exec` over a fresh shard (mean of `reps`
+/// timed runs after one warmup). The shard RNG is re-seeded per run so
+/// every executor consumes an identical uniform stream.
+fn time_executor(
+    exec: &dyn Executor,
+    graph: &ScoreGraph,
+    data: &Data,
+    prior: &Prior,
+    reps: usize,
+) -> f64 {
+    let run = || {
+        let mut shard = Shard::new(0..data.n, Xoshiro256pp::seed_from_u64(17));
+        std::hint::black_box(exec.execute(graph, data, &mut shard, prior));
+    };
+    run(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        run();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Native crossover table: scalar (direct analog) vs tiled / device-emu
+/// (matmul analogs) over a (d, n) grid, through the lowered ScoreGraph.
+fn native_crossover() {
+    println!("§4.2 kernel-variant selection, native executors (paper crossover: d*N = 640k on GPU)");
+    println!(
+        "{:>4} {:>7} {:>9} {:>11} {:>11} {:>11} {:>8}",
+        "d", "n", "d*n", "scalar", "tiled", "device", "winner"
+    );
+    let k = 8;
+    let mut crossover_lo = 0usize;
+    let mut crossover_hi = usize::MAX;
+    for &d in &[2usize, 4, 8, 16, 32] {
+        for &n in &[2_000usize, 10_000, 40_000] {
+            let mut rng = Xoshiro256pp::seed_from_u64((n + d * 7 + k * 13) as u64);
+            let ds = GmmSpec::default_with(n, d, k).generate(&mut rng);
+            let prior = Prior::Niw(NiwPrior::weak(d));
+            let mut state = DpmmState::new(10.0, prior.clone(), k, n, &mut rng);
+            sample_weights(&mut state, &mut rng);
+            sample_sub_weights(&mut state, &mut rng);
+            sample_params(&mut state, &SamplerOptions::default(), &mut rng);
+            let graph = ScoreGraph::lower(&StepParams::snapshot(&state).plan());
+            let reps = if n * d >= 320_000 { 3 } else { 5 };
+            let ts = time_executor(&ScalarExecutor, &graph, &ds.points, &prior, reps);
+            let tt = time_executor(
+                &TiledExecutor { tile: DEFAULT_TILE },
+                &graph,
+                &ds.points,
+                &prior,
+                reps,
+            );
+            let tv = time_executor(&DeviceEmuExecutor::default(), &graph, &ds.points, &prior, reps);
+            let batched = tt.min(tv);
+            let winner = if ts < batched {
+                crossover_lo = crossover_lo.max(d * n);
+                "direct"
+            } else {
+                crossover_hi = crossover_hi.min(d * n);
+                "matmul"
+            };
+            println!(
+                "{:>4} {:>7} {:>9} {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>8}",
+                d,
+                n,
+                d * n,
+                ts * 1e3,
+                tt * 1e3,
+                tv * 1e3,
+                winner
+            );
+        }
+    }
+    if crossover_hi == usize::MAX {
+        println!("\ndirect (scalar) wins everywhere measured");
+    } else if crossover_lo == 0 {
+        println!("\nmatmul (tiled/device) wins everywhere measured");
+    } else {
+        println!(
+            "\nmeasured crossover between d*n = {crossover_lo} and {crossover_hi} \
+             (paper: 640k on GPU; set --crossover / backend.crossover accordingly)"
+        );
+    }
+    println!();
+}
 
 fn gaussian_inputs(rng: &mut Xoshiro256pp, n: usize, d: usize, k: usize) -> Vec<HostTensor> {
     let rnd = |rng: &mut Xoshiro256pp, len: usize, scale: f32| -> Vec<f32> {
@@ -50,14 +154,10 @@ fn gaussian_inputs(rng: &mut Xoshiro256pp, n: usize, d: usize, k: usize) -> Vec<
     ]
 }
 
-fn main() -> anyhow::Result<()> {
-    if !have_artifacts() {
-        println!("kernel crossover bench needs artifacts — run `make artifacts`");
-        return Ok(());
-    }
+fn artifact_crossover() -> anyhow::Result<()> {
     let mut rt = XlaRuntime::new("artifacts")?;
     let mut rng = Xoshiro256pp::seed_from_u64(42);
-    println!("§4.2 kernel-variant selection — paper crossover: d*N = 640k (Quadro RTX 4000)");
+    println!("§4.2 kernel-variant selection, AOT artifacts — paper crossover: d*N = 640k");
     println!(
         "{:>6} {:>7} {:>10} {:>12} {:>12} {:>8}",
         "d", "n", "d*n", "direct", "matmul", "winner"
@@ -107,6 +207,16 @@ fn main() -> anyhow::Result<()> {
             "\nmeasured crossover between d*n = {crossover_lo} and {crossover_hi} \
              (paper: 640k on GPU; set --crossover / backend.crossover accordingly)"
         );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    native_crossover();
+    if have_artifacts() {
+        artifact_crossover()?;
+    } else {
+        println!("(PJRT artifact leg skipped — run `make artifacts` to enable it)");
     }
     Ok(())
 }

@@ -379,6 +379,7 @@ fn handle(stream: &mut TcpStream, session: &mut Session, buf: &mut Vec<u8>) -> R
                 let kernel = match kernel {
                     0 => AssignKernel::from_env(),
                     1 => AssignKernel::Tiled,
+                    3 => AssignKernel::DeviceEmu,
                     _ => AssignKernel::Scalar,
                 };
                 *session = Session::Stream(StreamState {

@@ -1,0 +1,451 @@
+//! Pluggable executors for the kernel IR ([`ScoreGraph`]): the seam
+//! between *what* an assignment sweep computes (the graph's operand tables
+//! and staged program) and *how* it runs.
+//!
+//! Three implementations, all bound by the bitwise conformance contract
+//! pinned in `tests/prop_kernel_equiv.rs`:
+//!
+//! * [`ScalarExecutor`] — the one-point-at-a-time correctness oracle
+//!   ([`shard_step_scalar`]).
+//! * [`TiledExecutor`] — the production tiled/SIMD whitened-GEMM path
+//!   ([`shard_step_tiled`]), fusing the graph's stages per tile.
+//! * [`DeviceEmuExecutor`] — models the paper's multi-stream GPU
+//!   execution: launch blocks round-robin across stream queues, each
+//!   staged **upload** (transpose into a feature-major device buffer) →
+//!   **launch** (batched score panel + draws on the device buffer) →
+//!   **download** (label readback committed in block order), with the
+//!   statistics fold on the host. It proves the graph-lowering
+//!   architecture end-to-end before a real wgpu/CUDA/XLA runtime lands.
+//!
+//! Determinism: every executor consumes exactly two uniforms per point
+//! from the shard RNG in point order (cluster draw, then sub draw) and
+//! shares the bitwise score arithmetic of [`crate::linalg`], so label and
+//! sub-label sequences are identical across executors under a fixed seed.
+//! The device executor additionally folds statistics host-side with
+//! per-point adds in point order — the exact accumulator sequence of the
+//! scalar oracle — so its sufficient statistics are **bitwise**-identical
+//! to the oracle's (the tiled path agrees to FP rounding; see
+//! docs/DETERMINISM.md).
+
+use super::shard::{shard_step_scalar, shard_step_tiled, AssignKernel, Shard};
+use super::StatsBundle;
+use crate::datagen::Data;
+use crate::linalg::{dot_accumulate_tile, lower_affine_sqnorm, transpose_tile};
+use crate::model::{LEFT, RIGHT};
+use crate::rng::Rng;
+use crate::sampler::{KernelDesc, ScoreGraph, StepPlan};
+use crate::stats::Prior;
+
+/// A backend-pluggable engine that runs one [`ScoreGraph`] sweep over one
+/// shard: samples labels in place and returns the shard's statistics
+/// contribution.
+pub trait Executor: Send + Sync {
+    /// Executor name (logs, bench tables).
+    fn name(&self) -> &'static str;
+
+    /// Run steps (e)/(f) + the statistics pass for `shard` under `graph`.
+    fn execute(
+        &self,
+        graph: &ScoreGraph,
+        data: &Data,
+        shard: &mut Shard,
+        prior: &Prior,
+    ) -> StatsBundle;
+}
+
+/// Resolve the executor for an [`AssignKernel`] selection (`tile` is the
+/// tiled path's tile width; the device executor reads its stream/block
+/// geometry from `DPMM_DEVICE_STREAMS` / `DPMM_DEVICE_BLOCK`).
+pub fn executor_for(kernel: AssignKernel, tile: usize) -> Box<dyn Executor> {
+    match kernel {
+        AssignKernel::Tiled => Box::new(TiledExecutor { tile }),
+        AssignKernel::Scalar => Box::new(ScalarExecutor),
+        AssignKernel::DeviceEmu => Box::new(DeviceEmuExecutor::from_env()),
+    }
+}
+
+/// The one-point-at-a-time correctness oracle.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarExecutor;
+
+impl Executor for ScalarExecutor {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn execute(
+        &self,
+        graph: &ScoreGraph,
+        data: &Data,
+        shard: &mut Shard,
+        prior: &Prior,
+    ) -> StatsBundle {
+        shard_step_scalar(data, shard, &graph.plan, prior)
+    }
+}
+
+/// The production tiled/SIMD whitened-GEMM path.
+#[derive(Debug, Clone, Copy)]
+pub struct TiledExecutor {
+    /// Points per tile.
+    pub tile: usize,
+}
+
+impl Executor for TiledExecutor {
+    fn name(&self) -> &'static str {
+        "tiled"
+    }
+
+    fn execute(
+        &self,
+        graph: &ScoreGraph,
+        data: &Data,
+        shard: &mut Shard,
+        prior: &Prior,
+    ) -> StatsBundle {
+        shard_step_tiled(data, shard, &graph.plan, prior, self.tile)
+    }
+}
+
+/// Multi-stream device-emulation executor (see module docs). Stream count
+/// and block geometry are an execution choice only — results are
+/// invariant to both, because uniforms are pre-drawn host-side in point
+/// order and launch blocks are conditionally independent given the plan.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceEmuExecutor {
+    /// Concurrent device stream queues (launch blocks round-robin over
+    /// them; each runs on its own thread).
+    pub streams: usize,
+    /// Points per launch block (the emulated kernel-launch granularity).
+    pub block: usize,
+}
+
+impl Default for DeviceEmuExecutor {
+    fn default() -> Self {
+        Self { streams: 4, block: 256 }
+    }
+}
+
+impl DeviceEmuExecutor {
+    /// Geometry from `DPMM_DEVICE_STREAMS` / `DPMM_DEVICE_BLOCK`
+    /// (defaults 4 / 256; values must be ≥ 1). Pure speed knobs — never a
+    /// results change.
+    pub fn from_env() -> Self {
+        let parse = |var: &str, default: usize| -> usize {
+            match std::env::var(var) {
+                Ok(v) => match v.trim().parse::<usize>() {
+                    Ok(n) if n >= 1 => n,
+                    _ => {
+                        eprintln!("warning: unparsable {var}='{v}'; using {default}");
+                        default
+                    }
+                },
+                Err(_) => default,
+            }
+        };
+        Self { streams: parse("DPMM_DEVICE_STREAMS", 4), block: parse("DPMM_DEVICE_BLOCK", 256) }
+    }
+}
+
+/// Per-stream "device memory": panel scratch reused across the stream's
+/// launch queue (no per-block allocation after warmup). Mirrors the tiled
+/// kernel's `TileScratch` shape minus the uniform buffers (those are
+/// pre-drawn host-side for the whole shard).
+struct DeviceScratch {
+    /// Feature-major block buffer (the uploaded tile).
+    xt: Vec<f64>,
+    /// Column-major `[K × T]` score panel.
+    scores: Vec<f64>,
+    /// GEMM output row.
+    y: Vec<f64>,
+    /// Per-point reduction accumulator.
+    maha: Vec<f64>,
+    /// Block-local member indices per cluster.
+    members: Vec<Vec<u32>>,
+    /// Gathered member columns for the sub-cluster panels.
+    gather: Vec<f64>,
+    lw_l: Vec<f64>,
+    lw_r: Vec<f64>,
+}
+
+impl DeviceScratch {
+    fn new(k: usize, d: usize, block: usize) -> Self {
+        Self {
+            xt: vec![0.0; d * block],
+            scores: vec![0.0; k * block],
+            y: vec![0.0; block],
+            maha: vec![0.0; block],
+            members: (0..k).map(|_| Vec::with_capacity(block)).collect(),
+            gather: vec![0.0; d * block],
+            lw_l: vec![0.0; block],
+            lw_r: vec![0.0; block],
+        }
+    }
+}
+
+/// One emulated kernel launch: score the block's panel, draw labels and
+/// sub-labels with the pre-drawn uniforms, and write them to the
+/// block-local output buffers (the "device-resident" labels a download
+/// commits later). Score arithmetic is the same [`crate::linalg`] kernels
+/// the tiled path runs — bitwise-identical per-point results.
+#[allow(clippy::too_many_arguments)]
+fn launch_block(
+    data: &Data,
+    plan: &StepPlan,
+    base: usize,
+    m: usize,
+    u_cl: &[f64],
+    u_sub: &[f64],
+    scratch: &mut DeviceScratch,
+    z: &mut [u32],
+    zsub: &mut [u8],
+) {
+    let k = plan.k();
+    let d = plan.d;
+    let DeviceScratch { xt, scores, y, maha, members, gather, lw_l, lw_r } = scratch;
+    // Upload: host row-major → feature-major device layout.
+    transpose_tile(&data.values[base * d..(base + m) * d], d, m, xt);
+    // Score panel: one fused kernel per cluster row.
+    for (c, desc) in plan.clusters.iter().enumerate() {
+        match desc {
+            KernelDesc::Gauss { w, b, c: ck } => {
+                lower_affine_sqnorm(w, d, b, xt, m, y, maha);
+                for t in 0..m {
+                    scores[t * k + c] = ck - 0.5 * maha[t];
+                }
+            }
+            KernelDesc::Mult { log_theta, c: ck } => {
+                dot_accumulate_tile(log_theta, xt, m, maha);
+                for t in 0..m {
+                    scores[t * k + c] = ck + maha[t];
+                }
+            }
+        }
+    }
+    // Draw: stable exp-scan per point over its unit-stride panel column —
+    // identical arithmetic, and the same single uniform per point, as the
+    // tiled and scalar paths.
+    for t in 0..m {
+        let col = &mut scores[t * k..(t + 1) * k];
+        let mut best = f64::NEG_INFINITY;
+        for &lw in col.iter() {
+            if lw > best {
+                best = lw;
+            }
+        }
+        let mut total = 0.0;
+        for e in col.iter_mut() {
+            let gap = *e - best;
+            let v = if gap < -36.0 { 0.0 } else { gap.exp() };
+            *e = v;
+            total += v;
+        }
+        let mut tgt = u_cl[t] * total;
+        let mut zi = k - 1;
+        for (c, &e) in col.iter().enumerate() {
+            tgt -= e;
+            if tgt < 0.0 {
+                zi = c;
+                break;
+            }
+        }
+        z[t] = zi as u32;
+        members[zi].push(t as u32);
+    }
+    // Sub-panel + sub-draw, batched per cluster over member columns.
+    for (c, mem) in members.iter_mut().enumerate() {
+        if mem.is_empty() {
+            continue;
+        }
+        let mc = mem.len();
+        for i in 0..d {
+            let src = &xt[i * m..i * m + m];
+            let dst = &mut gather[i * mc..(i + 1) * mc];
+            for (g, &t) in dst.iter_mut().zip(mem.iter()) {
+                *g = src[t as usize];
+            }
+        }
+        for (h, out) in [(LEFT, &mut *lw_l), (RIGHT, &mut *lw_r)] {
+            match &plan.sub[c][h] {
+                KernelDesc::Gauss { w, b, c: ck } => {
+                    lower_affine_sqnorm(w, d, b, gather, mc, y, maha);
+                    for (o, &mh) in out[..mc].iter_mut().zip(maha.iter()) {
+                        *o = ck - 0.5 * mh;
+                    }
+                }
+                KernelDesc::Mult { log_theta, c: ck } => {
+                    dot_accumulate_tile(log_theta, gather, mc, maha);
+                    for (o, &acc) in out[..mc].iter_mut().zip(maha.iter()) {
+                        *o = ck + acc;
+                    }
+                }
+            }
+        }
+        for (idx, &t) in mem.iter().enumerate() {
+            // P(right) = 1 / (1 + exp(lw_l − lw_r))
+            let p_right = 1.0 / (1.0 + (lw_l[idx] - lw_r[idx]).exp());
+            zsub[t as usize] = u8::from(u_sub[t as usize] < p_right);
+        }
+        mem.clear();
+    }
+}
+
+impl Executor for DeviceEmuExecutor {
+    fn name(&self) -> &'static str {
+        "device-emu"
+    }
+
+    fn execute(
+        &self,
+        graph: &ScoreGraph,
+        data: &Data,
+        shard: &mut Shard,
+        prior: &Prior,
+    ) -> StatsBundle {
+        let plan = &graph.plan;
+        let k = plan.k();
+        let d = plan.d;
+        debug_assert_eq!(d, data.d);
+        let n = shard.len();
+        let block = self.block.max(1);
+        // Pre-draw every uniform host-side in scalar point order (cluster
+        // draw then sub draw, two per point): the shard RNG is consumed
+        // exactly as the scalar oracle consumes it, so label sequences
+        // stay bitwise-comparable across executors and are invariant to
+        // the stream/block geometry below.
+        let mut u_cl = vec![0.0; n];
+        let mut u_sub = vec![0.0; n];
+        for t in 0..n {
+            u_cl[t] = shard.rng.next_f64();
+            u_sub[t] = shard.rng.next_f64();
+        }
+        let n_blocks = n.div_ceil(block);
+        let streams = self.streams.clamp(1, n_blocks.max(1));
+        let start0 = shard.range.start;
+        let timing = crate::telemetry::enabled();
+        let t0 = std::time::Instant::now();
+        // Launch: stream s owns blocks s, s+S, s+2S, … Blocks are
+        // conditionally independent given the plan, so streams run
+        // concurrently; each stages upload → launch over its queue and
+        // keeps the labels in block-local buffers until download.
+        let u_cl = &u_cl;
+        let u_sub = &u_sub;
+        let results: Vec<Vec<(usize, Vec<u32>, Vec<u8>)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..streams)
+                .map(|stream| {
+                    scope.spawn(move || {
+                        let mut scratch = DeviceScratch::new(k, d, block);
+                        let mut outs = Vec::new();
+                        let mut blk = stream;
+                        while blk < n_blocks {
+                            let lo = blk * block;
+                            let m = block.min(n - lo);
+                            let mut z = vec![0u32; m];
+                            let mut zsub = vec![0u8; m];
+                            launch_block(
+                                data,
+                                plan,
+                                start0 + lo,
+                                m,
+                                &u_cl[lo..lo + m],
+                                &u_sub[lo..lo + m],
+                                &mut scratch,
+                                &mut z,
+                                &mut zsub,
+                            );
+                            outs.push((blk, z, zsub));
+                            blk += streams;
+                        }
+                        outs
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("device stream panicked")).collect()
+        });
+        if timing {
+            crate::telemetry::catalog::sweep_phase("device_launch")
+                .observe(t0.elapsed().as_secs_f64());
+        }
+        // Download: commit the label buffers in block order.
+        let t1 = std::time::Instant::now();
+        for stream_outs in &results {
+            for (blk, z, zsub) in stream_outs {
+                let lo = blk * block;
+                shard.z[lo..lo + z.len()].copy_from_slice(z);
+                shard.zsub[lo..lo + zsub.len()].copy_from_slice(zsub);
+            }
+        }
+        // Stats fold, host-side: per-point adds in point order — the
+        // scalar oracle's exact accumulator sequence, so the bundle is
+        // bitwise-identical to the oracle's (the acceptance contract of
+        // the conformance suite).
+        let mut bundle = StatsBundle::empty(prior, k);
+        for local in 0..n {
+            bundle.sub_stats[shard.z[local] as usize][shard.zsub[local] as usize]
+                .add(data.row(start0 + local));
+        }
+        if timing {
+            crate::telemetry::catalog::sweep_phase("stats_fold")
+                .observe(t1.elapsed().as_secs_f64());
+        }
+        bundle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::GmmSpec;
+    use crate::model::DpmmState;
+    use crate::rng::Xoshiro256pp;
+    use crate::sampler::{
+        sample_params, sample_sub_weights, sample_weights, SamplerOptions, StepParams,
+    };
+    use crate::stats::NiwPrior;
+
+    fn fixture(n: usize, d: usize, k: usize) -> (Data, Prior, ScoreGraph) {
+        let mut rng = Xoshiro256pp::seed_from_u64((n + d + k) as u64);
+        let ds = GmmSpec::default_with(n, d, k).generate(&mut rng);
+        let prior = Prior::Niw(NiwPrior::weak(d));
+        let mut state = DpmmState::new(5.0, prior.clone(), k, n, &mut rng);
+        sample_weights(&mut state, &mut rng);
+        sample_sub_weights(&mut state, &mut rng);
+        sample_params(&mut state, &SamplerOptions::default(), &mut rng);
+        let graph = ScoreGraph::lower(&StepParams::snapshot(&state).plan());
+        (ds.points, prior, graph)
+    }
+
+    #[test]
+    fn device_matches_scalar_bitwise_including_stats() {
+        let (data, prior, graph) = fixture(230, 3, 4);
+        let mut a = Shard::new(0..data.n, Xoshiro256pp::seed_from_u64(9));
+        let mut b = Shard::new(0..data.n, Xoshiro256pp::seed_from_u64(9));
+        let ba = ScalarExecutor.execute(&graph, &data, &mut a, &prior);
+        let bb = DeviceEmuExecutor { streams: 3, block: 64 }.execute(&graph, &data, &mut b, &prior);
+        assert_eq!(a.z, b.z);
+        assert_eq!(a.zsub, b.zsub);
+        assert_eq!(ba.sub_stats, bb.sub_stats, "device stats must be bitwise-scalar");
+    }
+
+    #[test]
+    fn device_results_invariant_to_stream_and_block_geometry() {
+        let (data, prior, graph) = fixture(157, 2, 3);
+        let run = |streams: usize, block: usize| {
+            let mut shard = Shard::new(0..data.n, Xoshiro256pp::seed_from_u64(4));
+            let bundle =
+                DeviceEmuExecutor { streams, block }.execute(&graph, &data, &mut shard, &prior);
+            (shard.z, shard.zsub, bundle.sub_stats)
+        };
+        let reference = run(1, 157);
+        for (streams, block) in [(1, 1), (2, 32), (4, 64), (8, 256)] {
+            assert_eq!(run(streams, block), reference, "streams={streams} block={block}");
+        }
+    }
+
+    #[test]
+    fn executor_for_maps_kernels() {
+        assert_eq!(executor_for(AssignKernel::Tiled, 128).name(), "tiled");
+        assert_eq!(executor_for(AssignKernel::Scalar, 128).name(), "scalar");
+        assert_eq!(executor_for(AssignKernel::DeviceEmu, 128).name(), "device-emu");
+    }
+}

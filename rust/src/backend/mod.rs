@@ -13,8 +13,15 @@
 //!   paper's CUDA/C++ package analog).
 //! * [`distributed`] — TCP leader/worker processes (the paper's
 //!   multi-machine Julia mode analog).
+//!
+//! Within a backend, the per-shard sweep itself runs through the
+//! [`executor`] seam: a [`crate::sampler::ScoreGraph`] kernel IR describes
+//! the sweep, and an [`executor::Executor`] (scalar oracle, tiled/SIMD,
+//! or multi-stream device emulation) executes it — all bound by the
+//! bitwise conformance suite in `tests/prop_kernel_equiv.rs`.
 
 pub mod distributed;
+pub mod executor;
 pub mod native;
 pub mod shard;
 pub mod xla;

@@ -4,14 +4,15 @@
 //! on the coordinator thread — a shared-memory version of the distributed
 //! suff-stats-only design.
 
+use super::executor::{executor_for, Executor};
 use super::shard::{
-    map_shards_mut, shard_apply_merges, shard_apply_splits, shard_remap, shard_step_scalar,
-    shard_step_tiled, AssignKernel, Shard, DEFAULT_TILE,
+    map_shards_mut, shard_apply_merges, shard_apply_splits, shard_remap, AssignKernel, Shard,
+    DEFAULT_TILE,
 };
 use super::{Backend, StatsBundle};
 use crate::datagen::Data;
 use crate::rng::Rng;
-use crate::sampler::{MergeOp, SplitOp, StepParams};
+use crate::sampler::{MergeOp, ScoreGraph, SplitOp, StepParams};
 use crate::stats::Prior;
 use crate::util::threadpool::default_threads;
 use anyhow::Result;
@@ -25,7 +26,8 @@ pub struct NativeConfig {
     /// Worker threads (defaults to core count / `DPMM_THREADS`).
     pub threads: usize,
     /// Assignment kernel (defaults to tiled; `DPMM_ASSIGN_KERNEL=scalar`
-    /// selects the one-point-at-a-time correctness oracle).
+    /// selects the one-point-at-a-time correctness oracle, `=device` the
+    /// multi-stream device-emulation executor).
     pub kernel: AssignKernel,
     /// Tile width for the tiled kernel (points per tile).
     pub tile: usize,
@@ -48,8 +50,9 @@ pub struct NativeBackend {
     prior: Prior,
     shards: Vec<Shard>,
     threads: usize,
-    kernel: AssignKernel,
-    tile: usize,
+    /// The pluggable sweep engine resolved from `NativeConfig::kernel`
+    /// (see [`crate::backend::executor`]).
+    executor: Box<dyn Executor>,
 }
 
 impl NativeBackend {
@@ -73,8 +76,7 @@ impl NativeBackend {
             prior,
             shards,
             threads: config.threads.max(1),
-            kernel: config.kernel,
-            tile: config.tile.max(1),
+            executor: executor_for(config.kernel, config.tile.max(1)),
         }
     }
 
@@ -112,15 +114,15 @@ impl Backend for NativeBackend {
 
     fn step(&mut self, params: &StepParams) -> Result<StatsBundle> {
         // Per-sweep precomputation: flatten the snapshot into kernel
-        // descriptors (W, b = W·μ, folded constants) once, shared read-only
-        // by every worker thread — never re-derived per shard or per point.
-        let plan = params.plan();
+        // descriptors (W, b = W·μ, folded constants) and lower to the
+        // staged kernel IR once, shared read-only by every worker thread —
+        // never re-derived per shard or per point.
+        let graph = ScoreGraph::lower(&params.plan());
         let data = Arc::clone(&self.data);
         let prior = self.prior.clone();
-        let (kernel, tile) = (self.kernel, self.tile);
-        let bundles = self.map_shards_mut(|shard| match kernel {
-            AssignKernel::Tiled => shard_step_tiled(&data, shard, &plan, &prior, tile),
-            AssignKernel::Scalar => shard_step_scalar(&data, shard, &plan, &prior),
+        let exec = &*self.executor;
+        let bundles = map_shards_mut(&mut self.shards, self.threads, |shard| {
+            exec.execute(&graph, &data, shard, &prior)
         });
         let mut total = StatsBundle::empty(&self.prior, params.k());
         for b in &bundles {
@@ -278,6 +280,7 @@ mod tests {
         for tile in [1, 33, 128] {
             assert_eq!(run(AssignKernel::Tiled, tile), scalar, "tile={tile}");
         }
+        assert_eq!(run(AssignKernel::DeviceEmu, DEFAULT_TILE), scalar, "device-emu");
     }
 
     #[test]

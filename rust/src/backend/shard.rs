@@ -41,30 +41,43 @@ use std::ops::Range;
 /// d ≤ 64 tile (`d × T` doubles) plus the score panel stays L1/L2-resident.
 pub const DEFAULT_TILE: usize = 128;
 
-/// Which assignment kernel a backend runs. The scalar path is the
-/// correctness oracle for the tiled kernel (identical labels, same seed).
+/// Which assignment executor a backend runs. The scalar path is the
+/// correctness oracle for the other two (identical labels, same seed; see
+/// [`crate::backend::executor`] and `tests/prop_kernel_equiv.rs`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AssignKernel {
     /// Batched whitened-GEMM tile kernel (production default).
     Tiled,
     /// One-point-at-a-time oracle (`DPMM_ASSIGN_KERNEL=scalar`).
     Scalar,
+    /// Multi-stream device-emulation executor: staged
+    /// upload/launch/download over stream-per-block queues, modeling the
+    /// paper's GPU execution (`DPMM_ASSIGN_KERNEL=device`).
+    DeviceEmu,
 }
 
 impl AssignKernel {
     /// Resolve from the `DPMM_ASSIGN_KERNEL` environment variable
-    /// (`scalar` selects the oracle, `tiled`/unset the production kernel;
+    /// (`scalar` selects the oracle, `device`/`device-emu` the
+    /// device-emulation executor, `tiled`/unset the production kernel;
     /// case-insensitive). An unrecognized value falls back to tiled with a
     /// stderr warning rather than silently running the wrong kernel during
     /// an intended oracle verification.
     pub fn from_env() -> Self {
         match std::env::var("DPMM_ASSIGN_KERNEL") {
             Ok(v) if v.eq_ignore_ascii_case("scalar") => AssignKernel::Scalar,
+            Ok(v)
+                if v.eq_ignore_ascii_case("device")
+                    || v.eq_ignore_ascii_case("device-emu")
+                    || v.eq_ignore_ascii_case("device_emu") =>
+            {
+                AssignKernel::DeviceEmu
+            }
             Ok(v) if v.is_empty() || v.eq_ignore_ascii_case("tiled") => AssignKernel::Tiled,
             Ok(v) => {
                 eprintln!(
-                    "warning: unrecognized DPMM_ASSIGN_KERNEL='{v}' (expected 'tiled' or \
-                     'scalar'); using the tiled kernel"
+                    "warning: unrecognized DPMM_ASSIGN_KERNEL='{v}' (expected 'tiled', \
+                     'scalar', or 'device'); using the tiled kernel"
                 );
                 AssignKernel::Tiled
             }

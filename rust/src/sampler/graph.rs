@@ -1,0 +1,537 @@
+//! The kernel IR: an explicit, serializable description of one assignment
+//! sweep (or one serving pass) that executors run (§4.2's kernel-program
+//! view of the sampler; ROADMAP item 1's "kernel IR separate from the
+//! execution engine").
+//!
+//! A [`ScoreGraph`] is the per-sweep precompute — the [`StepPlan`] operand
+//! tables (whitening factors `W = L⁻¹`, affine offsets `b = W·μ`, folded
+//! log-weight constants) — plus an explicit staged program:
+//!
+//! ```text
+//! fit sweep:   Upload → ScorePanel → Draw → SubPanel → SubDraw
+//!                     → Download → StatsFold
+//! serving:     Upload → ScorePanel → Argmax
+//! ```
+//!
+//! Executors ([`crate::backend::executor`]) interpret the graph against a
+//! shard: the scalar oracle runs it point-at-a-time, the tiled executor
+//! fuses stages per tile, and the device-emulation executor runs the
+//! stages literally — staged upload/launch/download over stream queues —
+//! the way a GPU runtime would. All of them are bound by the bitwise
+//! conformance contract in `tests/prop_kernel_equiv.rs`.
+//!
+//! The graph serializes to a versioned byte form ([`ScoreGraph::to_bytes`])
+//! whose layout is golden-pinned by `tests/ir_golden.rs`, and hashes to a
+//! stable [`ScoreGraph::digest`] so accidental IR changes fail loudly
+//! instead of silently perturbing trajectories.
+
+use super::{KernelDesc, StepPlan};
+
+/// Serialization magic ("DPMM graph").
+pub const GRAPH_MAGIC: &[u8; 8] = b"DPMMGRPH";
+/// Serialization format version.
+pub const GRAPH_VERSION: u32 = 1;
+
+/// Likelihood family of a graph's operand tables (one family per graph —
+/// the backends' panels are family-homogeneous).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphFamily {
+    /// Gaussian: fused triangular affine + squared norm per panel row.
+    Gauss,
+    /// Dirichlet-multinomial: dot product against cached `log θ`.
+    Mult,
+}
+
+impl GraphFamily {
+    fn tag(self) -> u8 {
+        match self {
+            GraphFamily::Gauss => 0,
+            GraphFamily::Mult => 1,
+        }
+    }
+}
+
+/// One stage of the kernel program. Shapes are static per sweep (derived
+/// from K and d); tile/block widths are an executor choice, not part of
+/// the IR — the contract is that they never change results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Host→device transfer of a point tile, transposed to the
+    /// feature-major device layout (`features` = d rows moved per point).
+    Upload { features: u64 },
+    /// The `[K × T]` score panel: one fused whitened-GEMM (Gauss) or
+    /// log-θ dot (Mult) per cluster row. `flops_per_point` is the static
+    /// per-point work estimate used for §4.2-style kernel selection.
+    ScorePanel { k: u64, flops_per_point: u64 },
+    /// Per-point categorical draw over the panel column: one uniform,
+    /// stable exp-scan (steps (e)).
+    Draw { k: u64 },
+    /// Member-gathered two-way sub-cluster panel per cluster (step (f)).
+    SubPanel { k: u64, flops_per_point: u64 },
+    /// Per-point Bernoulli sub-draw from the two-way log-odds.
+    SubDraw,
+    /// Device→host label readback.
+    Download,
+    /// Host-side fold of labelled points into sufficient statistics.
+    StatsFold { k: u64 },
+    /// RNG-free MAP argmax over the panel (serving graphs).
+    Argmax { k: u64 },
+}
+
+impl Stage {
+    /// `(tag, a, b)` wire triple; every stage encodes in the same fixed
+    /// width so the layout stays trivially seekable.
+    fn encode(self) -> (u8, u64, u64) {
+        match self {
+            Stage::Upload { features } => (0, features, 0),
+            Stage::ScorePanel { k, flops_per_point } => (1, k, flops_per_point),
+            Stage::Draw { k } => (2, k, 0),
+            Stage::SubPanel { k, flops_per_point } => (3, k, flops_per_point),
+            Stage::SubDraw => (4, 0, 0),
+            Stage::Download => (5, 0, 0),
+            Stage::StatsFold { k } => (6, k, 0),
+            Stage::Argmax { k } => (7, k, 0),
+        }
+    }
+
+    fn decode(tag: u8, a: u64, b: u64) -> Result<Stage, GraphError> {
+        Ok(match tag {
+            0 => Stage::Upload { features: a },
+            1 => Stage::ScorePanel { k: a, flops_per_point: b },
+            2 => Stage::Draw { k: a },
+            3 => Stage::SubPanel { k: a, flops_per_point: b },
+            4 => Stage::SubDraw,
+            5 => Stage::Download,
+            6 => Stage::StatsFold { k: a },
+            7 => Stage::Argmax { k: a },
+            t => return Err(GraphError(format!("unknown stage tag {t}"))),
+        })
+    }
+}
+
+/// Static per-point flop estimate for one panel row (the §4.2 kernel-table
+/// quantity: T = d² for Gaussians, T = d for multinomials, up to small
+/// constants). Golden-pinned — changing this formula is an IR change.
+pub fn flops_per_point(family: GraphFamily, d: usize) -> u64 {
+    match family {
+        // Triangular affine: d(d+1)/2 mults + d(d+1)/2 adds, then d
+        // squares + d adds for the norm.
+        GraphFamily::Gauss => (d * (d + 1) + 2 * d) as u64,
+        // Dot against log θ: d mults + d adds.
+        GraphFamily::Mult => (2 * d) as u64,
+    }
+}
+
+/// IR (de)serialization / validation error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GraphError(pub String);
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "score graph: {}", self.0)
+    }
+}
+impl std::error::Error for GraphError {}
+
+/// The kernel IR: operand tables + staged program for one sweep (or one
+/// serving pass). See the module docs for the lowering pipeline.
+#[derive(Debug, Clone)]
+pub struct ScoreGraph {
+    /// Operand tables — exactly the per-sweep precompute the kernels
+    /// already consume ([`KernelDesc`]), kept bit-for-bit so lowering
+    /// through the IR cannot perturb scores. Serving graphs carry an
+    /// empty `sub` table.
+    pub plan: StepPlan,
+    /// Likelihood family of every descriptor in the graph.
+    pub family: GraphFamily,
+    /// The staged program, in execution order.
+    pub stages: Vec<Stage>,
+}
+
+fn family_of(desc: &KernelDesc) -> GraphFamily {
+    match desc {
+        KernelDesc::Gauss { .. } => GraphFamily::Gauss,
+        KernelDesc::Mult { .. } => GraphFamily::Mult,
+    }
+}
+
+impl ScoreGraph {
+    /// Lower a fit-sweep plan into the full restricted-Gibbs program.
+    /// Operand content is cloned verbatim — lowering adds structure, never
+    /// arithmetic.
+    pub fn lower(plan: &StepPlan) -> ScoreGraph {
+        let family = family_of(&plan.clusters[0]);
+        let (k, d) = (plan.k() as u64, plan.d);
+        let fpp = flops_per_point(family, d);
+        let stages = vec![
+            Stage::Upload { features: d as u64 },
+            Stage::ScorePanel { k, flops_per_point: fpp },
+            Stage::Draw { k },
+            Stage::SubPanel { k, flops_per_point: fpp },
+            Stage::SubDraw,
+            Stage::Download,
+            Stage::StatsFold { k },
+        ];
+        ScoreGraph { plan: plan.clone(), family, stages }
+    }
+
+    /// Build the RNG-free serving program over frozen cluster descriptors
+    /// (used by [`crate::serve`]'s `FrozenPlan::score_graph`): upload →
+    /// score-panel → argmax, no sub-cluster competition, no stats fold.
+    pub fn serving(d: usize, clusters: Vec<KernelDesc>) -> ScoreGraph {
+        assert!(!clusters.is_empty(), "serving graph needs at least one cluster");
+        let family = family_of(&clusters[0]);
+        let k = clusters.len() as u64;
+        let fpp = flops_per_point(family, d);
+        let stages = vec![
+            Stage::Upload { features: d as u64 },
+            Stage::ScorePanel { k, flops_per_point: fpp },
+            Stage::Argmax { k },
+        ];
+        ScoreGraph { plan: StepPlan { d, clusters, sub: Vec::new() }, family, stages }
+    }
+
+    pub fn k(&self) -> usize {
+        self.plan.k()
+    }
+
+    pub fn d(&self) -> usize {
+        self.plan.d
+    }
+
+    /// Whether the graph carries the sub-cluster competition (fit sweeps)
+    /// rather than being a serving/argmax graph.
+    pub fn has_sub(&self) -> bool {
+        !self.plan.sub.is_empty()
+    }
+
+    /// Structural validation: homogeneous family, operand shapes matching
+    /// `d`, sub table aligned with the cluster table, stage shapes
+    /// matching K. Executors may assume a validated graph.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        let (k, d) = (self.k(), self.d());
+        if k == 0 {
+            return Err(GraphError("empty cluster table".into()));
+        }
+        if !self.plan.sub.is_empty() && self.plan.sub.len() != k {
+            return Err(GraphError(format!(
+                "sub table has {} rows for {k} clusters",
+                self.plan.sub.len()
+            )));
+        }
+        let check = |desc: &KernelDesc, what: &str| -> Result<(), GraphError> {
+            if family_of(desc) != self.family {
+                return Err(GraphError(format!("{what}: mixed likelihood families")));
+            }
+            match desc {
+                KernelDesc::Gauss { w, b, .. } => {
+                    if w.len() != d * d || b.len() != d {
+                        return Err(GraphError(format!(
+                            "{what}: operand shapes {}x/{} do not match d={d}",
+                            w.len(),
+                            b.len()
+                        )));
+                    }
+                }
+                KernelDesc::Mult { log_theta, .. } => {
+                    if log_theta.len() != d {
+                        return Err(GraphError(format!(
+                            "{what}: log_theta length {} does not match d={d}",
+                            log_theta.len()
+                        )));
+                    }
+                }
+            }
+            Ok(())
+        };
+        for (i, desc) in self.plan.clusters.iter().enumerate() {
+            check(desc, &format!("cluster {i}"))?;
+        }
+        for (i, pair) in self.plan.sub.iter().enumerate() {
+            check(&pair[0], &format!("sub {i}l"))?;
+            check(&pair[1], &format!("sub {i}r"))?;
+        }
+        for stage in &self.stages {
+            let stage_k = match *stage {
+                Stage::ScorePanel { k, .. }
+                | Stage::Draw { k }
+                | Stage::SubPanel { k, .. }
+                | Stage::StatsFold { k }
+                | Stage::Argmax { k } => Some(k),
+                Stage::Upload { features } => {
+                    if features != d as u64 {
+                        return Err(GraphError(format!(
+                            "upload moves {features} features, d={d}"
+                        )));
+                    }
+                    None
+                }
+                Stage::SubDraw | Stage::Download => None,
+            };
+            if let Some(sk) = stage_k {
+                if sk != k as u64 {
+                    return Err(GraphError(format!("stage K={sk} does not match K={k}")));
+                }
+            }
+        }
+        if matches!(self.stages.first(), Some(Stage::Upload { .. })) {
+            Ok(())
+        } else {
+            Err(GraphError("program must start with an Upload stage".into()))
+        }
+    }
+
+    /// Serialize to the versioned byte form. Layout (all little-endian),
+    /// golden-pinned by `tests/ir_golden.rs`:
+    ///
+    /// ```text
+    /// "DPMMGRPH"  u32 version  u32 d  u32 k  u8 family  u8 has_sub
+    /// u32 n_stages  { u8 tag, u64 a, u64 b } × n_stages
+    /// descriptor × k                      (cluster table)
+    /// descriptor × 2k  (if has_sub)       (sub table, [l, r] per cluster)
+    /// ```
+    ///
+    /// Gaussian descriptor: `u8 0`, `w` (d² f64), `b` (d f64), `c` (f64).
+    /// Multinomial descriptor: `u8 1`, `log_theta` (d f64), `c` (f64).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let (k, d) = (self.k(), self.d());
+        let mut out = Vec::with_capacity(64 + k * (d * d + d + 2) * 8);
+        out.extend_from_slice(GRAPH_MAGIC);
+        out.extend_from_slice(&GRAPH_VERSION.to_le_bytes());
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+        out.extend_from_slice(&(k as u32).to_le_bytes());
+        out.push(self.family.tag());
+        out.push(u8::from(self.has_sub()));
+        out.extend_from_slice(&(self.stages.len() as u32).to_le_bytes());
+        for stage in &self.stages {
+            let (tag, a, b) = stage.encode();
+            out.push(tag);
+            out.extend_from_slice(&a.to_le_bytes());
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+        let put_desc = |out: &mut Vec<u8>, desc: &KernelDesc| match desc {
+            KernelDesc::Gauss { w, b, c } => {
+                out.push(0);
+                for v in w {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                for v in b {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+            KernelDesc::Mult { log_theta, c } => {
+                out.push(1);
+                for v in log_theta {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+        };
+        for desc in &self.plan.clusters {
+            put_desc(&mut out, desc);
+        }
+        for pair in &self.plan.sub {
+            put_desc(&mut out, &pair[0]);
+            put_desc(&mut out, &pair[1]);
+        }
+        out
+    }
+
+    /// Deserialize [`ScoreGraph::to_bytes`] output. The result re-encodes
+    /// byte-identically (pinned by `tests/ir_golden.rs`), so a shipped
+    /// graph is the graph that runs.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ScoreGraph, GraphError> {
+        let mut r = Reader { bytes, pos: 0 };
+        if r.take(8)? != GRAPH_MAGIC {
+            return Err(GraphError("bad magic".into()));
+        }
+        let version = r.u32()?;
+        if version != GRAPH_VERSION {
+            return Err(GraphError(format!("unsupported version {version}")));
+        }
+        let d = r.u32()? as usize;
+        let k = r.u32()? as usize;
+        let family = match r.u8()? {
+            0 => GraphFamily::Gauss,
+            1 => GraphFamily::Mult,
+            t => return Err(GraphError(format!("unknown family tag {t}"))),
+        };
+        let has_sub = match r.u8()? {
+            0 => false,
+            1 => true,
+            t => return Err(GraphError(format!("bad has_sub byte {t}"))),
+        };
+        let n_stages = r.u32()? as usize;
+        if n_stages > 64 {
+            return Err(GraphError(format!("implausible stage count {n_stages}")));
+        }
+        let mut stages = Vec::with_capacity(n_stages);
+        for _ in 0..n_stages {
+            let tag = r.u8()?;
+            let a = r.u64()?;
+            let b = r.u64()?;
+            stages.push(Stage::decode(tag, a, b)?);
+        }
+        let mut desc = |r: &mut Reader| -> Result<KernelDesc, GraphError> {
+            match r.u8()? {
+                0 => {
+                    let w = r.f64s(d * d)?;
+                    let b = r.f64s(d)?;
+                    let c = r.f64()?;
+                    Ok(KernelDesc::Gauss { w, b, c })
+                }
+                1 => {
+                    let log_theta = r.f64s(d)?;
+                    let c = r.f64()?;
+                    Ok(KernelDesc::Mult { log_theta, c })
+                }
+                t => Err(GraphError(format!("unknown descriptor tag {t}"))),
+            }
+        };
+        let mut clusters = Vec::with_capacity(k);
+        for _ in 0..k {
+            clusters.push(desc(&mut r)?);
+        }
+        let mut sub = Vec::new();
+        if has_sub {
+            sub.reserve(k);
+            for _ in 0..k {
+                sub.push([desc(&mut r)?, desc(&mut r)?]);
+            }
+        }
+        if r.pos != bytes.len() {
+            return Err(GraphError(format!(
+                "{} trailing bytes after graph",
+                bytes.len() - r.pos
+            )));
+        }
+        let graph = ScoreGraph { plan: StepPlan { d, clusters, sub }, family, stages };
+        graph.validate()?;
+        Ok(graph)
+    }
+
+    /// Stable 64-bit content digest (FNV-1a over [`ScoreGraph::to_bytes`]):
+    /// two graphs digest equal iff their serialized forms are identical —
+    /// operands bit-for-bit included. Pinned by `tests/ir_golden.rs`.
+    pub fn digest(&self) -> u64 {
+        fnv1a64(&self.to_bytes())
+    }
+}
+
+/// FNV-1a 64-bit (no external hash deps; stability matters more than
+/// collision strength here — the digest pins content, it is not a MAC).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], GraphError> {
+        if self.pos + n > self.bytes.len() {
+            return Err(GraphError("truncated graph".into()));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, GraphError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, GraphError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, GraphError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, GraphError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>, GraphError> {
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_plan() -> StepPlan {
+        let g = |c: f64| KernelDesc::Gauss {
+            w: vec![1.0, 0.0, 0.25, 1.0],
+            b: vec![0.5, -2.0],
+            c,
+        };
+        StepPlan { d: 2, clusters: vec![g(-1.0), g(-2.5)], sub: vec![[g(0.0), g(0.5)], [g(1.0), g(1.5)]] }
+    }
+
+    #[test]
+    fn lower_builds_the_fit_program() {
+        let graph = ScoreGraph::lower(&tiny_plan());
+        graph.validate().unwrap();
+        assert!(graph.has_sub());
+        assert_eq!(graph.stages.len(), 7);
+        assert!(matches!(graph.stages[0], Stage::Upload { features: 2 }));
+        assert!(matches!(graph.stages.last(), Some(Stage::StatsFold { k: 2 })));
+    }
+
+    #[test]
+    fn serving_graph_ends_in_argmax() {
+        let plan = tiny_plan();
+        let graph = ScoreGraph::serving(plan.d, plan.clusters);
+        graph.validate().unwrap();
+        assert!(!graph.has_sub());
+        assert!(matches!(graph.stages.last(), Some(Stage::Argmax { k: 2 })));
+    }
+
+    #[test]
+    fn roundtrip_is_byte_identical() {
+        let graph = ScoreGraph::lower(&tiny_plan());
+        let bytes = graph.to_bytes();
+        let back = ScoreGraph::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes);
+        assert_eq!(back.digest(), graph.digest());
+    }
+
+    #[test]
+    fn digest_is_operand_sensitive() {
+        let a = ScoreGraph::lower(&tiny_plan());
+        let mut plan = tiny_plan();
+        if let KernelDesc::Gauss { w, .. } = &mut plan.clusters[0] {
+            w[2] = 0.25000000000000006; // one ulp-ish nudge
+        }
+        let b = ScoreGraph::lower(&plan);
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn validate_rejects_shape_mismatch() {
+        let mut graph = ScoreGraph::lower(&tiny_plan());
+        if let KernelDesc::Gauss { b, .. } = &mut graph.plan.clusters[1] {
+            b.push(0.0);
+        }
+        assert!(graph.validate().is_err());
+    }
+
+    #[test]
+    fn from_bytes_rejects_corruption() {
+        let bytes = ScoreGraph::lower(&tiny_plan()).to_bytes();
+        assert!(ScoreGraph::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(ScoreGraph::from_bytes(&bad).is_err());
+        let mut extra = bytes;
+        extra.push(0);
+        assert!(ScoreGraph::from_bytes(&extra).is_err());
+    }
+}

@@ -6,8 +6,10 @@
 //! sampling (steps (e)/(f)) happens inside the backends; everything else —
 //! weights (a)/(b), parameters (c)/(d), splits, merges — happens here.
 
+pub mod graph;
 mod splitmerge;
 
+pub use graph::{GraphError, GraphFamily, ScoreGraph, Stage};
 pub use splitmerge::{
     log_hastings_merge, log_hastings_split, propose_merges, propose_splits, MergeOp, SplitOp,
 };

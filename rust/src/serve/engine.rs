@@ -206,6 +206,13 @@ impl ScoringEngine {
         &self.plan
     }
 
+    /// The engine's scoring program as the shared kernel IR (see
+    /// [`FrozenPlan::score_graph`]) — inspectable, serializable, and
+    /// digest-comparable against the fit path's lowered graphs.
+    pub fn score_graph(&self) -> crate::sampler::ScoreGraph {
+        self.plan.score_graph()
+    }
+
     /// The tuning knobs this engine was built with — lets the hot-swap path
     /// rebuild a successor engine identically configured after an ingest.
     pub fn config(&self) -> EngineConfig {

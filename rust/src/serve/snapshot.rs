@@ -142,6 +142,16 @@ impl FrozenPlan {
         self.clusters.len()
     }
 
+    /// Lower the frozen plan to the shared kernel IR
+    /// ([`crate::sampler::ScoreGraph`]): the serving program
+    /// (upload → score-panel → argmax) over exactly the same cluster
+    /// descriptors the MAP assignment path scores. The fit and serve
+    /// hot paths thereby share one IR — and one digest — instead of two
+    /// drifting precompute layouts.
+    pub fn score_graph(&self) -> crate::sampler::ScoreGraph {
+        crate::sampler::ScoreGraph::serving(self.d, self.clusters.clone())
+    }
+
     /// Derive the single-precision operand mirror for the opt-in f32
     /// scoring path (see [`crate::serve::Precision`]). Serve-only: the
     /// narrowing happens once here at plan build — fitting and the

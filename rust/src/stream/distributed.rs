@@ -187,6 +187,7 @@ fn kernel_byte(kernel: Option<AssignKernel>) -> u8 {
         None => 0,
         Some(AssignKernel::Tiled) => 1,
         Some(AssignKernel::Scalar) => 2,
+        Some(AssignKernel::DeviceEmu) => 3,
     }
 }
 

@@ -42,14 +42,14 @@ use super::checkpoint::{
     load_stream_checkpoint, save_stream_checkpoint, StreamCheckpointCfg, StreamSave,
     WindowContents,
 };
-use crate::backend::shard::{
-    map_shards_mut, shard_step_scalar, shard_step_tiled, AssignKernel, Shard, DEFAULT_TILE,
-};
+use crate::backend::executor::executor_for;
+use crate::backend::shard::{map_shards_mut, AssignKernel, Shard, DEFAULT_TILE};
 use crate::datagen::Data;
 use crate::model::{Cluster, DpmmState, LEFT, RIGHT};
 use crate::rng::{Rng, Xoshiro256pp};
 use crate::sampler::{
-    sample_params, sample_sub_weights, sample_weights, SamplerOptions, StepParams, StepPlan,
+    sample_params, sample_sub_weights, sample_weights, SamplerOptions, ScoreGraph, StepParams,
+    StepPlan,
 };
 use crate::serve::ModelSnapshot;
 use crate::stats::Stats;
@@ -156,7 +156,8 @@ pub struct StreamConfig {
     pub shard_size: usize,
     /// Assignment-kernel tile width.
     pub tile: usize,
-    /// Assignment kernel (tiled production kernel or the scalar oracle).
+    /// Assignment kernel (tiled production kernel, the scalar oracle, or
+    /// the device-emulation executor).
     pub kernel: AssignKernel,
     /// DP concentration for the restricted sweeps (snapshots don't carry α).
     pub alpha: f64,
@@ -618,9 +619,12 @@ pub(crate) fn sync_model_stats(
     }
 }
 
-/// Run the assignment kernel over every shard via the shared scoped pool
-/// ([`map_shards_mut`]). Kernel stats bundles are discarded — the fitter's
-/// canonical fold owns statistics (see module docs).
+/// Run the assignment sweep over every shard via the shared scoped pool
+/// ([`map_shards_mut`]), lowering the plan to the kernel IR and executing
+/// it through the pluggable [`crate::backend::executor`] seam. Kernel
+/// stats bundles are discarded — the fitter's canonical fold owns
+/// statistics (see module docs), which is also why every executor
+/// (including device emulation) is interchangeable here.
 pub(crate) fn run_shards(
     data: &Data,
     shards: &mut [Shard],
@@ -630,13 +634,10 @@ pub(crate) fn run_shards(
     tile: usize,
     threads: usize,
 ) {
-    map_shards_mut(shards, threads, |shard| match kernel {
-        AssignKernel::Tiled => {
-            shard_step_tiled(data, shard, plan, prior, tile);
-        }
-        AssignKernel::Scalar => {
-            shard_step_scalar(data, shard, plan, prior);
-        }
+    let graph = ScoreGraph::lower(plan);
+    let exec = executor_for(kernel, tile);
+    map_shards_mut(shards, threads, |shard| {
+        exec.execute(&graph, data, shard, prior);
     });
 }
 

@@ -225,9 +225,9 @@ fn fixed_seed_history_bitwise_identical_across_worker_counts_and_kernels() {
     // ingest history (same batches, same boundaries, same seed) must yield
     // bitwise-identical leader-side statistics no matter how many workers
     // the window shards across, how many threads each worker sweeps with,
-    // and which assignment kernel (tiled vs scalar) the workers run. The
-    // window (160) is smaller than the 348 ingested points, so the
-    // leader-driven FIFO eviction path is exercised too.
+    // and which assignment kernel (tiled, scalar, or device emulation)
+    // the workers run. The window (160) is smaller than the 348 ingested
+    // points, so the leader-driven FIFO eviction path is exercised too.
     let d = 3;
     let snap = seed_snapshot(d);
     let batches = stream_batches(d);
@@ -265,6 +265,13 @@ fn fixed_seed_history_bitwise_identical_across_worker_counts_and_kernels() {
     for workers in [1usize, 2] {
         let got = run(workers, 2, AssignKernel::Scalar);
         assert_eq!(got, reference, "statistics diverged at workers={workers} (scalar kernel)");
+    }
+    // Device-emulation executor shipped over the wire (kernel byte 3):
+    // workers run the staged multi-stream sweep and must land on the same
+    // statistics bit for bit.
+    for workers in [1usize, 2] {
+        let got = run(workers, 2, AssignKernel::DeviceEmu);
+        assert_eq!(got, reference, "statistics diverged at workers={workers} (device-emu kernel)");
     }
 }
 

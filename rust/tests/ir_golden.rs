@@ -1,0 +1,233 @@
+//! Golden-snapshot tests for the kernel IR ([`ScoreGraph`]).
+//!
+//! The IR's serialized byte layout, its FNV-1a digest, and the lowering
+//! rules (`b = W·μ`, `c = log π + log_norm`, stage sequences) are pinned
+//! here from first principles — the expected bytes are constructed by
+//! hand in the tests, not recorded from a previous run — so an accidental
+//! IR change fails loudly instead of silently perturbing trajectories.
+//! The last test closes the loop: a graph that went through
+//! serialize → deserialize must execute bit-for-bit like the original.
+
+use dpmm::backend::executor::{DeviceEmuExecutor, Executor, ScalarExecutor, TiledExecutor};
+use dpmm::backend::shard::Shard;
+use dpmm::datagen::GmmSpec;
+use dpmm::linalg::Matrix;
+use dpmm::model::DpmmState;
+use dpmm::rng::Xoshiro256pp;
+use dpmm::sampler::{
+    sample_params, sample_sub_weights, sample_weights, KernelDesc, SamplerOptions, ScoreGraph,
+    Stage, StepParams, StepPlan,
+};
+use dpmm::serve::{EngineConfig, ModelSnapshot, ScoringEngine};
+use dpmm::stats::{NiwParams, NiwPrior, Params, Prior};
+
+/// Independent FNV-1a 64 reimplementation: pins the digest algorithm (and
+/// its offset/prime constants) against the crate's copy.
+fn reference_fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn tiny_fit_plan() -> StepPlan {
+    let g = |c: f64| KernelDesc::Gauss { w: vec![1.0, 0.0, 0.25, 1.0], b: vec![0.5, -2.0], c };
+    StepPlan {
+        d: 2,
+        clusters: vec![g(-1.0), g(-2.5)],
+        sub: vec![[g(0.0), g(0.5)], [g(1.0), g(1.5)]],
+    }
+}
+
+/// Build a realistic fit plan by running the coordinator-side steps
+/// (a)–(d) on a fresh state (the same recipe the conformance suite uses).
+fn sampled_plan(prior: &Prior, k: usize, n: usize, seed: u64) -> StepPlan {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut state = DpmmState::new(5.0, prior.clone(), k, n, &mut rng);
+    sample_weights(&mut state, &mut rng);
+    sample_sub_weights(&mut state, &mut rng);
+    sample_params(&mut state, &SamplerOptions::default(), &mut rng);
+    StepParams::snapshot(&state).plan()
+}
+
+#[test]
+fn serialized_layout_matches_the_pinned_spec() {
+    // A d=1, K=1 serving graph is small enough to write out by hand. This
+    // is the layout contract of ScoreGraph::to_bytes — if this test moves,
+    // GRAPH_VERSION must move with it.
+    let desc = KernelDesc::Gauss { w: vec![2.0], b: vec![3.0], c: -0.5 };
+    let graph = ScoreGraph::serving(1, vec![desc]);
+    let mut expect: Vec<u8> = Vec::new();
+    expect.extend_from_slice(b"DPMMGRPH"); // magic
+    expect.extend_from_slice(&1u32.to_le_bytes()); // version
+    expect.extend_from_slice(&1u32.to_le_bytes()); // d
+    expect.extend_from_slice(&1u32.to_le_bytes()); // k
+    expect.push(0); // family = Gauss
+    expect.push(0); // has_sub = false (serving)
+    expect.extend_from_slice(&3u32.to_le_bytes()); // n_stages
+    // Upload { features: d } → (tag 0, 1, 0)
+    expect.push(0);
+    expect.extend_from_slice(&1u64.to_le_bytes());
+    expect.extend_from_slice(&0u64.to_le_bytes());
+    // ScorePanel { k, flops_per_point } → (tag 1, 1, d(d+1)+2d = 4)
+    expect.push(1);
+    expect.extend_from_slice(&1u64.to_le_bytes());
+    expect.extend_from_slice(&4u64.to_le_bytes());
+    // Argmax { k } → (tag 7, 1, 0)
+    expect.push(7);
+    expect.extend_from_slice(&1u64.to_le_bytes());
+    expect.extend_from_slice(&0u64.to_le_bytes());
+    // Gaussian descriptor: tag, w (d² f64), b (d f64), c (f64).
+    expect.push(0);
+    expect.extend_from_slice(&2.0f64.to_le_bytes());
+    expect.extend_from_slice(&3.0f64.to_le_bytes());
+    expect.extend_from_slice(&(-0.5f64).to_le_bytes());
+    assert_eq!(graph.to_bytes(), expect, "serialized layout drifted from the pinned spec");
+    assert_eq!(graph.digest(), reference_fnv1a64(&expect));
+}
+
+#[test]
+fn fit_program_header_and_stage_sequence_are_pinned() {
+    let graph = ScoreGraph::lower(&tiny_fit_plan());
+    graph.validate().unwrap();
+    let bytes = graph.to_bytes();
+    // Header: magic, version, d, k, family, has_sub, n_stages.
+    assert_eq!(&bytes[..8], b"DPMMGRPH");
+    assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 1, "version");
+    assert_eq!(u32::from_le_bytes(bytes[12..16].try_into().unwrap()), 2, "d");
+    assert_eq!(u32::from_le_bytes(bytes[16..20].try_into().unwrap()), 2, "k");
+    assert_eq!(bytes[20], 0, "family tag (Gauss)");
+    assert_eq!(bytes[21], 1, "has_sub");
+    assert_eq!(u32::from_le_bytes(bytes[22..26].try_into().unwrap()), 7, "n_stages");
+    // The fit program, in execution order: Upload → ScorePanel → Draw →
+    // SubPanel → SubDraw → Download → StatsFold (stage tags 0..=6, each
+    // encoded as u8 tag + two u64 operands = 17 bytes).
+    let tags: Vec<u8> = (0..7).map(|i| bytes[26 + i * 17]).collect();
+    assert_eq!(tags, vec![0, 1, 2, 3, 4, 5, 6], "fit stage sequence");
+    assert!(matches!(graph.stages[1], Stage::ScorePanel { k: 2, flops_per_point: 10 }));
+}
+
+#[test]
+fn digest_is_stable_and_content_sensitive() {
+    // Well-known FNV-1a 64 vectors pin the algorithm itself.
+    assert_eq!(reference_fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+    assert_eq!(reference_fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+
+    // Same plan → same digest, twice (no hidden state in lowering).
+    let a = ScoreGraph::lower(&tiny_fit_plan());
+    let b = ScoreGraph::lower(&tiny_fit_plan());
+    assert_eq!(a.digest(), b.digest());
+    assert_eq!(a.to_bytes(), b.to_bytes());
+
+    // One-ULP operand nudge → different digest (bit-for-bit sensitivity).
+    let mut plan = tiny_fit_plan();
+    if let KernelDesc::Gauss { b, .. } = &mut plan.clusters[0] {
+        b[0] = f64::from_bits(b[0].to_bits() + 1);
+    }
+    assert_ne!(ScoreGraph::lower(&plan).digest(), a.digest());
+
+    // Fit and serving programs over identical operands digest differently
+    // (the staged program is part of the content).
+    let plan = tiny_fit_plan();
+    let serving = ScoreGraph::serving(plan.d, plan.clusters.clone());
+    assert_ne!(serving.digest(), a.digest());
+}
+
+#[test]
+fn identity_whitening_lowers_mu_verbatim() {
+    // Lowering facts pinned at the descriptor level: with W = I the affine
+    // offset is b = W·μ = μ bit-for-bit (zero terms add exactly), and the
+    // folded constant is exactly log π + log_norm.
+    let mu = vec![0.123456789, -7.25, 3.0e-5];
+    let log_norm = -1.25;
+    let params = Params::Gauss(NiwParams {
+        mu: mu.clone(),
+        sigma: Matrix::identity(3),
+        chol: Matrix::identity(3),
+        inv_chol: Matrix::identity(3),
+        log_norm,
+    });
+    let lw = -0.6931471805599453;
+    match KernelDesc::new(&params, lw) {
+        KernelDesc::Gauss { w, b, c } => {
+            assert_eq!(w, Matrix::identity(3).data().to_vec());
+            assert_eq!(b, mu, "W=I must lower μ into b bit-for-bit");
+            assert_eq!(c, lw + log_norm);
+        }
+        KernelDesc::Mult { .. } => panic!("gaussian params lowered to a multinomial kernel"),
+    }
+}
+
+#[test]
+fn fixed_seed_lowering_roundtrips_byte_identically() {
+    // A realistic sampled plan (fixed seed) must survive
+    // serialize → deserialize with a byte-identical re-encoding and an
+    // unchanged digest — the shipped graph is the graph that runs.
+    let prior = Prior::Niw(NiwPrior::weak(4));
+    let graph = ScoreGraph::lower(&sampled_plan(&prior, 5, 130, 2024));
+    graph.validate().unwrap();
+    let bytes = graph.to_bytes();
+    let back = ScoreGraph::from_bytes(&bytes).unwrap();
+    assert_eq!(back.to_bytes(), bytes);
+    assert_eq!(back.digest(), graph.digest());
+    assert_eq!(back.stages, graph.stages);
+}
+
+#[test]
+fn deserialized_graph_executes_identically() {
+    // IR sufficiency: the serialized bytes carry everything an executor
+    // needs. Running the decoded graph must reproduce the original's
+    // labels and statistics bit-for-bit, on every executor family.
+    let prior = Prior::Niw(NiwPrior::weak(3));
+    let mut rng = Xoshiro256pp::seed_from_u64(14);
+    let ds = GmmSpec::default_with(180, 3, 4).generate(&mut rng);
+    let graph = ScoreGraph::lower(&sampled_plan(&prior, 4, ds.points.n, 303));
+    let decoded = ScoreGraph::from_bytes(&graph.to_bytes()).unwrap();
+    let execs: Vec<Box<dyn Executor>> = vec![
+        Box::new(ScalarExecutor),
+        Box::new(TiledExecutor { tile: 64 }),
+        Box::new(DeviceEmuExecutor { streams: 2, block: 48 }),
+    ];
+    for exec in &execs {
+        let mut a = Shard::new(0..ds.points.n, Xoshiro256pp::seed_from_u64(5));
+        let mut b = Shard::new(0..ds.points.n, Xoshiro256pp::seed_from_u64(5));
+        let ba = exec.execute(&graph, &ds.points, &mut a, &prior);
+        let bb = exec.execute(&decoded, &ds.points, &mut b, &prior);
+        assert_eq!(a.z, b.z, "{}: labels", exec.name());
+        assert_eq!(a.zsub, b.zsub, "{}: sub-labels", exec.name());
+        assert_eq!(ba.sub_stats, bb.sub_stats, "{}: stats", exec.name());
+    }
+}
+
+#[test]
+fn serving_plan_shares_the_ir() {
+    // The serve path lowers to the same IR: FrozenPlan::score_graph and
+    // ScoringEngine::score_graph produce the identical serving program
+    // (upload → score-panel → argmax, no sub table), digest-equal to a
+    // direct ScoreGraph::serving over the same descriptors.
+    let prior = Prior::Niw(NiwPrior::weak(2));
+    let mut rng = Xoshiro256pp::seed_from_u64(21);
+    let mut state = DpmmState::new(2.0, prior.clone(), 2, 80, &mut rng);
+    for (k, center) in [-6.0f64, 6.0].into_iter().enumerate() {
+        let mut s = prior.empty_stats();
+        for i in 0..40 {
+            s.add(&[center + 0.02 * i as f64, center - 0.01 * i as f64]);
+        }
+        state.clusters[k].stats = s;
+    }
+    let snap = ModelSnapshot::from_state(&state).unwrap();
+    let plan = snap.plan().unwrap();
+    let graph = plan.score_graph();
+    graph.validate().unwrap();
+    assert!(!graph.has_sub());
+    assert!(matches!(graph.stages[..], [
+        Stage::Upload { features: 2 },
+        Stage::ScorePanel { k: 2, .. },
+        Stage::Argmax { k: 2 },
+    ]));
+    assert_eq!(graph.digest(), ScoreGraph::serving(plan.d, plan.clusters.clone()).digest());
+    let engine = ScoringEngine::from_plan(plan, EngineConfig::default());
+    assert_eq!(engine.score_graph().digest(), graph.digest());
+}

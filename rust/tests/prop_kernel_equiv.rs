@@ -1,28 +1,46 @@
-//! Property-style equivalence tests for the tiled assignment kernel against
-//! the scalar correctness oracle (`backend::shard`): across priors (NIW and
-//! DirMult), tile widths (including T=1 and tiles larger than the shard),
-//! shard sizes with odd tile remainders (N not divisible by T), and K=1,
-//! the two paths must produce
+//! Cross-backend bitwise conformance suite for the kernel-IR executors.
 //!
-//! * bitwise-identical label and sub-label sequences under the same seed
-//!   (both consume exactly two uniforms per point in the same stream order
-//!   and share bitwise-identical score arithmetic), and
-//! * sufficient statistics that agree exactly on counts and to FP rounding
-//!   on the moment sums (the tiled path reduces tile-local partial sums
-//!   before touching the global accumulator, which legally reorders FP
-//!   addition).
+//! Every executor behind the [`dpmm::backend::executor::Executor`] seam —
+//! the tiled/SIMD production path, the multi-stream device-emulation
+//! executor, and the scalar oracle itself — runs the *same* corpus of
+//! lowered [`ScoreGraph`]s and must reproduce the scalar oracle exactly:
+//!
+//! * **labels and sub-labels bitwise-identical** under the same seed
+//!   (every executor consumes exactly two uniforms per point in the same
+//!   stream order and shares bitwise-identical score arithmetic), and
+//! * **sufficient statistics** either bitwise-identical (scalar, device —
+//!   both fold per-point in point order) or exact on counts and within
+//!   1e-9 relative on moment sums (tiled — grouped rank-T folds legally
+//!   reorder FP addition).
+//!
+//! The corpus covers NIW and DirMult, K=1, n=0 (empty shard), n=1,
+//! odd tile/block remainders, T=1 degenerate tiles, and d > 64 panels
+//! (residual tile/lane shapes). The suite is the correctness gate for any
+//! future executor: add it to the executor lists below and it inherits
+//! every assertion.
 
-use dpmm::backend::shard::{shard_step_scalar, shard_step_tiled, AssignKernel, Shard};
+use dpmm::backend::executor::{DeviceEmuExecutor, Executor, ScalarExecutor, TiledExecutor};
+use dpmm::backend::shard::{AssignKernel, Shard};
 use dpmm::backend::StatsBundle;
 use dpmm::datagen::{Data, GmmSpec, MultinomialSpec};
 use dpmm::model::DpmmState;
 use dpmm::rng::Xoshiro256pp;
 use dpmm::sampler::{
-    sample_params, sample_sub_weights, sample_weights, SamplerOptions, StepParams, StepPlan,
+    sample_params, sample_sub_weights, sample_weights, SamplerOptions, ScoreGraph, StepParams,
+    StepPlan,
 };
 use dpmm::serve::ModelSnapshot;
 use dpmm::stats::{DirMultPrior, NiwPrior, Prior, Stats};
 use dpmm::stream::{IncrementalFitter, StreamConfig};
+
+/// How an executor's statistics must relate to the scalar oracle's.
+#[derive(Clone, Copy, PartialEq)]
+enum StatsMode {
+    /// Bit-for-bit equal (point-order per-point folds: scalar, device).
+    Bitwise,
+    /// Counts exact; moment sums within 1e-9 relative (grouped folds).
+    Close,
+}
 
 /// Build a randomized-but-valid parameter snapshot over `k` clusters by
 /// running the coordinator-side steps (a)–(d) on a fresh state.
@@ -41,108 +59,304 @@ fn assert_stats_close(a: &Stats, b: &Stats, ctx: &str) {
     match (a, b) {
         (Stats::Gauss(x), Stats::Gauss(y)) => {
             for (i, (u, v)) in x.sum_x.iter().zip(&y.sum_x).enumerate() {
-                assert!(
-                    (u - v).abs() <= 1e-9 * (1.0 + u.abs()),
-                    "{ctx}: sum_x[{i}] {u} vs {v}"
-                );
+                assert!((u - v).abs() <= 1e-9 * (1.0 + u.abs()), "{ctx}: sum_x[{i}] {u} vs {v}");
             }
-            for (i, (u, v)) in
-                x.sum_xxt.data().iter().zip(y.sum_xxt.data()).enumerate()
-            {
-                assert!(
-                    (u - v).abs() <= 1e-9 * (1.0 + u.abs()),
-                    "{ctx}: sum_xxt[{i}] {u} vs {v}"
-                );
+            for (i, (u, v)) in x.sum_xxt.data().iter().zip(y.sum_xxt.data()).enumerate() {
+                assert!((u - v).abs() <= 1e-9 * (1.0 + u.abs()), "{ctx}: sum_xxt[{i}] {u} vs {v}");
             }
         }
         (Stats::Mult(x), Stats::Mult(y)) => {
             for (i, (u, v)) in x.sum_x.iter().zip(&y.sum_x).enumerate() {
-                assert!(
-                    (u - v).abs() <= 1e-9 * (1.0 + u.abs()),
-                    "{ctx}: sum_x[{i}] {u} vs {v}"
-                );
+                assert!((u - v).abs() <= 1e-9 * (1.0 + u.abs()), "{ctx}: sum_x[{i}] {u} vs {v}");
             }
         }
         _ => panic!("{ctx}: stats family mismatch"),
     }
 }
 
-fn assert_equivalent(data: &Data, prior: &Prior, plan: &StepPlan, tile: usize, seed: u64) {
-    let n = data.n;
-    let mut tiled = Shard::new(0..n, Xoshiro256pp::seed_from_u64(seed));
-    let mut scalar = Shard::new(0..n, Xoshiro256pp::seed_from_u64(seed));
-    let bt = shard_step_tiled(data, &mut tiled, plan, prior, tile);
-    let bs = shard_step_scalar(data, &mut scalar, plan, prior);
-    assert_eq!(tiled.z, scalar.z, "labels (tile={tile} n={n})");
-    assert_eq!(tiled.zsub, scalar.zsub, "sub-labels (tile={tile} n={n})");
-    compare_bundles(&bt, &bs, tile);
-    // Both bundles must also agree with stats recomputed from the labels.
-    let mut recomputed = StatsBundle::empty(prior, plan.k());
-    for local in 0..n {
-        recomputed.sub_stats[tiled.z[local] as usize][tiled.zsub[local] as usize]
-            .add(data.row(local));
-    }
-    compare_bundles(&bt, &recomputed, tile);
-}
-
-fn compare_bundles(a: &StatsBundle, b: &StatsBundle, tile: usize) {
-    assert_eq!(a.sub_stats.len(), b.sub_stats.len());
-    for (k, (sa, sb)) in a.sub_stats.iter().zip(&b.sub_stats).enumerate() {
-        for h in 0..2 {
-            assert_stats_close(&sa[h], &sb[h], &format!("tile={tile} k={k} h={h}"));
+fn compare_bundles(a: &StatsBundle, b: &StatsBundle, mode: StatsMode, ctx: &str) {
+    assert_eq!(a.sub_stats.len(), b.sub_stats.len(), "{ctx}: bundle K");
+    match mode {
+        StatsMode::Bitwise => {
+            assert_eq!(a.sub_stats, b.sub_stats, "{ctx}: stats must be bitwise-identical");
+        }
+        StatsMode::Close => {
+            for (k, (sa, sb)) in a.sub_stats.iter().zip(&b.sub_stats).enumerate() {
+                for h in 0..2 {
+                    assert_stats_close(&sa[h], &sb[h], &format!("{ctx} k={k} h={h}"));
+                }
+            }
         }
     }
 }
 
-#[test]
-fn single_point_shard_is_equivalent() {
-    // n=1: the shard is one remainder tile of width 1 for every tile size.
-    let data = Data::new(1, 2, vec![0.3, -1.7]);
-    let prior = Prior::Niw(NiwPrior::weak(2));
-    let plan = random_plan(&prior, 3, 1, 55);
-    for tile in [1usize, 128] {
-        assert_equivalent(&data, &prior, &plan, tile, 13);
-    }
+/// One conformance fixture: a dataset, its prior, and a lowered plan.
+struct Case {
+    name: String,
+    data: Data,
+    prior: Prior,
+    plan: StepPlan,
+    seed: u64,
 }
 
-#[test]
-fn gaussian_tiled_matches_scalar_across_tiles_and_sizes() {
+/// The shared fixture corpus every executor must pass (see module docs
+/// for the shapes each entry exercises).
+fn corpus() -> Vec<Case> {
+    let mut cases = Vec::new();
+    // Gaussian across sizes: tiny shards, odd tile remainders, larger K.
     for (n, d, k) in [(5usize, 2usize, 3usize), (37, 2, 3), (130, 4, 5), (529, 8, 7)] {
         let mut rng = Xoshiro256pp::seed_from_u64((n * 31 + d) as u64);
         let ds = GmmSpec::default_with(n, d, k).generate(&mut rng);
         let prior = Prior::Niw(NiwPrior::weak(d));
         let plan = random_plan(&prior, k, ds.points.n, 100 + n as u64);
-        // T=1 degenerates to per-point batches; 64/128 leave odd
-        // remainders for these n; 1024 exceeds the shard entirely.
-        for tile in [1usize, 64, 128, 1024] {
-            assert_equivalent(&ds.points, &prior, &plan, tile, 7 + tile as u64);
-        }
+        cases.push(Case {
+            name: format!("gauss n={n} d={d} k={k}"),
+            data: ds.points,
+            prior,
+            plan,
+            seed: 7 + n as u64,
+        });
     }
-}
-
-#[test]
-fn multinomial_tiled_matches_scalar_across_tiles() {
+    // Multinomial (the dot-accumulate panel path).
     for (n, d, k) in [(45usize, 6usize, 4usize), (256, 12, 3)] {
         let mut rng = Xoshiro256pp::seed_from_u64(n as u64);
         let ds = MultinomialSpec::default_with(n, d, k).generate(&mut rng);
         let prior = Prior::DirMult(DirMultPrior::symmetric(d, 0.7));
         let plan = random_plan(&prior, k, ds.points.n, 200 + n as u64);
-        for tile in [1usize, 50, 128] {
-            assert_equivalent(&ds.points, &prior, &plan, tile, 11 + tile as u64);
+        cases.push(Case {
+            name: format!("mult n={n} d={d} k={k}"),
+            data: ds.points,
+            prior,
+            plan,
+            seed: 11 + n as u64,
+        });
+    }
+    // n=1: one remainder tile of width 1 for every tile/block size.
+    {
+        let prior = Prior::Niw(NiwPrior::weak(2));
+        let plan = random_plan(&prior, 3, 1, 55);
+        cases.push(Case {
+            name: "gauss single point".into(),
+            data: Data::new(1, 2, vec![0.3, -1.7]),
+            prior,
+            plan,
+            seed: 13,
+        });
+    }
+    // K=1: trivial categorical, but the sub-cluster and statistics paths
+    // still run in full.
+    {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let ds = GmmSpec::default_with(97, 3, 1).generate(&mut rng);
+        let prior = Prior::Niw(NiwPrior::weak(3));
+        let plan = random_plan(&prior, 1, ds.points.n, 42);
+        cases.push(Case { name: "gauss K=1".into(), data: ds.points, prior, plan, seed: 19 });
+    }
+    // n=0: an empty-shard sweep must be a clean no-op for every executor
+    // (zero tiles, zero launch blocks, an empty stats bundle) — the shape
+    // an idle streaming shard or an over-sharded tail produces.
+    {
+        let prior = Prior::Niw(NiwPrior::weak(3));
+        let plan = random_plan(&prior, 2, 10, 60);
+        cases.push(Case {
+            name: "gauss empty shard".into(),
+            data: Data::new(0, 3, Vec::new()),
+            prior,
+            plan,
+            seed: 23,
+        });
+    }
+    {
+        let prior = Prior::DirMult(DirMultPrior::symmetric(5, 0.7));
+        let plan = random_plan(&prior, 2, 10, 61);
+        cases.push(Case {
+            name: "mult empty shard".into(),
+            data: Data::new(0, 5, Vec::new()),
+            prior,
+            plan,
+            seed: 29,
+        });
+    }
+    // d > 64: panels wider than one tile row / SIMD lane group — the
+    // residual tile/lane shapes the blocked GEMM and AVX2 tails handle.
+    {
+        let mut rng = Xoshiro256pp::seed_from_u64(67);
+        let ds = GmmSpec::default_with(48, 67, 3).generate(&mut rng);
+        let prior = Prior::Niw(NiwPrior::weak(67));
+        let plan = random_plan(&prior, 3, ds.points.n, 670);
+        cases.push(Case { name: "gauss d=67".into(), data: ds.points, prior, plan, seed: 31 });
+    }
+    {
+        let mut rng = Xoshiro256pp::seed_from_u64(80);
+        let ds = MultinomialSpec::default_with(40, 80, 3).generate(&mut rng);
+        let prior = Prior::DirMult(DirMultPrior::symmetric(80, 0.5));
+        let plan = random_plan(&prior, 3, ds.points.n, 800);
+        cases.push(Case { name: "mult d=80".into(), data: ds.points, prior, plan, seed: 37 });
+    }
+    cases
+}
+
+/// Run one executor against the scalar oracle on one case: identical
+/// label/sub-label sequences, statistics per `mode`, and both bundles
+/// consistent with stats recomputed from the labels.
+fn assert_conforms(exec: &dyn Executor, mode: StatsMode, case: &Case, ctx: &str) {
+    let graph = ScoreGraph::lower(&case.plan);
+    graph.validate().expect("corpus graphs must validate");
+    let n = case.data.n;
+    let mut got = Shard::new(0..n, Xoshiro256pp::seed_from_u64(case.seed));
+    let mut oracle = Shard::new(0..n, Xoshiro256pp::seed_from_u64(case.seed));
+    let bg = exec.execute(&graph, &case.data, &mut got, &case.prior);
+    let bo = ScalarExecutor.execute(&graph, &case.data, &mut oracle, &case.prior);
+    assert_eq!(got.z, oracle.z, "{ctx}: labels ({})", case.name);
+    assert_eq!(got.zsub, oracle.zsub, "{ctx}: sub-labels ({})", case.name);
+    compare_bundles(&bg, &bo, mode, &format!("{ctx} ({})", case.name));
+    // The bundle must also agree with stats recomputed from the labels.
+    let mut recomputed = StatsBundle::empty(&case.prior, case.plan.k());
+    for local in 0..n {
+        recomputed.sub_stats[got.z[local] as usize][got.zsub[local] as usize]
+            .add(case.data.row(local));
+    }
+    compare_bundles(&bg, &recomputed, mode, &format!("{ctx} recomputed ({})", case.name));
+}
+
+fn run_conformance(execs: &[Box<dyn Executor>], mode: StatsMode) {
+    let cases = corpus();
+    for (i, exec) in execs.iter().enumerate() {
+        for case in &cases {
+            assert_conforms(exec.as_ref(), mode, case, &format!("{}[{i}]", exec.name()));
         }
     }
 }
 
+/// Instantiate the full conformance corpus for one executor family.
+macro_rules! conformance_suite {
+    ($modname:ident, $execs:expr, $mode:expr) => {
+        mod $modname {
+            use super::*;
+
+            #[test]
+            fn corpus_matches_scalar_oracle() {
+                run_conformance(&$execs, $mode);
+            }
+        }
+    };
+}
+
+// Scalar vs itself: pins that the oracle is deterministic under reseeding
+// (the property every other comparison relies on).
+conformance_suite!(
+    conformance_scalar,
+    vec![Box::new(ScalarExecutor) as Box<dyn Executor>],
+    StatsMode::Bitwise
+);
+
+// Tiled across tile widths: T=1 degenerates to per-point batches, 64/128
+// leave odd remainders for the corpus sizes, 1024 exceeds every shard.
+conformance_suite!(
+    conformance_tiled,
+    [1usize, 64, 128, 1024]
+        .into_iter()
+        .map(|tile| Box::new(TiledExecutor { tile }) as Box<dyn Executor>)
+        .collect::<Vec<_>>(),
+    StatsMode::Close
+);
+
+// Device emulation across stream/block geometries, including
+// single-point launch blocks. Stats are held to the *bitwise* bar: the
+// host-side point-order fold must reproduce the scalar accumulator
+// sequence exactly — the acceptance contract for the device executor.
+conformance_suite!(
+    conformance_device_emu,
+    [(1usize, 1usize), (2, 32), (4, 64), (3, 256)]
+        .into_iter()
+        .map(|(streams, block)| {
+            Box::new(DeviceEmuExecutor { streams, block }) as Box<dyn Executor>
+        })
+        .collect::<Vec<_>>(),
+    StatsMode::Bitwise
+);
+
 #[test]
-fn single_cluster_is_equivalent() {
-    // K=1: the categorical draw is trivial but the sub-cluster step and
-    // statistics paths still run in full.
-    let mut rng = Xoshiro256pp::seed_from_u64(3);
-    let ds = GmmSpec::default_with(97, 3, 1).generate(&mut rng);
-    let prior = Prior::Niw(NiwPrior::weak(3));
-    let plan = random_plan(&prior, 1, ds.points.n, 42);
-    for tile in [1usize, 32, 97, 100] {
-        assert_equivalent(&ds.points, &prior, &plan, tile, 19);
+fn simd_bodies_are_bitwise_equivalent_end_to_end() {
+    // The SIMD dispatch contract (linalg::tile) is that the AVX2 bodies
+    // are bitwise-identical to the scalar tile bodies — same lane math,
+    // mul+add kept separate (no FMA contraction). Here the contract is
+    // checked end to end: the full conformance corpus with SIMD forced on
+    // must reproduce the scalar oracle through both panel-running
+    // executors (tiled and device-emu). Toggling the process-wide SIMD
+    // mode mid-suite is safe precisely because of this invariant: every
+    // other test's outputs are unchanged by which body runs. On hosts
+    // without AVX2 the force-on request stays scalar and the sweep
+    // degenerates to the already-covered checks.
+    let simd_live = dpmm::linalg::set_simd_enabled(true);
+    assert_eq!(dpmm::linalg::simd_active(), simd_live);
+    assert_eq!(dpmm::linalg::simd_label(), if simd_live { "avx2" } else { "scalar" });
+
+    run_conformance(
+        &[
+            Box::new(TiledExecutor { tile: 64 }) as Box<dyn Executor>,
+            Box::new(TiledExecutor { tile: 100 }),
+        ],
+        StatsMode::Close,
+    );
+    run_conformance(
+        &[Box::new(DeviceEmuExecutor { streams: 2, block: 48 }) as Box<dyn Executor>],
+        StatsMode::Bitwise,
+    );
+
+    // Explicitly off: back to the scalar bodies, same outputs by the same
+    // invariant.
+    assert!(!dpmm::linalg::set_simd_enabled(false));
+    assert_eq!(dpmm::linalg::simd_label(), "scalar");
+    run_conformance(
+        &[Box::new(TiledExecutor { tile: 64 }) as Box<dyn Executor>],
+        StatsMode::Close,
+    );
+
+    // Leave the process in its default (env/hardware-resolved) state for
+    // any tests that run after this one.
+    dpmm::linalg::set_simd_enabled(simd_live);
+}
+
+#[test]
+fn equivalence_holds_after_a_warm_sweep() {
+    // Re-derive parameters from a first sweep's statistics so the second
+    // sweep runs with data-driven (not prior-draw) parameters, then check
+    // conformance again for every executor family — the regime the
+    // sampler actually spends time in.
+    let d = 4;
+    let k = 4;
+    let mut rng = Xoshiro256pp::seed_from_u64(8);
+    let ds = GmmSpec::default_with(300, d, k).generate(&mut rng);
+    let prior = Prior::Niw(NiwPrior::weak(d));
+    let plan = random_plan(&prior, k, ds.points.n, 77);
+    let graph = ScoreGraph::lower(&plan);
+    let mut shard = Shard::new(0..ds.points.n, Xoshiro256pp::seed_from_u64(1));
+    let bundle = TiledExecutor { tile: 128 }.execute(&graph, &ds.points, &mut shard, &prior);
+
+    let mut state = DpmmState::new(5.0, prior.clone(), k, ds.points.n, &mut rng);
+    state.set_stats(bundle.cluster_stats(), bundle.sub_stats.clone());
+    let opts = SamplerOptions { sub_restart_every: 0, ..SamplerOptions::default() };
+    sample_weights(&mut state, &mut rng);
+    sample_sub_weights(&mut state, &mut rng);
+    sample_params(&mut state, &opts, &mut rng);
+    let warm = Case {
+        name: "gauss warm sweep".into(),
+        data: ds.points,
+        prior,
+        plan: StepParams::snapshot(&state).plan(),
+        seed: 23,
+    };
+    for tile in [1usize, 96, 128] {
+        assert_conforms(&TiledExecutor { tile }, StatsMode::Close, &warm, "warm tiled");
+    }
+    for (streams, block) in [(1usize, 64usize), (4, 96)] {
+        assert_conforms(
+            &DeviceEmuExecutor { streams, block },
+            StatsMode::Bitwise,
+            &warm,
+            "warm device",
+        );
     }
 }
 
@@ -189,11 +403,12 @@ fn stream_batches(d: usize) -> Vec<Vec<f64>> {
 fn incremental_fit_bitwise_deterministic_across_threads_and_kernels() {
     // A fixed-seed incremental fit — same ingest order, same batch
     // boundaries — must produce bitwise-identical window labels and
-    // per-cluster masses across 1, 2, and 8 worker threads AND across the
-    // scalar-oracle vs tiled assignment kernels. The fitter's canonical
-    // grouped statistics fold is what closes the induction: identical
-    // labels ⇒ identical (bitwise) statistics ⇒ identical next-sweep
-    // plans, regardless of which kernel or how many threads ran the sweep.
+    // per-cluster masses across 1, 2, and 8 worker threads AND across
+    // every executor (scalar oracle, tiled, device emulation). The
+    // fitter's canonical grouped statistics fold is what closes the
+    // induction: identical labels ⇒ identical (bitwise) statistics ⇒
+    // identical next-sweep plans, regardless of which executor or how
+    // many threads ran the sweep.
     let d = 3;
     let snap = stream_seed_snapshot(d);
     let batches = stream_batches(d);
@@ -215,109 +430,25 @@ fn incremental_fit_bitwise_deterministic_across_threads_and_kernels() {
         for b in &batches {
             f.ingest(b).unwrap();
         }
-        (
-            f.window_labels().to_vec(),
-            f.window_sub_labels().to_vec(),
-            f.counts(),
-        )
+        (f.window_labels().to_vec(), f.window_sub_labels().to_vec(), f.counts())
     };
     let reference = run(1, AssignKernel::Tiled);
-    assert_eq!(
-        reference.0.len(),
-        batches.iter().map(|b| b.len() / d).sum::<usize>()
-    );
+    assert_eq!(reference.0.len(), batches.iter().map(|b| b.len() / d).sum::<usize>());
     for threads in [2usize, 8] {
         let got = run(threads, AssignKernel::Tiled);
         assert_eq!(got.0, reference.0, "labels diverged at threads={threads}");
         assert_eq!(got.1, reference.1, "sub-labels diverged at threads={threads}");
         assert_eq!(got.2, reference.2, "masses diverged at threads={threads}");
     }
-    for threads in [1usize, 2, 8] {
-        let got = run(threads, AssignKernel::Scalar);
-        assert_eq!(
-            got.0, reference.0,
-            "labels diverged at scalar kernel, threads={threads}"
-        );
-        assert_eq!(
-            got.1, reference.1,
-            "sub-labels diverged at scalar kernel, threads={threads}"
-        );
-        assert_eq!(
-            got.2, reference.2,
-            "masses diverged at scalar kernel, threads={threads}"
-        );
-    }
-}
-
-#[test]
-fn simd_bodies_are_bitwise_equivalent_end_to_end() {
-    // The SIMD dispatch contract (linalg::tile) is that the AVX2 bodies
-    // are bitwise-identical to the scalar tile bodies — same lane math,
-    // mul+add kept separate (no FMA contraction). Here the contract is
-    // checked end to end: a full assignment sweep with SIMD forced on must
-    // reproduce the scalar oracle's labels, sub-labels, and statistics
-    // exactly, across both priors and odd tile remainders. Toggling the
-    // process-wide SIMD mode mid-suite is safe precisely because of this
-    // invariant: every other test's outputs are unchanged by which body
-    // runs. On hosts without AVX2 the force-on request stays scalar and
-    // the sweep degenerates to the already-covered tiled-vs-scalar check.
-    let simd_live = dpmm::linalg::set_simd_enabled(true);
-    assert_eq!(dpmm::linalg::simd_active(), simd_live);
-    assert_eq!(dpmm::linalg::simd_label(), if simd_live { "avx2" } else { "scalar" });
-
-    // Gaussian: d=8 fills AVX2 f64 lanes evenly, d=3 leaves lane tails.
-    for (n, d, k) in [(130usize, 8usize, 5usize), (529, 3, 4)] {
-        let mut rng = Xoshiro256pp::seed_from_u64((n + d) as u64);
-        let ds = GmmSpec::default_with(n, d, k).generate(&mut rng);
-        let prior = Prior::Niw(NiwPrior::weak(d));
-        let plan = random_plan(&prior, k, ds.points.n, 500 + n as u64);
-        for tile in [1usize, 64, 100] {
-            assert_equivalent(&ds.points, &prior, &plan, tile, 31 + tile as u64);
+    for kernel in [AssignKernel::Scalar, AssignKernel::DeviceEmu] {
+        for threads in [1usize, 2, 8] {
+            let got = run(threads, kernel);
+            assert_eq!(got.0, reference.0, "labels diverged at {kernel:?}, threads={threads}");
+            assert_eq!(
+                got.1, reference.1,
+                "sub-labels diverged at {kernel:?}, threads={threads}"
+            );
+            assert_eq!(got.2, reference.2, "masses diverged at {kernel:?}, threads={threads}");
         }
-    }
-    // Multinomial: the dot-accumulate path.
-    let mut rng = Xoshiro256pp::seed_from_u64(9);
-    let ds = MultinomialSpec::default_with(180, 10, 3).generate(&mut rng);
-    let prior = Prior::DirMult(DirMultPrior::symmetric(10, 0.7));
-    let plan = random_plan(&prior, 3, ds.points.n, 600);
-    for tile in [1usize, 48, 128] {
-        assert_equivalent(&ds.points, &prior, &plan, tile, 41 + tile as u64);
-    }
-
-    // Explicitly off: back to the scalar bodies, same outputs by the same
-    // invariant.
-    assert!(!dpmm::linalg::set_simd_enabled(false));
-    assert_eq!(dpmm::linalg::simd_label(), "scalar");
-    let plan1 = random_plan(&prior, 3, ds.points.n, 600);
-    assert_equivalent(&ds.points, &prior, &plan1, 64, 47);
-
-    // Leave the process in its default (env/hardware-resolved) state for
-    // any tests that run after this one.
-    dpmm::linalg::set_simd_enabled(simd_live);
-}
-
-#[test]
-fn equivalence_holds_after_a_warm_sweep() {
-    // Re-derive parameters from a first sweep's statistics so the second
-    // sweep runs with data-driven (not prior-draw) parameters, then check
-    // equivalence again — the regime the sampler actually spends time in.
-    let d = 4;
-    let k = 4;
-    let mut rng = Xoshiro256pp::seed_from_u64(8);
-    let ds = GmmSpec::default_with(300, d, k).generate(&mut rng);
-    let prior = Prior::Niw(NiwPrior::weak(d));
-    let plan = random_plan(&prior, k, ds.points.n, 77);
-    let mut shard = Shard::new(0..ds.points.n, Xoshiro256pp::seed_from_u64(1));
-    let bundle = shard_step_tiled(&ds.points, &mut shard, &plan, &prior, 128);
-
-    let mut state = DpmmState::new(5.0, prior.clone(), k, ds.points.n, &mut rng);
-    state.set_stats(bundle.cluster_stats(), bundle.sub_stats.clone());
-    let opts = SamplerOptions { sub_restart_every: 0, ..SamplerOptions::default() };
-    sample_weights(&mut state, &mut rng);
-    sample_sub_weights(&mut state, &mut rng);
-    sample_params(&mut state, &opts, &mut rng);
-    let plan2 = StepParams::snapshot(&state).plan();
-    for tile in [1usize, 96, 128] {
-        assert_equivalent(&ds.points, &prior, &plan2, tile, 23);
     }
 }
